@@ -1,0 +1,63 @@
+//! Communication-cost walkthrough: the paper's §4 claim, both analytically
+//! (α–β cost model at paper scale) and measured (real bytes through the
+//! in-process collectives during a short run).
+//!
+//! Run with: `cargo run --release --example comm_breakdown`
+
+use fastclip::comm::{Collective, CostModel, ProfileName};
+use fastclip::config::{Algorithm, TrainConfig};
+use fastclip::coordinator::Trainer;
+use fastclip::output::Table;
+
+fn main() -> anyhow::Result<()> {
+    // --- analytic: the O(K·B·d) REDUCE_SCATTER vs O(K·B) ALL_GATHER -------
+    let (bl, d) = (128usize, 512usize);
+    let mut t = Table::new(
+        "Sec. 4 claim at paper scale (ViT-B/32, B=128/GPU, d=512) — times in ms",
+        &["Nodes", "OpenCLIP extra (RS, O(KBd))", "FastCLIP extra (AG, O(KB))", "ratio"],
+    );
+    for nodes in [1usize, 2, 4, 8] {
+        let m = CostModel::new(ProfileName::InfiniBand.profile(), nodes, 4);
+        let k = m.world_size();
+        let rs = m.time(Collective::ReduceScatter, 2 * k * bl * d * 4) * 1e3;
+        let ag = m.time(Collective::AllGather, 2 * bl * 4) * 1e3;
+        let ratio = if ag > 0.0 { rs / ag } else { f64::NAN };
+        t.row(vec![
+            nodes.to_string(),
+            format!("{rs:.3}"),
+            format!("{ag:.4}"),
+            format!("{ratio:.0}x"),
+        ]);
+    }
+    t.print();
+
+    // --- measured: real byte counters from a short run ---------------------
+    let mut table = Table::new(
+        "Measured bytes through the in-process collectives (8 steps, tiny bundle)",
+        &["Algorithm", "bytes moved", "modeled bytes/iter"],
+    );
+    for algo in [Algorithm::OpenClip, Algorithm::FastClipV3] {
+        let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", algo);
+        cfg.steps = 8;
+        cfg.data.n_train = 128;
+        cfg.data.n_eval = 32;
+        cfg.lr.total_iters = 8;
+        cfg.lr.warmup_iters = 1;
+        cfg.nodes = 8;
+        cfg.gpus_per_node = 4;
+        let r = Trainer::new(cfg)?.run()?;
+        table.row(vec![
+            algo.name().into(),
+            r.comm_bytes.to_string(),
+            r.modeled_iter_bytes.to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "note: the real-byte counters are equal for both algorithms on this\n\
+         testbed (the numerics run the same gathers); the MODELED volume\n\
+         differs — OpenCLIP is charged its REDUCE_SCATTER (Sec. 4), which is\n\
+         what separates the Fig. 3 communication bars."
+    );
+    Ok(())
+}

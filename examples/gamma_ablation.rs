@@ -1,0 +1,50 @@
+//! Inner-LR (γ) schedule ablation: constant γ vs the cosine schedule on
+//! the same algorithm/data — the paper's §5 "Inner LR Schedule" finding
+//! (cosine > constant) as a runnable example.
+//!
+//! Run with: `cargo run --release --example gamma_ablation -- [--steps N]`
+
+use fastclip::config::{Algorithm, GammaSchedule, TrainConfig};
+use fastclip::coordinator::Trainer;
+use fastclip::output::{sparkline, Table};
+use fastclip::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let steps = args.u32_or("steps", 64)?;
+
+    let schedules: [(&str, GammaSchedule); 4] = [
+        ("constant 0.2", GammaSchedule::Constant { gamma: 0.2 }),
+        ("constant 0.6", GammaSchedule::Constant { gamma: 0.6 }),
+        ("constant 0.9", GammaSchedule::Constant { gamma: 0.9 }),
+        ("cosine ->0.2", GammaSchedule::Cosine { gamma_min: 0.2, decay_epochs: 4 }),
+    ];
+
+    let mut table = Table::new(
+        "gamma schedule ablation (FastCLIP-v1 base, tiny bundle)",
+        &["Schedule", "final loss", "Datacomp", "Retrieval", "IN&Var"],
+    );
+    for (name, gamma) in schedules {
+        let mut cfg = TrainConfig::new("artifacts/tiny_k2_b16", Algorithm::FastClipV1);
+        cfg.steps = steps;
+        cfg.iters_per_epoch = 8;
+        cfg.gamma = gamma;
+        cfg.data.n_train = 1024;
+        cfg.data.n_eval = 128;
+        cfg.data.n_classes = 32;
+        cfg.lr.total_iters = steps;
+        cfg.lr.warmup_iters = steps / 8;
+        let r = Trainer::new(cfg)?.run()?;
+        let losses: Vec<f32> = r.history.iter().map(|h| h.loss).collect();
+        eprintln!("  {name:14} {}", sparkline(&losses, 40));
+        table.row(vec![
+            name.into(),
+            format!("{:.4}", r.tail_loss(8)),
+            format!("{:.2}", r.final_eval.datacomp),
+            format!("{:.2}", r.final_eval.retrieval),
+            format!("{:.2}", r.final_eval.in_variants),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Scaling demo: the same algorithm across 1/2/4/8-node bundles — the
+//! Fig. 1 / Fig. 2 protocol in miniature. Per-GPU batch stays fixed, the
+//! global batch grows with nodes, and the learning rate scales linearly.
+//!
+//! Run with: `cargo run --release --example scaling_nodes -- [--steps N]`
+
+use fastclip::config::{Algorithm, TrainConfig};
+use fastclip::coordinator::Trainer;
+use fastclip::output::Table;
+use fastclip::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let steps = args.u32_or("steps", 48)?;
+    let algo = Algorithm::from_id(&args.str_or("algo", "fastclip-v3"))?;
+
+    let mut table = Table::new(
+        format!("{} across node counts", algo.name()),
+        &["Nodes", "GlobalBatch", "Datacomp", "Retrieval", "IN&Var", "iter ms"],
+    );
+    for nodes in [1usize, 2, 4, 8] {
+        let bundle = format!("artifacts/tiny_k{nodes}_b16");
+        if !std::path::Path::new(&bundle).join("manifest.json").exists() {
+            eprintln!("skipping {nodes} nodes: {bundle} not built");
+            continue;
+        }
+        let mut cfg = TrainConfig::new(&bundle, algo);
+        cfg.steps = steps;
+        cfg.iters_per_epoch = 8;
+        cfg.data.n_train = 1024;
+        cfg.data.n_eval = 128;
+        cfg.data.n_classes = 32;
+        cfg.nodes = nodes;
+        cfg.gpus_per_node = 4;
+        cfg.lr.peak = 1e-3 * nodes as f32 / 2.0; // linear LR scaling
+        cfg.lr.total_iters = steps;
+        cfg.lr.warmup_iters = steps / 8;
+        let manifest = fastclip::runtime::Manifest::load(&bundle)?;
+        let result = Trainer::new(cfg)?.run()?;
+        let ms = result.timing.per_iter_ms();
+        table.row(vec![
+            nodes.to_string(),
+            manifest.global_batch.to_string(),
+            format!("{:.2}", result.final_eval.datacomp),
+            format!("{:.2}", result.final_eval.retrieval),
+            format!("{:.2}", result.final_eval.in_variants),
+            format!("{:.1}", ms.total),
+        ]);
+        eprintln!("  {nodes} nodes done ({:.1}s wall)", result.wall_s);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): train the largest bundle built
+//! on this testbed through the full three-layer stack — synthetic
+//! image–text corpus → Pallas-kernel loss graphs (AOT HLO) → distributed
+//! Rust coordinator — for a few hundred steps, logging the loss curve and
+//! periodic Datacomp-analog evaluations.
+//!
+//! Bundle selection: `medium_k2_b8` (~21M-parameter CLIP) when built,
+//! falling back to `small_k2_b16` (~4.4M) then `tiny_k2_b8`. Override
+//! with `--bundle` / `--steps` / `--algo`.
+//!
+//! Run with: `cargo run --release --example train_e2e -- [--steps N]`
+
+use fastclip::config::{Algorithm, TrainConfig};
+use fastclip::coordinator::Trainer;
+use fastclip::output::{sparkline, Table};
+use fastclip::util::{Args, Json};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let bundle = args.get("bundle").map(|s| s.to_string()).unwrap_or_else(|| {
+        for b in ["artifacts/medium_k2_b8", "artifacts/small_k2_b16", "artifacts/tiny_k2_b8"] {
+            if std::path::Path::new(b).join("manifest.json").exists() {
+                return b.to_string();
+            }
+        }
+        "artifacts/tiny_k2_b8".to_string()
+    });
+    let algo = Algorithm::from_id(&args.str_or("algo", "fastclip-v3"))?;
+
+    let mut cfg = TrainConfig::new(&bundle, algo);
+    cfg.steps = args.u32_or("steps", 240)?;
+    cfg.iters_per_epoch = 16;
+    cfg.data.n_train = args.usize_or("n-train", 4096)?;
+    cfg.data.n_eval = 192;
+    cfg.data.n_classes = 64;
+    cfg.lr.peak = 2e-4;
+    cfg.lr.total_iters = cfg.steps;
+    cfg.lr.warmup_iters = cfg.steps / 10;
+    cfg.eval_every = args.u32_or("eval-every", cfg.steps / 6)?;
+    cfg.eps = 1e-6; // xlarge-analog setting (Appendix D)
+    cfg.rho = 16.0;
+
+    let manifest = fastclip::runtime::Manifest::load(&bundle)?;
+    println!(
+        "e2e: {} on {} — {} params, K={} workers, global batch {}, {} steps",
+        algo.name(),
+        bundle,
+        manifest.n_params,
+        manifest.k_workers,
+        manifest.global_batch,
+        cfg.steps
+    );
+
+    let t0 = std::time::Instant::now();
+    let result = Trainer::new(cfg)?.run()?;
+
+    let losses: Vec<f32> = result.history.iter().map(|h| h.loss).collect();
+    println!("\nloss curve: {}", sparkline(&losses, 64));
+    let mut t = Table::new(
+        "E2E evaluation trajectory",
+        &["step", "loss", "Datacomp", "Retrieval", "IN&Var"],
+    );
+    for e in &result.evals {
+        let loss = result
+            .history
+            .iter()
+            .rev()
+            .find(|h| h.step < e.step)
+            .map(|h| h.loss)
+            .unwrap_or(f32::NAN);
+        t.row(vec![
+            e.step.to_string(),
+            format!("{loss:.4}"),
+            format!("{:.2}", e.summary.datacomp),
+            format!("{:.2}", e.summary.retrieval),
+            format!("{:.2}", e.summary.in_variants),
+        ]);
+    }
+    t.print();
+    let ms = result.timing.per_iter_ms();
+    println!(
+        "per-iter: {:.1} ms total ({:.1} compute / {:.2} pure comm / {:.2} others), wall {:.1}s",
+        ms.total, ms.compute, ms.comm_pure, ms.others, t0.elapsed().as_secs_f64()
+    );
+
+    // persist the curve for EXPERIMENTS.md
+    let json = Json::obj(vec![
+        ("bundle", Json::str(bundle)),
+        ("algorithm", Json::str(algo.name())),
+        ("n_params", Json::num(manifest.n_params as f64)),
+        ("loss", Json::arr(losses.iter().map(|&v| Json::num(v as f64)))),
+        (
+            "evals",
+            Json::arr(result.evals.iter().map(|e| {
+                Json::obj(vec![
+                    ("step", Json::num(e.step as f64)),
+                    ("datacomp", Json::num(e.summary.datacomp as f64)),
+                    ("retrieval", Json::num(e.summary.retrieval as f64)),
+                    ("in_variants", Json::num(e.summary.in_variants as f64)),
+                ])
+            })),
+        ),
+    ]);
+    fastclip::output::write_result(std::path::Path::new("results"), "train_e2e", &json)?;
+    println!("wrote results/train_e2e.json");
+
+    let head_n = 8.min(losses.len());
+    let head = losses[..head_n].iter().sum::<f32>() / head_n as f32;
+    anyhow::ensure!(result.tail_loss(16) < head, "e2e sanity: loss should decrease");
+    println!("E2E OK");
+    Ok(())
+}

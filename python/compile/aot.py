@@ -1,0 +1,187 @@
+# AOT bridge: lower the L2 training-step graphs to HLO *text* artifacts the
+# Rust coordinator loads through PJRT (`xla` crate).
+#
+# HLO text — NOT `lowered.compile().serialize()` — is the interchange
+# format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+# xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+# reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+#
+# One bundle per (preset, workers, local-batch):
+#   artifacts/<preset>_k<K>_b<bl>/
+#     encode.hlo.txt          (params, images, texts) -> (e1, e2)
+#     phase_g.hlo.txt         gathered feats + u + gamma -> (g1, g2, u1', u2')
+#     step_<variant>.hlo.txt  one per loss family (gcl, gcl_v0, rgcl_i,
+#                             rgcl_g, mbcl) -> (grad, loss, tau grads)
+#     init_params.bin         f32 LE flat initial parameters (deterministic)
+#     manifest.json           shapes, param segmentation, signatures
+#
+# Python runs ONCE at build time (`make artifacts`); the Rust binary is
+# self-contained afterwards.
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import losses
+from . import model as model_lib
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args, outs):
+    def one(x):
+        return {"shape": list(x.shape), "dtype": str(x.dtype)}
+    return {"inputs": [dict(name=n, **one(a)) for n, a in args],
+            "outputs": [dict(name=n, **one(o)) for n, o in outs]}
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def build_bundle(preset: str, k_workers: int, bl: int, out_dir: str,
+                 seed: int = 0, variants=None) -> dict:
+    cfg = model_lib.PRESETS[preset]
+    bg = k_workers * bl
+    p_total = model_lib.n_params(cfg)
+    os.makedirs(out_dir, exist_ok=True)
+    variants = variants or losses.VARIANTS
+
+    flat_s = _spec((p_total,))
+    imgs_s = _spec((bl, cfg.v_patches, cfg.v_patch_dim))
+    txts_s = _spec((bl, cfg.t_len), jnp.int32)
+    feat_s = _spec((bg, cfg.d_embed))
+    uvec_s = _spec((bg,))
+    uloc_s = _spec((bl,))
+    i32_s = _spec((), jnp.int32)
+    f32_s = _spec(())
+
+    executables = {}
+
+    # ---- encode ----------------------------------------------------------
+    # keep_unused=True everywhere: the Rust runtime passes every manifest
+    # input, so lowering must not prune arguments a variant happens not to
+    # use (e.g. rho in step_gcl).
+    enc = jax.jit(functools.partial(model_lib.encode, cfg), keep_unused=True)
+    lowered = enc.lower(flat_s, imgs_s, txts_s)
+    _write(out_dir, "encode", lowered)
+    executables["encode"] = _sig(
+        [("params", flat_s), ("images", imgs_s), ("texts", txts_s)],
+        [("e1", _spec((bl, cfg.d_embed))), ("e2", _spec((bl, cfg.d_embed)))],
+    )
+
+    # ---- phase_g (variant-independent; Eq. 1 u update) --------------------
+    pg = jax.jit(functools.partial(losses.phase_g, bl=bl), keep_unused=True)
+    lowered = pg.lower(feat_s, feat_s, i32_s, uloc_s, uloc_s, uloc_s, uloc_s, f32_s)
+    _write(out_dir, "phase_g", lowered)
+    executables["phase_g"] = _sig(
+        [("e1g", feat_s), ("e2g", feat_s), ("offset", i32_s),
+         ("u1", uloc_s), ("u2", uloc_s), ("tau1", uloc_s), ("tau2", uloc_s),
+         ("gamma", f32_s)],
+        [("g1", uloc_s), ("g2", uloc_s), ("u1_new", uloc_s), ("u2_new", uloc_s)],
+    )
+
+    # ---- step_<variant> ----------------------------------------------------
+    for variant in variants:
+        if variant == "rgcl_i":
+            tau_in = [("tau1g", uvec_s), ("tau2g", uvec_s)]
+            tau_out = [("tau1_grad", uloc_s), ("tau2_grad", uloc_s)]
+        else:
+            tau_in = [("tau", f32_s)]
+            tau_out = [("tau_grad", f32_s)]
+
+        def fn(flat, images, texts, e1g, e2g, u1g, u2g, offset, eps, rho,
+               *taus, _variant=variant):
+            out = losses.step(_variant, cfg, flat, images, texts, e1g, e2g,
+                              u1g, u2g, tuple(taus), offset, eps, rho,
+                              bl=bl, bg=bg, k_workers=k_workers)
+            res = [out["grad"], out["loss"]]
+            if _variant == "rgcl_i":
+                res += [out["tau1_grad"], out["tau2_grad"]]
+            else:
+                res += [out["tau_grad"]]
+            return tuple(res)
+
+        args = [flat_s, imgs_s, txts_s, feat_s, feat_s, uvec_s, uvec_s,
+                i32_s, f32_s, f32_s] + [s for _, s in tau_in]
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        _write(out_dir, f"step_{variant}", lowered)
+        executables[f"step_{variant}"] = _sig(
+            [("params", flat_s), ("images", imgs_s), ("texts", txts_s),
+             ("e1g", feat_s), ("e2g", feat_s), ("u1g", uvec_s), ("u2g", uvec_s),
+             ("offset", i32_s), ("eps", f32_s), ("rho", f32_s)] + tau_in,
+            [("grad", flat_s), ("loss", f32_s)] + tau_out,
+        )
+
+    # ---- deterministic initial parameters + manifest ----------------------
+    init = model_lib.init_params(cfg, seed)
+    init.astype("<f4").tofile(os.path.join(out_dir, "init_params.bin"))
+
+    spec, off = [], 0
+    for name, shape in model_lib.param_spec(cfg):
+        size = int(np.prod(shape))
+        spec.append({"name": name, "shape": list(shape), "offset": off, "size": size})
+        off += size
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "preset": preset,
+        "model": dataclasses.asdict(cfg),
+        "n_params": p_total,
+        "param_spec": spec,
+        "k_workers": k_workers,
+        "local_batch": bl,
+        "global_batch": bg,
+        "seed": seed,
+        "variants": list(variants),
+        "executables": executables,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def _write(out_dir, name, lowered):
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) // 1024} KiB)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny", choices=sorted(model_lib.PRESETS))
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--local-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="output dir (default artifacts/<preset>_k<K>_b<bl>)")
+    ap.add_argument("--variants", default=None,
+                    help="comma-separated subset of " + ",".join(losses.VARIANTS))
+    args = ap.parse_args()
+    out = args.out or os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts",
+        f"{args.preset}_k{args.workers}_b{args.local_batch}")
+    variants = args.variants.split(",") if args.variants else None
+    print(f"building bundle preset={args.preset} K={args.workers} bl={args.local_batch}")
+    build_bundle(args.preset, args.workers, args.local_batch,
+                 os.path.abspath(out), args.seed, variants)
+
+
+if __name__ == "__main__":
+    main()

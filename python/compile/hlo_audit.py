@@ -1,0 +1,89 @@
+# L2 performance audit: static analysis of the lowered HLO artifacts
+# (EXPERIMENTS.md §Perf L2). Reports per-executable op histograms, dot
+# (matmul) counts, fusion counts, and flags the two regressions the perf
+# plan watches for:
+#   * double encode: the step graph must contain exactly ONE live
+#     encoder pass per tower (forward) plus its transposed backward —
+#     i.e. dot count ~= 3x the encode graph's dot count (fwd+bwd+bwd-acc),
+#     not 4x+ (which would mean the surrogate re-encoded the batch);
+#   * unfused elementwise storms: elementwise op count should collapse
+#     into fusions after XLA optimization (we audit the *input* HLO, so we
+#     report the raw counts and rely on XLA's fusion — the check is that
+#     raw elementwise ops stay O(graph size), not O(batch^2)).
+#
+# Usage: python -m compile.hlo_audit [--bundle ../artifacts/tiny_k2_b8]
+import argparse
+import collections
+import json
+import os
+import re
+
+
+def audit_file(path):
+    ops = collections.Counter()
+    entry = False
+    total = 0
+    for line in open(path):
+        line = line.strip()
+        m = re.match(r"%?[\w.-]+ = \S+ ([a-z-]+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+            total += 1
+        if line.startswith("ENTRY"):
+            entry = True
+    assert entry, f"no ENTRY in {path}"
+    return ops, total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bundle", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", "tiny_k2_b8"))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    report = {}
+    encode_dots = None
+    for name in sorted(os.listdir(args.bundle)):
+        if not name.endswith(".hlo.txt"):
+            continue
+        ops, total = audit_file(os.path.join(args.bundle, name))
+        key = name.replace(".hlo.txt", "")
+        report[key] = {
+            "total_ops": total,
+            "dot": ops.get("dot", 0),
+            "exponential": ops.get("exponential", 0),
+            "broadcast": ops.get("broadcast", 0),
+            "top": ops.most_common(8),
+        }
+        if key == "encode":
+            encode_dots = ops.get("dot", 0)
+        print(f"{key:14} ops={total:5}  dot={ops.get('dot', 0):3}  "
+              f"exp={ops.get('exponential', 0):3}  "
+              f"top={ops.most_common(5)}")
+
+    # the double-encode check: each step graph encodes the local batch once
+    # (forward, 1x the encode dots) and differentiates through it (~2x for
+    # the backward), plus ~12 dots from the four Pallas kernel calls
+    # (fwd + da + db each). Expected ratio ~3.7x; a second live encode
+    # would push it past ~4.7x.
+    if encode_dots:
+        for key, r in report.items():
+            if not key.startswith("step_"):
+                continue
+            ratio = r["dot"] / encode_dots
+            status = "OK" if ratio <= 3.9 else "SUSPECT double-encode"
+            print(f"{key:14} dot ratio vs encode: {ratio:.2f}x  [{status}]")
+            r["dot_ratio_vs_encode"] = ratio
+            assert ratio <= 4.5, f"{key}: dot ratio {ratio:.2f} — re-encoding?"
+
+    out = args.out or os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "results", "l2_hlo_audit.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1, default=str)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,293 @@
+# L1: Pallas kernels for the contrastive hot-spot of FastCLIP.
+#
+# The paper's compute hot-spot is the B x B pairwise-similarity +
+# exponential reduction at the heart of every contrastive loss it studies
+# (GCL / RGCL / RGCL-g / MBCL). On GPU the reference implementation
+# materializes the full similarity matrix; here we re-think it for the TPU
+# programming model (see DESIGN.md "Hardware adaptation"):
+#
+#   * the (M, N) similarity matrix is NEVER materialized in HBM — each grid
+#     step holds one (bm, d) anchor tile and one (bn, d) candidate tile in
+#     VMEM, computes the (bm, bn) similarity tile on the MXU
+#     (jnp.dot with preferred_element_type=f32), and fuses the masked
+#     exp-reduction into the matmul epilogue (FlashAttention-style);
+#   * the backward pass RECOMPUTES the probability tile instead of storing
+#     it, so HBM traffic is O((M+N) d) rather than O(M N);
+#   * block shapes default to MXU/VPU-friendly multiples of (8, 128).
+#
+# interpret=True always: the CPU PJRT plugin cannot run Mosaic
+# custom-calls, so these kernels lower to plain HLO for execution here;
+# the BlockSpec structure is what a real-TPU build would reuse verbatim.
+#
+# Public API (differentiable via jax.custom_vjp):
+#   pair_exp_rowsum(a, b, diag_idx, tau)          — self-contained form
+#   pair_exp_rowsum_nodiag(a, b, sd, tau, denom)  — distributed column form
+#
+# computing g_i = 1/denom * sum_{j != diag_idx[i]} exp((s_ij - sd_i)/tau_i),
+# which is exactly g_1(w, tau, i, B_{i-}) (and by symmetry g_2) of the
+# paper — the inner function of the FCCO compositional loss.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU/VPU-aligned tile sizes. Overridable for the block-shape sweep
+# in the performance pass (see EXPERIMENTS.md §Perf).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+_INTERPRET = True  # CPU PJRT cannot execute Mosaic custom-calls.
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_blocks(m: int, n: int, bm: int | None, bn: int | None):
+    bm = bm or min(DEFAULT_BM, _ceil_to(m, 8))
+    bn = bn or min(DEFAULT_BN, _ceil_to(n, 128))
+    return bm, bn
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: masked exp row-sum fused into the similarity matmul.
+# Grid (M/bm, N/bn); the output row block is revisited across the j axis and
+# accumulated in place (initialized at j == 0).
+# ---------------------------------------------------------------------------
+def _fwd_kernel(a_ref, b_ref, diag_ref, tau_ref, sd_ref, g_ref, *, bn, n_valid, denom):
+    j = pl.program_id(1)
+    a = a_ref[...].astype(jnp.float32)       # (bm, d)
+    b = b_ref[...].astype(jnp.float32)       # (bn, d)
+    s = jnp.dot(a, b.T, preferred_element_type=jnp.float32)  # (bm, bn) on MXU
+    diag = diag_ref[...].astype(jnp.int32)   # (bm,) — -1 encodes "no mask"
+    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (cols != diag[:, None]) & (cols < n_valid)
+    z = (s - sd_ref[...][:, None]) / tau_ref[...][:, None]
+    p = jnp.where(mask, jnp.exp(z), 0.0)
+    part = jnp.sum(p, axis=1) / denom
+
+    @pl.when(j == 0)
+    def _init():
+        g_ref[...] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        g_ref[...] += part
+
+
+# ---------------------------------------------------------------------------
+# Backward row kernel: da (bm, d) and the raw dtau term, accumulated over j.
+#   da_i   += (gbar_i/tau_i) * sum_j p_ij * b_j
+#   dtau_i += -(gbar_i/tau_i^2) * sum_j p_ij * (s_ij - sd_i)
+# (the sd-path cotangent dsd_i = -(gbar_i/tau_i) * g_i is applied by the
+# vjp wrapper outside the kernel — it is an O(M) jnp op).
+# ---------------------------------------------------------------------------
+def _bwd_row_kernel(a_ref, b_ref, diag_ref, tau_ref, sd_ref, gbar_ref,
+                    da_ref, dtau_ref, *, bn, n_valid, denom):
+    j = pl.program_id(1)
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    s = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+    diag = diag_ref[...].astype(jnp.int32)
+    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (cols != diag[:, None]) & (cols < n_valid)
+    zraw = s - sd_ref[...][:, None]
+    tau = tau_ref[...]
+    p = jnp.where(mask, jnp.exp(zraw / tau[:, None]), 0.0) / denom
+    c = gbar_ref[...] / tau                                  # (bm,)
+    da_part = jnp.dot(c[:, None] * p, b, preferred_element_type=jnp.float32)
+    dtau_part = -(c / tau) * jnp.sum(p * zraw, axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        da_ref[...] = da_part
+        dtau_ref[...] = dtau_part
+
+    @pl.when(j > 0)
+    def _acc():
+        da_ref[...] += da_part
+        dtau_ref[...] += dtau_part
+
+
+# ---------------------------------------------------------------------------
+# Backward col kernel: db (bn, d), accumulated over the i axis. Grid is
+# transposed to (N/bn, M/bm) so the db block is the contiguous revisit.
+#   db_j += sum_i (gbar_i/tau_i) * p_ij * a_i
+# ---------------------------------------------------------------------------
+def _bwd_col_kernel(a_ref, b_ref, diag_ref, tau_ref, sd_ref, gbar_ref,
+                    db_ref, *, bn, n_valid, denom):
+    jb, i = pl.program_id(0), pl.program_id(1)
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    s = jnp.dot(a, b.T, preferred_element_type=jnp.float32)   # (bm, bn)
+    diag = diag_ref[...].astype(jnp.int32)
+    cols = jb * bn + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (cols != diag[:, None]) & (cols < n_valid)
+    zraw = s - sd_ref[...][:, None]
+    tau = tau_ref[...]
+    p = jnp.where(mask, jnp.exp(zraw / tau[:, None]), 0.0) / denom
+    cp = (gbar_ref[...] / tau)[:, None] * p                   # (bm, bn)
+    db_part = jnp.dot(cp.T, a, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        db_ref[...] = db_part
+
+    @pl.when(i > 0)
+    def _acc():
+        db_ref[...] += db_part
+
+
+def _pad_rows(x, target):
+    if x.shape[0] == target:
+        return x
+    pad = [(0, target - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def _row_specs(bm, bn, d):
+    """BlockSpecs for (a, b, diag, tau, sd[, gbar]) on an (i, j) grid."""
+    return [
+        pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        pl.BlockSpec((bm,), lambda i, j: (i,)),
+        pl.BlockSpec((bm,), lambda i, j: (i,)),
+        pl.BlockSpec((bm,), lambda i, j: (i,)),
+    ]
+
+
+def _padded(a, b, diag_f, tau, sd, bm, bn, extra=None):
+    m, n = a.shape[0], b.shape[0]
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    out = [
+        _pad_rows(a, mp), _pad_rows(b, np_), _pad_rows(diag_f, mp),
+        jnp.pad(tau, (0, mp - m), constant_values=1.0), _pad_rows(sd, mp),
+    ]
+    if extra is not None:
+        out.append(_pad_rows(extra, mp))
+    return out, mp, np_
+
+
+def _pallas_fwd(a, b, diag_f, tau, sd, denom, bm, bn):
+    m, d = a.shape
+    n = b.shape[0]
+    ins, mp, np_ = _padded(a, b, diag_f, tau, sd, bm, bn)
+    g = pl.pallas_call(
+        functools.partial(_fwd_kernel, bn=bn, n_valid=n, denom=denom),
+        grid=(mp // bm, np_ // bn),
+        in_specs=_row_specs(bm, bn, d),
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
+        interpret=_INTERPRET,
+    )(*ins)
+    return g[:m]
+
+
+def _pallas_bwd_row(a, b, diag_f, tau, sd, gbar, denom, bm, bn):
+    m, d = a.shape
+    n = b.shape[0]
+    ins, mp, np_ = _padded(a, b, diag_f, tau, sd, bm, bn, extra=gbar)
+    da, dtau = pl.pallas_call(
+        functools.partial(_bwd_row_kernel, bn=bn, n_valid=n, denom=denom),
+        grid=(mp // bm, np_ // bn),
+        in_specs=_row_specs(bm, bn, d) + [pl.BlockSpec((bm,), lambda i, j: (i,))],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, d), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+        ],
+        interpret=_INTERPRET,
+    )(*ins)
+    return da[:m], dtau[:m]
+
+
+def _pallas_bwd_col(a, b, diag_f, tau, sd, gbar, denom, bm, bn):
+    m, d = a.shape
+    n = b.shape[0]
+    ins, mp, np_ = _padded(a, b, diag_f, tau, sd, bm, bn, extra=gbar)
+    specs = [
+        pl.BlockSpec((bm, d), lambda jb, i: (i, 0)),
+        pl.BlockSpec((bn, d), lambda jb, i: (jb, 0)),
+        pl.BlockSpec((bm,), lambda jb, i: (i,)),
+        pl.BlockSpec((bm,), lambda jb, i: (i,)),
+        pl.BlockSpec((bm,), lambda jb, i: (i,)),
+        pl.BlockSpec((bm,), lambda jb, i: (i,)),
+    ]
+    db = pl.pallas_call(
+        functools.partial(_bwd_col_kernel, bn=bn, n_valid=n, denom=denom),
+        grid=(np_ // bn, mp // bm),  # transposed: db block is the fast revisit
+        in_specs=specs,
+        out_specs=pl.BlockSpec((bn, d), lambda jb, i: (jb, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, d), jnp.float32),
+        interpret=_INTERPRET,
+    )(*ins)
+    return db[:n]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable core: explicit sd, explicit denominator. diag_f is a pure
+# mask input (float-encoded; -1 = "mask nothing"); its cotangent is zero.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _masked_exp_rowsum(a, b, diag_f, sd, tau, denom, bm, bn):
+    return _pallas_fwd(a, b, diag_f, tau, sd, denom, bm, bn)
+
+
+def _core_fwd(a, b, diag_f, sd, tau, denom, bm, bn):
+    g = _pallas_fwd(a, b, diag_f, tau, sd, denom, bm, bn)
+    return g, (a, b, diag_f, sd, tau, g)
+
+
+def _core_bwd(denom, bm, bn, res, gbar):
+    a, b, diag_f, sd, tau, g = res
+    gbar = gbar.astype(jnp.float32)
+    da, dtau = _pallas_bwd_row(a, b, diag_f, tau, sd, gbar, denom, bm, bn)
+    db = _pallas_bwd_col(a, b, diag_f, tau, sd, gbar, denom, bm, bn)
+    dsd = -(gbar / tau) * g  # every term carries -1/tau_i through z
+    return (da.astype(a.dtype), db.astype(b.dtype), jnp.zeros_like(diag_f),
+            dsd.astype(sd.dtype), dtau.astype(tau.dtype))
+
+
+_masked_exp_rowsum.defvjp(_core_fwd, _core_bwd)
+
+
+def pair_exp_rowsum(a, b, diag_idx, tau, *, bm=None, bn=None):
+    """Differentiable masked exp row-sum over pairwise similarities.
+
+    g_i = 1/(N-1) * sum_{j != diag_idx[i]} exp((<a_i,b_j> - <a_i,b_diag_i>)/tau_i)
+
+    Args:
+      a: (M, d) anchor embeddings (f32 or bf16, L2-normalized by caller).
+      b: (N, d) candidate embeddings.
+      diag_idx: (M,) integer (or float-encoded) positive-pair column index.
+      tau: (M,) per-row temperature (broadcast a scalar for global tau).
+    Returns:
+      g: (M,) f32. Differentiable w.r.t. a, b and tau (the s_diag path —
+      the gather of b at diag_idx — is plain jnp, so autodiff covers it).
+    """
+    bm, bn = _pick_blocks(a.shape[0], b.shape[0], bm, bn)
+    diag_f = diag_idx.astype(jnp.float32)
+    sd = jnp.sum(a.astype(jnp.float32)
+                 * jnp.take(b, diag_idx.astype(jnp.int32), axis=0).astype(jnp.float32),
+                 axis=-1)
+    return _masked_exp_rowsum(a, b, diag_f, sd, tau, b.shape[0] - 1, bm, bn)
+
+
+def pair_exp_rowsum_nodiag(a, b, sd, tau, denom, *, bm=None, bn=None):
+    """Distributed column form: no positive column present in `b`.
+
+    g_i = 1/denom * sum_{j in b} exp((<a_i,b_j> - sd_i)/tau_i)
+
+    Used for the (non-local row, local column) partial sums of the
+    FastCLIP gradient estimator, where the positive pair of row i lives on
+    another worker: `sd` (= s_{i,i}) is passed in precomputed from the
+    gathered embeddings and `denom` is the GLOBAL |B|-1. Differentiable
+    w.r.t. a, b, sd and tau.
+    """
+    bm, bn = _pick_blocks(a.shape[0], b.shape[0], bm, bn)
+    diag_f = jnp.full((a.shape[0],), -1.0, jnp.float32)
+    return _masked_exp_rowsum(a, b, diag_f, sd, tau, float(denom), bm, bn)

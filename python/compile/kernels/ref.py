@@ -1,0 +1,36 @@
+# Pure-jnp correctness oracle for the L1 Pallas kernels.
+#
+# pytest compares the Pallas `pair_exp_rowsum` (values AND gradients, via
+# jax.grad through the custom_vjp) against these reference implementations.
+# Everything here is plain differentiable jax.numpy — the CORE correctness
+# signal for the whole stack.
+import jax.numpy as jnp
+
+
+def pair_exp_rowsum_ref(a, b, diag_idx, tau):
+    """Reference for the contrastive hot-spot.
+
+    g_i = 1/(N-1) * sum_{j != diag_idx[i]} exp((s_ij - s_{i,diag_i}) / tau_i)
+
+    where s = a @ b^T (a: (M, d) "anchor" embeddings, b: (N, d) "candidate"
+    embeddings, both assumed L2-normalized by the caller so s is cosine
+    similarity), diag_idx: (M,) int — global column index of the positive
+    pair for each row, tau: (M,) — per-row temperature.
+
+    This is exactly g_1(w, tau, i, B_{i-}) (and by symmetry g_2) of the
+    paper: the inner function of the FCCO-formulated global contrastive
+    loss (GCL / RGCL / RGCL-g), and also the denominator sum of MBCL.
+    """
+    m, n = a.shape[0], b.shape[0]
+    s = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32).T)
+    diag_idx = diag_idx.astype(jnp.int32)
+    sd = jnp.take_along_axis(s, diag_idx[:, None], axis=1)[:, 0]
+    z = (s - sd[:, None]) / tau[:, None]
+    mask = jnp.arange(n)[None, :] != diag_idx[:, None]
+    p = jnp.where(mask, jnp.exp(z), 0.0)
+    return jnp.sum(p, axis=1) / (n - 1)
+
+
+def pair_exp_weighted_rowsum_ref(a, b, diag_idx, tau, row_w):
+    """sum_i row_w_i * g_i — the weighted scalar used in the FCCO surrogate."""
+    return jnp.sum(row_w * pair_exp_rowsum_ref(a, b, diag_idx, tau))

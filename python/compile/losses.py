@@ -1,0 +1,243 @@
+# L2: distributed FCCO/SogCLR training-step graphs for every loss family
+# in the paper: GCL (SogCLR / FastCLIP-v1), unscaled-GCL (FastCLIP-v0),
+# RGCL with individual temperatures (iSogCLR / FastCLIP-v2), RGCL-g with a
+# single learnable temperature (FastCLIP-v3), and MBCL (OpenCLIP baseline).
+#
+# Per iteration the Rust coordinator runs, on every worker k (DESIGN.md §4):
+#   1. `encode`           local batch -> (e1_k, e2_k)
+#   2. ALL_GATHER(e1,e2)  O(K*B*d)   and later ALL_GATHER(u) O(K*B) scalars
+#   3. `phase_g`          gathered feats -> (g1, g2) and u^{t+1} (Eq. 1)
+#   4. `step_<variant>`   gathered feats + gathered u^{t+1} -> local gradient
+#                         contribution + loss + tau-gradient
+#   5. ALL_REDUCE(grad)   and the Rust-side optimizer / tau / gamma updates
+#
+# The gradient estimator is realized as a *surrogate*: with row weights
+# w_i = f'(u_i^{t+1}) held by stop_gradient,
+#     Surr = (1/|B|) sum_i sg(w_i) * g_i(live embeddings)
+# whose autodiff gradient is exactly (1/|B|) sum_i f'(u_i) * grad(g_i) —
+# Eq. (2)-(7) of the paper. Each worker differentiates only through its own
+# live rows/columns, splits the sum as
+#     (local rows x all cols)   -> pair_exp_rowsum       (the "G_{w,a,k}" part)
+#   + (nonlocal rows x local cols) -> pair_exp_rowsum_nodiag ("G_{w,b,k}")
+# and SUM-ALL_REDUCE recovers the full estimator without ever forming the
+# (nonlocal x nonlocal) terms (which carry no local gradient).
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.contrastive import pair_exp_rowsum, pair_exp_rowsum_nodiag
+from . import model as model_lib
+
+VARIANTS = ("gcl", "gcl_v0", "rgcl_i", "rgcl_g", "mbcl")
+
+sg = jax.lax.stop_gradient
+
+
+def phase_g(e1g, e2g, offset, u1, u2, tau1, tau2, gamma, *, bl):
+    """Compute batch estimators g1, g2 for the LOCAL rows of the gathered
+    embeddings and the moving-average update of u (Eq. 1).
+
+    Variant-independent (OpenCLIP passes gamma=1 so u^{t+1} = g).
+
+    e1g, e2g: (Bg, d) gathered; offset: () i32 local row offset;
+    u1, u2, tau1, tau2: (Bl,); gamma: () f32.
+    Returns g1, g2, u1_new, u2_new: (Bl,).
+    """
+    d = e1g.shape[1]
+    e1l = jax.lax.dynamic_slice(e1g, (offset, 0), (bl, d))
+    e2l = jax.lax.dynamic_slice(e2g, (offset, 0), (bl, d))
+    diag = offset + jnp.arange(bl, dtype=jnp.int32)
+    g1 = pair_exp_rowsum(e1l, e2g, diag, tau1)
+    g2 = pair_exp_rowsum(e2l, e1g, diag, tau2)
+    u1n = (1.0 - gamma) * u1 + gamma * g1
+    u2n = (1.0 - gamma) * u2 + gamma * g2
+    return g1, g2, u1n, u2n
+
+
+def _weights(variant, u, tau_rows, eps, bg):
+    """Row weight f'(u^{t+1}) per loss family (stop-grad applied by caller).
+
+    gcl / rgcl_g : d/dg [tau * log(eps+g)]            = tau/(eps+u)
+    gcl_v0       : d/dg [log(eps+g)]                  = 1/(eps+u)
+    rgcl_i       : d/dg [tau_i * log(eps+g)]          = tau_i/(eps+u)
+    mbcl         : d/dg [log(1/B + (B-1)/B * g)]      = (B-1)/(1+(B-1)u)
+    """
+    if variant == "mbcl":
+        return (bg - 1.0) / (1.0 + (bg - 1.0) * u)
+    if variant == "gcl_v0":
+        return 1.0 / (eps + u)
+    return tau_rows / (eps + u)
+
+
+def _loss_value(variant, u1l, u2l, tau1l, tau2l, eps, rho, bg):
+    """Reported (local-mean) loss value for logging, from updated u."""
+    if variant == "mbcl":
+        t1 = jnp.log(1.0 / bg + (bg - 1.0) / bg * u1l)
+        t2 = jnp.log(1.0 / bg + (bg - 1.0) / bg * u2l)
+        return jnp.mean(t1 + t2)
+    l1, l2 = jnp.log(eps + u1l), jnp.log(eps + u2l)
+    if variant in ("gcl", "gcl_v0"):
+        return jnp.mean(tau1l * l1 + tau2l * l2)
+    # rgcl family carries the +rho margin terms
+    return jnp.mean(tau1l * (l1 + rho) + tau2l * (l2 + rho))
+
+
+def _split_nonlocal(x, offset, bl):
+    """Drop the local block [offset, offset+bl) via a dynamic roll."""
+    return jnp.roll(x, -offset, axis=0)[bl:]
+
+
+def _surrogate(variant, cfg, flat, images, texts, e1g, e2g, u1g, u2g,
+               tau1g, tau2g, tau1g_row, tau2g_row, offset, eps, *, bl, bg):
+    """The scalar whose gradient w.r.t. `flat` is this worker's gradient
+    contribution (and w.r.t. tau*_row, the temperature gradient terms).
+
+    tau1g/tau2g feed the *column* kernel calls (always stop-grad);
+    tau1g_row/tau2g_row feed the *row* calls — passing the differentiable
+    temperature there makes d(surrogate)/d(tau_row) count every (i, j)
+    pair exactly once across workers (rows partition the global batch).
+    """
+    e1, e2 = model_lib.encode(cfg, flat, images, texts)      # (Bl, d) live
+    e1g_sp = jax.lax.dynamic_update_slice(sg(e1g), e1, (offset, 0))
+    e2g_sp = jax.lax.dynamic_update_slice(sg(e2g), e2, (offset, 0))
+    diag = offset + jnp.arange(bl, dtype=jnp.int32)
+
+    u1l = jax.lax.dynamic_slice(u1g, (offset,), (bl,))
+    u2l = jax.lax.dynamic_slice(u2g, (offset,), (bl,))
+    tau1l_row = jax.lax.dynamic_slice(tau1g_row, (offset,), (bl,))
+    tau2l_row = jax.lax.dynamic_slice(tau2g_row, (offset,), (bl,))
+
+    # --- local rows x all columns (covers (loc,loc) and (loc,nonloc)) ---
+    g1_row = pair_exp_rowsum(e1, e2g_sp, diag, tau1l_row)
+    g2_row = pair_exp_rowsum(e2, e1g_sp, diag, tau2l_row)
+    w1l = sg(_weights(variant, u1l, tau1l_row, eps, bg))
+    w2l = sg(_weights(variant, u2l, tau2l_row, eps, bg))
+    row_part = jnp.sum(w1l * g1_row + w2l * g2_row)
+
+    if bg == bl:  # single-worker: every row is local, no column part
+        return row_part / bg, (u1l, u2l)
+
+    # --- nonlocal rows x local columns ------------------------------------
+    e1_nl = _split_nonlocal(sg(e1g), offset, bl)             # (Bg-Bl, d)
+    e2_nl = _split_nonlocal(sg(e2g), offset, bl)
+    sd_nl = jnp.sum(e1_nl * e2_nl, axis=-1)                  # s_ii, constant
+    u1_nl = _split_nonlocal(u1g, offset, bl)
+    u2_nl = _split_nonlocal(u2g, offset, bl)
+    tau1_nl = sg(_split_nonlocal(tau1g, offset, bl))
+    tau2_nl = sg(_split_nonlocal(tau2g, offset, bl))
+    g1_col = pair_exp_rowsum_nodiag(e1_nl, e2, sd_nl, tau1_nl, bg - 1)
+    g2_col = pair_exp_rowsum_nodiag(e2_nl, e1, sd_nl, tau2_nl, bg - 1)
+    w1n = sg(_weights(variant, u1_nl, tau1_nl, eps, bg))
+    w2n = sg(_weights(variant, u2_nl, tau2_nl, eps, bg))
+    col_part = jnp.sum(w1n * g1_col + w2n * g2_col)
+
+    return (row_part + col_part) / bg, (u1l, u2l)
+
+
+def step(variant, cfg, flat, images, texts, e1g, e2g, u1g, u2g,
+         tau_args, offset, eps, rho, *, bl, bg, k_workers):
+    """One worker's gradient computation for `variant`.
+
+    tau_args: (tau,) scalar for global-temperature variants, or
+              (tau1g, tau2g) — gathered (Bg,) vectors — for rgcl_i.
+    Returns dict with: grad (P,), loss (), and the variant's tau grads.
+    SUM-ALL_REDUCE every output across workers (loss/tau terms carry 1/K
+    or row-partition scaling so that the sum is the paper's estimator).
+    """
+    if variant == "rgcl_i":
+        tau1g, tau2g = tau_args
+        tau_scalar = None
+    else:
+        (tau_scalar,) = tau_args
+        tau1g = tau2g = jnp.full((bg,), 1.0, jnp.float32) * tau_scalar
+
+    def surr(flat_, tau1g_row, tau2g_row):
+        return _surrogate(variant, cfg, flat_, images, texts, e1g, e2g,
+                          u1g, u2g, tau1g, tau2g, tau1g_row, tau2g_row,
+                          offset, eps, bl=bl, bg=bg)
+
+    if variant in ("gcl", "mbcl"):
+        # constant tau (v1/SogCLR) or tau handled as learnable-by-row (mbcl)
+        if variant == "mbcl":
+            (grad, dtau1, dtau2), (_, aux) = _grad_with_tau(surr, flat, tau1g, tau2g)
+            tau_grad = jnp.sum(dtau1) + jnp.sum(dtau2)
+        else:
+            grad, aux = _grad_only(surr, flat, tau1g, tau2g)
+            tau_grad = jnp.zeros(())
+        u1l, u2l = aux
+        loss = _local_loss(variant, u1l, u2l, tau1g, tau2g, offset, eps, rho,
+                           bl, bg, k_workers)
+        return {"grad": grad, "loss": loss, "tau_grad": tau_grad}
+
+    if variant == "gcl_v0":
+        # Eq. (8): G_tau = (1/Bg) sum_i w0_i dg_i/dtau, rows partitioned.
+        (grad, dtau1, dtau2), (_, aux) = _grad_with_tau(surr, flat, tau1g, tau2g)
+        tau_grad = jnp.sum(dtau1) + jnp.sum(dtau2)
+        u1l, u2l = aux
+        loss = _local_loss(variant, u1l, u2l, tau1g, tau2g, offset, eps, rho,
+                           bl, bg, k_workers)
+        return {"grad": grad, "loss": loss, "tau_grad": tau_grad}
+
+    if variant == "rgcl_g":
+        # Eq. (10): log terms + 2*rho + tau * (unscaled dg/dtau sum).
+        # The surrogate's row weights already carry tau/(eps+u); its tau-row
+        # gradient is  (1/Bg) sum_i tau*w0_i*dg_i/dtau  == the last term.
+        (grad, dtau1, dtau2), (_, aux) = _grad_with_tau(surr, flat, tau1g, tau2g)
+        u1l, u2l = aux
+        log_terms = jnp.sum(jnp.log(eps + u1l) + jnp.log(eps + u2l)) / bg
+        tau_grad = log_terms + 2.0 * rho / k_workers + jnp.sum(dtau1) + jnp.sum(dtau2)
+        loss = _local_loss(variant, u1l, u2l, tau1g, tau2g, offset, eps, rho,
+                           bl, bg, k_workers)
+        return {"grad": grad, "loss": loss, "tau_grad": tau_grad}
+
+    assert variant == "rgcl_i"
+    # Eq. (9), per local sample (stochastic coordinate update; 1/|S| scale
+    # is applied by the Rust coordinator, which knows the dataset size).
+    (grad, dtau1g, dtau2g), (_, aux) = _grad_with_tau(surr, flat, tau1g, tau2g)
+    u1l, u2l = aux
+    tau1l = jax.lax.dynamic_slice(tau1g, (offset,), (bl,))
+    tau2l = jax.lax.dynamic_slice(tau2g, (offset,), (bl,))
+    dtau1l = jax.lax.dynamic_slice(dtau1g, (offset,), (bl,))
+    dtau2l = jax.lax.dynamic_slice(dtau2g, (offset,), (bl,))
+    # dtau*l is (1/Bg) w_i dg_i/dtau_i with w = tau/(eps+u); Eq. 9 wants
+    # log(eps+u)+rho + tau*(1/(eps+u))*dg/dtau (per-sample, batch estimator
+    # of the per-sample loss, NOT averaged over the batch) -> rescale by Bg.
+    tau1_grad = jnp.log(eps + u1l) + rho + bg * dtau1l
+    tau2_grad = jnp.log(eps + u2l) + rho + bg * dtau2l
+    loss = _local_loss(variant, u1l, u2l, tau1l, tau2l, offset, eps, rho,
+                       bl, bg, k_workers, per_sample_tau=True)
+    return {"grad": grad, "loss": loss,
+            "tau1_grad": tau1_grad, "tau2_grad": tau2_grad}
+
+
+def _grad_only(surr, flat, tau1g, tau2g):
+    def f(flat_):
+        v, aux = surr(flat_, sg(tau1g), sg(tau2g))
+        return v, aux
+    (_, aux), grad = jax.value_and_grad(f, has_aux=True)(flat)
+    return grad, aux
+
+
+def _grad_with_tau(surr, flat, tau1g, tau2g):
+    def f(flat_, t1, t2):
+        v, aux = surr(flat_, t1, t2)
+        return v, aux
+    grads, (v, aux) = _value_grads(f, flat, tau1g, tau2g)
+    return grads, (v, aux)
+
+
+def _value_grads(f, flat, t1, t2):
+    (v, aux), grads = jax.value_and_grad(f, argnums=(0, 1, 2), has_aux=True)(flat, t1, t2)
+    return grads, (v, aux)
+
+
+def _local_loss(variant, u1l, u2l, tau1g, tau2g, offset, eps, rho, bl, bg,
+                k_workers, per_sample_tau=False):
+    if per_sample_tau:
+        t1l, t2l = tau1g, tau2g  # already sliced by caller
+    else:
+        t1l = jax.lax.dynamic_slice(tau1g, (offset,), (bl,))
+        t2l = jax.lax.dynamic_slice(tau2g, (offset,), (bl,))
+    # scaled so that SUM over workers = global mean loss
+    return _loss_value(variant, u1l, u2l, t1l, t2l, eps, rho, bg) / k_workers

@@ -1,0 +1,179 @@
+# L2: the CLIP model — ViT-style vision tower + transformer text tower.
+#
+# Parameters live in ONE flat f32 vector so the Rust coordinator handles a
+# single parameter/gradient literal per step; `param_spec` (exported into
+# the artifact manifest) gives the Rust optimizers the per-leaf segmentation
+# they need (LAMB normalizes per layer). Unflattening uses static slices,
+# which XLA folds away.
+#
+# The towers mirror the paper's setup (a vision encoder + a 12-layer
+# transformer text encoder, joint embedding with L2 normalization); presets
+# scale them down to CPU-trainable sizes (see DESIGN.md §1).
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_embed: int          # joint embedding dim
+    v_patches: int        # number of image patches (sequence length)
+    v_patch_dim: int      # raw patch feature dim
+    v_width: int
+    v_layers: int
+    v_heads: int
+    t_vocab: int
+    t_len: int            # text sequence length
+    t_width: int
+    t_layers: int
+    t_heads: int
+
+
+PRESETS: dict[str, ModelConfig] = {
+    # ~0.66M params — unit tests, quickstart.
+    "tiny": ModelConfig("tiny", 64, 16, 32, 64, 2, 4, 256, 16, 64, 2, 4),
+    # ~4.4M params — medium-scale experiment analog (paper: ResNet50/CC3M).
+    "small": ModelConfig("small", 128, 16, 32, 192, 4, 6, 512, 24, 192, 4, 6),
+    # ~21M params — large-scale analog (paper: ViT-B/32 on CC12M).
+    "medium": ModelConfig("medium", 256, 32, 48, 384, 6, 8, 1024, 32, 384, 6, 8),
+    # ~107M-class params — xlarge analog / e2e driver (paper: ViT-B/16).
+    "base": ModelConfig("base", 512, 49, 64, 768, 8, 12, 4096, 32, 768, 8, 12),
+}
+
+
+def _tower_spec(prefix: str, width: int, layers: int) -> list[tuple[str, tuple[int, ...]]]:
+    spec = []
+    for l in range(layers):
+        p = f"{prefix}.blk{l}"
+        spec += [
+            (f"{p}.ln1.g", (width,)), (f"{p}.ln1.b", (width,)),
+            (f"{p}.attn.wqkv", (width, 3 * width)), (f"{p}.attn.bqkv", (3 * width,)),
+            (f"{p}.attn.wo", (width, width)), (f"{p}.attn.bo", (width,)),
+            (f"{p}.ln2.g", (width,)), (f"{p}.ln2.b", (width,)),
+            (f"{p}.mlp.w1", (width, 4 * width)), (f"{p}.mlp.b1", (4 * width,)),
+            (f"{p}.mlp.w2", (4 * width, width)), (f"{p}.mlp.b2", (width,)),
+        ]
+    spec += [(f"{prefix}.lnf.g", (width,)), (f"{prefix}.lnf.b", (width,))]
+    return spec
+
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) leaves; the flat vector concatenates these."""
+    spec = [
+        ("v.patch.w", (cfg.v_patch_dim, cfg.v_width)),
+        ("v.patch.b", (cfg.v_width,)),
+        ("v.pos", (cfg.v_patches, cfg.v_width)),
+    ]
+    spec += _tower_spec("v", cfg.v_width, cfg.v_layers)
+    spec += [("v.proj", (cfg.v_width, cfg.d_embed))]
+    spec += [
+        ("t.tok", (cfg.t_vocab, cfg.t_width)),
+        ("t.pos", (cfg.t_len, cfg.t_width)),
+    ]
+    spec += _tower_spec("t", cfg.t_width, cfg.t_layers)
+    spec += [("t.proj", (cfg.t_width, cfg.d_embed))]
+    return spec
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_spec(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """Deterministic GPT-style init, flattened. np (not jax) for AOT speed."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_spec(cfg):
+        n_layers = cfg.v_layers if name.startswith("v") else cfg.t_layers
+        if name.endswith(".g"):
+            x = np.ones(shape, np.float32)
+        elif name.endswith((".b", ".bqkv", ".bo", ".b1", ".b2")):
+            x = np.zeros(shape, np.float32)
+        elif name.endswith(".pos"):
+            x = (0.01 * rng.standard_normal(shape)).astype(np.float32)
+        elif name.endswith((".wo", ".w2")):  # residual-out projections
+            std = 0.02 / math.sqrt(2 * n_layers)
+            x = (std * rng.standard_normal(shape)).astype(np.float32)
+        elif name.endswith(".proj"):
+            std = shape[0] ** -0.5
+            x = (std * rng.standard_normal(shape)).astype(np.float32)
+        else:
+            x = (0.02 * rng.standard_normal(shape)).astype(np.float32)
+        chunks.append(x.reshape(-1))
+    return np.concatenate(chunks)
+
+
+def unflatten(cfg: ModelConfig, flat):
+    """flat (P,) -> dict name -> array. Static slices; XLA folds them."""
+    out, off = {}, 0
+    for name, shape in param_spec(cfg):
+        size = int(np.prod(shape))
+        out[name] = flat[off:off + size].reshape(shape)
+        off += size
+    return out
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, p, prefix, heads):
+    bsz, seq, width = x.shape
+    hd = width // heads
+    qkv = x @ p[f"{prefix}.attn.wqkv"] + p[f"{prefix}.attn.bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads_split(t):
+        return t.reshape(bsz, seq, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads_split(q), heads_split(k), heads_split(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, seq, width)
+    return o @ p[f"{prefix}.attn.wo"] + p[f"{prefix}.attn.bo"]
+
+
+def _block(x, p, prefix, heads):
+    h = _layernorm(x, p[f"{prefix}.ln1.g"], p[f"{prefix}.ln1.b"])
+    x = x + _attention(h, p, prefix, heads)
+    h = _layernorm(x, p[f"{prefix}.ln2.g"], p[f"{prefix}.ln2.b"])
+    h = jax.nn.gelu(h @ p[f"{prefix}.mlp.w1"] + p[f"{prefix}.mlp.b1"])
+    return x + h @ p[f"{prefix}.mlp.w2"] + p[f"{prefix}.mlp.b2"]
+
+
+def _tower(x, p, prefix, layers, heads):
+    for l in range(layers):
+        x = _block(x, p, f"{prefix}.blk{l}", heads)
+    x = _layernorm(x, p[f"{prefix}.lnf.g"], p[f"{prefix}.lnf.b"])
+    return jnp.mean(x, axis=1)  # mean pool over sequence
+
+
+def encode_images(cfg: ModelConfig, p, images):
+    """images: (B, v_patches, v_patch_dim) f32 -> (B, d_embed) L2-normalized."""
+    x = images @ p["v.patch.w"] + p["v.patch.b"] + p["v.pos"]
+    pooled = _tower(x, p, "v", cfg.v_layers, cfg.v_heads)
+    e = pooled @ p["v.proj"]
+    return e / (jnp.linalg.norm(e, axis=-1, keepdims=True) + 1e-8)
+
+
+def encode_texts(cfg: ModelConfig, p, texts):
+    """texts: (B, t_len) i32 -> (B, d_embed) L2-normalized."""
+    x = jnp.take(p["t.tok"], texts, axis=0) + p["t.pos"]
+    pooled = _tower(x, p, "t", cfg.t_layers, cfg.t_heads)
+    e = pooled @ p["t.proj"]
+    return e / (jnp.linalg.norm(e, axis=-1, keepdims=True) + 1e-8)
+
+
+def encode(cfg: ModelConfig, flat, images, texts):
+    """The `encode` artifact body: local batch -> joint embeddings."""
+    p = unflatten(cfg, flat)
+    return encode_images(cfg, p, images), encode_texts(cfg, p, texts)

@@ -1,0 +1,128 @@
+# L1 performance analysis: block-shape sweep for the pair_exp_rowsum
+# Pallas kernel (EXPERIMENTS.md §Perf, DESIGN.md §7).
+#
+# interpret=True timings are CPU-numpy and NOT a TPU proxy, so this sweep
+# optimizes STRUCTURE, not wallclock: for each (bm, bn) candidate it
+# reports
+#   * VMEM footprint of one grid step (A-tile + B-tile + vectors + the
+#     accumulator block) against the ~16 MiB/core budget;
+#   * MXU utilization estimate: the fraction of an aligned
+#     128x128x(d) systolic pass that the tile's real work occupies
+#     (padding waste from ceil-rounding M, N, d to the tile grid);
+#   * HBM traffic per kernel invocation (tiles re-read per grid axis) and
+#     arithmetic intensity (flops/byte), locating the kernel against the
+#     roofline ridge;
+# and verifies numerics vs the pure-jnp oracle at every candidate.
+#
+# Usage: python -m compile.perf_sweep [--m 256] [--n 256] [--d 128]
+import argparse
+import itertools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import contrastive, ref
+
+MXU = 128          # systolic array dim (TPU v4/v5 class)
+VMEM_BYTES = 16 * 2**20
+F4 = 4
+
+
+def ceil_to(x, m):
+    return (x + m - 1) // m * m
+
+
+def analyze(m, n, d, bm, bn):
+    """Static structure analysis of one (bm, bn) choice."""
+    mp, np_ = ceil_to(m, bm), ceil_to(n, bn)
+    grid = (mp // bm) * (np_ // bn)
+    # one grid step holds: A (bm,d), B (bn,d), 4 bm-vectors, g-block (bm,)
+    vmem = (bm * d + bn * d + 5 * bm) * F4
+    # useful MAC work vs aligned-systolic work for the (bm,d)x(d,bn) tile
+    useful = m * n * d
+    padded = mp * np_ * ceil_to(d, MXU)
+    mxu_util = useful / padded
+    # HBM traffic: A re-read once per j-step? No — A block is revisited
+    # along j with the same i: stays resident; B re-read per i-row.
+    hbm = (mp * d * (1) + np_ * d * (mp // bm) + 2 * mp) * F4
+    flops = 2 * m * n * d + 4 * m * n  # matmul + exp/mask epilogue
+    return {
+        "bm": bm,
+        "bn": bn,
+        "grid_steps": grid,
+        "vmem_bytes": vmem,
+        "vmem_frac": vmem / VMEM_BYTES,
+        "mxu_utilization": mxu_util,
+        "hbm_bytes": hbm,
+        "arith_intensity": flops / hbm,
+    }
+
+
+def check_numerics(m, n, d, bm, bn, rng):
+    a = rng.standard_normal((m, d)).astype(np.float32)
+    b = rng.standard_normal((n, d)).astype(np.float32)
+    a /= np.linalg.norm(a, axis=1, keepdims=True)
+    b /= np.linalg.norm(b, axis=1, keepdims=True)
+    diag = np.arange(m, dtype=np.int32) % n
+    tau = np.full((m,), 0.05, np.float32)
+    got = contrastive.pair_exp_rowsum(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(diag), jnp.asarray(tau), bm=bm, bn=bn
+    )
+    want = ref.pair_exp_rowsum_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(diag),
+                                   jnp.asarray(tau))
+    err = float(jnp.max(jnp.abs(got - want) / (jnp.abs(want) + 1e-6)))
+    return err
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=256)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--d", type=int, default=128)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    m, n, d = args.m, args.n, args.d
+    rng = np.random.default_rng(0)
+
+    rows = []
+    print(f"pair_exp_rowsum block sweep  M={m} N={n} d={d}")
+    print(f"{'bm':>5} {'bn':>5} {'grid':>6} {'VMEM':>10} {'MXU util':>9} "
+          f"{'AI f/B':>7} {'max rel err':>12}")
+    for bm, bn in itertools.product([8, 32, 64, 128, 256], [128, 256, 512]):
+        if bm > ceil_to(m, 8) or bn > ceil_to(n, 128):
+            continue
+        info = analyze(m, n, d, bm, bn)
+        if info["vmem_frac"] > 1.0:
+            continue  # does not fit VMEM: rejected structurally
+        t0 = time.time()
+        err = check_numerics(m, n, d, bm, bn, rng)
+        info["max_rel_err"] = err
+        info["interp_s"] = time.time() - t0  # compile+run; NOT a TPU proxy
+        rows.append(info)
+        print(f"{bm:>5} {bn:>5} {info['grid_steps']:>6} "
+              f"{info['vmem_bytes']:>9}B {info['mxu_utilization']:>9.3f} "
+              f"{info['arith_intensity']:>7.1f} {err:>12.2e}")
+        assert err < 1e-4, f"numerics regressed at bm={bm} bn={bn}"
+
+    # pick: max MXU utilization, tie-break on arithmetic intensity then
+    # smaller VMEM (leaves room for double-buffering)
+    best = max(rows, key=lambda r: (r["mxu_utilization"], r["arith_intensity"],
+                                    -r["vmem_bytes"]))
+    print(f"\nbest block: bm={best['bm']} bn={best['bn']} "
+          f"(MXU {best['mxu_utilization']:.3f}, "
+          f"VMEM {best['vmem_bytes']/2**10:.0f} KiB, "
+          f"AI {best['arith_intensity']:.1f} flops/B)")
+    out = args.out or os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "results", "l1_blocks.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"m": m, "n": n, "d": d, "rows": rows, "best": best}, f, indent=1)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

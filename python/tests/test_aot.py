@@ -1,0 +1,74 @@
+# AOT bundle integrity: manifest consistency, HLO text parseability
+# (entry signature), deterministic init params.
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import losses
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    with tempfile.TemporaryDirectory() as td:
+        manifest = aot.build_bundle("tiny", k_workers=2, bl=4, out_dir=td,
+                                    seed=7, variants=("gcl", "rgcl_i"))
+        files = {f: os.path.join(td, f) for f in os.listdir(td)}
+        blobs = {}
+        for f, p in files.items():
+            mode = "rb" if f.endswith(".bin") else "r"
+            with open(p, mode) as fh:
+                blobs[f] = fh.read()
+        yield manifest, blobs
+
+
+def test_manifest_fields(bundle):
+    manifest, blobs = bundle
+    assert manifest["global_batch"] == 8
+    assert manifest["n_params"] == M.n_params(M.PRESETS["tiny"])
+    assert json.loads(blobs["manifest.json"]) == manifest
+
+
+def test_param_spec_contiguous(bundle):
+    manifest, _ = bundle
+    off = 0
+    for leaf in manifest["param_spec"]:
+        assert leaf["offset"] == off
+        assert leaf["size"] == int(np.prod(leaf["shape"]))
+        off += leaf["size"]
+    assert off == manifest["n_params"]
+
+
+def test_init_params_deterministic(bundle):
+    manifest, blobs = bundle
+    init = np.frombuffer(blobs["init_params.bin"], dtype="<f4")
+    assert init.shape == (manifest["n_params"],)
+    np.testing.assert_array_equal(init, M.init_params(M.PRESETS["tiny"], seed=7))
+
+
+def test_hlo_files_present_and_entry(bundle):
+    manifest, blobs = bundle
+    expected = ["encode", "phase_g", "step_gcl", "step_rgcl_i"]
+    for name in expected:
+        text = blobs[f"{name}.hlo.txt"]
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+    assert "step_mbcl.hlo.txt" not in blobs  # variants filter respected
+
+
+def test_signatures_match_manifest(bundle):
+    manifest, blobs = bundle
+    p = manifest["n_params"]
+    sig = manifest["executables"]["step_gcl"]
+    assert sig["inputs"][0] == {"name": "params", "shape": [p], "dtype": "float32"}
+    assert sig["outputs"][0] == {"name": "grad", "shape": [p], "dtype": "float32"}
+    # rgcl_i carries per-sample temperature vectors and gradients
+    sig_i = manifest["executables"]["step_rgcl_i"]
+    in_names = [i["name"] for i in sig_i["inputs"]]
+    out_names = [o["name"] for o in sig_i["outputs"]]
+    assert "tau1g" in in_names and "tau2g" in in_names
+    assert "tau1_grad" in out_names and "tau2_grad" in out_names

@@ -1,0 +1,127 @@
+# L1 correctness: Pallas `pair_exp_rowsum` vs the pure-jnp oracle.
+#
+# hypothesis sweeps shapes / dtypes / temperature scales / block shapes and
+# asserts allclose for the forward value AND for every gradient (a, b, tau)
+# through the custom_vjp. This is the core correctness signal for the stack.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.contrastive import pair_exp_rowsum, _pick_blocks
+from compile.kernels.ref import pair_exp_rowsum_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _make_inputs(m, n, d, seed, tau_lo=0.03, tau_hi=1.0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, d)).astype(np.float32)
+    b = rng.standard_normal((n, d)).astype(np.float32)
+    a /= np.linalg.norm(a, axis=-1, keepdims=True) + 1e-12
+    b /= np.linalg.norm(b, axis=-1, keepdims=True) + 1e-12
+    diag = rng.integers(0, n, size=(m,)).astype(np.int32)
+    tau = rng.uniform(tau_lo, tau_hi, size=(m,)).astype(np.float32)
+    w = rng.standard_normal((m,)).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b), jnp.asarray(diag), jnp.asarray(tau), jnp.asarray(w)
+
+
+def _assert_close(x, y, rtol=3e-5, atol=3e-5):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    n=st.integers(2, 96),
+    d=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_forward_matches_ref(m, n, d, seed):
+    a, b, diag, tau, _ = _make_inputs(m, n, d, seed)
+    _assert_close(pair_exp_rowsum(a, b, diag, tau), pair_exp_rowsum_ref(a, b, diag, tau))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 32),
+    n=st.integers(2, 64),
+    d=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gradients_match_ref(m, n, d, seed):
+    a, b, diag, tau, w = _make_inputs(m, n, d, seed)
+    f = lambda a_, b_, t_: jnp.sum(w * pair_exp_rowsum(a_, b_, diag, t_))
+    fr = lambda a_, b_, t_: jnp.sum(w * pair_exp_rowsum_ref(a_, b_, diag, t_))
+    got = jax.grad(f, argnums=(0, 1, 2))(a, b, tau)
+    want = jax.grad(fr, argnums=(0, 1, 2))(a, b, tau)
+    for x, y in zip(got, want):
+        _assert_close(x, y, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 128), (16, 128), (32, 256), (128, 128)])
+def test_block_shapes_equivalent(bm, bn):
+    # The block-shape sweep used in the perf pass must not change numerics.
+    a, b, diag, tau, _ = _make_inputs(40, 100, 32, seed=7)
+    base = pair_exp_rowsum(a, b, diag, tau)
+    _assert_close(pair_exp_rowsum(a, b, diag, tau, bm=bm, bn=bn), base, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    a, b, diag, tau, _ = _make_inputs(24, 48, 32, seed=3)
+    g = pair_exp_rowsum(a.astype(dtype), b.astype(dtype), diag, tau)
+    gr = pair_exp_rowsum_ref(a.astype(dtype), b.astype(dtype), diag, tau)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    _assert_close(g, gr, rtol=tol, atol=tol)
+    assert g.dtype == jnp.float32  # accumulation stays f32
+
+
+def test_scalar_tau_broadcast():
+    a, b, diag, _, _ = _make_inputs(16, 32, 8, seed=11)
+    t = jnp.full((16,), 0.05)
+    _assert_close(pair_exp_rowsum(a, b, diag, t), pair_exp_rowsum_ref(a, b, diag, t))
+
+
+def test_permutation_equivariance():
+    # Permuting candidate rows (and remapping diag_idx) must not change g.
+    a, b, diag, tau, _ = _make_inputs(12, 30, 16, seed=5)
+    perm = np.random.default_rng(0).permutation(30)
+    inv = np.argsort(perm)
+    g1 = pair_exp_rowsum(a, b, diag, tau)
+    g2 = pair_exp_rowsum(a, b[perm], jnp.asarray(inv)[diag], tau)
+    _assert_close(g1, g2, rtol=1e-6, atol=1e-6)
+
+
+def test_positive_outputs():
+    a, b, diag, _, _ = _make_inputs(8, 16, 8, seed=13)
+    g_hi = pair_exp_rowsum(a, b, diag, jnp.full((8,), 0.5))
+    g_lo = pair_exp_rowsum(a, b, diag, jnp.full((8,), 0.05))
+    assert bool(jnp.all(g_hi > 0)) and bool(jnp.all(g_lo > 0))
+
+
+def test_diag_exclusion():
+    # g must exclude the positive-pair term: with diag_idx = arange, the
+    # excluded entry is exp(0) = 1, so g == (full row sum - 1)/(N-1).
+    a, b, _, tau, _ = _make_inputs(6, 12, 8, seed=17)
+    diag = jnp.arange(6, dtype=jnp.int32)
+    g1 = pair_exp_rowsum(a, b, diag, tau)
+    s = a @ b.T
+    sd = jnp.take_along_axis(s, diag[:, None], axis=1)[:, 0]
+    full = jnp.sum(jnp.exp((s - sd[:, None]) / tau[:, None]), axis=1)
+    manual = (full - 1.0) / (12 - 1)
+    _assert_close(g1, manual, rtol=1e-5, atol=1e-5)
+
+
+def test_pick_blocks_bounds():
+    for m, n in [(1, 2), (7, 130), (128, 1024), (1000, 3)]:
+        bm, bn = _pick_blocks(m, n, None, None)
+        assert bm % 8 == 0 and bn % 128 == 0
+        assert bm <= 128 and bn <= 256
+
+
+def test_jit_compatible():
+    a, b, diag, tau, _ = _make_inputs(16, 32, 16, seed=23)
+    jf = jax.jit(lambda a_, b_: pair_exp_rowsum(a_, b_, diag, tau))
+    _assert_close(jf(a, b), pair_exp_rowsum_ref(a, b, diag, tau))

@@ -1,0 +1,214 @@
+# L2 losses: the distributed FCCO step graphs.
+#
+# The central invariant (DESIGN.md §4): the SUM over K workers of the
+# per-worker gradient contributions equals the single-worker global-batch
+# gradient, for every loss variant. Plus reference checks of the
+# surrogate-weight trick against direct autodiff of the true loss.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import losses as L
+from compile import model as M
+from compile.kernels.ref import pair_exp_rowsum_ref
+
+CFG = M.PRESETS["tiny"]
+EPS = jnp.float32(1e-14)
+RHO = jnp.float32(6.5)
+
+
+def _setup(bg, seed=0):
+    rng = np.random.default_rng(seed)
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    imgs = jnp.asarray(rng.standard_normal((bg, CFG.v_patches, CFG.v_patch_dim)).astype(np.float32))
+    txts = jnp.asarray(rng.integers(0, CFG.t_vocab, (bg, CFG.t_len)).astype(np.int32))
+    e1, e2 = M.encode(CFG, flat, imgs, txts)
+    return flat, imgs, txts, e1, e2
+
+
+def _run_phase_g(e1, e2, bl, gamma=0.9, tau=0.07, u0=None):
+    bg = e1.shape[0]
+    k = bg // bl
+    taus = jnp.full((bl,), tau)
+    u1s, u2s = [], []
+    for w in range(k):
+        off = jnp.int32(w * bl)
+        u = jnp.zeros((bl,)) if u0 is None else u0[w * bl:(w + 1) * bl]
+        _, _, u1n, u2n = L.phase_g(e1, e2, off, u, u, taus, taus,
+                                   jnp.float32(gamma), bl=bl)
+        u1s.append(u1n)
+        u2s.append(u2n)
+    return jnp.concatenate(u1s), jnp.concatenate(u2s)
+
+
+def test_phase_g_matches_ref():
+    _, _, _, e1, e2 = _setup(12)
+    bl = 6
+    tau = jnp.full((bl,), 0.05)
+    u = jnp.full((bl,), 0.3)
+    g1, g2, u1n, u2n = L.phase_g(e1, e2, jnp.int32(6), u, u, tau, tau,
+                                 jnp.float32(0.4), bl=bl)
+    diag = 6 + jnp.arange(bl, dtype=jnp.int32)
+    g1r = pair_exp_rowsum_ref(e1[6:], e2, diag, tau)
+    g2r = pair_exp_rowsum_ref(e2[6:], e1, diag, tau)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g1r), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g2), np.asarray(g2r), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(u1n), np.asarray(0.6 * u + 0.4 * g1r), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(u2n), np.asarray(0.6 * u + 0.4 * g2r), rtol=1e-5)
+
+
+def test_phase_g_gamma_one_is_memoryless():
+    # gamma=1 (the OpenCLIP equivalence) must ignore u history entirely.
+    _, _, _, e1, e2 = _setup(8)
+    bl = 4
+    tau = jnp.full((bl,), 0.07)
+    a = L.phase_g(e1, e2, jnp.int32(0), jnp.zeros((bl,)), jnp.zeros((bl,)),
+                  tau, tau, jnp.float32(1.0), bl=bl)
+    b = L.phase_g(e1, e2, jnp.int32(0), jnp.full((bl,), 9.9), jnp.full((bl,), -3.0),
+                  tau, tau, jnp.float32(1.0), bl=bl)
+    np.testing.assert_allclose(np.asarray(a[2]), np.asarray(b[2]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(a[3]), np.asarray(b[3]), rtol=1e-6)
+
+
+def _tau_args(variant, bg, tau=0.07):
+    if variant == "rgcl_i":
+        return (jnp.full((bg,), tau), jnp.full((bg,), tau * 1.3))
+    return (jnp.float32(tau),)
+
+
+@pytest.mark.parametrize("variant", L.VARIANTS)
+@pytest.mark.parametrize("k", [2, 4])
+def test_worker_sum_equals_global(variant, k):
+    bl = 4
+    bg = k * bl
+    flat, imgs, txts, e1, e2 = _setup(bg)
+    gamma = 1.0 if variant == "mbcl" else 0.7
+    u1g, u2g = _run_phase_g(e1, e2, bl, gamma=gamma)
+    taus = _tau_args(variant, bg)
+
+    acc = None
+    for w in range(k):
+        off = w * bl
+        out = L.step(variant, CFG, flat, imgs[off:off + bl], txts[off:off + bl],
+                     e1, e2, u1g, u2g, taus, jnp.int32(off), EPS, RHO,
+                     bl=bl, bg=bg, k_workers=k)
+        if acc is None:
+            acc = dict(out)
+        else:
+            for key in out:
+                if key.startswith("tau") and variant == "rgcl_i":
+                    acc[key] = jnp.concatenate([acc[key], out[key]])
+                else:
+                    acc[key] = acc[key] + out[key]
+
+    ref = L.step(variant, CFG, flat, imgs, txts, e1, e2, u1g, u2g,
+                 _tau_args(variant, bg), jnp.int32(0), EPS, RHO,
+                 bl=bg, bg=bg, k_workers=1)
+
+    def close(x, y, tol=2e-4):
+        x, y = np.asarray(x), np.asarray(y)
+        scale = max(1e-6, float(np.max(np.abs(y))))
+        np.testing.assert_allclose(x / scale, y / scale, atol=tol)
+
+    close(acc["grad"], ref["grad"])
+    close(acc["loss"], ref["loss"])
+    for key in acc:
+        if key.startswith("tau"):
+            close(acc[key], ref[key])
+
+
+def test_gcl_grad_matches_direct_autodiff():
+    # With weights w = tau/(eps+u) frozen, the surrogate gradient must equal
+    # the direct gradient of  tau * mean_i [w1_i g1_i + w2_i g2_i].
+    bl = bg = 8
+    flat, imgs, txts, e1, e2 = _setup(bg)
+    u1g, u2g = _run_phase_g(e1, e2, bl, gamma=0.8)
+    tau = 0.07
+    out = L.step("gcl", CFG, flat, imgs, txts, e1, e2, u1g, u2g,
+                 (jnp.float32(tau),), jnp.int32(0), EPS, RHO,
+                 bl=bl, bg=bg, k_workers=1)
+
+    w1 = tau / (1e-14 + u1g)
+    w2 = tau / (1e-14 + u2g)
+    diag = jnp.arange(bg, dtype=jnp.int32)
+    taus = jnp.full((bg,), tau)
+
+    def direct(p):
+        f1, f2 = M.encode(CFG, p, imgs, txts)
+        g1 = pair_exp_rowsum_ref(f1, f2, diag, taus)
+        g2 = pair_exp_rowsum_ref(f2, f1, diag, taus)
+        return jnp.mean(w1 * g1 + w2 * g2)
+
+    ref_grad = jax.grad(direct)(flat)
+    scale = float(jnp.max(jnp.abs(ref_grad)))
+    np.testing.assert_allclose(np.asarray(out["grad"]) / scale,
+                               np.asarray(ref_grad) / scale, atol=3e-5)
+
+
+def test_mbcl_grad_matches_infonce():
+    # gamma=1, u=g: the mbcl step gradient must equal the direct gradient of
+    # the global-batch MBCL loss mean_i log(1/B + (B-1)/B g_i) (both sides).
+    bl = bg = 8
+    flat, imgs, txts, e1, e2 = _setup(bg)
+    u1g, u2g = _run_phase_g(e1, e2, bl, gamma=1.0)
+    tau = 0.07
+    out = L.step("mbcl", CFG, flat, imgs, txts, e1, e2, u1g, u2g,
+                 (jnp.float32(tau),), jnp.int32(0), EPS, RHO,
+                 bl=bl, bg=bg, k_workers=1)
+    diag = jnp.arange(bg, dtype=jnp.int32)
+    taus = jnp.full((bg,), tau)
+
+    def direct(p):
+        f1, f2 = M.encode(CFG, p, imgs, txts)
+        g1 = pair_exp_rowsum_ref(f1, f2, diag, taus)
+        g2 = pair_exp_rowsum_ref(f2, f1, diag, taus)
+        t1 = jnp.log(1.0 / bg + (bg - 1.0) / bg * g1)
+        t2 = jnp.log(1.0 / bg + (bg - 1.0) / bg * g2)
+        return jnp.mean(t1 + t2)
+
+    ref_grad = jax.grad(direct)(flat)
+    scale = float(jnp.max(jnp.abs(ref_grad)))
+    np.testing.assert_allclose(np.asarray(out["grad"]) / scale,
+                               np.asarray(ref_grad) / scale, atol=3e-5)
+
+
+def test_rgcl_g_tau_grad_matches_direct():
+    # Eq. (10) == d/dtau of the true RGCL-g objective with u == g (gamma=1
+    # makes u the exact batch estimator, so the comparison is exact).
+    bl = bg = 8
+    flat, imgs, txts, e1, e2 = _setup(bg)
+    u1g, u2g = _run_phase_g(e1, e2, bl, gamma=1.0)
+    tau = 0.07
+    out = L.step("rgcl_g", CFG, flat, imgs, txts, e1, e2, u1g, u2g,
+                 (jnp.float32(tau),), jnp.int32(0), EPS, RHO,
+                 bl=bl, bg=bg, k_workers=1)
+    diag = jnp.arange(bg, dtype=jnp.int32)
+
+    def direct(t):
+        f1, f2 = M.encode(CFG, flat, imgs, txts)
+        taus = jnp.full((bg,), t)
+        g1 = pair_exp_rowsum_ref(f1, f2, diag, taus)
+        g2 = pair_exp_rowsum_ref(f2, f1, diag, taus)
+        # weights 1/(eps+u) frozen at u=g like the estimator does
+        l1 = jnp.log(1e-14 + jax.lax.stop_gradient(g1)) \
+            + (g1 - jax.lax.stop_gradient(g1)) / (1e-14 + jax.lax.stop_gradient(g1))
+        l2 = jnp.log(1e-14 + jax.lax.stop_gradient(g2)) \
+            + (g2 - jax.lax.stop_gradient(g2)) / (1e-14 + jax.lax.stop_gradient(g2))
+        return t * jnp.mean(l1 + l2 + 2 * RHO)
+
+    ref = jax.grad(direct)(jnp.float32(tau))
+    np.testing.assert_allclose(float(out["tau_grad"]), float(ref), rtol=1e-3)
+
+
+def test_loss_finite_across_variants():
+    bl, k = 4, 2
+    bg = bl * k
+    flat, imgs, txts, e1, e2 = _setup(bg)
+    u1g, u2g = _run_phase_g(e1, e2, bl, gamma=0.9)
+    for variant in L.VARIANTS:
+        out = L.step(variant, CFG, flat, imgs[:bl], txts[:bl], e1, e2,
+                     u1g, u2g, _tau_args(variant, bg), jnp.int32(0), EPS, RHO,
+                     bl=bl, bg=bg, k_workers=k)
+        for key, v in out.items():
+            assert bool(jnp.all(jnp.isfinite(v))), (variant, key)

@@ -1,0 +1,81 @@
+# L2 model: shapes, determinism, param bookkeeping, encoder invariants.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+
+
+def _batch(bsz, seed=0):
+    rng = np.random.default_rng(seed)
+    imgs = rng.standard_normal((bsz, CFG.v_patches, CFG.v_patch_dim)).astype(np.float32)
+    txts = rng.integers(0, CFG.t_vocab, (bsz, CFG.t_len)).astype(np.int32)
+    return jnp.asarray(imgs), jnp.asarray(txts)
+
+
+def test_param_spec_matches_flat_size():
+    for name, cfg in M.PRESETS.items():
+        total = sum(int(np.prod(s)) for _, s in M.param_spec(cfg))
+        assert total == M.n_params(cfg), name
+
+
+def test_init_deterministic_and_sized():
+    a = M.init_params(CFG, seed=3)
+    b = M.init_params(CFG, seed=3)
+    c = M.init_params(CFG, seed=4)
+    assert a.shape == (M.n_params(CFG),)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_unflatten_roundtrip():
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    tree = M.unflatten(CFG, flat)
+    names = [n for n, _ in M.param_spec(CFG)]
+    assert set(tree) == set(names)
+    rebuilt = jnp.concatenate([tree[n].reshape(-1) for n in names])
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(flat))
+
+
+def test_encode_shapes_and_normalization():
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    imgs, txts = _batch(6)
+    e1, e2 = M.encode(CFG, flat, imgs, txts)
+    assert e1.shape == (6, CFG.d_embed) and e2.shape == (6, CFG.d_embed)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(e1), axis=-1), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(e2), axis=-1), 1.0, rtol=1e-5)
+
+
+def test_encode_per_sample_independence():
+    # Changing sample 0's input must not change sample 1's embedding.
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    imgs, txts = _batch(4)
+    e1a, _ = M.encode(CFG, flat, imgs, txts)
+    imgs2 = imgs.at[0].set(imgs[0] * 3 + 1)
+    e1b, _ = M.encode(CFG, flat, imgs2, txts)
+    assert not np.allclose(np.asarray(e1a[0]), np.asarray(e1b[0]))
+    np.testing.assert_allclose(np.asarray(e1a[1:]), np.asarray(e1b[1:]), atol=1e-6)
+
+
+def test_encode_differentiable():
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    imgs, txts = _batch(2)
+
+    def f(p):
+        e1, e2 = M.encode(CFG, p, imgs, txts)
+        return jnp.sum(e1 * e2)
+
+    g = jax.grad(f)(flat)
+    assert g.shape == flat.shape
+    assert bool(jnp.any(g != 0)) and bool(jnp.all(jnp.isfinite(g)))
+
+
+@pytest.mark.parametrize("preset", ["tiny", "small"])
+def test_presets_instantiable(preset):
+    cfg = M.PRESETS[preset]
+    assert cfg.v_width % cfg.v_heads == 0
+    assert cfg.t_width % cfg.t_heads == 0
+    assert M.n_params(cfg) > 0

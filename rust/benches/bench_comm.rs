@@ -1,0 +1,85 @@
+//! Collective benchmarks: real in-process collectives (all_gather /
+//! all_reduce) across worker counts and payload sizes, plus the α–β cost
+//! model's analytic times for the same shapes — the microbenchmark behind
+//! the Fig. 3 communication bars.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use fastclip::comm::{Collective, CommWorld, CostModel, ProfileName};
+use harness::{black_box, Bench};
+
+fn bench_collective(k: usize, n: usize, op: &str) {
+    let world = CommWorld::new(k);
+    let name = format!("{op} k={k} n={n}");
+    // run the collective k-threaded; rank 0's thread does the timing
+    let stats = Bench::new(name).samples(20).warmup(2).run(|| {
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let h = world.handle(rank);
+                std::thread::spawn(move || match rank % 2 {
+                    _ => {
+                        let mut buf = vec![rank as f32; n];
+                        h.all_reduce_sum(&mut buf);
+                        black_box(buf[0]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let _ = stats;
+    let _ = Arc::strong_count(&world);
+}
+
+fn bench_all_gather(k: usize, n: usize) {
+    let world = CommWorld::new(k);
+    Bench::new(format!("all_gather k={k} n={n}")).samples(20).warmup(2).run(|| {
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let h = world.handle(rank);
+                std::thread::spawn(move || {
+                    let buf = vec![rank as f32; n];
+                    black_box(h.all_gather(&buf));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+fn main() {
+    println!("== real in-process collectives (threads, 1 host) ==");
+    for k in [2usize, 4] {
+        for n in [1 << 10, 1 << 16, 1 << 20] {
+            bench_collective(k, n, "all_reduce_sum");
+        }
+    }
+    for k in [2usize, 4] {
+        bench_all_gather(k, 1 << 14);
+    }
+
+    println!("\n== alpha-beta cost model (paper-scale volumes, analytic) ==");
+    for profile in [ProfileName::InfiniBand, ProfileName::Slingshot1, ProfileName::Slingshot2] {
+        for nodes in [2usize, 8] {
+            let m = CostModel::new(profile.profile(), nodes, 4);
+            let k = m.world_size();
+            let (bl, d, p) = (128usize, 512usize, 151_000_000usize);
+            println!(
+                "{:<12} {}n: featAG {:>8.3}ms  uAG {:>8.4}ms  RS {:>8.3}ms  gradAR {:>9.3}ms",
+                profile.id(),
+                nodes,
+                m.time(Collective::AllGather, 2 * bl * d * 4) * 1e3,
+                m.time(Collective::AllGather, 2 * bl * 4) * 1e3,
+                m.time(Collective::ReduceScatter, 2 * k * bl * d * 4) * 1e3,
+                m.time(Collective::AllReduce, p * 4) * 1e3,
+            );
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Data-pipeline benchmarks: synthetic sample materialization, batch fill
+//! and shard loading — the "others" budget of the iteration loop.
+
+#[path = "harness.rs"]
+mod harness;
+
+use fastclip::config::DataConfig;
+use fastclip::data::{Dataset, EvalVariant, ModelDims, ShardLoader};
+use harness::{black_box, Bench};
+
+fn main() {
+    let dims = ModelDims { v_patches: 16, v_patch_dim: 32, t_vocab: 256, t_len: 16 };
+    let cfg = DataConfig { n_train: 65_536, n_eval: 512, n_classes: 64, ..DataConfig::default() };
+    let ds = Dataset::new(cfg, dims);
+    let img_dim = dims.v_patches * dims.v_patch_dim;
+
+    let mut img = vec![0.0f32; img_dim];
+    let mut txt = vec![0i32; dims.t_len];
+    Bench::new("train_sample_into (1 sample)").samples(50).run(|| {
+        ds.train_sample_into(12345, &mut img, &mut txt);
+        black_box(img[0]);
+    });
+
+    for bl in [16usize, 128] {
+        let idx: Vec<usize> = (0..bl).map(|i| i * 37 % 65_536).collect();
+        let mut images = vec![0.0f32; bl * img_dim];
+        let mut texts = vec![0i32; bl * dims.t_len];
+        Bench::new(format!("fill_batch bl={bl}")).samples(30).run(|| {
+            ds.fill_batch(&idx, &mut images, &mut texts);
+            black_box(images[0]);
+        });
+    }
+
+    let mut loader = ShardLoader::new(65_536, 0, 4, 128, 7);
+    Bench::new("shard next_batch (bl=128)").samples(50).run(|| {
+        black_box(loader.next_batch());
+    });
+
+    Bench::new("eval_set clean (512 samples)").samples(5).run(|| {
+        black_box(ds.eval_set(EvalVariant::Clean).n);
+    });
+    Bench::new("eval_set scrambled (512 samples)").samples(5).run(|| {
+        black_box(ds.eval_set(EvalVariant::Scrambled).n);
+    });
+}

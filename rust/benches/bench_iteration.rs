@@ -1,0 +1,46 @@
+//! End-to-end iteration benchmark — one bench per paper timing table:
+//! full distributed iterations (encode → gathers → phase_g → step →
+//! all-reduce → optimizer) per algorithm, reporting the same
+//! compute / pure-comm / overlap / others split as Fig. 3.
+
+#[path = "harness.rs"]
+mod harness;
+
+use fastclip::config::{Algorithm, TrainConfig};
+use fastclip::coordinator::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let bundle = "artifacts/tiny_k2_b8";
+    if !std::path::Path::new(bundle).join("manifest.json").exists() {
+        eprintln!("bundle {bundle} not built — run `make artifacts`");
+        return Ok(());
+    }
+    println!("end-to-end iterations on {bundle} (16 steps each, modeled 8x4 infiniband)\n");
+    println!(
+        "{:<14} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "algorithm", "total", "compute", "pure", "overlap", "others"
+    );
+    for algo in Algorithm::all() {
+        let mut cfg = TrainConfig::new(bundle, algo);
+        cfg.steps = 16;
+        cfg.iters_per_epoch = 8;
+        cfg.data.n_train = 256;
+        cfg.data.n_eval = 32;
+        cfg.lr.total_iters = 16;
+        cfg.lr.warmup_iters = 2;
+        cfg.nodes = 8;
+        cfg.gpus_per_node = 4;
+        let r = Trainer::new(cfg)?.run()?;
+        let ms = r.timing.per_iter_ms();
+        println!(
+            "{:<14} {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>7.2}ms",
+            algo.name(),
+            ms.total,
+            ms.compute,
+            ms.comm_pure,
+            ms.comm_overlap,
+            ms.others
+        );
+    }
+    Ok(())
+}

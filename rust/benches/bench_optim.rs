@@ -1,0 +1,35 @@
+//! Optimizer benchmarks: the four Proc.-4 optimizers over realistic flat
+//! parameter-vector sizes. The optimizer runs once per iteration on every
+//! worker (replicated update), so its cost lands in the "others" bar of
+//! the Fig. 3 breakdown — it must stay small relative to compute.
+
+#[path = "harness.rs"]
+mod harness;
+
+use fastclip::config::{OptimizerConfig, OptimizerKind};
+use fastclip::optim;
+use harness::{black_box, Bench};
+
+fn main() {
+    for &n in &[228_928usize, 4_400_000] {
+        // leaf segmentation like a real model: 64 leaves
+        let seg: Vec<(usize, usize)> = {
+            let leaf = n / 64;
+            let mut v: Vec<(usize, usize)> = (0..63).map(|i| (i * leaf, leaf)).collect();
+            v.push((63 * leaf, n - 63 * leaf));
+            v
+        };
+        let grad: Vec<f32> = (0..n).map(|i| ((i % 97) as f32 - 48.0) * 1e-3).collect();
+        for kind in OptimizerKind::all() {
+            let cfg = OptimizerConfig::with_kind(kind);
+            let mut opt = optim::build(&cfg, n, seg.clone());
+            let mut params = vec![0.1f32; n];
+            Bench::new(format!("{} step P={}", kind.name(), n))
+                .samples(if n > 1_000_000 { 10 } else { 30 })
+                .run(|| {
+                    opt.step(&mut params, &grad, 1e-3);
+                    black_box(params[0]);
+                });
+        }
+    }
+}

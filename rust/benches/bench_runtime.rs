@@ -1,0 +1,71 @@
+//! PJRT runtime benchmarks: executable invocation cost for each artifact
+//! (encode / phase_g / step) plus the literal I/O overhead — the L3↔XLA
+//! boundary that the perf pass optimizes (EXPERIMENTS.md §Perf).
+
+#[path = "harness.rs"]
+mod harness;
+
+use fastclip::runtime::{Manifest, TauInput, WorkerRuntime};
+use fastclip::util::Rng;
+use harness::{black_box, Bench};
+
+fn main() -> anyhow::Result<()> {
+    // cargo bench appends a `--bench` flag; only positional args count
+    let bundle = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "artifacts/tiny_k2_b8".into());
+    if !std::path::Path::new(&bundle).join("manifest.json").exists() {
+        eprintln!("bundle {bundle} not built — run `make artifacts`");
+        return Ok(());
+    }
+    let m = Manifest::load(&bundle)?;
+    println!(
+        "bundle {bundle}: P={} bl={} bg={} d={}",
+        m.n_params, m.local_batch, m.global_batch, m.model.d_embed
+    );
+    let mut rt = WorkerRuntime::load(&m, None)?;
+    let params = m.load_init_params()?;
+    let mut rng = Rng::new(1);
+    let mut images = vec![0.0f32; m.local_batch * m.model.v_patches * m.model.v_patch_dim];
+    rng.fill_normal(&mut images, 1.0);
+    let texts: Vec<i32> =
+        (0..m.local_batch * m.model.t_len).map(|_| rng.below(m.model.t_vocab) as i32).collect();
+
+    // encode
+    let (e1, e2) = rt.encode(&params, &images, &texts)?;
+    Bench::new("encode (local batch)").samples(20).run(|| {
+        black_box(rt.encode(&params, &images, &texts).unwrap());
+    });
+
+    // phase_g
+    let reps = m.global_batch / m.local_batch;
+    let e1g: Vec<f32> = std::iter::repeat(e1.clone()).take(reps).flatten().collect();
+    let e2g: Vec<f32> = std::iter::repeat(e2.clone()).take(reps).flatten().collect();
+    let u = vec![0.5f32; m.local_batch];
+    let tau = vec![0.05f32; m.local_batch];
+    Bench::new("phase_g (Eq. 1 u-update)").samples(20).run(|| {
+        black_box(rt.phase_g(&e1g, &e2g, 0, &u, &u, &tau, &tau, 0.5).unwrap());
+    });
+
+    // each step variant
+    let ug = vec![0.5f32; m.global_batch];
+    let taug = vec![0.05f32; m.global_batch];
+    for variant in m.variants.clone() {
+        let tau_in = if variant == "rgcl_i" {
+            TauInput::Individual { tau1g: &taug, tau2g: &taug }
+        } else {
+            TauInput::Global(0.05)
+        };
+        Bench::new(format!("step_{variant} (fwd+bwd+estimators)")).samples(10).run(|| {
+            black_box(
+                rt.step(
+                    &variant, &params, &images, &texts, &e1g, &e2g, &ug, &ug, 0, 1e-14, 6.5,
+                    tau_in.clone(),
+                )
+                .unwrap(),
+            );
+        });
+    }
+    Ok(())
+}

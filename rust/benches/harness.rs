@@ -1,0 +1,86 @@
+//! Minimal benchmark harness (criterion is not in the vendored crate set):
+//! warmup, N timed samples, median/mean/min report. Deterministic sample
+//! counts so `cargo bench` output is stable enough to diff between runs.
+//!
+//! Shared by every bench target via `#[path = "harness.rs"] mod harness;`
+//! (not every target uses every helper, hence the allow).
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+pub struct Bench {
+    name: String,
+    samples: usize,
+    warmup: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), samples: 30, warmup: 3 }
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n.max(3);
+        self
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    /// Time `f` and print a one-line report. Returns the stats so callers
+    /// can assert relationships (e.g. scaling behaviour).
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            mean_s: times.iter().sum::<f64>() / times.len() as f64,
+            median_s: times[times.len() / 2],
+            min_s: times[0],
+            max_s: times[times.len() - 1],
+        };
+        println!(
+            "{:<44} median {:>10}  mean {:>10}  min {:>10}  (n={})",
+            self.name,
+            fmt(stats.median_s),
+            fmt(stats.mean_s),
+            fmt(stats.min_s),
+            self.samples
+        );
+        stats
+    }
+}
+
+pub fn fmt(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,284 @@
+//! Shared experiment-harness plumbing: the three experiment settings
+//! (medium / large / xlarge analogs of Table 2), per-algorithm tuned
+//! hyperparameters (Tables 7–9 scaled to this testbed), seeded multi-run
+//! execution and metric aggregation.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Algorithm, DataConfig, GammaSchedule, TrainConfig};
+use crate::coordinator::{TrainResult, Trainer};
+use crate::util::Args;
+
+/// The experiment settings of Table 2, scaled to this testbed (see
+/// DESIGN.md §1: data scale and tower capacity shrink together; the
+/// *relative* structure — batch per worker, schedule shapes, loss
+/// hyperparameters — follows the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Setting {
+    /// paper: CC3M (2.7M) + ResNet50, batch 1024 → here: tiny preset
+    Medium,
+    /// paper: CC12M (9.1M) + ViT-B/32, batch 2048 → here: small preset
+    Large,
+    /// paper: LAION315M + ViT-B/16, batch 5120 → here: medium preset
+    XLarge,
+}
+
+impl Setting {
+    pub fn from_id(id: &str) -> Result<Setting> {
+        match id {
+            "medium" => Ok(Setting::Medium),
+            "large" => Ok(Setting::Large),
+            "xlarge" => Ok(Setting::XLarge),
+            _ => bail!("unknown setting '{id}' (medium|large|xlarge)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Setting::Medium => "Medium",
+            Setting::Large => "Large",
+            Setting::XLarge => "xLarge",
+        }
+    }
+
+    /// Default artifact bundle for the setting.
+    pub fn bundle(&self) -> &'static str {
+        match self {
+            Setting::Medium => "artifacts/tiny_k2_b16",
+            Setting::Large => "artifacts/small_k2_b16",
+            Setting::XLarge => "artifacts/medium_k2_b8",
+        }
+    }
+
+    /// Bundle for an N-node scaling run (per-GPU batch fixed, global batch
+    /// grows with nodes — the paper's protocol).
+    pub fn scaling_bundle(&self, nodes: usize) -> String {
+        match self {
+            Setting::Medium => format!("artifacts/tiny_k{nodes}_b16"),
+            _ => format!("artifacts/small_k{nodes}_b16"),
+        }
+    }
+
+    fn default_steps(&self) -> u32 {
+        match self {
+            Setting::Medium => 64,
+            Setting::Large => 48,
+            Setting::XLarge => 96,
+        }
+    }
+
+    fn data(&self) -> DataConfig {
+        match self {
+            Setting::Medium => DataConfig {
+                n_train: 1024,
+                n_eval: 128,
+                n_classes: 32,
+                noise: 0.8,
+                zipf_s: 0.5,
+                seed: 0,
+            },
+            Setting::Large => DataConfig {
+                n_train: 2048,
+                n_eval: 128,
+                n_classes: 48,
+                noise: 0.8,
+                zipf_s: 0.5,
+                seed: 0,
+            },
+            Setting::XLarge => DataConfig {
+                n_train: 4096,
+                n_eval: 128,
+                n_classes: 64,
+                noise: 0.8,
+                zipf_s: 0.5,
+                seed: 0,
+            },
+        }
+    }
+
+    fn peak_lr(&self) -> f32 {
+        match self {
+            Setting::Medium => 1e-3, // Table 7
+            Setting::Large => 4e-4,
+            Setting::XLarge => 2e-4,
+        }
+    }
+
+    fn rho(&self) -> f32 {
+        match self {
+            Setting::Medium => 6.5, // Table 9 (FastCLIP-v3 row)
+            Setting::Large => 8.5,
+            Setting::XLarge => 16.0,
+        }
+    }
+}
+
+/// The tuned per-(setting, algorithm) configuration — the analog of
+/// Appendix B. Constant-γ algorithms get γ=0.6/0.8, cosine-γ ones
+/// γ_min=0.2 with E = 50% of the training epochs (Tables 8–9).
+pub fn algo_config(setting: Setting, algo: Algorithm) -> TrainConfig {
+    let mut cfg = TrainConfig::new(setting.bundle(), algo);
+    cfg.steps = setting.default_steps();
+    cfg.iters_per_epoch = 8;
+    cfg.data = setting.data();
+    cfg.lr.peak = setting.peak_lr();
+    cfg.lr.warmup_iters = cfg.steps / 10;
+    cfg.lr.total_iters = cfg.steps;
+    cfg.rho = setting.rho();
+    let epochs = (cfg.steps / cfg.iters_per_epoch).max(1);
+    cfg.gamma = if algo.forces_gamma_one() {
+        GammaSchedule::Constant { gamma: 1.0 }
+    } else if algo.default_cosine_gamma() {
+        GammaSchedule::Cosine { gamma_min: 0.2, decay_epochs: (epochs / 2).max(1) }
+    } else {
+        // SogCLR / iSogCLR: tuned constant γ (Table 8)
+        let gamma =
+            if setting == Setting::Large && algo == Algorithm::ISogClr { 0.8 } else { 0.6 };
+        GammaSchedule::Constant { gamma }
+    };
+    // Appendix B: v2 τ-lr 1e-2 (medium) / 1e-4 (large); v3 2e-4 / 1e-4
+    cfg.tau_lr = match (algo, setting) {
+        (Algorithm::FastClipV2 | Algorithm::ISogClr, Setting::Medium) => 1e-2,
+        (Algorithm::FastClipV2 | Algorithm::ISogClr, _) => 1e-4,
+        (Algorithm::FastClipV3, Setting::Medium) => 2e-4,
+        (Algorithm::FastClipV3, _) => 1e-4,
+        _ => cfg.tau_lr,
+    };
+    if setting == Setting::XLarge {
+        // Appendix B + D: larger γ_min for the big batch, larger ε in RGCL-g
+        if algo == Algorithm::FastClipV3 {
+            cfg.eps = 1e-6;
+            cfg.gamma =
+                GammaSchedule::Cosine { gamma_min: 0.8, decay_epochs: (epochs / 2).max(1) };
+        }
+        cfg.optimizer.weight_decay = 0.2;
+    }
+    cfg
+}
+
+/// Apply the common CLI overrides (`--steps`, `--seeds`, `--bundle`,
+/// `--n-train`, `--eval-every`, `--nodes`, `--gpus-per-node`) to a base
+/// config. Returns the seed list.
+pub fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<Vec<u64>> {
+    cfg.steps = args.u32_or("steps", cfg.steps)?;
+    cfg.lr.total_iters = cfg.steps;
+    cfg.lr.warmup_iters = cfg.lr.warmup_iters.min(cfg.steps / 4);
+    cfg.data.n_train = args.usize_or("n-train", cfg.data.n_train)?;
+    cfg.data.n_eval = args.usize_or("n-eval", cfg.data.n_eval)?;
+    cfg.eval_every = args.u32_or("eval-every", cfg.eval_every)?;
+    cfg.nodes = args.usize_or("nodes", cfg.nodes)?;
+    cfg.gpus_per_node = args.usize_or("gpus-per-node", cfg.gpus_per_node)?;
+    if let Some(b) = args.get("bundle") {
+        cfg.artifact_dir = b.to_string();
+    }
+    let n_seeds = args.usize_or("seeds", 2)?.max(1);
+    Ok((0..n_seeds as u64).collect())
+}
+
+/// Common options shared by every experiment runner (for check_known).
+pub const COMMON_OPTS: &[&str] = &[
+    "steps", "seeds", "setting", "bundle", "n-train", "n-eval", "eval-every",
+    "out", "nodes", "gpus-per-node",
+];
+
+/// Run one configuration across seeds, logging progress to stderr.
+pub fn run_seeds(base: &TrainConfig, seeds: &[u64], label: &str) -> Result<Vec<TrainResult>> {
+    let mut out = Vec::with_capacity(seeds.len());
+    for &seed in seeds {
+        let mut cfg = base.clone();
+        cfg.seed = seed;
+        cfg.data.seed = seed;
+        let t0 = std::time::Instant::now();
+        let r = Trainer::new(cfg)
+            .with_context(|| format!("{label} seed {seed}"))?
+            .run()
+            .with_context(|| format!("{label} seed {seed}"))?;
+        eprintln!(
+            "  [{label} seed={seed}] loss {:.4} datacomp {:.2} ({:.1}s)",
+            r.tail_loss(8),
+            r.final_eval.datacomp,
+            t0.elapsed().as_secs_f64()
+        );
+        out.push(r);
+    }
+    Ok(out)
+}
+
+/// Aggregated (datacomp, retrieval, in_variants) score vectors.
+pub struct ScoreVecs {
+    pub datacomp: Vec<f32>,
+    pub retrieval: Vec<f32>,
+    pub in_variants: Vec<f32>,
+}
+
+pub fn scores(results: &[TrainResult]) -> ScoreVecs {
+    ScoreVecs {
+        datacomp: results.iter().map(|r| r.final_eval.datacomp).collect(),
+        retrieval: results.iter().map(|r| r.final_eval.retrieval).collect(),
+        in_variants: results.iter().map(|r| r.final_eval.in_variants).collect(),
+    }
+}
+
+/// The results directory (`results/` by default, `--out` to override).
+pub fn results_dir(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.str_or("out", "results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn settings_map_table2() {
+        assert_eq!(Setting::from_id("medium").unwrap(), Setting::Medium);
+        assert_eq!(Setting::from_id("xlarge").unwrap(), Setting::XLarge);
+        assert!(Setting::from_id("huge").is_err());
+        assert!(Setting::Medium.bundle().contains("tiny"));
+        assert!(Setting::Large.bundle().contains("small"));
+        assert!(Setting::XLarge.bundle().contains("medium"));
+        assert_eq!(Setting::Medium.scaling_bundle(4), "artifacts/tiny_k4_b16");
+    }
+
+    #[test]
+    fn tuned_configs_follow_appendix_b() {
+        let sog = algo_config(Setting::Medium, Algorithm::SogClr);
+        assert!(
+            matches!(sog.gamma, GammaSchedule::Constant { gamma } if (gamma - 0.6).abs() < 1e-6)
+        );
+        let isog_l = algo_config(Setting::Large, Algorithm::ISogClr);
+        assert!(
+            matches!(isog_l.gamma, GammaSchedule::Constant { gamma } if (gamma - 0.8).abs() < 1e-6)
+        );
+        let v3 = algo_config(Setting::Medium, Algorithm::FastClipV3);
+        assert!(
+            matches!(v3.gamma, GammaSchedule::Cosine { gamma_min, .. } if (gamma_min - 0.2).abs() < 1e-6)
+        );
+        assert!((v3.tau_lr - 2e-4).abs() < 1e-9);
+        assert!((v3.rho - 6.5).abs() < 1e-6);
+        let v3x = algo_config(Setting::XLarge, Algorithm::FastClipV3);
+        assert!((v3x.eps - 1e-6).abs() < 1e-12, "Appendix D eps");
+        assert!(
+            matches!(v3x.gamma, GammaSchedule::Cosine { gamma_min, .. } if (gamma_min - 0.8).abs() < 1e-6)
+        );
+        let oc = algo_config(Setting::Large, Algorithm::OpenClip);
+        assert!((oc.lr.peak - 4e-4).abs() < 1e-9);
+        assert!(oc.validate().is_ok());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = algo_config(Setting::Medium, Algorithm::FastClipV3);
+        let args = Args::parse(
+            ["--steps", "10", "--seeds", "3", "--bundle", "artifacts/x", "--n-train", "256"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let seeds = apply_overrides(&mut cfg, &args).unwrap();
+        assert_eq!(seeds, vec![0, 1, 2]);
+        assert_eq!(cfg.steps, 10);
+        assert_eq!(cfg.artifact_dir, "artifacts/x");
+        assert_eq!(cfg.data.n_train, 256);
+        assert!(cfg.lr.warmup_iters <= 2);
+    }
+}

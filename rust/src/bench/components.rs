@@ -1,0 +1,175 @@
+//! Component-study experiments — §5.1 of the paper:
+//! * `table3` — inner-LR (γ) schedule: constant vs cosine, three pairs;
+//! * `table4` — temperature update rules: FastCLIP-v0..v3;
+//! * `table5` — optimizers: SGDM / LAMB / Lion / AdamW on FastCLIP-v3.
+//!
+//! Each runner prints the paper-shaped rows (mean (std) over seeds) and
+//! writes CSV + JSON under `results/`.
+
+use anyhow::Result;
+
+use crate::config::{Algorithm, GammaSchedule, OptimizerKind};
+use crate::output::{mean_std_cell, Table};
+use crate::util::{Args, Json};
+
+use super::common::{algo_config, apply_overrides, results_dir, run_seeds, scores, Setting};
+
+fn settings_from(args: &Args) -> Result<Vec<Setting>> {
+    match args.get("setting") {
+        Some("all") => Ok(vec![Setting::Medium, Setting::Large]),
+        Some(s) => Ok(vec![Setting::from_id(s)?]),
+        None => Ok(vec![Setting::Medium]),
+    }
+}
+
+/// Table 3 / Fig. 8: constant γ vs cosine γ, three algorithm pairs.
+pub fn table3(args: &Args) -> Result<()> {
+    let mut table = Table::new(
+        "Table 3 — inner LR schedule (constant vs cosine gamma)",
+        &["Setting", "Algorithm", "Schedule", "Datacomp", "Retrieval", "IN&Var"],
+    );
+    let mut json_rows = Vec::new();
+    for setting in settings_from(args)? {
+        // (label, base algorithm, override-to-constant?)
+        let pairs: [(&str, Algorithm, bool); 6] = [
+            ("SogCLR", Algorithm::SogClr, false),
+            ("FastCLIP-v1", Algorithm::FastClipV1, false),
+            ("iSogCLR", Algorithm::ISogClr, false),
+            ("FastCLIP-v2", Algorithm::FastClipV2, false),
+            ("v3 (Const. gamma)", Algorithm::FastClipV3, true),
+            ("FastCLIP-v3", Algorithm::FastClipV3, false),
+        ];
+        for (label, algo, force_const) in pairs {
+            let mut cfg = algo_config(setting, algo);
+            if force_const {
+                cfg.gamma = GammaSchedule::Constant { gamma: 0.6 };
+            }
+            let seeds = apply_overrides(&mut cfg, args)?;
+            let results = run_seeds(&cfg, &seeds, label)?;
+            let s = scores(&results);
+            let schedule = match cfg.gamma {
+                GammaSchedule::Constant { .. } => "constant",
+                GammaSchedule::Cosine { .. } => "cosine",
+            };
+            table.row(vec![
+                setting.name().into(),
+                label.into(),
+                schedule.into(),
+                mean_std_cell(&s.datacomp),
+                mean_std_cell(&s.retrieval),
+                mean_std_cell(&s.in_variants),
+            ]);
+            json_rows.push(result_json(setting, label, schedule, &s));
+        }
+    }
+    finish(args, "table3", table, json_rows)
+}
+
+/// Table 4 / Fig. 9(a,b): temperature update rules v0–v3.
+pub fn table4(args: &Args) -> Result<()> {
+    let mut table = Table::new(
+        "Table 4 — temperature parameter updates (FastCLIP-v0..v3)",
+        &["Setting", "Algorithm", "Datacomp", "Retrieval", "IN&Var"],
+    );
+    let mut json_rows = Vec::new();
+    for setting in settings_from(args)? {
+        for algo in [
+            Algorithm::FastClipV0,
+            Algorithm::FastClipV1,
+            Algorithm::FastClipV2,
+            Algorithm::FastClipV3,
+        ] {
+            let mut cfg = algo_config(setting, algo);
+            let seeds = apply_overrides(&mut cfg, args)?;
+            let results = run_seeds(&cfg, &seeds, algo.name())?;
+            let s = scores(&results);
+            table.row(vec![
+                setting.name().into(),
+                algo.name().into(),
+                mean_std_cell(&s.datacomp),
+                mean_std_cell(&s.retrieval),
+                mean_std_cell(&s.in_variants),
+            ]);
+            json_rows.push(result_json(setting, algo.name(), "-", &s));
+        }
+    }
+    finish(args, "table4", table, json_rows)
+}
+
+/// Table 5 / Fig. 9(c,d): optimizers on FastCLIP-v3.
+pub fn table5(args: &Args) -> Result<()> {
+    let mut table = Table::new(
+        "Table 5 — optimizers (FastCLIP-v3 base)",
+        &["Setting", "Optimizer", "Datacomp", "Retrieval", "IN&Var"],
+    );
+    let mut json_rows = Vec::new();
+    for setting in settings_from(args)? {
+        for kind in [
+            OptimizerKind::Sgdm,
+            OptimizerKind::Lamb,
+            OptimizerKind::Lion,
+            OptimizerKind::AdamW,
+        ] {
+            let mut cfg = algo_config(setting, Algorithm::FastClipV3);
+            cfg.optimizer = crate::config::OptimizerConfig::with_kind(kind);
+            // Table 10 tuned (lr, wd) scaled: SGDM needs a far larger lr,
+            // Lion a smaller one, than AdamW's peak
+            match kind {
+                OptimizerKind::Sgdm => {
+                    cfg.lr.peak = 1.0;
+                    cfg.optimizer.weight_decay = 3e-6;
+                }
+                OptimizerKind::Lion => {
+                    cfg.lr.peak = setting.lion_lr();
+                    cfg.optimizer.weight_decay = 0.3;
+                }
+                OptimizerKind::Lamb => {
+                    cfg.lr.peak = 2e-3;
+                    cfg.optimizer.weight_decay = 0.1;
+                }
+                OptimizerKind::AdamW => {}
+            }
+            let seeds = apply_overrides(&mut cfg, args)?;
+            let results = run_seeds(&cfg, &seeds, kind.name())?;
+            let s = scores(&results);
+            table.row(vec![
+                setting.name().into(),
+                kind.name().into(),
+                mean_std_cell(&s.datacomp),
+                mean_std_cell(&s.retrieval),
+                mean_std_cell(&s.in_variants),
+            ]);
+            json_rows.push(result_json(setting, kind.name(), "-", &s));
+        }
+    }
+    finish(args, "table5", table, json_rows)
+}
+
+impl Setting {
+    fn lion_lr(&self) -> f32 {
+        match self {
+            Setting::Medium => 2e-4, // Table 10
+            _ => 1e-4,
+        }
+    }
+}
+
+fn result_json(setting: Setting, label: &str, extra: &str, s: &super::common::ScoreVecs) -> Json {
+    Json::obj(vec![
+        ("setting", Json::str(setting.name())),
+        ("algorithm", Json::str(label)),
+        ("schedule", Json::str(extra)),
+        ("datacomp", Json::arr(s.datacomp.iter().map(|&v| Json::num(v as f64)))),
+        ("retrieval", Json::arr(s.retrieval.iter().map(|&v| Json::num(v as f64)))),
+        ("in_variants", Json::arr(s.in_variants.iter().map(|&v| Json::num(v as f64)))),
+    ])
+}
+
+fn finish(args: &Args, name: &str, table: Table, rows: Vec<Json>) -> Result<()> {
+    table.print();
+    let dir = results_dir(args);
+    table.write_csv(&dir.join(format!("{name}.csv")))?;
+    crate::output::write_result(&dir, name, &Json::arr(rows))?;
+    eprintln!("wrote {}/{name}.{{csv,json}}", dir.display());
+    Ok(())
+}

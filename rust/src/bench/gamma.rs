@@ -1,0 +1,69 @@
+//! Fig. 5 / Appendix B "Choice of γ_min": the γ_min × batch-size
+//! interaction. FastCLIP-v3 with γ_min ∈ {0.2, 0.8} at two global batch
+//! sizes; the paper's observation is a three-stage pattern where large
+//! γ_min wins in the middle stage and small γ_min catches up late, with
+//! the middle stage lasting longer at larger batch.
+
+use anyhow::Result;
+
+use crate::config::{Algorithm, GammaSchedule};
+use crate::output::{sparkline, Table};
+use crate::util::{Args, Json};
+
+use super::common::{algo_config, apply_overrides, results_dir, run_seeds, Setting};
+
+pub fn gamma_min(args: &Args) -> Result<()> {
+    let mut table = Table::new(
+        "Fig. 5 analog — gamma_min x batch size (FastCLIP-v3)",
+        &["Bundle", "gamma_min", "Datacomp(mid)", "Datacomp(final)"],
+    );
+    let bundles = match args.get("bundles") {
+        Some(list) => list.split(',').map(|s| s.to_string()).collect::<Vec<_>>(),
+        None => vec!["artifacts/tiny_k2_b4".to_string(), "artifacts/tiny_k2_b32".to_string()],
+    };
+    let mut json_rows = Vec::new();
+    for bundle in &bundles {
+        for gamma_min in [0.2f32, 0.8] {
+            let mut cfg = algo_config(Setting::Medium, Algorithm::FastClipV3);
+            cfg.artifact_dir = bundle.clone();
+            let epochs = (cfg.steps / cfg.iters_per_epoch).max(1);
+            cfg.gamma = GammaSchedule::Cosine { gamma_min, decay_epochs: (epochs / 2).max(1) };
+            cfg.eval_every = args.u32_or("eval-every", (cfg.steps / 8).max(1))?;
+            let seeds = apply_overrides(&mut cfg, args)?;
+            cfg.gamma = GammaSchedule::Cosine {
+                gamma_min,
+                decay_epochs: ((cfg.steps / cfg.iters_per_epoch).max(1) / 2).max(1),
+            };
+            let results = run_seeds(&cfg, &seeds[..1], &format!("{bundle} gmin={gamma_min}"))?;
+            let r = &results[0];
+            let curve: Vec<f32> = r.evals.iter().map(|e| e.summary.datacomp).collect();
+            eprintln!("  {} gmin={gamma_min}: {}", bundle, sparkline(&curve, 32));
+            let mid = curve.get(curve.len() / 2).copied().unwrap_or(f32::NAN);
+            let fin = curve.last().copied().unwrap_or(f32::NAN);
+            table.row(vec![
+                bundle.clone(),
+                format!("{gamma_min}"),
+                format!("{mid:.2}"),
+                format!("{fin:.2}"),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("bundle", Json::str(bundle.clone())),
+                ("gamma_min", Json::num(gamma_min as f64)),
+                (
+                    "curve",
+                    Json::arr(r.evals.iter().map(|e| {
+                        Json::obj(vec![
+                            ("step", Json::num(e.step as f64)),
+                            ("datacomp", Json::num(e.summary.datacomp as f64)),
+                        ])
+                    })),
+                ),
+            ]));
+        }
+    }
+    table.print();
+    let dir = results_dir(args);
+    table.write_csv(&dir.join("gamma_min.csv"))?;
+    crate::output::write_result(&dir, "gamma_min", &Json::arr(json_rows))?;
+    Ok(())
+}

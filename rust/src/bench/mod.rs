@@ -1,0 +1,63 @@
+//! Experiment harness: one runner per paper table/figure (DESIGN.md §6).
+//!
+//! | id        | paper item                  | runner                |
+//! |-----------|-----------------------------|-----------------------|
+//! | table3    | Table 3 / Fig. 8            | components::table3    |
+//! | table4    | Table 4 / Fig. 9(a,b)       | components::table4    |
+//! | table5    | Table 5 / Fig. 9(c,d)       | components::table5    |
+//! | scaling   | Fig. 1/2/10, Tables 12–14   | scaling::scaling      |
+//! | speedup   | Fig. 4(b,c)                 | scaling::speedup      |
+//! | timing    | Fig. 3/11, Tables 15–22     | timing::timing        |
+//! | xlarge    | Fig. 4(a) / Table 6         | xlarge::xlarge        |
+//! | epsilon   | Fig. 7 / Appendix D         | xlarge::epsilon       |
+//! | gamma-min | Fig. 5 / Appendix B         | gamma::gamma_min      |
+//! | fits      | Fig. 6 / Appendix C         | fits::fits            |
+//!
+//! Every runner accepts `--steps`, `--seeds`, `--out` and runner-specific
+//! options, prints the paper-shaped rows, and writes CSV + JSON under
+//! `results/`.
+
+pub mod common;
+pub mod components;
+pub mod fits;
+pub mod gamma;
+pub mod scaling;
+pub mod timing;
+pub mod xlarge;
+
+use anyhow::{bail, Result};
+
+use crate::util::Args;
+
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("table3", "inner-LR (gamma) schedule: constant vs cosine (Table 3 / Fig. 8)"),
+    ("table4", "temperature update rules v0-v3 (Table 4 / Fig. 9ab)"),
+    ("table5", "optimizers SGDM/LAMB/Lion/AdamW (Table 5 / Fig. 9cd)"),
+    ("scaling", "FastCLIP-v3 vs OpenCLIP across nodes (Fig. 1/2/10, Tables 12-14)"),
+    ("speedup", "speedup over 1 node (Fig. 4bc)"),
+    ("timing", "per-iteration time breakdown (Fig. 3/11, Tables 15-22)"),
+    ("xlarge", "xlarge accuracy curves (Fig. 4a / Table 6)"),
+    ("epsilon", "eps in RGCL-g at xlarge (Fig. 7)"),
+    ("gamma-min", "gamma_min x batch size (Fig. 5)"),
+    ("fits", "batch/data-size fits for OpenCLIP (Fig. 6)"),
+];
+
+/// Dispatch an experiment id to its runner.
+pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "table3" => components::table3(args),
+        "table4" => components::table4(args),
+        "table5" => components::table5(args),
+        "scaling" => scaling::scaling(args),
+        "speedup" => scaling::speedup(args),
+        "timing" => timing::timing(args),
+        "xlarge" => xlarge::xlarge(args),
+        "epsilon" => xlarge::epsilon(args),
+        "gamma-min" => gamma::gamma_min(args),
+        "fits" => fits::fits(args),
+        _ => bail!(
+            "unknown experiment '{id}'; available:\n{}",
+            EXPERIMENTS.iter().map(|(k, v)| format!("  {k:10} {v}")).collect::<Vec<_>>().join("\n")
+        ),
+    }
+}

@@ -1,0 +1,184 @@
+//! Scaling experiments — §6 of the paper:
+//! * `scaling` — FastCLIP-v3 vs OpenCLIP across 1/2/4/8 nodes
+//!   (Fig. 1 / Fig. 2 / Fig. 10, Tables 12–14): per-GPU batch fixed,
+//!   global batch grows with nodes, learning rates scaled linearly;
+//! * `speedup` — training-time speedup over 1 node (Fig. 4 b,c), from the
+//!   modeled per-iteration wall time.
+
+use anyhow::Result;
+
+use crate::config::Algorithm;
+use crate::output::{f2, mean_std_cell, Table};
+use crate::util::{Args, Json};
+
+use super::common::{algo_config, apply_overrides, results_dir, run_seeds, scores, Setting};
+
+fn node_counts(args: &Args) -> Result<Vec<usize>> {
+    match args.get("node-counts") {
+        None => Ok(vec![1, 2, 4, 8]),
+        Some(s) => s
+            .split(',')
+            .map(|t| t.parse::<usize>().map_err(|e| anyhow::anyhow!("bad node count {t}: {e}")))
+            .collect(),
+    }
+}
+
+/// Tables 12–14 / Fig. 2: both algorithms, every node count, 3 metrics.
+pub fn scaling(args: &Args) -> Result<()> {
+    let setting = match args.get("setting") {
+        Some(s) => Setting::from_id(s)?,
+        None => Setting::Medium,
+    };
+    let nodes = node_counts(args)?;
+    let mut datacomp = Table::new(
+        format!("Table 12 analog — Datacomp ({} setting)", setting.name()),
+        &header(&nodes),
+    );
+    let mut retrieval = Table::new("Table 13 analog — Retrieval", &header(&nodes));
+    let mut invar = Table::new("Table 14 analog — IN & Variants", &header(&nodes));
+    let mut json_rows = Vec::new();
+
+    let mut cells: Vec<Vec<[String; 3]>> = Vec::new();
+    for algo in [Algorithm::OpenClip, Algorithm::FastClipV3] {
+        let mut row_cells = Vec::new();
+        for &n in &nodes {
+            let mut cfg = algo_config(setting, algo);
+            cfg.artifact_dir = setting.scaling_bundle(n);
+            cfg.nodes = n;
+            cfg.gpus_per_node = 4;
+            // linear LR scaling with global batch (Appendix B), relative
+            // to the 2-node default
+            let scale = n as f32 / 2.0;
+            cfg.lr.peak *= scale;
+            cfg.tau_lr *= scale;
+            let seeds = apply_overrides(&mut cfg, args)?;
+            let label = format!("{} {n}n", algo.name());
+            let results = run_seeds(&cfg, &seeds, &label)?;
+            let s = scores(&results);
+            row_cells.push([
+                mean_std_cell(&s.datacomp),
+                mean_std_cell(&s.retrieval),
+                mean_std_cell(&s.in_variants),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("setting", Json::str(setting.name())),
+                ("algorithm", Json::str(algo.name())),
+                ("nodes", Json::num(n as f64)),
+                ("datacomp", Json::arr(s.datacomp.iter().map(|&v| Json::num(v as f64)))),
+                ("retrieval", Json::arr(s.retrieval.iter().map(|&v| Json::num(v as f64)))),
+                ("in_variants", Json::arr(s.in_variants.iter().map(|&v| Json::num(v as f64)))),
+                (
+                    "eval_curve",
+                    Json::arr(results[0].evals.iter().map(|e| {
+                        Json::obj(vec![
+                            ("step", Json::num(e.step as f64)),
+                            ("datacomp", Json::num(e.summary.datacomp as f64)),
+                            ("in_variants", Json::num(e.summary.in_variants as f64)),
+                        ])
+                    })),
+                ),
+            ]));
+        }
+        cells.push(row_cells);
+    }
+
+    for (t, metric) in [(&mut datacomp, 0), (&mut retrieval, 1), (&mut invar, 2)] {
+        for (ai, algo) in ["OpenCLIP", "FastCLIP-v3"].iter().enumerate() {
+            let mut row = vec![algo.to_string()];
+            row.extend(cells[ai].iter().map(|c| c[metric].clone()));
+            t.row(row);
+        }
+        // improvement row (absolute difference of means, FastCLIP − OpenCLIP)
+        let mut row = vec!["Improvement".to_string()];
+        for ni in 0..nodes.len() {
+            let oc: f32 = cells[0][ni][metric].split(' ').next().unwrap().parse().unwrap();
+            let fc: f32 = cells[1][ni][metric].split(' ').next().unwrap().parse().unwrap();
+            row.push(format!("{:+.2}", fc - oc));
+        }
+        t.row(row);
+    }
+
+    datacomp.print();
+    retrieval.print();
+    invar.print();
+    let dir = results_dir(args);
+    datacomp.write_csv(&dir.join("scaling_datacomp.csv"))?;
+    retrieval.write_csv(&dir.join("scaling_retrieval.csv"))?;
+    invar.write_csv(&dir.join("scaling_in_variants.csv"))?;
+    crate::output::write_result(&dir, "scaling", &Json::arr(json_rows))?;
+    eprintln!("wrote {}/scaling_*.csv and scaling.json", dir.display());
+    Ok(())
+}
+
+fn header(nodes: &[usize]) -> Vec<&'static str> {
+    // static headers for up to the standard sweep; fall back generically
+    match nodes {
+        [1, 2, 4, 8] => vec!["Algorithm", "1 Node", "2 Nodes", "4 Nodes", "8 Nodes"],
+        _ => {
+            let mut h = vec!["Algorithm"];
+            h.extend(std::iter::repeat("Nodes").take(nodes.len()));
+            h
+        }
+    }
+}
+
+/// Fig. 4 (b, c): speedup over 1 node in modeled per-iteration wall time.
+/// Uses short measurement runs (compute measured, comm modeled at the
+/// given topology) — the paper's "diminishing return" shape.
+pub fn speedup(args: &Args) -> Result<()> {
+    let setting = match args.get("setting") {
+        Some(s) => Setting::from_id(s)?,
+        None => Setting::Medium,
+    };
+    let nodes = node_counts(args)?;
+    let algos = [
+        Algorithm::OpenClip,
+        Algorithm::FastClipV1,
+        Algorithm::FastClipV2,
+        Algorithm::FastClipV3,
+    ];
+    let mut table = Table::new(
+        format!("Fig. 4(b,c) analog — speedup over 1 node ({})", setting.name()),
+        &["Algorithm", "Nodes", "iter_ms", "speedup", "ideal"],
+    );
+    let mut json_rows = Vec::new();
+    for algo in algos {
+        let mut base_ms = None;
+        for &n in &nodes {
+            let mut cfg = algo_config(setting, algo);
+            cfg.artifact_dir = setting.scaling_bundle(n);
+            cfg.nodes = n;
+            cfg.gpus_per_node = 4;
+            cfg.steps = args.u32_or("steps", 8)?;
+            cfg.lr.total_iters = cfg.steps;
+            cfg.lr.warmup_iters = 1;
+            cfg.data.n_train = args.usize_or("n-train", 1024)?;
+            let r = run_seeds(&cfg, &[0], &format!("{} {n}n", algo.name()))?;
+            let ms = r[0].timing.per_iter_ms();
+            // per-sample normalization: global batch grows with n, so the
+            // 1-node-equivalent time for the same work is total/throughput
+            let per_iter = ms.total;
+            let base = *base_ms.get_or_insert(per_iter);
+            // speedup in throughput terms: (samples/s at n) / (samples/s at 1)
+            let speedup = (n as f64 * base) / per_iter;
+            table.row(vec![
+                algo.name().into(),
+                n.to_string(),
+                f2(per_iter),
+                f2(speedup),
+                n.to_string(),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("algorithm", Json::str(algo.name())),
+                ("nodes", Json::num(n as f64)),
+                ("iter_ms", Json::num(per_iter)),
+                ("speedup", Json::num(speedup)),
+            ]));
+        }
+    }
+    table.print();
+    let dir = results_dir(args);
+    table.write_csv(&dir.join("speedup.csv"))?;
+    crate::output::write_result(&dir, "speedup", &Json::arr(json_rows))?;
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! xLarge-scale experiments:
+//! * `xlarge` — Fig. 4(a) / Table 6 / Fig. 10(c): FastCLIP-v3 vs OpenCLIP
+//!   accuracy curves on the largest analog setting;
+//! * `epsilon` — Fig. 7 / Appendix D: the effect of ε ∈ {1e-14, 1e-6} in
+//!   (RGCL-g) at xlarge scale.
+
+use anyhow::Result;
+
+use crate::config::Algorithm;
+use crate::output::{f2, sparkline, Table};
+use crate::util::{Args, Json};
+
+use super::common::{algo_config, apply_overrides, results_dir, run_seeds, Setting};
+
+/// Fig. 4(a) / Table 6: the xlarge accuracy curve + final table.
+pub fn xlarge(args: &Args) -> Result<()> {
+    let mut table = Table::new(
+        "Table 6 analog — xlarge setting (IN-analog zero-shot, final)",
+        &["Algorithm", "ZeroShot(IN-analog)", "Datacomp", "Retrieval"],
+    );
+    let mut json_rows = Vec::new();
+    for algo in [Algorithm::OpenClip, Algorithm::FastClipV3] {
+        let mut cfg = algo_config(Setting::XLarge, algo);
+        cfg.eval_every = args.u32_or("eval-every", (cfg.steps / 6).max(1))?;
+        let seeds = apply_overrides(&mut cfg, args)?;
+        let results = run_seeds(&cfg, &seeds[..1], algo.name())?;
+        let r = &results[0];
+        let curve: Vec<(u32, f32)> = r
+            .evals
+            .iter()
+            .map(|e| (e.step, e.summary.task("zeroshot_clean").unwrap_or(f32::NAN)))
+            .collect();
+        let series: Vec<f32> = curve.iter().map(|(_, v)| *v).collect();
+        eprintln!(
+            "  {} IN-analog curve: {}  (final {:.2})",
+            algo.name(),
+            sparkline(&series, 32),
+            series.last().copied().unwrap_or(f32::NAN)
+        );
+        table.row(vec![
+            algo.name().into(),
+            f2(series.last().copied().unwrap_or(f32::NAN) as f64),
+            f2(r.final_eval.datacomp as f64),
+            f2(r.final_eval.retrieval as f64),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("algorithm", Json::str(algo.name())),
+            (
+                "curve",
+                Json::arr(curve.iter().map(|(s, v)| {
+                    Json::obj(vec![
+                        ("step", Json::num(*s as f64)),
+                        ("zeroshot", Json::num(*v as f64)),
+                    ])
+                })),
+            ),
+            ("final_datacomp", Json::num(r.final_eval.datacomp as f64)),
+            ("final_retrieval", Json::num(r.final_eval.retrieval as f64)),
+        ]));
+    }
+    table.print();
+    let dir = results_dir(args);
+    table.write_csv(&dir.join("xlarge.csv"))?;
+    crate::output::write_result(&dir, "xlarge", &Json::arr(json_rows))?;
+    Ok(())
+}
+
+/// Fig. 7: ε ∈ {1e-14, 1e-6} in (RGCL-g) — the Appendix D observation that
+/// a larger ε bounds the 1/(ε+u) gradient scaling for well-learned
+/// examples and improves xlarge accuracy.
+pub fn epsilon(args: &Args) -> Result<()> {
+    let mut table = Table::new(
+        "Fig. 7 analog — effect of eps in RGCL-g (xlarge setting)",
+        &["eps", "ZeroShot(IN-analog)", "Datacomp", "final loss"],
+    );
+    let mut json_rows = Vec::new();
+    for eps in [1e-14f32, 1e-6] {
+        let mut cfg = algo_config(Setting::XLarge, Algorithm::FastClipV3);
+        cfg.eps = eps;
+        cfg.eval_every = args.u32_or("eval-every", (cfg.steps / 6).max(1))?;
+        let seeds = apply_overrides(&mut cfg, args)?;
+        cfg.eps = eps; // keep after overrides
+        let results = run_seeds(&cfg, &seeds[..1], &format!("eps={eps:e}"))?;
+        let r = &results[0];
+        let zs: Vec<f32> = r
+            .evals
+            .iter()
+            .map(|e| e.summary.task("zeroshot_clean").unwrap_or(f32::NAN))
+            .collect();
+        eprintln!("  eps={eps:e} curve: {}", sparkline(&zs, 32));
+        table.row(vec![
+            format!("{eps:e}"),
+            f2(zs.last().copied().unwrap_or(f32::NAN) as f64),
+            f2(r.final_eval.datacomp as f64),
+            format!("{:.4}", r.tail_loss(8)),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("eps", Json::num(eps as f64)),
+            ("zeroshot_curve", Json::arr(zs.iter().map(|&v| Json::num(v as f64)))),
+            ("final_datacomp", Json::num(r.final_eval.datacomp as f64)),
+        ]));
+    }
+    table.print();
+    let dir = results_dir(args);
+    table.write_csv(&dir.join("epsilon.csv"))?;
+    crate::output::write_result(&dir, "epsilon", &Json::arr(json_rows))?;
+    Ok(())
+}

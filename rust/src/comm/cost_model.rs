@@ -1,0 +1,202 @@
+//! α–β cost model for ring collectives over a two-level (intra-node /
+//! inter-node) topology.
+//!
+//! Profiles approximate the paper's three clusters: InfiniBand (the main
+//! testbed for Fig. 3 / Tables 15–16) and two Slingshot clusters
+//! (Fig. 11 / Tables 17–22). Absolute numbers are testbed-specific in the
+//! paper too; what the model must preserve is the *shape*: communication
+//! grows with node count, and OpenCLIP pays an extra O(K·B·d)
+//! REDUCE_SCATTER that FastCLIP replaces with an O(K·B) scalar ALL_GATHER.
+
+use anyhow::{bail, Result};
+
+use crate::config::NetworkProfile;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileName {
+    InfiniBand,
+    Slingshot1,
+    Slingshot2,
+}
+
+impl ProfileName {
+    pub fn all() -> [ProfileName; 3] {
+        [ProfileName::InfiniBand, ProfileName::Slingshot1, ProfileName::Slingshot2]
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            ProfileName::InfiniBand => "infiniband",
+            ProfileName::Slingshot1 => "slingshot1",
+            ProfileName::Slingshot2 => "slingshot2",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Result<ProfileName> {
+        for p in ProfileName::all() {
+            if p.id() == id {
+                return Ok(p);
+            }
+        }
+        bail!("unknown network profile '{id}' (expected infiniband|slingshot1|slingshot2)")
+    }
+
+    pub fn profile(&self) -> NetworkProfile {
+        match self {
+            // ~100 Gb/s EDR InfiniBand, low latency; fast intra-node links.
+            ProfileName::InfiniBand => NetworkProfile {
+                name: "infiniband",
+                inter_alpha: 5e-6,
+                inter_beta: 12.5e9,
+                intra_alpha: 1.5e-6,
+                intra_beta: 60e9,
+            },
+            // Slingshot cluster 1 of Appendix E: higher per-message latency.
+            ProfileName::Slingshot1 => NetworkProfile {
+                name: "slingshot1",
+                inter_alpha: 18e-6,
+                inter_beta: 10e9,
+                intra_alpha: 2e-6,
+                intra_beta: 50e9,
+            },
+            // Slingshot cluster 2: similar bandwidth, lower latency.
+            ProfileName::Slingshot2 => NetworkProfile {
+                name: "slingshot2",
+                inter_alpha: 8e-6,
+                inter_beta: 11e9,
+                intra_alpha: 2e-6,
+                intra_beta: 50e9,
+            },
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collective {
+    AllGather,
+    AllReduce,
+    ReduceScatter,
+    Broadcast,
+}
+
+/// Analytic time for ring collectives over `nodes` x `gpus_per_node`.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub profile: NetworkProfile,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl CostModel {
+    pub fn new(profile: NetworkProfile, nodes: usize, gpus_per_node: usize) -> Self {
+        Self { profile, nodes, gpus_per_node }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Ring collective over k ranks with per-rank payload `bytes`:
+    ///   all_gather / reduce_scatter:  (k-1)·α + (k-1)/k · (k·bytes)/β
+    ///   all_reduce:                   2x the above (RS + AG phases)
+    /// `bytes` is the payload each rank contributes (gather) or the full
+    /// reduced buffer size (all_reduce), matching NCCL conventions.
+    fn ring(alpha: f64, beta: f64, k: usize, bytes: f64, phases: f64) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
+        let steps = (k - 1) as f64;
+        phases * (steps * alpha + steps / k as f64 * bytes / beta)
+    }
+
+    /// Time in seconds for a collective moving `bytes` (see `ring` for the
+    /// convention). Hierarchical: an intra-node phase over gpus_per_node
+    /// and an inter-node phase over nodes, executed sequentially — the
+    /// standard hierarchical-ring decomposition.
+    pub fn time(&self, op: Collective, bytes: usize) -> f64 {
+        let p = self.profile;
+        let b = bytes as f64;
+        let phases = match op {
+            Collective::AllReduce => 2.0,
+            _ => 1.0,
+        };
+        let intra = Self::ring(p.intra_alpha, p.intra_beta, self.gpus_per_node, b, phases);
+        let inter = Self::ring(p.inter_alpha, p.inter_beta, self.nodes, b, phases);
+        match op {
+            Collective::Broadcast => {
+                // tree broadcast: log2(k) hops of the full payload
+                let k = self.world_size();
+                if k <= 1 {
+                    return 0.0;
+                }
+                let hops = (k as f64).log2().ceil();
+                hops * (p.inter_alpha + b / p.inter_beta.min(p.intra_beta))
+            }
+            _ => intra + inter,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(nodes: usize) -> CostModel {
+        CostModel::new(ProfileName::InfiniBand.profile(), nodes, 4)
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let m = CostModel::new(ProfileName::InfiniBand.profile(), 1, 1);
+        assert_eq!(m.time(Collective::AllReduce, 1 << 20), 0.0);
+        assert_eq!(m.time(Collective::AllGather, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn cost_grows_with_nodes() {
+        for op in [Collective::AllGather, Collective::AllReduce, Collective::ReduceScatter] {
+            let t1 = model(1).time(op, 1 << 22);
+            let t2 = model(2).time(op, 1 << 22);
+            let t8 = model(8).time(op, 1 << 22);
+            assert!(t2 > t1, "{op:?}");
+            assert!(t8 > t2, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn all_reduce_twice_gather() {
+        let m = model(4);
+        let ag = m.time(Collective::AllGather, 1 << 24);
+        let ar = m.time(Collective::AllReduce, 1 << 24);
+        assert!((ar / ag - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_monotone_in_bytes() {
+        let m = model(4);
+        let a = m.time(Collective::AllGather, 1 << 10);
+        let b = m.time(Collective::AllGather, 1 << 20);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn scalar_gather_beats_feature_reduce_scatter() {
+        // The paper's headline communication claim, in model terms:
+        // ALL_GATHER of K·B scalars is much cheaper than REDUCE_SCATTER of
+        // K·B·d floats (d = 512).
+        let m = model(8);
+        let kb = 8 * 4 * 128; // K * B
+        let scalar = m.time(Collective::AllGather, kb * 4);
+        let feature = m.time(Collective::ReduceScatter, kb * 512 * 4);
+        assert!(feature > 10.0 * scalar);
+    }
+
+    #[test]
+    fn profiles_distinct() {
+        let a = ProfileName::InfiniBand.profile();
+        let b = ProfileName::Slingshot1.profile();
+        let c = ProfileName::Slingshot2.profile();
+        assert!(a.inter_alpha < b.inter_alpha);
+        assert!(c.inter_alpha < b.inter_alpha);
+    }
+}

@@ -1,0 +1,16 @@
+//! Communication substrate: in-process collectives between worker threads
+//! plus the analytic interconnect cost model.
+//!
+//! Numerics are REAL — bytes actually move between workers through shared
+//! slots — while *time* is accounted analytically by [`CostModel`]
+//! (α–β ring collectives, hierarchical intra-/inter-node), because the
+//! testbed is threads on one host, not GPUs across a fabric. The paper's
+//! communication claim is a volume argument (ALL_GATHER of scalar `u`
+//! vs REDUCE_SCATTER of feature-sized terms), which volume-based
+//! accounting preserves exactly (DESIGN.md §1).
+
+mod cost_model;
+mod world;
+
+pub use cost_model::{Collective, CostModel, ProfileName};
+pub use world::{CommStats, CommWorld, WorkerComm};

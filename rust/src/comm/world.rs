@@ -1,0 +1,291 @@
+//! In-process collectives between the K worker threads.
+//!
+//! All methods are *collective*: every rank must call the same method in
+//! the same order (lockstep), as with MPI/NCCL. Data really moves (the
+//! numerics of distributed training are exact); time is charged separately
+//! through [`super::CostModel`] by the coordinator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+/// Byte counters per collective, for reporting and model cross-checks.
+#[derive(Debug, Default)]
+pub struct CommStats {
+    pub all_gather_bytes: AtomicU64,
+    pub all_reduce_bytes: AtomicU64,
+    pub broadcast_bytes: AtomicU64,
+    pub ops: AtomicU64,
+}
+
+impl CommStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.all_gather_bytes.load(Ordering::Relaxed),
+            self.all_reduce_bytes.load(Ordering::Relaxed),
+            self.broadcast_bytes.load(Ordering::Relaxed),
+            self.ops.load(Ordering::Relaxed),
+        )
+    }
+}
+
+pub struct CommWorld {
+    k: usize,
+    barrier: Barrier,
+    /// per-rank input slots
+    slots: Vec<Mutex<Vec<f32>>>,
+    /// per-chunk reduction outputs (chunk c owned by rank c)
+    chunks: Vec<Mutex<Vec<f32>>>,
+    pub stats: CommStats,
+}
+
+impl CommWorld {
+    pub fn new(k: usize) -> Arc<Self> {
+        assert!(k > 0);
+        Arc::new(Self {
+            k,
+            barrier: Barrier::new(k),
+            slots: (0..k).map(|_| Mutex::new(Vec::new())).collect(),
+            chunks: (0..k).map(|_| Mutex::new(Vec::new())).collect(),
+            stats: CommStats::default(),
+        })
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.k
+    }
+
+    pub fn handle(self: &Arc<Self>, rank: usize) -> WorkerComm {
+        assert!(rank < self.k);
+        WorkerComm { world: Arc::clone(self), rank }
+    }
+}
+
+/// Per-worker handle to the collective world.
+pub struct WorkerComm {
+    world: Arc<CommWorld>,
+    rank: usize,
+}
+
+impl WorkerComm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.world.k
+    }
+
+    pub fn barrier(&self) {
+        self.world.barrier.wait();
+    }
+
+    /// Concatenate every rank's `data` in rank order. All ranks must pass
+    /// equal-length slices.
+    pub fn all_gather(&self, data: &[f32]) -> Vec<f32> {
+        let w = &self.world;
+        if w.k == 1 {
+            return data.to_vec();
+        }
+        {
+            let mut slot = w.slots[self.rank].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        w.stats.all_gather_bytes.fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
+        w.stats.ops.fetch_add(1, Ordering::Relaxed);
+        self.barrier();
+        let mut out = Vec::with_capacity(data.len() * w.k);
+        for r in 0..w.k {
+            out.extend_from_slice(&w.slots[r].lock().unwrap());
+        }
+        self.barrier(); // slots free for reuse
+        out
+    }
+
+    /// Element-wise SUM across ranks, result replicated into `buf`.
+    /// Implemented reduce-scatter + all-gather style: rank r reduces chunk
+    /// r so the reduction parallelizes across workers (O(n) per rank).
+    pub fn all_reduce_sum(&self, buf: &mut [f32]) {
+        let w = &self.world;
+        if w.k == 1 {
+            return;
+        }
+        {
+            let mut slot = w.slots[self.rank].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(buf);
+        }
+        w.stats.all_reduce_bytes.fetch_add((buf.len() * 4) as u64, Ordering::Relaxed);
+        w.stats.ops.fetch_add(1, Ordering::Relaxed);
+        self.barrier();
+
+        let n = buf.len();
+        let chunk = n.div_ceil(w.k);
+        let lo = (self.rank * chunk).min(n);
+        let hi = ((self.rank + 1) * chunk).min(n);
+        {
+            let mut acc = vec![0.0f32; hi - lo];
+            for r in 0..w.k {
+                let slot = w.slots[r].lock().unwrap();
+                for (a, v) in acc.iter_mut().zip(&slot[lo..hi]) {
+                    *a += v;
+                }
+            }
+            let mut out = w.chunks[self.rank].lock().unwrap();
+            *out = acc;
+        }
+        self.barrier();
+        for r in 0..w.k {
+            let lo_r = (r * chunk).min(n);
+            let hi_r = ((r + 1) * chunk).min(n);
+            let part = w.chunks[r].lock().unwrap();
+            buf[lo_r..hi_r].copy_from_slice(&part);
+        }
+        self.barrier();
+    }
+
+    /// Mean across ranks (sum then scale).
+    pub fn all_reduce_mean(&self, buf: &mut [f32]) {
+        self.all_reduce_sum(buf);
+        let inv = 1.0 / self.world.k as f32;
+        for v in buf.iter_mut() {
+            *v *= inv;
+        }
+    }
+
+    /// Copy `root`'s buffer to every rank.
+    pub fn broadcast(&self, buf: &mut [f32], root: usize) {
+        let w = &self.world;
+        if w.k == 1 {
+            return;
+        }
+        if self.rank == root {
+            let mut slot = w.slots[root].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(buf);
+            w.stats.broadcast_bytes.fetch_add((buf.len() * 4) as u64, Ordering::Relaxed);
+            w.stats.ops.fetch_add(1, Ordering::Relaxed);
+        }
+        self.barrier();
+        if self.rank != root {
+            let slot = w.slots[root].lock().unwrap();
+            buf.copy_from_slice(&slot);
+        }
+        self.barrier();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_workers<F>(k: usize, f: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(WorkerComm) -> Vec<f32> + Send + Sync + 'static,
+    {
+        let world = CommWorld::new(k);
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..k)
+            .map(|r| {
+                let h = world.handle(r);
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || f(h))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_gather_orders_by_rank() {
+        for k in [1, 2, 4, 7] {
+            let outs = run_workers(k, move |c| {
+                let mine = vec![c.rank() as f32; 3];
+                c.all_gather(&mine)
+            });
+            let expect: Vec<f32> =
+                (0..k).flat_map(|r| std::iter::repeat(r as f32).take(3)).collect();
+            for o in outs {
+                assert_eq!(o, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_sum_correct() {
+        for k in [1, 2, 3, 8] {
+            let n = 1000; // exercises uneven chunking for k=3
+            let outs = run_workers(k, move |c| {
+                let mut buf: Vec<f32> =
+                    (0..n).map(|i| (i as f32) + c.rank() as f32).collect();
+                c.all_reduce_sum(&mut buf);
+                buf
+            });
+            let rank_sum: f32 = (0..k).map(|r| r as f32).sum();
+            for o in &outs {
+                for (i, v) in o.iter().enumerate() {
+                    let want = k as f32 * i as f32 + rank_sum;
+                    assert!((v - want).abs() < 1e-3, "k={k} i={i} {v} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_mean_correct() {
+        let outs = run_workers(4, |c| {
+            let mut buf = vec![c.rank() as f32; 5];
+            c.all_reduce_mean(&mut buf);
+            buf
+        });
+        for o in outs {
+            for v in o {
+                assert!((v - 1.5).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let outs = run_workers(4, |c| {
+            let mut buf = if c.rank() == 2 { vec![7.0; 4] } else { vec![0.0; 4] };
+            c.broadcast(&mut buf, 2);
+            buf
+        });
+        for o in outs {
+            assert_eq!(o, vec![7.0; 4]);
+        }
+    }
+
+    #[test]
+    fn repeated_collectives_no_deadlock() {
+        let outs = run_workers(3, |c| {
+            let mut acc = vec![0.0f32; 2];
+            for it in 0..50 {
+                let g = c.all_gather(&[it as f32, c.rank() as f32]);
+                acc[0] += g.iter().sum::<f32>();
+                let mut buf = vec![1.0f32; 2];
+                c.all_reduce_sum(&mut buf);
+                acc[1] += buf[0];
+            }
+            acc
+        });
+        for o in &outs {
+            assert_eq!(o, &outs[0]);
+        }
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let world = CommWorld::new(2);
+        let h0 = world.handle(0);
+        let h1 = world.handle(1);
+        let t = std::thread::spawn(move || {
+            h1.all_gather(&[1.0; 8]);
+        });
+        h0.all_gather(&[2.0; 8]);
+        t.join().unwrap();
+        let (ag, _, _, ops) = world.stats.snapshot();
+        assert_eq!(ag, 2 * 8 * 4);
+        assert_eq!(ops, 2);
+    }
+}

@@ -1,0 +1,634 @@
+//! Typed configuration for training runs and experiments.
+//!
+//! Runs are driven from config-file presets (`configs/*.toml`, parsed by
+//! the in-tree TOML-subset parser [`crate::util::KvFile`]), the CLI, or the
+//! experiment harness. Presets mirror the paper's "medium / large / xlarge"
+//! settings (Table 2) scaled to this testbed (DESIGN.md §1).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::KvFile;
+
+/// The algorithms of Table 1 in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Mini-batch contrastive loss baseline (γ ≡ 1, learnable global τ,
+    /// REDUCE_SCATTER communication pattern).
+    OpenClip,
+    /// GCL via FCCO, constant γ, constant global τ.
+    SogClr,
+    /// RGCL via FCCO, constant γ, individual learnable τ.
+    ISogClr,
+    /// GCL (unscaled), cosine γ, learnable global τ via Eq. (8).
+    FastClipV0,
+    /// GCL, cosine γ, constant global τ.
+    FastClipV1,
+    /// RGCL, cosine γ, individual learnable τ via Eq. (9).
+    FastClipV2,
+    /// RGCL-g, cosine γ, learnable global τ via Eq. (10).
+    FastClipV3,
+}
+
+/// How the temperature parameter is updated each iteration (§5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TempRule {
+    Constant,
+    /// single learnable τ from the loss gradient (MBCL / Eq. 8 / Eq. 10)
+    GlobalLearnable,
+    /// per-sample learnable τ1_i, τ2_i (Eq. 9)
+    Individual,
+}
+
+/// Which collectives the algorithm pays for (§4; Fig. 3 cost accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommPattern {
+    /// ALL_GATHER(feats) + REDUCE_SCATTER(per-pair grad terms, O(K·B·d))
+    /// + ALL_REDUCE(param grads).
+    OpenClip,
+    /// ALL_GATHER(feats) + ALL_GATHER(u scalars, O(K·B)) + ALL_REDUCE(grads).
+    FastClip,
+}
+
+impl Algorithm {
+    /// The `step_<variant>` HLO artifact this algorithm executes.
+    pub fn variant(&self) -> &'static str {
+        match self {
+            Algorithm::OpenClip => "mbcl",
+            Algorithm::SogClr | Algorithm::FastClipV1 => "gcl",
+            Algorithm::FastClipV0 => "gcl_v0",
+            Algorithm::ISogClr | Algorithm::FastClipV2 => "rgcl_i",
+            Algorithm::FastClipV3 => "rgcl_g",
+        }
+    }
+
+    pub fn temp_rule(&self) -> TempRule {
+        match self {
+            Algorithm::SogClr | Algorithm::FastClipV1 => TempRule::Constant,
+            Algorithm::ISogClr | Algorithm::FastClipV2 => TempRule::Individual,
+            _ => TempRule::GlobalLearnable,
+        }
+    }
+
+    pub fn comm_pattern(&self) -> CommPattern {
+        match self {
+            Algorithm::OpenClip => CommPattern::OpenClip,
+            _ => CommPattern::FastClip,
+        }
+    }
+
+    /// OpenCLIP has no u sequence: γ ≡ 1 regardless of the schedule.
+    pub fn forces_gamma_one(&self) -> bool {
+        matches!(self, Algorithm::OpenClip)
+    }
+
+    /// The default γ schedule family from Table 1.
+    pub fn default_cosine_gamma(&self) -> bool {
+        matches!(
+            self,
+            Algorithm::FastClipV0
+                | Algorithm::FastClipV1
+                | Algorithm::FastClipV2
+                | Algorithm::FastClipV3
+        )
+    }
+
+    pub fn all() -> [Algorithm; 7] {
+        [
+            Algorithm::OpenClip,
+            Algorithm::SogClr,
+            Algorithm::ISogClr,
+            Algorithm::FastClipV0,
+            Algorithm::FastClipV1,
+            Algorithm::FastClipV2,
+            Algorithm::FastClipV3,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::OpenClip => "OpenCLIP",
+            Algorithm::SogClr => "SogCLR",
+            Algorithm::ISogClr => "iSogCLR",
+            Algorithm::FastClipV0 => "FastCLIP-v0",
+            Algorithm::FastClipV1 => "FastCLIP-v1",
+            Algorithm::FastClipV2 => "FastCLIP-v2",
+            Algorithm::FastClipV3 => "FastCLIP-v3",
+        }
+    }
+
+    /// Kebab-case id used by the CLI and config files.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Algorithm::OpenClip => "openclip",
+            Algorithm::SogClr => "sogclr",
+            Algorithm::ISogClr => "isogclr",
+            Algorithm::FastClipV0 => "fastclip-v0",
+            Algorithm::FastClipV1 => "fastclip-v1",
+            Algorithm::FastClipV2 => "fastclip-v2",
+            Algorithm::FastClipV3 => "fastclip-v3",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Result<Algorithm> {
+        for a in Algorithm::all() {
+            if a.id() == id {
+                return Ok(a);
+            }
+        }
+        bail!(
+            "unknown algorithm '{id}' (expected one of: {})",
+            Algorithm::all().map(|a| a.id()).join(", ")
+        )
+    }
+}
+
+/// Inner learning-rate schedule for γ_t (Eq. 1 / §5 "The Inner LR Schedule").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GammaSchedule {
+    Constant { gamma: f32 },
+    /// γ_t = 0.5 (1 + cos(π·epoch/E)) (1 − γ_min) + γ_min, clamped past E.
+    Cosine { gamma_min: f32, decay_epochs: u32 },
+}
+
+impl GammaSchedule {
+    pub fn value(&self, epoch: u32) -> f32 {
+        match *self {
+            GammaSchedule::Constant { gamma } => gamma,
+            GammaSchedule::Cosine { gamma_min, decay_epochs } => {
+                if epoch >= decay_epochs {
+                    return gamma_min;
+                }
+                let c = (std::f32::consts::PI * epoch as f32 / decay_epochs as f32).cos();
+                0.5 * (1.0 + c) * (1.0 - gamma_min) + gamma_min
+            }
+        }
+    }
+}
+
+/// Outer (model) learning-rate schedule: linear warmup then cosine decay
+/// to `min_lr` (Appendix B).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LrSchedule {
+    pub peak: f32,
+    pub min: f32,
+    pub warmup_iters: u32,
+    pub total_iters: u32,
+}
+
+impl LrSchedule {
+    pub fn value(&self, iter: u32) -> f32 {
+        if iter < self.warmup_iters {
+            return self.peak * (iter + 1) as f32 / self.warmup_iters.max(1) as f32;
+        }
+        let t = (iter - self.warmup_iters) as f32
+            / (self.total_iters.saturating_sub(self.warmup_iters)).max(1) as f32;
+        let t = t.min(1.0);
+        self.min + 0.5 * (1.0 + (std::f32::consts::PI * t).cos()) * (self.peak - self.min)
+    }
+}
+
+/// Optimizer for the model parameters (§5 "The Optimizer", Proc. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    AdamW,
+    Lamb,
+    Lion,
+    Sgdm,
+}
+
+impl OptimizerKind {
+    pub fn all() -> [OptimizerKind; 4] {
+        [OptimizerKind::AdamW, OptimizerKind::Lamb, OptimizerKind::Lion, OptimizerKind::Sgdm]
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            OptimizerKind::AdamW => "adamw",
+            OptimizerKind::Lamb => "lamb",
+            OptimizerKind::Lion => "lion",
+            OptimizerKind::Sgdm => "sgdm",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Result<OptimizerKind> {
+        for k in OptimizerKind::all() {
+            if k.id() == id {
+                return Ok(k);
+            }
+        }
+        bail!("unknown optimizer '{id}' (expected adamw|lamb|lion|sgdm)")
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::AdamW => "AdamW",
+            OptimizerKind::Lamb => "LAMB",
+            OptimizerKind::Lion => "Lion",
+            OptimizerKind::Sgdm => "SGDM",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OptimizerConfig {
+    pub kind: OptimizerKind,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// SGDM momentum
+    pub momentum: f32,
+}
+
+impl OptimizerConfig {
+    pub fn adamw(weight_decay: f32) -> Self {
+        Self { kind: OptimizerKind::AdamW, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay, momentum: 0.9 }
+    }
+
+    pub fn with_kind(kind: OptimizerKind) -> Self {
+        let mut c = Self::adamw(0.1);
+        c.kind = kind;
+        match kind {
+            OptimizerKind::Lion => {
+                c.beta1 = 0.9;
+                c.beta2 = 0.99;
+                c.weight_decay = 0.3;
+            }
+            OptimizerKind::Sgdm => {
+                c.weight_decay = 3e-6;
+            }
+            _ => {}
+        }
+        c
+    }
+}
+
+/// Synthetic paired image–text dataset parameters (DESIGN.md §1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DataConfig {
+    pub n_train: usize,
+    pub n_eval: usize,
+    pub n_classes: usize,
+    /// image noise σ around class prototype
+    pub noise: f32,
+    /// zipf exponent for long-tailed class frequencies (0 = uniform)
+    pub zipf_s: f64,
+    pub seed: u64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self { n_train: 8192, n_eval: 512, n_classes: 64, noise: 0.8, zipf_s: 0.5, seed: 0 }
+    }
+}
+
+/// Simulated interconnect (DESIGN.md §1 "Hardware"): α–β ring collectives,
+/// hierarchical intra-node / inter-node. Profiles in `comm::profiles`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkProfile {
+    pub name: &'static str,
+    /// inter-node latency per ring step, seconds
+    pub inter_alpha: f64,
+    /// inter-node bandwidth, bytes/sec
+    pub inter_beta: f64,
+    /// intra-node (e.g. NVLink/PCIe) latency, seconds
+    pub intra_alpha: f64,
+    /// intra-node bandwidth, bytes/sec
+    pub intra_beta: f64,
+}
+
+/// A full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// artifact bundle directory (contains manifest.json)
+    pub artifact_dir: String,
+    pub algorithm: Algorithm,
+    pub steps: u32,
+    /// iterations per "epoch" for the γ schedule (Ê in §5)
+    pub iters_per_epoch: u32,
+    pub optimizer: OptimizerConfig,
+    pub lr: LrSchedule,
+    pub gamma: GammaSchedule,
+    /// initial temperature τ0
+    pub tau_init: f32,
+    /// learning rate for learnable τ (AdamW with λ=0, Proc. 5)
+    pub tau_lr: f32,
+    /// lower bound τ ≥ τ_min (RGCL constraint)
+    pub tau_min: f32,
+    /// ε in log(ε + g) (1e-14 default; 1e-6 for xlarge per Appendix D)
+    pub eps: f32,
+    /// ρ margin in RGCL / RGCL-g
+    pub rho: f32,
+    pub data: DataConfig,
+    pub seed: u64,
+    /// evaluate every N steps (0 = only at end)
+    pub eval_every: u32,
+    /// topology for the comm cost model
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub network: crate::comm::ProfileName,
+    /// FastCLIP-v3: decay tau_lr to 1/3 when τ < 0.03 (Appendix B)
+    pub tau_lr_decay_below: Option<f32>,
+}
+
+impl TrainConfig {
+    /// Defaults mirroring the paper's medium-scale setting, scaled down.
+    pub fn new(artifact_dir: impl Into<String>, algorithm: Algorithm) -> Self {
+        let steps = 200;
+        let iters_per_epoch = 32;
+        let epochs = steps / iters_per_epoch;
+        let gamma = if algorithm.forces_gamma_one() {
+            GammaSchedule::Constant { gamma: 1.0 }
+        } else if algorithm.default_cosine_gamma() {
+            GammaSchedule::Cosine { gamma_min: 0.2, decay_epochs: (epochs / 2).max(1) }
+        } else {
+            GammaSchedule::Constant { gamma: 0.6 }
+        };
+        let tau_init = if algorithm == Algorithm::FastClipV3 { 0.07 } else { 0.03 };
+        Self {
+            artifact_dir: artifact_dir.into(),
+            algorithm,
+            steps,
+            iters_per_epoch,
+            optimizer: OptimizerConfig::adamw(0.1),
+            lr: LrSchedule { peak: 1e-3, min: 0.0, warmup_iters: steps / 10, total_iters: steps },
+            gamma,
+            tau_init,
+            tau_lr: if algorithm == Algorithm::FastClipV3 { 2e-4 } else { 1e-2 },
+            tau_min: 0.005,
+            eps: 1e-14,
+            rho: 6.5,
+            data: DataConfig::default(),
+            seed: 0,
+            eval_every: 0,
+            nodes: 1,
+            gpus_per_node: 4,
+            network: crate::comm::ProfileName::InfiniBand,
+            tau_lr_decay_below: if algorithm == Algorithm::FastClipV3 { Some(0.03) } else { None },
+        }
+    }
+
+    pub fn epochs(&self) -> u32 {
+        self.steps / self.iters_per_epoch.max(1)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.steps > 0, "steps must be > 0");
+        ensure!(self.iters_per_epoch > 0, "iters_per_epoch must be > 0");
+        ensure!(self.tau_init > 0.0, "tau_init must be > 0");
+        ensure!(self.tau_min > 0.0, "tau_min must be > 0");
+        ensure!(self.eps > 0.0, "eps must be > 0");
+        ensure!(self.rho >= 0.0, "rho must be >= 0");
+        ensure!(self.nodes > 0 && self.gpus_per_node > 0, "topology must be non-empty");
+        if let GammaSchedule::Constant { gamma } = self.gamma {
+            ensure!(gamma > 0.0 && gamma <= 1.0, "gamma must be in (0,1]");
+        }
+        if let GammaSchedule::Cosine { gamma_min, .. } = self.gamma {
+            ensure!(gamma_min > 0.0 && gamma_min <= 1.0, "gamma_min must be in (0,1]");
+        }
+        Ok(())
+    }
+
+    /// Load from a config-file preset, overriding the algorithm defaults.
+    /// Recognized keys mirror the struct fields; unknown keys are rejected
+    /// so presets cannot silently rot.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let kv = KvFile::parse_file(std::path::Path::new(path))?;
+        Self::from_kv(&kv)
+    }
+
+    pub fn from_kv(kv: &KvFile) -> Result<Self> {
+        let algorithm = Algorithm::from_id(&kv.str_or("algorithm", "fastclip-v3"))?;
+        let artifact_dir = kv.str_or("artifact_dir", "artifacts/tiny_k2_b8");
+        let mut cfg = TrainConfig::new(artifact_dir, algorithm);
+
+        const KNOWN: &[&str] = &[
+            "algorithm", "artifact_dir", "steps", "iters_per_epoch", "seed",
+            "tau_init", "tau_lr", "tau_min", "eps", "rho", "eval_every",
+            "nodes", "gpus_per_node", "network", "tau_lr_decay_below",
+            "optimizer.kind", "optimizer.beta1", "optimizer.beta2",
+            "optimizer.eps", "optimizer.weight_decay", "optimizer.momentum",
+            "lr.peak", "lr.min", "lr.warmup_iters", "lr.total_iters",
+            "gamma.kind", "gamma.gamma", "gamma.gamma_min", "gamma.decay_epochs",
+            "data.n_train", "data.n_eval", "data.n_classes", "data.noise",
+            "data.zipf_s", "data.seed",
+        ];
+        for k in kv.keys() {
+            ensure!(KNOWN.contains(&k), "unknown config key '{k}'");
+        }
+
+        cfg.steps = kv.parse_or("steps", cfg.steps)?;
+        cfg.iters_per_epoch = kv.parse_or("iters_per_epoch", cfg.iters_per_epoch)?;
+        cfg.seed = kv.parse_or("seed", cfg.seed)?;
+        cfg.tau_init = kv.parse_or("tau_init", cfg.tau_init)?;
+        cfg.tau_lr = kv.parse_or("tau_lr", cfg.tau_lr)?;
+        cfg.tau_min = kv.parse_or("tau_min", cfg.tau_min)?;
+        cfg.eps = kv.parse_or("eps", cfg.eps)?;
+        cfg.rho = kv.parse_or("rho", cfg.rho)?;
+        cfg.eval_every = kv.parse_or("eval_every", cfg.eval_every)?;
+        cfg.nodes = kv.parse_or("nodes", cfg.nodes)?;
+        cfg.gpus_per_node = kv.parse_or("gpus_per_node", cfg.gpus_per_node)?;
+        cfg.network = crate::comm::ProfileName::from_id(&kv.str_or("network", "infiniband"))?;
+        if let Some(v) = kv.get("tau_lr_decay_below") {
+            cfg.tau_lr_decay_below = Some(v.parse().map_err(anyhow::Error::msg)?);
+        }
+
+        if let Some(kind) = kv.get("optimizer.kind") {
+            cfg.optimizer.kind = OptimizerKind::from_id(kind)?;
+        }
+        cfg.optimizer.beta1 = kv.parse_or("optimizer.beta1", cfg.optimizer.beta1)?;
+        cfg.optimizer.beta2 = kv.parse_or("optimizer.beta2", cfg.optimizer.beta2)?;
+        cfg.optimizer.eps = kv.parse_or("optimizer.eps", cfg.optimizer.eps)?;
+        cfg.optimizer.weight_decay =
+            kv.parse_or("optimizer.weight_decay", cfg.optimizer.weight_decay)?;
+        cfg.optimizer.momentum = kv.parse_or("optimizer.momentum", cfg.optimizer.momentum)?;
+
+        cfg.lr.peak = kv.parse_or("lr.peak", cfg.lr.peak)?;
+        cfg.lr.min = kv.parse_or("lr.min", cfg.lr.min)?;
+        cfg.lr.warmup_iters = kv.parse_or("lr.warmup_iters", cfg.lr.warmup_iters)?;
+        cfg.lr.total_iters = kv.parse_or("lr.total_iters", cfg.steps)?;
+
+        match kv.get("gamma.kind") {
+            Some("constant") => {
+                cfg.gamma = GammaSchedule::Constant { gamma: kv.parse_or("gamma.gamma", 0.6)? };
+            }
+            Some("cosine") => {
+                cfg.gamma = GammaSchedule::Cosine {
+                    gamma_min: kv.parse_or("gamma.gamma_min", 0.2)?,
+                    decay_epochs: kv.parse_or("gamma.decay_epochs", cfg.epochs().max(1))?,
+                };
+            }
+            Some(other) => bail!("gamma.kind must be constant|cosine, got '{other}'"),
+            None => {}
+        }
+
+        cfg.data.n_train = kv.parse_or("data.n_train", cfg.data.n_train)?;
+        cfg.data.n_eval = kv.parse_or("data.n_eval", cfg.data.n_eval)?;
+        cfg.data.n_classes = kv.parse_or("data.n_classes", cfg.data.n_classes)?;
+        cfg.data.noise = kv.parse_or("data.noise", cfg.data.noise)?;
+        cfg.data.zipf_s = kv.parse_or("data.zipf_s", cfg.data.zipf_s)?;
+        cfg.data.seed = kv.parse_or("data.seed", cfg.data.seed)?;
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to the config-file format accepted by [`Self::from_file`].
+    pub fn to_file_string(&self) -> String {
+        let mut s = String::new();
+        use std::fmt::Write;
+        let _ = writeln!(s, "algorithm = \"{}\"", self.algorithm.id());
+        let _ = writeln!(s, "artifact_dir = \"{}\"", self.artifact_dir);
+        let _ = writeln!(s, "steps = {}", self.steps);
+        let _ = writeln!(s, "iters_per_epoch = {}", self.iters_per_epoch);
+        let _ = writeln!(s, "seed = {}", self.seed);
+        let _ = writeln!(s, "tau_init = {}", self.tau_init);
+        let _ = writeln!(s, "tau_lr = {}", self.tau_lr);
+        let _ = writeln!(s, "tau_min = {}", self.tau_min);
+        let _ = writeln!(s, "eps = {:e}", self.eps);
+        let _ = writeln!(s, "rho = {}", self.rho);
+        let _ = writeln!(s, "eval_every = {}", self.eval_every);
+        let _ = writeln!(s, "nodes = {}", self.nodes);
+        let _ = writeln!(s, "gpus_per_node = {}", self.gpus_per_node);
+        let _ = writeln!(s, "network = \"{}\"", self.network.id());
+        if let Some(v) = self.tau_lr_decay_below {
+            let _ = writeln!(s, "tau_lr_decay_below = {v}");
+        }
+        let _ = writeln!(s, "\n[optimizer]");
+        let _ = writeln!(s, "kind = \"{}\"", self.optimizer.kind.id());
+        let _ = writeln!(s, "beta1 = {}", self.optimizer.beta1);
+        let _ = writeln!(s, "beta2 = {}", self.optimizer.beta2);
+        let _ = writeln!(s, "eps = {:e}", self.optimizer.eps);
+        let _ = writeln!(s, "weight_decay = {}", self.optimizer.weight_decay);
+        let _ = writeln!(s, "momentum = {}", self.optimizer.momentum);
+        let _ = writeln!(s, "\n[lr]");
+        let _ = writeln!(s, "peak = {}", self.lr.peak);
+        let _ = writeln!(s, "min = {}", self.lr.min);
+        let _ = writeln!(s, "warmup_iters = {}", self.lr.warmup_iters);
+        let _ = writeln!(s, "total_iters = {}", self.lr.total_iters);
+        let _ = writeln!(s, "\n[gamma]");
+        match self.gamma {
+            GammaSchedule::Constant { gamma } => {
+                let _ = writeln!(s, "kind = \"constant\"");
+                let _ = writeln!(s, "gamma = {gamma}");
+            }
+            GammaSchedule::Cosine { gamma_min, decay_epochs } => {
+                let _ = writeln!(s, "kind = \"cosine\"");
+                let _ = writeln!(s, "gamma_min = {gamma_min}");
+                let _ = writeln!(s, "decay_epochs = {decay_epochs}");
+            }
+        }
+        let _ = writeln!(s, "\n[data]");
+        let _ = writeln!(s, "n_train = {}", self.data.n_train);
+        let _ = writeln!(s, "n_eval = {}", self.data.n_eval);
+        let _ = writeln!(s, "n_classes = {}", self.data.n_classes);
+        let _ = writeln!(s, "noise = {}", self.data.noise);
+        let _ = writeln!(s, "zipf_s = {}", self.data.zipf_s);
+        let _ = writeln!(s, "seed = {}", self.data.seed);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm_table1_mapping() {
+        assert_eq!(Algorithm::OpenClip.variant(), "mbcl");
+        assert_eq!(Algorithm::SogClr.variant(), "gcl");
+        assert_eq!(Algorithm::FastClipV1.variant(), "gcl");
+        assert_eq!(Algorithm::FastClipV0.variant(), "gcl_v0");
+        assert_eq!(Algorithm::FastClipV2.variant(), "rgcl_i");
+        assert_eq!(Algorithm::ISogClr.variant(), "rgcl_i");
+        assert_eq!(Algorithm::FastClipV3.variant(), "rgcl_g");
+        assert!(Algorithm::OpenClip.forces_gamma_one());
+        assert_eq!(Algorithm::FastClipV1.temp_rule(), TempRule::Constant);
+        assert_eq!(Algorithm::FastClipV2.temp_rule(), TempRule::Individual);
+        assert_eq!(Algorithm::FastClipV3.temp_rule(), TempRule::GlobalLearnable);
+        assert_eq!(Algorithm::OpenClip.comm_pattern(), CommPattern::OpenClip);
+        assert_eq!(Algorithm::FastClipV3.comm_pattern(), CommPattern::FastClip);
+    }
+
+    #[test]
+    fn gamma_cosine_schedule_shape() {
+        let s = GammaSchedule::Cosine { gamma_min: 0.2, decay_epochs: 10 };
+        assert!((s.value(0) - 1.0).abs() < 1e-6);
+        assert!((s.value(10) - 0.2).abs() < 1e-6);
+        assert!((s.value(100) - 0.2).abs() < 1e-6);
+        // halfway: γ = 0.5·(1+cos(π/2))·0.8 + 0.2 = 0.6
+        assert!((s.value(5) - 0.6).abs() < 1e-5);
+        // monotone decreasing
+        for e in 0..10 {
+            assert!(s.value(e) >= s.value(e + 1));
+        }
+    }
+
+    #[test]
+    fn lr_schedule_warmup_and_decay() {
+        let s = LrSchedule { peak: 1e-3, min: 0.0, warmup_iters: 10, total_iters: 110 };
+        assert!(s.value(0) > 0.0 && s.value(0) < 1e-3);
+        assert!((s.value(9) - 1e-3).abs() < 1e-9);
+        assert!((s.value(10) - 1e-3).abs() < 1e-9);
+        assert!(s.value(110) < 1e-8);
+        assert!(s.value(1000) < 1e-8); // clamped past the end
+    }
+
+    #[test]
+    fn config_roundtrip_file_format() {
+        let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", Algorithm::FastClipV3);
+        cfg.steps = 123;
+        cfg.optimizer.kind = OptimizerKind::Lion;
+        cfg.gamma = GammaSchedule::Cosine { gamma_min: 0.4, decay_epochs: 9 };
+        cfg.eps = 1e-6;
+        let text = cfg.to_file_string();
+        let kv = crate::util::KvFile::parse(&text).unwrap();
+        let back = TrainConfig::from_kv(&kv).unwrap();
+        assert_eq!(back.algorithm, cfg.algorithm);
+        assert_eq!(back.gamma, cfg.gamma);
+        assert_eq!(back.steps, cfg.steps);
+        assert_eq!(back.optimizer.kind, OptimizerKind::Lion);
+        assert!((back.eps - 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_kv_rejects_unknown_keys() {
+        let kv = crate::util::KvFile::parse("stepz = 100").unwrap();
+        assert!(TrainConfig::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn algorithm_id_roundtrip() {
+        for a in Algorithm::all() {
+            assert_eq!(Algorithm::from_id(a.id()).unwrap(), a);
+        }
+        assert!(Algorithm::from_id("nope").is_err());
+        for k in OptimizerKind::all() {
+            assert_eq!(OptimizerKind::from_id(k.id()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_values() {
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV1);
+        cfg.steps = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV1);
+        cfg.gamma = GammaSchedule::Constant { gamma: 1.5 };
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV1);
+        cfg.eps = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn defaults_follow_paper_table1() {
+        let v3 = TrainConfig::new("x", Algorithm::FastClipV3);
+        assert!(matches!(v3.gamma, GammaSchedule::Cosine { .. }));
+        assert!((v3.tau_init - 0.07).abs() < 1e-9);
+        let sog = TrainConfig::new("x", Algorithm::SogClr);
+        assert!(matches!(sog.gamma, GammaSchedule::Constant { gamma } if (gamma - 0.6).abs() < 1e-6));
+        let oc = TrainConfig::new("x", Algorithm::OpenClip);
+        assert!(matches!(oc.gamma, GammaSchedule::Constant { gamma } if gamma == 1.0));
+    }
+}

@@ -1,0 +1,20 @@
+//! The L3 coordinator — the paper's system contribution: distributed
+//! data-parallel CLIP training with compositional optimization.
+//!
+//! * [`Trainer`] drives K lockstep worker threads (trainer.rs);
+//! * [`state`] holds the per-shard u estimators and individual τ
+//!   (state.rs);
+//! * [`temperature`] implements the four τ-update rules of Proc. 5
+//!   (temperature.rs);
+//! * [`timing`] produces the Fig. 3 per-iteration breakdown (timing.rs).
+
+pub mod state;
+pub mod temperature;
+pub mod timing;
+
+mod trainer;
+
+pub use state::{IndividualTau, UState};
+pub use temperature::{GlobalTau, TauState};
+pub use timing::{charge_iteration, IterationVolumes, PerIterMs, TimeBreakdown, OVERLAP_FRACTION};
+pub use trainer::{EvalRecord, IterRecord, TrainResult, Trainer};

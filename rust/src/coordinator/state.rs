@@ -1,0 +1,198 @@
+//! Per-worker optimization state for the compositional (FCCO) algorithms:
+//! the `u` inner-estimator sequences of Eq. (1) and, for the individual-
+//! temperature algorithms (iSogCLR / FastCLIP-v2), per-sample learnable
+//! temperatures with per-sample Adam moments (Proc. 4/5 with λ = 0).
+//!
+//! Everything is indexed by *shard-local position* (see
+//! [`crate::data::ShardLoader`]): each worker owns the state of exactly the
+//! samples in its shard, which is what makes the paper's scalar ALL_GATHER
+//! communication pattern possible.
+
+/// The u1/u2 moving-average estimators for one worker's shard.
+#[derive(Debug, Clone)]
+pub struct UState {
+    u1: Vec<f32>,
+    u2: Vec<f32>,
+}
+
+impl UState {
+    /// u is initialized to 0 as in SogCLR: the first update with any γ
+    /// makes u^1 = γ·g, and γ=1 (OpenCLIP) gives u == g exactly.
+    pub fn new(shard_len: usize) -> Self {
+        Self { u1: vec![0.0; shard_len], u2: vec![0.0; shard_len] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.u1.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.u1.is_empty()
+    }
+
+    /// Read the (u1, u2) values for a batch of local positions.
+    pub fn gather(&self, positions: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        (
+            positions.iter().map(|&p| self.u1[p]).collect(),
+            positions.iter().map(|&p| self.u2[p]).collect(),
+        )
+    }
+
+    /// Write back updated values after `phase_g`.
+    pub fn scatter(&mut self, positions: &[usize], u1_new: &[f32], u2_new: &[f32]) {
+        assert_eq!(positions.len(), u1_new.len());
+        assert_eq!(positions.len(), u2_new.len());
+        for (i, &p) in positions.iter().enumerate() {
+            self.u1[p] = u1_new[i];
+            self.u2[p] = u2_new[i];
+        }
+    }
+
+    /// Mean of all u values (diagnostic: tracks how "learned" the data is).
+    pub fn mean_u(&self) -> (f32, f32) {
+        (crate::util::mean(&self.u1), crate::util::mean(&self.u2))
+    }
+}
+
+/// Per-sample learnable temperatures with per-sample Adam state
+/// (iSogCLR / FastCLIP-v2, Eq. 9). Two independent sets: τ1 (image side)
+/// and τ2 (text side).
+#[derive(Debug, Clone)]
+pub struct IndividualTau {
+    tau1: Vec<f32>,
+    tau2: Vec<f32>,
+    // Adam moments, per sample per side
+    m1: Vec<f32>,
+    v1: Vec<f32>,
+    m2: Vec<f32>,
+    v2: Vec<f32>,
+    t1: Vec<i32>,
+    t2: Vec<i32>,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    tau_min: f32,
+}
+
+impl IndividualTau {
+    pub fn new(shard_len: usize, tau_init: f32, tau_min: f32) -> Self {
+        Self {
+            tau1: vec![tau_init; shard_len],
+            tau2: vec![tau_init; shard_len],
+            m1: vec![0.0; shard_len],
+            v1: vec![0.0; shard_len],
+            m2: vec![0.0; shard_len],
+            v2: vec![0.0; shard_len],
+            t1: vec![0; shard_len],
+            t2: vec![0; shard_len],
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            tau_min,
+        }
+    }
+
+    pub fn gather(&self, positions: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        (
+            positions.iter().map(|&p| self.tau1[p]).collect(),
+            positions.iter().map(|&p| self.tau2[p]).collect(),
+        )
+    }
+
+    /// Stochastic coordinate Adam update (Proc. 5, "individual τ" branch)
+    /// for the samples in the batch, clamped at τ ≥ τ_min.
+    pub fn update(&mut self, positions: &[usize], g1: &[f32], g2: &[f32], lr: f32) {
+        assert_eq!(positions.len(), g1.len());
+        assert_eq!(positions.len(), g2.len());
+        for (i, &p) in positions.iter().enumerate() {
+            self.tau1[p] = adam_coord(
+                self.tau1[p], g1[i], lr,
+                &mut self.m1[p], &mut self.v1[p], &mut self.t1[p],
+                self.beta1, self.beta2, self.eps,
+            )
+            .max(self.tau_min);
+            self.tau2[p] = adam_coord(
+                self.tau2[p], g2[i], lr,
+                &mut self.m2[p], &mut self.v2[p], &mut self.t2[p],
+                self.beta1, self.beta2, self.eps,
+            )
+            .max(self.tau_min);
+        }
+    }
+
+    pub fn mean_tau(&self) -> f32 {
+        0.5 * (crate::util::mean(&self.tau1) + crate::util::mean(&self.tau2))
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn adam_coord(
+    x: f32, g: f32, lr: f32,
+    m: &mut f32, v: &mut f32, t: &mut i32,
+    b1: f32, b2: f32, eps: f32,
+) -> f32 {
+    *t += 1;
+    *m = b1 * *m + (1.0 - b1) * g;
+    *v = b2 * *v + (1.0 - b2) * g * g;
+    let mh = *m / (1.0 - b1.powi(*t));
+    let vh = *v / (1.0 - b2.powi(*t));
+    x - lr * mh / (vh.sqrt() + eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ustate_gather_scatter_roundtrip() {
+        let mut s = UState::new(10);
+        assert_eq!(s.gather(&[3, 7]).0, vec![0.0, 0.0]);
+        s.scatter(&[3, 7], &[1.5, 2.5], &[-1.0, -2.0]);
+        let (u1, u2) = s.gather(&[7, 3]);
+        assert_eq!(u1, vec![2.5, 1.5]);
+        assert_eq!(u2, vec![-2.0, -1.0]);
+        // untouched positions stay zero
+        assert_eq!(s.gather(&[0]).0, vec![0.0]);
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn ustate_mean_tracks_values() {
+        let mut s = UState::new(4);
+        s.scatter(&[0, 1, 2, 3], &[1.0, 2.0, 3.0, 4.0], &[0.0; 4]);
+        let (m1, m2) = s.mean_u();
+        assert!((m1 - 2.5).abs() < 1e-6);
+        assert_eq!(m2, 0.0);
+    }
+
+    #[test]
+    fn individual_tau_moves_against_gradient_and_clamps() {
+        let mut t = IndividualTau::new(5, 0.03, 0.005);
+        // positive gradient pushes tau down toward the clamp
+        for _ in 0..2000 {
+            t.update(&[1], &[1.0], &[1.0], 1e-3);
+        }
+        let (t1, t2) = t.gather(&[1]);
+        assert!((t1[0] - 0.005).abs() < 1e-6, "clamped at tau_min, got {}", t1[0]);
+        assert!((t2[0] - 0.005).abs() < 1e-6);
+        // untouched samples keep the init
+        assert_eq!(t.gather(&[0]).0, vec![0.03]);
+    }
+
+    #[test]
+    fn individual_tau_sides_independent() {
+        let mut t = IndividualTau::new(3, 0.05, 0.001);
+        t.update(&[2], &[1.0], &[-1.0], 1e-2);
+        let (t1, t2) = t.gather(&[2]);
+        assert!(t1[0] < 0.05, "tau1 decreases on positive grad");
+        assert!(t2[0] > 0.05, "tau2 increases on negative grad");
+    }
+
+    #[test]
+    fn mean_tau_reflects_updates() {
+        let mut t = IndividualTau::new(2, 0.03, 0.001);
+        let before = t.mean_tau();
+        t.update(&[0, 1], &[-1.0, -1.0], &[-1.0, -1.0], 1e-2);
+        assert!(t.mean_tau() > before);
+    }
+}

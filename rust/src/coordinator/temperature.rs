@@ -1,0 +1,183 @@
+//! Temperature update rules — Proc. 5 of the paper.
+//!
+//! * constant (SogCLR / FastCLIP-v1): τ never changes;
+//! * global learnable (OpenCLIP/MBCL grad, FastCLIP-v0 via Eq. 8,
+//!   FastCLIP-v3 via Eq. 10): the workers' scalar τ-gradient contributions
+//!   are SUM-all-reduced, then a scalar AdamW (λ=0) step is applied
+//!   identically on every worker, clamped at τ ≥ τ_min;
+//! * individual learnable (iSogCLR / FastCLIP-v2, Eq. 9): stochastic
+//!   coordinate Adam updates on the per-sample temperatures held in
+//!   [`super::state::IndividualTau`].
+//!
+//! FastCLIP-v3 additionally decays the τ learning rate to 1/3 of its value
+//! once τ drops below a threshold (Appendix B).
+
+use crate::config::TrainConfig;
+use crate::optim::ScalarAdam;
+
+use super::state::IndividualTau;
+
+/// Global-τ updater owned by each worker (deterministic: every worker
+/// applies the same update to its replica).
+#[derive(Debug, Clone, Copy)]
+pub struct GlobalTau {
+    pub tau: f32,
+    adam: ScalarAdam,
+    lr: f32,
+    tau_min: f32,
+    /// Some(threshold): decay lr to 1/3 once tau < threshold (v3 rule)
+    decay_below: Option<f32>,
+    decayed: bool,
+}
+
+impl GlobalTau {
+    pub fn new(cfg: &TrainConfig) -> Self {
+        Self {
+            tau: cfg.tau_init,
+            adam: ScalarAdam::default(),
+            lr: cfg.tau_lr,
+            tau_min: cfg.tau_min,
+            decay_below: cfg.tau_lr_decay_below,
+            decayed: false,
+        }
+    }
+
+    /// Apply one step given the all-reduced τ-gradient.
+    pub fn step(&mut self, grad: f32) {
+        self.tau = self.adam.step(self.tau, grad, self.lr).max(self.tau_min);
+        if let Some(th) = self.decay_below {
+            if !self.decayed && self.tau < th {
+                self.lr /= 3.0;
+                self.decayed = true;
+            }
+        }
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+}
+
+/// The per-worker temperature state for whichever rule the algorithm uses.
+pub enum TauState {
+    Constant(f32),
+    Global(GlobalTau),
+    Individual(IndividualTau),
+}
+
+impl TauState {
+    pub fn new(cfg: &TrainConfig, shard_len: usize) -> Self {
+        use crate::config::TempRule;
+        match cfg.algorithm.temp_rule() {
+            TempRule::Constant => TauState::Constant(cfg.tau_init),
+            TempRule::GlobalLearnable => TauState::Global(GlobalTau::new(cfg)),
+            TempRule::Individual => {
+                TauState::Individual(IndividualTau::new(shard_len, cfg.tau_init, cfg.tau_min))
+            }
+        }
+    }
+
+    /// The scalar τ fed to global-τ step graphs (panics for individual —
+    /// those graphs take gathered vectors instead).
+    pub fn global_tau(&self) -> f32 {
+        match self {
+            TauState::Constant(t) => *t,
+            TauState::Global(g) => g.tau,
+            TauState::Individual(_) => panic!("individual tau has no global value"),
+        }
+    }
+
+    /// Mean τ for logging.
+    pub fn mean_tau(&self) -> f32 {
+        match self {
+            TauState::Constant(t) => *t,
+            TauState::Global(g) => g.tau,
+            TauState::Individual(i) => i.mean_tau(),
+        }
+    }
+
+    /// (τ1, τ2) row vectors for a batch of local positions — what
+    /// `phase_g` and the rgcl_i step graph consume.
+    pub fn rows(&self, positions: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        match self {
+            TauState::Constant(t) => {
+                (vec![*t; positions.len()], vec![*t; positions.len()])
+            }
+            TauState::Global(g) => {
+                (vec![g.tau; positions.len()], vec![g.tau; positions.len()])
+            }
+            TauState::Individual(i) => i.gather(positions),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algorithm, TrainConfig};
+
+    fn cfg(algo: Algorithm) -> TrainConfig {
+        TrainConfig::new("x", algo)
+    }
+
+    #[test]
+    fn constant_rule_never_moves() {
+        let c = cfg(Algorithm::FastClipV1);
+        let t = TauState::new(&c, 16);
+        assert!(matches!(t, TauState::Constant(v) if (v - c.tau_init).abs() < 1e-9));
+    }
+
+    #[test]
+    fn global_tau_descends_and_clamps() {
+        let mut c = cfg(Algorithm::FastClipV3);
+        c.tau_init = 0.07;
+        c.tau_lr = 1e-2;
+        c.tau_min = 0.01;
+        c.tau_lr_decay_below = None;
+        let mut g = GlobalTau::new(&c);
+        for _ in 0..200 {
+            g.step(1.0);
+        }
+        assert!((g.tau - 0.01).abs() < 1e-6, "clamped, got {}", g.tau);
+    }
+
+    #[test]
+    fn v3_lr_decays_once_below_threshold() {
+        let mut c = cfg(Algorithm::FastClipV3);
+        c.tau_init = 0.07;
+        c.tau_lr = 9e-3;
+        c.tau_min = 0.005;
+        c.tau_lr_decay_below = Some(0.03);
+        let mut g = GlobalTau::new(&c);
+        let lr0 = g.lr();
+        while g.tau >= 0.03 {
+            g.step(1.0);
+        }
+        g.step(1.0);
+        assert!((g.lr() - lr0 / 3.0).abs() < 1e-9, "decayed once");
+        // and it does not decay again
+        for _ in 0..100 {
+            g.step(1.0);
+        }
+        assert!((g.lr() - lr0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rows_shapes_match_positions() {
+        let c = cfg(Algorithm::FastClipV3);
+        let t = TauState::new(&c, 8);
+        let (r1, r2) = t.rows(&[0, 3, 5]);
+        assert_eq!(r1.len(), 3);
+        assert_eq!(r1, r2);
+        assert!((r1[0] - c.tau_init).abs() < 1e-9);
+    }
+
+    #[test]
+    fn individual_state_selected_for_v2() {
+        let c = cfg(Algorithm::FastClipV2);
+        let t = TauState::new(&c, 8);
+        assert!(matches!(t, TauState::Individual(_)));
+        let c = cfg(Algorithm::ISogClr);
+        assert!(matches!(TauState::new(&c, 8), TauState::Individual(_)));
+    }
+}

@@ -1,0 +1,266 @@
+//! Per-iteration time breakdown — the quantities of Fig. 3 / Tables 15–22:
+//! computation, communication (split into the part overlapped with
+//! computation and "pure" blocking communication), and others.
+//!
+//! Computation and "others" are *measured* on this host; communication is
+//! *modeled* by the α–β interconnect cost model over the configured
+//! topology (threads on one host are not a fabric — see DESIGN.md §1).
+//! The split follows DDP semantics: the parameter-gradient ALL_REDUCE is
+//! bucketed and overlaps with the backward pass, so up to
+//! [`OVERLAP_FRACTION`] of the step computation can hide it; the feature /
+//! u gathers (and OpenCLIP's REDUCE_SCATTER) happen between forward and
+//! backward and are blocking.
+
+use crate::comm::{Collective, CostModel};
+use crate::config::CommPattern;
+
+/// Fraction of the `step` computation available to hide the gradient
+/// ALL_REDUCE (the backward pass; forward cannot overlap because the
+/// gathers must complete first).
+pub const OVERLAP_FRACTION: f64 = 0.6;
+
+/// Cumulative timing for one worker, in seconds.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct TimeBreakdown {
+    /// measured: encode + phase_g + step executions
+    pub compute_s: f64,
+    /// modeled: total communication time (overlapped + pure)
+    pub comm_total_s: f64,
+    /// modeled: communication hidden behind backward compute
+    pub comm_overlap_s: f64,
+    /// modeled: blocking communication on the critical path
+    pub comm_pure_s: f64,
+    /// measured: data loading, optimizer, state bookkeeping
+    pub others_s: f64,
+    pub iterations: u64,
+}
+
+impl TimeBreakdown {
+    /// Modeled per-iteration wall time: compute + pure comm + others
+    /// (overlapped communication is hidden by definition).
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.comm_pure_s + self.others_s
+    }
+
+    pub fn per_iter_ms(&self) -> PerIterMs {
+        let n = self.iterations.max(1) as f64;
+        PerIterMs {
+            total: self.total_s() / n * 1e3,
+            compute: self.compute_s / n * 1e3,
+            comm_total: self.comm_total_s / n * 1e3,
+            comm_pure: self.comm_pure_s / n * 1e3,
+            comm_overlap: self.comm_overlap_s / n * 1e3,
+            others: self.others_s / n * 1e3,
+        }
+    }
+
+    pub fn merge(&mut self, other: &TimeBreakdown) {
+        self.compute_s += other.compute_s;
+        self.comm_total_s += other.comm_total_s;
+        self.comm_overlap_s += other.comm_overlap_s;
+        self.comm_pure_s += other.comm_pure_s;
+        self.others_s += other.others_s;
+        self.iterations += other.iterations;
+    }
+}
+
+/// Per-iteration milliseconds, the unit of Fig. 3.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct PerIterMs {
+    pub total: f64,
+    pub compute: f64,
+    pub comm_total: f64,
+    pub comm_pure: f64,
+    pub comm_overlap: f64,
+    pub others: f64,
+}
+
+/// The communication volumes of one training iteration (§4 of the paper),
+/// turned into modeled time by [`charge_iteration`].
+#[derive(Debug, Clone, Copy)]
+pub struct IterationVolumes {
+    /// ALL_GATHER of the two feature matrices: per-rank payload bytes
+    pub feature_gather_bytes: usize,
+    /// ALL_GATHER of the u (and, for rgcl_i, τ) scalars: per-rank bytes.
+    /// Zero for OpenCLIP (no u sequence).
+    pub scalar_gather_bytes: usize,
+    /// OpenCLIP only: REDUCE_SCATTER of per-pair gradient terms,
+    /// O(K·B·d) total buffer bytes
+    pub reduce_scatter_bytes: usize,
+    /// ALL_REDUCE of the parameter gradient: buffer bytes (P × 4)
+    pub grad_reduce_bytes: usize,
+}
+
+impl IterationVolumes {
+    /// The volumes implied by the algorithm's communication pattern.
+    ///
+    /// `n_scalar_vectors` is the number of per-sample scalar vectors
+    /// gathered per iteration: 2 for u1/u2 (plus 2 more when the algorithm
+    /// gathers per-sample temperatures, i.e. rgcl_i).
+    pub fn for_pattern(
+        pattern: CommPattern,
+        local_batch: usize,
+        world: usize,
+        d_embed: usize,
+        n_params: usize,
+        n_scalar_vectors: usize,
+    ) -> Self {
+        let f4 = 4; // f32 bytes
+        let feature_gather_bytes = 2 * local_batch * d_embed * f4;
+        match pattern {
+            CommPattern::FastClip => IterationVolumes {
+                feature_gather_bytes,
+                scalar_gather_bytes: n_scalar_vectors * local_batch * f4,
+                reduce_scatter_bytes: 0,
+                grad_reduce_bytes: n_params * f4,
+            },
+            CommPattern::OpenClip => IterationVolumes {
+                feature_gather_bytes,
+                scalar_gather_bytes: 0,
+                // per-pair gradient terms for both loss sides: the full
+                // K·B×d matrices get reduce-scattered (§4 "Difference from
+                // OpenCLIP")
+                reduce_scatter_bytes: 2 * world * local_batch * d_embed * f4,
+                grad_reduce_bytes: n_params * f4,
+            },
+        }
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.feature_gather_bytes
+            + self.scalar_gather_bytes
+            + self.reduce_scatter_bytes
+            + self.grad_reduce_bytes
+    }
+}
+
+/// Charge one iteration's communication to the breakdown. `step_compute_s`
+/// is the measured step-graph time of this iteration (the overlap budget).
+pub fn charge_iteration(
+    bd: &mut TimeBreakdown,
+    model: &CostModel,
+    vol: &IterationVolumes,
+    step_compute_s: f64,
+) {
+    let blocking = model.time(Collective::AllGather, vol.feature_gather_bytes)
+        + if vol.scalar_gather_bytes > 0 {
+            model.time(Collective::AllGather, vol.scalar_gather_bytes)
+        } else {
+            0.0
+        }
+        + if vol.reduce_scatter_bytes > 0 {
+            model.time(Collective::ReduceScatter, vol.reduce_scatter_bytes)
+        } else {
+            0.0
+        };
+    let grad = model.time(Collective::AllReduce, vol.grad_reduce_bytes);
+    let overlap = grad.min(OVERLAP_FRACTION * step_compute_s);
+
+    bd.comm_total_s += blocking + grad;
+    bd.comm_overlap_s += overlap;
+    bd.comm_pure_s += blocking + (grad - overlap);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ProfileName;
+
+    fn model(nodes: usize) -> CostModel {
+        CostModel::new(ProfileName::InfiniBand.profile(), nodes, 4)
+    }
+
+    fn volumes(pattern: CommPattern) -> IterationVolumes {
+        IterationVolumes::for_pattern(pattern, 128, 32, 512, 20_000_000, 2)
+    }
+
+    #[test]
+    fn openclip_moves_more_bytes() {
+        let oc = volumes(CommPattern::OpenClip);
+        let fc = volumes(CommPattern::FastClip);
+        assert!(oc.total_bytes() > fc.total_bytes());
+        // the scalar gather is O(K·B) vs O(K·B·d): tiny
+        assert!(fc.scalar_gather_bytes * 100 < oc.reduce_scatter_bytes);
+        assert_eq!(oc.scalar_gather_bytes, 0);
+        assert_eq!(fc.reduce_scatter_bytes, 0);
+    }
+
+    #[test]
+    fn fastclip_comm_time_beats_openclip() {
+        // the paper's Fig. 3 claim in model terms, at every node count
+        for nodes in [2, 4, 8] {
+            let m = model(nodes);
+            let mut oc = TimeBreakdown::default();
+            let mut fc = TimeBreakdown::default();
+            charge_iteration(&mut oc, &m, &volumes(CommPattern::OpenClip), 0.5);
+            charge_iteration(&mut fc, &m, &volumes(CommPattern::FastClip), 0.5);
+            assert!(
+                oc.comm_pure_s > fc.comm_pure_s,
+                "nodes={nodes}: oc {} fc {}",
+                oc.comm_pure_s,
+                fc.comm_pure_s
+            );
+            assert!(oc.comm_total_s > fc.comm_total_s);
+        }
+    }
+
+    #[test]
+    fn comm_gap_grows_with_nodes() {
+        let gap = |nodes: usize| {
+            let m = model(nodes);
+            let mut oc = TimeBreakdown::default();
+            let mut fc = TimeBreakdown::default();
+            charge_iteration(&mut oc, &m, &volumes(CommPattern::OpenClip), 0.5);
+            charge_iteration(&mut fc, &m, &volumes(CommPattern::FastClip), 0.5);
+            oc.comm_pure_s - fc.comm_pure_s
+        };
+        assert!(gap(4) > gap(2));
+        assert!(gap(8) > gap(4));
+    }
+
+    #[test]
+    fn overlap_capped_by_backward() {
+        let m = model(8);
+        let mut bd = TimeBreakdown::default();
+        // zero step compute: nothing can be hidden
+        charge_iteration(&mut bd, &m, &volumes(CommPattern::FastClip), 0.0);
+        assert_eq!(bd.comm_overlap_s, 0.0);
+        assert!((bd.comm_pure_s - bd.comm_total_s).abs() < 1e-12);
+
+        // huge step compute: the whole grad all-reduce hides
+        let mut bd2 = TimeBreakdown::default();
+        charge_iteration(&mut bd2, &m, &volumes(CommPattern::FastClip), 1e6);
+        let grad = m.time(Collective::AllReduce, volumes(CommPattern::FastClip).grad_reduce_bytes);
+        assert!((bd2.comm_overlap_s - grad).abs() < 1e-9);
+    }
+
+    #[test]
+    fn totals_and_per_iter() {
+        let mut bd = TimeBreakdown {
+            compute_s: 2.0,
+            comm_total_s: 1.0,
+            comm_overlap_s: 0.4,
+            comm_pure_s: 0.6,
+            others_s: 0.4,
+            iterations: 2,
+        };
+        assert!((bd.total_s() - 3.0).abs() < 1e-12);
+        let ms = bd.per_iter_ms();
+        assert!((ms.total - 1500.0).abs() < 1e-9);
+        assert!((ms.compute - 1000.0).abs() < 1e-9);
+        let other = bd;
+        bd.merge(&other);
+        assert_eq!(bd.iterations, 4);
+        assert!((bd.compute_s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_rank_has_zero_comm() {
+        let m = CostModel::new(ProfileName::InfiniBand.profile(), 1, 1);
+        let mut bd = TimeBreakdown::default();
+        let vol = IterationVolumes::for_pattern(CommPattern::FastClip, 8, 1, 64, 1000, 2);
+        charge_iteration(&mut bd, &m, &vol, 1.0);
+        assert_eq!(bd.comm_total_s, 0.0);
+        assert_eq!(bd.comm_pure_s, 0.0);
+    }
+}

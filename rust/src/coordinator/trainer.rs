@@ -1,0 +1,457 @@
+//! The distributed trainer: K worker threads executing the FastCLIP
+//! iteration of DESIGN.md §4 in lockstep over in-process collectives.
+//!
+//! Per iteration, each worker k:
+//!   1. loads its local batch and runs `encode`                  (compute)
+//!   2. ALL_GATHERs the embeddings — O(K·B·d)                    (comm)
+//!   3. runs `phase_g` (Eq. 1 u-update) and writes u back        (compute)
+//!   4. ALL_GATHERs the updated u scalars — O(K·B)               (comm)
+//!      [OpenCLIP instead pays a REDUCE_SCATTER of feature-sized
+//!       gradient terms here; charged to the cost model]
+//!   5. runs `step_<variant>` → gradient contribution            (compute)
+//!   6. SUM-ALL_REDUCEs gradient + loss + τ-gradient — O(P)      (comm)
+//!   7. applies the optimizer, temperature rule and schedules    (others)
+//!
+//! Numerics are exact (bytes really move between threads); communication
+//! *time* is charged by the α–β cost model over the configured topology
+//! (`timing.rs`). Parameters are replicated: every worker applies the
+//! identical update to its replica, so they stay bitwise equal.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::comm::{CommWorld, CostModel, WorkerComm};
+use crate::config::TrainConfig;
+use crate::data::{Dataset, ShardLoader};
+use crate::eval::{evaluate, EvalSummary};
+use crate::runtime::{Manifest, TauGrads, TauInput, WorkerRuntime};
+
+use super::state::UState;
+use super::temperature::TauState;
+use super::timing::{charge_iteration, IterationVolumes, TimeBreakdown};
+
+/// One logged training iteration (rank-0 view; loss is the global mean).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterRecord {
+    pub step: u32,
+    pub epoch: u32,
+    pub loss: f32,
+    pub gamma: f32,
+    pub lr: f32,
+    pub tau: f32,
+}
+
+/// A periodic evaluation snapshot.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub step: u32,
+    pub summary: EvalSummary,
+}
+
+/// Everything a finished run reports.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub algorithm: &'static str,
+    pub history: Vec<IterRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub final_eval: EvalSummary,
+    /// rank-0 timing (workers are symmetric)
+    pub timing: TimeBreakdown,
+    /// real bytes moved through the in-process collectives, all ranks
+    pub comm_bytes: u64,
+    /// modeled communication volume per iteration (bytes, one worker)
+    pub modeled_iter_bytes: usize,
+    pub final_tau: f32,
+    pub final_params: Vec<f32>,
+    pub wall_s: f64,
+}
+
+impl TrainResult {
+    pub fn final_loss(&self) -> f32 {
+        self.history.last().map(|r| r.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Mean loss over the last `n` iterations (smoother than final_loss).
+    pub fn tail_loss(&self, n: usize) -> f32 {
+        let tail: Vec<f32> =
+            self.history.iter().rev().take(n).map(|r| r.loss).collect();
+        crate::util::mean(&tail)
+    }
+}
+
+/// The distributed trainer. Construct with a validated [`TrainConfig`];
+/// [`Trainer::run`] blocks until the run completes and returns the result.
+pub struct Trainer {
+    cfg: TrainConfig,
+    manifest: Manifest,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let manifest = Manifest::load(&cfg.artifact_dir)
+            .with_context(|| format!("loading artifact bundle {}", cfg.artifact_dir))?;
+        let variant = cfg.algorithm.variant();
+        ensure!(
+            manifest.variants.iter().any(|v| v == variant),
+            "bundle {} lacks step_{variant}; rebuild with `make artifacts`",
+            cfg.artifact_dir
+        );
+        ensure!(
+            cfg.data.n_train / manifest.k_workers >= manifest.local_batch,
+            "dataset too small: {} samples over {} workers < local batch {}",
+            cfg.data.n_train,
+            manifest.k_workers,
+            manifest.local_batch
+        );
+        Ok(Trainer { cfg, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn run(&self) -> Result<TrainResult> {
+        let t0 = Instant::now();
+        let k = self.manifest.k_workers;
+        let world = CommWorld::new(k);
+        let cfg = Arc::new(self.cfg.clone());
+        let dataset = Arc::new(Dataset::new(cfg.data, self.manifest.model_dims()));
+
+        let mut joins = Vec::with_capacity(k);
+        for rank in 0..k {
+            let comm = world.handle(rank);
+            let cfg = Arc::clone(&cfg);
+            let dataset = Arc::clone(&dataset);
+            let manifest = self.manifest.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("worker-{rank}"))
+                    .spawn(move || worker_loop(rank, comm, cfg, dataset, manifest))
+                    .expect("spawn worker"),
+            );
+        }
+
+        let mut rank0: Option<WorkerOutput> = None;
+        for (rank, j) in joins.into_iter().enumerate() {
+            let out = j
+                .join()
+                .map_err(|_| anyhow::anyhow!("worker {rank} panicked"))?
+                .with_context(|| format!("worker {rank} failed"))?;
+            if rank == 0 {
+                rank0 = Some(out);
+            }
+        }
+        let out = rank0.expect("rank 0 output");
+        let (ag, ar, bc, _ops) = world.stats.snapshot();
+
+        Ok(TrainResult {
+            algorithm: self.cfg.algorithm.name(),
+            history: out.history,
+            evals: out.evals,
+            final_eval: out.final_eval.expect("rank 0 evaluates at end"),
+            timing: out.timing,
+            comm_bytes: ag + ar + bc,
+            modeled_iter_bytes: out.modeled_iter_bytes,
+            final_tau: out.final_tau,
+            final_params: out.params,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+struct WorkerOutput {
+    history: Vec<IterRecord>,
+    evals: Vec<EvalRecord>,
+    final_eval: Option<EvalSummary>,
+    timing: TimeBreakdown,
+    modeled_iter_bytes: usize,
+    final_tau: f32,
+    params: Vec<f32>,
+}
+
+fn worker_loop(
+    rank: usize,
+    comm: WorkerComm,
+    cfg: Arc<TrainConfig>,
+    dataset: Arc<Dataset>,
+    manifest: Manifest,
+) -> Result<WorkerOutput> {
+    let variant = cfg.algorithm.variant();
+    let mut rt = WorkerRuntime::load(&manifest, Some(variant))?;
+    let k = comm.world_size();
+    let bl = manifest.local_batch;
+    let (d, p) = (manifest.model.d_embed, manifest.n_params);
+    let dims = manifest.model_dims();
+    let img_dim = dims.v_patches * dims.v_patch_dim;
+    let individual_tau = variant == "rgcl_i";
+
+    let mut loader = ShardLoader::new(cfg.data.n_train, rank, k, bl, cfg.seed);
+    let mut ustate = UState::new(loader.shard_len());
+    let mut tau = TauState::new(&cfg, loader.shard_len());
+    let mut optimizer = crate::optim::build(&cfg.optimizer, p, manifest.segments());
+    let mut params = manifest.load_init_params()?;
+
+    // communication accounting: modeled topology (cfg.nodes×gpus_per_node)
+    // may exceed the thread count — volumes and α–β times follow the model
+    let cost = CostModel::new(cfg.network.profile(), cfg.nodes, cfg.gpus_per_node);
+    let n_scalar_vectors = if individual_tau { 4 } else { 2 };
+    let volumes = IterationVolumes::for_pattern(
+        cfg.algorithm.comm_pattern(),
+        bl,
+        cost.world_size(),
+        d,
+        p,
+        n_scalar_vectors,
+    );
+
+    let mut timing = TimeBreakdown::default();
+    let mut history = Vec::new();
+    let mut evals = Vec::new();
+    let mut images = vec![0.0f32; bl * img_dim];
+    let mut texts = vec![0i32; bl * dims.t_len];
+
+    for t in 0..cfg.steps {
+        let epoch = t / cfg.iters_per_epoch.max(1);
+        let gamma = if cfg.algorithm.forces_gamma_one() { 1.0 } else { cfg.gamma.value(epoch) };
+        let lr = cfg.lr.value(t);
+        let compute_before = runtime_compute_s(&rt);
+        let step_before = rt.timers.step_s;
+
+        // 1. local batch ----------------------------------------- (others)
+        let t_other = Instant::now();
+        let batch = loader.next_batch();
+        dataset.fill_batch(&batch.global_indices, &mut images, &mut texts);
+        let mut others_s = t_other.elapsed().as_secs_f64();
+
+        // 2. encode + gather features ------------------- (compute + comm)
+        let (e1, e2) = rt.encode(&params, &images, &texts)?;
+        let e1g = comm.all_gather(&e1);
+        let e2g = comm.all_gather(&e2);
+
+        // 3. phase_g: Eq. (1) u update ---------------------------- (compute)
+        let t_other = Instant::now();
+        let (u1, u2) = ustate.gather(&batch.local_positions);
+        let (tau1_rows, tau2_rows) = tau.rows(&batch.local_positions);
+        others_s += t_other.elapsed().as_secs_f64();
+        let offset = rank * bl;
+        let (_g1, _g2, u1n, u2n) =
+            rt.phase_g(&e1g, &e2g, offset, &u1, &u2, &tau1_rows, &tau2_rows, gamma)?;
+        let t_other = Instant::now();
+        ustate.scatter(&batch.local_positions, &u1n, &u2n);
+        others_s += t_other.elapsed().as_secs_f64();
+
+        // 4. gather the scalar state ---------------------------------- (comm)
+        let u1g = comm.all_gather(&u1n);
+        let u2g = comm.all_gather(&u2n);
+        let tau_input_vecs; // keeps gathered τ alive across the step call
+        let tau_input = if individual_tau {
+            let t1g = comm.all_gather(&tau1_rows);
+            let t2g = comm.all_gather(&tau2_rows);
+            tau_input_vecs = (t1g, t2g);
+            TauInput::Individual { tau1g: &tau_input_vecs.0, tau2g: &tau_input_vecs.1 }
+        } else {
+            TauInput::Global(tau.global_tau())
+        };
+
+        // 5. gradient step ------------------------------------------ (compute)
+        let out = rt.step(
+            variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, offset,
+            cfg.eps, cfg.rho, tau_input,
+        )?;
+
+        // 6. reduce gradient + scalars --------------------------------- (comm)
+        let mut grad = out.grad;
+        comm.all_reduce_sum(&mut grad);
+        let mut scalars = [out.loss, 0.0];
+        if let TauGrads::Global(g) = out.tau {
+            scalars[1] = g;
+        }
+        comm.all_reduce_sum(&mut scalars);
+        let (loss, tau_grad) = (scalars[0], scalars[1]);
+
+        // 7. optimizer + temperature + schedules ---------------------- (others)
+        let t_other = Instant::now();
+        optimizer.step(&mut params, &grad, lr);
+        match (&mut tau, out.tau) {
+            (TauState::Constant(_), _) => {}
+            (TauState::Global(g), TauGrads::Global(_)) => g.step(tau_grad),
+            (TauState::Individual(it), TauGrads::Individual { tau1, tau2 }) => {
+                it.update(&batch.local_positions, &tau1, &tau2, cfg.tau_lr);
+            }
+            _ => unreachable!("tau rule / grad kind mismatch"),
+        }
+        others_s += t_other.elapsed().as_secs_f64();
+
+        // timing bookkeeping
+        let step_compute = rt.timers.step_s - step_before;
+        timing.compute_s += runtime_compute_s(&rt) - compute_before;
+        timing.others_s += others_s;
+        timing.iterations += 1;
+        charge_iteration(&mut timing, &cost, &volumes, step_compute);
+
+        if rank == 0 {
+            history.push(IterRecord { step: t, epoch, loss, gamma, lr, tau: tau.mean_tau() });
+        }
+
+        // periodic evaluation (rank 0 computes; all ranks synchronize)
+        if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 && t + 1 < cfg.steps {
+            comm.barrier();
+            if rank == 0 {
+                let summary = evaluate(&mut rt, &dataset, &params)?;
+                evals.push(EvalRecord { step: t + 1, summary });
+            }
+            comm.barrier();
+        }
+    }
+
+    // final evaluation on rank 0
+    comm.barrier();
+    let final_eval = if rank == 0 {
+        let summary = evaluate(&mut rt, &dataset, &params)?;
+        evals.push(EvalRecord { step: cfg.steps, summary: summary.clone() });
+        Some(summary)
+    } else {
+        None
+    };
+    comm.barrier();
+
+    Ok(WorkerOutput {
+        history,
+        evals,
+        final_eval,
+        timing,
+        modeled_iter_bytes: volumes.total_bytes(),
+        final_tau: tau.mean_tau(),
+        params,
+    })
+}
+
+fn runtime_compute_s(rt: &WorkerRuntime) -> f64 {
+    rt.timers.encode_s + rt.timers.phase_g_s + rt.timers.step_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algorithm, DataConfig, GammaSchedule};
+
+    const BUNDLE: &str = "artifacts/tiny_k2_b8";
+
+    fn available() -> bool {
+        std::path::Path::new(BUNDLE).join("manifest.json").exists()
+    }
+
+    fn quick_cfg(algo: Algorithm, steps: u32) -> TrainConfig {
+        let mut cfg = TrainConfig::new(BUNDLE, algo);
+        cfg.steps = steps;
+        cfg.iters_per_epoch = 4;
+        cfg.data = DataConfig { n_train: 64, n_eval: 32, n_classes: 8, ..DataConfig::default() };
+        cfg.lr.warmup_iters = 2;
+        cfg.lr.total_iters = steps;
+        cfg
+    }
+
+    #[test]
+    fn v3_short_run_loss_decreases() {
+        if !available() {
+            eprintln!("skipping: {BUNDLE} not built");
+            return;
+        }
+        let cfg = quick_cfg(Algorithm::FastClipV3, 30);
+        let r = Trainer::new(cfg).unwrap().run().unwrap();
+        assert_eq!(r.history.len(), 30);
+        let first5 = crate::util::mean(&r.history[..5].iter().map(|h| h.loss).collect::<Vec<_>>());
+        let last5 = r.tail_loss(5);
+        assert!(
+            last5 < first5,
+            "loss should decrease: first {first5} last {last5}"
+        );
+        assert!(r.final_tau > 0.0);
+        assert_eq!(r.timing.iterations, 30);
+        assert!(r.comm_bytes > 0, "K=2: bytes must actually move");
+        assert!(r.final_params.len() > 0);
+        assert!(r.final_eval.datacomp >= 0.0);
+    }
+
+    #[test]
+    fn all_algorithms_run_three_steps() {
+        if !available() {
+            return;
+        }
+        for algo in Algorithm::all() {
+            let cfg = quick_cfg(algo, 3);
+            let r = Trainer::new(cfg).unwrap().run()
+                .unwrap_or_else(|e| panic!("{}: {e:?}", algo.name()));
+            assert_eq!(r.history.len(), 3, "{}", algo.name());
+            assert!(r.history.iter().all(|h| h.loss.is_finite()), "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn openclip_gamma_is_one() {
+        if !available() {
+            return;
+        }
+        let mut cfg = quick_cfg(Algorithm::OpenClip, 2);
+        cfg.gamma = GammaSchedule::Cosine { gamma_min: 0.2, decay_epochs: 1 }; // ignored
+        let r = Trainer::new(cfg).unwrap().run().unwrap();
+        assert!(r.history.iter().all(|h| h.gamma == 1.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        if !available() {
+            return;
+        }
+        let run = || Trainer::new(quick_cfg(Algorithm::FastClipV1, 5)).unwrap().run().unwrap();
+        let a = run();
+        let b = run();
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.loss, y.loss, "bitwise reproducible");
+        }
+        assert_eq!(a.final_params, b.final_params);
+    }
+
+    #[test]
+    fn openclip_models_more_comm_volume_than_v3() {
+        if !available() {
+            return;
+        }
+        let mut oc = quick_cfg(Algorithm::OpenClip, 2);
+        let mut v3 = quick_cfg(Algorithm::FastClipV3, 2);
+        for c in [&mut oc, &mut v3] {
+            c.nodes = 8;
+            c.gpus_per_node = 4;
+        }
+        let ro = Trainer::new(oc).unwrap().run().unwrap();
+        let rv = Trainer::new(v3).unwrap().run().unwrap();
+        assert!(ro.modeled_iter_bytes > rv.modeled_iter_bytes);
+        assert!(ro.timing.comm_pure_s > rv.timing.comm_pure_s);
+    }
+
+    #[test]
+    fn eval_every_produces_snapshots() {
+        if !available() {
+            return;
+        }
+        let mut cfg = quick_cfg(Algorithm::FastClipV1, 6);
+        cfg.eval_every = 2;
+        let r = Trainer::new(cfg).unwrap().run().unwrap();
+        // steps 2, 4 (6 coincides with final) + final = 3 records
+        assert_eq!(r.evals.len(), 3);
+        assert_eq!(r.evals.last().unwrap().step, 6);
+    }
+
+    #[test]
+    fn rejects_missing_variant_or_small_data() {
+        if !available() {
+            return;
+        }
+        let mut cfg = quick_cfg(Algorithm::FastClipV3, 2);
+        cfg.data.n_train = 8; // 8/2 workers = 4 < bl 8
+        assert!(Trainer::new(cfg).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Sharded batch loading: the dataset is partitioned evenly across K
+//! workers (S_1..S_K in the paper); each worker shuffles *within its
+//! shard* each epoch (seeded, deterministic) and yields fixed-size local
+//! batches. Local shard positions index the per-worker u/τ state stores.
+
+use crate::util::Rng;
+
+/// A local batch: global sample indices + their shard-local positions.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub global_indices: Vec<usize>,
+    pub local_positions: Vec<usize>,
+    pub epoch: u32,
+}
+
+pub struct ShardLoader {
+    /// global indices owned by this worker (strided partition)
+    shard: Vec<usize>,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: u32,
+    batch: usize,
+    rng: Rng,
+}
+
+impl ShardLoader {
+    pub fn new(n_train: usize, rank: usize, world: usize, batch: usize, seed: u64) -> Self {
+        assert!(world > 0 && rank < world && batch > 0);
+        let shard: Vec<usize> = (rank..n_train).step_by(world).collect();
+        assert!(
+            shard.len() >= batch,
+            "shard of worker {rank} has {} samples < batch {batch}",
+            shard.len()
+        );
+        let mut s = Self {
+            order: (0..shard.len()).collect(),
+            shard,
+            cursor: 0,
+            epoch: 0,
+            batch,
+            rng: Rng::new(seed ^ 0x10ad).split(rank as u64),
+        };
+        s.rng.shuffle(&mut s.order);
+        s
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.shard.len()
+    }
+
+    pub fn iters_per_epoch(&self) -> usize {
+        self.shard.len() / self.batch
+    }
+
+    /// Next local batch; reshuffles (and bumps epoch) when the shard is
+    /// exhausted. Drops the ragged tail like the reference loaders.
+    pub fn next_batch(&mut self) -> Batch {
+        if self.cursor + self.batch > self.order.len() {
+            self.cursor = 0;
+            self.epoch += 1;
+            self.rng.shuffle(&mut self.order);
+        }
+        let lo = self.cursor;
+        self.cursor += self.batch;
+        let local: Vec<usize> = self.order[lo..lo + self.batch].to_vec();
+        Batch {
+            global_indices: local.iter().map(|&p| self.shard[p]).collect(),
+            local_positions: local,
+            epoch: self.epoch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn shards_partition_dataset() {
+        let n = 103;
+        let mut seen = HashSet::new();
+        for rank in 0..4 {
+            let l = ShardLoader::new(n, rank, 4, 5, 1);
+            for &g in &l.shard {
+                assert!(seen.insert(g), "index {g} in two shards");
+                assert_eq!(g % 4, rank);
+            }
+        }
+        assert_eq!(seen.len(), n);
+    }
+
+    #[test]
+    fn epoch_covers_shard_once() {
+        let mut l = ShardLoader::new(64, 1, 2, 8, 3);
+        let mut seen = HashSet::new();
+        for _ in 0..l.iters_per_epoch() {
+            let b = l.next_batch();
+            assert_eq!(b.epoch, 0);
+            for &g in &b.global_indices {
+                assert!(seen.insert(g));
+            }
+        }
+        assert_eq!(seen.len(), 32);
+        assert_eq!(l.next_batch().epoch, 1);
+    }
+
+    #[test]
+    fn local_positions_match_globals() {
+        let mut l = ShardLoader::new(40, 3, 4, 4, 7);
+        for _ in 0..5 {
+            let b = l.next_batch();
+            for (&g, &p) in b.global_indices.iter().zip(&b.local_positions) {
+                assert_eq!(g, 3 + 4 * p);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = ShardLoader::new(50, 0, 2, 5, 9);
+        let mut b = ShardLoader::new(50, 0, 2, 5, 9);
+        for _ in 0..10 {
+            assert_eq!(a.next_batch().global_indices, b.next_batch().global_indices);
+        }
+    }
+
+    #[test]
+    fn reshuffles_between_epochs() {
+        let mut l = ShardLoader::new(64, 0, 1, 64, 5);
+        let e0 = l.next_batch().global_indices;
+        let e1 = l.next_batch().global_indices;
+        assert_ne!(e0, e1);
+        let mut s0 = e0.clone();
+        let mut s1 = e1.clone();
+        s0.sort();
+        s1.sort();
+        assert_eq!(s0, s1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_batch_larger_than_shard() {
+        ShardLoader::new(10, 0, 4, 5, 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic paired image–text data + sharded loading.
+//!
+//! The paper trains on web image–text corpora (CC3M/CC12M/LAION). Here we
+//! substitute a *procedural* paired generator with shared latent class
+//! structure (DESIGN.md §1): contrastive learning has real signal, class
+//! frequencies are long-tailed (zipf), and held-out splits support
+//! retrieval, zero-shot classification and distribution-shifted variants —
+//! the same measurement kinds as the Datacomp benchmark.
+
+mod loader;
+mod synthetic;
+
+pub use loader::ShardLoader;
+pub use synthetic::{Dataset, EvalSet, EvalVariant, ModelDims};

@@ -1,0 +1,331 @@
+//! Procedural paired image–text generator.
+//!
+//! Latent structure: `n_classes` classes, each with
+//!   * an image prototype — a (v_patches, v_patch_dim) patch grid;
+//!   * a text topic — a small pool of vocabulary tokens.
+//! A sample of class c is (prototype_c + σ·noise, tokens mixing topic and
+//! background vocabulary). Samples are generated lazily and
+//! deterministically from their index, so multi-hundred-thousand-sample
+//! "datasets" cost no memory and any worker can materialize any index.
+
+use crate::config::DataConfig;
+use crate::util::Rng;
+
+/// The tensor dims the generator must match — taken from the artifact
+/// manifest by the caller (`runtime::Manifest::model_dims`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub v_patches: usize,
+    pub v_patch_dim: usize,
+    pub t_vocab: usize,
+    pub t_len: usize,
+}
+
+/// Distribution-shifted evaluation variants — the "ImageNet & variants"
+/// analog (clean + 3 shifts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalVariant {
+    Clean,
+    /// 2x prototype noise
+    Noisy,
+    /// half the patches zeroed
+    Occluded,
+    /// patch order scrambled
+    Scrambled,
+}
+
+impl EvalVariant {
+    pub fn all() -> [EvalVariant; 4] {
+        [EvalVariant::Clean, EvalVariant::Noisy, EvalVariant::Occluded, EvalVariant::Scrambled]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvalVariant::Clean => "clean",
+            EvalVariant::Noisy => "noisy",
+            EvalVariant::Occluded => "occluded",
+            EvalVariant::Scrambled => "scrambled",
+        }
+    }
+}
+
+/// A materialized evaluation split.
+pub struct EvalSet {
+    /// (n, v_patches*v_patch_dim) row-major
+    pub images: Vec<f32>,
+    /// (n, t_len)
+    pub texts: Vec<i32>,
+    pub labels: Vec<u32>,
+    pub n: usize,
+}
+
+pub struct Dataset {
+    cfg: DataConfig,
+    dims: ModelDims,
+    /// (n_classes, v_patches*v_patch_dim)
+    prototypes: Vec<f32>,
+    /// (n_classes, TOPIC) topic token pools
+    topics: Vec<i32>,
+    /// train sample -> class
+    classes: Vec<u16>,
+    /// eval sample -> class (separate draw, same distribution)
+    eval_classes: Vec<u16>,
+}
+
+const TOPIC: usize = 8;
+/// token-position fraction drawn from the class topic pool
+const TOPIC_FRAC: f64 = 0.7;
+
+impl Dataset {
+    pub fn new(cfg: DataConfig, dims: ModelDims) -> Self {
+        assert!(cfg.n_classes >= 2 && cfg.n_classes < u16::MAX as usize);
+        assert!(dims.t_vocab > TOPIC);
+        let root = Rng::new(cfg.seed ^ 0xDA7A_5EED);
+        let mut proto_rng = root.split(1);
+        let img_dim = dims.v_patches * dims.v_patch_dim;
+        let mut prototypes = vec![0.0f32; cfg.n_classes * img_dim];
+        proto_rng.fill_normal(&mut prototypes, 1.0);
+
+        let mut topic_rng = root.split(2);
+        let mut topics = Vec::with_capacity(cfg.n_classes * TOPIC);
+        for _ in 0..cfg.n_classes {
+            for _ in 0..TOPIC {
+                topics.push(topic_rng.below(dims.t_vocab) as i32);
+            }
+        }
+
+        let mut cls_rng = root.split(3);
+        let classes =
+            (0..cfg.n_train).map(|_| cls_rng.zipf(cfg.n_classes, cfg.zipf_s) as u16).collect();
+        let mut ecls_rng = root.split(4);
+        let eval_classes =
+            (0..cfg.n_eval).map(|_| ecls_rng.zipf(cfg.n_classes, cfg.zipf_s) as u16).collect();
+
+        Self { cfg, dims, prototypes, topics, classes, eval_classes }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.cfg.n_train
+    }
+
+    pub fn n_eval(&self) -> usize {
+        self.cfg.n_eval
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.cfg.n_classes
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    pub fn class_of(&self, idx: usize) -> usize {
+        self.classes[idx] as usize
+    }
+
+    fn image_into(&self, class: usize, rng: &mut Rng, noise_scale: f32, out: &mut [f32]) {
+        let img_dim = self.dims.v_patches * self.dims.v_patch_dim;
+        let proto = &self.prototypes[class * img_dim..(class + 1) * img_dim];
+        for (o, p) in out.iter_mut().zip(proto) {
+            *o = p + rng.normal() * self.cfg.noise * noise_scale;
+        }
+    }
+
+    fn text_into(&self, class: usize, rng: &mut Rng, out: &mut [i32]) {
+        let topic = &self.topics[class * TOPIC..(class + 1) * TOPIC];
+        for o in out.iter_mut() {
+            *o = if rng.next_f64() < TOPIC_FRAC {
+                topic[rng.below(TOPIC)]
+            } else {
+                rng.below(self.dims.t_vocab) as i32
+            };
+        }
+    }
+
+    /// Materialize training sample `idx` into the provided buffers.
+    pub fn train_sample_into(&self, idx: usize, img: &mut [f32], txt: &mut [i32]) {
+        let class = self.classes[idx] as usize;
+        let mut rng = Rng::new(self.cfg.seed ^ 0x5A5A_0000).split(idx as u64);
+        self.image_into(class, &mut rng, 1.0, img);
+        self.text_into(class, &mut rng, txt);
+    }
+
+    /// Fill a batch from global sample indices. Buffers are
+    /// (len, img_dim) and (len, t_len) row-major.
+    pub fn fill_batch(&self, indices: &[usize], images: &mut [f32], texts: &mut [i32]) {
+        let img_dim = self.dims.v_patches * self.dims.v_patch_dim;
+        assert_eq!(images.len(), indices.len() * img_dim);
+        assert_eq!(texts.len(), indices.len() * self.dims.t_len);
+        for (i, &idx) in indices.iter().enumerate() {
+            self.train_sample_into(
+                idx,
+                &mut images[i * img_dim..(i + 1) * img_dim],
+                &mut texts[i * self.dims.t_len..(i + 1) * self.dims.t_len],
+            );
+        }
+    }
+
+    /// Held-out paired split under a distribution-shift variant.
+    pub fn eval_set(&self, variant: EvalVariant) -> EvalSet {
+        let img_dim = self.dims.v_patches * self.dims.v_patch_dim;
+        let n = self.cfg.n_eval;
+        let mut images = vec![0.0f32; n * img_dim];
+        let mut texts = vec![0i32; n * self.dims.t_len];
+        let mut labels = vec![0u32; n];
+        for i in 0..n {
+            let class = self.eval_classes[i] as usize;
+            labels[i] = class as u32;
+            // eval seed space disjoint from training
+            let mut rng = Rng::new(self.cfg.seed ^ 0xE7A1_0000).split(i as u64);
+            let noise_scale = if variant == EvalVariant::Noisy { 2.0 } else { 1.0 };
+            let img = &mut images[i * img_dim..(i + 1) * img_dim];
+            self.image_into(class, &mut rng, noise_scale, img);
+            match variant {
+                EvalVariant::Occluded => {
+                    let pd = self.dims.v_patch_dim;
+                    for patch in 0..self.dims.v_patches {
+                        if rng.next_f64() < 0.5 {
+                            img[patch * pd..(patch + 1) * pd].fill(0.0);
+                        }
+                    }
+                }
+                EvalVariant::Scrambled => {
+                    let pd = self.dims.v_patch_dim;
+                    let mut order: Vec<usize> = (0..self.dims.v_patches).collect();
+                    rng.shuffle(&mut order);
+                    let orig = img.to_vec();
+                    for (dst, &src) in order.iter().enumerate() {
+                        img[dst * pd..(dst + 1) * pd]
+                            .copy_from_slice(&orig[src * pd..(src + 1) * pd]);
+                    }
+                }
+                _ => {}
+            }
+            self.text_into(class, &mut rng, &mut texts[i * self.dims.t_len..(i + 1) * self.dims.t_len]);
+        }
+        EvalSet { images, texts, labels, n }
+    }
+
+    /// Canonical class prompts for zero-shot classification: each class's
+    /// topic tokens cycled to t_len (the "a photo of a {class}" analog).
+    pub fn class_prompts(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.cfg.n_classes * self.dims.t_len);
+        for c in 0..self.cfg.n_classes {
+            let topic = &self.topics[c * TOPIC..(c + 1) * TOPIC];
+            for t in 0..self.dims.t_len {
+                out.push(topic[t % TOPIC]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { v_patches: 4, v_patch_dim: 8, t_vocab: 64, t_len: 12 }
+    }
+
+    fn cfg() -> DataConfig {
+        DataConfig { n_train: 200, n_eval: 50, n_classes: 10, noise: 0.5, zipf_s: 0.7, seed: 9 }
+    }
+
+    #[test]
+    fn deterministic_samples() {
+        let ds = Dataset::new(cfg(), dims());
+        let (mut i1, mut t1) = (vec![0.0; 32], vec![0; 12]);
+        let (mut i2, mut t2) = (vec![0.0; 32], vec![0; 12]);
+        ds.train_sample_into(17, &mut i1, &mut t1);
+        ds.train_sample_into(17, &mut i2, &mut t2);
+        assert_eq!(i1, i2);
+        assert_eq!(t1, t2);
+        ds.train_sample_into(18, &mut i2, &mut t2);
+        assert_ne!(i1, i2);
+    }
+
+    #[test]
+    fn same_class_images_correlated() {
+        let ds = Dataset::new(cfg(), dims());
+        // find two samples of the same class and one of a different class
+        let c0 = ds.class_of(0);
+        let same = (1..200).find(|&i| ds.class_of(i) == c0).unwrap();
+        let diff = (1..200).find(|&i| ds.class_of(i) != c0).unwrap();
+        let get = |idx: usize| {
+            let (mut im, mut tx) = (vec![0.0; 32], vec![0; 12]);
+            ds.train_sample_into(idx, &mut im, &mut tx);
+            im
+        };
+        let dot = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+        let (a, b, c) = (get(0), get(same), get(diff));
+        assert!(dot(&a, &b) > dot(&a, &c), "class structure should dominate noise");
+    }
+
+    #[test]
+    fn texts_share_topic_tokens_within_class() {
+        let ds = Dataset::new(cfg(), dims());
+        let c0 = ds.class_of(0);
+        let same = (1..200).find(|&i| ds.class_of(i) == c0).unwrap();
+        let get = |idx: usize| {
+            let (mut im, mut tx) = (vec![0.0; 32], vec![0; 12]);
+            ds.train_sample_into(idx, &mut im, &mut tx);
+            tx
+        };
+        let (a, b) = (get(0), get(same));
+        let overlap = a.iter().filter(|t| b.contains(t)).count();
+        assert!(overlap >= 4, "topic overlap {overlap}");
+    }
+
+    #[test]
+    fn eval_variants_differ_but_share_labels() {
+        let ds = Dataset::new(cfg(), dims());
+        let clean = ds.eval_set(EvalVariant::Clean);
+        let noisy = ds.eval_set(EvalVariant::Noisy);
+        let occ = ds.eval_set(EvalVariant::Occluded);
+        assert_eq!(clean.labels, noisy.labels);
+        assert_eq!(clean.labels, occ.labels);
+        assert_ne!(clean.images, noisy.images);
+        // occlusion zeroes roughly half the patches
+        let zeros = occ.images.iter().filter(|v| **v == 0.0).count();
+        assert!(zeros > occ.images.len() / 8);
+        assert_eq!(clean.n, 50);
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let ds = Dataset::new(cfg(), dims());
+        let es = ds.eval_set(EvalVariant::Clean);
+        assert!(es.texts.iter().all(|&t| (0..64).contains(&t)));
+        let prompts = ds.class_prompts();
+        assert_eq!(prompts.len(), 10 * 12);
+        assert!(prompts.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn zipf_classes_long_tailed() {
+        let mut c = cfg();
+        c.n_train = 5000;
+        c.zipf_s = 1.0;
+        let ds = Dataset::new(c, dims());
+        let mut counts = vec![0usize; 10];
+        for i in 0..5000 {
+            counts[ds.class_of(i)] += 1;
+        }
+        assert!(counts[0] > counts[9] * 2);
+    }
+
+    #[test]
+    fn fill_batch_matches_single_samples() {
+        let ds = Dataset::new(cfg(), dims());
+        let idx = [3usize, 99, 0];
+        let mut imgs = vec![0.0; 3 * 32];
+        let mut txts = vec![0; 3 * 12];
+        ds.fill_batch(&idx, &mut imgs, &mut txts);
+        let (mut im, mut tx) = (vec![0.0; 32], vec![0; 12]);
+        ds.train_sample_into(99, &mut im, &mut tx);
+        assert_eq!(&imgs[32..64], &im[..]);
+        assert_eq!(&txts[12..24], &tx[..]);
+    }
+}

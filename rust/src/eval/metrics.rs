@@ -1,0 +1,156 @@
+//! Embedding-space metrics: retrieval recall@k and zero-shot accuracy.
+//! Pure functions over row-major (n, d) embedding matrices so they are
+//! unit-testable without a runtime.
+
+/// Recall@k for query→candidate retrieval with the positive at the same
+/// row index. Returns a percentage. Ties are counted pessimistically
+/// (a tie with the positive's score ranks ahead of it), so a degenerate
+/// "all embeddings equal" model scores ~0, not 100.
+pub fn retrieval_recall_at_k(queries: &[f32], candidates: &[f32], d: usize, k: usize) -> f32 {
+    let n = queries.len() / d;
+    assert_eq!(queries.len(), n * d);
+    assert_eq!(candidates.len(), n * d);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    for i in 0..n {
+        let q = &queries[i * d..(i + 1) * d];
+        let pos_score = dot(q, &candidates[i * d..(i + 1) * d]);
+        // rank = number of candidates scoring >= positive (excluding it)
+        let mut ahead = 0usize;
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            if dot(q, &candidates[j * d..(j + 1) * d]) >= pos_score {
+                ahead += 1;
+                if ahead >= k {
+                    break;
+                }
+            }
+        }
+        if ahead < k {
+            hits += 1;
+        }
+    }
+    100.0 * hits as f32 / n as f32
+}
+
+/// Zero-shot classification accuracy (%): predict the class whose prompt
+/// embedding has the highest similarity to the image embedding.
+pub fn zero_shot_accuracy(images: &[f32], classes: &[f32], labels: &[u32], d: usize) -> f32 {
+    let n = images.len() / d;
+    let c = classes.len() / d;
+    assert_eq!(images.len(), n * d);
+    assert_eq!(classes.len(), c * d);
+    assert_eq!(labels.len(), n);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for i in 0..n {
+        let img = &images[i * d..(i + 1) * d];
+        let mut best = f32::NEG_INFINITY;
+        let mut best_c = 0usize;
+        for cls in 0..c {
+            let s = dot(img, &classes[cls * d..(cls + 1) * d]);
+            if s > best {
+                best = s;
+                best_c = cls;
+            }
+        }
+        if best_c == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    100.0 * correct as f32 / n as f32
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// n one-hot embeddings of dim d (perfectly separable).
+    fn one_hot(n: usize, d: usize) -> Vec<f32> {
+        let mut v = vec![0.0; n * d];
+        for i in 0..n {
+            v[i * d + (i % d)] = 1.0;
+        }
+        v
+    }
+
+    #[test]
+    fn perfect_alignment_gives_100() {
+        let e = one_hot(4, 8);
+        assert_eq!(retrieval_recall_at_k(&e, &e, 8, 1), 100.0);
+        let labels: Vec<u32> = (0..4).collect();
+        assert_eq!(zero_shot_accuracy(&e, &one_hot(4, 8), &labels, 8), 100.0);
+    }
+
+    #[test]
+    fn shifted_pairs_give_0_at_r1() {
+        // candidate of query i is at row i+1 (mod n): positive never ranks 1st
+        let n = 6;
+        let d = 8;
+        let q = one_hot(n, d);
+        let mut cand = vec![0.0; n * d];
+        for i in 0..n {
+            cand[i * d + ((i + 1) % d)] = 1.0;
+        }
+        assert_eq!(retrieval_recall_at_k(&q, &cand, d, 1), 0.0);
+    }
+
+    #[test]
+    fn recall_monotone_in_k() {
+        let mut rng = crate::util::Rng::new(4);
+        let n = 32;
+        let d = 8;
+        let mut q = vec![0.0; n * d];
+        let mut c = vec![0.0; n * d];
+        rng.fill_normal(&mut q, 1.0);
+        // candidates = noisy copies of queries
+        for i in 0..n * d {
+            c[i] = q[i] + 0.8 * rng.normal();
+        }
+        crate::util::l2_normalize_rows(&mut q, d);
+        crate::util::l2_normalize_rows(&mut c, d);
+        let r1 = retrieval_recall_at_k(&q, &c, d, 1);
+        let r5 = retrieval_recall_at_k(&q, &c, d, 5);
+        assert!(r5 >= r1);
+        assert!(r1 > 0.0, "noisy copies should often rank first");
+    }
+
+    #[test]
+    fn degenerate_embeddings_score_zero_not_hundred() {
+        // all-equal embeddings: the tie-pessimistic rank puts n-1 ties ahead
+        let e = vec![1.0f32; 10 * 4];
+        assert_eq!(retrieval_recall_at_k(&e, &e, 4, 1), 0.0);
+    }
+
+    #[test]
+    fn zero_shot_chance_level_for_random() {
+        let mut rng = crate::util::Rng::new(9);
+        let n = 2000;
+        let c = 10;
+        let d = 16;
+        let mut imgs = vec![0.0; n * d];
+        let mut cls = vec![0.0; c * d];
+        rng.fill_normal(&mut imgs, 1.0);
+        rng.fill_normal(&mut cls, 1.0);
+        let labels: Vec<u32> = (0..n).map(|_| rng.below(c) as u32).collect();
+        let acc = zero_shot_accuracy(&imgs, &cls, &labels, d);
+        assert!((acc - 10.0).abs() < 5.0, "chance ~10%, got {acc}");
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(retrieval_recall_at_k(&[], &[], 4, 1), 0.0);
+        assert_eq!(zero_shot_accuracy(&[], &[1.0; 4], &[], 4), 0.0);
+    }
+}

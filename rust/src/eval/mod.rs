@@ -1,0 +1,196 @@
+//! Downstream evaluation — the Datacomp-benchmark analog (DESIGN.md §1).
+//!
+//! Three task families computed from the learned joint embedding, mirroring
+//! the paper's metric groups:
+//! * **Retrieval** (Flickr/MSCOCO analog): image↔text R@1 on the held-out
+//!   paired split;
+//! * **IN & Variants** (ImageNet + distribution shifts analog): zero-shot
+//!   classification of held-out images against class-prompt text
+//!   embeddings, on the clean set and 3 procedural shifts
+//!   (noisy / occluded / scrambled);
+//! * **Datacomp** = mean over all task scores.
+//!
+//! All scores are percentages in [0, 100].
+
+mod metrics;
+
+pub use metrics::{retrieval_recall_at_k, zero_shot_accuracy};
+
+use anyhow::Result;
+
+use crate::data::{Dataset, EvalVariant};
+use crate::runtime::WorkerRuntime;
+
+/// One evaluation snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalSummary {
+    /// mean of image→text R@1 and text→image R@1
+    pub retrieval: f32,
+    /// mean zero-shot accuracy over clean + 3 shifted variants
+    pub in_variants: f32,
+    /// mean over every task score (the headline metric)
+    pub datacomp: f32,
+    /// individual (name, score) task results
+    pub tasks: Vec<(String, f32)>,
+}
+
+impl EvalSummary {
+    pub fn task(&self, name: &str) -> Option<f32> {
+        self.tasks.iter().find(|(n, _)| n == name).map(|(_, s)| *s)
+    }
+}
+
+/// Evaluate the model with parameters `params` on the dataset's held-out
+/// split, running the encoder through the worker's PJRT executables in
+/// local-batch-sized chunks.
+pub fn evaluate(rt: &mut WorkerRuntime, ds: &Dataset, params: &[f32]) -> Result<EvalSummary> {
+    let d = rt.manifest().model.d_embed;
+    let mut tasks = Vec::new();
+
+    // ---- retrieval on the clean paired split -----------------------------
+    let clean = ds.eval_set(EvalVariant::Clean);
+    let img_emb = embed_images(rt, params, &clean.images, clean.n)?;
+    let txt_emb = embed_texts(rt, params, &clean.texts, clean.n)?;
+    let i2t = retrieval_recall_at_k(&img_emb, &txt_emb, d, 1);
+    let t2i = retrieval_recall_at_k(&txt_emb, &img_emb, d, 1);
+    tasks.push(("retrieval_i2t_r1".to_string(), i2t));
+    tasks.push(("retrieval_t2i_r1".to_string(), t2i));
+    let retrieval = 0.5 * (i2t + t2i);
+
+    // ---- zero-shot over the class prompts, clean + shifted ---------------
+    let prompts = ds.class_prompts();
+    let class_emb = embed_texts(rt, params, &prompts, ds.n_classes())?;
+    let mut zs_sum = 0.0;
+    for variant in EvalVariant::all() {
+        let set = ds.eval_set(variant);
+        let emb = if variant == EvalVariant::Clean {
+            img_emb.clone()
+        } else {
+            embed_images(rt, params, &set.images, set.n)?
+        };
+        let acc = zero_shot_accuracy(&emb, &class_emb, &set.labels, d);
+        tasks.push((format!("zeroshot_{}", variant.name()), acc));
+        zs_sum += acc;
+    }
+    let in_variants = zs_sum / EvalVariant::all().len() as f32;
+
+    let datacomp = tasks.iter().map(|(_, s)| s).sum::<f32>() / tasks.len() as f32;
+    Ok(EvalSummary { retrieval, in_variants, datacomp, tasks })
+}
+
+/// Embed `n` images (row-major (n, img_dim)) through the `encode`
+/// executable in chunks of the bundle's local batch, padding the tail.
+fn embed_images(
+    rt: &mut WorkerRuntime,
+    params: &[f32],
+    images: &[f32],
+    n: usize,
+) -> Result<Vec<f32>> {
+    let m = rt.manifest().clone();
+    let bl = m.local_batch;
+    let img_dim = m.model.v_patches * m.model.v_patch_dim;
+    let dummy_texts = vec![0i32; bl * m.model.t_len];
+    let mut out = Vec::with_capacity(n * m.model.d_embed);
+    let mut chunk = vec![0.0f32; bl * img_dim];
+    let mut i = 0;
+    while i < n {
+        let take = (n - i).min(bl);
+        chunk[..take * img_dim].copy_from_slice(&images[i * img_dim..(i + take) * img_dim]);
+        chunk[take * img_dim..].fill(0.0); // pad tail
+        let (e1, _e2) = rt.encode(params, &chunk, &dummy_texts)?;
+        out.extend_from_slice(&e1[..take * m.model.d_embed]);
+        i += take;
+    }
+    Ok(out)
+}
+
+/// Embed `n` token sequences (row-major (n, t_len)); same chunking.
+fn embed_texts(
+    rt: &mut WorkerRuntime,
+    params: &[f32],
+    texts: &[i32],
+    n: usize,
+) -> Result<Vec<f32>> {
+    let m = rt.manifest().clone();
+    let bl = m.local_batch;
+    let img_dim = m.model.v_patches * m.model.v_patch_dim;
+    let dummy_images = vec![0.0f32; bl * img_dim];
+    let mut out = Vec::with_capacity(n * m.model.d_embed);
+    let mut chunk = vec![0i32; bl * m.model.t_len];
+    let mut i = 0;
+    while i < n {
+        let take = (n - i).min(bl);
+        chunk[..take * m.model.t_len]
+            .copy_from_slice(&texts[i * m.model.t_len..(i + take) * m.model.t_len]);
+        chunk[take * m.model.t_len..].fill(0);
+        let (_e1, e2) = rt.encode(params, &dummy_images, &chunk)?;
+        out.extend_from_slice(&e2[..take * m.model.d_embed]);
+        i += take;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataConfig;
+    use crate::data::ModelDims;
+    use crate::runtime::Manifest;
+
+    const BUNDLE: &str = "artifacts/tiny_k2_b8";
+
+    #[test]
+    fn evaluate_random_model_near_chance() {
+        if !std::path::Path::new(BUNDLE).join("manifest.json").exists() {
+            eprintln!("skipping: {BUNDLE} not built");
+            return;
+        }
+        let m = Manifest::load(BUNDLE).unwrap();
+        let mut rt = WorkerRuntime::load(&m, Some("gcl")).unwrap();
+        let dcfg = DataConfig { n_train: 64, n_eval: 64, n_classes: 8, ..DataConfig::default() };
+        let ds = Dataset::new(dcfg, m.model_dims());
+        let params = m.load_init_params().unwrap();
+        let s = evaluate(&mut rt, &ds, &params).unwrap();
+        assert_eq!(s.tasks.len(), 6);
+        // untrained: zero-shot should be in a loose band around chance
+        // (1/8 = 12.5%); far from perfect
+        assert!(s.in_variants < 60.0, "untrained in_variants {}", s.in_variants);
+        assert!(s.datacomp >= 0.0 && s.datacomp <= 100.0);
+        assert!(s.task("retrieval_i2t_r1").is_some());
+        assert!(s.task("zeroshot_occluded").is_some());
+        assert!(s.task("nope").is_none());
+    }
+
+    #[test]
+    fn chunked_embedding_matches_direct() {
+        if !std::path::Path::new(BUNDLE).join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(BUNDLE).unwrap();
+        let mut rt = WorkerRuntime::load(&m, Some("gcl")).unwrap();
+        let params = m.load_init_params().unwrap();
+        let dims: ModelDims = m.model_dims();
+        let img_dim = dims.v_patches * dims.v_patch_dim;
+        // n = bl + 3 exercises the padded tail
+        let n = m.local_batch + 3;
+        let mut rng = crate::util::Rng::new(3);
+        let mut images = vec![0.0f32; n * img_dim];
+        rng.fill_normal(&mut images, 1.0);
+        let emb = embed_images(&mut rt, &params, &images, n).unwrap();
+        assert_eq!(emb.len(), n * m.model.d_embed);
+        // each row L2-normalized (encode normalizes)
+        for row in emb.chunks(m.model.d_embed) {
+            let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-3);
+        }
+        // re-embedding the tail sample alone gives the same embedding
+        let last = &images[(n - 1) * img_dim..];
+        let mut single = vec![0.0f32; img_dim];
+        single.copy_from_slice(last);
+        let emb_single = embed_images(&mut rt, &params, &single, 1).unwrap();
+        let got = &emb[(n - 1) * m.model.d_embed..];
+        for (a, b) in got.iter().zip(&emb_single) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! FastCLIP — a distributed CLIP-training framework reproducing
+//! *"FastCLIP: A Suite of Optimization Techniques to Accelerate CLIP
+//! Training with Limited Resources"* (Wei et al., 2024).
+//!
+//! Architecture (three layers, see `DESIGN.md`):
+//! * **L1/L2** (build time, Python): Pallas contrastive kernels + JAX CLIP
+//!   model, AOT-lowered to HLO-text artifacts by `python/compile/aot.py`.
+//! * **L3** (this crate): the distributed coordinator — worker topology,
+//!   the paper's gradient-reduction strategy, inner-LR (γ) schedules,
+//!   temperature rules v0–v3, optimizers, interconnect cost accounting,
+//!   evaluation and the experiment harness. Python never runs here; the
+//!   binary loads `artifacts/*.hlo.txt` through PJRT (`xla` crate).
+//!
+//! Entry points: [`coordinator::Trainer`] for training,
+//! [`bench`] for the paper's tables/figures, the `fastclip` CLI for both.
+
+pub mod bench;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod optim;
+pub mod output;
+pub mod runtime;
+pub mod util;
+
+pub use config::TrainConfig;
+pub use coordinator::{TrainResult, Trainer};

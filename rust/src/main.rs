@@ -1,0 +1,235 @@
+//! The `fastclip` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   train       run one training configuration (flags or --config preset)
+//!   eval        evaluate saved parameters on the synthetic benchmark
+//!   exp <id>    regenerate a paper table/figure (see `exp list`)
+//!   comm-bench  α–β cost-model sweep over node counts
+//!   inspect     print an artifact bundle's manifest summary
+//!
+//! Examples:
+//!   fastclip train --algo fastclip-v3 --bundle artifacts/tiny_k2_b8 --steps 100
+//!   fastclip exp table4 --setting medium --seeds 3
+//!   fastclip exp timing --profile slingshot1
+//!   fastclip inspect artifacts/tiny_k2_b8
+
+use anyhow::{bail, Context, Result};
+
+use fastclip::bench;
+use fastclip::config::{Algorithm, GammaSchedule, OptimizerKind, TrainConfig};
+use fastclip::coordinator::Trainer;
+use fastclip::output::{sparkline, Table};
+use fastclip::runtime::Manifest;
+use fastclip::util::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => train(&args),
+        "eval" => eval(&args),
+        "exp" => exp(&args),
+        "comm-bench" => bench::timing::comm_bench(&args),
+        "inspect" => inspect(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `fastclip help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "fastclip — distributed CLIP training with compositional optimization\n\
+         \n\
+         USAGE: fastclip <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+           train       run one training configuration\n\
+             --algo <id>        {algos}\n\
+             --bundle <dir>     artifact bundle (default artifacts/tiny_k2_b8)\n\
+             --config <file>    load a configs/*.toml preset instead of flags\n\
+             --steps N --seed S --optimizer adamw|lamb|lion|sgdm\n\
+             --gamma-min G | --gamma-const G   inner-LR schedule\n\
+             --eps E --rho R --tau-init T --eval-every N\n\
+             --nodes N --gpus-per-node M --network {nets}\n\
+             --save <file>      save final parameters (f32 LE)\n\
+           eval        evaluate parameters: --bundle <dir> --params <file>\n\
+           exp <id>    regenerate a paper table/figure (exp list to enumerate)\n\
+           comm-bench  cost-model sweep: --profile <net> --n-params P\n\
+           inspect     <bundle-dir>: print manifest summary\n",
+        algos = Algorithm::all().map(|a| a.id()).join("|"),
+        nets = "infiniband|slingshot1|slingshot2",
+    );
+}
+
+fn build_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        TrainConfig::from_file(path)?
+    } else {
+        let algo = Algorithm::from_id(&args.str_or("algo", "fastclip-v3"))?;
+        TrainConfig::new(args.str_or("bundle", "artifacts/tiny_k2_b8"), algo)
+    };
+    if let Some(b) = args.get("bundle") {
+        cfg.artifact_dir = b.to_string();
+    }
+    cfg.steps = args.u32_or("steps", cfg.steps)?;
+    cfg.iters_per_epoch = args.u32_or("iters-per-epoch", cfg.iters_per_epoch)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.data.seed = cfg.seed;
+    cfg.eps = args.f32_or("eps", cfg.eps)?;
+    cfg.rho = args.f32_or("rho", cfg.rho)?;
+    cfg.tau_init = args.f32_or("tau-init", cfg.tau_init)?;
+    cfg.tau_lr = args.f32_or("tau-lr", cfg.tau_lr)?;
+    cfg.eval_every = args.u32_or("eval-every", cfg.eval_every)?;
+    cfg.nodes = args.usize_or("nodes", cfg.nodes)?;
+    cfg.gpus_per_node = args.usize_or("gpus-per-node", cfg.gpus_per_node)?;
+    cfg.network = fastclip::comm::ProfileName::from_id(
+        &args.str_or("network", cfg.network.id()),
+    )?;
+    cfg.lr.peak = args.f32_or("lr", cfg.lr.peak)?;
+    cfg.lr.total_iters = cfg.steps;
+    cfg.lr.warmup_iters = args.u32_or("warmup", cfg.steps / 10)?;
+    cfg.data.n_train = args.usize_or("n-train", cfg.data.n_train)?;
+    cfg.data.n_eval = args.usize_or("n-eval", cfg.data.n_eval)?;
+    cfg.data.n_classes = args.usize_or("n-classes", cfg.data.n_classes)?;
+    if let Some(k) = args.get("optimizer") {
+        cfg.optimizer = fastclip::config::OptimizerConfig::with_kind(OptimizerKind::from_id(k)?);
+    }
+    let epochs = (cfg.steps / cfg.iters_per_epoch.max(1)).max(1);
+    if let Some(g) = args.get("gamma-const") {
+        cfg.gamma = GammaSchedule::Constant { gamma: g.parse().map_err(anyhow::Error::msg)? };
+    } else if let Some(g) = args.get("gamma-min") {
+        cfg.gamma = GammaSchedule::Cosine {
+            gamma_min: g.parse().map_err(anyhow::Error::msg)?,
+            decay_epochs: args.u32_or("decay-epochs", (epochs / 2).max(1))?,
+        };
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    eprintln!(
+        "training {} on {} for {} steps (K={} workers, modeled {}x{} {})",
+        cfg.algorithm.name(),
+        cfg.artifact_dir,
+        cfg.steps,
+        Manifest::load(&cfg.artifact_dir)?.k_workers,
+        cfg.nodes,
+        cfg.gpus_per_node,
+        cfg.network.id(),
+    );
+    let result = Trainer::new(cfg.clone())?.run()?;
+
+    let losses: Vec<f32> = result.history.iter().map(|h| h.loss).collect();
+    println!("loss curve: {}", sparkline(&losses, 48));
+    let mut t = Table::new("Run summary", &["metric", "value"]);
+    t.row(vec!["algorithm".into(), result.algorithm.into()]);
+    t.row(vec!["final loss (tail-8 mean)".into(), format!("{:.4}", result.tail_loss(8))]);
+    t.row(vec!["final tau".into(), format!("{:.4}", result.final_tau)]);
+    t.row(vec!["Datacomp".into(), format!("{:.2}", result.final_eval.datacomp)]);
+    t.row(vec!["Retrieval".into(), format!("{:.2}", result.final_eval.retrieval)]);
+    t.row(vec!["IN & Variants".into(), format!("{:.2}", result.final_eval.in_variants)]);
+    let ms = result.timing.per_iter_ms();
+    t.row(vec!["iter total (ms, modeled)".into(), format!("{:.2}", ms.total)]);
+    t.row(vec!["  compute".into(), format!("{:.2}", ms.compute)]);
+    t.row(vec!["  pure comm".into(), format!("{:.2}", ms.comm_pure)]);
+    t.row(vec!["  overlapped comm".into(), format!("{:.2}", ms.comm_overlap)]);
+    t.row(vec!["  others".into(), format!("{:.2}", ms.others)]);
+    t.row(vec!["real bytes moved".into(), format!("{}", result.comm_bytes)]);
+    t.row(vec!["wall time (s)".into(), format!("{:.1}", result.wall_s)]);
+    t.print();
+
+    if let Some(path) = args.get("save") {
+        let bytes: Vec<u8> =
+            result.final_params.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(path, bytes).with_context(|| format!("saving {path}"))?;
+        eprintln!("saved {} params to {path}", result.final_params.len());
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let bundle = args.str_or("bundle", "artifacts/tiny_k2_b8");
+    let manifest = Manifest::load(&bundle)?;
+    let params = match args.get("params") {
+        Some(path) => {
+            let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+            anyhow::ensure!(bytes.len() == manifest.n_params * 4, "params size mismatch");
+            bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+        }
+        None => manifest.load_init_params()?,
+    };
+    let mut rt = fastclip::runtime::WorkerRuntime::load(&manifest, Some("gcl"))?;
+    let mut data_cfg = fastclip::config::DataConfig::default();
+    data_cfg.n_eval = args.usize_or("n-eval", 256)?;
+    data_cfg.n_classes = args.usize_or("n-classes", data_cfg.n_classes)?;
+    let ds = fastclip::data::Dataset::new(data_cfg, manifest.model_dims());
+    let s = fastclip::eval::evaluate(&mut rt, &ds, &params)?;
+    let mut t = Table::new("Evaluation", &["task", "score"]);
+    for (name, score) in &s.tasks {
+        t.row(vec![name.clone(), format!("{score:.2}")]);
+    }
+    t.row(vec!["Retrieval (mean)".into(), format!("{:.2}", s.retrieval)]);
+    t.row(vec!["IN & Variants (mean)".into(), format!("{:.2}", s.in_variants)]);
+    t.row(vec!["Datacomp (mean)".into(), format!("{:.2}", s.datacomp)]);
+    t.print();
+    Ok(())
+}
+
+fn exp(args: &Args) -> Result<()> {
+    let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("list");
+    if id == "list" {
+        println!("available experiments:");
+        for (k, v) in bench::EXPERIMENTS {
+            println!("  {k:10} {v}");
+        }
+        return Ok(());
+    }
+    bench::run_experiment(id, args)
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let bundle = args
+        .positional
+        .get(1)
+        .cloned()
+        .or_else(|| args.get("bundle").map(|s| s.to_string()))
+        .unwrap_or_else(|| "artifacts/tiny_k2_b8".into());
+    let m = Manifest::load(&bundle)?;
+    let mut t = Table::new(format!("Bundle {bundle}"), &["field", "value"]);
+    t.row(vec!["preset".into(), m.preset.clone()]);
+    t.row(vec!["n_params".into(), m.n_params.to_string()]);
+    t.row(vec!["param leaves".into(), m.param_spec.len().to_string()]);
+    t.row(vec!["K workers".into(), m.k_workers.to_string()]);
+    t.row(vec!["local batch".into(), m.local_batch.to_string()]);
+    t.row(vec!["global batch".into(), m.global_batch.to_string()]);
+    t.row(vec!["d_embed".into(), m.model.d_embed.to_string()]);
+    t.row(vec![
+        "image".into(),
+        format!("{} patches x {}", m.model.v_patches, m.model.v_patch_dim),
+    ]);
+    t.row(vec![
+        "text".into(),
+        format!("len {} vocab {}", m.model.t_len, m.model.t_vocab),
+    ]);
+    t.row(vec!["variants".into(), m.variants.join(", ")]);
+    for e in &m.executables {
+        t.row(vec![
+            format!("exec {}", e.name),
+            format!("{} inputs -> {} outputs", e.inputs.len(), e.outputs.len()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

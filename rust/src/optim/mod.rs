@@ -1,0 +1,324 @@
+//! Optimizers for the model parameters — Proc. 4 of the paper: AdamW,
+//! LAMB, Lion and SGD-with-momentum, over a flat f32 parameter vector with
+//! per-leaf segmentation (LAMB's trust ratio is computed per leaf/layer,
+//! matching the paper's per-layer α).
+//!
+//! All state lives here in Rust; the HLO step graphs only produce
+//! gradients. A scalar AdamW (`ScalarAdam`) drives the learnable
+//! temperature (Proc. 5 uses Proc. 4 with λ=0).
+
+use crate::config::{OptimizerConfig, OptimizerKind};
+
+/// (offset, len) of each parameter leaf in the flat vector.
+pub type Segments = Vec<(usize, usize)>;
+
+pub trait Optimizer: Send {
+    /// One update: params <- params - lr * direction(grad) (+ decoupled wd).
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32);
+    fn name(&self) -> &'static str;
+}
+
+pub fn build(cfg: &OptimizerConfig, n_params: usize, segments: Segments) -> Box<dyn Optimizer> {
+    match cfg.kind {
+        OptimizerKind::AdamW => Box::new(AdamW::new(*cfg, n_params)),
+        OptimizerKind::Lamb => Box::new(Lamb::new(*cfg, n_params, segments)),
+        OptimizerKind::Lion => Box::new(Lion::new(*cfg, n_params)),
+        OptimizerKind::Sgdm => Box::new(Sgdm::new(*cfg, n_params)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AdamW (Loshchilov & Hutter 2019), decoupled weight decay.
+// ---------------------------------------------------------------------------
+pub struct AdamW {
+    cfg: OptimizerConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: i32,
+}
+
+impl AdamW {
+    pub fn new(cfg: OptimizerConfig, n: usize) -> Self {
+        Self { cfg, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+}
+
+impl Optimizer for AdamW {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        self.t += 1;
+        let (b1, b2, eps, wd) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps, self.cfg.weight_decay);
+        let bc1 = 1.0 - b1.powi(self.t);
+        let bc2 = 1.0 - b2.powi(self.t);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mh = self.m[i] / bc1;
+            let vh = self.v[i] / bc2;
+            params[i] -= lr * (mh / (vh.sqrt() + eps) + wd * params[i]);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "AdamW"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LAMB (You et al. 2020): Adam direction + per-layer trust ratio.
+// ---------------------------------------------------------------------------
+pub struct Lamb {
+    cfg: OptimizerConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: i32,
+    segments: Segments,
+}
+
+impl Lamb {
+    pub fn new(cfg: OptimizerConfig, n: usize, segments: Segments) -> Self {
+        assert!(!segments.is_empty(), "LAMB needs per-leaf segments");
+        Self { cfg, m: vec![0.0; n], v: vec![0.0; n], t: 0, segments }
+    }
+}
+
+impl Optimizer for Lamb {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        self.t += 1;
+        let (b1, b2, eps, wd) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps, self.cfg.weight_decay);
+        let bc1 = 1.0 - b1.powi(self.t);
+        let bc2 = 1.0 - b2.powi(self.t);
+        for &(off, len) in &self.segments {
+            let mut p_norm = 0.0f64;
+            let mut r_norm = 0.0f64;
+            // first pass: moments + norms of r + λθ
+            for i in off..off + len {
+                let g = grad[i];
+                self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+                self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+                let r = self.m[i] / bc1 / ((self.v[i] / bc2).sqrt() + eps) + wd * params[i];
+                p_norm += (params[i] as f64) * (params[i] as f64);
+                r_norm += (r as f64) * (r as f64);
+            }
+            let trust = if p_norm > 0.0 && r_norm > 0.0 {
+                (p_norm.sqrt() / r_norm.sqrt()) as f32
+            } else {
+                1.0
+            };
+            for i in off..off + len {
+                let r = self.m[i] / bc1 / ((self.v[i] / bc2).sqrt() + eps) + wd * params[i];
+                params[i] -= lr * trust * r;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "LAMB"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lion (Chen et al. 2023): sign of the interpolated momentum.
+// ---------------------------------------------------------------------------
+pub struct Lion {
+    cfg: OptimizerConfig,
+    m: Vec<f32>,
+}
+
+impl Lion {
+    pub fn new(cfg: OptimizerConfig, n: usize) -> Self {
+        Self { cfg, m: vec![0.0; n] }
+    }
+}
+
+impl Optimizer for Lion {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        let (b1, b2, wd) = (self.cfg.beta1, self.cfg.beta2, self.cfg.weight_decay);
+        for i in 0..params.len() {
+            let g = grad[i];
+            let c = b1 * self.m[i] + (1.0 - b1) * g;
+            self.m[i] = b2 * self.m[i] + (1.0 - b2) * g;
+            params[i] -= lr * (c.signum() * (c != 0.0) as i32 as f32 + wd * params[i]);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "Lion"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SGD with momentum (Polyak 1964); L2-coupled weight decay as in Proc. 4.
+// ---------------------------------------------------------------------------
+pub struct Sgdm {
+    cfg: OptimizerConfig,
+    m: Vec<f32>,
+}
+
+impl Sgdm {
+    pub fn new(cfg: OptimizerConfig, n: usize) -> Self {
+        Self { cfg, m: vec![0.0; n] }
+    }
+}
+
+impl Optimizer for Sgdm {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        let (mu, wd) = (self.cfg.momentum, self.cfg.weight_decay);
+        for i in 0..params.len() {
+            self.m[i] = mu * self.m[i] + grad[i] + wd * params[i];
+            params[i] -= lr * self.m[i];
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "SGDM"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar AdamW for the temperature parameter(s) (Proc. 5, λ = 0).
+// ---------------------------------------------------------------------------
+#[derive(Debug, Clone, Copy)]
+pub struct ScalarAdam {
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    m: f32,
+    v: f32,
+    t: i32,
+}
+
+impl Default for ScalarAdam {
+    fn default() -> Self {
+        Self { b1: 0.9, b2: 0.999, eps: 1e-8, m: 0.0, v: 0.0, t: 0 }
+    }
+}
+
+impl ScalarAdam {
+    pub fn step(&mut self, x: f32, grad: f32, lr: f32) -> f32 {
+        self.t += 1;
+        self.m = self.b1 * self.m + (1.0 - self.b1) * grad;
+        self.v = self.b2 * self.v + (1.0 - self.b2) * grad * grad;
+        let mh = self.m / (1.0 - self.b1.powi(self.t));
+        let vh = self.v / (1.0 - self.b2.powi(self.t));
+        x - lr * mh / (vh.sqrt() + self.eps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptimizerConfig;
+
+    fn quad_loss_grad(p: &[f32]) -> Vec<f32> {
+        // f(p) = sum (p_i - i)^2 ; grad = 2 (p_i - i)
+        p.iter().enumerate().map(|(i, &x)| 2.0 * (x - i as f32)).collect()
+    }
+
+    fn converges(mut opt: Box<dyn Optimizer>, lr: f32, iters: usize) -> f32 {
+        let mut p = vec![0.0f32; 4];
+        for _ in 0..iters {
+            let g = quad_loss_grad(&p);
+            opt.step(&mut p, &g, lr);
+        }
+        p.iter().enumerate().map(|(i, &x)| (x - i as f32).powi(2)).sum()
+    }
+
+    #[test]
+    fn all_optimizers_reduce_quadratic() {
+        let seg: Segments = vec![(0, 4)];
+        let mut cfg = OptimizerConfig::adamw(0.0);
+        assert!(converges(build(&cfg, 4, seg.clone()), 0.1, 500) < 0.2);
+        cfg.kind = OptimizerKind::Lamb;
+        assert!(converges(build(&cfg, 4, seg.clone()), 0.05, 800) < 0.5);
+        cfg.kind = OptimizerKind::Lion;
+        assert!(converges(build(&cfg, 4, seg.clone()), 0.01, 2000) < 0.2);
+        cfg.kind = OptimizerKind::Sgdm;
+        cfg.weight_decay = 0.0;
+        assert!(converges(build(&cfg, 4, seg), 0.05, 500) < 0.2);
+    }
+
+    #[test]
+    fn adamw_first_step_is_signed_lr() {
+        // with bias correction, |Δp| ≈ lr on the first step
+        let cfg = OptimizerConfig::adamw(0.0);
+        let mut o = AdamW::new(cfg, 2);
+        let mut p = vec![1.0f32, -1.0];
+        o.step(&mut p, &[0.5, -2.0], 0.01);
+        assert!((p[0] - (1.0 - 0.01)).abs() < 1e-4);
+        assert!((p[1] - (-1.0 + 0.01)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn weight_decay_decoupled_in_adamw() {
+        // zero gradient: AdamW still shrinks weights by lr*wd per step
+        let cfg = OptimizerConfig::adamw(0.1);
+        let mut o = AdamW::new(cfg, 1);
+        let mut p = vec![1.0f32];
+        o.step(&mut p, &[0.0], 0.1);
+        assert!((p[0] - (1.0 - 0.1 * 0.1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lion_updates_are_sign_bounded() {
+        let cfg = OptimizerConfig::with_kind(OptimizerKind::Lion);
+        let mut o = Lion::new(cfg, 3);
+        let mut p = vec![0.0f32; 3];
+        o.step(&mut p, &[1e6, -1e-6, 3.0], 1e-3);
+        for &x in &p {
+            assert!(x.abs() <= 1e-3 * (1.0 + 0.3) + 1e-9, "{x}");
+        }
+        // sign follows gradient sign
+        assert!(p[0] < 0.0 && p[1] > 0.0 && p[2] < 0.0);
+    }
+
+    #[test]
+    fn lamb_trust_ratio_scales_per_segment() {
+        // Two segments with wildly different parameter norms must get
+        // different effective step sizes (that is the point of LAMB).
+        let cfg = OptimizerConfig { weight_decay: 0.0, ..OptimizerConfig::with_kind(OptimizerKind::Lamb) };
+        let mut o = Lamb::new(cfg, 4, vec![(0, 2), (2, 2)]);
+        let mut p = vec![100.0, 100.0, 0.1, 0.1];
+        let before = p.clone();
+        o.step(&mut p, &[1.0, 1.0, 1.0, 1.0], 0.01);
+        let d_big = (p[0] - before[0]).abs();
+        let d_small = (p[2] - before[2]).abs();
+        assert!(d_big > 50.0 * d_small, "big {d_big} small {d_small}");
+    }
+
+    #[test]
+    fn sgdm_momentum_accumulates() {
+        let cfg = OptimizerConfig { momentum: 0.9, weight_decay: 0.0, ..OptimizerConfig::adamw(0.0) };
+        let mut o = Sgdm::new(cfg, 1);
+        let mut p = vec![0.0f32];
+        o.step(&mut p, &[1.0], 0.1); // m=1,   p=-0.1
+        o.step(&mut p, &[1.0], 0.1); // m=1.9, p=-0.29
+        assert!((p[0] + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scalar_adam_moves_against_gradient() {
+        let mut s = ScalarAdam::default();
+        let mut x = 0.07f32;
+        for _ in 0..50 {
+            x = s.step(x, 1.0, 1e-3); // positive grad -> decrease
+        }
+        assert!(x < 0.07 - 0.02);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let cfg = OptimizerConfig::adamw(0.05);
+        let seg: Segments = vec![(0, 8)];
+        let mut a = build(&cfg, 8, seg.clone());
+        let mut b = build(&cfg, 8, seg);
+        let mut pa = vec![0.5f32; 8];
+        let mut pb = vec![0.5f32; 8];
+        for i in 0..20 {
+            let g: Vec<f32> = (0..8).map(|j| ((i * j) as f32).sin()).collect();
+            a.step(&mut pa, &g, 1e-3);
+            b.step(&mut pb, &g, 1e-3);
+        }
+        assert_eq!(pa, pb);
+    }
+}

@@ -1,0 +1,186 @@
+//! Result sinks: pretty console tables, CSV files and JSON result files.
+//! The experiment harness ([`crate::bench`]) prints the paper-shaped rows
+//! through [`Table`] and persists machine-readable copies under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// A simple fixed-width console table (right-aligned numeric columns).
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "=== {} ===", self.title);
+        }
+        let line = |out: &mut String, cells: &[String]| {
+            for i in 0..ncol {
+                let pad = widths[i] - cells[i].chars().count();
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                // left-align first column, right-align the rest
+                if i == 0 {
+                    out.push_str(&cells[i]);
+                    out.push_str(&" ".repeat(pad));
+                } else {
+                    out.push_str(&" ".repeat(pad));
+                    out.push_str(&cells[i]);
+                }
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Write the table as CSV (no quoting needed: we never emit commas).
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        std::fs::write(path, s).with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// `mean (std)` cell formatting used throughout the paper's tables.
+pub fn mean_std_cell(values: &[f32]) -> String {
+    format!("{:.2} ({:.2})", crate::util::mean(values), crate::util::std_dev(values))
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Persist a JSON result under `results/<name>.json`.
+pub fn write_result(dir: &Path, name: &str, value: &Json) -> Result<()> {
+    value.write_file(&dir.join(format!("{name}.json")))
+}
+
+/// An ASCII sparkline of a series (loss curves in the console).
+pub fn sparkline(values: &[f32], width: usize) -> String {
+    if values.is_empty() || width == 0 {
+        return String::new();
+    }
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = values.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(1e-12);
+    // resample to `width` buckets by averaging
+    let mut out = String::new();
+    for b in 0..width.min(values.len()) {
+        let lo_i = b * values.len() / width.min(values.len());
+        let hi_i = ((b + 1) * values.len() / width.min(values.len())).max(lo_i + 1);
+        let m = crate::util::mean(&values[lo_i..hi_i]);
+        let idx = (((m - lo) / span) * 7.0).round().clamp(0.0, 7.0) as usize;
+        out.push(BARS[idx]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Algorithm", "Datacomp", "Retrieval"]);
+        t.row(vec!["FastCLIP-v3".into(), "24.76".into(), "30.36".into()]);
+        t.row(vec!["OpenCLIP".into(), "21.84".into(), "25.20".into()]);
+        let s = t.render();
+        assert!(s.contains("=== Demo ==="));
+        assert!(s.contains("FastCLIP-v3"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        // columns align: both data rows have the same length
+        assert_eq!(lines[3].chars().count(), lines[4].chars().count());
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut t = Table::new("x", &["k", "v"]);
+        t.row(vec!["a".into(), "1".into()]);
+        let dir = std::env::temp_dir().join("fastclip_test_csv");
+        let path = dir.join("t.csv");
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "k,v\na,1\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mean_std_format() {
+        assert_eq!(mean_std_cell(&[1.0, 2.0, 3.0]), "2.00 (1.00)");
+        assert_eq!(mean_std_cell(&[5.0]), "5.00 (0.00)");
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let xs: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let s = sparkline(&xs, 10);
+        assert_eq!(s.chars().count(), 10);
+        let first = s.chars().next().unwrap();
+        let last = s.chars().last().unwrap();
+        assert!(first < last, "ascending series renders ascending bars");
+        assert_eq!(sparkline(&[], 10), "");
+    }
+}

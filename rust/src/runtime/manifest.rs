@@ -1,0 +1,282 @@
+//! Artifact-bundle manifest: the typed view of `manifest.json`.
+//!
+//! A bundle directory (e.g. `artifacts/tiny_k2_b8/`) holds one AOT-lowered
+//! HLO-text file per executable, the deterministic initial parameters
+//! (`init_params.bin`, f32 LE), and this manifest describing shapes,
+//! the flat-parameter segmentation and the executable signatures.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::Json;
+
+/// Model dimensions the Rust side needs (a subset of the Python
+/// `ModelConfig`; the rest only matters at lowering time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub d_embed: usize,
+    pub v_patches: usize,
+    pub v_patch_dim: usize,
+    pub t_vocab: usize,
+    pub t_len: usize,
+}
+
+/// One leaf of the flat parameter vector (LAMB normalizes per leaf).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSegment {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Shape+dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Signature of one executable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecSig {
+    pub name: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub model: ModelInfo,
+    pub n_params: usize,
+    pub param_spec: Vec<ParamSegment>,
+    pub k_workers: usize,
+    pub local_batch: usize,
+    pub global_batch: usize,
+    pub seed: u64,
+    pub variants: Vec<String>,
+    pub executables: Vec<ExecSig>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        ensure!(
+            j.get("version")?.as_usize()? == 1,
+            "unsupported manifest version in {}",
+            dir.display()
+        );
+        let model = j.get("model")?;
+        let model = ModelInfo {
+            d_embed: model.get("d_embed")?.as_usize()?,
+            v_patches: model.get("v_patches")?.as_usize()?,
+            v_patch_dim: model.get("v_patch_dim")?.as_usize()?,
+            t_vocab: model.get("t_vocab")?.as_usize()?,
+            t_len: model.get("t_len")?.as_usize()?,
+        };
+
+        let mut param_spec = Vec::new();
+        for seg in j.get("param_spec")?.as_arr()? {
+            param_spec.push(ParamSegment {
+                name: seg.get("name")?.as_str()?.to_string(),
+                offset: seg.get("offset")?.as_usize()?,
+                size: seg.get("size")?.as_usize()?,
+            });
+        }
+
+        let mut executables = Vec::new();
+        if let Json::Obj(m) = j.get("executables")? {
+            for (name, sig) in m {
+                executables.push(ExecSig {
+                    name: name.clone(),
+                    inputs: parse_tensors(sig.get("inputs")?)?,
+                    outputs: parse_tensors(sig.get("outputs")?)?,
+                });
+            }
+        }
+
+        let manifest = Manifest {
+            preset: j.get("preset")?.as_str()?.to_string(),
+            model,
+            n_params: j.get("n_params")?.as_usize()?,
+            param_spec,
+            k_workers: j.get("k_workers")?.as_usize()?,
+            local_batch: j.get("local_batch")?.as_usize()?,
+            global_batch: j.get("global_batch")?.as_usize()?,
+            seed: j.get("seed")?.as_f64()? as u64,
+            variants: j
+                .get("variants")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            executables,
+            dir,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(self.k_workers > 0 && self.local_batch > 0, "empty topology");
+        ensure!(
+            self.global_batch == self.k_workers * self.local_batch,
+            "global batch {} != K {} x local {}",
+            self.global_batch,
+            self.k_workers,
+            self.local_batch
+        );
+        // param segments must tile [0, n_params) exactly in order
+        let mut off = 0;
+        for seg in &self.param_spec {
+            ensure!(seg.offset == off, "param segment {} misaligned", seg.name);
+            off += seg.size;
+        }
+        ensure!(off == self.n_params, "param segments cover {off} != n_params {}", self.n_params);
+        for required in ["encode", "phase_g"] {
+            ensure!(self.exec_sig(required).is_some(), "manifest missing executable {required}");
+        }
+        for v in &self.variants {
+            ensure!(
+                self.exec_sig(&format!("step_{v}")).is_some(),
+                "manifest missing executable step_{v}"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn exec_sig(&self, name: &str) -> Option<&ExecSig> {
+        self.executables.iter().find(|e| e.name == name)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// (offset, len) pairs for the optimizers (LAMB trust ratios).
+    pub fn segments(&self) -> Vec<(usize, usize)> {
+        self.param_spec.iter().map(|s| (s.offset, s.size)).collect()
+    }
+
+    /// The deterministic initial parameters written by aot.py.
+    pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("init_params.bin");
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        ensure!(
+            bytes.len() == self.n_params * 4,
+            "{} is {} bytes, expected {} (n_params {} x 4)",
+            path.display(),
+            bytes.len(),
+            self.n_params * 4,
+            self.n_params
+        );
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Dims needed by the synthetic data generator.
+    pub fn model_dims(&self) -> crate::data::ModelDims {
+        crate::data::ModelDims {
+            v_patches: self.model.v_patches,
+            v_patch_dim: self.model.v_patch_dim,
+            t_vocab: self.model.t_vocab,
+            t_len: self.model.t_len,
+        }
+    }
+}
+
+fn parse_tensors(j: &Json) -> Result<Vec<TensorSig>> {
+    j.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSig {
+                name: t.get("name")?.as_str()?.to_string(),
+                shape: t
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                dtype: t.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BUNDLE: &str = "artifacts/tiny_k2_b8";
+
+    fn bundle_available() -> bool {
+        Path::new(BUNDLE).join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_tiny_bundle() {
+        if !bundle_available() {
+            eprintln!("skipping: {BUNDLE} not built (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(BUNDLE).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.k_workers, 2);
+        assert_eq!(m.local_batch, 8);
+        assert_eq!(m.global_batch, 16);
+        assert_eq!(m.model.d_embed, 64);
+        assert!(m.n_params > 100_000);
+        assert!(m.exec_sig("encode").is_some());
+        assert!(m.exec_sig("step_rgcl_g").is_some());
+        assert!(m.exec_sig("nonexistent").is_none());
+        // segments tile the parameter vector
+        let total: usize = m.segments().iter().map(|(_, l)| l).sum();
+        assert_eq!(total, m.n_params);
+    }
+
+    #[test]
+    fn init_params_match_n_params() {
+        if !bundle_available() {
+            return;
+        }
+        let m = Manifest::load(BUNDLE).unwrap();
+        let p = m.load_init_params().unwrap();
+        assert_eq!(p.len(), m.n_params);
+        // layernorm gains are initialized to exactly 1.0 — spot-check one
+        let lnf = m.param_spec.iter().find(|s| s.name == "v.lnf.g").unwrap();
+        assert!(p[lnf.offset..lnf.offset + lnf.size].iter().all(|&v| v == 1.0));
+        // and the vector is not all zeros
+        assert!(p.iter().any(|&v| v != 0.0 && v != 1.0));
+    }
+
+    #[test]
+    fn signatures_have_expected_shapes() {
+        if !bundle_available() {
+            return;
+        }
+        let m = Manifest::load(BUNDLE).unwrap();
+        let enc = m.exec_sig("encode").unwrap();
+        assert_eq!(enc.inputs[0].shape, vec![m.n_params]);
+        assert_eq!(enc.outputs[0].shape, vec![m.local_batch, m.model.d_embed]);
+        let step = m.exec_sig("step_gcl").unwrap();
+        assert_eq!(step.outputs[0].shape, vec![m.n_params]); // grad
+        assert_eq!(step.outputs[1].shape, Vec::<usize>::new()); // loss scalar
+        let rgcl_i = m.exec_sig("step_rgcl_i").unwrap();
+        assert_eq!(rgcl_i.outputs[2].shape, vec![m.local_batch]); // tau1_grad
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load("artifacts/does_not_exist").is_err());
+    }
+}

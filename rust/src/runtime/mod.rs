@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! Python never runs here — after `make artifacts` the Rust binary is
+//! self-contained. Interchange is HLO *text* (xla_extension 0.5.1 rejects
+//! jax≥0.5's 64-bit-id serialized protos; the text parser reassigns ids).
+//!
+//! The `xla` crate types wrap raw PJRT pointers and are neither `Send` nor
+//! `Sync`, so every worker thread owns its own [`WorkerRuntime`] (client +
+//! compiled executables). Parameters are replicated and updated
+//! deterministically on every worker, so no cross-thread buffer sharing is
+//! needed (DESIGN.md §8).
+
+mod manifest;
+mod worker;
+
+pub use manifest::{ExecSig, Manifest, ModelInfo, ParamSegment, TensorSig};
+pub use worker::{StepOutput, TauGrads, TauInput, WorkerRuntime};

@@ -1,0 +1,441 @@
+//! Per-worker PJRT execution: one CPU client + one compiled executable per
+//! artifact, with typed wrappers over the three step phases
+//! (`encode`, `phase_g`, `step_<variant>`).
+//!
+//! Everything here is thread-LOCAL (`xla` types are !Send); the coordinator
+//! creates one `WorkerRuntime` inside each worker thread.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Temperature inputs for a step call.
+#[derive(Debug, Clone)]
+pub enum TauInput<'a> {
+    /// single global temperature (gcl, gcl_v0, rgcl_g, mbcl)
+    Global(f32),
+    /// gathered per-sample temperatures, each of length Bg (rgcl_i)
+    Individual { tau1g: &'a [f32], tau2g: &'a [f32] },
+}
+
+/// Temperature gradients returned by a step call.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TauGrads {
+    /// scalar dL/dτ (this worker's contribution; SUM-all-reduce it)
+    Global(f32),
+    /// per-LOCAL-sample coordinate gradients (Eq. 9), each of length Bl
+    Individual { tau1: Vec<f32>, tau2: Vec<f32> },
+}
+
+/// Output of one `step_<variant>` execution.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// this worker's gradient contribution, length P (SUM-all-reduce it)
+    pub grad: Vec<f32>,
+    /// this worker's loss contribution (SUM-all-reduce it)
+    pub loss: f32,
+    pub tau: TauGrads,
+}
+
+/// Cumulative executor-side timing, for the Fig. 3 breakdown.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RuntimeTimers {
+    pub encode_s: f64,
+    pub phase_g_s: f64,
+    pub step_s: f64,
+    pub io_s: f64,
+}
+
+pub struct WorkerRuntime {
+    manifest: Manifest,
+    #[allow(dead_code)] // owns the executables' platform; must outlive them
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub timers: RuntimeTimers,
+}
+
+impl WorkerRuntime {
+    /// Load + compile the artifacts needed to run `variant` steps.
+    /// `variant = None` compiles every variant in the bundle (used by the
+    /// inspection CLI; training compiles only what it runs).
+    pub fn load(manifest: &Manifest, variant: Option<&str>) -> Result<WorkerRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        let mut names = vec!["encode".to_string(), "phase_g".to_string()];
+        match variant {
+            Some(v) => {
+                ensure!(
+                    manifest.variants.iter().any(|x| x == v),
+                    "variant '{v}' not in bundle {:?}",
+                    manifest.variants
+                );
+                names.push(format!("step_{v}"));
+            }
+            None => names.extend(manifest.variants.iter().map(|v| format!("step_{v}"))),
+        }
+        let mut executables = HashMap::new();
+        for name in names {
+            let path = manifest.hlo_path(&name);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(wrap_xla)
+                .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(wrap_xla)
+                .with_context(|| format!("compiling {name}"))?;
+            executables.insert(name, exe);
+        }
+        Ok(WorkerRuntime {
+            manifest: manifest.clone(),
+            client,
+            executables,
+            timers: RuntimeTimers::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Encode the local batch: (params, images, texts) -> (e1, e2), each
+    /// (Bl * d) row-major.
+    pub fn encode(
+        &mut self,
+        params: &[f32],
+        images: &[f32],
+        texts: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = &self.manifest;
+        let (bl, d) = (m.local_batch, m.model.d_embed);
+        ensure!(params.len() == m.n_params, "params len {}", params.len());
+        ensure!(images.len() == bl * m.model.v_patches * m.model.v_patch_dim, "images len");
+        ensure!(texts.len() == bl * m.model.t_len, "texts len");
+
+        let t0 = Instant::now();
+        let args = [
+            lit_f32(params, &[m.n_params])?,
+            lit_f32(images, &[bl, m.model.v_patches, m.model.v_patch_dim])?,
+            lit_i32(texts, &[bl, m.model.t_len])?,
+        ];
+        self.timers.io_s += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let outs = self.run("encode", &args)?;
+        self.timers.encode_s += t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let [e1, e2]: [xla::Literal; 2] =
+            outs.try_into().map_err(|_| anyhow!("encode returned wrong arity"))?;
+        let e1 = to_vec_f32(&e1, bl * d)?;
+        let e2 = to_vec_f32(&e2, bl * d)?;
+        self.timers.io_s += t2.elapsed().as_secs_f64();
+        Ok((e1, e2))
+    }
+
+    /// The Eq. (1) inner-estimator update for the local rows:
+    /// gathered feats + local u/τ + γ -> (g1, g2, u1_new, u2_new), each Bl.
+    #[allow(clippy::too_many_arguments)]
+    pub fn phase_g(
+        &mut self,
+        e1g: &[f32],
+        e2g: &[f32],
+        offset: usize,
+        u1: &[f32],
+        u2: &[f32],
+        tau1: &[f32],
+        tau2: &[f32],
+        gamma: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let m = &self.manifest;
+        let (bl, bg, d) = (m.local_batch, m.global_batch, m.model.d_embed);
+        ensure!(e1g.len() == bg * d && e2g.len() == bg * d, "gathered feats len");
+        ensure!(u1.len() == bl && u2.len() == bl, "u len");
+        ensure!(tau1.len() == bl && tau2.len() == bl, "tau len");
+        ensure!(offset + bl <= bg, "offset {offset} out of range");
+
+        let t0 = Instant::now();
+        let args = [
+            lit_f32(e1g, &[bg, d])?,
+            lit_f32(e2g, &[bg, d])?,
+            xla::Literal::scalar(offset as i32),
+            lit_f32(u1, &[bl])?,
+            lit_f32(u2, &[bl])?,
+            lit_f32(tau1, &[bl])?,
+            lit_f32(tau2, &[bl])?,
+            xla::Literal::scalar(gamma),
+        ];
+        self.timers.io_s += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let outs = self.run("phase_g", &args)?;
+        self.timers.phase_g_s += t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let [g1, g2, u1n, u2n]: [xla::Literal; 4] =
+            outs.try_into().map_err(|_| anyhow!("phase_g returned wrong arity"))?;
+        let out = (
+            to_vec_f32(&g1, bl)?,
+            to_vec_f32(&g2, bl)?,
+            to_vec_f32(&u1n, bl)?,
+            to_vec_f32(&u2n, bl)?,
+        );
+        self.timers.io_s += t2.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// One worker's gradient computation for `variant` — the surrogate
+    /// gradient of DESIGN.md §4 step 3. All outputs are this worker's
+    /// additive contribution; the coordinator SUM-all-reduces them.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        variant: &str,
+        params: &[f32],
+        images: &[f32],
+        texts: &[i32],
+        e1g: &[f32],
+        e2g: &[f32],
+        u1g: &[f32],
+        u2g: &[f32],
+        offset: usize,
+        eps: f32,
+        rho: f32,
+        tau: TauInput,
+    ) -> Result<StepOutput> {
+        let m = &self.manifest;
+        let (bl, bg, d, p) = (m.local_batch, m.global_batch, m.model.d_embed, m.n_params);
+        ensure!(params.len() == p, "params len");
+        ensure!(e1g.len() == bg * d && e2g.len() == bg * d, "gathered feats len");
+        ensure!(u1g.len() == bg && u2g.len() == bg, "gathered u len");
+
+        let t0 = Instant::now();
+        let mut args = vec![
+            lit_f32(params, &[p])?,
+            lit_f32(images, &[bl, m.model.v_patches, m.model.v_patch_dim])?,
+            lit_i32(texts, &[bl, m.model.t_len])?,
+            lit_f32(e1g, &[bg, d])?,
+            lit_f32(e2g, &[bg, d])?,
+            lit_f32(u1g, &[bg])?,
+            lit_f32(u2g, &[bg])?,
+            xla::Literal::scalar(offset as i32),
+            xla::Literal::scalar(eps),
+            xla::Literal::scalar(rho),
+        ];
+        let individual = match &tau {
+            TauInput::Global(t) => {
+                ensure!(variant != "rgcl_i", "rgcl_i needs TauInput::Individual");
+                args.push(xla::Literal::scalar(*t));
+                false
+            }
+            TauInput::Individual { tau1g, tau2g } => {
+                ensure!(variant == "rgcl_i", "{variant} takes a global tau");
+                ensure!(tau1g.len() == bg && tau2g.len() == bg, "gathered tau len");
+                args.push(lit_f32(tau1g, &[bg])?);
+                args.push(lit_f32(tau2g, &[bg])?);
+                true
+            }
+        };
+        self.timers.io_s += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let outs = self.run(&format!("step_{variant}"), &args)?;
+        self.timers.step_s += t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let result = if individual {
+            let [grad, loss, t1g, t2g]: [xla::Literal; 4] =
+                outs.try_into().map_err(|_| anyhow!("step returned wrong arity"))?;
+            StepOutput {
+                grad: to_vec_f32(&grad, p)?,
+                loss: scalar_f32(&loss)?,
+                tau: TauGrads::Individual {
+                    tau1: to_vec_f32(&t1g, bl)?,
+                    tau2: to_vec_f32(&t2g, bl)?,
+                },
+            }
+        } else {
+            let [grad, loss, tg]: [xla::Literal; 3] =
+                outs.try_into().map_err(|_| anyhow!("step returned wrong arity"))?;
+            StepOutput {
+                grad: to_vec_f32(&grad, p)?,
+                loss: scalar_f32(&loss)?,
+                tau: TauGrads::Global(scalar_f32(&tg)?),
+            }
+        };
+        self.timers.io_s += t2.elapsed().as_secs_f64();
+        Ok(result)
+    }
+
+    /// Execute one artifact; unwraps the jax `return_tuple=True` 1-tuple.
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("executable '{name}' not loaded"))?;
+        let buffers = exe.execute::<xla::Literal>(args).map_err(wrap_xla)?;
+        let result = buffers
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{name}: empty execution result"))?
+            .to_literal_sync()
+            .map_err(wrap_xla)?;
+        result.to_tuple().map_err(wrap_xla)
+    }
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+// Single-copy literal construction: create_from_shape_and_untyped_data
+// copies the host slice straight into the shaped literal. (The obvious
+// `Literal::vec1(..).reshape(..)` costs a second full copy — measured at
+// ~7% of tiny-bundle iteration time; see EXPERIMENTS.md §Perf L3.)
+fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    ensure!(data.len() == numel, "literal data {} != shape numel {numel}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(wrap_xla)
+}
+
+fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    ensure!(data.len() == numel, "literal data {} != shape numel {numel}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(wrap_xla)
+}
+
+fn to_vec_f32(lit: &xla::Literal, expect: usize) -> Result<Vec<f32>> {
+    let v = lit.to_vec::<f32>().map_err(wrap_xla)?;
+    if v.len() != expect {
+        bail!("output length {} != expected {expect}", v.len());
+    }
+    Ok(v)
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>().map_err(wrap_xla)?;
+    ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BUNDLE: &str = "artifacts/tiny_k2_b8";
+
+    fn runtime(variant: Option<&str>) -> Option<WorkerRuntime> {
+        if !std::path::Path::new(BUNDLE).join("manifest.json").exists() {
+            eprintln!("skipping: {BUNDLE} not built (run `make artifacts`)");
+            return None;
+        }
+        let m = Manifest::load(BUNDLE).unwrap();
+        Some(WorkerRuntime::load(&m, variant).unwrap())
+    }
+
+    fn demo_inputs(m: &Manifest) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+        let params = m.load_init_params().unwrap();
+        let mut rng = crate::util::Rng::new(7);
+        let mut images = vec![0.0; m.local_batch * m.model.v_patches * m.model.v_patch_dim];
+        rng.fill_normal(&mut images, 1.0);
+        let texts: Vec<i32> = (0..m.local_batch * m.model.t_len)
+            .map(|_| rng.below(m.model.t_vocab) as i32)
+            .collect();
+        (params, images, texts)
+    }
+
+    #[test]
+    fn encode_produces_normalized_embeddings() {
+        let Some(mut rt) = runtime(Some("gcl")) else { return };
+        let m = rt.manifest().clone();
+        let (params, images, texts) = demo_inputs(&m);
+        let (e1, e2) = rt.encode(&params, &images, &texts).unwrap();
+        assert_eq!(e1.len(), m.local_batch * m.model.d_embed);
+        for row in e1.chunks(m.model.d_embed).chain(e2.chunks(m.model.d_embed)) {
+            let n: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-3, "norm {n}");
+        }
+        // deterministic
+        let (e1b, _) = rt.encode(&params, &images, &texts).unwrap();
+        assert_eq!(e1, e1b);
+    }
+
+    #[test]
+    fn phase_g_gamma_one_equals_g() {
+        let Some(mut rt) = runtime(Some("gcl")) else { return };
+        let m = rt.manifest().clone();
+        let (params, images, texts) = demo_inputs(&m);
+        let (e1, e2) = rt.encode(&params, &images, &texts).unwrap();
+        // duplicate the local block to fake a K=2 gather
+        let e1g = [e1.clone(), e1.clone()].concat();
+        let e2g = [e2.clone(), e2.clone()].concat();
+        let bl = m.local_batch;
+        let (u1, u2) = (vec![0.5; bl], vec![0.5; bl]);
+        let tau = vec![0.05; bl];
+        let (g1, _g2, u1n, u2n) =
+            rt.phase_g(&e1g, &e2g, 0, &u1, &u2, &tau, &tau, 1.0).unwrap();
+        // gamma = 1: u_new == g
+        assert_eq!(g1, u1n[..].to_vec());
+        assert!(u2n.iter().all(|v| v.is_finite()));
+        assert!(g1.iter().all(|&v| v > 0.0), "exp-sums are positive");
+        // gamma = 0.25 mixes old and new
+        let (g1b, _, u1b, _) = rt.phase_g(&e1g, &e2g, 0, &u1, &u2, &tau, &tau, 0.25).unwrap();
+        for i in 0..bl {
+            let want = 0.75 * 0.5 + 0.25 * g1b[i];
+            assert!((u1b[i] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn step_gcl_runs_and_shapes_match() {
+        let Some(mut rt) = runtime(Some("gcl")) else { return };
+        let m = rt.manifest().clone();
+        let (params, images, texts) = demo_inputs(&m);
+        let (e1, e2) = rt.encode(&params, &images, &texts).unwrap();
+        let e1g = [e1.clone(), e1.clone()].concat();
+        let e2g = [e2.clone(), e2.clone()].concat();
+        let bg = m.global_batch;
+        let (u1g, u2g) = (vec![0.8; bg], vec![0.8; bg]);
+        let out = rt
+            .step("gcl", &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-14, 0.0,
+                  TauInput::Global(0.05))
+            .unwrap();
+        assert_eq!(out.grad.len(), m.n_params);
+        assert!(out.loss.is_finite());
+        assert!(matches!(out.tau, TauGrads::Global(g) if g == 0.0), "gcl has no tau grad");
+        let gnorm: f32 = out.grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+        assert!(gnorm > 0.0 && gnorm.is_finite(), "grad norm {gnorm}");
+    }
+
+    #[test]
+    fn step_rejects_wrong_tau_kind() {
+        let Some(mut rt) = runtime(Some("gcl")) else { return };
+        let m = rt.manifest().clone();
+        let (params, images, texts) = demo_inputs(&m);
+        let bg = m.global_batch;
+        let d = m.model.d_embed;
+        let feats = vec![0.1; bg * d];
+        let u = vec![0.5; bg];
+        let t = vec![0.05; bg];
+        let r = rt.step("gcl", &params, &images, &texts, &feats, &feats, &u, &u, 0, 1e-14, 0.0,
+                        TauInput::Individual { tau1g: &t, tau2g: &t });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn load_rejects_unknown_variant() {
+        if !std::path::Path::new(BUNDLE).join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(BUNDLE).unwrap();
+        assert!(WorkerRuntime::load(&m, Some("not_a_variant")).is_err());
+    }
+}

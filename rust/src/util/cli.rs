@@ -1,0 +1,176 @@
+//! Tiny CLI argument parser: `--flag`, `--key value`, `--key=value` and
+//! positional arguments. Built in-tree (no clap in the vendored crate set).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// every --key seen, for unknown-option detection
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `std::env::args().skip(1)`
+    /// in main. Flags are options without a following value; an option's
+    /// value may be attached with `=` or given as the next token.
+    /// Bare `-x` short options are not supported (we use none).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` separator: rest are positional
+                    args.positional.extend(iter);
+                    break;
+                }
+                let key;
+                if let Some((k, v)) = rest.split_once('=') {
+                    key = k.to_string();
+                    args.options.insert(key.clone(), v.to_string());
+                } else if iter.peek().is_some_and(|n| !n.starts_with("--")) {
+                    key = rest.to_string();
+                    args.options.insert(key.clone(), iter.next().unwrap());
+                } else {
+                    key = rest.to_string();
+                    args.flags.push(key.clone());
+                }
+                args.seen.push(key);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        self.parse_or(name, default)
+    }
+
+    pub fn u32_or(&self, name: &str, default: u32) -> Result<u32> {
+        self.parse_or(name, default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        self.parse_or(name, default)
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        self.parse_or(name, default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        self.parse_or(name, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|e| anyhow!("invalid value for --{name} ('{v}'): {e}"))
+            }
+        }
+    }
+
+    /// Error if any provided option/flag is not in `known` — catches typos.
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in &self.seen {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["train", "--steps", "100", "--algo=fastclip-v3", "--verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("algo"), Some("fastclip-v3"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = parse(&["--n", "42", "--lr", "1e-3"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 42);
+        assert!((a.f32_or("lr", 0.0).unwrap() - 1e-3).abs() < 1e-9);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(a.usize_or("lr", 0).is_err());
+    }
+
+    #[test]
+    fn required_missing_errors() {
+        let a = parse(&["cmd"]);
+        assert!(a.required("out").is_err());
+        assert!(parse(&["--out", "x"]).required("out").is_ok());
+    }
+
+    #[test]
+    fn double_dash_separator() {
+        let a = parse(&["--a", "1", "--", "--not-an-option"]);
+        assert_eq!(a.get("a"), Some("1"));
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn negative_number_is_a_value() {
+        // "-3" does not start with "--" so it is consumed as the value
+        let a = parse(&["--shift", "-3"]);
+        assert_eq!(a.get("shift"), Some("-3"));
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let a = parse(&["--steps", "5", "--typo", "x"]);
+        assert!(a.check_known(&["steps"]).is_err());
+        assert!(a.check_known(&["steps", "typo"]).is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["--dry-run", "--steps", "3"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("steps"), Some("3"));
+    }
+}

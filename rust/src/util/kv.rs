@@ -1,0 +1,154 @@
+//! Config-file format: a TOML-subset key/value parser for run presets
+//! (`configs/*.toml`). Supports `[section]` headers, `key = value` lines,
+//! `#` comments, strings (quoted), booleans, integers and floats. Nested
+//! tables and arrays are not needed by our configs and are rejected loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed config file: flat `section.key -> raw string value` map.
+#[derive(Debug, Default, Clone)]
+pub struct KvFile {
+    values: BTreeMap<String, String>,
+}
+
+impl KvFile {
+    pub fn parse(text: &str) -> Result<KvFile> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                if name.contains('[') || name.is_empty() {
+                    bail!("line {}: invalid section '{name}'", lineno + 1);
+                }
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let val = val.trim();
+            if val.starts_with('[') || val.starts_with('{') {
+                bail!("line {}: arrays/inline tables unsupported ({full})", lineno + 1);
+            }
+            let val = val.trim_matches('"').to_string();
+            values.insert(full, val);
+        }
+        Ok(KvFile { values })
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<KvFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        KvFile::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("config key {key}='{v}': {e}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        self.parse_or(key, default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a run preset
+algorithm = "fastclip-v3"
+steps = 200
+
+[optimizer]
+kind = "adamw"   # the paper's winner
+lr = 1e-3
+decoupled = true
+
+[data]
+n_train = 8192
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let kv = KvFile::parse(SAMPLE).unwrap();
+        assert_eq!(kv.get("algorithm"), Some("fastclip-v3"));
+        assert_eq!(kv.parse_or::<u32>("steps", 0).unwrap(), 200);
+        assert_eq!(kv.get("optimizer.kind"), Some("adamw"));
+        assert!((kv.parse_or::<f32>("optimizer.lr", 0.0).unwrap() - 1e-3).abs() < 1e-9);
+        assert!(kv.bool_or("optimizer.decoupled", false).unwrap());
+        assert_eq!(kv.parse_or::<usize>("data.n_train", 0).unwrap(), 8192);
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let kv = KvFile::parse("a = 1").unwrap();
+        assert_eq!(kv.parse_or::<u32>("missing", 9).unwrap(), 9);
+        assert_eq!(kv.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let kv = KvFile::parse("name = \"a#b\" # trailing").unwrap();
+        assert_eq!(kv.get("name"), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(KvFile::parse("[unterminated").is_err());
+        assert!(KvFile::parse("no_equals_here").is_err());
+        assert!(KvFile::parse("arr = [1, 2]").is_err());
+        assert!(KvFile::parse(" = 3").is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let kv = KvFile::parse("steps = banana").unwrap();
+        assert!(kv.parse_or::<u32>("steps", 0).is_err());
+    }
+}

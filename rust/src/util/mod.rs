@@ -1,0 +1,14 @@
+//! Shared substrates built in-tree (the vendored crate set contains only
+//! `xla` + `anyhow`): a deterministic splittable PRNG, a JSON
+//! parser/writer (artifact manifests, result files), a small CLI argument
+//! parser, a key-value config file format, and numeric helpers.
+
+mod cli;
+mod json;
+mod kv;
+mod rng;
+
+pub use cli::Args;
+pub use json::Json;
+pub use kv::KvFile;
+pub use rng::{l2_normalize_rows, mean, std_dev, Rng};

@@ -1,0 +1,200 @@
+//! Small shared utilities: a deterministic, splittable PRNG (so synthetic
+//! data is reproducible across platforms without external crates) and a few
+//! numeric helpers used across modules.
+
+/// SplitMix64 — tiny, fast, full-period, and trivially splittable.
+/// Used everywhere randomness is needed so runs are bit-reproducible.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// cached second normal from Box–Muller
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15), spare: None }
+    }
+
+    /// Derive an independent stream (e.g. per worker / per purpose).
+    pub fn split(&self, stream: u64) -> Self {
+        let mut r = Rng::new(self.state ^ stream.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        r.next_u64();
+        r
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f32 {
+        if let Some(s) = self.spare.take() {
+            return s as f32;
+        }
+        let (mut u1, u2) = (self.next_f64(), self.next_f64());
+        if u1 < 1e-300 {
+            u1 = 1e-300;
+        }
+        let r = (-2.0 * u1.ln()).sqrt();
+        let t = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * t.sin());
+        (r * t.cos()) as f32
+    }
+
+    /// Fill a slice with N(0, sigma^2).
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        for x in out.iter_mut() {
+            *x = self.normal() * sigma;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Zipf-like class draw over [0, n): P(c) ∝ 1/(c+1)^s. Long-tailed like
+    /// web image–text data; s=0 gives uniform.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        if s == 0.0 {
+            return self.below(n);
+        }
+        // inverse-CDF on precomputable weights would be faster; n is small
+        // (hundreds of classes), so a linear scan is fine here.
+        let total: f64 = (1..=n).map(|c| (c as f64).powf(-s)).sum();
+        let mut t = self.next_f64() * total;
+        for c in 0..n {
+            t -= ((c + 1) as f64).powf(-s);
+            if t <= 0.0 {
+                return c;
+            }
+        }
+        n - 1
+    }
+}
+
+/// L2-normalize rows of a (rows, d) row-major matrix in place.
+pub fn l2_normalize_rows(x: &mut [f32], d: usize) {
+    for row in x.chunks_mut(d) {
+        let n = row.iter().map(|v| v * v).sum::<f32>().sqrt() + 1e-8;
+        for v in row {
+            *v /= n;
+        }
+    }
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f32>() / xs.len() as f32
+    }
+}
+
+/// Sample standard deviation (0 for len < 2).
+pub fn std_dev(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / (xs.len() - 1) as f32).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_split_independent() {
+        let root = Rng::new(1);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let xs: Vec<f32> = (0..200_000).map(|_| r.normal()).collect();
+        let m = mean(&xs);
+        let s = std_dev(&xs);
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((s - 1.0).abs() < 0.02, "std {s}");
+    }
+
+    #[test]
+    fn uniform_range_and_below() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let u = r.next_f64();
+            assert!((0.0..1.0).contains(&u));
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let mut r = Rng::new(5);
+        let mut counts = [0usize; 10];
+        for _ in 0..20_000 {
+            counts[r.zipf(10, 1.0)] += 1;
+        }
+        assert!(counts[0] > counts[9] * 3);
+        assert_eq!(counts.iter().sum::<usize>(), 20_000);
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut x = vec![3.0, 4.0, 0.0, 5.0, 12.0, 0.0];
+        l2_normalize_rows(&mut x, 3);
+        for row in x.chunks(3) {
+            let n: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(11);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>());
+    }
+}
