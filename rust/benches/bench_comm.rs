@@ -1,30 +1,29 @@
 //! Collective benchmarks: real in-process collectives (all_gather /
-//! all_reduce) across worker counts and payload sizes, plus the α–β cost
-//! model's analytic times for the same shapes — the microbenchmark behind
-//! the Fig. 3 communication bars.
+//! all_reduce / reduce_scatter) across worker counts and payload sizes,
+//! the pluggable gradient-reduction algorithms with their bytes-on-wire
+//! accounting (naive vs ring vs sharded — the before/after comparison of
+//! DESIGN.md §4 "Gradient reduction"), and the α–β cost model's analytic
+//! times for the same shapes — the microbenchmark behind the Fig. 3
+//! communication bars.
 
 #[path = "harness.rs"]
 mod harness;
 
-use std::sync::Arc;
-
-use fastclip::comm::{Collective, CommWorld, CostModel, ProfileName};
+use fastclip::comm::{
+    reduction, Collective, CommWorld, CostModel, ProfileName, ReduceAlgo,
+};
 use harness::{black_box, Bench};
 
-fn bench_collective(k: usize, n: usize, op: &str) {
+fn bench_all_reduce(k: usize, n: usize) {
     let world = CommWorld::new(k);
-    let name = format!("{op} k={k} n={n}");
-    // run the collective k-threaded; rank 0's thread does the timing
-    let stats = Bench::new(name).samples(20).warmup(2).run(|| {
+    Bench::new(format!("all_reduce_sum k={k} n={n}")).samples(20).warmup(2).run(|| {
         let handles: Vec<_> = (0..k)
             .map(|rank| {
                 let h = world.handle(rank);
-                std::thread::spawn(move || match rank % 2 {
-                    _ => {
-                        let mut buf = vec![rank as f32; n];
-                        h.all_reduce_sum(&mut buf);
-                        black_box(buf[0]);
-                    }
+                std::thread::spawn(move || {
+                    let mut buf = vec![rank as f32; n];
+                    h.all_reduce_sum(&mut buf);
+                    black_box(buf[0]);
                 })
             })
             .collect();
@@ -32,8 +31,6 @@ fn bench_collective(k: usize, n: usize, op: &str) {
             h.join().unwrap();
         }
     });
-    let _ = stats;
-    let _ = Arc::strong_count(&world);
 }
 
 fn bench_all_gather(k: usize, n: usize) {
@@ -54,15 +51,84 @@ fn bench_all_gather(k: usize, n: usize) {
     });
 }
 
+/// Executions per bench_reduction call (warmup + samples); divides the
+/// accumulated wire counters back to per-reduction numbers.
+const REDUCE_WARMUP: usize = 2;
+const REDUCE_SAMPLES: usize = 20;
+const REDUCE_EXECS: u64 = (REDUCE_WARMUP + REDUCE_SAMPLES) as u64;
+
+/// One full gradient reduction + optimizer-style apply with `algo`.
+/// Returns the CommStats snapshot so main() can print the wire-byte
+/// comparison next to the timings.
+fn bench_reduction(algo: ReduceAlgo, k: usize, n: usize) -> fastclip::comm::CommStatsSnapshot {
+    let world = CommWorld::new(k);
+    Bench::new(format!("reduce[{}] k={k} n={n}", algo.id()))
+        .samples(REDUCE_SAMPLES)
+        .warmup(REDUCE_WARMUP)
+        .run(|| {
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let h = world.handle(rank);
+                std::thread::spawn(move || {
+                    let mut grad = vec![rank as f32 + 0.5; n];
+                    let mut params = vec![1.0f32; n];
+                    reduction(algo).reduce_and_apply(&h, &mut grad, &mut params, &mut |p, g| {
+                        for (pi, gi) in p.iter_mut().zip(g) {
+                            *pi -= 1e-3 * gi;
+                        }
+                    });
+                    black_box(params[0]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    world.stats.snapshot()
+}
+
 fn main() {
     println!("== real in-process collectives (threads, 1 host) ==");
     for k in [2usize, 4] {
         for n in [1 << 10, 1 << 16, 1 << 20] {
-            bench_collective(k, n, "all_reduce_sum");
+            bench_all_reduce(k, n);
         }
     }
     for k in [2usize, 4] {
         bench_all_gather(k, 1 << 14);
+    }
+
+    println!("\n== gradient-reduction algorithms (real, + bytes-on-wire) ==");
+    for k in [2usize, 4] {
+        let n = 1 << 20;
+        let mut snaps = Vec::new();
+        for algo in ReduceAlgo::all() {
+            snaps.push((algo, bench_reduction(algo, k, n)));
+        }
+        // counters accumulate over all REDUCE_EXECS executions and all k
+        // ranks; divide back to one rank's traffic for ONE reduction
+        let per_reduction = |total: u64| total / k as u64 / REDUCE_EXECS;
+        let naive_wire = per_reduction(snaps[0].1.grad_wire_bytes);
+        println!("  -- grad bytes-on-wire per rank per reduction, K={k}, n={n} f32 --");
+        for (algo, s) in &snaps {
+            let wire = per_reduction(s.grad_wire_bytes);
+            println!(
+                "  {:8} {:>14} B   ({:.2}x fewer than naive)",
+                algo.id(),
+                wire,
+                naive_wire as f64 / wire.max(1) as f64
+            );
+            assert_eq!(
+                s.grad_wire_bytes_naive, snaps[0].1.grad_wire_bytes,
+                "baseline counter must match the naive run"
+            );
+        }
+        let sharded = snaps.iter().find(|(a, _)| *a == ReduceAlgo::Sharded).unwrap();
+        assert!(
+            sharded.1.grad_wire_bytes < sharded.1.grad_wire_bytes_naive,
+            "sharded must move strictly fewer gradient bytes than naive for K={k}"
+        );
     }
 
     println!("\n== alpha-beta cost model (paper-scale volumes, analytic) ==");
@@ -79,6 +145,15 @@ fn main() {
                 m.time(Collective::AllGather, 2 * bl * 4) * 1e3,
                 m.time(Collective::ReduceScatter, 2 * k * bl * d * 4) * 1e3,
                 m.time(Collective::AllReduce, p * 4) * 1e3,
+            );
+            println!(
+                "{:<12} {}n: grad reduce  naive {:>9.3}ms  ring {:>9.3}ms  sharded {:>9.3}ms  -> auto picks {}",
+                profile.id(),
+                nodes,
+                m.reduce_time(ReduceAlgo::Naive, p * 4) * 1e3,
+                m.reduce_time(ReduceAlgo::Ring, p * 4) * 1e3,
+                m.reduce_time(ReduceAlgo::Sharded, p * 4) * 1e3,
+                m.cheapest_reduce(p * 4).id(),
             );
         }
     }

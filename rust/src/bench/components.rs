@@ -1,13 +1,16 @@
-//! Component-study experiments — §5.1 of the paper:
+//! Component-study experiments — §5.1 of the paper (DESIGN.md §6):
 //! * `table3` — inner-LR (γ) schedule: constant vs cosine, three pairs;
 //! * `table4` — temperature update rules: FastCLIP-v0..v3;
-//! * `table5` — optimizers: SGDM / LAMB / Lion / AdamW on FastCLIP-v3.
+//! * `table5` — optimizers: SGDM / LAMB / Lion / AdamW on FastCLIP-v3;
+//! * `reduce` — gradient-reduction strategies: bytes-on-wire + α–β time
+//!   per algorithm, with a live exactness check on real collectives.
 //!
 //! Each runner prints the paper-shaped rows (mean (std) over seeds) and
 //! writes CSV + JSON under `results/`.
 
 use anyhow::Result;
 
+use crate::comm::{reduction, CommWorld, CostModel, ProfileName, ReduceAlgo};
 use crate::config::{Algorithm, GammaSchedule, OptimizerKind};
 use crate::output::{mean_std_cell, Table};
 use crate::util::{Args, Json};
@@ -143,6 +146,108 @@ pub fn table5(args: &Args) -> Result<()> {
         }
     }
     finish(args, "table5", table, json_rows)
+}
+
+/// `reduce` — the gradient-reduction strategy study (DESIGN.md §4). Needs
+/// no artifact bundles: for each world size × gradient size it reports
+/// each algorithm's modeled bytes-on-wire per rank and α–β time (and the
+/// cost model's `auto` pick), then verifies on REAL in-process collectives
+/// that all strategies produce bit-identical parameters while the sharded
+/// strategy's gradient traffic, as counted by `CommStats`, is strictly
+/// lower than the naive baseline.
+pub fn reduce_table(args: &Args) -> Result<()> {
+    let profile = ProfileName::from_id(&args.str_or("profile", "infiniband"))?;
+    let n_params = args.usize_or("n-params", 20_000_000)?;
+    let mut table = Table::new(
+        "Gradient-reduction strategies (bytes-on-wire per rank, alpha-beta time)",
+        &["Nodes x GPUs", "Grad MB", "Algorithm", "Wire MB/rank", "Time (ms)", "Auto pick"],
+    );
+    let mut json_rows = Vec::new();
+    for (nodes, gpus) in [(1usize, 2usize), (1, 4), (2, 4), (8, 4)] {
+        let cost = CostModel::new(profile.profile(), nodes, gpus);
+        let k = cost.world_size();
+        for n in [2 * 128usize, n_params] {
+            let bytes = n * 4;
+            let auto = cost.cheapest_reduce(bytes);
+            for algo in ReduceAlgo::all() {
+                let r = reduction(algo);
+                let wire = r.grad_wire_bytes(k, bytes as u64);
+                let time = cost.reduce_time(algo, bytes);
+                table.row(vec![
+                    format!("{nodes}x{gpus}"),
+                    format!("{:.2}", bytes as f64 / 1e6),
+                    algo.id().into(),
+                    format!("{:.3}", wire as f64 / 1e6),
+                    format!("{:.3}", time * 1e3),
+                    if algo == auto { "<-".into() } else { String::new() },
+                ]);
+                json_rows.push(Json::obj(vec![
+                    ("nodes", Json::num(nodes as f64)),
+                    ("gpus_per_node", Json::num(gpus as f64)),
+                    ("grad_bytes", Json::num(bytes as f64)),
+                    ("algorithm", Json::str(algo.id())),
+                    ("wire_bytes_per_rank", Json::num(wire as f64)),
+                    ("modeled_time_s", Json::num(time)),
+                    ("auto_pick", Json::str(auto.id())),
+                ]));
+            }
+        }
+    }
+    // live exactness + traffic check on real collectives (threads);
+    // finish() prints the table afterwards
+
+    let k = 4usize;
+    let n = 1003; // non-divisible chunking
+    let mut reference: Option<Vec<f32>> = None; // naive's result, the baseline
+    for algo in ReduceAlgo::all() {
+        let world = CommWorld::new(k);
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let comm = world.handle(rank);
+                std::thread::spawn(move || {
+                    let mut grad: Vec<f32> =
+                        (0..n).map(|i| ((i * 7 + rank * 13) % 97) as f32 * 0.125).collect();
+                    let mut params = vec![0.0f32; n];
+                    reduction(algo).reduce_and_apply(
+                        &comm,
+                        &mut grad,
+                        &mut params,
+                        &mut |p, g| p.copy_from_slice(g),
+                    );
+                    params
+                })
+            })
+            .collect();
+        let outs: Vec<Vec<f32>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        anyhow::ensure!(
+            outs.iter().all(|o| o == &outs[0]),
+            "{}: ranks disagree on the reduced result",
+            algo.id()
+        );
+        // cross-ALGORITHM bit-identity (inputs are identical per world)
+        match &reference {
+            None => reference = Some(outs[0].clone()),
+            Some(r) => anyhow::ensure!(
+                &outs[0] == r,
+                "{}: result differs bitwise from naive",
+                algo.id()
+            ),
+        }
+        let s = world.stats.snapshot();
+        anyhow::ensure!(
+            algo != ReduceAlgo::Sharded || s.grad_wire_bytes < s.grad_wire_bytes_naive,
+            "sharded must move fewer gradient bytes than naive"
+        );
+        eprintln!(
+            "exactness ok: {:8}  grad wire {:>7} B (naive baseline {:>7} B, {:.2}x)",
+            algo.id(),
+            s.grad_wire_bytes / k as u64,
+            s.grad_wire_bytes_naive / k as u64,
+            s.grad_wire_saving()
+        );
+    }
+    finish(args, "reduce", table, json_rows)
 }
 
 impl Setting {

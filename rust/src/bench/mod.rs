@@ -5,6 +5,7 @@
 //! | table3    | Table 3 / Fig. 8            | components::table3    |
 //! | table4    | Table 4 / Fig. 9(a,b)       | components::table4    |
 //! | table5    | Table 5 / Fig. 9(c,d)       | components::table5    |
+//! | reduce    | §4 gradient reduction       | components::reduce_table |
 //! | scaling   | Fig. 1/2/10, Tables 12–14   | scaling::scaling      |
 //! | speedup   | Fig. 4(b,c)                 | scaling::speedup      |
 //! | timing    | Fig. 3/11, Tables 15–22     | timing::timing        |
@@ -33,6 +34,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("table3", "inner-LR (gamma) schedule: constant vs cosine (Table 3 / Fig. 8)"),
     ("table4", "temperature update rules v0-v3 (Table 4 / Fig. 9ab)"),
     ("table5", "optimizers SGDM/LAMB/Lion/AdamW (Table 5 / Fig. 9cd)"),
+    ("reduce", "gradient-reduction strategies: naive/ring/sharded bytes-on-wire + exactness"),
     ("scaling", "FastCLIP-v3 vs OpenCLIP across nodes (Fig. 1/2/10, Tables 12-14)"),
     ("speedup", "speedup over 1 node (Fig. 4bc)"),
     ("timing", "per-iteration time breakdown (Fig. 3/11, Tables 15-22)"),
@@ -48,6 +50,7 @@ pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
         "table3" => components::table3(args),
         "table4" => components::table4(args),
         "table5" => components::table5(args),
+        "reduce" => components::reduce_table(args),
         "scaling" => scaling::scaling(args),
         "speedup" => scaling::speedup(args),
         "timing" => timing::timing(args),

@@ -1,0 +1,313 @@
+//! Pluggable gradient-reduction algorithms (DESIGN.md §4 "Gradient
+//! reduction").
+//!
+//! The paper's systems contribution is *where* the P-length parameter
+//! gradient is reduced: naively, every rank materializes the full reduced
+//! gradient and applies the identical optimizer update (replicated
+//! parameters); with the weight-sharded strategy, rank `c` of K reduces
+//! only chunk `c` (a REDUCE_SCATTER), applies its 1/K optimizer shard,
+//! and the updated *parameters* are ALL_GATHERed back — cutting the
+//! gradient bytes each rank puts on the wire from `(K-1)·P` (naive
+//! pairwise exchange) or `2·(K-1)/K·P` (ring) down to `(K-1)/K·P`, and
+//! cutting optimizer state and update FLOPs K-fold. DisCo-CLIP makes the
+//! same sharded-communication argument for memory.
+//!
+//! Three algorithms implement the [`GradientReduction`] trait:
+//!
+//! | algorithm                | dataflow                         | grad wire bytes / rank |
+//! |--------------------------|----------------------------------|------------------------|
+//! | [`NaiveAllReduce`]       | gather K·P, reduce locally       | `(K-1)·P`              |
+//! | [`RingAllReduce`]        | reduce-scatter + all-gather grad | `2·(K-1)/K·P`          |
+//! | [`ShardedReduceScatter`] | reduce-scatter grad, update own  | `(K-1)/K·P` (+ param   |
+//! |                          | shard, all-gather *params*       | all-gather, counted    |
+//! |                          |                                  | separately)            |
+//!
+//! All three reductions are bit-identical by construction: every element
+//! is summed over ranks in rank order `0..K`, so the f32 rounding
+//! sequence is the same regardless of which rank performs the addition.
+//! The exactness tests in `rust/tests/integration.rs` pin this down for
+//! K ∈ {1,2,4} and non-divisible chunkings. One caveat lives above the
+//! collective layer: LAMB computes per-leaf trust ratios, and the sharded
+//! strategy clips leaves at chunk boundaries (ZeRO-style, see
+//! `optim::shard_segments`), so sharded-LAMB *updates* differ from
+//! replicated-LAMB ones — the trainer therefore never resolves `Auto` to
+//! `Sharded` for LAMB; element-wise optimizers (AdamW, Lion, SGDM) are
+//! bit-identical under every strategy.
+//!
+//! Selection is driven by the α–β cost model
+//! ([`CostModel::cheapest_reduce`](super::CostModel::cheapest_reduce)):
+//! small single-node worlds (few peers, latency-bound) prefer the direct
+//! naive exchange, multi-node and bandwidth-bound shapes the chunked
+//! algorithms. The trainer resolves [`ReduceStrategy::Auto`] once per
+//! run from the gradient size.
+
+use super::cost_model::CostModel;
+use super::world::WorkerComm;
+
+/// A concrete reduction algorithm (the resolved form of
+/// [`ReduceStrategy`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceAlgo {
+    /// Every rank gathers all K contributions and reduces the full buffer
+    /// locally. One communication step; `(K-1)·n` wire bytes per rank.
+    Naive,
+    /// Ring all-reduce: reduce-scatter then all-gather of the gradient.
+    /// `2·(K-1)` steps; `2·(K-1)/K·n` wire bytes per rank.
+    Ring,
+    /// The paper's weight-sharded update: reduce-scatter the gradient,
+    /// apply the local optimizer shard, all-gather updated parameters.
+    /// Gradient wire bytes per rank drop to `(K-1)/K·n`.
+    Sharded,
+}
+
+impl ReduceAlgo {
+    pub fn all() -> [ReduceAlgo; 3] {
+        [ReduceAlgo::Naive, ReduceAlgo::Ring, ReduceAlgo::Sharded]
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            ReduceAlgo::Naive => "naive",
+            ReduceAlgo::Ring => "ring",
+            ReduceAlgo::Sharded => "sharded",
+        }
+    }
+}
+
+/// Config-facing strategy: a fixed algorithm or cost-model-driven choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceStrategy {
+    Fixed(ReduceAlgo),
+    /// Pick the cheapest algorithm for the gradient size under the run's
+    /// α–β topology (see [`CostModel::cheapest_reduce`]).
+    Auto,
+}
+
+impl ReduceStrategy {
+    pub fn id(&self) -> &'static str {
+        match self {
+            ReduceStrategy::Fixed(a) => a.id(),
+            ReduceStrategy::Auto => "auto",
+        }
+    }
+
+    pub fn from_id(id: &str) -> anyhow::Result<ReduceStrategy> {
+        if id == "auto" {
+            return Ok(ReduceStrategy::Auto);
+        }
+        for a in ReduceAlgo::all() {
+            if a.id() == id {
+                return Ok(ReduceStrategy::Fixed(a));
+            }
+        }
+        anyhow::bail!("unknown reduce strategy '{id}' (expected naive|ring|sharded|auto)")
+    }
+
+    /// Resolve to a concrete algorithm for a gradient of `grad_bytes`.
+    pub fn resolve(&self, cost: &CostModel, grad_bytes: usize) -> ReduceAlgo {
+        match self {
+            ReduceStrategy::Fixed(a) => *a,
+            ReduceStrategy::Auto => cost.cheapest_reduce(grad_bytes),
+        }
+    }
+}
+
+/// One gradient-reduction algorithm: reduce each rank's additive gradient
+/// contribution across the world and apply the optimizer update, keeping
+/// parameters replicated (bitwise equal) on every rank afterwards.
+///
+/// Calling convention: [`reduce_and_apply`](Self::reduce_and_apply) is a
+/// *collective* — every rank must call it in lockstep with equal-length
+/// `grad`/`params` and an `apply` callback that is deterministic given
+/// its slice arguments. Replicated algorithms invoke `apply` once with
+/// the full parameter/gradient range; [`ShardedReduceScatter`] invokes it
+/// with this rank's owned chunk only (so the caller must size optimizer
+/// state accordingly — see `optim::shard_segments`).
+pub trait GradientReduction: Send + Sync {
+    fn algo(&self) -> ReduceAlgo;
+
+    fn id(&self) -> &'static str {
+        self.algo().id()
+    }
+
+    /// Modeled fabric bytes ONE rank transmits to reduce an `n`-byte
+    /// gradient over `k` ranks (the quantity CommStats accumulates as
+    /// `grad_wire_bytes`). Parameter all-gather traffic of the sharded
+    /// strategy is charged separately as `param_wire_bytes`.
+    fn grad_wire_bytes(&self, k: usize, n: u64) -> u64;
+
+    /// Collective: reduce `grad` over all ranks and apply the update.
+    /// Postcondition: `params` is updated and bitwise replicated on every
+    /// rank. `grad` contents are algorithm-dependent afterwards (the
+    /// replicated algorithms leave the reduced gradient in it, the
+    /// sharded one leaves the local contribution untouched) — treat it as
+    /// scratch.
+    fn reduce_and_apply(
+        &self,
+        comm: &WorkerComm,
+        grad: &mut [f32],
+        params: &mut [f32],
+        apply: &mut dyn FnMut(&mut [f32], &[f32]),
+    );
+}
+
+/// Gather-everything-reduce-locally — the seed's strategy. One
+/// communication step (lowest latency), `(K-1)·n` wire bytes per rank,
+/// O(K·P) local reduction work.
+pub struct NaiveAllReduce;
+
+impl GradientReduction for NaiveAllReduce {
+    fn algo(&self) -> ReduceAlgo {
+        ReduceAlgo::Naive
+    }
+
+    fn grad_wire_bytes(&self, k: usize, n: u64) -> u64 {
+        (k as u64 - 1) * n
+    }
+
+    fn reduce_and_apply(
+        &self,
+        comm: &WorkerComm,
+        grad: &mut [f32],
+        params: &mut [f32],
+        apply: &mut dyn FnMut(&mut [f32], &[f32]),
+    ) {
+        charge(comm, self, grad.len());
+        let n = grad.len();
+        let gathered = comm.all_gather(grad);
+        // rank-major accumulation: sequential access over the K·n buffer,
+        // and per element the additions still happen in rank order from a
+        // 0.0 accumulator — identical f32 rounding on every rank and to
+        // the chunked algorithms below
+        grad.fill(0.0);
+        for r in 0..comm.world_size() {
+            let part = &gathered[r * n..(r + 1) * n];
+            for (g, v) in grad.iter_mut().zip(part) {
+                *g += v;
+            }
+        }
+        apply(params, grad);
+    }
+}
+
+/// Ring all-reduce: reduce-scatter the gradient, all-gather the reduced
+/// chunks. `2·(K-1)/K·n` wire bytes per rank, O(P) local reduction work
+/// (each rank reduces only its chunk).
+pub struct RingAllReduce;
+
+impl GradientReduction for RingAllReduce {
+    fn algo(&self) -> ReduceAlgo {
+        ReduceAlgo::Ring
+    }
+
+    fn grad_wire_bytes(&self, k: usize, n: u64) -> u64 {
+        2 * (k as u64 - 1) * n / k as u64
+    }
+
+    fn reduce_and_apply(
+        &self,
+        comm: &WorkerComm,
+        grad: &mut [f32],
+        params: &mut [f32],
+        apply: &mut dyn FnMut(&mut [f32], &[f32]),
+    ) {
+        charge(comm, self, grad.len());
+        // all_reduce_sum IS the RS+AG ring dataflow, in place and with
+        // the same rank-ordered (bit-identical) summation
+        comm.all_reduce_sum(grad);
+        apply(params, grad);
+    }
+}
+
+/// The paper's weight-sharded reduction: each rank owns chunk `c` of the
+/// flat parameter vector ([`WorkerComm::owned_chunk`]), reduces only that
+/// chunk of the gradient, applies its optimizer shard to `params[lo..hi]`
+/// and all-gathers the updated parameters. The full reduced gradient is
+/// never materialized; optimizer state shrinks K-fold.
+pub struct ShardedReduceScatter;
+
+impl GradientReduction for ShardedReduceScatter {
+    fn algo(&self) -> ReduceAlgo {
+        ReduceAlgo::Sharded
+    }
+
+    fn grad_wire_bytes(&self, k: usize, n: u64) -> u64 {
+        (k as u64 - 1) * n / k as u64
+    }
+
+    fn reduce_and_apply(
+        &self,
+        comm: &WorkerComm,
+        grad: &mut [f32],
+        params: &mut [f32],
+        apply: &mut dyn FnMut(&mut [f32], &[f32]),
+    ) {
+        charge(comm, self, grad.len());
+        let p = params.len();
+        debug_assert_eq!(p, grad.len(), "sharded update needs grad.len == params.len");
+        let shard = comm.reduce_scatter_sum(grad);
+        let (lo, hi) = comm.owned_chunk(p);
+        apply(&mut params[lo..hi], &shard);
+        // the parameter all-gather replaces the gradient all-gather of a
+        // ring all-reduce; charge it to param_wire_bytes
+        let k = comm.world_size() as u64;
+        comm.stats().add_param_wire((k - 1) * (p as u64 * 4) / k.max(1));
+        let updated = comm.all_gather_chunks(&params[lo..hi], p);
+        params.copy_from_slice(&updated);
+    }
+}
+
+/// Charge this iteration's gradient wire bytes: the chosen algorithm's
+/// actual traffic plus, for comparison, what [`NaiveAllReduce`] would
+/// have moved (the before/after pair surfaced by
+/// [`CommStats`](super::CommStats) and `benches/bench_comm.rs`).
+fn charge(comm: &WorkerComm, algo: &dyn GradientReduction, len: usize) {
+    let k = comm.world_size();
+    let bytes = (len * 4) as u64;
+    let stats = comm.stats();
+    stats.add_grad_wire(algo.grad_wire_bytes(k, bytes), NaiveAllReduce.grad_wire_bytes(k, bytes));
+}
+
+/// The static instance implementing `algo` (algorithms are stateless).
+pub fn reduction(algo: ReduceAlgo) -> &'static dyn GradientReduction {
+    match algo {
+        ReduceAlgo::Naive => &NaiveAllReduce,
+        ReduceAlgo::Ring => &RingAllReduce,
+        ReduceAlgo::Sharded => &ShardedReduceScatter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_roundtrip() {
+        for a in ReduceAlgo::all() {
+            assert_eq!(ReduceStrategy::from_id(a.id()).unwrap(), ReduceStrategy::Fixed(a));
+            assert_eq!(reduction(a).algo(), a);
+        }
+        assert_eq!(ReduceStrategy::from_id("auto").unwrap(), ReduceStrategy::Auto);
+        assert!(ReduceStrategy::from_id("nope").is_err());
+    }
+
+    #[test]
+    fn wire_bytes_ordering() {
+        // the paper's volume claim: sharded < ring < naive for K > 2,
+        // sharded < ring == naive at K = 2
+        let n = 1_000_000u64;
+        for k in [2usize, 4, 8, 32] {
+            let naive = NaiveAllReduce.grad_wire_bytes(k, n);
+            let ring = RingAllReduce.grad_wire_bytes(k, n);
+            let sharded = ShardedReduceScatter.grad_wire_bytes(k, n);
+            assert!(sharded < naive, "k={k}");
+            assert!(sharded < ring, "k={k}");
+            assert!(ring <= naive, "k={k}");
+            assert_eq!(sharded, (k as u64 - 1) * n / k as u64);
+        }
+        // K=1 is free
+        for a in ReduceAlgo::all() {
+            assert_eq!(reduction(a).grad_wire_bytes(1, n), 0);
+        }
+    }
+}

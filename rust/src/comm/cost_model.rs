@@ -10,6 +10,7 @@
 
 use anyhow::{bail, Result};
 
+use super::collective::ReduceAlgo;
 use crate::config::NetworkProfile;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -135,6 +136,70 @@ impl CostModel {
             _ => intra + inter,
         }
     }
+
+    /// One flat exchange phase over `k` ranks: every rank sends the full
+    /// `bytes` payload to each of its `k-1` peers (the naive gather-based
+    /// reduce). Latency-optimal (one α per peer, no pipeline startup) but
+    /// bandwidth-pessimal for large payloads.
+    fn flat_exchange(alpha: f64, beta: f64, k: usize, bytes: f64) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
+        let steps = (k - 1) as f64;
+        steps * (alpha + bytes / beta)
+    }
+
+    /// α–β time for one gradient reduction of `bytes` with `algo`
+    /// (hierarchical: intra-node phase then inter-node phase, like
+    /// [`Self::time`]). Used by [`Self::cheapest_reduce`] and the
+    /// per-iteration charge in `coordinator::timing`.
+    ///
+    /// * `Naive`: direct exchange of the full payload with every peer —
+    ///   `(g-1)` intra-node peers plus `(n-1)·g` peers on other nodes,
+    ///   totalling `K-1` sends of `bytes` each, CONSISTENT with the
+    ///   `(K-1)·bytes` per-rank wire accounting of
+    ///   `NaiveAllReduce::grad_wire_bytes`.
+    /// * `Ring`: ring all-reduce (reduce-scatter + all-gather phases).
+    /// * `Sharded`: reduce-scatter of the gradient plus all-gather of the
+    ///   updated parameters — the same total volume as `Ring` on the
+    ///   wire, but only half of it is gradient traffic, and the optimizer
+    ///   update it brackets runs on 1/K of the parameters.
+    pub fn reduce_time(&self, algo: ReduceAlgo, bytes: usize) -> f64 {
+        let p = self.profile;
+        let b = bytes as f64;
+        match algo {
+            ReduceAlgo::Naive => {
+                let (n, g) = (self.nodes, self.gpus_per_node);
+                Self::flat_exchange(p.intra_alpha, p.intra_beta, g, b)
+                    + ((n - 1) * g) as f64 * (p.inter_alpha + b / p.inter_beta)
+            }
+            ReduceAlgo::Ring => self.time(Collective::AllReduce, bytes),
+            ReduceAlgo::Sharded => {
+                self.time(Collective::ReduceScatter, bytes)
+                    + self.time(Collective::AllGather, bytes)
+            }
+        }
+    }
+
+    /// The selection policy for [`super::ReduceStrategy::Auto`]: the
+    /// algorithm with the lowest modeled [`Self::reduce_time`] for this
+    /// payload, preferring `Sharded` on ties (it moves the fewest
+    /// gradient bytes and shards optimizer state K-fold, neither of which
+    /// the α–β time captures). The crossover is real: small single-node
+    /// worlds (few peers, latency-bound) pick the direct naive exchange,
+    /// multi-node and bandwidth-bound shapes pick the chunked algorithms.
+    pub fn cheapest_reduce(&self, bytes: usize) -> ReduceAlgo {
+        let mut best = ReduceAlgo::Sharded;
+        let mut best_t = self.reduce_time(best, bytes);
+        for algo in [ReduceAlgo::Ring, ReduceAlgo::Naive] {
+            let t = self.reduce_time(algo, bytes);
+            if t < best_t {
+                best = algo;
+                best_t = t;
+            }
+        }
+        best
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +254,68 @@ mod tests {
         let scalar = m.time(Collective::AllGather, kb * 4);
         let feature = m.time(Collective::ReduceScatter, kb * 512 * 4);
         assert!(feature > 10.0 * scalar);
+    }
+
+    #[test]
+    fn reduce_time_ring_matches_all_reduce() {
+        let m = model(4);
+        for bytes in [1usize << 10, 1 << 24] {
+            let ring = m.reduce_time(ReduceAlgo::Ring, bytes);
+            assert_eq!(ring, m.time(Collective::AllReduce, bytes));
+            // sharded = RS + AG = same total α–β volume as a ring all-reduce
+            let sharded = m.reduce_time(ReduceAlgo::Sharded, bytes);
+            assert!((sharded - ring).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cheapest_reduce_crossover() {
+        // big world, big gradient: bandwidth-bound -> chunked (sharded)
+        let m = model(8);
+        assert_eq!(m.cheapest_reduce(150_000_000 * 4), ReduceAlgo::Sharded);
+        // multi-node even for tiny payloads: naive pays (n-1)*g alphas,
+        // the chunked algorithms only 2(k-1) ring steps -> sharded
+        assert_eq!(m.cheapest_reduce(8), ReduceAlgo::Sharded);
+        // tiny payload on one node: latency-bound -> direct naive exchange
+        // ((g-1) alphas vs 2(g-1) ring steps)
+        let m4 = CostModel::new(ProfileName::InfiniBand.profile(), 1, 4);
+        assert_eq!(m4.cheapest_reduce(8), ReduceAlgo::Naive);
+        // K=2 world: one direct send always beats two ring steps
+        let m2 = CostModel::new(ProfileName::InfiniBand.profile(), 1, 2);
+        assert_eq!(m2.cheapest_reduce(150_000_000 * 4), ReduceAlgo::Naive);
+        // single rank: everything is free; the tie-break prefers sharded
+        let m1 = CostModel::new(ProfileName::InfiniBand.profile(), 1, 1);
+        assert_eq!(m1.cheapest_reduce(1 << 20), ReduceAlgo::Sharded);
+    }
+
+    #[test]
+    fn naive_time_consistent_with_wire_bytes() {
+        // the time model and the wire accounting describe the SAME
+        // algorithm: K-1 full-payload sends per rank
+        let m = model(8); // 8 nodes x 4 gpus -> K-1 = 31 peers
+        let b = 1 << 20;
+        let t = m.reduce_time(ReduceAlgo::Naive, b);
+        let p = ProfileName::InfiniBand.profile();
+        let expect = 3.0 * (p.intra_alpha + b as f64 / p.intra_beta)
+            + 28.0 * (p.inter_alpha + b as f64 / p.inter_beta);
+        assert!((t - expect).abs() < 1e-15, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn naive_reduce_time_shape() {
+        // monotone in bytes and in world size
+        let m = model(4);
+        assert!(
+            m.reduce_time(ReduceAlgo::Naive, 1 << 20) > m.reduce_time(ReduceAlgo::Naive, 1 << 10)
+        );
+        assert!(
+            model(8).reduce_time(ReduceAlgo::Naive, 1 << 20)
+                > model(2).reduce_time(ReduceAlgo::Naive, 1 << 20)
+        );
+        // large payloads: naive pays (k-1)/k more bandwidth than ring
+        let naive = m.reduce_time(ReduceAlgo::Naive, 1 << 26);
+        let ring = m.reduce_time(ReduceAlgo::Ring, 1 << 26);
+        assert!(naive > ring);
     }
 
     #[test]

@@ -4,6 +4,18 @@
 //! the same order (lockstep), as with MPI/NCCL. Data really moves (the
 //! numerics of distributed training are exact); time is charged separately
 //! through [`super::CostModel`] by the coordinator.
+//!
+//! Two kinds of byte accounting coexist in [`CommStats`]:
+//!
+//! * **payload counters** (`*_bytes`): the per-rank payload each collective
+//!   was called with — what the seed tracked, useful for cross-checking
+//!   the modeled volumes;
+//! * **wire counters** (`grad_wire_bytes`, `grad_wire_bytes_naive`,
+//!   `param_wire_bytes`): the bytes a real fabric would carry per rank
+//!   under the chosen gradient-reduction algorithm, charged by
+//!   [`super::GradientReduction::reduce_and_apply`]. The
+//!   naive-baseline counter is always charged alongside the chosen
+//!   algorithm's, so every run carries its own before/after comparison.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
@@ -13,18 +25,80 @@ use std::sync::{Arc, Barrier, Mutex};
 pub struct CommStats {
     pub all_gather_bytes: AtomicU64,
     pub all_reduce_bytes: AtomicU64,
+    pub reduce_scatter_bytes: AtomicU64,
     pub broadcast_bytes: AtomicU64,
     pub ops: AtomicU64,
+    /// modeled fabric bytes per rank moved reducing gradients, under the
+    /// algorithm actually used
+    pub grad_wire_bytes: AtomicU64,
+    /// what [`super::NaiveAllReduce`] would have moved for the same
+    /// reductions — the "before" of the before/after comparison
+    pub grad_wire_bytes_naive: AtomicU64,
+    /// sharded strategy only: the updated-parameter all-gather traffic
+    pub param_wire_bytes: AtomicU64,
+}
+
+/// A point-in-time copy of [`CommStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommStatsSnapshot {
+    pub all_gather_bytes: u64,
+    pub all_reduce_bytes: u64,
+    pub reduce_scatter_bytes: u64,
+    pub broadcast_bytes: u64,
+    pub ops: u64,
+    pub grad_wire_bytes: u64,
+    pub grad_wire_bytes_naive: u64,
+    pub param_wire_bytes: u64,
+}
+
+impl CommStatsSnapshot {
+    /// Total collective payload bytes (the seed's `comm_bytes` quantity).
+    pub fn payload_bytes(&self) -> u64 {
+        self.all_gather_bytes
+            + self.all_reduce_bytes
+            + self.reduce_scatter_bytes
+            + self.broadcast_bytes
+    }
+
+    /// Gradient bytes-on-wire saving of the chosen reduction algorithm
+    /// over naive all-reduce (1.0 = no saving; 2·(K-1)/K·… see
+    /// [`super::collective`]). Returns 1.0 when nothing was reduced.
+    pub fn grad_wire_saving(&self) -> f64 {
+        if self.grad_wire_bytes == 0 {
+            return 1.0;
+        }
+        self.grad_wire_bytes_naive as f64 / self.grad_wire_bytes as f64
+    }
 }
 
 impl CommStats {
-    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
-        (
-            self.all_gather_bytes.load(Ordering::Relaxed),
-            self.all_reduce_bytes.load(Ordering::Relaxed),
-            self.broadcast_bytes.load(Ordering::Relaxed),
-            self.ops.load(Ordering::Relaxed),
-        )
+    pub fn snapshot(&self) -> CommStatsSnapshot {
+        CommStatsSnapshot {
+            all_gather_bytes: self.all_gather_bytes.load(Ordering::Relaxed),
+            all_reduce_bytes: self.all_reduce_bytes.load(Ordering::Relaxed),
+            reduce_scatter_bytes: self.reduce_scatter_bytes.load(Ordering::Relaxed),
+            broadcast_bytes: self.broadcast_bytes.load(Ordering::Relaxed),
+            ops: self.ops.load(Ordering::Relaxed),
+            grad_wire_bytes: self.grad_wire_bytes.load(Ordering::Relaxed),
+            grad_wire_bytes_naive: self.grad_wire_bytes_naive.load(Ordering::Relaxed),
+            param_wire_bytes: self.param_wire_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    fn add_payload(&self, counter: &AtomicU64, len_f32: usize) {
+        counter.fetch_add((len_f32 * 4) as u64, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Charge one gradient reduction: the chosen algorithm's wire bytes
+    /// and the naive baseline's, per rank.
+    pub fn add_grad_wire(&self, chosen: u64, naive: u64) {
+        self.grad_wire_bytes.fetch_add(chosen, Ordering::Relaxed);
+        self.grad_wire_bytes_naive.fetch_add(naive, Ordering::Relaxed);
+    }
+
+    pub fn add_param_wire(&self, bytes: u64) {
+        self.param_wire_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 }
 
@@ -75,8 +149,19 @@ impl WorkerComm {
         self.world.k
     }
 
+    pub fn stats(&self) -> &CommStats {
+        &self.world.stats
+    }
+
     pub fn barrier(&self) {
         self.world.barrier.wait();
+    }
+
+    /// Bounds `[lo, hi)` of the chunk this rank owns when an `n`-element
+    /// buffer is split over the world in `ceil(n/K)`-sized chunks (the
+    /// last chunks may be short or empty when K does not divide n).
+    pub fn owned_chunk(&self, n: usize) -> (usize, usize) {
+        chunk_bounds(n, self.world.k, self.rank)
     }
 
     /// Concatenate every rank's `data` in rank order. All ranks must pass
@@ -91,8 +176,7 @@ impl WorkerComm {
             slot.clear();
             slot.extend_from_slice(data);
         }
-        w.stats.all_gather_bytes.fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
-        w.stats.ops.fetch_add(1, Ordering::Relaxed);
+        w.stats.add_payload(&w.stats.all_gather_bytes, data.len());
         self.barrier();
         let mut out = Vec::with_capacity(data.len() * w.k);
         for r in 0..w.k {
@@ -100,6 +184,60 @@ impl WorkerComm {
         }
         self.barrier(); // slots free for reuse
         out
+    }
+
+    /// Concatenate per-rank chunks of *unequal* lengths in rank order —
+    /// the gather half of the sharded strategy, where the chunking of
+    /// [`Self::owned_chunk`] leaves the tail ranks short. `total_len` is
+    /// the expected concatenated length (a cheap lockstep sanity check).
+    pub fn all_gather_chunks(&self, mine: &[f32], total_len: usize) -> Vec<f32> {
+        let w = &self.world;
+        if w.k == 1 {
+            assert_eq!(mine.len(), total_len);
+            return mine.to_vec();
+        }
+        {
+            let mut slot = w.slots[self.rank].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(mine);
+        }
+        w.stats.add_payload(&w.stats.all_gather_bytes, mine.len());
+        self.barrier();
+        let mut out = Vec::with_capacity(total_len);
+        for r in 0..w.k {
+            out.extend_from_slice(&w.slots[r].lock().unwrap());
+        }
+        self.barrier(); // slots free for reuse
+        assert_eq!(out.len(), total_len, "ranks disagreed on chunking");
+        out
+    }
+
+    /// SUM-reduce `buf` across ranks and return only the chunk this rank
+    /// owns (see [`Self::owned_chunk`]). Elements are summed in rank
+    /// order `0..K`, so the result is bit-identical to a rank-ordered
+    /// local reduction of the same contributions.
+    pub fn reduce_scatter_sum(&self, buf: &[f32]) -> Vec<f32> {
+        let w = &self.world;
+        if w.k == 1 {
+            return buf.to_vec();
+        }
+        {
+            let mut slot = w.slots[self.rank].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(buf);
+        }
+        w.stats.add_payload(&w.stats.reduce_scatter_bytes, buf.len());
+        self.barrier();
+        let (lo, hi) = self.owned_chunk(buf.len());
+        let mut acc = vec![0.0f32; hi - lo];
+        for r in 0..w.k {
+            let slot = w.slots[r].lock().unwrap();
+            for (a, v) in acc.iter_mut().zip(&slot[lo..hi]) {
+                *a += v;
+            }
+        }
+        self.barrier(); // slots free for reuse
+        acc
     }
 
     /// Element-wise SUM across ranks, result replicated into `buf`.
@@ -115,14 +253,11 @@ impl WorkerComm {
             slot.clear();
             slot.extend_from_slice(buf);
         }
-        w.stats.all_reduce_bytes.fetch_add((buf.len() * 4) as u64, Ordering::Relaxed);
-        w.stats.ops.fetch_add(1, Ordering::Relaxed);
+        w.stats.add_payload(&w.stats.all_reduce_bytes, buf.len());
         self.barrier();
 
         let n = buf.len();
-        let chunk = n.div_ceil(w.k);
-        let lo = (self.rank * chunk).min(n);
-        let hi = ((self.rank + 1) * chunk).min(n);
+        let (lo, hi) = self.owned_chunk(n);
         {
             let mut acc = vec![0.0f32; hi - lo];
             for r in 0..w.k {
@@ -136,8 +271,7 @@ impl WorkerComm {
         }
         self.barrier();
         for r in 0..w.k {
-            let lo_r = (r * chunk).min(n);
-            let hi_r = ((r + 1) * chunk).min(n);
+            let (lo_r, hi_r) = chunk_bounds(n, w.k, r);
             let part = w.chunks[r].lock().unwrap();
             buf[lo_r..hi_r].copy_from_slice(&part);
         }
@@ -163,8 +297,7 @@ impl WorkerComm {
             let mut slot = w.slots[root].lock().unwrap();
             slot.clear();
             slot.extend_from_slice(buf);
-            w.stats.broadcast_bytes.fetch_add((buf.len() * 4) as u64, Ordering::Relaxed);
-            w.stats.ops.fetch_add(1, Ordering::Relaxed);
+            w.stats.add_payload(&w.stats.broadcast_bytes, buf.len());
         }
         self.barrier();
         if self.rank != root {
@@ -173,6 +306,13 @@ impl WorkerComm {
         }
         self.barrier();
     }
+}
+
+/// `[lo, hi)` of chunk `r` when `n` elements are split into `ceil(n/k)`
+/// chunks (tail chunks short or empty for non-divisible n).
+fn chunk_bounds(n: usize, k: usize, r: usize) -> (usize, usize) {
+    let chunk = n.div_ceil(k);
+    ((r * chunk).min(n), ((r + 1) * chunk).min(n))
 }
 
 #[cfg(test)]
@@ -231,6 +371,46 @@ mod tests {
     }
 
     #[test]
+    fn reduce_scatter_chunks_tile_the_buffer() {
+        // non-divisible: n=10 over k=4 gives chunks 3,3,3,1
+        for (k, n) in [(1usize, 7usize), (2, 9), (4, 10), (3, 1000)] {
+            let outs = run_workers(k, move |c| {
+                let buf: Vec<f32> = (0..n).map(|i| i as f32 * (c.rank() + 1) as f32).collect();
+                c.reduce_scatter_sum(&buf)
+            });
+            let scale: f32 = (1..=k).map(|r| r as f32).sum();
+            let mut covered = 0;
+            for (r, o) in outs.iter().enumerate() {
+                let chunk = n.div_ceil(k);
+                let lo = (r * chunk).min(n);
+                let hi = ((r + 1) * chunk).min(n);
+                assert_eq!(o.len(), hi - lo, "k={k} n={n} r={r}");
+                for (j, v) in o.iter().enumerate() {
+                    let want = (lo + j) as f32 * scale;
+                    assert!((v - want).abs() < 1e-3, "k={k} n={n} r={r} j={j}");
+                }
+                covered += o.len();
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn all_gather_chunks_reassembles_uneven() {
+        for (k, n) in [(1usize, 5usize), (2, 9), (4, 10), (3, 7)] {
+            let outs = run_workers(k, move |c| {
+                let (lo, hi) = c.owned_chunk(n);
+                let mine: Vec<f32> = (lo..hi).map(|i| i as f32).collect();
+                c.all_gather_chunks(&mine, n)
+            });
+            let expect: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            for o in outs {
+                assert_eq!(o, expect, "k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
     fn all_reduce_mean_correct() {
         let outs = run_workers(4, |c| {
             let mut buf = vec![c.rank() as f32; 5];
@@ -259,13 +439,15 @@ mod tests {
     #[test]
     fn repeated_collectives_no_deadlock() {
         let outs = run_workers(3, |c| {
-            let mut acc = vec![0.0f32; 2];
+            let mut acc = vec![0.0f32; 3];
             for it in 0..50 {
                 let g = c.all_gather(&[it as f32, c.rank() as f32]);
                 acc[0] += g.iter().sum::<f32>();
                 let mut buf = vec![1.0f32; 2];
                 c.all_reduce_sum(&mut buf);
                 acc[1] += buf[0];
+                let chunk = c.reduce_scatter_sum(&[1.0; 5]);
+                acc[2] += chunk.iter().sum::<f32>();
             }
             acc
         });
@@ -281,11 +463,16 @@ mod tests {
         let h1 = world.handle(1);
         let t = std::thread::spawn(move || {
             h1.all_gather(&[1.0; 8]);
+            h1.reduce_scatter_sum(&[1.0; 8]);
         });
         h0.all_gather(&[2.0; 8]);
+        h0.reduce_scatter_sum(&[2.0; 8]);
         t.join().unwrap();
-        let (ag, _, _, ops) = world.stats.snapshot();
-        assert_eq!(ag, 2 * 8 * 4);
-        assert_eq!(ops, 2);
+        let s = world.stats.snapshot();
+        assert_eq!(s.all_gather_bytes, 2 * 8 * 4);
+        assert_eq!(s.reduce_scatter_bytes, 2 * 8 * 4);
+        assert_eq!(s.ops, 4);
+        assert_eq!(s.payload_bytes(), 4 * 8 * 4);
+        assert_eq!(s.grad_wire_saving(), 1.0, "no gradient reductions charged");
     }
 }

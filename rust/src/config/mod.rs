@@ -327,6 +327,10 @@ pub struct TrainConfig {
     pub nodes: usize,
     pub gpus_per_node: usize,
     pub network: crate::comm::ProfileName,
+    /// gradient-reduction algorithm (DESIGN.md §4 "Gradient reduction"):
+    /// naive | ring | sharded, or auto to let the α–β cost model pick the
+    /// cheapest for the gradient size
+    pub reduce: crate::comm::ReduceStrategy,
     /// FastCLIP-v3: decay tau_lr to 1/3 when τ < 0.03 (Appendix B)
     pub tau_lr_decay_below: Option<f32>,
 }
@@ -364,6 +368,7 @@ impl TrainConfig {
             nodes: 1,
             gpus_per_node: 4,
             network: crate::comm::ProfileName::InfiniBand,
+            reduce: crate::comm::ReduceStrategy::Auto,
             tau_lr_decay_below: if algorithm == Algorithm::FastClipV3 { Some(0.03) } else { None },
         }
     }
@@ -405,7 +410,7 @@ impl TrainConfig {
         const KNOWN: &[&str] = &[
             "algorithm", "artifact_dir", "steps", "iters_per_epoch", "seed",
             "tau_init", "tau_lr", "tau_min", "eps", "rho", "eval_every",
-            "nodes", "gpus_per_node", "network", "tau_lr_decay_below",
+            "nodes", "gpus_per_node", "network", "reduce", "tau_lr_decay_below",
             "optimizer.kind", "optimizer.beta1", "optimizer.beta2",
             "optimizer.eps", "optimizer.weight_decay", "optimizer.momentum",
             "lr.peak", "lr.min", "lr.warmup_iters", "lr.total_iters",
@@ -429,6 +434,7 @@ impl TrainConfig {
         cfg.nodes = kv.parse_or("nodes", cfg.nodes)?;
         cfg.gpus_per_node = kv.parse_or("gpus_per_node", cfg.gpus_per_node)?;
         cfg.network = crate::comm::ProfileName::from_id(&kv.str_or("network", "infiniband"))?;
+        cfg.reduce = crate::comm::ReduceStrategy::from_id(&kv.str_or("reduce", cfg.reduce.id()))?;
         if let Some(v) = kv.get("tau_lr_decay_below") {
             cfg.tau_lr_decay_below = Some(v.parse().map_err(anyhow::Error::msg)?);
         }
@@ -491,6 +497,7 @@ impl TrainConfig {
         let _ = writeln!(s, "nodes = {}", self.nodes);
         let _ = writeln!(s, "gpus_per_node = {}", self.gpus_per_node);
         let _ = writeln!(s, "network = \"{}\"", self.network.id());
+        let _ = writeln!(s, "reduce = \"{}\"", self.reduce.id());
         if let Some(v) = self.tau_lr_decay_below {
             let _ = writeln!(s, "tau_lr_decay_below = {v}");
         }
@@ -581,6 +588,7 @@ mod tests {
         cfg.optimizer.kind = OptimizerKind::Lion;
         cfg.gamma = GammaSchedule::Cosine { gamma_min: 0.4, decay_epochs: 9 };
         cfg.eps = 1e-6;
+        cfg.reduce = crate::comm::ReduceStrategy::Fixed(crate::comm::ReduceAlgo::Sharded);
         let text = cfg.to_file_string();
         let kv = crate::util::KvFile::parse(&text).unwrap();
         let back = TrainConfig::from_kv(&kv).unwrap();
@@ -588,6 +596,7 @@ mod tests {
         assert_eq!(back.gamma, cfg.gamma);
         assert_eq!(back.steps, cfg.steps);
         assert_eq!(back.optimizer.kind, OptimizerKind::Lion);
+        assert_eq!(back.reduce, cfg.reduce);
         assert!((back.eps - 1e-6).abs() < 1e-12);
     }
 

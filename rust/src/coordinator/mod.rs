@@ -16,5 +16,8 @@ mod trainer;
 
 pub use state::{IndividualTau, UState};
 pub use temperature::{GlobalTau, TauState};
-pub use timing::{charge_iteration, IterationVolumes, PerIterMs, TimeBreakdown, OVERLAP_FRACTION};
+pub use timing::{
+    charge_iteration, charge_iteration_with, IterationVolumes, PerIterMs, TimeBreakdown,
+    OVERLAP_FRACTION,
+};
 pub use trainer::{EvalRecord, IterRecord, TrainResult, Trainer};

@@ -11,7 +11,7 @@
 //! u gathers (and OpenCLIP's REDUCE_SCATTER) happen between forward and
 //! backward and are blocking.
 
-use crate::comm::{Collective, CostModel};
+use crate::comm::{Collective, CostModel, ReduceAlgo};
 use crate::config::CommPattern;
 
 /// Fraction of the `step` computation available to hide the gradient
@@ -134,13 +134,33 @@ impl IterationVolumes {
     }
 }
 
-/// Charge one iteration's communication to the breakdown. `step_compute_s`
-/// is the measured step-graph time of this iteration (the overlap budget).
+/// Charge one iteration's communication to the breakdown, reducing the
+/// gradient with a ring all-reduce (the historical default; equivalent to
+/// [`charge_iteration_with`] with [`ReduceAlgo::Ring`]).
 pub fn charge_iteration(
     bd: &mut TimeBreakdown,
     model: &CostModel,
     vol: &IterationVolumes,
     step_compute_s: f64,
+) {
+    charge_iteration_with(bd, model, vol, step_compute_s, ReduceAlgo::Ring);
+}
+
+/// Charge one iteration's communication to the breakdown. `step_compute_s`
+/// is the measured step-graph time of this iteration (the overlap budget);
+/// `grad_algo` is the gradient-reduction algorithm the trainer resolved,
+/// which sets the α–β cost of the gradient phase
+/// ([`CostModel::reduce_time`]). For the sharded strategy that phase is
+/// the gradient reduce-scatter plus the updated-parameter all-gather; the
+/// latter happens after the optimizer shard runs, but it can overlap the
+/// *next* iteration's forward just as the bucketed all-reduce overlaps
+/// backward, so it shares the same overlap budget.
+pub fn charge_iteration_with(
+    bd: &mut TimeBreakdown,
+    model: &CostModel,
+    vol: &IterationVolumes,
+    step_compute_s: f64,
+    grad_algo: ReduceAlgo,
 ) {
     let blocking = model.time(Collective::AllGather, vol.feature_gather_bytes)
         + if vol.scalar_gather_bytes > 0 {
@@ -153,7 +173,7 @@ pub fn charge_iteration(
         } else {
             0.0
         };
-    let grad = model.time(Collective::AllReduce, vol.grad_reduce_bytes);
+    let grad = model.reduce_time(grad_algo, vol.grad_reduce_bytes);
     let overlap = grad.min(OVERLAP_FRACTION * step_compute_s);
 
     bd.comm_total_s += blocking + grad;
@@ -252,6 +272,31 @@ mod tests {
         bd.merge(&other);
         assert_eq!(bd.iterations, 4);
         assert!((bd.compute_s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_algo_changes_only_the_grad_phase() {
+        let m = model(8);
+        let vol = volumes(CommPattern::FastClip);
+        let mut ring = TimeBreakdown::default();
+        let mut naive = TimeBreakdown::default();
+        let mut sharded = TimeBreakdown::default();
+        charge_iteration_with(&mut ring, &m, &vol, 0.0, ReduceAlgo::Ring);
+        charge_iteration_with(&mut naive, &m, &vol, 0.0, ReduceAlgo::Naive);
+        charge_iteration_with(&mut sharded, &m, &vol, 0.0, ReduceAlgo::Sharded);
+        // ring == the historical AllReduce charge; sharded == RS + AG == ring
+        let legacy = {
+            let mut bd = TimeBreakdown::default();
+            charge_iteration(&mut bd, &m, &vol, 0.0);
+            bd
+        };
+        assert_eq!(ring, legacy);
+        assert!((sharded.comm_total_s - ring.comm_total_s).abs() < 1e-12);
+        // a 20 MB gradient over 8 nodes is bandwidth-bound: naive pays more
+        assert!(naive.comm_total_s > ring.comm_total_s);
+        // the blocking (gather) part is identical across algorithms
+        let blocking = |bd: &TimeBreakdown| bd.comm_total_s - m.reduce_time(ReduceAlgo::Ring, vol.grad_reduce_bytes);
+        assert!((blocking(&ring) - blocking(&sharded)).abs() < 1e-12);
     }
 
     #[test]

@@ -9,28 +9,37 @@
 //!      [OpenCLIP instead pays a REDUCE_SCATTER of feature-sized
 //!       gradient terms here; charged to the cost model]
 //!   5. runs `step_<variant>` → gradient contribution            (compute)
-//!   6. SUM-ALL_REDUCEs gradient + loss + τ-gradient — O(P)      (comm)
+//!   6. reduces gradient + loss + τ-gradient — O(P)              (comm)
 //!   7. applies the optimizer, temperature rule and schedules    (others)
+//!
+//! Steps 6–7 for the parameter gradient go through the pluggable
+//! [`GradientReduction`](crate::comm::GradientReduction) algorithms
+//! (DESIGN.md §4 "Gradient reduction"): replicated strategies (naive /
+//! ring) materialize the reduced gradient everywhere and every worker
+//! applies the identical full-length optimizer update; the paper's
+//! sharded strategy reduce-scatters the gradient, each rank applies its
+//! 1/K optimizer shard, and the updated parameters are all-gathered. All
+//! strategies leave parameters bitwise replicated; `cfg.reduce` selects
+//! one (or `auto` asks the α–β cost model).
 //!
 //! Numerics are exact (bytes really move between threads); communication
 //! *time* is charged by the α–β cost model over the configured topology
-//! (`timing.rs`). Parameters are replicated: every worker applies the
-//! identical update to its replica, so they stay bitwise equal.
+//! (`timing.rs`).
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::comm::{CommWorld, CostModel, WorkerComm};
-use crate::config::TrainConfig;
+use crate::comm::{reduction, CommWorld, CostModel, ReduceAlgo, ReduceStrategy, WorkerComm};
+use crate::config::{OptimizerKind, TrainConfig};
 use crate::data::{Dataset, ShardLoader};
 use crate::eval::{evaluate, EvalSummary};
 use crate::runtime::{Manifest, TauGrads, TauInput, WorkerRuntime};
 
 use super::state::UState;
 use super::temperature::TauState;
-use super::timing::{charge_iteration, IterationVolumes, TimeBreakdown};
+use super::timing::{charge_iteration_with, IterationVolumes, TimeBreakdown};
 
 /// One logged training iteration (rank-0 view; loss is the global mean).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -59,8 +68,15 @@ pub struct TrainResult {
     pub final_eval: EvalSummary,
     /// rank-0 timing (workers are symmetric)
     pub timing: TimeBreakdown,
+    /// the gradient-reduction algorithm the run resolved (`cfg.reduce`)
+    pub reduce_algorithm: &'static str,
     /// real bytes moved through the in-process collectives, all ranks
     pub comm_bytes: u64,
+    /// modeled gradient bytes-on-wire per rank over the whole run, under
+    /// the chosen reduction algorithm…
+    pub grad_wire_bytes: u64,
+    /// …and what naive all-reduce would have moved (before/after pair)
+    pub grad_wire_bytes_naive: u64,
     /// modeled communication volume per iteration (bytes, one worker)
     pub modeled_iter_bytes: usize,
     pub final_tau: f32,
@@ -145,7 +161,7 @@ impl Trainer {
             }
         }
         let out = rank0.expect("rank 0 output");
-        let (ag, ar, bc, _ops) = world.stats.snapshot();
+        let stats = world.stats.snapshot();
 
         Ok(TrainResult {
             algorithm: self.cfg.algorithm.name(),
@@ -153,7 +169,11 @@ impl Trainer {
             evals: out.evals,
             final_eval: out.final_eval.expect("rank 0 evaluates at end"),
             timing: out.timing,
-            comm_bytes: ag + ar + bc,
+            reduce_algorithm: out.reduce_id,
+            comm_bytes: stats.payload_bytes(),
+            // per-rank counters are charged by all K ranks; report one rank's
+            grad_wire_bytes: stats.grad_wire_bytes / k as u64,
+            grad_wire_bytes_naive: stats.grad_wire_bytes_naive / k as u64,
             modeled_iter_bytes: out.modeled_iter_bytes,
             final_tau: out.final_tau,
             final_params: out.params,
@@ -168,6 +188,7 @@ struct WorkerOutput {
     final_eval: Option<EvalSummary>,
     timing: TimeBreakdown,
     modeled_iter_bytes: usize,
+    reduce_id: &'static str,
     final_tau: f32,
     params: Vec<f32>,
 }
@@ -191,12 +212,36 @@ fn worker_loop(
     let mut loader = ShardLoader::new(cfg.data.n_train, rank, k, bl, cfg.seed);
     let mut ustate = UState::new(loader.shard_len());
     let mut tau = TauState::new(&cfg, loader.shard_len());
-    let mut optimizer = crate::optim::build(&cfg.optimizer, p, manifest.segments());
     let mut params = manifest.load_init_params()?;
 
     // communication accounting: modeled topology (cfg.nodes×gpus_per_node)
     // may exceed the thread count — volumes and α–β times follow the model
     let cost = CostModel::new(cfg.network.profile(), cfg.nodes, cfg.gpus_per_node);
+
+    // gradient-reduction strategy: resolved once from the gradient size;
+    // the sharded strategy builds optimizer state over this rank's chunk
+    // only (segments clipped to the shard, DESIGN.md §4)
+    let mut algo = cfg.reduce.resolve(&cost, p * 4);
+    if algo == ReduceAlgo::Sharded
+        && cfg.reduce == ReduceStrategy::Auto
+        && cfg.optimizer.kind == OptimizerKind::Lamb
+    {
+        // LAMB's trust ratio is per leaf; sharding clips leaves at chunk
+        // boundaries and changes the numerics (optim::shard_segments).
+        // Auto never trades exactness for bytes — keep the update
+        // replicated. An explicit `reduce = "sharded"` still opts in.
+        algo = ReduceAlgo::Ring;
+    }
+    let reducer = reduction(algo);
+    let (lo, hi) = comm.owned_chunk(p);
+    let mut optimizer = match algo {
+        ReduceAlgo::Sharded => crate::optim::build(
+            &cfg.optimizer,
+            hi - lo,
+            crate::optim::shard_segments(&manifest.segments(), lo, hi),
+        ),
+        _ => crate::optim::build(&cfg.optimizer, p, manifest.segments()),
+    };
     let n_scalar_vectors = if individual_tau { 4 } else { 2 };
     let volumes = IterationVolumes::for_pattern(
         cfg.algorithm.comm_pattern(),
@@ -262,9 +307,7 @@ fn worker_loop(
             cfg.eps, cfg.rho, tau_input,
         )?;
 
-        // 6. reduce gradient + scalars --------------------------------- (comm)
-        let mut grad = out.grad;
-        comm.all_reduce_sum(&mut grad);
+        // 6. reduce scalars; reduce gradient + apply optimizer -------- (comm)
         let mut scalars = [out.loss, 0.0];
         if let TauGrads::Global(g) = out.tau {
             scalars[1] = g;
@@ -272,9 +315,20 @@ fn worker_loop(
         comm.all_reduce_sum(&mut scalars);
         let (loss, tau_grad) = (scalars[0], scalars[1]);
 
-        // 7. optimizer + temperature + schedules ---------------------- (others)
+        // the strategy fuses reduction and optimizer application: the
+        // sharded algorithm must run the optimizer between its
+        // reduce-scatter and parameter all-gather phases
+        let mut grad = out.grad;
+        let mut opt_s = 0.0f64;
+        reducer.reduce_and_apply(&comm, &mut grad, &mut params, &mut |pslice, gslice| {
+            let t_opt = Instant::now();
+            optimizer.step(pslice, gslice, lr);
+            opt_s += t_opt.elapsed().as_secs_f64();
+        });
+        others_s += opt_s;
+
+        // 7. temperature + schedules ---------------------------------- (others)
         let t_other = Instant::now();
-        optimizer.step(&mut params, &grad, lr);
         match (&mut tau, out.tau) {
             (TauState::Constant(_), _) => {}
             (TauState::Global(g), TauGrads::Global(_)) => g.step(tau_grad),
@@ -290,7 +344,7 @@ fn worker_loop(
         timing.compute_s += runtime_compute_s(&rt) - compute_before;
         timing.others_s += others_s;
         timing.iterations += 1;
-        charge_iteration(&mut timing, &cost, &volumes, step_compute);
+        charge_iteration_with(&mut timing, &cost, &volumes, step_compute, algo);
 
         if rank == 0 {
             history.push(IterRecord { step: t, epoch, loss, gamma, lr, tau: tau.mean_tau() });
@@ -324,6 +378,7 @@ fn worker_loop(
         final_eval,
         timing,
         modeled_iter_bytes: volumes.total_bytes(),
+        reduce_id: algo.id(),
         final_tau: tau.mean_tau(),
         params,
     })
@@ -430,6 +485,32 @@ mod tests {
         let rv = Trainer::new(v3).unwrap().run().unwrap();
         assert!(ro.modeled_iter_bytes > rv.modeled_iter_bytes);
         assert!(ro.timing.comm_pure_s > rv.timing.comm_pure_s);
+    }
+
+    #[test]
+    fn reduce_strategies_bitwise_agree_end_to_end() {
+        if !available() {
+            return;
+        }
+        use crate::comm::{ReduceAlgo, ReduceStrategy};
+        let run = |algo: ReduceAlgo| {
+            let mut cfg = quick_cfg(Algorithm::FastClipV1, 5);
+            cfg.reduce = ReduceStrategy::Fixed(algo);
+            Trainer::new(cfg).unwrap().run().unwrap()
+        };
+        let naive = run(ReduceAlgo::Naive);
+        let ring = run(ReduceAlgo::Ring);
+        let sharded = run(ReduceAlgo::Sharded);
+        // all strategies sum in rank order: bitwise-identical training
+        assert_eq!(naive.final_params, ring.final_params);
+        assert_eq!(naive.final_params, sharded.final_params);
+        for (a, b) in naive.history.iter().zip(&sharded.history) {
+            assert_eq!(a.loss, b.loss);
+        }
+        // and the sharded run moved strictly fewer gradient bytes (K=2)
+        assert!(sharded.grad_wire_bytes < sharded.grad_wire_bytes_naive);
+        assert_eq!(naive.grad_wire_bytes, naive.grad_wire_bytes_naive);
+        assert_eq!(sharded.reduce_algorithm, "sharded");
     }
 
     #[test]

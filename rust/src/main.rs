@@ -61,6 +61,7 @@ fn print_help() {
              --gamma-min G | --gamma-const G   inner-LR schedule\n\
              --eps E --rho R --tau-init T --eval-every N\n\
              --nodes N --gpus-per-node M --network {nets}\n\
+             --reduce naive|ring|sharded|auto   gradient-reduction strategy\n\
              --save <file>      save final parameters (f32 LE)\n\
            eval        evaluate parameters: --bundle <dir> --params <file>\n\
            exp <id>    regenerate a paper table/figure (exp list to enumerate)\n\
@@ -94,6 +95,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     cfg.gpus_per_node = args.usize_or("gpus-per-node", cfg.gpus_per_node)?;
     cfg.network = fastclip::comm::ProfileName::from_id(
         &args.str_or("network", cfg.network.id()),
+    )?;
+    cfg.reduce = fastclip::comm::ReduceStrategy::from_id(
+        &args.str_or("reduce", cfg.reduce.id()),
     )?;
     cfg.lr.peak = args.f32_or("lr", cfg.lr.peak)?;
     cfg.lr.total_iters = cfg.steps;
@@ -147,6 +151,16 @@ fn train(args: &Args) -> Result<()> {
     t.row(vec!["  overlapped comm".into(), format!("{:.2}", ms.comm_overlap)]);
     t.row(vec!["  others".into(), format!("{:.2}", ms.others)]);
     t.row(vec!["real bytes moved".into(), format!("{}", result.comm_bytes)]);
+    t.row(vec!["grad reduction".into(), result.reduce_algorithm.into()]);
+    t.row(vec![
+        "grad wire bytes/rank".into(),
+        format!(
+            "{} (naive would move {}, {:.2}x)",
+            result.grad_wire_bytes,
+            result.grad_wire_bytes_naive,
+            result.grad_wire_bytes_naive as f64 / result.grad_wire_bytes.max(1) as f64
+        ),
+    ]);
     t.row(vec!["wall time (s)".into(), format!("{:.1}", result.wall_s)]);
     t.print();
 

@@ -27,6 +27,32 @@ pub fn build(cfg: &OptimizerConfig, n_params: usize, segments: Segments) -> Box<
     }
 }
 
+/// Restrict per-leaf segments to the parameter shard `[lo, hi)` and
+/// re-offset them to shard-local coordinates — the segmentation for an
+/// optimizer built over one rank's chunk under the sharded
+/// gradient-reduction strategy (DESIGN.md §4 "Gradient reduction").
+///
+/// Leaves that straddle a shard boundary are clipped, so LAMB's per-leaf
+/// trust ratios are computed over the shard-local part of a boundary leaf
+/// (exactly ZeRO's per-partition behaviour); the element-wise optimizers
+/// (AdamW, Lion, SGDM) are unaffected and remain bit-identical to a
+/// replicated update. Returns a single covering segment when the shard
+/// intersects no leaf (only possible for degenerate empty shards).
+pub fn shard_segments(segments: &Segments, lo: usize, hi: usize) -> Segments {
+    let mut out: Segments = segments
+        .iter()
+        .filter_map(|&(off, len)| {
+            let s = off.max(lo);
+            let e = (off + len).min(hi);
+            (s < e).then(|| (s - lo, e - s))
+        })
+        .collect();
+    if out.is_empty() {
+        out.push((0, hi - lo)); // keep LAMB's non-empty invariant
+    }
+    out
+}
+
 // ---------------------------------------------------------------------------
 // AdamW (Loshchilov & Hutter 2019), decoupled weight decay.
 // ---------------------------------------------------------------------------
@@ -304,6 +330,57 @@ mod tests {
             x = s.step(x, 1.0, 1e-3); // positive grad -> decrease
         }
         assert!(x < 0.07 - 0.02);
+    }
+
+    #[test]
+    fn shard_segments_clips_and_reoffsets() {
+        let segs: Segments = vec![(0, 10), (10, 20), (30, 5)];
+        // shard [5, 32) clips the first and last leaf, keeps the middle
+        assert_eq!(shard_segments(&segs, 5, 32), vec![(0, 5), (5, 20), (25, 2)]);
+        // shard aligned with a leaf boundary
+        assert_eq!(shard_segments(&segs, 10, 30), vec![(0, 20)]);
+        // whole range is the identity
+        assert_eq!(shard_segments(&segs, 0, 35), segs);
+        // empty shard keeps LAMB's non-empty invariant
+        assert_eq!(shard_segments(&segs, 35, 35), vec![(0, 0)]);
+        // clipped segments still tile the shard exactly
+        let clipped = shard_segments(&segs, 7, 33);
+        let mut off = 0;
+        for (o, l) in &clipped {
+            assert_eq!(*o, off);
+            off += l;
+        }
+        assert_eq!(off, 33 - 7);
+    }
+
+    #[test]
+    fn sharded_adamw_matches_replicated() {
+        // element-wise optimizers: updating shards independently is
+        // bit-identical to one replicated update over the full vector
+        let cfg = OptimizerConfig::adamw(0.05);
+        let n = 103; // non-divisible by 4
+        let bounds = |r: usize| {
+            let chunk = n.div_ceil(4);
+            ((r * chunk).min(n), ((r + 1) * chunk).min(n))
+        };
+        let mut full = build(&cfg, n, vec![(0, n)]);
+        let mut shards: Vec<_> = (0..4)
+            .map(|r| {
+                let (lo, hi) = bounds(r);
+                build(&cfg, hi - lo, shard_segments(&vec![(0, n)], lo, hi))
+            })
+            .collect();
+        let mut p_full = vec![0.3f32; n];
+        let mut p_shard = vec![0.3f32; n];
+        for t in 0..25 {
+            let g: Vec<f32> = (0..n).map(|i| ((t * 31 + i) as f32).sin()).collect();
+            full.step(&mut p_full, &g, 1e-3);
+            for (r, opt) in shards.iter_mut().enumerate() {
+                let (lo, hi) = bounds(r);
+                opt.step(&mut p_shard[lo..hi], &g[lo..hi], 1e-3);
+            }
+        }
+        assert_eq!(p_full, p_shard, "sharded AdamW must be bit-identical");
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Compile-everywhere stand-in for the `xla` PJRT bindings (DESIGN.md §8).
+//!
+//! The real backend (xla_extension via the `xla` crate) is not part of the
+//! vendored crate set, so default builds compile this stub instead; the
+//! `pjrt` cargo feature swaps the real crate back in (see `Cargo.toml`).
+//! The data-plane types ([`Literal`], [`ElementType`]) are fully
+//! functional so host-side marshalling code and its tests run unchanged;
+//! the execution plane ([`PjRtClient`], [`PjRtLoadedExecutable`]) fails at
+//! client-construction time with an actionable message. Everything that
+//! needs to *execute* an artifact already skips gracefully when the
+//! artifact bundles are absent, which is always the case in a stub build.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`: a message, Display-able.
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub error: {}", self.0)
+    }
+}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT backend unavailable: fastclip was built without the `pjrt` \
+         feature (the vendored crate set has no `xla` crate). Rebuild with \
+         `cargo build --features pjrt` after adding the xla dependency; \
+         see rust/Cargo.toml and DESIGN.md §8"
+            .to_string(),
+    ))
+}
+
+/// Element dtypes the runtime marshals (subset of PJRT's set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_width(&self) -> usize {
+        4
+    }
+}
+
+/// Sealed-enough conversion trait for the scalar/vector marshalling
+/// helpers, mirroring `xla::NativeType` for the two dtypes we use.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_le(self) -> [u8; 4];
+    fn from_le(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A shaped host buffer. Fully functional: the trainer's marshalling
+/// helpers (`lit_f32` / `lit_i32` / `to_vec_f32`) work against the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { ty: T::TY, shape: vec![], data: v.to_le().to_vec() }
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, Error> {
+        let numel: usize = shape.iter().product();
+        if numel * ty.byte_width() != data.len() {
+            return Err(Error(format!(
+                "shape {:?} needs {} bytes, got {}",
+                shape,
+                numel * ty.byte_width(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        if T::TY != self.ty {
+            return Err(Error(format!("dtype mismatch: literal is {:?}", self.ty)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Tuple destructuring exists only on execution results, which the
+    /// stub never produces.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO text. The stub validates the file exists and keeps the text
+/// so `inspect`-style tooling can still report sizes.
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {}: {e}", path.display())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub client: construction fails, so no executable is ever produced.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<A>(&self, _args: &[A]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_f32_and_i32() {
+        let v = [1.5f32, -2.0, 0.25];
+        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), v);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype checked");
+
+        let s = Literal::scalar(42i32);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![42]);
+        assert_eq!(s.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4]).is_err()
+        );
+    }
+
+    #[test]
+    fn client_reports_feature_gate() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e}").contains("pjrt"), "{e}");
+    }
+}

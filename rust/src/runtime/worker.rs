@@ -10,6 +10,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
+// Without the `pjrt` feature the `xla` crate is absent from the build;
+// the in-tree stub provides the same API surface (DESIGN.md §8).
+#[cfg(not(feature = "pjrt"))]
+use super::pjrt_stub as xla;
+
 use super::manifest::Manifest;
 
 /// Temperature inputs for a step call.

@@ -1,12 +1,23 @@
 //! Cross-module integration tests, including the framework's key
 //! mathematical invariant (DESIGN.md §4): the K-worker distributed
-//! gradient estimator equals the single-worker global-batch gradient.
+//! gradient estimator equals the single-worker global-batch gradient —
+//! and the gradient-reduction exactness invariant: every pluggable
+//! reduction algorithm (naive / ring / sharded reduce-scatter) yields
+//! bit-identical replicated parameters.
 //!
-//! All tests skip gracefully when the artifact bundles are not built
-//! (`make artifacts`).
+//! Tests that execute HLO artifacts are `#[ignore]`d: the bundles are
+//! produced by `python/compile/aot.py` (`make artifacts`), which needs a
+//! JAX toolchain, and executing them needs the `pjrt` cargo feature.
+//! They additionally skip gracefully when the bundles are absent, so
+//! `cargo test -- --ignored` is safe everywhere. The collective and
+//! optimizer-sharding tests below run unconditionally.
 
-use fastclip::config::{Algorithm, DataConfig, TrainConfig};
+use std::sync::Arc;
+
+use fastclip::comm::{reduction, CommWorld, ReduceAlgo};
+use fastclip::config::{Algorithm, DataConfig, OptimizerConfig, TrainConfig};
 use fastclip::coordinator::Trainer;
+use fastclip::optim::{build, shard_segments};
 use fastclip::runtime::{Manifest, TauGrads, TauInput, WorkerRuntime};
 use fastclip::util::Rng;
 
@@ -24,6 +35,7 @@ fn have(bundle: &str) -> bool {
 /// whole batch (bl=16, bg=16, bundle tiny_k1_b16) — Eq. (2)+(3) of the
 /// paper distributes over workers exactly.
 #[test]
+#[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build (which needs the xla dependency added - see rust/Cargo.toml)"]
 fn distributed_gradient_equals_global_gradient() {
     if !have("artifacts/tiny_k2_b8") || !have("artifacts/tiny_k1_b16") {
         return;
@@ -142,6 +154,7 @@ fn tau_grad_of(t: &TauGrads) -> f32 {
 /// the shard loaders (they shuffle independently), but determinism and
 /// sane loss trajectories can be checked across bundles.
 #[test]
+#[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build (which needs the xla dependency added - see rust/Cargo.toml)"]
 fn trainer_runs_across_bundles() {
     for bundle in ["artifacts/tiny_k1_b16", "artifacts/tiny_k2_b8"] {
         if !have(bundle) {
@@ -163,6 +176,7 @@ fn trainer_runs_across_bundles() {
 /// must also split across workers (τ gradients are per-local-sample and
 /// are not reduced).
 #[test]
+#[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build (which needs the xla dependency added - see rust/Cargo.toml)"]
 fn rgcl_i_gradient_splits_across_workers() {
     if !have("artifacts/tiny_k2_b8") || !have("artifacts/tiny_k1_b16") {
         return;
@@ -243,6 +257,147 @@ fn rgcl_i_gradient_splits_across_workers() {
         }
     }
     eprintln!("rgcl_i: rel grad err {rel:.2e} — OK");
+}
+
+// ---------------------------------------------------------------------------
+// Gradient-reduction exactness (DESIGN.md §4 "Gradient reduction").
+// These run unconditionally: they need only threads, no artifacts.
+// ---------------------------------------------------------------------------
+
+/// Run `f` on K lockstep worker threads over one CommWorld and collect the
+/// per-rank results in rank order.
+fn run_world<T, F>(k: usize, f: F) -> (Vec<T>, fastclip::comm::CommStatsSnapshot)
+where
+    T: Send + 'static,
+    F: Fn(fastclip::comm::WorkerComm) -> T + Send + Sync + 'static,
+{
+    let world = CommWorld::new(k);
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..k)
+        .map(|r| {
+            let h = world.handle(r);
+            let f = Arc::clone(&f);
+            std::thread::spawn(move || f(h))
+        })
+        .collect();
+    let outs = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (outs, world.stats.snapshot())
+}
+
+/// Deterministic per-rank gradient contribution: awkward magnitudes so
+/// f32 addition order matters if an algorithm gets it wrong.
+fn contribution(rank: usize, n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(1000 + rank as u64);
+    let mut g = vec![0.0f32; n];
+    rng.fill_normal(&mut g, 1.0);
+    for (i, v) in g.iter_mut().enumerate() {
+        *v = *v * (1.0 + i as f32 * 1e-3) + if i % 7 == 0 { 1e4 } else { 0.0 };
+    }
+    g
+}
+
+/// Reduce with `algo` and recover the full reduced vector on every rank
+/// by using an identity "optimizer" (params := reduced grad slice).
+fn reduce_full(algo: ReduceAlgo, k: usize, n: usize) -> (Vec<Vec<f32>>, fastclip::comm::CommStatsSnapshot) {
+    run_world(k, move |comm| {
+        let mut grad = contribution(comm.rank(), n);
+        let mut params = vec![0.0f32; n];
+        reduction(algo).reduce_and_apply(&comm, &mut grad, &mut params, &mut |p, g| {
+            p.copy_from_slice(g)
+        });
+        params
+    })
+}
+
+/// THE exactness invariant of the pluggable collectives: reduce-scatter +
+/// all-gather (sharded) and ring all-reduce are BIT-identical to the
+/// naive gather-based reduce, for K ∈ {1,2,4}, odd lengths and
+/// non-divisible chunkings (n=10 over K=4 gives chunks 3,3,3,1; n=1 over
+/// K=4 gives chunks 1,0,0,0).
+#[test]
+fn reduce_strategies_bit_identical_to_naive() {
+    for k in [1usize, 2, 4] {
+        for n in [1usize, 5, 10, 1023] {
+            let (naive, _) = reduce_full(ReduceAlgo::Naive, k, n);
+            let (ring, _) = reduce_full(ReduceAlgo::Ring, k, n);
+            let (sharded, _) = reduce_full(ReduceAlgo::Sharded, k, n);
+            // replicated across ranks…
+            for outs in [&naive, &ring, &sharded] {
+                for o in outs.iter() {
+                    assert_eq!(o, &outs[0], "k={k} n={n}: not replicated");
+                }
+            }
+            // …and bitwise equal across algorithms
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&naive[0]), bits(&ring[0]), "k={k} n={n}: ring != naive");
+            assert_eq!(bits(&naive[0]), bits(&sharded[0]), "k={k} n={n}: sharded != naive");
+        }
+    }
+}
+
+/// The sharded strategy's CommStats gradient traffic is strictly below
+/// the naive baseline for every K >= 2 (the paper's volume claim).
+#[test]
+fn sharded_moves_strictly_fewer_grad_bytes() {
+    for k in [2usize, 4, 8] {
+        let n = 1000;
+        let (_, s) = reduce_full(ReduceAlgo::Sharded, k, n);
+        assert!(
+            s.grad_wire_bytes < s.grad_wire_bytes_naive,
+            "k={k}: sharded {} !< naive {}",
+            s.grad_wire_bytes,
+            s.grad_wire_bytes_naive
+        );
+        // exactly (K-1)/K vs (K-1): a K-fold saving
+        assert_eq!(s.grad_wire_bytes * k as u64, s.grad_wire_bytes_naive);
+        assert!(s.grad_wire_saving() > (k as f64) - 1e-9);
+        // the naive run itself moves exactly its baseline
+        let (_, sn) = reduce_full(ReduceAlgo::Naive, k, n);
+        assert_eq!(sn.grad_wire_bytes, sn.grad_wire_bytes_naive);
+    }
+}
+
+/// End-to-end sharded-optimizer equivalence without artifacts: K ranks
+/// train a synthetic parameter vector for 30 steps with AdamW. The
+/// sharded path (reduce-scatter + per-shard optimizer + param all-gather)
+/// must be BIT-identical to the replicated path (naive all-reduce + full
+/// optimizer on every rank).
+#[test]
+fn sharded_training_loop_matches_replicated() {
+    let k = 4;
+    let n = 103; // not divisible by 4
+    let steps = 30;
+    let train = move |algo: ReduceAlgo| {
+        let (outs, _) = run_world(k, move |comm| {
+            let (lo, hi) = comm.owned_chunk(n);
+            let segs = vec![(0usize, n)];
+            let cfg = OptimizerConfig::adamw(0.01);
+            let mut opt = match algo {
+                ReduceAlgo::Sharded => build(&cfg, hi - lo, shard_segments(&segs, lo, hi)),
+                _ => build(&cfg, n, segs),
+            };
+            let mut params = vec![0.5f32; n];
+            for t in 0..steps {
+                let mut grad: Vec<f32> = contribution(comm.rank(), n);
+                for (i, g) in grad.iter_mut().enumerate() {
+                    *g = (*g + t as f32).sin() + params[i % n] * 0.1;
+                }
+                reduction(algo).reduce_and_apply(&comm, &mut grad, &mut params, &mut |p, g| {
+                    opt.step(p, g, 1e-2)
+                });
+            }
+            params
+        });
+        outs
+    };
+    let replicated = train(ReduceAlgo::Naive);
+    let sharded = train(ReduceAlgo::Sharded);
+    for r in 0..k {
+        assert_eq!(replicated[r], replicated[0], "replicated run not in sync");
+        assert_eq!(sharded[r], sharded[0], "sharded run not in sync");
+    }
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&replicated[0]), bits(&sharded[0]), "sharded training diverged");
 }
 
 /// Config presets in configs/ parse and validate.

@@ -1,0 +1,204 @@
+//! In-tree subset of the `anyhow` API, vendored so the workspace builds
+//! with no registry access (the vendored crate set policy — see
+//! `rust/src/util/mod.rs`). Implements exactly what the crate uses:
+//!
+//! * [`Error`]: an opaque error with a context chain. `{e}` prints the
+//!   outermost message, `{e:#}` the full `outer: inner: ...` chain, and
+//!   `{e:?}` an anyhow-style report with a `Caused by:` block.
+//! * [`Result<T>`] with a defaulted error type.
+//! * [`Context::context`] / [`Context::with_context`] on any
+//!   `Result<_, E>` whose error is `std::error::Error` or [`Error`].
+//! * The [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Like the real crate, [`Error`] deliberately does NOT implement
+//! `std::error::Error`: that is what keeps the blanket `From` /
+//! `Context` impls coherent.
+
+use std::fmt::{self, Debug, Display};
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message plus the chain of lower-level causes it wraps.
+/// `chain[0]` is the outermost (most recently attached) context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from anything printable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: Display + Send + Sync + 'static>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn push_context<C: Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message, then each cause from outer to inner.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain on one line, anyhow-style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any concrete std error. Coherent with
+// `impl From<T> for T` only because `Error: !std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Private unification of "things that convert to [`Error`]" — the same
+/// trick the real crate's `ext::StdError` uses to make [`Context`] apply
+/// to both std errors and its own `Error`.
+pub trait IntoError: Send + Sync + 'static {
+    fn into_error(self) -> Error;
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+/// Attach human context to an error as it propagates.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().push_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().push_context(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: `", stringify!($cond), "`")));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path").context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_and_with_context() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        let e = f(0).with_context(|| format!("calling f({})", 0)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "calling f(0): zero");
+        let e2 = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e2}"), "plain 7");
+    }
+
+    #[test]
+    fn parse_error_via_msg() {
+        let r: Result<u32> = "abc".parse::<u32>().map_err(Error::msg);
+        assert!(format!("{}", r.unwrap_err()).contains("invalid digit"));
+    }
+}
