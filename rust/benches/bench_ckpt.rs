@@ -1,0 +1,82 @@
+//! Checkpoint subsystem benchmarks (DESIGN.md §9): snapshot write,
+//! restore and verify throughput vs state size, plus the blob/hash
+//! primitives. No artifacts needed — worker states come from the shared
+//! synthetic fixture (`fastclip::bench::ckpt`): individual τ + AdamW,
+//! the richest state shape.
+
+#[path = "harness.rs"]
+mod harness;
+
+use fastclip::bench::ckpt::{snapshot_synthetic, synthetic_rank, SyntheticRank};
+use fastclip::ckpt::{fnv1a64, restore_worker, Checkpoint};
+use fastclip::config::{Algorithm, TrainConfig};
+use harness::{black_box, fmt, Bench};
+
+fn main() {
+    // hash primitive
+    let buf = vec![0xa5u8; 4 << 20];
+    let stats = Bench::new("fnv1a64 hash (4 MiB)").samples(20).run(|| {
+        black_box(fnv1a64(&buf));
+    });
+    println!(
+        "  -> {:.0} MB/s",
+        (buf.len() as f64 / (1024.0 * 1024.0)) / stats.median_s
+    );
+
+    let world = 2;
+    for &n_params in &[100_000usize, 1_000_000, 4_000_000] {
+        let mut cfg = TrainConfig::new("unused", Algorithm::FastClipV2);
+        cfg.data.n_train = 4096;
+        let ranks: Vec<SyntheticRank> = (0..world)
+            .map(|r| synthetic_rank(&cfg, r, world, n_params, 64).expect("fixture"))
+            .collect();
+        let root = std::env::temp_dir().join(format!("fastclip_bench_ckpt_{n_params}"));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).expect("mkdir");
+
+        let samples = if n_params > 1_000_000 { 5 } else { 10 };
+        Bench::new(format!("snapshot write P={n_params} (K={world})"))
+            .samples(samples)
+            .run(|| {
+                black_box(
+                    snapshot_synthetic(&root, &cfg, &ranks, n_params, 64, 3).expect("snapshot"),
+                );
+            });
+
+        let dir = snapshot_synthetic(&root, &cfg, &ranks, n_params, 64, 3).expect("snapshot");
+        let ck = Checkpoint::open(&dir).expect("open");
+        let bytes: u64 =
+            ck.manifest().blobs.iter().map(|b| (b.len * b.kind.width()) as u64).sum();
+        println!("  -> checkpoint size {}", fmt_bytes(bytes));
+
+        Bench::new(format!("restore (both ranks) P={n_params}"))
+            .samples(samples)
+            .run(|| {
+                for rank in 0..world {
+                    black_box(
+                        restore_worker(&ck, &cfg, rank, world, 64, false)
+                            .expect("restore")
+                            .start_step,
+                    );
+                }
+            });
+
+        let verify_stats = Bench::new(format!("verify P={n_params}")).samples(samples).run(|| {
+            black_box(ck.verify().expect("verify").bytes);
+        });
+        println!(
+            "  -> verify {:.0} MB/s ({})",
+            (bytes as f64 / (1024.0 * 1024.0)) / verify_stats.median_s,
+            fmt(verify_stats.median_s)
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+fn fmt_bytes(b: u64) -> String {
+    if b > 1 << 20 {
+        format!("{:.1} MiB", b as f64 / (1 << 20) as f64)
+    } else {
+        format!("{:.1} KiB", b as f64 / 1024.0)
+    }
+}

@@ -31,7 +31,7 @@ fn main() {
         });
     }
 
-    let mut loader = ShardLoader::new(65_536, 0, 4, 128, 7);
+    let mut loader = ShardLoader::new(65_536, 0, 4, 128, 7).expect("valid loader config");
     Bench::new("shard next_batch (bl=128)").samples(50).run(|| {
         black_box(loader.next_batch());
     });

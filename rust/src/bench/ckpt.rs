@@ -1,0 +1,257 @@
+//! `exp ckpt` — the interrupted-run study (DESIGN.md §9).
+//!
+//! Two parts:
+//! * a **state throughput study** (always runs; no artifacts needed):
+//!   synthetic full worker states at growing parameter counts, timing
+//!   snapshot write, restore and `verify`;
+//! * an **interrupted-run study** (needs the artifact bundle + `pjrt`
+//!   runtime, like every training experiment): train N+M steps
+//!   continuously vs train N → snapshot → restore → M, reporting the
+//!   snapshot/restore overhead and checking the two runs end bitwise
+//!   identical.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::ckpt::{
+    finalize, prepare_stage, restore_worker, stage_path, write_rank_state, Checkpoint, CkptMeta,
+};
+use crate::config::{Algorithm, TrainConfig};
+use crate::coordinator::{TauState, Trainer, UState};
+use crate::data::ShardLoader;
+use crate::optim::Optimizer;
+use crate::output::Table;
+use crate::util::{Args, Json};
+
+use super::common::results_dir;
+
+/// One rank's synthetic worker state in the richest shape (individual τ
+/// with per-sample Adam moments + AdamW) — the shared fixture for the
+/// `exp ckpt` throughput study and `benches/bench_ckpt.rs`.
+pub struct SyntheticRank {
+    pub loader: ShardLoader,
+    pub ustate: UState,
+    pub tau: TauState,
+    pub opt: Box<dyn Optimizer>,
+    pub params: Vec<f32>,
+}
+
+/// Build one rank's state and move every component off its origin so a
+/// snapshot has something non-trivial to persist.
+pub fn synthetic_rank(
+    cfg: &TrainConfig,
+    rank: usize,
+    world: usize,
+    n_params: usize,
+    local_batch: usize,
+) -> Result<SyntheticRank> {
+    let mut loader = ShardLoader::new(cfg.data.n_train, rank, world, local_batch, cfg.seed)?;
+    for _ in 0..5 {
+        loader.next_batch();
+    }
+    let mut ustate = UState::new(loader.shard_len());
+    let pos: Vec<usize> = (0..loader.shard_len()).collect();
+    let vals: Vec<f32> = pos.iter().map(|&p| p as f32 * 1e-3).collect();
+    ustate.scatter(&pos, &vals, &vals);
+    let mut tau = TauState::new(cfg, loader.shard_len());
+    if let TauState::Individual(it) = &mut tau {
+        it.update(&[0, 1], &[0.2, -0.2], &[-0.2, 0.2], 1e-2);
+    }
+    let mut opt = crate::optim::build(&cfg.optimizer, n_params, vec![(0, n_params)]);
+    let mut params = vec![0.1f32; n_params];
+    let grad = vec![1e-3f32; n_params];
+    opt.step(&mut params, &grad, 1e-3);
+    Ok(SyntheticRank { loader, ustate, tau, opt, params })
+}
+
+/// Snapshot the synthetic world through the real writer (replicated
+/// optimizer layout: only rank 0 exports and writes its state, exactly
+/// like the trainer — keeps the timed region free of dead clones).
+/// Returns the finalized checkpoint directory.
+pub fn snapshot_synthetic(
+    root: &Path,
+    cfg: &TrainConfig,
+    ranks: &[SyntheticRank],
+    n_params: usize,
+    local_batch: usize,
+    step: u32,
+) -> Result<PathBuf> {
+    let stage = stage_path(root, step);
+    prepare_stage(&stage)?;
+    for (rank, f) in ranks.iter().enumerate() {
+        let os = if rank == 0 { Some(f.opt.export_state()) } else { None };
+        write_rank_state(
+            &stage,
+            rank,
+            &f.ustate,
+            &f.tau,
+            &f.loader,
+            os.as_ref().map(|s| (s, false)),
+        )?;
+    }
+    let meta = CkptMeta::for_run(cfg, step, ranks.len(), n_params, local_batch, "ring");
+    finalize(root, &stage, &meta, &ranks[0].params, 0)
+}
+
+pub fn ckpt_study(args: &Args) -> Result<()> {
+    let mut json_rows = Vec::new();
+    state_throughput(args, &mut json_rows)?;
+
+    let bundle = args.str_or("bundle", "artifacts/tiny_k2_b8");
+    if Path::new(&bundle).join("manifest.json").exists() {
+        interrupted_run(args, &bundle, &mut json_rows)?;
+    } else {
+        eprintln!(
+            "note: skipping the interrupted-run study — {bundle} not built \
+             (run `make artifacts`; needs the pjrt feature to execute)"
+        );
+    }
+
+    let dir = results_dir(args);
+    crate::output::write_result(&dir, "ckpt", &Json::arr(json_rows))?;
+    eprintln!("wrote {}/ckpt.json", dir.display());
+    Ok(())
+}
+
+/// Synthetic full worker states (the richest variant: individual τ +
+/// AdamW) at growing parameter counts: snapshot → restore → verify.
+fn state_throughput(args: &Args, json_rows: &mut Vec<Json>) -> Result<()> {
+    let world = 2;
+    let n_train = 4096;
+    let sizes = [10_000usize, 100_000, 1_000_000];
+    let mut table = Table::new(
+        "Checkpoint state throughput (synthetic, individual-tau + AdamW)",
+        &["n_params", "state MB", "write ms", "write MB/s", "restore ms", "verify ms"],
+    );
+    for &n_params in &sizes {
+        let mut cfg = TrainConfig::new("unused", Algorithm::FastClipV2);
+        cfg.data.n_train = n_train;
+
+        let root = std::env::temp_dir().join(format!("fastclip_exp_ckpt_{n_params}"));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root)?;
+
+        let ranks: Vec<SyntheticRank> = (0..world)
+            .map(|r| synthetic_rank(&cfg, r, world, n_params, 64))
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let dir = snapshot_synthetic(&root, &cfg, &ranks, n_params, 64, 5)?;
+        let write_s = t0.elapsed().as_secs_f64();
+
+        let ck = Checkpoint::open(&dir)?;
+        let bytes: u64 =
+            ck.manifest().blobs.iter().map(|b| (b.len * b.kind.width()) as u64).sum();
+
+        let t1 = Instant::now();
+        for rank in 0..world {
+            let r = restore_worker(&ck, &cfg, rank, world, 64, false)?;
+            ensure!(r.params.len() == n_params, "restore sanity");
+        }
+        let restore_s = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        ck.verify()?;
+        let verify_s = t2.elapsed().as_secs_f64();
+
+        let mb = bytes as f64 / (1024.0 * 1024.0);
+        table.row(vec![
+            n_params.to_string(),
+            format!("{mb:.2}"),
+            format!("{:.2}", write_s * 1e3),
+            format!("{:.1}", mb / write_s.max(1e-9)),
+            format!("{:.2}", restore_s * 1e3),
+            format!("{:.2}", verify_s * 1e3),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("study", Json::str("state_throughput")),
+            ("n_params", Json::num(n_params as f64)),
+            ("bytes", Json::num(bytes as f64)),
+            ("write_s", Json::num(write_s)),
+            ("restore_s", Json::num(restore_s)),
+            ("verify_s", Json::num(verify_s)),
+        ]));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+    table.print();
+    let dir = results_dir(args);
+    table.write_csv(&dir.join("ckpt_throughput.csv"))?;
+    Ok(())
+}
+
+/// Train N+M continuously vs N → snapshot → restore → M with the real
+/// trainer, and report resume overhead + bitwise equivalence.
+fn interrupted_run(args: &Args, bundle: &str, json_rows: &mut Vec<Json>) -> Result<()> {
+    let algo = Algorithm::from_id(&args.str_or("algo", "fastclip-v3"))?;
+    let steps = args.u32_or("steps", 32)?;
+    let ckpt_at = args.u32_or("ckpt-at", (steps / 2).max(1))?;
+    ensure!(ckpt_at < steps, "--ckpt-at must be below --steps");
+    let ckpt_root: PathBuf = std::env::temp_dir().join("fastclip_exp_ckpt_run");
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+
+    // one base config so both runs share every schedule position
+    let mut base = TrainConfig::new(bundle, algo);
+    base.steps = steps;
+    base.iters_per_epoch = 8;
+    base.data.n_train = 512;
+    base.data.n_eval = 64;
+    base.lr.warmup_iters = (steps / 10).max(1);
+    base.lr.total_iters = steps;
+
+    let continuous =
+        Trainer::new(base.clone())?.run().context("continuous reference run")?;
+
+    let mut leg1 = base.clone();
+    leg1.steps = ckpt_at; // schedules still span the full `steps`
+    leg1.ckpt_dir = Some(ckpt_root.to_string_lossy().into_owned());
+    leg1.ckpt_every = ckpt_at;
+    let first = Trainer::new(leg1)?.run().context("interrupted leg 1")?;
+
+    let mut leg2 = base.clone();
+    leg2.ckpt_dir = Some(ckpt_root.to_string_lossy().into_owned());
+    leg2.resume = Some("latest".to_string());
+    let resumed = Trainer::new(leg2)?.run().context("resumed leg 2")?;
+
+    let bitwise = continuous.final_params == resumed.final_params;
+    let mut table = Table::new(
+        format!("Interrupted-run study — {} on {bundle}", algo.name()),
+        &["metric", "value"],
+    );
+    table.row(vec!["steps (N+M)".into(), format!("{steps} ({ckpt_at}+{})", steps - ckpt_at)]);
+    table.row(vec![
+        "snapshot write (ms)".into(),
+        format!("{:.1}", first.ckpt.write_s * 1e3),
+    ]);
+    table.row(vec![
+        "restore (ms)".into(),
+        format!("{:.1}", resumed.ckpt.restore_s * 1e3),
+    ]);
+    table.row(vec![
+        "resume overhead (% of continuous wall)".into(),
+        format!(
+            "{:.2}",
+            100.0 * (first.ckpt.write_s + resumed.ckpt.restore_s) / continuous.wall_s.max(1e-9)
+        ),
+    ]);
+    table.row(vec!["bitwise params match".into(), bitwise.to_string()]);
+    table.row(vec![
+        "final loss (cont / resumed)".into(),
+        format!("{:.6} / {:.6}", continuous.final_loss(), resumed.final_loss()),
+    ]);
+    table.print();
+    ensure!(bitwise, "resumed run diverged from the continuous reference");
+
+    json_rows.push(Json::obj(vec![
+        ("study", Json::str("interrupted_run")),
+        ("algorithm", Json::str(algo.id())),
+        ("steps", Json::num(steps as f64)),
+        ("ckpt_at", Json::num(ckpt_at as f64)),
+        ("write_s", Json::num(first.ckpt.write_s)),
+        ("restore_s", Json::num(resumed.ckpt.restore_s)),
+        ("bitwise", Json::Bool(bitwise)),
+    ]));
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+    Ok(())
+}

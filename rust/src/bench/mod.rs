@@ -13,11 +13,13 @@
 //! | epsilon   | Fig. 7 / Appendix D         | xlarge::epsilon       |
 //! | gamma-min | Fig. 5 / Appendix B         | gamma::gamma_min      |
 //! | fits      | Fig. 6 / Appendix C         | fits::fits            |
+//! | ckpt      | DESIGN.md §9 resume study   | ckpt::ckpt_study      |
 //!
 //! Every runner accepts `--steps`, `--seeds`, `--out` and runner-specific
 //! options, prints the paper-shaped rows, and writes CSV + JSON under
 //! `results/`.
 
+pub mod ckpt;
 pub mod common;
 pub mod components;
 pub mod fits;
@@ -42,6 +44,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("epsilon", "eps in RGCL-g at xlarge (Fig. 7)"),
     ("gamma-min", "gamma_min x batch size (Fig. 5)"),
     ("fits", "batch/data-size fits for OpenCLIP (Fig. 6)"),
+    ("ckpt", "checkpoint/resume: snapshot+restore overhead, bitwise equivalence (DESIGN.md §9)"),
 ];
 
 /// Dispatch an experiment id to its runner.
@@ -58,6 +61,7 @@ pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
         "epsilon" => xlarge::epsilon(args),
         "gamma-min" => gamma::gamma_min(args),
         "fits" => fits::fits(args),
+        "ckpt" => ckpt::ckpt_study(args),
         _ => bail!(
             "unknown experiment '{id}'; available:\n{}",
             EXPERIMENTS.iter().map(|(k, v)| format!("  {k:10} {v}")).collect::<Vec<_>>().join("\n")

@@ -1,0 +1,238 @@
+//! Raw tensor blobs: little-endian `f32` / `u64` files with FNV-1a 64
+//! integrity hashes (DESIGN.md §9). A blob file is exactly its elements'
+//! LE bytes — no header; the checkpoint manifest records each blob's
+//! kind, element count and hash, so a single flipped byte anywhere is
+//! detected on read and by `fastclip ckpt verify`.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Element type of a blob. Everything the training state needs reduces to
+/// these two: all continuous state is `f32`, all counters / cursors /
+/// RNG words are `u64`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlobKind {
+    F32,
+    U64,
+}
+
+impl BlobKind {
+    pub fn id(&self) -> &'static str {
+        match self {
+            BlobKind::F32 => "f32",
+            BlobKind::U64 => "u64",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Result<BlobKind> {
+        match id {
+            "f32" => Ok(BlobKind::F32),
+            "u64" => Ok(BlobKind::U64),
+            _ => bail!("unknown blob kind '{id}' (expected f32|u64)"),
+        }
+    }
+
+    /// Bytes per element.
+    pub fn width(&self) -> usize {
+        match self {
+            BlobKind::F32 => 4,
+            BlobKind::U64 => 8,
+        }
+    }
+
+    /// Kind from a blob file's extension (`.f32` / `.u64`).
+    pub fn from_path(path: &Path) -> Result<BlobKind> {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("f32") => Ok(BlobKind::F32),
+            Some("u64") => Ok(BlobKind::U64),
+            _ => bail!("{} is not a blob file (.f32/.u64)", path.display()),
+        }
+    }
+}
+
+/// One blob's manifest entry: file name (relative to the checkpoint
+/// directory), element kind and count, and the FNV-1a 64 hash of the
+/// file's bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlobSpec {
+    pub file: String,
+    pub kind: BlobKind,
+    pub len: usize,
+    pub hash: u64,
+}
+
+/// FNV-1a 64-bit over raw bytes — tiny, dependency-free, and entirely
+/// adequate for corruption detection (it is not a cryptographic hash).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    ensure!(bytes.len() % 4 == 0, "f32 blob is {} bytes (not a multiple of 4)", bytes.len());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn u64s_to_bytes(xs: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_u64s(bytes: &[u8]) -> Result<Vec<u64>> {
+    ensure!(bytes.len() % 8 == 0, "u64 blob is {} bytes (not a multiple of 8)", bytes.len());
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+/// Write `<dir>/<name>.f32`.
+pub fn write_f32_blob(dir: &Path, name: &str, xs: &[f32]) -> Result<()> {
+    let path = dir.join(format!("{name}.f32"));
+    std::fs::write(&path, f32s_to_bytes(xs))
+        .with_context(|| format!("writing blob {}", path.display()))
+}
+
+/// Write `<dir>/<name>.u64`.
+pub fn write_u64_blob(dir: &Path, name: &str, xs: &[u64]) -> Result<()> {
+    let path = dir.join(format!("{name}.u64"));
+    std::fs::write(&path, u64s_to_bytes(xs))
+        .with_context(|| format!("writing blob {}", path.display()))
+}
+
+/// Read a blob's bytes and verify length + integrity hash against its
+/// manifest entry. Every checkpoint read goes through this, so corruption
+/// surfaces at resume time, not as silently wrong training state.
+pub fn read_verified(dir: &Path, spec: &BlobSpec) -> Result<Vec<u8>> {
+    let path = dir.join(&spec.file);
+    let bytes =
+        std::fs::read(&path).with_context(|| format!("reading blob {}", path.display()))?;
+    ensure!(
+        bytes.len() == spec.len * spec.kind.width(),
+        "{} is {} bytes, manifest says {} x {} = {}",
+        path.display(),
+        bytes.len(),
+        spec.len,
+        spec.kind.width(),
+        spec.len * spec.kind.width()
+    );
+    let h = fnv1a64(&bytes);
+    ensure!(
+        h == spec.hash,
+        "integrity check failed for {}: hash {h:016x} != manifest {:016x}",
+        path.display(),
+        spec.hash
+    );
+    Ok(bytes)
+}
+
+pub fn read_f32_verified(dir: &Path, spec: &BlobSpec) -> Result<Vec<f32>> {
+    ensure!(spec.kind == BlobKind::F32, "{} is not an f32 blob", spec.file);
+    bytes_to_f32s(&read_verified(dir, spec)?)
+}
+
+pub fn read_u64_verified(dir: &Path, spec: &BlobSpec) -> Result<Vec<u64>> {
+    ensure!(spec.kind == BlobKind::U64, "{} is not a u64 blob", spec.file);
+    bytes_to_u64s(&read_verified(dir, spec)?)
+}
+
+/// Hash every blob file in `dir` (anything with a `.f32`/`.u64`
+/// extension) into a sorted blob table — the finalize step of a snapshot.
+pub fn scan_dir(dir: &Path) -> Result<Vec<BlobSpec>> {
+    let mut specs = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("scanning {}", dir.display()))?
+    {
+        let path = entry?.path();
+        let Ok(kind) = BlobKind::from_path(&path) else {
+            continue; // MANIFEST.json and anything else non-blob
+        };
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        ensure!(
+            bytes.len() % kind.width() == 0,
+            "{} is {} bytes, not a multiple of {}",
+            path.display(),
+            bytes.len(),
+            kind.width()
+        );
+        let file = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| anyhow::anyhow!("non-UTF8 blob name in {}", dir.display()))?
+            .to_string();
+        specs.push(BlobSpec { file, kind, len: bytes.len() / kind.width(), hash: fnv1a64(&bytes) });
+    }
+    specs.sort_by(|a, b| a.file.cmp(&b.file));
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+        // sensitive to a single flipped bit
+        assert_ne!(fnv1a64(&[0x00, 0x01]), fnv1a64(&[0x00, 0x00]));
+    }
+
+    #[test]
+    fn f32_and_u64_bytes_roundtrip() {
+        let xs = vec![0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, -3.25e-40, 1e38];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)).unwrap(), xs);
+        let us = vec![0u64, 1, u64::MAX, 0xdead_beef_0123_4567];
+        assert_eq!(bytes_to_u64s(&u64s_to_bytes(&us)).unwrap(), us);
+        assert!(bytes_to_f32s(&[0u8; 5]).is_err());
+        assert!(bytes_to_u64s(&[0u8; 12]).is_err());
+    }
+
+    #[test]
+    fn write_scan_read_verify_cycle() {
+        let dir = std::env::temp_dir().join("fastclip_blob_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        write_f32_blob(&dir, "a", &[1.0, 2.0, -0.5]).unwrap();
+        write_u64_blob(&dir, "b", &[7, 8]).unwrap();
+        std::fs::write(dir.join("MANIFEST.json"), "{}").unwrap();
+        let specs = scan_dir(&dir).unwrap();
+        assert_eq!(specs.len(), 2, "manifest not scanned as a blob");
+        assert_eq!(specs[0].file, "a.f32");
+        assert_eq!(specs[0].len, 3);
+        assert_eq!(specs[1].file, "b.u64");
+        assert_eq!(read_f32_verified(&dir, &specs[0]).unwrap(), vec![1.0, 2.0, -0.5]);
+        assert_eq!(read_u64_verified(&dir, &specs[1]).unwrap(), vec![7, 8]);
+
+        // flip one byte: the read must fail the integrity check
+        let path = dir.join("a.f32");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[5] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_f32_verified(&dir, &specs[0]).unwrap_err();
+        assert!(format!("{err}").contains("integrity"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

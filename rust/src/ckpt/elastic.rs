@@ -1,0 +1,192 @@
+//! Elastic resume (DESIGN.md §9): loading a checkpoint written at world
+//! size K into a run at world size K′ ≠ K.
+//!
+//! Per-sample state (`u`, individual τ) lives in *shard-local* order, but
+//! every shard-local position maps to a unique global sample index under
+//! the strided partition (`global = rank + pos·K`,
+//! see [`crate::data::ShardLoader`]). Re-sharding therefore walks the new
+//! rank's shard and pulls each global index's state from whichever old
+//! rank owned it — exact, no interpolation. Replicated scalar state
+//! (global τ) is taken from old rank 0 (all ranks held identical copies).
+//! Optimizer state re-partitions through the same `ceil(P/K)` chunking
+//! the sharded reduction uses ([`crate::comm::chunk_bounds`]).
+//!
+//! The one thing that cannot be mapped is the loaders' *positions*: the
+//! shards themselves changed, so the resized run restarts its loaders at
+//! the checkpoint's epoch (deterministically, via
+//! [`crate::data::ShardLoader::advance_to_epoch`]). Same-world resume
+//! restores loader positions exactly and stays bitwise.
+
+use anyhow::{ensure, Result};
+
+use crate::config::OptimizerKind;
+use crate::coordinator::IndividualTauState;
+use crate::data::shard_len_for;
+use crate::optim::OptimState;
+
+use super::snapshot::{Checkpoint, RankState, TauCkpt};
+
+/// Rebuild `new_rank`'s state (of a `new_world`-worker run) from a
+/// checkpoint written at a different world size, through the
+/// global-index mapping.
+///
+/// Each caller loads every old rank's state independently — K reads per
+/// new rank, K·K′ for a full restore. That mirrors a real multi-process
+/// restore, where each worker only has the filesystem in common with its
+/// peers, and elastic resume happens once per session; if resize restore
+/// time ever matters, memoizing the old-rank states inside
+/// [`Checkpoint`] is the lever.
+pub fn resize_rank_state(
+    ck: &Checkpoint,
+    new_rank: usize,
+    new_world: usize,
+) -> Result<RankState> {
+    let meta = ck.meta();
+    let old_world = meta.world;
+    let n = meta.n_train;
+    ensure!(new_world > 0 && new_rank < new_world, "bad target rank/world");
+
+    // pull every old rank's state once
+    let old: Vec<RankState> =
+        (0..old_world).map(|r| ck.load_rank_state(r)).collect::<Result<Vec<_>>>()?;
+
+    // resume epoch: old rank 0's loader epoch (identical across ranks
+    // whenever shard sizes divide evenly; the reference rank otherwise)
+    let epoch = old[0].epoch;
+
+    let new_len = shard_len_for(n, new_world, new_rank);
+    let mut u1 = Vec::with_capacity(new_len);
+    let mut u2 = Vec::with_capacity(new_len);
+    let individual = matches!(old[0].tau, TauCkpt::Individual(_));
+    let mut itau = IndividualTauState {
+        tau1: Vec::new(),
+        tau2: Vec::new(),
+        m1: Vec::new(),
+        v1: Vec::new(),
+        m2: Vec::new(),
+        v2: Vec::new(),
+        t1: Vec::new(),
+        t2: Vec::new(),
+    };
+
+    for new_pos in 0..new_len {
+        let g = new_rank + new_pos * new_world; // global sample index
+        let old_rank = g % old_world;
+        let old_pos = g / old_world;
+        let o = &old[old_rank];
+        u1.push(o.u1[old_pos]);
+        u2.push(o.u2[old_pos]);
+        if individual {
+            let TauCkpt::Individual(s) = &o.tau else {
+                anyhow::bail!("rank {old_rank} checkpoint lacks individual-tau state");
+            };
+            itau.tau1.push(s.tau1[old_pos]);
+            itau.tau2.push(s.tau2[old_pos]);
+            itau.m1.push(s.m1[old_pos]);
+            itau.v1.push(s.v1[old_pos]);
+            itau.m2.push(s.m2[old_pos]);
+            itau.v2.push(s.v2[old_pos]);
+            itau.t1.push(s.t1[old_pos]);
+            itau.t2.push(s.t2[old_pos]);
+        }
+    }
+
+    let tau = if individual {
+        TauCkpt::Individual(itau)
+    } else {
+        old[0].tau.clone() // replicated scalar state: any rank's copy
+    };
+
+    Ok(RankState { u1, u2, tau, loader: None, epoch })
+}
+
+/// Reassemble a full optimizer state from per-rank shards written under
+/// the sharded reduction (shard r covers `chunk_bounds(P, K, r)`; the
+/// chunks tile `[0, P)` exactly).
+pub fn concat_optimizer_shards(
+    kind: OptimizerKind,
+    shards: &[OptimState],
+    n_params: usize,
+) -> Result<OptimState> {
+    ensure!(!shards.is_empty(), "no optimizer shards");
+    let tc = OptimState::tensor_count(kind);
+    let t = shards[0].t;
+    let mut tensors = vec![Vec::with_capacity(n_params); tc];
+    for (r, shard) in shards.iter().enumerate() {
+        ensure!(
+            shard.kind == kind && shard.tensors.len() == tc,
+            "optimizer shard {r} has the wrong shape"
+        );
+        ensure!(
+            shard.t == t,
+            "optimizer shards disagree on the step counter ({} vs {t})",
+            shard.t
+        );
+        let (lo, hi) = crate::comm::chunk_bounds(n_params, shards.len(), r);
+        ensure!(
+            shard.n() == hi - lo,
+            "optimizer shard {r} covers {} params, chunk is {}",
+            shard.n(),
+            hi - lo
+        );
+        for (full, part) in tensors.iter_mut().zip(&shard.tensors) {
+            full.extend_from_slice(part);
+        }
+    }
+    for full in &tensors {
+        ensure!(full.len() == n_params, "optimizer shards do not tile the parameter vector");
+    }
+    Ok(OptimState { kind, t, tensors })
+}
+
+/// Slice a full optimizer state down to one rank's chunk `[lo, hi)`.
+pub fn slice_optimizer_state(full: &OptimState, lo: usize, hi: usize) -> OptimState {
+    OptimState {
+        kind: full.kind,
+        t: full.t,
+        tensors: full.tensors.iter().map(|t| t[lo..hi].to_vec()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_then_slice_is_identity() {
+        let kind = OptimizerKind::AdamW;
+        let p = 10; // K=4 chunks: 3,3,3,1
+        let full = OptimState {
+            kind,
+            t: 5,
+            tensors: vec![
+                (0..p).map(|i| i as f32).collect(),
+                (0..p).map(|i| -(i as f32)).collect(),
+            ],
+        };
+        let shards: Vec<OptimState> = (0..4)
+            .map(|r| {
+                let (lo, hi) = crate::comm::chunk_bounds(p, 4, r);
+                slice_optimizer_state(&full, lo, hi)
+            })
+            .collect();
+        let back = concat_optimizer_shards(kind, &shards, p).unwrap();
+        assert_eq!(back, full);
+        // re-partition for K'=2
+        let (lo, hi) = crate::comm::chunk_bounds(p, 2, 1);
+        let half = slice_optimizer_state(&back, lo, hi);
+        assert_eq!(half.n(), hi - lo);
+        assert_eq!(half.tensors[0], full.tensors[0][lo..hi].to_vec());
+    }
+
+    #[test]
+    fn concat_rejects_inconsistent_shards() {
+        let kind = OptimizerKind::Lion;
+        let mk = |n: usize, t: i64| OptimState { kind, t, tensors: vec![vec![0.0; n]] };
+        // wrong tiling (chunks of 10 over 2 ranks must be 5+5)
+        assert!(concat_optimizer_shards(kind, &[mk(4, 1), mk(6, 1)], 10).is_err());
+        // step-counter disagreement
+        assert!(concat_optimizer_shards(kind, &[mk(5, 1), mk(5, 2)], 10).is_err());
+        assert!(concat_optimizer_shards(kind, &[], 10).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! The versioned checkpoint manifest (`MANIFEST.json`, DESIGN.md §9): run
+//! identity (step, world size, algorithm, optimizer, reduction strategy,
+//! seeds) plus the integrity-hashed blob table. Written last during a
+//! snapshot — a directory without a readable manifest is not a
+//! checkpoint, which is what makes write-then-rename atomic in practice.
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::config::{GammaSchedule, TrainConfig};
+use crate::util::Json;
+
+use super::blob::{BlobKind, BlobSpec};
+
+pub const CKPT_VERSION: usize = 1;
+pub const MANIFEST_FILE: &str = "MANIFEST.json";
+
+/// Canonical echo of every hyperparameter that drives the update rule or
+/// the synthetic data — anything whose drift between snapshot and resume
+/// would silently break the bitwise-continuation guarantee. Deliberately
+/// excludes `steps` (resume legitimately extends it), the topology /
+/// network / reduce knobs (timing and layout only — layouts convert),
+/// and `n_train` / seeds / world (checked as dedicated fields). f32
+/// Display is shortest-round-trip, so string equality is value equality.
+pub fn hyper_echo(cfg: &TrainConfig) -> String {
+    let o = &cfg.optimizer;
+    let d = &cfg.data;
+    let gamma = match cfg.gamma {
+        GammaSchedule::Constant { gamma } => format!("const({gamma})"),
+        GammaSchedule::Cosine { gamma_min, decay_epochs } => {
+            format!("cosine({gamma_min},{decay_epochs})")
+        }
+    };
+    format!(
+        "tau=({},{},{},{:?}) eps={} rho={} gamma={gamma} \
+         lr=({},{},{},{}) iters_per_epoch={} opt=({},{},{},{},{}) \
+         data=({},{},{})",
+        cfg.tau_init,
+        cfg.tau_lr,
+        cfg.tau_min,
+        cfg.tau_lr_decay_below,
+        cfg.eps,
+        cfg.rho,
+        cfg.lr.peak,
+        cfg.lr.min,
+        cfg.lr.warmup_iters,
+        cfg.lr.total_iters,
+        cfg.iters_per_epoch,
+        o.beta1,
+        o.beta2,
+        o.eps,
+        o.weight_decay,
+        o.momentum,
+        d.n_classes,
+        d.noise,
+        d.zipf_s,
+    )
+}
+
+/// Run identity recorded with every snapshot. Resume checks it against
+/// the resuming run's config ([`super::check_compatible`]); `world` may
+/// differ (elastic resume re-shards), everything else must match.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptMeta {
+    /// completed training steps at snapshot time
+    pub step: u32,
+    /// worker count the snapshot was written at (K)
+    pub world: usize,
+    pub n_params: usize,
+    pub n_train: usize,
+    pub local_batch: usize,
+    /// [`crate::config::Algorithm::id`]
+    pub algorithm: String,
+    /// [`crate::config::OptimizerKind::id`]
+    pub optimizer: String,
+    /// resolved [`crate::comm::ReduceAlgo::id`] — decides whether the
+    /// optimizer state is one replicated blob or K per-rank shards
+    pub reduce: String,
+    pub seed: u64,
+    pub data_seed: u64,
+    /// [`hyper_echo`] of the writing run's config — compared exactly on
+    /// resume
+    pub hyper: String,
+}
+
+impl CkptMeta {
+    /// Assemble the meta for a snapshot of `cfg`'s run — the one
+    /// constructor every writer (trainer, studies, benches, tests) goes
+    /// through, so the `hyper` echo can never be forgotten or drift.
+    pub fn for_run(
+        cfg: &TrainConfig,
+        step: u32,
+        world: usize,
+        n_params: usize,
+        local_batch: usize,
+        reduce: &str,
+    ) -> CkptMeta {
+        CkptMeta {
+            step,
+            world,
+            n_params,
+            n_train: cfg.data.n_train,
+            local_batch,
+            algorithm: cfg.algorithm.id().to_string(),
+            optimizer: cfg.optimizer.kind.id().to_string(),
+            reduce: reduce.to_string(),
+            seed: cfg.seed,
+            data_seed: cfg.data.seed,
+            hyper: hyper_echo(cfg),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CkptManifest {
+    pub meta: CkptMeta,
+    pub blobs: Vec<BlobSpec>,
+}
+
+impl CkptManifest {
+    pub fn to_json(&self) -> Json {
+        let m = &self.meta;
+        Json::obj(vec![
+            ("version", Json::num(CKPT_VERSION as f64)),
+            (
+                "meta",
+                Json::obj(vec![
+                    ("step", Json::num(m.step as f64)),
+                    ("world", Json::num(m.world as f64)),
+                    ("n_params", Json::num(m.n_params as f64)),
+                    ("n_train", Json::num(m.n_train as f64)),
+                    ("local_batch", Json::num(m.local_batch as f64)),
+                    ("algorithm", Json::str(m.algorithm.clone())),
+                    ("optimizer", Json::str(m.optimizer.clone())),
+                    ("reduce", Json::str(m.reduce.clone())),
+                    // u64 seeds as decimal strings: JSON numbers are f64
+                    // and would lose bits past 2^53
+                    ("seed", Json::str(m.seed.to_string())),
+                    ("data_seed", Json::str(m.data_seed.to_string())),
+                    ("hyper", Json::str(m.hyper.clone())),
+                ]),
+            ),
+            (
+                "blobs",
+                Json::arr(self.blobs.iter().map(|b| {
+                    Json::obj(vec![
+                        ("file", Json::str(b.file.clone())),
+                        ("kind", Json::str(b.kind.id())),
+                        ("len", Json::num(b.len as f64)),
+                        ("hash", Json::str(format!("{:016x}", b.hash))),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn write(&self, dir: &Path) -> Result<()> {
+        self.to_json().write_file(&dir.join(MANIFEST_FILE))
+    }
+
+    pub fn load(dir: &Path) -> Result<CkptManifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let j = Json::parse_file(&path)?;
+        ensure!(
+            j.get("version")?.as_usize()? == CKPT_VERSION,
+            "unsupported checkpoint version in {}",
+            path.display()
+        );
+        let m = j.get("meta")?;
+        let parse_u64 = |key: &str| -> Result<u64> {
+            m.get(key)?
+                .as_str()?
+                .parse::<u64>()
+                .map_err(|e| anyhow!("bad {key} in {}: {e}", path.display()))
+        };
+        let meta = CkptMeta {
+            step: m.get("step")?.as_usize()? as u32,
+            world: m.get("world")?.as_usize()?,
+            n_params: m.get("n_params")?.as_usize()?,
+            n_train: m.get("n_train")?.as_usize()?,
+            local_batch: m.get("local_batch")?.as_usize()?,
+            algorithm: m.get("algorithm")?.as_str()?.to_string(),
+            optimizer: m.get("optimizer")?.as_str()?.to_string(),
+            reduce: m.get("reduce")?.as_str()?.to_string(),
+            seed: parse_u64("seed")?,
+            data_seed: parse_u64("data_seed")?,
+            hyper: m.get("hyper")?.as_str()?.to_string(),
+        };
+        ensure!(meta.world > 0, "checkpoint world size is 0");
+        let mut blobs = Vec::new();
+        for b in j.get("blobs")?.as_arr()? {
+            let hash_hex = b.get("hash")?.as_str()?.to_string();
+            blobs.push(BlobSpec {
+                file: b.get("file")?.as_str()?.to_string(),
+                kind: BlobKind::from_id(b.get("kind")?.as_str()?)?,
+                len: b.get("len")?.as_usize()?,
+                hash: u64::from_str_radix(&hash_hex, 16)
+                    .with_context(|| format!("bad blob hash '{hash_hex}'"))?,
+            });
+        }
+        Ok(CkptManifest { meta, blobs })
+    }
+
+    /// Look up a blob by file name.
+    pub fn blob(&self, file: &str) -> Result<&BlobSpec> {
+        self.blobs
+            .iter()
+            .find(|b| b.file == file)
+            .ok_or_else(|| anyhow!("checkpoint is missing blob '{file}'"))
+    }
+
+    pub fn has_blob(&self, file: &str) -> bool {
+        self.blobs.iter().any(|b| b.file == file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> CkptManifest {
+        CkptManifest {
+            meta: CkptMeta {
+                step: 40,
+                world: 4,
+                n_params: 103,
+                n_train: 512,
+                local_batch: 8,
+                algorithm: "fastclip-v3".into(),
+                optimizer: "adamw".into(),
+                reduce: "sharded".into(),
+                seed: u64::MAX - 3, // exercises the >2^53 string encoding
+                data_seed: 7,
+                hyper: "tau=(0.07,...)".into(),
+            },
+            blobs: vec![
+                BlobSpec { file: "params.f32".into(), kind: BlobKind::F32, len: 103, hash: 0xdead },
+                BlobSpec { file: "loader_rank0.u64".into(), kind: BlobKind::U64, len: 9, hash: 1 },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join("fastclip_ckpt_manifest_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = demo();
+        m.write(&dir).unwrap();
+        let back = CkptManifest::load(&dir).unwrap();
+        assert_eq!(back.meta, m.meta);
+        assert_eq!(back.blobs, m.blobs);
+        assert!(back.has_blob("params.f32"));
+        assert!(back.blob("nope.f32").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hyper_echo_tracks_update_driving_fields() {
+        let mut cfg = TrainConfig::new("x", crate::config::Algorithm::FastClipV3);
+        let base = hyper_echo(&cfg);
+        let meta = CkptMeta::for_run(&cfg, 3, 2, 9, 4, "ring");
+        assert_eq!(meta.hyper, base);
+        assert_eq!(meta.reduce, "ring");
+        assert_eq!(meta.local_batch, 4);
+        // steps is excluded by design: resume legitimately extends it
+        cfg.steps += 100;
+        assert_eq!(hyper_echo(&cfg), base);
+        // but update-driving knobs are all echoed
+        cfg.tau_lr *= 2.0;
+        assert_ne!(hyper_echo(&cfg), base);
+        let mut cfg2 = TrainConfig::new("x", crate::config::Algorithm::FastClipV3);
+        cfg2.lr.warmup_iters += 1;
+        assert_ne!(hyper_echo(&cfg2), base);
+        let mut cfg3 = TrainConfig::new("x", crate::config::Algorithm::FastClipV3);
+        cfg3.data.noise += 0.1;
+        assert_ne!(hyper_echo(&cfg3), base);
+    }
+
+    #[test]
+    fn load_rejects_missing_or_bad_version() {
+        let dir = std::env::temp_dir().join("fastclip_ckpt_manifest_bad");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(CkptManifest::load(&dir).is_err(), "no manifest file");
+        std::fs::write(dir.join(MANIFEST_FILE), r#"{"version": 99}"#).unwrap();
+        assert!(CkptManifest::load(&dir).is_err(), "future version");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,281 @@
+//! Checkpoint/resume subsystem (DESIGN.md §9).
+//!
+//! A FastCLIP run's state is strictly richer than a params-only
+//! checkpoint: the Eq. (1) `u` inner estimators, per-sample learnable
+//! temperatures with their Adam moments, the temperature-rule and
+//! schedule positions, optimizer moments (replicated or per-rank shards,
+//! matching the active gradient-reduction strategy), each worker's
+//! `ShardLoader` cursor/order and RNG stream. This module persists *all*
+//! of it — a versioned JSON manifest ([`manifest`]) plus raw
+//! little-endian f32/u64 tensor blobs with per-blob FNV-1a integrity
+//! hashes ([`blob`]) — and restores it bit-exactly: training N, then
+//! snapshot → restore → M more steps is bitwise identical to training
+//! N+M straight through (pinned by `tests/ckpt_resume.rs`).
+//!
+//! Snapshots are atomic (stage → write → `MANIFEST.json` last → rename,
+//! [`snapshot`]) with a `keep_last` retention policy, and **elastic**: a
+//! checkpoint written at world size K can resume at K′ by re-sharding the
+//! per-sample state through the global-index mapping and re-partitioning
+//! (or re-replicating) the optimizer shards ([`elastic`]) — a run can
+//! lose or gain workers between sessions, which is exactly the
+//! preemptible-cluster reality the paper's limited-resources premise
+//! implies.
+//!
+//! Entry points: the trainer calls [`write_rank_state`]/[`finalize`]
+//! periodically and [`restore_worker`] on `--resume`; the CLI exposes
+//! `fastclip ckpt inspect|verify`.
+
+pub mod blob;
+pub mod elastic;
+pub mod manifest;
+pub mod snapshot;
+
+pub use blob::{fnv1a64, BlobKind, BlobSpec};
+pub use manifest::{CkptManifest, CkptMeta, CKPT_VERSION, MANIFEST_FILE};
+pub use snapshot::{
+    check_compatible, export_tau, finalize, latest, prepare_stage, restore_tau, restore_worker,
+    stage_path, step_path, write_rank_state, Checkpoint, RankState, RestoredWorker, TauCkpt,
+    VerifyReport,
+};
+
+/// Checkpoint activity of one finished run (rank-0 view), reported in
+/// [`crate::coordinator::TrainResult`] and by the `exp ckpt` study.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CkptRunStats {
+    /// snapshots written during the run
+    pub snapshots: u32,
+    /// total wall time spent writing them, seconds
+    pub write_s: f64,
+    /// wall time spent restoring state at startup, seconds
+    pub restore_s: f64,
+    /// step the run resumed from, if it resumed
+    pub resumed_at: Option<u32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+
+    use super::*;
+    use crate::config::{Algorithm, TrainConfig};
+    use crate::coordinator::{TauState, UState};
+    use crate::data::ShardLoader;
+    use crate::optim::{build, Segments};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fastclip_ckpt_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn cfg(algo: Algorithm) -> TrainConfig {
+        let mut c = TrainConfig::new("unused", algo);
+        c.data.n_train = 64;
+        c
+    }
+
+    fn meta_for(cfg: &TrainConfig, step: u32, world: usize, n_params: usize) -> CkptMeta {
+        CkptMeta::for_run(cfg, step, world, n_params, 4, "ring")
+    }
+
+    /// Full write→finalize→open→restore cycle for each temperature rule,
+    /// asserting every piece of state survives bit-for-bit.
+    #[test]
+    fn snapshot_restore_roundtrip_all_tau_rules() {
+        for algo in [Algorithm::FastClipV1, Algorithm::FastClipV3, Algorithm::FastClipV2] {
+            let root = tmp(&format!("roundtrip_{}", algo.id()));
+            let c = cfg(algo);
+            let world = 2;
+            let n_params = 11;
+            let seg: Segments = vec![(0, 11)];
+
+            // build live state on both ranks and move it off the origin
+            let mut states = Vec::new();
+            for rank in 0..world {
+                let mut loader = ShardLoader::new(64, rank, world, 4, c.seed).unwrap();
+                for _ in 0..11 {
+                    loader.next_batch();
+                }
+                let mut ustate = UState::new(loader.shard_len());
+                let pos: Vec<usize> = (0..loader.shard_len()).collect();
+                let vals: Vec<f32> =
+                    pos.iter().map(|&p| (rank * 100 + p) as f32 * 0.25).collect();
+                let negs: Vec<f32> = vals.iter().map(|v| -v).collect();
+                ustate.scatter(&pos, &vals, &negs);
+                let mut tau = TauState::new(&c, loader.shard_len());
+                match &mut tau {
+                    TauState::Constant(_) => {}
+                    TauState::Global(g) => {
+                        for i in 0..5 {
+                            g.step(0.1 * i as f32);
+                        }
+                    }
+                    TauState::Individual(it) => {
+                        it.update(&[1, 3], &[0.5, -0.5], &[-0.5, 0.5], 1e-2);
+                    }
+                }
+                let mut opt = build(&c.optimizer, n_params, seg.clone());
+                let mut p = vec![0.5f32; n_params];
+                for t in 0..7 {
+                    let g: Vec<f32> = (0..n_params).map(|i| ((t + i) as f32).sin()).collect();
+                    opt.step(&mut p, &g, 1e-3);
+                }
+                states.push((loader, ustate, tau, opt, p));
+            }
+
+            // snapshot (replicated optimizer: rank 0 writes it)
+            let stage = stage_path(&root, 11);
+            prepare_stage(&stage).unwrap();
+            for (rank, (loader, ustate, tau, opt, _)) in states.iter().enumerate() {
+                let opt_state = opt.export_state();
+                let opt_arg = if rank == 0 { Some((&opt_state, false)) } else { None };
+                write_rank_state(&stage, rank, ustate, tau, loader, opt_arg).unwrap();
+            }
+            let meta = meta_for(&c, 11, world, n_params);
+            let final_dir = finalize(&root, &stage, &meta, &states[0].4, 3).unwrap();
+            assert!(final_dir.ends_with("step_00000011"));
+            assert!(!stage.exists(), "stage renamed away");
+
+            // open via the root (resolves to latest) and restore
+            let ck = Checkpoint::open(&root).unwrap();
+            assert_eq!(ck.meta().step, 11);
+            ck.verify().unwrap();
+            check_compatible(ck.meta(), &c, n_params).unwrap();
+            // exact same-world resume under a different batch size would
+            // corrupt the restored loader cursor: rejected
+            assert!(restore_worker(&ck, &c, 0, world, 8, false).is_err());
+            for rank in 0..world {
+                let r = restore_worker(&ck, &c, rank, world, 4, false).unwrap();
+                let (loader, ustate, tau, opt, p) = &states[rank];
+                assert_eq!(&r.params, p, "{}", algo.id());
+                assert_eq!(r.start_step, 11);
+                assert_eq!(r.ustate.parts().0, ustate.parts().0);
+                assert_eq!(r.ustate.parts().1, ustate.parts().1);
+                assert_eq!(export_tau(&r.tau), export_tau(tau), "{}", algo.id());
+                assert_eq!(r.loader.export(), loader.export());
+                assert_eq!(r.optim, opt.export_state());
+            }
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+
+    #[test]
+    fn verify_detects_single_flipped_byte() {
+        let root = tmp("flip");
+        let c = cfg(Algorithm::FastClipV1);
+        let loader = ShardLoader::new(64, 0, 1, 4, 0).unwrap();
+        let ustate = UState::new(loader.shard_len());
+        let tau = TauState::new(&c, loader.shard_len());
+        let opt = build(&c.optimizer, 5, vec![(0, 5)]);
+        let stage = stage_path(&root, 1);
+        prepare_stage(&stage).unwrap();
+        let os = opt.export_state();
+        write_rank_state(&stage, 0, &ustate, &tau, &loader, Some((&os, false))).unwrap();
+        let meta = CkptMeta { world: 1, step: 1, ..meta_for(&c, 1, 1, 5) };
+        let dir = finalize(&root, &stage, &meta, &[0.25; 5], 0).unwrap();
+
+        let ck = Checkpoint::open(&dir).unwrap();
+        ck.verify().unwrap();
+
+        // flip one byte in one blob
+        let path = dir.join("u_rank0.f32");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[3] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = Checkpoint::open(&dir).unwrap();
+        let err = ck.verify().unwrap_err();
+        assert!(format!("{err}").contains("integrity"), "{err}");
+        // and the state-loading path refuses it too
+        assert!(ck.load_rank_state(0).is_err());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn retention_keeps_last_n() {
+        let root = tmp("retention");
+        let c = cfg(Algorithm::FastClipV1);
+        let loader = ShardLoader::new(64, 0, 1, 4, 0).unwrap();
+        let ustate = UState::new(loader.shard_len());
+        let tau = TauState::new(&c, loader.shard_len());
+        let opt = build(&c.optimizer, 3, vec![(0, 3)]);
+        for step in [2u32, 4, 6, 8] {
+            let stage = stage_path(&root, step);
+            prepare_stage(&stage).unwrap();
+            let os = opt.export_state();
+            write_rank_state(&stage, 0, &ustate, &tau, &loader, Some((&os, false))).unwrap();
+            let meta = CkptMeta { step, ..meta_for(&c, step, 1, 3) };
+            finalize(&root, &stage, &meta, &[1.0; 3], 2).unwrap();
+        }
+        assert!(!step_path(&root, 2).exists());
+        assert!(!step_path(&root, 4).exists());
+        assert!(step_path(&root, 6).exists());
+        assert!(step_path(&root, 8).exists());
+        let latest_dir = latest(&root).unwrap().unwrap();
+        assert!(latest_dir.ends_with("step_00000008"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn finalize_sweeps_debris_and_replaces_without_deleting_first() {
+        let root = tmp("debris");
+        let c = cfg(Algorithm::FastClipV1);
+        let loader = ShardLoader::new(64, 0, 1, 4, 0).unwrap();
+        let ustate = UState::new(loader.shard_len());
+        let tau = TauState::new(&c, loader.shard_len());
+        let opt = build(&c.optimizer, 3, vec![(0, 3)]);
+        let snap = |step: u32, val: f32| {
+            let stage = stage_path(&root, step);
+            prepare_stage(&stage).unwrap();
+            let os = opt.export_state();
+            write_rank_state(&stage, 0, &ustate, &tau, &loader, Some((&os, false))).unwrap();
+            finalize(&root, &stage, &meta_for(&c, step, 1, 3), &[val; 3], 0).unwrap()
+        };
+        // a stale stage from a "crashed" earlier run at an unrelated step
+        let stale = stage_path(&root, 777);
+        std::fs::create_dir_all(&stale).unwrap();
+        std::fs::write(stale.join("junk.f32"), [0u8; 4]).unwrap();
+
+        let dir = snap(2, 1.0);
+        assert!(!stale.exists(), "stale stage swept by the next snapshot");
+
+        // re-finalizing the same step replaces the checkpoint and leaves
+        // no .old_step_* debris behind
+        snap(2, 2.0);
+        let ck = Checkpoint::open(&dir).unwrap();
+        assert_eq!(ck.load_params().unwrap(), vec![2.0; 3]);
+        assert!(!root.join(".old_step_00000002").exists());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn check_compatible_rejects_mismatches() {
+        let c = cfg(Algorithm::FastClipV3);
+        let meta = meta_for(&c, 1, 2, 9);
+        check_compatible(&meta, &c, 9).unwrap();
+        let mut other = cfg(Algorithm::FastClipV1);
+        assert!(check_compatible(&meta, &other, 9).is_err(), "algorithm");
+        other = cfg(Algorithm::FastClipV3);
+        assert!(check_compatible(&meta, &other, 10).is_err(), "n_params");
+        other.seed = 99;
+        assert!(check_compatible(&meta, &other, 9).is_err(), "seed");
+        other = cfg(Algorithm::FastClipV3);
+        other.data.n_train = 128;
+        assert!(check_compatible(&meta, &other, 9).is_err(), "n_train");
+        // drifted update-driving hyperparameters are rejected too
+        other = cfg(Algorithm::FastClipV3);
+        other.tau_lr *= 2.0;
+        assert!(check_compatible(&meta, &other, 9).is_err(), "hyper drift");
+        other = cfg(Algorithm::FastClipV3);
+        other.lr.total_iters = 999;
+        assert!(check_compatible(&meta, &other, 9).is_err(), "lr schedule drift");
+    }
+
+    #[test]
+    fn open_errors_without_checkpoints() {
+        let root = tmp("empty");
+        assert!(Checkpoint::open(&root).is_err());
+        assert!(latest(&root).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

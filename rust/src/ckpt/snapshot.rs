@@ -1,0 +1,705 @@
+//! Snapshot writing and checkpoint reading (DESIGN.md §9).
+//!
+//! On-disk layout of one checkpoint (`<ckpt_dir>/step_NNNNNNNN/`):
+//!
+//! ```text
+//! MANIFEST.json        versioned manifest: run identity + hashed blob table
+//! params.f32           replicated parameters (written once, by rank 0)
+//! u_rank<r>.f32        rank r's u1‖u2 inner estimators (Eq. 1)
+//! tau_rank<r>.f32      rank r's temperature state (rule-specific layout)
+//! tau_rank<r>.u64      …integer part (Adam step counters, decay flag)
+//! loader_rank<r>.u64   rank r's ShardLoader position + RNG stream state
+//! opt_full.f32/.u64    replicated optimizer state (naive/ring reduction)
+//! opt_rank<r>.f32/.u64 per-rank optimizer shards (sharded reduction)
+//! ```
+//!
+//! **Write protocol** (collective, driven by the trainer): rank 0 creates
+//! a staging directory `.stage_step_NNNNNNNN`; every rank writes its own
+//! blobs; rank 0 then writes the parameters, hashes every staged blob
+//! into the manifest, writes `MANIFEST.json` *last* and atomically
+//! renames the staging directory into place. A crash at any point leaves
+//! either the previous checkpoints untouched or a dead staging directory
+//! that the next successful snapshot sweeps away (`sweep_debris`) —
+//! never a half-readable checkpoint. Re-finalizing an already-written
+//! step sets the old directory aside before renaming, so not even that
+//! window can destroy the only checkpoint for a step.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::config::{Algorithm, OptimizerKind, TempRule, TrainConfig};
+use crate::coordinator::{
+    GlobalTau, GlobalTauState, IndividualTau, IndividualTauState, TauState, UState,
+};
+use crate::data::{shard_len_for, LoaderState, ShardLoader};
+use crate::optim::OptimState;
+use crate::util::RngState;
+
+use super::blob;
+use super::manifest::{CkptManifest, CkptMeta, MANIFEST_FILE};
+
+// ------------------------------------------------------------ blob names
+
+fn u_blob(rank: usize) -> String {
+    format!("u_rank{rank}")
+}
+
+fn tau_blob(rank: usize) -> String {
+    format!("tau_rank{rank}")
+}
+
+fn loader_blob(rank: usize) -> String {
+    format!("loader_rank{rank}")
+}
+
+fn opt_blob(rank: usize, sharded: bool) -> String {
+    if sharded {
+        format!("opt_rank{rank}")
+    } else {
+        "opt_full".to_string()
+    }
+}
+
+// ---------------------------------------------------- temperature codec
+
+/// Serializable temperature state, mirroring
+/// [`crate::coordinator::TauState`] (whose live types carry run-config
+/// hyperparameters that do not belong in a checkpoint).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TauCkpt {
+    Constant { tau: f32 },
+    Global(GlobalTauState),
+    Individual(IndividualTauState),
+}
+
+/// Snapshot a live temperature state.
+pub fn export_tau(tau: &TauState) -> TauCkpt {
+    match tau {
+        TauState::Constant(t) => TauCkpt::Constant { tau: *t },
+        TauState::Global(g) => TauCkpt::Global(g.export()),
+        TauState::Individual(i) => TauCkpt::Individual(i.export()),
+    }
+}
+
+/// Rebuild a live temperature state from a checkpoint. The rule comes
+/// from the run config and must match the checkpointed variant.
+pub fn restore_tau(cfg: &TrainConfig, shard_len: usize, ck: &TauCkpt) -> Result<TauState> {
+    match (cfg.algorithm.temp_rule(), ck) {
+        (TempRule::Constant, TauCkpt::Constant { tau }) => Ok(TauState::Constant(*tau)),
+        (TempRule::GlobalLearnable, TauCkpt::Global(s)) => {
+            let mut g = GlobalTau::new(cfg);
+            g.import(s);
+            Ok(TauState::Global(g))
+        }
+        (TempRule::Individual, TauCkpt::Individual(s)) => {
+            let mut i = IndividualTau::new(shard_len, cfg.tau_init, cfg.tau_min);
+            i.import(s.clone())?;
+            Ok(TauState::Individual(i))
+        }
+        (rule, _) => bail!(
+            "checkpoint temperature state does not match the {} rule of algorithm {}",
+            match rule {
+                TempRule::Constant => "constant",
+                TempRule::GlobalLearnable => "global-learnable",
+                TempRule::Individual => "individual",
+            },
+            cfg.algorithm.id()
+        ),
+    }
+}
+
+/// Blob layout per rule — f32 part, optional u64 part:
+/// constant `[τ]` / — ; global `[τ, lr, m, v]` / `[t, decayed]`;
+/// individual `τ1‖τ2‖m1‖v1‖m2‖v2` / `t1‖t2`.
+fn tau_to_blobs(t: &TauCkpt) -> (Vec<f32>, Option<Vec<u64>>) {
+    match t {
+        TauCkpt::Constant { tau } => (vec![*tau], None),
+        TauCkpt::Global(s) => (
+            vec![s.tau, s.lr, s.adam_m, s.adam_v],
+            Some(vec![s.adam_t as u64, s.decayed as u64]),
+        ),
+        TauCkpt::Individual(s) => {
+            let mut f = Vec::with_capacity(6 * s.tau1.len());
+            for part in [&s.tau1, &s.tau2, &s.m1, &s.v1, &s.m2, &s.v2] {
+                f.extend_from_slice(part);
+            }
+            let mut u = Vec::with_capacity(2 * s.t1.len());
+            u.extend(s.t1.iter().map(|&x| x as u64));
+            u.extend(s.t2.iter().map(|&x| x as u64));
+            (f, Some(u))
+        }
+    }
+}
+
+fn tau_from_blobs(rule: TempRule, f: Vec<f32>, u: Option<Vec<u64>>) -> Result<TauCkpt> {
+    match rule {
+        TempRule::Constant => {
+            ensure!(f.len() == 1, "constant-tau blob has {} elements, expected 1", f.len());
+            Ok(TauCkpt::Constant { tau: f[0] })
+        }
+        TempRule::GlobalLearnable => {
+            let u = u.ok_or_else(|| anyhow!("global-tau checkpoint missing integer blob"))?;
+            ensure!(f.len() == 4 && u.len() == 2, "global-tau blob shape mismatch");
+            Ok(TauCkpt::Global(GlobalTauState {
+                tau: f[0],
+                lr: f[1],
+                adam_m: f[2],
+                adam_v: f[3],
+                adam_t: u[0] as i32,
+                decayed: u[1] != 0,
+            }))
+        }
+        TempRule::Individual => {
+            let u = u.ok_or_else(|| anyhow!("individual-tau checkpoint missing integer blob"))?;
+            ensure!(f.len() % 6 == 0, "individual-tau blob length {} not 6·L", f.len());
+            let l = f.len() / 6;
+            ensure!(u.len() == 2 * l, "individual-tau integer blob length mismatch");
+            let part = |i: usize| f[i * l..(i + 1) * l].to_vec();
+            Ok(TauCkpt::Individual(IndividualTauState {
+                tau1: part(0),
+                tau2: part(1),
+                m1: part(2),
+                v1: part(3),
+                m2: part(4),
+                v2: part(5),
+                t1: u[..l].iter().map(|&x| x as i32).collect(),
+                t2: u[l..].iter().map(|&x| x as i32).collect(),
+            }))
+        }
+    }
+}
+
+// -------------------------------------------------------- loader codec
+
+fn loader_to_u64s(s: &LoaderState) -> Vec<u64> {
+    let mut out = vec![
+        s.epoch as u64,
+        s.cursor as u64,
+        s.rng.state,
+        s.rng.spare_bits.is_some() as u64,
+        s.rng.spare_bits.unwrap_or(0),
+        s.order.len() as u64,
+    ];
+    out.extend(s.order.iter().map(|&p| p as u64));
+    out
+}
+
+fn loader_from_u64s(xs: &[u64]) -> Result<LoaderState> {
+    ensure!(xs.len() >= 6, "loader blob has {} words, expected >= 6", xs.len());
+    let order_len = xs[5] as usize;
+    ensure!(xs.len() == 6 + order_len, "loader blob length mismatch");
+    Ok(LoaderState {
+        epoch: xs[0] as u32,
+        cursor: xs[1] as usize,
+        order: xs[6..].iter().map(|&v| v as usize).collect(),
+        rng: RngState { state: xs[2], spare_bits: if xs[3] != 0 { Some(xs[4]) } else { None } },
+    })
+}
+
+// ----------------------------------------------------- optimizer codec
+
+fn optim_to_blobs(s: &OptimState) -> (Vec<f32>, Vec<u64>) {
+    let mut f = Vec::with_capacity(s.tensors.len() * s.n());
+    for t in &s.tensors {
+        f.extend_from_slice(t);
+    }
+    (f, vec![s.t as u64])
+}
+
+fn optim_from_blobs(kind: OptimizerKind, f: Vec<f32>, u: &[u64]) -> Result<OptimState> {
+    let tc = OptimState::tensor_count(kind);
+    ensure!(u.len() == 1, "optimizer integer blob has {} words, expected 1", u.len());
+    ensure!(
+        f.len() % tc == 0,
+        "{} optimizer blob length {} is not a multiple of {tc} tensors",
+        kind.id(),
+        f.len()
+    );
+    let n = f.len() / tc;
+    let tensors = (0..tc).map(|i| f[i * n..(i + 1) * n].to_vec()).collect();
+    Ok(OptimState { kind, t: u[0] as i64, tensors })
+}
+
+// --------------------------------------------------------- write side
+
+/// Staging directory for a snapshot at `step` (sibling of the final
+/// `step_NNNNNNNN` directory so the rename stays on one filesystem).
+pub fn stage_path(root: &Path, step: u32) -> PathBuf {
+    root.join(format!(".stage_step_{step:08}"))
+}
+
+/// Final directory name for a snapshot at `step`.
+pub fn step_path(root: &Path, step: u32) -> PathBuf {
+    root.join(format!("step_{step:08}"))
+}
+
+/// Create (or sweep and recreate) the staging directory. Rank 0 only.
+pub fn prepare_stage(stage: &Path) -> Result<()> {
+    if stage.exists() {
+        std::fs::remove_dir_all(stage)
+            .with_context(|| format!("sweeping stale stage {}", stage.display()))?;
+    }
+    std::fs::create_dir_all(stage)
+        .with_context(|| format!("creating stage {}", stage.display()))
+}
+
+/// Write one rank's state blobs into the staging directory. Collective:
+/// every rank calls this between the trainer's barriers. `optim` is
+/// `Some` on every rank under the sharded reduction (each writes its own
+/// shard) and only on rank 0 under replicated reductions (the state is
+/// identical everywhere — one blob suffices and keeps snapshots small).
+pub fn write_rank_state(
+    stage: &Path,
+    rank: usize,
+    ustate: &UState,
+    tau: &TauState,
+    loader: &ShardLoader,
+    optim: Option<(&OptimState, bool)>,
+) -> Result<()> {
+    let (u1, u2) = ustate.parts();
+    let mut u = Vec::with_capacity(u1.len() * 2);
+    u.extend_from_slice(u1);
+    u.extend_from_slice(u2);
+    blob::write_f32_blob(stage, &u_blob(rank), &u)?;
+
+    let (tf, tu) = tau_to_blobs(&export_tau(tau));
+    blob::write_f32_blob(stage, &tau_blob(rank), &tf)?;
+    if let Some(tu) = tu {
+        blob::write_u64_blob(stage, &tau_blob(rank), &tu)?;
+    }
+
+    blob::write_u64_blob(stage, &loader_blob(rank), &loader_to_u64s(&loader.export()))?;
+
+    if let Some((state, sharded)) = optim {
+        let (of, ou) = optim_to_blobs(state);
+        let name = opt_blob(rank, sharded);
+        blob::write_f32_blob(stage, &name, &of)?;
+        blob::write_u64_blob(stage, &name, &ou)?;
+    }
+    Ok(())
+}
+
+/// Finalize a staged snapshot (rank 0 only, after all ranks wrote):
+/// write the replicated parameters, hash every staged blob into the
+/// manifest, write `MANIFEST.json`, atomically rename the stage into
+/// `step_NNNNNNNN`, and apply the retention policy (`keep_last` most
+/// recent checkpoints are retained; 0 keeps all). Returns the final
+/// checkpoint directory.
+pub fn finalize(
+    root: &Path,
+    stage: &Path,
+    meta: &CkptMeta,
+    params: &[f32],
+    keep_last: usize,
+) -> Result<PathBuf> {
+    ensure!(
+        params.len() == meta.n_params,
+        "finalize: params length {} != meta.n_params {}",
+        params.len(),
+        meta.n_params
+    );
+    blob::write_f32_blob(stage, "params", params)?;
+    let blobs = blob::scan_dir(stage)?;
+    CkptManifest { meta: meta.clone(), blobs }.write(stage)?;
+
+    // durability: flush every staged file (and the stage directory) to
+    // disk BEFORE the rename, so a power loss cannot persist the rename
+    // ahead of the bytes it names — the atomicity claim must hold
+    // against OS crashes, not just process crashes
+    sync_files_and_dir(stage)?;
+
+    let final_dir = step_path(root, meta.step);
+    if final_dir.exists() {
+        // never delete a finalized checkpoint before its replacement is
+        // in place: move it aside first. A crash between the renames
+        // leaves the old state recoverable under .old_step_* (and the
+        // completed stage on disk) instead of destroying the only
+        // checkpoint for this step.
+        let doomed = root.join(format!(".old_step_{:08}", meta.step));
+        if doomed.exists() {
+            std::fs::remove_dir_all(&doomed)
+                .with_context(|| format!("sweeping {}", doomed.display()))?;
+        }
+        std::fs::rename(&final_dir, &doomed)
+            .with_context(|| format!("setting aside {}", final_dir.display()))?;
+    }
+    std::fs::rename(stage, &final_dir).with_context(|| {
+        format!("renaming {} -> {}", stage.display(), final_dir.display())
+    })?;
+    fsync_dir(root); // persist the rename itself (best effort)
+
+    // sweep debris: the .old_step_* set aside above, plus any stale
+    // .stage_step_* a crashed earlier run left behind (a changed
+    // ckpt_every would otherwise never revisit that step to sweep it)
+    sweep_debris(root)?;
+
+    if keep_last > 0 {
+        let mut steps = list_steps(root)?;
+        while steps.len() > keep_last {
+            let (_, dir) = steps.remove(0); // oldest first
+            std::fs::remove_dir_all(&dir)
+                .with_context(|| format!("retention: removing {}", dir.display()))?;
+        }
+    }
+    Ok(final_dir)
+}
+
+/// fsync every regular file in `dir`, then the directory itself.
+fn sync_files_and_dir(dir: &Path) -> Result<()> {
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("syncing {}", dir.display()))?
+    {
+        let path = entry?.path();
+        if path.is_file() {
+            std::fs::File::open(&path)
+                .and_then(|f| f.sync_all())
+                .with_context(|| format!("fsync {}", path.display()))?;
+        }
+    }
+    fsync_dir(dir);
+    Ok(())
+}
+
+/// Directory fsync, best effort: not every platform allows opening a
+/// directory handle, and a missed directory sync only widens the crash
+/// window — it never corrupts data the file syncs already persisted.
+fn fsync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Remove leftover staging / set-aside directories. Called after a
+/// successful rename, when the freshly finalized checkpoint is already
+/// in place — everything still matching a debris prefix is garbage from
+/// this or an earlier (possibly crashed) run.
+fn sweep_debris(root: &Path) -> Result<()> {
+    let entries = match std::fs::read_dir(root) {
+        Ok(e) => e,
+        Err(_) => return Ok(()),
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if name.starts_with(".stage_step_") || name.starts_with(".old_step_") {
+            std::fs::remove_dir_all(&path)
+                .with_context(|| format!("sweeping debris {}", path.display()))?;
+        }
+    }
+    Ok(())
+}
+
+/// All finalized checkpoints under `root`, oldest first.
+fn list_steps(root: &Path) -> Result<Vec<(u32, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(root) {
+        Ok(e) => e,
+        Err(_) => return Ok(out), // no directory yet: no checkpoints
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        let Some(num) = name.strip_prefix("step_") else {
+            continue;
+        };
+        let Ok(step) = num.parse::<u32>() else {
+            continue;
+        };
+        if path.join(MANIFEST_FILE).exists() {
+            out.push((step, path));
+        }
+    }
+    out.sort_by_key(|(s, _)| *s);
+    Ok(out)
+}
+
+/// The most recent finalized checkpoint under `root`, if any.
+pub fn latest(root: &Path) -> Result<Option<PathBuf>> {
+    Ok(list_steps(root)?.pop().map(|(_, p)| p))
+}
+
+// ---------------------------------------------------------- read side
+
+/// One rank's deserialized training state.
+#[derive(Debug, Clone)]
+pub struct RankState {
+    pub u1: Vec<f32>,
+    pub u2: Vec<f32>,
+    pub tau: TauCkpt,
+    /// exact loader position — present for same-world resume; `None`
+    /// after elastic resizing (the shard partition changed)
+    pub loader: Option<LoaderState>,
+    /// epoch to fast-forward a fresh loader to when `loader` is `None`
+    pub epoch: u32,
+}
+
+/// Outcome of [`Checkpoint::verify`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VerifyReport {
+    pub blobs: usize,
+    pub bytes: u64,
+}
+
+/// An opened (manifest-parsed) checkpoint directory.
+pub struct Checkpoint {
+    dir: PathBuf,
+    manifest: CkptManifest,
+}
+
+impl Checkpoint {
+    /// Open a checkpoint: `path` is either one `step_NNNNNNNN` directory
+    /// (contains `MANIFEST.json`) or a checkpoint root, in which case the
+    /// most recent finalized step is opened.
+    pub fn open(path: &Path) -> Result<Checkpoint> {
+        let dir = if path.join(MANIFEST_FILE).exists() {
+            path.to_path_buf()
+        } else {
+            latest(path)?.ok_or_else(|| {
+                anyhow!("no checkpoint found at {} (no MANIFEST.json, no step_* below)", path.display())
+            })?
+        };
+        let manifest = CkptManifest::load(&dir)
+            .with_context(|| format!("opening checkpoint {}", dir.display()))?;
+        Ok(Checkpoint { dir, manifest })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn meta(&self) -> &CkptMeta {
+        &self.manifest.meta
+    }
+
+    pub fn manifest(&self) -> &CkptManifest {
+        &self.manifest
+    }
+
+    /// The algorithm's temperature rule, derived from the manifest.
+    fn temp_rule(&self) -> Result<TempRule> {
+        Ok(Algorithm::from_id(&self.manifest.meta.algorithm)?.temp_rule())
+    }
+
+    fn read_f32(&self, name: &str) -> Result<Vec<f32>> {
+        blob::read_f32_verified(&self.dir, self.manifest.blob(&format!("{name}.f32"))?)
+    }
+
+    fn read_u64(&self, name: &str) -> Result<Vec<u64>> {
+        blob::read_u64_verified(&self.dir, self.manifest.blob(&format!("{name}.u64"))?)
+    }
+
+    fn read_u64_opt(&self, name: &str) -> Result<Option<Vec<u64>>> {
+        if self.manifest.has_blob(&format!("{name}.u64")) {
+            Ok(Some(self.read_u64(name)?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// The replicated parameters.
+    pub fn load_params(&self) -> Result<Vec<f32>> {
+        let p = self.read_f32("params")?;
+        ensure!(
+            p.len() == self.manifest.meta.n_params,
+            "params blob has {} values, manifest says {}",
+            p.len(),
+            self.manifest.meta.n_params
+        );
+        Ok(p)
+    }
+
+    /// One rank's exact state, as written (rank < checkpoint world size).
+    pub fn load_rank_state(&self, rank: usize) -> Result<RankState> {
+        let world = self.manifest.meta.world;
+        ensure!(rank < world, "rank {rank} out of range for checkpoint world {world}");
+        let u = self.read_f32(&u_blob(rank))?;
+        ensure!(u.len() % 2 == 0, "u blob length {} is odd", u.len());
+        let l = u.len() / 2;
+        let expect = shard_len_for(self.manifest.meta.n_train, world, rank);
+        ensure!(l == expect, "u blob covers {l} samples, shard has {expect}");
+        let (u1, u2) = (u[..l].to_vec(), u[l..].to_vec());
+
+        let tau = tau_from_blobs(
+            self.temp_rule()?,
+            self.read_f32(&tau_blob(rank))?,
+            self.read_u64_opt(&tau_blob(rank))?,
+        )?;
+
+        let loader = loader_from_u64s(&self.read_u64(&loader_blob(rank))?)?;
+        ensure!(
+            loader.order.len() == l,
+            "loader blob covers {} positions, shard has {l}",
+            loader.order.len()
+        );
+        let epoch = loader.epoch;
+        Ok(RankState { u1, u2, tau, loader: Some(loader), epoch })
+    }
+
+    /// Optimizer state sized for `target_rank` of a `target_world`-worker
+    /// run under the target reduction strategy, converting between
+    /// replicated and sharded layouts (and re-partitioning across a world
+    /// resize) as needed — DESIGN.md §9 "elastic re-sharding".
+    pub fn load_optimizer(
+        &self,
+        target_rank: usize,
+        target_world: usize,
+        target_sharded: bool,
+    ) -> Result<OptimState> {
+        let meta = &self.manifest.meta;
+        let kind = OptimizerKind::from_id(&meta.optimizer)?;
+        let source_sharded = meta.reduce == "sharded";
+        let p = meta.n_params;
+
+        if source_sharded && target_sharded && target_world == meta.world {
+            // fast path: shard layouts coincide
+            let name = opt_blob(target_rank, true);
+            return optim_from_blobs(kind, self.read_f32(&name)?, &self.read_u64(&name)?);
+        }
+
+        // materialize the full state, then re-slice for the target
+        let full = if source_sharded {
+            let mut shards = Vec::with_capacity(meta.world);
+            for r in 0..meta.world {
+                let name = opt_blob(r, true);
+                shards.push(optim_from_blobs(kind, self.read_f32(&name)?, &self.read_u64(&name)?)?);
+            }
+            super::elastic::concat_optimizer_shards(kind, &shards, p)?
+        } else {
+            let name = opt_blob(0, false);
+            let full = optim_from_blobs(kind, self.read_f32(&name)?, &self.read_u64(&name)?)?;
+            ensure!(full.n() == p, "optimizer blob covers {} params, expected {p}", full.n());
+            full
+        };
+
+        if target_sharded {
+            let (lo, hi) = crate::comm::chunk_bounds(p, target_world, target_rank);
+            Ok(super::elastic::slice_optimizer_state(&full, lo, hi))
+        } else {
+            Ok(full)
+        }
+    }
+
+    /// Re-hash every blob against the manifest — detects any corruption,
+    /// down to a single flipped byte. Returns what was checked.
+    pub fn verify(&self) -> Result<VerifyReport> {
+        let mut bytes = 0u64;
+        for spec in &self.manifest.blobs {
+            let b = blob::read_verified(&self.dir, spec)?;
+            bytes += b.len() as u64;
+        }
+        Ok(VerifyReport { blobs: self.manifest.blobs.len(), bytes })
+    }
+}
+
+// ----------------------------------------------------- resume assembly
+
+/// Everything a worker thread needs to continue a run from a checkpoint.
+pub struct RestoredWorker {
+    pub params: Vec<f32>,
+    pub ustate: UState,
+    pub tau: TauState,
+    pub loader: ShardLoader,
+    /// optimizer state sized for this rank (full or chunk, per strategy)
+    pub optim: OptimState,
+    /// completed steps at snapshot time — training resumes here
+    pub start_step: u32,
+}
+
+/// Check a checkpoint was written by a compatible run. The world size
+/// and local batch are deliberately *not* checked here — elastic resume
+/// handles K ≠ K′ (and may legitimately change the batch size);
+/// [`restore_worker`] rejects a batch-size change on the *exact*
+/// same-world path, where it would corrupt the restored loader cursor.
+pub fn check_compatible(meta: &CkptMeta, cfg: &TrainConfig, n_params: usize) -> Result<()> {
+    ensure!(
+        meta.algorithm == cfg.algorithm.id(),
+        "checkpoint was written by algorithm '{}', run uses '{}'",
+        meta.algorithm,
+        cfg.algorithm.id()
+    );
+    ensure!(
+        meta.optimizer == cfg.optimizer.kind.id(),
+        "checkpoint optimizer '{}' != run optimizer '{}'",
+        meta.optimizer,
+        cfg.optimizer.kind.id()
+    );
+    ensure!(
+        meta.n_params == n_params,
+        "checkpoint covers {} parameters, model has {n_params}",
+        meta.n_params
+    );
+    ensure!(
+        meta.n_train == cfg.data.n_train,
+        "checkpoint dataset size {} != run's {}",
+        meta.n_train,
+        cfg.data.n_train
+    );
+    ensure!(
+        meta.seed == cfg.seed && meta.data_seed == cfg.data.seed,
+        "checkpoint seeds ({}, {}) != run seeds ({}, {}) — resume would not be deterministic",
+        meta.seed,
+        meta.data_seed,
+        cfg.seed,
+        cfg.data.seed
+    );
+    let run_hyper = super::manifest::hyper_echo(cfg);
+    ensure!(
+        meta.hyper == run_hyper,
+        "checkpoint hyperparameters differ from the run's — resume would not \
+         continue the checkpointed trajectory\n  checkpoint: {}\n  run:        {run_hyper}",
+        meta.hyper
+    );
+    Ok(())
+}
+
+/// Assemble one worker's full state from a checkpoint, handling both
+/// exact (same-world) and elastic (K → K′) resume. `sharded` says whether
+/// the *resuming* run applies per-rank optimizer shards.
+pub fn restore_worker(
+    ck: &Checkpoint,
+    cfg: &TrainConfig,
+    rank: usize,
+    world: usize,
+    local_batch: usize,
+    sharded: bool,
+) -> Result<RestoredWorker> {
+    let params = ck.load_params()?;
+    let rs = if world == ck.meta().world {
+        // exact resume restores the loader cursor verbatim; under a
+        // different batch size the cursor would be reinterpreted against
+        // shifted batch boundaries, silently changing every subsequent
+        // batch — the very determinism this subsystem guarantees
+        ensure!(
+            local_batch == ck.meta().local_batch,
+            "checkpoint local batch {} != run's {local_batch}; an exact \
+             same-world resume requires matching batch boundaries",
+            ck.meta().local_batch
+        );
+        ck.load_rank_state(rank)?
+    } else {
+        super::elastic::resize_rank_state(ck, rank, world)?
+    };
+
+    let mut loader = ShardLoader::new(cfg.data.n_train, rank, world, local_batch, cfg.seed)?;
+    match rs.loader {
+        Some(state) => loader.import(state).context("restoring loader position")?,
+        None => loader.advance_to_epoch(rs.epoch),
+    }
+
+    ensure!(
+        rs.u1.len() == loader.shard_len(),
+        "restored u state covers {} samples, shard has {}",
+        rs.u1.len(),
+        loader.shard_len()
+    );
+    let ustate = UState::from_parts(rs.u1, rs.u2);
+    let tau = restore_tau(cfg, loader.shard_len(), &rs.tau)?;
+    let optim = ck.load_optimizer(rank, world, sharded)?;
+
+    Ok(RestoredWorker { params, ustate, tau, loader, optim, start_step: ck.meta().step })
+}

@@ -83,4 +83,4 @@ pub use collective::{
     ShardedReduceScatter,
 };
 pub use cost_model::{Collective, CostModel, ProfileName};
-pub use world::{CommStats, CommStatsSnapshot, CommWorld, WorkerComm};
+pub use world::{chunk_bounds, CommStats, CommStatsSnapshot, CommWorld, WorkerComm};

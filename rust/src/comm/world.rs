@@ -309,8 +309,10 @@ impl WorkerComm {
 }
 
 /// `[lo, hi)` of chunk `r` when `n` elements are split into `ceil(n/k)`
-/// chunks (tail chunks short or empty for non-divisible n).
-fn chunk_bounds(n: usize, k: usize, r: usize) -> (usize, usize) {
+/// chunks (tail chunks short or empty for non-divisible n). Public
+/// because the checkpoint subsystem re-partitions sharded optimizer
+/// state with the same chunking (DESIGN.md §9).
+pub fn chunk_bounds(n: usize, k: usize, r: usize) -> (usize, usize) {
     let chunk = n.div_ceil(k);
     ((r * chunk).min(n), ((r + 1) * chunk).min(n))
 }

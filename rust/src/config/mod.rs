@@ -333,6 +333,17 @@ pub struct TrainConfig {
     pub reduce: crate::comm::ReduceStrategy,
     /// FastCLIP-v3: decay tau_lr to 1/3 when τ < 0.03 (Appendix B)
     pub tau_lr_decay_below: Option<f32>,
+    /// checkpoint root directory (DESIGN.md §9); required when
+    /// `ckpt_every > 0`
+    pub ckpt_dir: Option<String>,
+    /// snapshot the full training state every N steps (0 = never)
+    pub ckpt_every: u32,
+    /// retain only the most recent N snapshots (0 = keep all)
+    pub keep_last: usize,
+    /// resume from a checkpoint: a `step_NNNNNNNN` directory, a
+    /// checkpoint root (latest step is used), or the literal "latest"
+    /// (resolved against `ckpt_dir`)
+    pub resume: Option<String>,
 }
 
 impl TrainConfig {
@@ -370,6 +381,10 @@ impl TrainConfig {
             network: crate::comm::ProfileName::InfiniBand,
             reduce: crate::comm::ReduceStrategy::Auto,
             tau_lr_decay_below: if algorithm == Algorithm::FastClipV3 { Some(0.03) } else { None },
+            ckpt_dir: None,
+            ckpt_every: 0,
+            keep_last: 3,
+            resume: None,
         }
     }
 
@@ -391,6 +406,16 @@ impl TrainConfig {
         if let GammaSchedule::Cosine { gamma_min, .. } = self.gamma {
             ensure!(gamma_min > 0.0 && gamma_min <= 1.0, "gamma_min must be in (0,1]");
         }
+        ensure!(
+            self.ckpt_every == 0 || self.ckpt_dir.is_some(),
+            "ckpt_every > 0 requires ckpt_dir"
+        );
+        if let Some(r) = &self.resume {
+            ensure!(
+                r != "latest" || self.ckpt_dir.is_some(),
+                "resume = \"latest\" requires ckpt_dir"
+            );
+        }
         Ok(())
     }
 
@@ -411,6 +436,7 @@ impl TrainConfig {
             "algorithm", "artifact_dir", "steps", "iters_per_epoch", "seed",
             "tau_init", "tau_lr", "tau_min", "eps", "rho", "eval_every",
             "nodes", "gpus_per_node", "network", "reduce", "tau_lr_decay_below",
+            "ckpt_dir", "ckpt_every", "keep_last", "resume",
             "optimizer.kind", "optimizer.beta1", "optimizer.beta2",
             "optimizer.eps", "optimizer.weight_decay", "optimizer.momentum",
             "lr.peak", "lr.min", "lr.warmup_iters", "lr.total_iters",
@@ -437,6 +463,14 @@ impl TrainConfig {
         cfg.reduce = crate::comm::ReduceStrategy::from_id(&kv.str_or("reduce", cfg.reduce.id()))?;
         if let Some(v) = kv.get("tau_lr_decay_below") {
             cfg.tau_lr_decay_below = Some(v.parse().map_err(anyhow::Error::msg)?);
+        }
+        if let Some(v) = kv.get("ckpt_dir") {
+            cfg.ckpt_dir = Some(v.to_string());
+        }
+        cfg.ckpt_every = kv.parse_or("ckpt_every", cfg.ckpt_every)?;
+        cfg.keep_last = kv.parse_or("keep_last", cfg.keep_last)?;
+        if let Some(v) = kv.get("resume") {
+            cfg.resume = Some(v.to_string());
         }
 
         if let Some(kind) = kv.get("optimizer.kind") {
@@ -500,6 +534,14 @@ impl TrainConfig {
         let _ = writeln!(s, "reduce = \"{}\"", self.reduce.id());
         if let Some(v) = self.tau_lr_decay_below {
             let _ = writeln!(s, "tau_lr_decay_below = {v}");
+        }
+        if let Some(d) = &self.ckpt_dir {
+            let _ = writeln!(s, "ckpt_dir = \"{d}\"");
+            let _ = writeln!(s, "ckpt_every = {}", self.ckpt_every);
+            let _ = writeln!(s, "keep_last = {}", self.keep_last);
+        }
+        if let Some(r) = &self.resume {
+            let _ = writeln!(s, "resume = \"{r}\"");
         }
         let _ = writeln!(s, "\n[optimizer]");
         let _ = writeln!(s, "kind = \"{}\"", self.optimizer.kind.id());
@@ -598,6 +640,30 @@ mod tests {
         assert_eq!(back.optimizer.kind, OptimizerKind::Lion);
         assert_eq!(back.reduce, cfg.reduce);
         assert!((back.eps - 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ckpt_fields_roundtrip_and_validate() {
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV1);
+        cfg.ckpt_dir = Some("ckpts/run1".into());
+        cfg.ckpt_every = 25;
+        cfg.keep_last = 5;
+        cfg.resume = Some("latest".into());
+        cfg.validate().unwrap();
+        let text = cfg.to_file_string();
+        let back = TrainConfig::from_kv(&crate::util::KvFile::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.ckpt_dir.as_deref(), Some("ckpts/run1"));
+        assert_eq!(back.ckpt_every, 25);
+        assert_eq!(back.keep_last, 5);
+        assert_eq!(back.resume.as_deref(), Some("latest"));
+        // ckpt_every without a directory is a config error
+        let mut bad = TrainConfig::new("x", Algorithm::FastClipV1);
+        bad.ckpt_every = 10;
+        assert!(bad.validate().is_err());
+        // resume latest without a directory too
+        let mut bad = TrainConfig::new("x", Algorithm::FastClipV1);
+        bad.resume = Some("latest".into());
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -14,8 +14,8 @@ pub mod timing;
 
 mod trainer;
 
-pub use state::{IndividualTau, UState};
-pub use temperature::{GlobalTau, TauState};
+pub use state::{IndividualTau, IndividualTauState, UState};
+pub use temperature::{GlobalTau, GlobalTauState, TauState};
 pub use timing::{
     charge_iteration, charge_iteration_with, IterationVolumes, PerIterMs, TimeBreakdown,
     OVERLAP_FRACTION,

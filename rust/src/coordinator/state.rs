@@ -22,6 +22,17 @@ impl UState {
         Self { u1: vec![0.0; shard_len], u2: vec![0.0; shard_len] }
     }
 
+    /// Rebuild from checkpointed vectors (DESIGN.md §9).
+    pub fn from_parts(u1: Vec<f32>, u2: Vec<f32>) -> Self {
+        assert_eq!(u1.len(), u2.len(), "u1/u2 length mismatch");
+        Self { u1, u2 }
+    }
+
+    /// The full (u1, u2) vectors, shard-local order (checkpointing).
+    pub fn parts(&self) -> (&[f32], &[f32]) {
+        (&self.u1, &self.u2)
+    }
+
     pub fn len(&self) -> usize {
         self.u1.len()
     }
@@ -52,6 +63,21 @@ impl UState {
     pub fn mean_u(&self) -> (f32, f32) {
         (crate::util::mean(&self.u1), crate::util::mean(&self.u2))
     }
+}
+
+/// A serializable snapshot of an [`IndividualTau`]'s full per-sample
+/// state — temperatures plus Adam moments and step counters for both
+/// sides — in shard-local order (checkpoint/resume, DESIGN.md §9).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndividualTauState {
+    pub tau1: Vec<f32>,
+    pub tau2: Vec<f32>,
+    pub m1: Vec<f32>,
+    pub v1: Vec<f32>,
+    pub m2: Vec<f32>,
+    pub v2: Vec<f32>,
+    pub t1: Vec<i32>,
+    pub t2: Vec<i32>,
 }
 
 /// Per-sample learnable temperatures with per-sample Adam state
@@ -123,6 +149,56 @@ impl IndividualTau {
     pub fn mean_tau(&self) -> f32 {
         0.5 * (crate::util::mean(&self.tau1) + crate::util::mean(&self.tau2))
     }
+
+    pub fn len(&self) -> usize {
+        self.tau1.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tau1.is_empty()
+    }
+
+    /// Snapshot the full per-sample state for a checkpoint.
+    pub fn export(&self) -> IndividualTauState {
+        IndividualTauState {
+            tau1: self.tau1.clone(),
+            tau2: self.tau2.clone(),
+            m1: self.m1.clone(),
+            v1: self.v1.clone(),
+            m2: self.m2.clone(),
+            v2: self.v2.clone(),
+            t1: self.t1.clone(),
+            t2: self.t2.clone(),
+        }
+    }
+
+    /// Restore a snapshot; errors on shard-length mismatch. The Adam
+    /// hyperparameters and τ_min stay as constructed (they come from the
+    /// run config, not the checkpoint).
+    pub fn import(&mut self, s: IndividualTauState) -> anyhow::Result<()> {
+        let n = self.tau1.len();
+        anyhow::ensure!(
+            s.tau1.len() == n
+                && s.tau2.len() == n
+                && s.m1.len() == n
+                && s.v1.len() == n
+                && s.m2.len() == n
+                && s.v2.len() == n
+                && s.t1.len() == n
+                && s.t2.len() == n,
+            "individual-tau state covers {} samples, shard has {n}",
+            s.tau1.len()
+        );
+        self.tau1 = s.tau1;
+        self.tau2 = s.tau2;
+        self.m1 = s.m1;
+        self.v1 = s.v1;
+        self.m2 = s.m2;
+        self.v2 = s.v2;
+        self.t1 = s.t1;
+        self.t2 = s.t2;
+        Ok(())
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -186,6 +262,37 @@ mod tests {
         let (t1, t2) = t.gather(&[2]);
         assert!(t1[0] < 0.05, "tau1 decreases on positive grad");
         assert!(t2[0] > 0.05, "tau2 increases on negative grad");
+    }
+
+    #[test]
+    fn individual_tau_export_import_resumes_bitwise() {
+        let mut a = IndividualTau::new(6, 0.03, 0.005);
+        for t in 0..40 {
+            let g = (t as f32 * 0.7).sin();
+            a.update(&[t % 6, (t + 2) % 6], &[g, -g], &[-g, g], 1e-3);
+        }
+        let snap = a.export();
+        let mut b = IndividualTau::new(6, 0.03, 0.005);
+        b.import(snap.clone()).unwrap();
+        for t in 0..40 {
+            let g = (t as f32 * 1.3).cos();
+            a.update(&[t % 6], &[g], &[g], 1e-3);
+            b.update(&[t % 6], &[g], &[g], 1e-3);
+        }
+        assert_eq!(a.export(), b.export(), "resume must be bitwise");
+        assert_eq!(a.len(), 6);
+        // length mismatch rejected
+        let mut c = IndividualTau::new(5, 0.03, 0.005);
+        assert!(c.import(snap).is_err());
+    }
+
+    #[test]
+    fn ustate_parts_roundtrip() {
+        let mut s = UState::new(4);
+        s.scatter(&[0, 2], &[1.0, 2.0], &[-1.0, -2.0]);
+        let (u1, u2) = s.parts();
+        let back = UState::from_parts(u1.to_vec(), u2.to_vec());
+        assert_eq!(back.gather(&[0, 1, 2, 3]), s.gather(&[0, 1, 2, 3]));
     }
 
     #[test]

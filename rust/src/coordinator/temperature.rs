@@ -17,6 +17,19 @@ use crate::optim::ScalarAdam;
 
 use super::state::IndividualTau;
 
+/// A serializable snapshot of a [`GlobalTau`] (checkpoint/resume,
+/// DESIGN.md §9): τ itself, the (possibly decayed) learning rate, and the
+/// scalar-Adam moments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GlobalTauState {
+    pub tau: f32,
+    pub lr: f32,
+    pub decayed: bool,
+    pub adam_m: f32,
+    pub adam_v: f32,
+    pub adam_t: i32,
+}
+
 /// Global-τ updater owned by each worker (deterministic: every worker
 /// applies the same update to its replica).
 #[derive(Debug, Clone, Copy)]
@@ -55,6 +68,28 @@ impl GlobalTau {
 
     pub fn lr(&self) -> f32 {
         self.lr
+    }
+
+    /// Snapshot the full updater state for a checkpoint.
+    pub fn export(&self) -> GlobalTauState {
+        let (adam_m, adam_v, adam_t) = self.adam.export();
+        GlobalTauState {
+            tau: self.tau,
+            lr: self.lr,
+            decayed: self.decayed,
+            adam_m,
+            adam_v,
+            adam_t,
+        }
+    }
+
+    /// Restore a snapshot taken by [`Self::export`]. `tau_min` and the
+    /// decay threshold stay as constructed (run config, not checkpoint).
+    pub fn import(&mut self, s: &GlobalTauState) {
+        self.tau = s.tau;
+        self.lr = s.lr;
+        self.decayed = s.decayed;
+        self.adam.import(s.adam_m, s.adam_v, s.adam_t);
     }
 }
 
@@ -160,6 +195,26 @@ mod tests {
             g.step(1.0);
         }
         assert!((g.lr() - lr0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn global_tau_export_import_resumes_bitwise() {
+        let mut c = cfg(Algorithm::FastClipV3);
+        c.tau_lr_decay_below = Some(0.05);
+        let mut a = GlobalTau::new(&c);
+        for t in 0..30 {
+            a.step((t as f32 * 0.4).sin() + 0.5);
+        }
+        let snap = a.export();
+        let mut b = GlobalTau::new(&c);
+        b.import(&snap);
+        for t in 0..50 {
+            let g = (t as f32 * 0.9).cos();
+            a.step(g);
+            b.step(g);
+        }
+        assert_eq!(a.export(), b.export(), "resume must be bitwise");
+        assert_eq!(a.tau, b.tau);
     }
 
     #[test]

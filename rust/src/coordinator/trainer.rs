@@ -26,11 +26,13 @@
 //! *time* is charged by the α–β cost model over the configured topology
 //! (`timing.rs`).
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::ckpt::{self, CkptMeta, CkptRunStats};
 use crate::comm::{reduction, CommWorld, CostModel, ReduceAlgo, ReduceStrategy, WorkerComm};
 use crate::config::{OptimizerKind, TrainConfig};
 use crate::data::{Dataset, ShardLoader};
@@ -82,6 +84,9 @@ pub struct TrainResult {
     pub final_tau: f32,
     pub final_params: Vec<f32>,
     pub wall_s: f64,
+    /// checkpoint activity: snapshots written, write/restore wall time,
+    /// and the step resumed from (DESIGN.md §9)
+    pub ckpt: CkptRunStats,
 }
 
 impl TrainResult {
@@ -105,8 +110,17 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+    pub fn new(mut cfg: TrainConfig) -> Result<Trainer> {
         cfg.validate()?;
+        // resolve `--resume latest` to a concrete checkpoint directory
+        // here, once, so every worker opens the same snapshot even if a
+        // new one lands mid-startup
+        if cfg.resume.as_deref() == Some("latest") {
+            let root = cfg.ckpt_dir.as_deref().expect("validated: latest requires ckpt_dir");
+            let dir = ckpt::latest(Path::new(root))?
+                .ok_or_else(|| anyhow::anyhow!("no checkpoints under {root} to resume from"))?;
+            cfg.resume = Some(dir.to_string_lossy().into_owned());
+        }
         let manifest = Manifest::load(&cfg.artifact_dir)
             .with_context(|| format!("loading artifact bundle {}", cfg.artifact_dir))?;
         let variant = cfg.algorithm.variant();
@@ -178,6 +192,7 @@ impl Trainer {
             final_tau: out.final_tau,
             final_params: out.params,
             wall_s: t0.elapsed().as_secs_f64(),
+            ckpt: out.ckpt,
         })
     }
 }
@@ -191,6 +206,7 @@ struct WorkerOutput {
     reduce_id: &'static str,
     final_tau: f32,
     params: Vec<f32>,
+    ckpt: CkptRunStats,
 }
 
 fn worker_loop(
@@ -209,7 +225,12 @@ fn worker_loop(
     let img_dim = dims.v_patches * dims.v_patch_dim;
     let individual_tau = variant == "rgcl_i";
 
-    let mut loader = ShardLoader::new(cfg.data.n_train, rank, k, bl, cfg.seed);
+    // cannot fail on a subset of ranks: Trainer::new pre-validated
+    // n_train/K >= bl, which is exactly the smallest strided shard — a
+    // partial failure here would strand the surviving ranks on their
+    // first collective
+    let mut loader = ShardLoader::new(cfg.data.n_train, rank, k, bl, cfg.seed)
+        .context("building the shard loader")?;
     let mut ustate = UState::new(loader.shard_len());
     let mut tau = TauState::new(&cfg, loader.shard_len());
     let mut params = manifest.load_init_params()?;
@@ -252,13 +273,59 @@ fn worker_loop(
         n_scalar_vectors,
     );
 
+    // resume: replace the freshly initialized state with the checkpoint's
+    // (DESIGN.md §9). Same world size restores bit-exactly, including the
+    // loader cursor and RNG stream; a different world size re-shards u/τ
+    // through the global-index mapping and re-partitions the optimizer.
+    // Every fallible step goes through `ckpt_sync`: a rank that bailed
+    // with a local `?` while its peers head into the next collective
+    // would deadlock the world, so errors are made collective instead.
+    let mut ckpt_stats = CkptRunStats::default();
+    let mut start_step: u32 = 0;
+    if let Some(resume) = &cfg.resume {
+        let t0 = Instant::now();
+        let attempt = (|| -> Result<ckpt::RestoredWorker> {
+            let ck = ckpt::Checkpoint::open(Path::new(resume))
+                .with_context(|| format!("opening checkpoint {resume}"))?;
+            ckpt::check_compatible(ck.meta(), &cfg, p)?;
+            let restored =
+                ckpt::restore_worker(&ck, &cfg, rank, k, bl, algo == ReduceAlgo::Sharded)
+                    .with_context(|| format!("restoring rank {rank} from {resume}"))?;
+            ensure!(
+                restored.start_step <= cfg.steps,
+                "checkpoint is at step {}, past the configured {} steps",
+                restored.start_step,
+                cfg.steps
+            );
+            if rank == 0 {
+                eprintln!(
+                    "resumed from {} at step {} (checkpoint world {}, run world {k})",
+                    ck.dir().display(),
+                    restored.start_step,
+                    ck.meta().world
+                );
+            }
+            Ok(restored)
+        })();
+        let restored = ckpt_sync(&comm, attempt, "restoring state")?;
+        params = restored.params;
+        ustate = restored.ustate;
+        tau = restored.tau;
+        loader = restored.loader;
+        start_step = restored.start_step;
+        let imported = optimizer.import_state(&restored.optim);
+        ckpt_sync(&comm, imported, "importing optimizer state")?;
+        ckpt_stats.restore_s = t0.elapsed().as_secs_f64();
+        ckpt_stats.resumed_at = Some(start_step);
+    }
+
     let mut timing = TimeBreakdown::default();
     let mut history = Vec::new();
     let mut evals = Vec::new();
     let mut images = vec![0.0f32; bl * img_dim];
     let mut texts = vec![0i32; bl * dims.t_len];
 
-    for t in 0..cfg.steps {
+    for t in start_step..cfg.steps {
         let epoch = t / cfg.iters_per_epoch.max(1);
         let gamma = if cfg.algorithm.forces_gamma_one() { 1.0 } else { cfg.gamma.value(epoch) };
         let lr = cfg.lr.value(t);
@@ -359,6 +426,48 @@ fn worker_loop(
             }
             comm.barrier();
         }
+
+        // periodic snapshot (DESIGN.md §9): rank 0 stages, every rank
+        // writes its own blobs, rank 0 hashes + writes the manifest and
+        // atomically renames the stage into place. Each fallible phase
+        // ends in a `ckpt_sync` (an all-reduced failure flag, itself the
+        // synchronization point): an I/O error — disk full, permissions —
+        // on ANY rank surfaces as an error on EVERY rank, instead of one
+        // rank exiting early and deadlocking its peers on a barrier.
+        if cfg.ckpt_every > 0 && (t + 1) % cfg.ckpt_every == 0 {
+            let t0 = Instant::now();
+            let root_s = cfg.ckpt_dir.as_deref().expect("validated: ckpt_every requires ckpt_dir");
+            let root = Path::new(root_s);
+            let stage = ckpt::stage_path(root, t + 1);
+            let staged = if rank == 0 { ckpt::prepare_stage(&stage) } else { Ok(()) };
+            ckpt_sync(&comm, staged, "staging the snapshot directory")?;
+            // sharded reduction: every rank persists its optimizer shard;
+            // replicated: the state is identical everywhere, rank 0's copy
+            // suffices
+            let sharded = algo == ReduceAlgo::Sharded;
+            let opt_state =
+                if sharded || rank == 0 { Some(optimizer.export_state()) } else { None };
+            let wrote = ckpt::write_rank_state(
+                &stage,
+                rank,
+                &ustate,
+                &tau,
+                &loader,
+                opt_state.as_ref().map(|s| (s, sharded)),
+            );
+            ckpt_sync(&comm, wrote, "writing rank state blobs")?;
+            let finalized = if rank == 0 {
+                let meta = CkptMeta::for_run(&cfg, t + 1, k, p, bl, algo.id());
+                ckpt::finalize(root, &stage, &meta, &params, cfg.keep_last)
+                    .map(|_| ())
+                    .with_context(|| format!("writing checkpoint at step {}", t + 1))
+            } else {
+                Ok(())
+            };
+            ckpt_sync(&comm, finalized, "finalizing the snapshot")?;
+            ckpt_stats.snapshots += 1;
+            ckpt_stats.write_s += t0.elapsed().as_secs_f64();
+        }
     }
 
     // final evaluation on rank 0
@@ -381,11 +490,31 @@ fn worker_loop(
         reduce_id: algo.id(),
         final_tau: tau.mean_tau(),
         params,
+        ckpt: ckpt_stats,
     })
 }
 
 fn runtime_compute_s(rt: &WorkerRuntime) -> f64 {
     rt.timers.encode_s + rt.timers.phase_g_s + rt.timers.step_s
+}
+
+/// Collective error propagation for the checkpoint protocol: all ranks
+/// SUM-reduce a failure flag (the reduce doubles as the phase's sync
+/// point), so either every rank proceeds or every rank returns an error
+/// together. Without it, one rank propagating a local I/O error with `?`
+/// exits the lockstep loop while its peers block forever on the next
+/// collective — turning a disk-full error into a hang of
+/// [`Trainer::run`].
+fn ckpt_sync<T>(comm: &WorkerComm, local: Result<T>, what: &str) -> Result<T> {
+    let mut flag = [if local.is_err() { 1.0f32 } else { 0.0 }];
+    comm.all_reduce_sum(&mut flag);
+    match local {
+        Err(e) => Err(e).with_context(|| format!("checkpoint: {what}")),
+        Ok(v) => {
+            ensure!(flag[0] == 0.0, "checkpoint: {what} failed on another rank");
+            Ok(v)
+        }
+    }
 }
 
 #[cfg(test)]

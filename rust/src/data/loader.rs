@@ -3,7 +3,9 @@
 //! shard* each epoch (seeded, deterministic) and yields fixed-size local
 //! batches. Local shard positions index the per-worker u/τ state stores.
 
-use crate::util::Rng;
+use anyhow::{ensure, Result};
+
+use crate::util::{Rng, RngState};
 
 /// A local batch: global sample indices + their shard-local positions.
 #[derive(Debug, Clone)]
@@ -11,6 +13,27 @@ pub struct Batch {
     pub global_indices: Vec<usize>,
     pub local_positions: Vec<usize>,
     pub epoch: u32,
+}
+
+/// Number of samples in rank `rank`'s strided shard of `n_train` samples
+/// over `world` workers — |{rank, rank+world, rank+2·world, ...}|.
+pub fn shard_len_for(n_train: usize, world: usize, rank: usize) -> usize {
+    if rank >= n_train {
+        0
+    } else {
+        (n_train - rank).div_ceil(world)
+    }
+}
+
+/// A serializable snapshot of a [`ShardLoader`]'s exact position
+/// (checkpoint/resume, DESIGN.md §9): restoring it reproduces the batch
+/// sequence bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoaderState {
+    pub epoch: u32,
+    pub cursor: usize,
+    pub order: Vec<usize>,
+    pub rng: RngState,
 }
 
 pub struct ShardLoader {
@@ -24,12 +47,26 @@ pub struct ShardLoader {
 }
 
 impl ShardLoader {
-    pub fn new(n_train: usize, rank: usize, world: usize, batch: usize, seed: u64) -> Self {
-        assert!(world > 0 && rank < world && batch > 0);
+    /// Build the loader for one worker's shard. Errors (rather than
+    /// aborting the worker thread) when the topology is degenerate or the
+    /// shard cannot fill a single batch — a bad `--nodes`/`--batch`
+    /// combination surfaces as an actionable config error.
+    pub fn new(
+        n_train: usize,
+        rank: usize,
+        world: usize,
+        batch: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        ensure!(world > 0, "world size must be > 0");
+        ensure!(rank < world, "rank {rank} out of range for world size {world}");
+        ensure!(batch > 0, "local batch must be > 0");
         let shard: Vec<usize> = (rank..n_train).step_by(world).collect();
-        assert!(
+        ensure!(
             shard.len() >= batch,
-            "shard of worker {rank} has {} samples < batch {batch}",
+            "worker {rank}'s shard has only {} of the {n_train} training samples \
+             (strided over {world} workers) — too few for local batch {batch}; \
+             lower the batch size or worker count, or raise data.n_train",
             shard.len()
         );
         let mut s = Self {
@@ -41,11 +78,15 @@ impl ShardLoader {
             rng: Rng::new(seed ^ 0x10ad).split(rank as u64),
         };
         s.rng.shuffle(&mut s.order);
-        s
+        Ok(s)
     }
 
     pub fn shard_len(&self) -> usize {
         self.shard.len()
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.epoch
     }
 
     pub fn iters_per_epoch(&self) -> usize {
@@ -69,6 +110,55 @@ impl ShardLoader {
             epoch: self.epoch,
         }
     }
+
+    /// Snapshot the loader's exact position for a checkpoint.
+    pub fn export(&self) -> LoaderState {
+        LoaderState {
+            epoch: self.epoch,
+            cursor: self.cursor,
+            order: self.order.clone(),
+            rng: self.rng.export(),
+        }
+    }
+
+    /// Restore a position exported from a loader with the same shard
+    /// (same n_train / rank / world). Validates the permutation so a
+    /// corrupt checkpoint cannot index out of the shard.
+    pub fn import(&mut self, s: LoaderState) -> Result<()> {
+        ensure!(
+            s.order.len() == self.shard.len(),
+            "loader state covers {} positions, shard has {}",
+            s.order.len(),
+            self.shard.len()
+        );
+        ensure!(s.cursor <= s.order.len(), "loader cursor {} out of range", s.cursor);
+        let mut seen = vec![false; s.order.len()];
+        for &p in &s.order {
+            ensure!(
+                p < seen.len() && !seen[p],
+                "loader order is not a permutation of the shard"
+            );
+            seen[p] = true;
+        }
+        self.epoch = s.epoch;
+        self.cursor = s.cursor;
+        self.order = s.order;
+        self.rng = Rng::restore(s.rng);
+        Ok(())
+    }
+
+    /// Fast-forward a freshly constructed loader to the start of `epoch`,
+    /// replaying the per-epoch reshuffles deterministically. Used by
+    /// elastic resume (DESIGN.md §9), where the shard partition itself
+    /// changed and an exact cursor cannot be mapped: the resized world
+    /// restarts cleanly at the checkpoint's epoch.
+    pub fn advance_to_epoch(&mut self, epoch: u32) {
+        while self.epoch < epoch {
+            self.epoch += 1;
+            self.rng.shuffle(&mut self.order);
+        }
+        self.cursor = 0;
+    }
 }
 
 #[cfg(test)]
@@ -81,18 +171,32 @@ mod tests {
         let n = 103;
         let mut seen = HashSet::new();
         for rank in 0..4 {
-            let l = ShardLoader::new(n, rank, 4, 5, 1);
+            let l = ShardLoader::new(n, rank, 4, 5, 1).unwrap();
             for &g in &l.shard {
                 assert!(seen.insert(g), "index {g} in two shards");
                 assert_eq!(g % 4, rank);
             }
+            assert_eq!(l.shard_len(), shard_len_for(n, 4, rank));
         }
         assert_eq!(seen.len(), n);
     }
 
     #[test]
+    fn shard_len_for_counts_strided_members() {
+        for (n, k) in [(103usize, 4usize), (64, 2), (10, 4), (7, 8), (0, 3)] {
+            let mut total = 0;
+            for r in 0..k {
+                let expect = (r..n).step_by(k).count();
+                assert_eq!(shard_len_for(n, k, r), expect, "n={n} k={k} r={r}");
+                total += expect;
+            }
+            assert_eq!(total, n);
+        }
+    }
+
+    #[test]
     fn epoch_covers_shard_once() {
-        let mut l = ShardLoader::new(64, 1, 2, 8, 3);
+        let mut l = ShardLoader::new(64, 1, 2, 8, 3).unwrap();
         let mut seen = HashSet::new();
         for _ in 0..l.iters_per_epoch() {
             let b = l.next_batch();
@@ -107,7 +211,7 @@ mod tests {
 
     #[test]
     fn local_positions_match_globals() {
-        let mut l = ShardLoader::new(40, 3, 4, 4, 7);
+        let mut l = ShardLoader::new(40, 3, 4, 4, 7).unwrap();
         for _ in 0..5 {
             let b = l.next_batch();
             for (&g, &p) in b.global_indices.iter().zip(&b.local_positions) {
@@ -118,8 +222,8 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let mut a = ShardLoader::new(50, 0, 2, 5, 9);
-        let mut b = ShardLoader::new(50, 0, 2, 5, 9);
+        let mut a = ShardLoader::new(50, 0, 2, 5, 9).unwrap();
+        let mut b = ShardLoader::new(50, 0, 2, 5, 9).unwrap();
         for _ in 0..10 {
             assert_eq!(a.next_batch().global_indices, b.next_batch().global_indices);
         }
@@ -127,7 +231,7 @@ mod tests {
 
     #[test]
     fn reshuffles_between_epochs() {
-        let mut l = ShardLoader::new(64, 0, 1, 64, 5);
+        let mut l = ShardLoader::new(64, 0, 1, 64, 5).unwrap();
         let e0 = l.next_batch().global_indices;
         let e1 = l.next_batch().global_indices;
         assert_ne!(e0, e1);
@@ -139,8 +243,62 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
     fn rejects_batch_larger_than_shard() {
-        ShardLoader::new(10, 0, 4, 5, 0);
+        let err = ShardLoader::new(10, 0, 4, 5, 0).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("batch"), "actionable message, got: {msg}");
+        assert!(ShardLoader::new(10, 1, 2, 1, 0).is_ok());
+        assert!(ShardLoader::new(10, 1, 2, 0, 0).is_err(), "zero batch");
+        assert!(ShardLoader::new(10, 3, 2, 1, 0).is_err(), "rank >= world");
+        assert!(ShardLoader::new(10, 0, 0, 1, 0).is_err(), "empty world");
+    }
+
+    #[test]
+    fn export_import_resumes_batches_bitwise() {
+        let mut a = ShardLoader::new(96, 1, 3, 4, 11).unwrap();
+        for _ in 0..13 {
+            a.next_batch(); // cross an epoch boundary (8 iters/epoch)
+        }
+        let snap = a.export();
+        let mut b = ShardLoader::new(96, 1, 3, 4, 11).unwrap();
+        b.import(snap).unwrap();
+        for _ in 0..30 {
+            let ba = a.next_batch();
+            let bb = b.next_batch();
+            assert_eq!(ba.global_indices, bb.global_indices);
+            assert_eq!(ba.epoch, bb.epoch);
+        }
+    }
+
+    #[test]
+    fn import_rejects_corrupt_state() {
+        let a = ShardLoader::new(40, 0, 2, 4, 1).unwrap();
+        let mut b = ShardLoader::new(40, 0, 2, 4, 1).unwrap();
+        // wrong length
+        let mut s = a.export();
+        s.order.pop();
+        assert!(b.import(s).is_err());
+        // duplicate position
+        let mut s = a.export();
+        s.order[0] = s.order[1];
+        assert!(b.import(s).is_err());
+        // cursor out of range
+        let mut s = a.export();
+        s.cursor = s.order.len() + 1;
+        assert!(b.import(s).is_err());
+    }
+
+    #[test]
+    fn advance_to_epoch_matches_continuous_run() {
+        // a loader advanced through next_batch to epoch 2 has the same
+        // order as a fresh loader fast-forwarded to epoch 2
+        let mut cont = ShardLoader::new(32, 0, 2, 4, 5).unwrap();
+        while cont.epoch() < 2 {
+            cont.next_batch();
+        }
+        let mut jump = ShardLoader::new(32, 0, 2, 4, 5).unwrap();
+        jump.advance_to_epoch(2);
+        assert_eq!(jump.order, cont.order);
+        assert_eq!(jump.epoch(), 2);
     }
 }

@@ -10,5 +10,5 @@
 mod loader;
 mod synthetic;
 
-pub use loader::ShardLoader;
+pub use loader::{shard_len_for, LoaderState, ShardLoader};
 pub use synthetic::{Dataset, EvalSet, EvalVariant, ModelDims};

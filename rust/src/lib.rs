@@ -11,10 +11,12 @@
 //!   evaluation and the experiment harness. Python never runs here; the
 //!   binary loads `artifacts/*.hlo.txt` through PJRT (`xla` crate).
 //!
-//! Entry points: [`coordinator::Trainer`] for training,
+//! Entry points: [`coordinator::Trainer`] for training (with periodic
+//! snapshots and `--resume` through [`ckpt`], DESIGN.md §9),
 //! [`bench`] for the paper's tables/figures, the `fastclip` CLI for both.
 
 pub mod bench;
+pub mod ckpt;
 pub mod comm;
 pub mod config;
 pub mod coordinator;

@@ -6,16 +6,23 @@
 //!   exp <id>    regenerate a paper table/figure (see `exp list`)
 //!   comm-bench  α–β cost-model sweep over node counts
 //!   inspect     print an artifact bundle's manifest summary
+//!   ckpt        inspect/verify training checkpoints (DESIGN.md §9)
 //!
 //! Examples:
 //!   fastclip train --algo fastclip-v3 --bundle artifacts/tiny_k2_b8 --steps 100
+//!   fastclip train --ckpt-dir ckpts/run1 --ckpt-every 50 --steps 200
+//!   fastclip train --ckpt-dir ckpts/run1 --resume latest --steps 200
+//!   fastclip ckpt verify ckpts/run1
 //!   fastclip exp table4 --setting medium --seeds 3
 //!   fastclip exp timing --profile slingshot1
 //!   fastclip inspect artifacts/tiny_k2_b8
 
+use std::path::Path;
+
 use anyhow::{bail, Context, Result};
 
 use fastclip::bench;
+use fastclip::ckpt::Checkpoint;
 use fastclip::config::{Algorithm, GammaSchedule, OptimizerKind, TrainConfig};
 use fastclip::coordinator::Trainer;
 use fastclip::output::{sparkline, Table};
@@ -38,6 +45,7 @@ fn run() -> Result<()> {
         "exp" => exp(&args),
         "comm-bench" => bench::timing::comm_bench(&args),
         "inspect" => inspect(&args),
+        "ckpt" => ckpt_cmd(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -62,11 +70,14 @@ fn print_help() {
              --eps E --rho R --tau-init T --eval-every N\n\
              --nodes N --gpus-per-node M --network {nets}\n\
              --reduce naive|ring|sharded|auto   gradient-reduction strategy\n\
+             --ckpt-dir <dir> --ckpt-every N --keep-last N   periodic snapshots\n\
+             --resume <dir|latest>              resume a checkpointed run\n\
              --save <file>      save final parameters (f32 LE)\n\
            eval        evaluate parameters: --bundle <dir> --params <file>\n\
            exp <id>    regenerate a paper table/figure (exp list to enumerate)\n\
            comm-bench  cost-model sweep: --profile <net> --n-params P\n\
-           inspect     <bundle-dir>: print manifest summary\n",
+           inspect     <bundle-dir>: print manifest summary\n\
+           ckpt        inspect <dir> | verify <dir>  (a step dir or a ckpt root)\n",
         algos = Algorithm::all().map(|a| a.id()).join("|"),
         nets = "infiniband|slingshot1|slingshot2",
     );
@@ -107,6 +118,14 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     cfg.data.n_classes = args.usize_or("n-classes", cfg.data.n_classes)?;
     if let Some(k) = args.get("optimizer") {
         cfg.optimizer = fastclip::config::OptimizerConfig::with_kind(OptimizerKind::from_id(k)?);
+    }
+    if let Some(d) = args.get("ckpt-dir") {
+        cfg.ckpt_dir = Some(d.to_string());
+    }
+    cfg.ckpt_every = args.u32_or("ckpt-every", cfg.ckpt_every)?;
+    cfg.keep_last = args.usize_or("keep-last", cfg.keep_last)?;
+    if let Some(r) = args.get("resume") {
+        cfg.resume = Some(r.to_string());
     }
     let epochs = (cfg.steps / cfg.iters_per_epoch.max(1)).max(1);
     if let Some(g) = args.get("gamma-const") {
@@ -161,6 +180,18 @@ fn train(args: &Args) -> Result<()> {
             result.grad_wire_bytes_naive as f64 / result.grad_wire_bytes.max(1) as f64
         ),
     ]);
+    if let Some(step) = result.ckpt.resumed_at {
+        t.row(vec![
+            "resumed at step".into(),
+            format!("{step} (restore {:.1} ms)", result.ckpt.restore_s * 1e3),
+        ]);
+    }
+    if result.ckpt.snapshots > 0 {
+        t.row(vec![
+            "snapshots written".into(),
+            format!("{} ({:.1} ms total)", result.ckpt.snapshots, result.ckpt.write_s * 1e3),
+        ]);
+    }
     t.row(vec!["wall time (s)".into(), format!("{:.1}", result.wall_s)]);
     t.print();
 
@@ -211,6 +242,71 @@ fn exp(args: &Args) -> Result<()> {
         return Ok(());
     }
     bench::run_experiment(id, args)
+}
+
+fn ckpt_cmd(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let dir = args
+        .positional
+        .get(2)
+        .cloned()
+        .or_else(|| args.get("dir").map(|s| s.to_string()));
+    let open = || -> Result<Checkpoint> {
+        let dir = dir
+            .as_deref()
+            .ok_or_else(|| anyhow::anyhow!("usage: fastclip ckpt {sub} <checkpoint-dir>"))?;
+        Checkpoint::open(Path::new(dir))
+    };
+    match sub {
+        "inspect" => {
+            let ck = open()?;
+            let m = ck.meta();
+            let mut t = Table::new(format!("Checkpoint {}", ck.dir().display()), &["field", "value"]);
+            t.row(vec!["step".into(), m.step.to_string()]);
+            t.row(vec!["world size".into(), m.world.to_string()]);
+            t.row(vec!["algorithm".into(), m.algorithm.clone()]);
+            t.row(vec!["optimizer".into(), m.optimizer.clone()]);
+            t.row(vec!["grad reduction".into(), m.reduce.clone()]);
+            t.row(vec!["n_params".into(), m.n_params.to_string()]);
+            t.row(vec!["n_train".into(), m.n_train.to_string()]);
+            t.row(vec!["local batch".into(), m.local_batch.to_string()]);
+            t.row(vec!["seed / data seed".into(), format!("{} / {}", m.seed, m.data_seed)]);
+            let mut bytes = 0u64;
+            for b in &ck.manifest().blobs {
+                bytes += (b.len * b.kind.width()) as u64;
+                t.row(vec![
+                    format!("blob {}", b.file),
+                    format!("{} x {} ({:016x})", b.len, b.kind.id(), b.hash),
+                ]);
+            }
+            t.row(vec!["total blob bytes".into(), bytes.to_string()]);
+            t.print();
+            Ok(())
+        }
+        "verify" => {
+            let ck = open()?;
+            let report = ck
+                .verify()
+                .with_context(|| format!("verifying {}", ck.dir().display()))?;
+            println!(
+                "OK: {} — {} blobs, {} bytes, all integrity hashes match",
+                ck.dir().display(),
+                report.blobs,
+                report.bytes
+            );
+            Ok(())
+        }
+        "help" => {
+            println!(
+                "usage: fastclip ckpt <inspect|verify> <dir>\n\
+                 <dir> is one step_NNNNNNNN directory or a checkpoint root\n\
+                 (the most recent finalized step is used)"
+            );
+            Ok(())
+        }
+        // exit non-zero on typos so `ckpt verify` can gate scripts/CI
+        other => bail!("unknown ckpt subcommand '{other}' (try `fastclip ckpt help`)"),
+    }
 }
 
 fn inspect(args: &Args) -> Result<()> {

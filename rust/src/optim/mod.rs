@@ -7,15 +7,73 @@
 //! gradients. A scalar AdamW (`ScalarAdam`) drives the learnable
 //! temperature (Proc. 5 uses Proc. 4 with λ=0).
 
+use anyhow::{ensure, Result};
+
 use crate::config::{OptimizerConfig, OptimizerKind};
 
 /// (offset, len) of each parameter leaf in the flat vector.
 pub type Segments = Vec<(usize, usize)>;
 
+/// A serializable snapshot of an optimizer's internal state for
+/// checkpointing (DESIGN.md §9). `tensors` holds the kind-specific moment
+/// vectors in a fixed order — AdamW/LAMB: `[m, v]`; Lion/SGDM: `[m]` —
+/// each of the optimizer's parameter length (full or one rank's shard,
+/// matching the gradient-reduction strategy). `t` is the bias-correction
+/// step counter (0 for Lion/SGDM, which keep none).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimState {
+    pub kind: OptimizerKind,
+    pub t: i64,
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl OptimState {
+    /// Number of moment tensors `kind` keeps.
+    pub fn tensor_count(kind: OptimizerKind) -> usize {
+        match kind {
+            OptimizerKind::AdamW | OptimizerKind::Lamb => 2,
+            OptimizerKind::Lion | OptimizerKind::Sgdm => 1,
+        }
+    }
+
+    /// Parameter length this state covers.
+    pub fn n(&self) -> usize {
+        self.tensors.first().map_or(0, |t| t.len())
+    }
+
+    fn check_shape(&self, kind: OptimizerKind, n: usize) -> Result<()> {
+        ensure!(
+            self.kind == kind,
+            "optimizer state is {} but the run uses {}",
+            self.kind.id(),
+            kind.id()
+        );
+        ensure!(
+            self.tensors.len() == Self::tensor_count(kind),
+            "{} state has {} tensors, expected {}",
+            kind.id(),
+            self.tensors.len(),
+            Self::tensor_count(kind)
+        );
+        for t in &self.tensors {
+            ensure!(
+                t.len() == n,
+                "optimizer state covers {} params, expected {n}",
+                t.len()
+            );
+        }
+        Ok(())
+    }
+}
+
 pub trait Optimizer: Send {
     /// One update: params <- params - lr * direction(grad) (+ decoupled wd).
     fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32);
     fn name(&self) -> &'static str;
+    /// Snapshot the internal state for a checkpoint (DESIGN.md §9).
+    fn export_state(&self) -> OptimState;
+    /// Restore a snapshot; errors on kind or shape mismatch.
+    fn import_state(&mut self, state: &OptimState) -> Result<()>;
 }
 
 pub fn build(cfg: &OptimizerConfig, n_params: usize, segments: Segments) -> Box<dyn Optimizer> {
@@ -88,6 +146,22 @@ impl Optimizer for AdamW {
     fn name(&self) -> &'static str {
         "AdamW"
     }
+
+    fn export_state(&self) -> OptimState {
+        OptimState {
+            kind: OptimizerKind::AdamW,
+            t: self.t as i64,
+            tensors: vec![self.m.clone(), self.v.clone()],
+        }
+    }
+
+    fn import_state(&mut self, state: &OptimState) -> Result<()> {
+        state.check_shape(OptimizerKind::AdamW, self.m.len())?;
+        self.m.copy_from_slice(&state.tensors[0]);
+        self.v.copy_from_slice(&state.tensors[1]);
+        self.t = state.t as i32;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -141,6 +215,22 @@ impl Optimizer for Lamb {
     fn name(&self) -> &'static str {
         "LAMB"
     }
+
+    fn export_state(&self) -> OptimState {
+        OptimState {
+            kind: OptimizerKind::Lamb,
+            t: self.t as i64,
+            tensors: vec![self.m.clone(), self.v.clone()],
+        }
+    }
+
+    fn import_state(&mut self, state: &OptimState) -> Result<()> {
+        state.check_shape(OptimizerKind::Lamb, self.m.len())?;
+        self.m.copy_from_slice(&state.tensors[0]);
+        self.v.copy_from_slice(&state.tensors[1]);
+        self.t = state.t as i32;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -171,6 +261,16 @@ impl Optimizer for Lion {
     fn name(&self) -> &'static str {
         "Lion"
     }
+
+    fn export_state(&self) -> OptimState {
+        OptimState { kind: OptimizerKind::Lion, t: 0, tensors: vec![self.m.clone()] }
+    }
+
+    fn import_state(&mut self, state: &OptimState) -> Result<()> {
+        state.check_shape(OptimizerKind::Lion, self.m.len())?;
+        self.m.copy_from_slice(&state.tensors[0]);
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -199,6 +299,16 @@ impl Optimizer for Sgdm {
     fn name(&self) -> &'static str {
         "SGDM"
     }
+
+    fn export_state(&self) -> OptimState {
+        OptimState { kind: OptimizerKind::Sgdm, t: 0, tensors: vec![self.m.clone()] }
+    }
+
+    fn import_state(&mut self, state: &OptimState) -> Result<()> {
+        state.check_shape(OptimizerKind::Sgdm, self.m.len())?;
+        self.m.copy_from_slice(&state.tensors[0]);
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -221,6 +331,18 @@ impl Default for ScalarAdam {
 }
 
 impl ScalarAdam {
+    /// Snapshot `(m, v, t)` for a checkpoint (DESIGN.md §9).
+    pub fn export(&self) -> (f32, f32, i32) {
+        (self.m, self.v, self.t)
+    }
+
+    /// Restore a snapshot taken by [`Self::export`].
+    pub fn import(&mut self, m: f32, v: f32, t: i32) {
+        self.m = m;
+        self.v = v;
+        self.t = t;
+    }
+
     pub fn step(&mut self, x: f32, grad: f32, lr: f32) -> f32 {
         self.t += 1;
         self.m = self.b1 * self.m + (1.0 - self.b1) * grad;
@@ -381,6 +503,69 @@ mod tests {
             }
         }
         assert_eq!(p_full, p_shard, "sharded AdamW must be bit-identical");
+    }
+
+    #[test]
+    fn export_import_resumes_every_optimizer_bitwise() {
+        // run A steps, snapshot, keep stepping; a fresh optimizer that
+        // imports the snapshot must continue bit-identically
+        for kind in OptimizerKind::all() {
+            let cfg = OptimizerConfig::with_kind(kind);
+            let seg: Segments = vec![(0, 5), (5, 3)];
+            let mut a = build(&cfg, 8, seg.clone());
+            let mut pa = vec![0.4f32; 8];
+            let grad = |t: usize| -> Vec<f32> {
+                (0..8).map(|i| ((t * 13 + i * 7) as f32).sin()).collect()
+            };
+            for t in 0..10 {
+                a.step(&mut pa, &grad(t), 1e-3);
+            }
+            let snap = a.export_state();
+            assert_eq!(snap.kind, kind);
+            assert_eq!(snap.n(), 8);
+            let mut b = build(&cfg, 8, seg);
+            b.import_state(&snap).unwrap();
+            let mut pb = pa.clone();
+            for t in 10..25 {
+                a.step(&mut pa, &grad(t), 1e-3);
+                b.step(&mut pb, &grad(t), 1e-3);
+            }
+            assert_eq!(pa, pb, "{} resume must be bitwise", kind.name());
+        }
+    }
+
+    #[test]
+    fn import_rejects_mismatched_state() {
+        let cfg = OptimizerConfig::adamw(0.0);
+        let mut o = build(&cfg, 8, vec![(0, 8)]);
+        // wrong kind
+        let lion = build(&OptimizerConfig::with_kind(OptimizerKind::Lion), 8, vec![(0, 8)]);
+        assert!(o.import_state(&lion.export_state()).is_err());
+        // wrong length
+        let small = build(&cfg, 4, vec![(0, 4)]);
+        assert!(o.import_state(&small.export_state()).is_err());
+        // wrong tensor count
+        let mut bad = o.export_state();
+        bad.tensors.pop();
+        assert!(o.import_state(&bad).is_err());
+    }
+
+    #[test]
+    fn scalar_adam_export_import_roundtrip() {
+        let mut a = ScalarAdam::default();
+        let mut x = 0.07f32;
+        for _ in 0..9 {
+            x = a.step(x, 0.3, 1e-3);
+        }
+        let (m, v, t) = a.export();
+        let mut b = ScalarAdam::default();
+        b.import(m, v, t);
+        let mut y = x;
+        for _ in 0..20 {
+            x = a.step(x, -0.1, 1e-3);
+            y = b.step(y, -0.1, 1e-3);
+        }
+        assert_eq!(x, y, "scalar Adam resume must be bitwise");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 /// A JSON value. Object keys are sorted (BTreeMap) so output is
 /// deterministic — results files diff cleanly between runs.
@@ -87,6 +87,50 @@ impl Json {
         Json::Num(n.into())
     }
 
+    /// Encode an `f32` with guaranteed bitwise round-trip fidelity through
+    /// [`Self::as_f32`] — the designated encoder for any f32 a JSON
+    /// document carries (results files, manifest scalars; bulk checkpoint
+    /// state lives in binary blobs, `ckpt::blob`, for the same fidelity
+    /// reason). Finite values (including subnormals and −0.0) become
+    /// exact `Num`s — the f32→f64 widening is lossless and the writer
+    /// emits a shortest decimal that re-parses to the same f64. The
+    /// non-finite values, which JSON cannot represent as numbers, are
+    /// encoded explicitly as the strings `"NaN"` / `"Infinity"` /
+    /// `"-Infinity"`.
+    pub fn f32(v: f32) -> Json {
+        if v.is_nan() {
+            Json::Str("NaN".to_string())
+        } else if v == f32::INFINITY {
+            Json::Str("Infinity".to_string())
+        } else if v == f32::NEG_INFINITY {
+            Json::Str("-Infinity".to_string())
+        } else {
+            Json::Num(v as f64)
+        }
+    }
+
+    /// Decode a value written by [`Self::f32`]. Rejects numbers that are
+    /// not exactly representable as f32 rather than silently rounding.
+    pub fn as_f32(&self) -> Result<f32> {
+        match self {
+            Json::Num(n) => {
+                let v = *n as f32;
+                ensure!(
+                    (v as f64).to_bits() == n.to_bits(),
+                    "number {n} is not exactly representable as f32"
+                );
+                Ok(v)
+            }
+            Json::Str(s) => match s.as_str() {
+                "NaN" => Ok(f32::NAN),
+                "Infinity" => Ok(f32::INFINITY),
+                "-Infinity" => Ok(f32::NEG_INFINITY),
+                _ => bail!("not an f32 encoding: {self:?}"),
+            },
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
@@ -145,7 +189,17 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if n.is_nan() || n.is_infinite() {
+                    // JSON has no non-finite numbers; `{n}` would emit
+                    // invalid output. Producers that must round-trip
+                    // non-finite f32s use `Json::f32`, which encodes them
+                    // as explicit strings; a raw non-finite Num degrades
+                    // to null rather than corrupting the document.
+                    out.push_str("null");
+                } else if *n == 0.0 && n.is_sign_negative() {
+                    // the i64 fast path below would drop the sign of -0.0
+                    out.push_str("-0.0");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -445,5 +499,84 @@ mod tests {
     fn integers_written_without_fraction() {
         let text = Json::num(13.0).to_string_pretty();
         assert_eq!(text, "13");
+    }
+
+    /// Proptest-style exhaustive-ish sweep of the f32 bit space: every
+    /// exponent × a mantissa/sign grid, the IEEE edge cases, and a large
+    /// pseudorandom sample — all must survive
+    /// `Json::f32 → text → parse → as_f32` bit-for-bit, so JSON result
+    /// files and manifests can carry f32 scalars without corruption
+    /// (DESIGN.md §9).
+    #[test]
+    fn f32_roundtrip_is_bitwise_exact() {
+        let mut patterns: Vec<u32> = vec![
+            0x0000_0000, // +0.0
+            0x8000_0000, // -0.0
+            0x0000_0001, // smallest positive subnormal
+            0x8000_0001, // smallest negative subnormal
+            0x007f_ffff, // largest subnormal
+            0x807f_ffff,
+            0x0080_0000, // smallest positive normal
+            0x7f7f_ffff, // f32::MAX
+            0xff7f_ffff, // f32::MIN
+            0x3f80_0000, // 1.0
+            0x3eaa_aaab, // ~1/3
+            0x7f80_0000, // +inf
+            0xff80_0000, // -inf
+        ];
+        // stratified: every exponent, a spread of mantissas, both signs
+        for exp in 0..=254u32 {
+            for mantissa in [0u32, 1, 0x2a_5a5a, 0x40_0000, 0x7f_ffff] {
+                for sign in [0u32, 1] {
+                    patterns.push((sign << 31) | (exp << 23) | mantissa);
+                }
+            }
+        }
+        // pseudorandom sweep over the full bit space
+        let mut rng = crate::util::Rng::new(0xf32f32);
+        for _ in 0..50_000 {
+            patterns.push(rng.next_u64() as u32);
+        }
+        for bits in patterns {
+            let v = f32::from_bits(bits);
+            if v.is_nan() {
+                continue; // NaN payloads are not preserved; checked below
+            }
+            let text = Json::f32(v).to_string_pretty();
+            let back = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("bits {bits:08x} -> {text}: {e}"))
+                .as_f32()
+                .unwrap_or_else(|e| panic!("bits {bits:08x} -> {text}: {e}"));
+            assert_eq!(
+                back.to_bits(),
+                v.to_bits(),
+                "bits {bits:08x} (value {v:e}) round-tripped as {back:e} via {text}"
+            );
+        }
+        // non-finite values are encoded explicitly, not dropped
+        let nan = Json::parse(&Json::f32(f32::NAN).to_string_pretty()).unwrap();
+        assert!(nan.as_f32().unwrap().is_nan());
+        // and a raw non-finite Num degrades to null instead of emitting
+        // invalid JSON
+        assert_eq!(Json::num(f64::NAN).to_string_pretty(), "null");
+        assert_eq!(Json::num(f64::INFINITY).to_string_pretty(), "null");
+    }
+
+    #[test]
+    fn as_f32_rejects_inexact_numbers() {
+        // 0.1 as an f64 literal is not an f32 value
+        assert!(Json::parse("0.1").unwrap().as_f32().is_err());
+        // but the f64 widening of 0.1f32 is
+        let w = Json::f32(0.1f32).to_string_pretty();
+        assert_eq!(Json::parse(&w).unwrap().as_f32().unwrap(), 0.1f32);
+        assert!(Json::Str("abc".into()).as_f32().is_err());
+        assert!(Json::Null.as_f32().is_err());
+    }
+
+    #[test]
+    fn negative_zero_preserved() {
+        let t = Json::f32(-0.0f32).to_string_pretty();
+        let back = Json::parse(&t).unwrap().as_f32().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f32).to_bits(), "via {t}");
     }
 }

@@ -11,4 +11,4 @@ mod rng;
 pub use cli::Args;
 pub use json::Json;
 pub use kv::KvFile;
-pub use rng::{l2_normalize_rows, mean, std_dev, Rng};
+pub use rng::{l2_normalize_rows, mean, std_dev, Rng, RngState};

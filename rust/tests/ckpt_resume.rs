@@ -1,0 +1,510 @@
+//! Bitwise resume-equivalence tests for the checkpoint subsystem
+//! (DESIGN.md §9): training N+M steps continuously must equal training
+//! N → snapshot → restore → M, bit for bit, in parameters, `u` state and
+//! τ state — for every step-graph variant of DESIGN.md §3 and every
+//! gradient-reduction strategy — plus an elastic K=4 → K′=2 resume case
+//! asserting exact re-sharding through the global-index mapping.
+//!
+//! The equivalence matrix runs on a *state-faithful simulated trainer*:
+//! it evolves the real `ShardLoader` / `UState` / `TauState` / optimizer
+//! objects exactly like `worker_loop` (rank-ordered summation mirrors the
+//! collectives' bit-exact reduction order; the sharded strategy applies
+//! per-chunk optimizers), with deterministic pseudo-gradients standing in
+//! for the HLO step graphs, and goes through the real checkpoint
+//! writer/reader. End-to-end `Trainer` resume tests run too when the
+//! artifact bundle is built (they skip gracefully otherwise, like every
+//! artifact-dependent test).
+
+use std::path::{Path, PathBuf};
+
+use fastclip::ckpt::{self, CkptMeta};
+use fastclip::comm::chunk_bounds;
+use fastclip::config::{Algorithm, TrainConfig};
+use fastclip::coordinator::{TauState, Trainer, UState};
+use fastclip::data::ShardLoader;
+use fastclip::optim::{build, shard_segments, Optimizer, Segments};
+
+const N_PARAMS: usize = 10; // K=4 chunks 3,3,3,1: exercises ragged tails
+const N_TRAIN: usize = 64;
+const BL: usize = 4;
+
+fn sim_cfg(algo: Algorithm, total_steps: u32) -> TrainConfig {
+    let mut cfg = TrainConfig::new("unused", algo);
+    cfg.steps = total_steps;
+    cfg.iters_per_epoch = 4; // epochs advance: γ schedules move
+    cfg.lr.total_iters = total_steps;
+    cfg.lr.warmup_iters = 2;
+    cfg.data.n_train = N_TRAIN;
+    cfg
+}
+
+/// Deterministic pseudo-gradient: a fixed mixing of step, rank, index and
+/// a live state value, so every piece of restored state feeds the next
+/// update — any restoration defect breaks bitwise equality downstream.
+fn pseudo(t: u32, r: u32, i: u32, x: f32) -> f32 {
+    let key = t.wrapping_mul(31).wrapping_add(r.wrapping_mul(17)).wrapping_add(i);
+    ((key % 1024) as f32 * 0.013).sin() * 0.1 + x * 0.01
+}
+
+/// The simulated K-worker trainer (see module docs).
+struct SimWorld {
+    cfg: TrainConfig,
+    k: usize,
+    sharded: bool,
+    reduce_id: &'static str,
+    loaders: Vec<ShardLoader>,
+    ustates: Vec<UState>,
+    taus: Vec<TauState>,
+    opts: Vec<Box<dyn Optimizer>>,
+    params: Vec<Vec<f32>>,
+    step: u32,
+}
+
+impl SimWorld {
+    fn new(cfg: &TrainConfig, k: usize, reduce_id: &'static str) -> SimWorld {
+        let sharded = reduce_id == "sharded";
+        let segments: Segments = vec![(0, 7), (7, N_PARAMS - 7)]; // two leaves
+        let mut loaders = Vec::new();
+        let mut ustates = Vec::new();
+        let mut taus = Vec::new();
+        let mut opts = Vec::new();
+        let mut params = Vec::new();
+        for rank in 0..k {
+            let loader = ShardLoader::new(cfg.data.n_train, rank, k, BL, cfg.seed).unwrap();
+            ustates.push(UState::new(loader.shard_len()));
+            taus.push(TauState::new(cfg, loader.shard_len()));
+            loaders.push(loader);
+            opts.push(if sharded {
+                let (lo, hi) = chunk_bounds(N_PARAMS, k, rank);
+                build(&cfg.optimizer, hi - lo, shard_segments(&segments, lo, hi))
+            } else {
+                build(&cfg.optimizer, N_PARAMS, segments.clone())
+            });
+            params.push((0..N_PARAMS).map(|i| 0.25 + i as f32 * 0.01).collect());
+        }
+        SimWorld {
+            cfg: cfg.clone(),
+            k,
+            sharded,
+            reduce_id,
+            loaders,
+            ustates,
+            taus,
+            opts,
+            params,
+            step: 0,
+        }
+    }
+
+    fn one_step(&mut self) {
+        let t = self.step;
+        let epoch = t / self.cfg.iters_per_epoch.max(1);
+        let gamma = if self.cfg.algorithm.forces_gamma_one() {
+            1.0
+        } else {
+            self.cfg.gamma.value(epoch)
+        };
+        let lr = self.cfg.lr.value(t);
+        let k = self.k;
+
+        let batches: Vec<_> = (0..k).map(|r| self.loaders[r].next_batch()).collect();
+
+        // "phase_g": Eq. (1)-shaped u update over the batch rows
+        for r in 0..k {
+            let b = &batches[r];
+            let (u1, u2) = self.ustates[r].gather(&b.local_positions);
+            let (t1, t2) = self.taus[r].rows(&b.local_positions);
+            let mut u1n = Vec::with_capacity(BL);
+            let mut u2n = Vec::with_capacity(BL);
+            for (i, &g) in b.global_indices.iter().enumerate() {
+                let x = self.params[r][g % N_PARAMS];
+                let sig = pseudo(t, r as u32, g as u32, x);
+                u1n.push((1.0 - gamma) * u1[i] + gamma * (sig + t1[i]));
+                u2n.push((1.0 - gamma) * u2[i] + gamma * (0.5 * sig - t2[i]));
+            }
+            self.ustates[r].scatter(&b.local_positions, &u1n, &u2n);
+        }
+
+        // gradient + scalar contributions, summed in rank order exactly
+        // like the collectives reduce them
+        let mut grad = vec![0.0f32; N_PARAMS];
+        let mut tau_grad = 0.0f32;
+        for r in 0..k {
+            let (mu1, mu2) = self.ustates[r].mean_u();
+            let mt = self.taus[r].mean_tau();
+            for (i, g) in grad.iter_mut().enumerate() {
+                *g += pseudo(t, r as u32, i as u32, self.params[r][i]) * 0.1
+                    + (mu1 - mu2) * 1e-3
+                    + mt * 1e-3;
+            }
+            tau_grad += pseudo(t, r as u32, 9001, mu1 + mt);
+        }
+
+        // optimizer: replicated full-vector update vs sharded per-chunk
+        // update + parameter "all-gather"
+        if self.sharded {
+            let mut new_params = self.params[0].clone();
+            for r in 0..k {
+                let (lo, hi) = chunk_bounds(N_PARAMS, k, r);
+                let mut chunk = self.params[r][lo..hi].to_vec();
+                self.opts[r].step(&mut chunk, &grad[lo..hi], lr);
+                new_params[lo..hi].copy_from_slice(&chunk);
+            }
+            for r in 0..k {
+                self.params[r].copy_from_slice(&new_params);
+            }
+        } else {
+            for r in 0..k {
+                self.opts[r].step(&mut self.params[r], &grad, lr);
+            }
+        }
+
+        // temperature rule
+        for r in 0..k {
+            let b = &batches[r];
+            match &mut self.taus[r] {
+                TauState::Constant(_) => {}
+                TauState::Global(gl) => gl.step(tau_grad),
+                TauState::Individual(it) => {
+                    let g1: Vec<f32> = b
+                        .local_positions
+                        .iter()
+                        .map(|&p| pseudo(t, r as u32, p as u32, 0.1))
+                        .collect();
+                    let g2: Vec<f32> = g1.iter().map(|v| -v).collect();
+                    it.update(&b.local_positions, &g1, &g2, self.cfg.tau_lr);
+                }
+            }
+        }
+        self.step += 1;
+    }
+
+    fn run_steps(&mut self, n: u32) {
+        for _ in 0..n {
+            self.one_step();
+        }
+    }
+
+    fn meta(&self) -> CkptMeta {
+        CkptMeta::for_run(&self.cfg, self.step, self.k, N_PARAMS, BL, self.reduce_id)
+    }
+
+    /// Snapshot through the real checkpoint writer (the trainer's exact
+    /// protocol: stage, per-rank blobs, finalize with params + manifest).
+    fn snapshot(&self, root: &Path) -> PathBuf {
+        let stage = ckpt::stage_path(root, self.step);
+        ckpt::prepare_stage(&stage).unwrap();
+        for r in 0..self.k {
+            let os = self.opts[r].export_state();
+            let arg = if self.sharded || r == 0 { Some((&os, self.sharded)) } else { None };
+            ckpt::write_rank_state(&stage, r, &self.ustates[r], &self.taus[r], &self.loaders[r], arg)
+                .unwrap();
+        }
+        ckpt::finalize(root, &stage, &self.meta(), &self.params[0], 3).unwrap()
+    }
+
+    /// A fresh world restored from a checkpoint through the real reader —
+    /// `new_k` may differ from the snapshot's world size (elastic).
+    fn restore(cfg: &TrainConfig, new_k: usize, reduce_id: &'static str, dir: &Path) -> SimWorld {
+        let mut w = SimWorld::new(cfg, new_k, reduce_id);
+        let ck = ckpt::Checkpoint::open(dir).unwrap();
+        ckpt::check_compatible(ck.meta(), cfg, N_PARAMS).unwrap();
+        for r in 0..new_k {
+            let rw = ckpt::restore_worker(&ck, cfg, r, new_k, BL, w.sharded).unwrap();
+            w.params[r] = rw.params;
+            w.ustates[r] = rw.ustate;
+            w.taus[r] = rw.tau;
+            w.loaders[r] = rw.loader;
+            w.opts[r].import_state(&rw.optim).unwrap();
+        }
+        w.step = ck.meta().step;
+        w
+    }
+
+    fn assert_bitwise_eq(&self, other: &SimWorld) {
+        assert_eq!(self.step, other.step);
+        assert_eq!(self.k, other.k);
+        for r in 0..self.k {
+            let label = format!(
+                "{} reduce={} rank {r}",
+                self.cfg.algorithm.id(),
+                self.reduce_id
+            );
+            assert_eq!(self.params[r], other.params[r], "params: {label}");
+            assert_eq!(self.ustates[r].parts().0, other.ustates[r].parts().0, "u1: {label}");
+            assert_eq!(self.ustates[r].parts().1, other.ustates[r].parts().1, "u2: {label}");
+            assert_eq!(
+                ckpt::export_tau(&self.taus[r]),
+                ckpt::export_tau(&other.taus[r]),
+                "tau: {label}"
+            );
+            assert_eq!(self.loaders[r].export(), other.loaders[r].export(), "loader: {label}");
+            assert_eq!(
+                self.opts[r].export_state(),
+                other.opts[r].export_state(),
+                "optimizer: {label}"
+            );
+        }
+    }
+}
+
+fn tmp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fastclip_resume_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// All seven Table-1 algorithms — covering the five step-graph variants
+/// of DESIGN.md §3 (mbcl, gcl, gcl_v0, rgcl_i, rgcl_g) and all three
+/// temperature rules.
+const ALGOS: [Algorithm; 7] = [
+    Algorithm::OpenClip,   // mbcl,   global learnable τ
+    Algorithm::SogClr,     // gcl,    constant τ, constant γ
+    Algorithm::ISogClr,    // rgcl_i, individual τ, constant γ
+    Algorithm::FastClipV0, // gcl_v0, global learnable τ
+    Algorithm::FastClipV1, // gcl,    constant τ, cosine γ
+    Algorithm::FastClipV2, // rgcl_i, individual τ, cosine γ
+    Algorithm::FastClipV3, // rgcl_g, global learnable τ
+];
+
+/// THE equivalence matrix: N+M continuous vs N → snapshot → restore → M,
+/// for every algorithm variant × every reduction strategy, K=2.
+#[test]
+fn resume_is_bitwise_for_all_variants_and_reduce_strategies() {
+    let (n, m) = (10u32, 7u32);
+    for algo in ALGOS {
+        for reduce_id in ["naive", "ring", "sharded"] {
+            let cfg = sim_cfg(algo, n + m);
+            let root = tmp_root(&format!("{}_{}", algo.id(), reduce_id));
+
+            let mut continuous = SimWorld::new(&cfg, 2, reduce_id);
+            continuous.run_steps(n + m);
+
+            let mut first = SimWorld::new(&cfg, 2, reduce_id);
+            first.run_steps(n);
+            let dir = first.snapshot(&root);
+
+            let mut resumed = SimWorld::restore(&cfg, 2, reduce_id, &dir);
+            // the restored world must equal the one that wrote it...
+            resumed.assert_bitwise_eq(&first);
+            // ...and continue exactly like the uninterrupted run
+            resumed.run_steps(m);
+            resumed.assert_bitwise_eq(&continuous);
+
+            // replicated-parameter sanity
+            for r in 1..2 {
+                assert_eq!(resumed.params[r], resumed.params[0]);
+            }
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+}
+
+/// Elastic resume K=4 → K′=2 (FastCLIP-v2: the richest state — individual
+/// τ with per-sample Adam moments): every u/τ scalar must land exactly
+/// where the global-index mapping says, and the optimizer state must
+/// re-partition exactly; the resized world must keep training.
+#[test]
+fn elastic_resume_reshards_u_and_tau_exactly() {
+    for reduce_id in ["ring", "sharded"] {
+        let cfg = sim_cfg(Algorithm::FastClipV2, 24);
+        let root = tmp_root(&format!("elastic_{reduce_id}"));
+        let mut old = SimWorld::new(&cfg, 4, reduce_id);
+        old.run_steps(9);
+        let dir = old.snapshot(&root);
+
+        let resumed = SimWorld::restore(&cfg, 2, reduce_id, &dir);
+        assert_eq!(resumed.step, 9);
+
+        // exact u/τ re-sharding through global = rank + pos·K
+        for new_rank in 0..2usize {
+            let (nu1, nu2) = resumed.ustates[new_rank].parts();
+            let ntau = match ckpt::export_tau(&resumed.taus[new_rank]) {
+                ckpt::TauCkpt::Individual(s) => s,
+                other => panic!("expected individual tau, got {other:?}"),
+            };
+            assert_eq!(nu1.len(), N_TRAIN / 2);
+            for new_pos in 0..nu1.len() {
+                let g = new_rank + new_pos * 2; // global sample index
+                let (old_rank, old_pos) = (g % 4, g / 4);
+                let (ou1, ou2) = old.ustates[old_rank].parts();
+                assert_eq!(nu1[new_pos], ou1[old_pos], "u1 at global {g}");
+                assert_eq!(nu2[new_pos], ou2[old_pos], "u2 at global {g}");
+                let otau = match ckpt::export_tau(&old.taus[old_rank]) {
+                    ckpt::TauCkpt::Individual(s) => s,
+                    _ => unreachable!(),
+                };
+                assert_eq!(ntau.tau1[new_pos], otau.tau1[old_pos], "tau1 at global {g}");
+                assert_eq!(ntau.tau2[new_pos], otau.tau2[old_pos], "tau2 at global {g}");
+                assert_eq!(ntau.m1[new_pos], otau.m1[old_pos], "m1 at global {g}");
+                assert_eq!(ntau.v2[new_pos], otau.v2[old_pos], "v2 at global {g}");
+                assert_eq!(ntau.t1[new_pos], otau.t1[old_pos], "t1 at global {g}");
+                assert_eq!(ntau.t2[new_pos], otau.t2[old_pos], "t2 at global {g}");
+            }
+        }
+
+        // parameters carry over exactly; optimizer state re-partitions
+        // exactly (old full state == new full state)
+        assert_eq!(resumed.params[0], old.params[0]);
+        let old_full = full_optimizer_state(&old);
+        let new_full = full_optimizer_state(&resumed);
+        assert_eq!(old_full, new_full, "optimizer state re-partition (reduce={reduce_id})");
+
+        // the resized world keeps training, loaders restarted at the
+        // checkpoint's loader epoch (shard 16, batch 4 → 4 iters/epoch;
+        // 9 steps land in epoch 2)
+        assert_eq!(resumed.loaders[0].epoch(), old.loaders[0].epoch());
+        assert_eq!(resumed.loaders[0].epoch(), 2);
+        let mut resumed = resumed;
+        resumed.run_steps(6);
+        assert_eq!(resumed.step, 15);
+        assert!(resumed.params[0].iter().all(|v| v.is_finite()));
+        assert_eq!(resumed.params[0], resumed.params[1], "replication invariant");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+/// Flatten a world's optimizer state to the full parameter vector
+/// (identity for replicated; chunk-concatenation for sharded).
+fn full_optimizer_state(w: &SimWorld) -> Vec<Vec<f32>> {
+    if !w.sharded {
+        return w.opts[0].export_state().tensors;
+    }
+    let states: Vec<_> = (0..w.k).map(|r| w.opts[r].export_state()).collect();
+    let tc = states[0].tensors.len();
+    let mut out = vec![Vec::with_capacity(N_PARAMS); tc];
+    for s in &states {
+        for (full, part) in out.iter_mut().zip(&s.tensors) {
+            full.extend_from_slice(part);
+        }
+    }
+    out
+}
+
+/// Elastic resume can also *grow* the world: K=2 → K′=4.
+#[test]
+fn elastic_resume_grows_world() {
+    let cfg = sim_cfg(Algorithm::FastClipV3, 20);
+    let root = tmp_root("grow");
+    let mut old = SimWorld::new(&cfg, 2, "sharded");
+    old.run_steps(8);
+    let dir = old.snapshot(&root);
+    let mut grown = SimWorld::restore(&cfg, 4, "sharded", &dir);
+    assert_eq!(grown.params[0], old.params[0]);
+    // global τ is replicated scalar state: carried over exactly
+    assert_eq!(ckpt::export_tau(&grown.taus[3]), ckpt::export_tau(&old.taus[0]));
+    for new_rank in 0..4usize {
+        let (nu1, _) = grown.ustates[new_rank].parts();
+        for new_pos in 0..nu1.len() {
+            let g = new_rank + new_pos * 4;
+            let (ou1, _) = old.ustates[g % 2].parts();
+            assert_eq!(nu1[new_pos], ou1[g / 2], "u1 at global {g}");
+        }
+    }
+    grown.run_steps(4);
+    assert_eq!(grown.step, 12);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------
+// End-to-end Trainer resume (needs the artifact bundle + pjrt runtime;
+// skips gracefully otherwise, like every artifact-executing test).
+// ---------------------------------------------------------------------
+
+const BUNDLE: &str = "artifacts/tiny_k2_b8";
+
+fn have_bundle() -> bool {
+    let ok = Path::new(BUNDLE).join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: {BUNDLE} not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn trainer_cfg(algo: Algorithm, steps: u32) -> TrainConfig {
+    let mut cfg = TrainConfig::new(BUNDLE, algo);
+    cfg.steps = steps;
+    cfg.iters_per_epoch = 4;
+    cfg.data.n_train = 64;
+    cfg.data.n_eval = 32;
+    cfg.data.n_classes = 8;
+    cfg.lr.warmup_iters = 2;
+    cfg.lr.total_iters = steps;
+    cfg
+}
+
+#[test]
+#[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build (see rust/Cargo.toml)"]
+fn trainer_resume_bitwise_all_variants_and_reduces() {
+    if !have_bundle() {
+        return;
+    }
+    use fastclip::comm::{ReduceAlgo, ReduceStrategy};
+    let (n, m) = (6u32, 4u32);
+    for algo in ALGOS {
+        for reduce in [ReduceAlgo::Naive, ReduceAlgo::Ring, ReduceAlgo::Sharded] {
+            let root = tmp_root(&format!("trainer_{}_{}", algo.id(), reduce.id()));
+            let mut base = trainer_cfg(algo, n + m);
+            base.reduce = ReduceStrategy::Fixed(reduce);
+
+            let continuous = Trainer::new(base.clone()).unwrap().run().unwrap();
+
+            let mut leg1 = base.clone();
+            leg1.steps = n; // schedules still span n+m (lr.total_iters)
+            leg1.ckpt_dir = Some(root.to_string_lossy().into_owned());
+            leg1.ckpt_every = n;
+            let first = Trainer::new(leg1).unwrap().run().unwrap();
+            assert_eq!(first.ckpt.snapshots, 1);
+
+            let mut leg2 = base.clone();
+            leg2.ckpt_dir = Some(root.to_string_lossy().into_owned());
+            leg2.resume = Some("latest".to_string());
+            let resumed = Trainer::new(leg2).unwrap().run().unwrap();
+            assert_eq!(resumed.ckpt.resumed_at, Some(n));
+            assert_eq!(resumed.history.len(), m as usize);
+
+            assert_eq!(
+                continuous.final_params,
+                resumed.final_params,
+                "{} reduce={}: resumed params must be bitwise equal",
+                algo.id(),
+                reduce.id()
+            );
+            // the resumed loss trajectory matches the continuous tail
+            for (a, b) in continuous.history[n as usize..].iter().zip(&resumed.history) {
+                assert_eq!(a.loss, b.loss, "{} reduce={}", algo.id(), reduce.id());
+                assert_eq!(a.step, b.step);
+                assert_eq!(a.tau, b.tau);
+            }
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+}
+
+#[test]
+#[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build (see rust/Cargo.toml)"]
+fn trainer_elastic_resume_k2_to_k1() {
+    // K=2 bundle writes the checkpoint; K=1 bundle resumes it (elastic)
+    const BUNDLE_K1: &str = "artifacts/tiny_k1_b16";
+    if !have_bundle() || !Path::new(BUNDLE_K1).join("manifest.json").exists() {
+        return;
+    }
+    let root = tmp_root("trainer_elastic");
+    // schedules must span the same horizon as the resuming run (the
+    // hyper echo in the manifest enforces this)
+    let mut leg1 = trainer_cfg(Algorithm::FastClipV3, 8);
+    leg1.steps = 4;
+    leg1.ckpt_dir = Some(root.to_string_lossy().into_owned());
+    leg1.ckpt_every = 4;
+    Trainer::new(leg1).unwrap().run().unwrap();
+
+    let mut leg2 = trainer_cfg(Algorithm::FastClipV3, 8);
+    leg2.artifact_dir = BUNDLE_K1.to_string();
+    leg2.ckpt_dir = Some(root.to_string_lossy().into_owned());
+    leg2.resume = Some("latest".to_string());
+    let r = Trainer::new(leg2).unwrap().run().unwrap();
+    assert_eq!(r.ckpt.resumed_at, Some(4));
+    assert!(r.history.iter().all(|h| h.loss.is_finite()));
+    let _ = std::fs::remove_dir_all(&root);
+}
