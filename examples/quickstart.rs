@@ -3,7 +3,9 @@
 //! API (config → trainer → result → eval metrics).
 //!
 //! Run with: `cargo run --release --example quickstart`
-//! (requires `make artifacts` first).
+//! No artifacts needed: with the default `--backend auto` the run lands
+//! on the native CPU backend (DESIGN.md §10); after `make artifacts` +
+//! a `--features pjrt` build the same config executes through PJRT.
 
 use fastclip::config::{Algorithm, TrainConfig};
 use fastclip::coordinator::Trainer;
@@ -21,8 +23,10 @@ fn main() -> anyhow::Result<()> {
     cfg.lr.warmup_iters = 8;
     cfg.eval_every = 32;
 
-    // 2. Run it: K worker threads execute the AOT-compiled HLO artifacts
-    //    through PJRT and coordinate through in-process collectives.
+    // 2. Run it: K worker threads execute the step phases through the
+    //    resolved compute backend (native kernels here; PJRT-compiled
+    //    HLO with the pjrt feature) and coordinate through in-process
+    //    collectives.
     println!("training {} for {} steps...", cfg.algorithm.name(), cfg.steps);
     let result = Trainer::new(cfg)?.run()?;
 

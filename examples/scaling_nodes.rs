@@ -19,11 +19,10 @@ fn main() -> anyhow::Result<()> {
         &["Nodes", "GlobalBatch", "Datacomp", "Retrieval", "IN&Var", "iter ms"],
     );
     for nodes in [1usize, 2, 4, 8] {
+        // bundle naming maps onto the native topology (preset tiny,
+        // K = nodes, Bl = 16); with pjrt + built bundles the same names
+        // select the artifact directories
         let bundle = format!("artifacts/tiny_k{nodes}_b16");
-        if !std::path::Path::new(&bundle).join("manifest.json").exists() {
-            eprintln!("skipping {nodes} nodes: {bundle} not built");
-            continue;
-        }
         let mut cfg = TrainConfig::new(&bundle, algo);
         cfg.steps = steps;
         cfg.iters_per_epoch = 8;
@@ -35,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         cfg.lr.peak = 1e-3 * nodes as f32 / 2.0; // linear LR scaling
         cfg.lr.total_iters = steps;
         cfg.lr.warmup_iters = steps / 8;
-        let manifest = fastclip::runtime::Manifest::load(&bundle)?;
+        let manifest = cfg.load_manifest()?;
         let result = Trainer::new(cfg)?.run()?;
         let ms = result.timing.per_iter_ms();
         table.row(vec![

@@ -40,7 +40,9 @@ fn main() -> anyhow::Result<()> {
     cfg.eps = 1e-6; // xlarge-analog setting (Appendix D)
     cfg.rho = 16.0;
 
-    let manifest = fastclip::runtime::Manifest::load(&bundle)?;
+    // native backend (no artifacts): the bundle name still selects the
+    // preset/topology via TrainConfig::set_bundle
+    let manifest = cfg.load_manifest()?;
     println!(
         "e2e: {} on {} — {} params, K={} workers, global batch {}, {} steps",
         algo.name(),

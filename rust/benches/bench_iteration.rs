@@ -1,46 +1,89 @@
 //! End-to-end iteration benchmark — one bench per paper timing table:
 //! full distributed iterations (encode → gathers → phase_g → step →
-//! all-reduce → optimizer) per algorithm, reporting the same
-//! compute / pure-comm / overlap / others split as Fig. 3.
+//! all-reduce → optimizer) per algorithm on the NATIVE backend, reporting
+//! the Fig. 3 compute / pure-comm / overlap / others split plus real
+//! iteration throughput.
+//!
+//! Runs on any machine (no artifacts). CI (`bench-smoke`) runs it in
+//! `--quick` mode, writes `BENCH_iteration.json` and gates iteration
+//! throughput against the committed baseline
+//! (`benches/baseline/BENCH_iteration.json`, 25% floor):
+//!
+//! ```text
+//! cargo bench --bench bench_iteration -- --quick \
+//!     --json BENCH_iteration.json \
+//!     --baseline benches/baseline/BENCH_iteration.json --max-regress 0.25
+//! ```
 
 #[path = "harness.rs"]
 mod harness;
 
 use fastclip::config::{Algorithm, TrainConfig};
 use fastclip::coordinator::Trainer;
+use fastclip::runtime::BackendKind;
+use fastclip::util::Args;
 
 fn main() -> anyhow::Result<()> {
-    let bundle = "artifacts/tiny_k2_b8";
-    if !std::path::Path::new(bundle).join("manifest.json").exists() {
-        eprintln!("bundle {bundle} not built — run `make artifacts`");
-        return Ok(());
-    }
-    println!("end-to-end iterations on {bundle} (16 steps each, modeled 8x4 infiniband)\n");
+    let args = Args::from_env()?;
+    let quick = args.flag("quick");
+    let steps: u32 = if quick { 12 } else { 32 };
+    let repeats: usize = if quick { 3 } else { 5 };
+
     println!(
-        "{:<14} {:>9} {:>9} {:>9} {:>9} {:>9}",
-        "algorithm", "total", "compute", "pure", "overlap", "others"
+        "end-to-end native iterations (preset tiny, K=2, Bl=8; {steps} steps x {repeats} runs, \
+         modeled 8x4 infiniband)\n"
     );
+    println!(
+        "{:<14} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "algorithm", "iters/s", "total", "compute", "pure", "overlap", "others"
+    );
+
+    let mut rows = Vec::new();
     for algo in Algorithm::all() {
-        let mut cfg = TrainConfig::new(bundle, algo);
-        cfg.steps = 16;
-        cfg.iters_per_epoch = 8;
-        cfg.data.n_train = 256;
-        cfg.data.n_eval = 32;
-        cfg.lr.total_iters = 16;
-        cfg.lr.warmup_iters = 2;
-        cfg.nodes = 8;
-        cfg.gpus_per_node = 4;
-        let r = Trainer::new(cfg)?.run()?;
+        let make_cfg = || {
+            let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", algo);
+            cfg.backend = BackendKind::Native;
+            cfg.steps = steps;
+            cfg.iters_per_epoch = 8;
+            cfg.data.n_train = 256;
+            cfg.data.n_eval = 16;
+            cfg.lr.total_iters = steps;
+            cfg.lr.warmup_iters = 2;
+            cfg.nodes = 8;
+            cfg.gpus_per_node = 4;
+            cfg
+        };
+        // warmup run (thread pools, page faults), then the timed repeats;
+        // the MEDIAN run's throughput goes into the report
+        let _ = Trainer::new(make_cfg())?.run()?;
+        let mut samples = Vec::with_capacity(repeats);
+        let mut last = None;
+        for _ in 0..repeats {
+            let r = Trainer::new(make_cfg())?.run()?;
+            samples.push(r.wall_s);
+            last = Some(r);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median_wall = samples[samples.len() / 2];
+        let iters_per_sec = steps as f64 / median_wall;
+        let r = last.expect("at least one run");
         let ms = r.timing.per_iter_ms();
         println!(
-            "{:<14} {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>7.2}ms",
+            "{:<14} {:>10.1} {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>7.2}ms",
             algo.name(),
+            iters_per_sec,
             ms.total,
             ms.compute,
             ms.comm_pure,
             ms.comm_overlap,
             ms.others
         );
+        rows.push(harness::JsonRow {
+            name: format!("iteration/{}", algo.id()),
+            rate_per_sec: iters_per_sec,
+            median_s: median_wall / steps as f64,
+        });
     }
-    Ok(())
+
+    harness::finalize_report("iteration", quick, &rows, &args)
 }

@@ -1,0 +1,130 @@
+//! Native kernel micro-benchmarks (DESIGN.md §10): blocked GEMM, the
+//! fused masked-exp row-sum (forward + both backward sides), row
+//! L2-normalize and the embedding-table encoder, at 1 and 2 kernel
+//! threads — the per-kernel complement of `bench_iteration`.
+//!
+//! CI (`bench-smoke`) runs `--quick` and uploads `BENCH_kernels.json`;
+//! pass `--baseline <file>` to gate like the iteration bench:
+//!
+//! ```text
+//! cargo bench --bench bench_kernels -- --quick --json BENCH_kernels.json
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use fastclip::kernels::{encoder, gemm, norm, softmax};
+use fastclip::util::{Args, Rng};
+use harness::{black_box, Bench, JsonRow};
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.flag("quick");
+    let samples = if quick { 10 } else { 30 };
+    let mut rows: Vec<JsonRow> = Vec::new();
+    let mut push = |name: String, stats: harness::Stats| {
+        rows.push(JsonRow {
+            name,
+            rate_per_sec: 1.0 / stats.median_s.max(1e-12),
+            median_s: stats.median_s,
+        });
+    };
+
+    println!("native kernel micro-benchmarks ({} samples each)\n", samples);
+
+    // ---- GEMM: the encoder/weight-gradient shapes plus a square tile ----
+    for (m, k, n) in [(8usize, 32usize, 64usize), (128, 128, 128)] {
+        let a = randn(m * k, 1);
+        let b = randn(k * n, 2);
+        let mut c = vec![0.0f32; m * n];
+        for threads in [1usize, 2] {
+            let s = Bench::new(format!("gemm {m}x{k}x{n} t{threads}"))
+                .samples(samples)
+                .run(|| {
+                    gemm::matmul(&a, &b, &mut c, m, k, n, threads);
+                    black_box(c[0]);
+                });
+            push(format!("gemm/{m}x{k}x{n}/t{threads}"), s);
+        }
+    }
+
+    // ---- fused masked exp row-sum: the Bl x Bg contrastive hot-spot ----
+    for (m, n, d) in [(8usize, 16usize, 64usize), (64, 128, 128)] {
+        let a = randn(m * d, 3);
+        let b = randn(n * d, 4);
+        let diag: Vec<isize> = (0..m).map(|i| (i % n) as isize).collect();
+        let sd = vec![0.9f32; m];
+        let tau = vec![0.05f32; m];
+        let gbar = vec![0.4f32; m];
+        let denom = (n - 1) as f32;
+        for threads in [1usize, 2] {
+            let s = Bench::new(format!("exp_rowsum fwd {m}x{n}x{d} t{threads}"))
+                .samples(samples)
+                .run(|| {
+                    black_box(softmax::masked_exp_rowsum(
+                        &a, &b, &diag, &sd, &tau, denom, m, n, d, threads,
+                    ));
+                });
+            push(format!("exp_rowsum_fwd/{m}x{n}x{d}/t{threads}"), s);
+            let s = Bench::new(format!("exp_rowsum bwd {m}x{n}x{d} t{threads}"))
+                .samples(samples)
+                .run(|| {
+                    black_box(softmax::masked_exp_rowsum_bwd_row(
+                        &a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d, threads,
+                    ));
+                    black_box(softmax::masked_exp_rowsum_bwd_col(
+                        &a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d, threads,
+                    ));
+                });
+            push(format!("exp_rowsum_bwd/{m}x{n}x{d}/t{threads}"), s);
+        }
+    }
+
+    // ---- row L2-normalize fwd+bwd ----
+    {
+        let (m, d) = (64usize, 128usize);
+        let x = randn(m * d, 5);
+        let dy = randn(m * d, 6);
+        for threads in [1usize, 2] {
+            let s = Bench::new(format!("l2_normalize {m}x{d} t{threads}"))
+                .samples(samples)
+                .run(|| {
+                    let (y, norms) = norm::l2_normalize_fwd(&x, m, d, threads);
+                    black_box(norm::l2_normalize_bwd(&x, &norms, &dy, m, d, threads));
+                    black_box(y[0]);
+                });
+            push(format!("l2_normalize/{m}x{d}/t{threads}"), s);
+        }
+    }
+
+    // ---- embedding-table encoder fwd+bwd (tiny-preset shapes) ----
+    {
+        let (bl, patches, pd, d, vocab, t_len) =
+            (8usize, 16usize, 32usize, 64usize, 256usize, 16usize);
+        let images = randn(bl * patches * pd, 7);
+        let w = randn(pd * d, 8);
+        let bias = randn(d, 9);
+        let table = randn(vocab * d, 10);
+        let mut rng = Rng::new(11);
+        let texts: Vec<i32> = (0..bl * t_len).map(|_| rng.below(vocab) as i32).collect();
+        let cot = randn(bl * d, 12);
+        let s = Bench::new("encoder fwd+bwd tiny t1".to_string()).samples(samples).run(|| {
+            let xbar = encoder::patch_mean(&images, bl, patches, pd);
+            let pooled = encoder::image_fwd(&w, &bias, &xbar, bl, pd, d, 1);
+            black_box(encoder::image_bwd(&xbar, &cot, bl, pd, d, 1));
+            let t = encoder::text_fwd(&table, &bias, &texts, bl, t_len, vocab, d);
+            black_box(encoder::text_bwd(&texts, &cot, bl, t_len, vocab, d));
+            black_box((pooled[0], t[0]));
+        });
+        push("encoder/tiny/t1".to_string(), s);
+    }
+
+    harness::finalize_report("kernels", quick, &rows, &args)
+}

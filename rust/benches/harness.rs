@@ -84,3 +84,81 @@ pub fn fmt(s: f64) -> String {
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
+
+/// One benchmark result destined for the machine-readable report
+/// (`BENCH_*.json`): a name and a higher-is-better rate.
+#[derive(Debug, Clone)]
+pub struct JsonRow {
+    pub name: String,
+    /// operations (iterations, kernel calls, …) per second — the metric
+    /// the regression gate compares
+    pub rate_per_sec: f64,
+    pub median_s: f64,
+}
+
+/// Shared tail of every bench binary (the `bench-smoke` CI contract):
+///
+/// * `--json <path>`      write the rows as `{bench, quick, results: [...]}`
+/// * `--baseline <path>`  compare `rate_per_sec` by name against a
+///                        previously committed report
+/// * `--max-regress <f>`  fail (non-zero exit) when any shared row's rate
+///                        drops below `baseline · (1 − f)` (default 0.25)
+///
+/// Rows present on only one side are reported but never gate — adding or
+/// retiring a benchmark must not break CI.
+pub fn finalize_report(
+    bench_name: &str,
+    quick: bool,
+    rows: &[JsonRow],
+    args: &fastclip::util::Args,
+) -> anyhow::Result<()> {
+    use fastclip::util::Json;
+    if let Some(path) = args.get("json") {
+        let json = Json::obj(vec![
+            ("bench", Json::str(bench_name)),
+            ("quick", Json::Bool(quick)),
+            (
+                "results",
+                Json::arr(rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(r.name.clone())),
+                        ("rate_per_sec", Json::num(r.rate_per_sec)),
+                        ("median_s", Json::num(r.median_s)),
+                    ])
+                })),
+            ),
+        ]);
+        json.write_file(std::path::Path::new(path))?;
+        println!("wrote {path}");
+    }
+    let Some(baseline_path) = args.get("baseline") else {
+        return Ok(());
+    };
+    let max_regress = args.f64_or("max-regress", 0.25)?;
+    let baseline = fastclip::util::Json::parse_file(std::path::Path::new(baseline_path))?;
+    let mut regressions = Vec::new();
+    for base_row in baseline.get("results")?.as_arr()? {
+        let name = base_row.get("name")?.as_str()?.to_string();
+        let base_rate = base_row.get("rate_per_sec")?.as_f64()?;
+        let Some(cur) = rows.iter().find(|r| r.name == name) else {
+            println!("baseline row '{name}' not measured in this run — skipping");
+            continue;
+        };
+        let floor = base_rate * (1.0 - max_regress);
+        let verdict = if cur.rate_per_sec < floor { "REGRESSED" } else { "ok" };
+        println!(
+            "{name:<40} {:.2}/s vs baseline {:.2}/s (floor {:.2}/s) {verdict}",
+            cur.rate_per_sec, base_rate, floor
+        );
+        if cur.rate_per_sec < floor {
+            regressions.push(name);
+        }
+    }
+    anyhow::ensure!(
+        regressions.is_empty(),
+        "throughput regressed >{:.0}% vs {baseline_path}: {}",
+        max_regress * 100.0,
+        regressions.join(", ")
+    );
+    Ok(())
+}

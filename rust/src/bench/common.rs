@@ -169,7 +169,7 @@ pub fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<Vec<u64>> {
     cfg.nodes = args.usize_or("nodes", cfg.nodes)?;
     cfg.gpus_per_node = args.usize_or("gpus-per-node", cfg.gpus_per_node)?;
     if let Some(b) = args.get("bundle") {
-        cfg.artifact_dir = b.to_string();
+        cfg.set_bundle(b);
     }
     let n_seeds = args.usize_or("seeds", 2)?.max(1);
     Ok((0..n_seeds as u64).collect())

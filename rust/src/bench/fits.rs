@@ -89,9 +89,9 @@ pub fn fits(args: &Args) -> Result<()> {
     let mut json_batch = Vec::new();
     for bundle in &bundles {
         let mut cfg = algo_config(Setting::Medium, Algorithm::OpenClip);
-        cfg.artifact_dir = bundle.clone();
+        cfg.set_bundle(bundle);
         let seeds = apply_overrides(&mut cfg, args)?;
-        let m = crate::runtime::Manifest::load(&cfg.artifact_dir)?;
+        let m = cfg.load_manifest()?;
         // keep samples-seen constant across batch sizes: steps ∝ 1/batch
         let base_samples = cfg.steps * 16 * 2; // default steps at bg=32
         cfg.steps = (base_samples / m.global_batch as u32).max(8);

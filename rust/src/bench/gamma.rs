@@ -25,7 +25,7 @@ pub fn gamma_min(args: &Args) -> Result<()> {
     for bundle in &bundles {
         for gamma_min in [0.2f32, 0.8] {
             let mut cfg = algo_config(Setting::Medium, Algorithm::FastClipV3);
-            cfg.artifact_dir = bundle.clone();
+            cfg.set_bundle(bundle);
             let epochs = (cfg.steps / cfg.iters_per_epoch).max(1);
             cfg.gamma = GammaSchedule::Cosine { gamma_min, decay_epochs: (epochs / 2).max(1) };
             cfg.eval_every = args.u32_or("eval-every", (cfg.steps / 8).max(1))?;

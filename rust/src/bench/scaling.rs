@@ -43,7 +43,7 @@ pub fn scaling(args: &Args) -> Result<()> {
         let mut row_cells = Vec::new();
         for &n in &nodes {
             let mut cfg = algo_config(setting, algo);
-            cfg.artifact_dir = setting.scaling_bundle(n);
+            cfg.set_bundle(&setting.scaling_bundle(n));
             cfg.nodes = n;
             cfg.gpus_per_node = 4;
             // linear LR scaling with global batch (Appendix B), relative
@@ -146,7 +146,7 @@ pub fn speedup(args: &Args) -> Result<()> {
         let mut base_ms = None;
         for &n in &nodes {
             let mut cfg = algo_config(setting, algo);
-            cfg.artifact_dir = setting.scaling_bundle(n);
+            cfg.set_bundle(&setting.scaling_bundle(n));
             cfg.nodes = n;
             cfg.gpus_per_node = 4;
             cfg.steps = args.u32_or("steps", 8)?;

@@ -5,7 +5,7 @@
 //! experiment harness. Presets mirror the paper's "medium / large / xlarge"
 //! settings (Table 2) scaled to this testbed (DESIGN.md §1).
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::util::KvFile;
 
@@ -344,9 +344,45 @@ pub struct TrainConfig {
     /// checkpoint root (latest step is used), or the literal "latest"
     /// (resolved against `ckpt_dir`)
     pub resume: Option<String>,
+    /// compute backend (DESIGN.md §10): native | pjrt | auto (auto picks
+    /// pjrt when the feature + an artifact bundle are present)
+    pub backend: crate::runtime::BackendKind,
+    /// native-backend model preset (tiny|small|medium|base)
+    pub preset: String,
+    /// native-backend worker count (artifact bundles carry their own)
+    pub n_workers: usize,
+    /// native-backend local batch size
+    pub local_batch: usize,
+    /// threads per worker for the native kernels (0 = auto); any value
+    /// yields bitwise-identical results (DESIGN.md §10)
+    pub kernel_threads: usize,
 }
 
 impl TrainConfig {
+    /// Point the run at an artifact bundle directory AND, when the
+    /// directory basename follows the `<preset>_k<K>_b<B>` bundle naming
+    /// convention, mirror that topology into the native-backend fields —
+    /// so one configuration drives either backend identically.
+    pub fn set_bundle(&mut self, dir: &str) {
+        self.artifact_dir = dir.to_string();
+        let base = std::path::Path::new(dir)
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or("");
+        let parts: Vec<&str> = base.split('_').collect();
+        if let [preset, k, b] = parts[..] {
+            let k = k.strip_prefix('k').and_then(|v| v.parse::<usize>().ok());
+            let b = b.strip_prefix('b').and_then(|v| v.parse::<usize>().ok());
+            if let (Some(k), Some(b)) = (k, b) {
+                if k > 0 && b > 0 {
+                    self.preset = preset.to_string();
+                    self.n_workers = k;
+                    self.local_batch = b;
+                }
+            }
+        }
+    }
+
     /// Defaults mirroring the paper's medium-scale setting, scaled down.
     pub fn new(artifact_dir: impl Into<String>, algorithm: Algorithm) -> Self {
         let steps = 200;
@@ -360,8 +396,8 @@ impl TrainConfig {
             GammaSchedule::Constant { gamma: 0.6 }
         };
         let tau_init = if algorithm == Algorithm::FastClipV3 { 0.07 } else { 0.03 };
-        Self {
-            artifact_dir: artifact_dir.into(),
+        let mut cfg = Self {
+            artifact_dir: String::new(),
             algorithm,
             steps,
             iters_per_epoch,
@@ -385,6 +421,46 @@ impl TrainConfig {
             ckpt_every: 0,
             keep_last: 3,
             resume: None,
+            backend: crate::runtime::BackendKind::Auto,
+            preset: "tiny".to_string(),
+            n_workers: 2,
+            local_batch: 8,
+            kernel_threads: 0,
+        };
+        let dir: String = artifact_dir.into();
+        cfg.set_bundle(&dir);
+        cfg
+    }
+
+    /// Resolve `backend = auto`: pjrt when both the cargo feature and the
+    /// configured artifact bundle are present, native otherwise.
+    pub fn resolved_backend(&self) -> crate::runtime::BackendKind {
+        use crate::runtime::BackendKind;
+        match self.backend {
+            BackendKind::Auto => {
+                let have_bundle = std::path::Path::new(&self.artifact_dir)
+                    .join("manifest.json")
+                    .exists();
+                if cfg!(feature = "pjrt") && have_bundle {
+                    BackendKind::Pjrt
+                } else {
+                    BackendKind::Native
+                }
+            }
+            k => k,
+        }
+    }
+
+    /// Build the manifest the resolved backend runs against: synthesized
+    /// for native, loaded from `artifact_dir` for pjrt.
+    pub fn load_manifest(&self) -> Result<crate::runtime::Manifest> {
+        use crate::runtime::{BackendKind, Manifest};
+        match self.resolved_backend() {
+            BackendKind::Native => {
+                Manifest::native(&self.preset, self.n_workers, self.local_batch, self.seed)
+            }
+            _ => Manifest::load(&self.artifact_dir)
+                .with_context(|| format!("loading artifact bundle {}", self.artifact_dir)),
         }
     }
 
@@ -406,6 +482,18 @@ impl TrainConfig {
         if let GammaSchedule::Cosine { gamma_min, .. } = self.gamma {
             ensure!(gamma_min > 0.0 && gamma_min <= 1.0, "gamma_min must be in (0,1]");
         }
+        // evaluation always runs on a materialized split: an empty one
+        // (n_eval = 0) would score NaN over zero samples — reject it up
+        // front instead of "evaluating" an empty set
+        ensure!(
+            self.data.n_eval > 0,
+            "data.n_eval must be > 0: the trainer evaluates at the end of every run{} — \
+             raise data.n_eval (default 512)",
+            if self.eval_every > 0 { " and eval_every requests periodic evaluations" } else { "" }
+        );
+        ensure!(self.n_workers > 0, "n_workers must be > 0");
+        ensure!(self.local_batch > 0, "local_batch must be > 0");
+        ensure!(self.kernel_threads <= 1024, "kernel_threads {} is absurd", self.kernel_threads);
         ensure!(
             self.ckpt_every == 0 || self.ckpt_dir.is_some(),
             "ckpt_every > 0 requires ckpt_dir"
@@ -437,6 +525,7 @@ impl TrainConfig {
             "tau_init", "tau_lr", "tau_min", "eps", "rho", "eval_every",
             "nodes", "gpus_per_node", "network", "reduce", "tau_lr_decay_below",
             "ckpt_dir", "ckpt_every", "keep_last", "resume",
+            "backend", "preset", "n_workers", "local_batch", "kernel_threads",
             "optimizer.kind", "optimizer.beta1", "optimizer.beta2",
             "optimizer.eps", "optimizer.weight_decay", "optimizer.momentum",
             "lr.peak", "lr.min", "lr.warmup_iters", "lr.total_iters",
@@ -472,6 +561,12 @@ impl TrainConfig {
         if let Some(v) = kv.get("resume") {
             cfg.resume = Some(v.to_string());
         }
+        cfg.backend =
+            crate::runtime::BackendKind::from_id(&kv.str_or("backend", cfg.backend.id()))?;
+        cfg.preset = kv.str_or("preset", &cfg.preset);
+        cfg.n_workers = kv.parse_or("n_workers", cfg.n_workers)?;
+        cfg.local_batch = kv.parse_or("local_batch", cfg.local_batch)?;
+        cfg.kernel_threads = kv.parse_or("kernel_threads", cfg.kernel_threads)?;
 
         if let Some(kind) = kv.get("optimizer.kind") {
             cfg.optimizer.kind = OptimizerKind::from_id(kind)?;
@@ -543,6 +638,11 @@ impl TrainConfig {
         if let Some(r) = &self.resume {
             let _ = writeln!(s, "resume = \"{r}\"");
         }
+        let _ = writeln!(s, "backend = \"{}\"", self.backend.id());
+        let _ = writeln!(s, "preset = \"{}\"", self.preset);
+        let _ = writeln!(s, "n_workers = {}", self.n_workers);
+        let _ = writeln!(s, "local_batch = {}", self.local_batch);
+        let _ = writeln!(s, "kernel_threads = {}", self.kernel_threads);
         let _ = writeln!(s, "\n[optimizer]");
         let _ = writeln!(s, "kind = \"{}\"", self.optimizer.kind.id());
         let _ = writeln!(s, "beta1 = {}", self.optimizer.beta1);
@@ -664,6 +764,56 @@ mod tests {
         let mut bad = TrainConfig::new("x", Algorithm::FastClipV1);
         bad.resume = Some("latest".into());
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn backend_fields_roundtrip_and_validate() {
+        use crate::runtime::BackendKind;
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV1);
+        cfg.backend = BackendKind::Native;
+        cfg.preset = "small".into();
+        cfg.n_workers = 4;
+        cfg.local_batch = 4;
+        cfg.kernel_threads = 2;
+        cfg.validate().unwrap();
+        let kv = crate::util::KvFile::parse(&cfg.to_file_string()).unwrap();
+        let back = TrainConfig::from_kv(&kv).unwrap();
+        assert_eq!(back.backend, BackendKind::Native);
+        assert_eq!(back.preset, "small");
+        assert_eq!(back.n_workers, 4);
+        assert_eq!(back.local_batch, 4);
+        assert_eq!(back.kernel_threads, 2);
+        // explicit native resolves to native; typo'd backend is an error
+        assert_eq!(back.resolved_backend(), BackendKind::Native);
+        let kv = crate::util::KvFile::parse("backend = \"cuda\"").unwrap();
+        let err = TrainConfig::from_kv(&kv).unwrap_err();
+        assert!(format!("{err}").contains("native|pjrt|auto"), "{err}");
+        // degenerate native topology rejected
+        let mut bad = TrainConfig::new("x", Algorithm::FastClipV1);
+        bad.n_workers = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn auto_backend_without_artifacts_is_native() {
+        let cfg = TrainConfig::new("artifacts/definitely_not_built", Algorithm::FastClipV1);
+        assert_eq!(cfg.resolved_backend(), crate::runtime::BackendKind::Native);
+        let m = cfg.load_manifest().unwrap();
+        assert!(m.native);
+        assert_eq!(m.k_workers, cfg.n_workers);
+        assert_eq!(m.local_batch, cfg.local_batch);
+    }
+
+    #[test]
+    fn empty_eval_set_is_a_config_error() {
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV1);
+        cfg.data.n_eval = 0;
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err}").contains("n_eval"), "{err}");
+        // with periodic evals requested the message says so too
+        cfg.eval_every = 5;
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err}").contains("eval_every"), "{err}");
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub use metrics::{retrieval_recall_at_k, zero_shot_accuracy};
 use anyhow::Result;
 
 use crate::data::{Dataset, EvalVariant};
-use crate::runtime::WorkerRuntime;
+use crate::runtime::ComputeBackend;
 
 /// One evaluation snapshot.
 #[derive(Debug, Clone, PartialEq)]
@@ -41,9 +41,9 @@ impl EvalSummary {
 }
 
 /// Evaluate the model with parameters `params` on the dataset's held-out
-/// split, running the encoder through the worker's PJRT executables in
+/// split, running the encoder through the worker's compute backend in
 /// local-batch-sized chunks.
-pub fn evaluate(rt: &mut WorkerRuntime, ds: &Dataset, params: &[f32]) -> Result<EvalSummary> {
+pub fn evaluate(rt: &mut dyn ComputeBackend, ds: &Dataset, params: &[f32]) -> Result<EvalSummary> {
     let d = rt.manifest().model.d_embed;
     let mut tasks = Vec::new();
 
@@ -78,10 +78,10 @@ pub fn evaluate(rt: &mut WorkerRuntime, ds: &Dataset, params: &[f32]) -> Result<
     Ok(EvalSummary { retrieval, in_variants, datacomp, tasks })
 }
 
-/// Embed `n` images (row-major (n, img_dim)) through the `encode`
-/// executable in chunks of the bundle's local batch, padding the tail.
+/// Embed `n` images (row-major (n, img_dim)) through the backend's
+/// `encode` in chunks of the bundle's local batch, padding the tail.
 fn embed_images(
-    rt: &mut WorkerRuntime,
+    rt: &mut dyn ComputeBackend,
     params: &[f32],
     images: &[f32],
     n: usize,
@@ -106,7 +106,7 @@ fn embed_images(
 
 /// Embed `n` token sequences (row-major (n, t_len)); same chunking.
 fn embed_texts(
-    rt: &mut WorkerRuntime,
+    rt: &mut dyn ComputeBackend,
     params: &[f32],
     texts: &[i32],
     n: usize,
@@ -135,18 +135,12 @@ mod tests {
     use super::*;
     use crate::config::DataConfig;
     use crate::data::ModelDims;
-    use crate::runtime::Manifest;
-
-    const BUNDLE: &str = "artifacts/tiny_k2_b8";
+    use crate::runtime::{Manifest, NativeBackend};
 
     #[test]
     fn evaluate_random_model_near_chance() {
-        if !std::path::Path::new(BUNDLE).join("manifest.json").exists() {
-            eprintln!("skipping: {BUNDLE} not built");
-            return;
-        }
-        let m = Manifest::load(BUNDLE).unwrap();
-        let mut rt = WorkerRuntime::load(&m, Some("gcl")).unwrap();
+        let m = Manifest::native("tiny", 2, 8, 0).unwrap();
+        let mut rt = NativeBackend::new(&m, Some("gcl"), 1).unwrap();
         let dcfg = DataConfig { n_train: 64, n_eval: 64, n_classes: 8, ..DataConfig::default() };
         let ds = Dataset::new(dcfg, m.model_dims());
         let params = m.load_init_params().unwrap();
@@ -163,11 +157,8 @@ mod tests {
 
     #[test]
     fn chunked_embedding_matches_direct() {
-        if !std::path::Path::new(BUNDLE).join("manifest.json").exists() {
-            return;
-        }
-        let m = Manifest::load(BUNDLE).unwrap();
-        let mut rt = WorkerRuntime::load(&m, Some("gcl")).unwrap();
+        let m = Manifest::native("tiny", 2, 8, 0).unwrap();
+        let mut rt = NativeBackend::new(&m, Some("gcl"), 2).unwrap();
         let params = m.load_init_params().unwrap();
         let dims: ModelDims = m.model_dims();
         let img_dim = dims.v_patches * dims.v_patch_dim;

@@ -1,0 +1,247 @@
+//! Embedding-table encoder forward/backward — the native model's towers
+//! (DESIGN.md §10).
+//!
+//! The native backend trades the artifact bundle's transformer towers for
+//! a deliberately small, exactly-differentiable pair of encoders over the
+//! *same* interface shapes:
+//!
+//! * **image**: mean over patches, then a linear projection —
+//!   `pooled_i = mean_p(x_{i,p}) · W_v + b_v`, `W_v: (v_patch_dim, d)`;
+//! * **text**: token-embedding-table mean —
+//!   `pooled_i = mean_l(T[tok_{i,l}]) + b_t`, `T: (t_vocab, d)`.
+//!
+//! Both are followed by the shared row L2-normalize
+//! ([`super::norm`]). The backward passes are exact transposes: the image
+//! side is a [`super::gemm::matmul_at_b`] weight gradient, the text side
+//! a deterministic scatter-add into the table (tokens walked in ascending
+//! (sample, position) order — order-independent parallelism is never
+//! attempted, so gradients are bitwise stable at any thread count).
+
+use super::gemm::{col_sums, matmul, matmul_at_b};
+
+/// Mean over patches: images `(bl, v_patches, v_patch_dim)` row-major →
+/// `xbar (bl, v_patch_dim)`, each patch feature averaged in ascending
+/// patch order.
+pub fn patch_mean(images: &[f32], bl: usize, v_patches: usize, v_patch_dim: usize) -> Vec<f32> {
+    assert_eq!(images.len(), bl * v_patches * v_patch_dim);
+    let mut xbar = vec![0.0f32; bl * v_patch_dim];
+    let inv = 1.0 / v_patches as f32;
+    for i in 0..bl {
+        let out = &mut xbar[i * v_patch_dim..(i + 1) * v_patch_dim];
+        for p in 0..v_patches {
+            let at = (i * v_patches + p) * v_patch_dim;
+            let patch = &images[at..at + v_patch_dim];
+            for (o, v) in out.iter_mut().zip(patch) {
+                *o += *v;
+            }
+        }
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+    xbar
+}
+
+/// Image forward: `pooled = xbar · W + b`, `W (pd, d)` row-major.
+pub fn image_fwd(
+    w: &[f32],
+    bias: &[f32],
+    xbar: &[f32],
+    bl: usize,
+    pd: usize,
+    d: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(w.len(), pd * d);
+    assert_eq!(bias.len(), d);
+    assert_eq!(xbar.len(), bl * pd);
+    let mut pooled = vec![0.0f32; bl * d];
+    matmul(xbar, w, &mut pooled, bl, pd, d, threads);
+    for row in pooled.chunks_mut(d) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += *b;
+        }
+    }
+    pooled
+}
+
+/// Image backward: given `dpooled (bl, d)`, returns
+/// `(dW = xbarᵀ·dpooled, db = column sums of dpooled)`.
+pub fn image_bwd(
+    xbar: &[f32],
+    dpooled: &[f32],
+    bl: usize,
+    pd: usize,
+    d: usize,
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(xbar.len(), bl * pd);
+    assert_eq!(dpooled.len(), bl * d);
+    let mut dw = vec![0.0f32; pd * d];
+    matmul_at_b(xbar, dpooled, &mut dw, bl, pd, d, threads);
+    let mut db = vec![0.0f32; d];
+    col_sums(dpooled, bl, d, &mut db);
+    (dw, db)
+}
+
+/// Text forward: `pooled_i = (1/L)·Σ_l T[tok_{i,l}] + b_t`, tokens walked
+/// in ascending position order.
+pub fn text_fwd(
+    table: &[f32],
+    bias: &[f32],
+    texts: &[i32],
+    bl: usize,
+    t_len: usize,
+    vocab: usize,
+    d: usize,
+) -> Vec<f32> {
+    assert_eq!(table.len(), vocab * d);
+    assert_eq!(bias.len(), d);
+    assert_eq!(texts.len(), bl * t_len);
+    let inv = 1.0 / t_len as f32;
+    let mut pooled = vec![0.0f32; bl * d];
+    for i in 0..bl {
+        let out = &mut pooled[i * d..(i + 1) * d];
+        for l in 0..t_len {
+            let tok = texts[i * t_len + l] as usize;
+            debug_assert!(tok < vocab, "token {tok} out of vocab {vocab}");
+            let row = &table[tok * d..(tok + 1) * d];
+            for (o, v) in out.iter_mut().zip(row) {
+                *o += *v;
+            }
+        }
+        for (o, b) in out.iter_mut().zip(bias) {
+            *o = *o * inv + *b;
+        }
+    }
+    pooled
+}
+
+/// Text backward: scatter-add `dT[tok_{i,l}] += (1/L)·dpooled_i` in
+/// ascending (i, l) order (deterministic by construction), plus the bias
+/// gradient `db = column sums of dpooled`. Returns `(dTable, db)`.
+pub fn text_bwd(
+    texts: &[i32],
+    dpooled: &[f32],
+    bl: usize,
+    t_len: usize,
+    vocab: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(texts.len(), bl * t_len);
+    assert_eq!(dpooled.len(), bl * d);
+    let inv = 1.0 / t_len as f32;
+    let mut dtable = vec![0.0f32; vocab * d];
+    for i in 0..bl {
+        let drow = &dpooled[i * d..(i + 1) * d];
+        for l in 0..t_len {
+            let tok = texts[i * t_len + l] as usize;
+            let out = &mut dtable[tok * d..(tok + 1) * d];
+            for (o, v) in out.iter_mut().zip(drow) {
+                *o += inv * *v;
+            }
+        }
+    }
+    let mut db = vec![0.0f32; d];
+    col_sums(dpooled, bl, d, &mut db);
+    (dtable, db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn patch_mean_averages() {
+        // 1 sample, 2 patches of dim 2: mean([[1,2],[3,4]]) = [2,3]
+        let images = [1.0f32, 2.0, 3.0, 4.0];
+        let xbar = patch_mean(&images, 1, 2, 2);
+        assert_eq!(xbar, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn image_fwd_bwd_finite_difference() {
+        let (bl, pd, d) = (3usize, 4usize, 5usize);
+        let xbar = randn(bl * pd, 40);
+        let w = randn(pd * d, 41);
+        let bias = randn(d, 42);
+        let cot = randn(bl * d, 43);
+        let value = |w_: &[f32], b_: &[f32]| -> f64 {
+            let p = image_fwd(w_, b_, &xbar, bl, pd, d, 1);
+            p.iter().zip(&cot).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        let (dw, db) = image_bwd(&xbar, &cot, bl, pd, d, 1);
+        let h = 1e-3f32;
+        for idx in [0usize, 7, pd * d - 1] {
+            let mut wp = w.clone();
+            let mut wm = w.clone();
+            wp[idx] += h;
+            wm[idx] -= h;
+            let num = (value(&wp, &bias) - value(&wm, &bias)) / (2.0 * h as f64);
+            assert!((num - dw[idx] as f64).abs() < 1e-2 * num.abs().max(1.0), "dw[{idx}]");
+        }
+        for idx in 0..d {
+            let mut bp = bias.clone();
+            let mut bm = bias.clone();
+            bp[idx] += h;
+            bm[idx] -= h;
+            let num = (value(&w, &bp) - value(&w, &bm)) / (2.0 * h as f64);
+            assert!((num - db[idx] as f64).abs() < 1e-2 * num.abs().max(1.0), "db[{idx}]");
+        }
+    }
+
+    #[test]
+    fn text_fwd_bwd_finite_difference() {
+        let (bl, t_len, vocab, d) = (3usize, 4usize, 7usize, 5usize);
+        let table = randn(vocab * d, 50);
+        let bias = randn(d, 51);
+        let mut rng = Rng::new(52);
+        let texts: Vec<i32> = (0..bl * t_len).map(|_| rng.below(vocab) as i32).collect();
+        let cot = randn(bl * d, 53);
+        let value = |t_: &[f32], b_: &[f32]| -> f64 {
+            let p = text_fwd(t_, b_, &texts, bl, t_len, vocab, d);
+            p.iter().zip(&cot).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        let (dt, db) = text_bwd(&texts, &cot, bl, t_len, vocab, d);
+        let h = 1e-3f32;
+        for idx in [0usize, 11, vocab * d - 1] {
+            let mut tp = table.clone();
+            let mut tm = table.clone();
+            tp[idx] += h;
+            tm[idx] -= h;
+            let num = (value(&tp, &bias) - value(&tm, &bias)) / (2.0 * h as f64);
+            assert!(
+                (num - dt[idx] as f64).abs() < 1e-2 * num.abs().max(1.0) + 1e-6,
+                "dt[{idx}] {num} vs {}",
+                dt[idx]
+            );
+        }
+        for idx in 0..d {
+            let mut bp = bias.clone();
+            let mut bm = bias.clone();
+            bp[idx] += h;
+            bm[idx] -= h;
+            let num = (value(&table, &bp) - value(&table, &bm)) / (2.0 * h as f64);
+            assert!((num - db[idx] as f64).abs() < 1e-2 * num.abs().max(1.0), "db[{idx}]");
+        }
+    }
+
+    #[test]
+    fn text_unused_tokens_get_zero_grad() {
+        let (bl, t_len, vocab, d) = (1usize, 2usize, 5usize, 3usize);
+        let texts = [1i32, 3];
+        let dpooled = [1.0f32, 1.0, 1.0];
+        let (dt, _) = text_bwd(&texts, &dpooled, bl, t_len, vocab, d);
+        assert!(dt[0..d].iter().all(|v| *v == 0.0), "token 0 untouched");
+        assert!(dt[d..2 * d].iter().all(|v| *v == 0.5), "token 1 gets 1/L");
+        assert!(dt[2 * d..3 * d].iter().all(|v| *v == 0.0), "token 2 untouched");
+    }
+}

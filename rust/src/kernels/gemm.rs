@@ -1,0 +1,268 @@
+//! Blocked, multithreaded f32 GEMM with a deterministic summation tree.
+//!
+//! Three layouts cover everything the native backend needs:
+//! * [`matmul`]      — `C[m,n] = A[m,k] · B[k,n]` (encoder forward),
+//! * [`matmul_bt`]   — `C[m,n] = A[m,k] · B[n,k]ᵀ` (pairwise similarity),
+//! * [`matmul_at_b`] — `C[k,n] = A[m,k]ᵀ · B[m,n]` (weight gradients).
+//!
+//! All matrices are dense row-major. The k (reduction) dimension is walked
+//! in ascending order inside fixed-size blocks of [`KC`]; since block
+//! boundaries never reorder the per-element addition sequence, every
+//! output element's summation tree is the plain left-to-right scalar one —
+//! the blocked kernels are **bitwise identical** to the `*_ref` naive
+//! triple loops at any thread count (threads partition output rows only).
+//! The inner loops are written as long contiguous row AXPYs / dot products
+//! so the auto-vectorizer can use SIMD lanes across the *output* (j) axis,
+//! which does not touch the reduction order.
+
+use super::{par_rows, split_ranges};
+
+/// Reduction-dimension block size (cache tile, ~16 KiB of B panel rows).
+pub const KC: usize = 64;
+
+/// `C[m,n] = A[m,k] · B[k,n]`, row-major, C overwritten.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    par_rows(c, m, n, threads, |lo, hi, chunk| {
+        chunk.fill(0.0);
+        for kb in (0..k).step_by(KC) {
+            let kend = (kb + KC).min(k);
+            for i in lo..hi {
+                let crow = &mut chunk[(i - lo) * n..(i - lo + 1) * n];
+                for kk in kb..kend {
+                    let aik = a[i * k + kk];
+                    let brow = &b[kk * n..kk * n + n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * *bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Naive scalar reference for [`matmul`] — same summation tree.
+pub fn matmul_ref(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ` — both operands row-major with contiguous
+/// k, i.e. the pairwise-similarity form `s_ij = <a_i, b_j>`.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), n * k, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    par_rows(c, m, n, threads, |lo, hi, chunk| {
+        for i in lo..hi {
+            let arow = &a[i * k..i * k + k];
+            let crow = &mut chunk[(i - lo) * n..(i - lo + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv = dot(arow, &b[j * k..j * k + k]);
+            }
+        }
+    });
+}
+
+/// Naive scalar reference for [`matmul_bt`] — same summation tree.
+pub fn matmul_bt_ref(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[j * k + kk];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// `C[k,n] = A[m,k]ᵀ · B[m,n]` — the weight-gradient form
+/// `dW[p,q] = Σ_i A[i,p]·B[i,q]`, reduced over rows `i` in ascending
+/// order. Threads partition the rows of C (the `p` axis).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_at_b(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), m * n, "B shape");
+    assert_eq!(c.len(), k * n, "C shape");
+    par_rows(c, k, n, threads, |lo, hi, chunk| {
+        chunk.fill(0.0);
+        for i in 0..m {
+            let brow = &b[i * n..i * n + n];
+            for p in lo..hi {
+                let aip = a[i * k + p];
+                let crow = &mut chunk[(p - lo) * n..(p - lo + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aip * *bv;
+                }
+            }
+        }
+    });
+}
+
+/// Naive scalar reference for [`matmul_at_b`] — same summation tree.
+pub fn matmul_at_b_ref(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    for p in 0..k {
+        for q in 0..n {
+            let mut acc = 0.0f32;
+            for i in 0..m {
+                acc += a[i * k + p] * b[i * n + q];
+            }
+            c[p * n + q] = acc;
+        }
+    }
+}
+
+/// Sequential (ascending-index) dot product — THE reduction primitive all
+/// similarity rows share; public so callers stay on the same tree.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f32;
+    for (a, b) in x.iter().zip(y) {
+        acc += *a * *b;
+    }
+    acc
+}
+
+/// Column sums of a row-major (m, n) matrix: `out[j] = Σ_i x[i,j]`,
+/// reduced over rows in ascending order (bias gradients).
+pub fn col_sums(x: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m * n);
+    assert_eq!(out.len(), n);
+    out.fill(0.0);
+    for i in 0..m {
+        let row = &x[i * n..i * n + n];
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += *v;
+        }
+    }
+}
+
+/// Used by tests and the parity suite: split ranges identical to the
+/// parallel partitioning (re-exported for bench labelling).
+pub fn row_partition(rows: usize, threads: usize) -> Vec<(usize, usize)> {
+    split_ranges(rows, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn matmul_matches_ref_bitwise_all_threads() {
+        // odd shapes, k crossing the KC block boundary non-divisibly
+        let shapes = [(1usize, 1usize, 1usize), (3, 5, 7), (8, 64, 16), (13, 65, 9), (2, 130, 3)];
+        for (m, k, n) in shapes {
+            let a = randn(m * k, 1);
+            let b = randn(k * n, 2);
+            let mut want = vec![0.0f32; m * n];
+            matmul_ref(&a, &b, &mut want, m, k, n);
+            for threads in [1usize, 2, 4] {
+                let mut got = vec![0.0f32; m * n];
+                matmul(&a, &b, &mut got, m, k, n, threads);
+                assert_eq!(bits(&got), bits(&want), "m={m} k={k} n={n} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_ref_bitwise() {
+        for (m, k, n) in [(5usize, 3usize, 5usize), (8, 64, 8), (7, 33, 11)] {
+            let a = randn(m * k, 3);
+            let b = randn(n * k, 4);
+            let mut want = vec![0.0f32; m * n];
+            matmul_bt_ref(&a, &b, &mut want, m, k, n);
+            for threads in [1usize, 2, 4] {
+                let mut got = vec![0.0f32; m * n];
+                matmul_bt(&a, &b, &mut got, m, k, n, threads);
+                assert_eq!(bits(&got), bits(&want), "t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_at_b_matches_ref_bitwise() {
+        for (m, k, n) in [(4usize, 6usize, 2usize), (9, 5, 13), (16, 32, 64)] {
+            let a = randn(m * k, 5);
+            let b = randn(m * n, 6);
+            let mut want = vec![0.0f32; k * n];
+            matmul_at_b_ref(&a, &b, &mut want, m, k, n);
+            for threads in [1usize, 2, 4] {
+                let mut got = vec![0.0f32; k * n];
+                matmul_at_b(&a, &b, &mut got, m, k, n, threads);
+                assert_eq!(bits(&got), bits(&want), "t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_known_product() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        let mut c = [0.0f32; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2, 1);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+        // bt form: B here interpreted as rows b0=(5,6), b1=(7,8)
+        let mut cbt = [0.0f32; 4];
+        matmul_bt(&a, &b, &mut cbt, 2, 2, 2, 1);
+        assert_eq!(cbt, [17.0, 23.0, 39.0, 53.0]);
+    }
+
+    #[test]
+    fn col_sums_and_dot() {
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut s = [0.0f32; 3];
+        col_sums(&x, 2, 3, &mut s);
+        assert_eq!(s, [5.0, 7.0, 9.0]);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+}

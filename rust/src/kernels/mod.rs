@@ -1,0 +1,141 @@
+//! Native CPU compute kernels (DESIGN.md §10).
+//!
+//! Pure-Rust, multithreaded, SIMD-friendly f32 kernels backing the
+//! [`NativeBackend`](crate::runtime::NativeBackend): blocked GEMM, the
+//! fused masked-exp row-sum at the heart of every contrastive loss in the
+//! paper (forward AND backward, mirroring the Pallas kernel structure of
+//! `python/compile/kernels/contrastive.py`: tiled similarity, epilogue
+//! fused into the matmul, probabilities recomputed in the backward), row
+//! softmax/logsumexp, row L2-normalization, and the embedding-table
+//! encoder forward/backward.
+//!
+//! # Determinism contract
+//!
+//! Every kernel is **bitwise deterministic regardless of thread count**:
+//! parallelism only ever partitions *output* elements across threads, and
+//! the summation tree behind each output element is a fixed-order
+//! sequential reduction (ascending index). Blocking changes the *visit*
+//! order for cache locality, never the per-element *accumulation* order.
+//! Consequently every kernel agrees to exact bit equality with its naive
+//! single-threaded scalar reference (`*_ref`), which uses the same
+//! left-to-right summation tree — the parity suite in
+//! `tests/native_backend.rs` pins this for odd shapes, non-divisible
+//! blocks, and 1/2/4 threads.
+
+pub mod encoder;
+pub mod gemm;
+pub mod norm;
+pub mod softmax;
+
+/// Resolve a requested kernel thread count: 0 means "auto" (the machine's
+/// available parallelism, capped at 8 — these are latency-bound tiles,
+/// not throughput farms). Any explicit value is used as given.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    std::thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(1)
+}
+
+/// Split `n` items into at most `parts` contiguous ranges of
+/// near-equal length (the first `n % parts` ranges are one longer).
+/// Empty ranges are omitted, so the result is also the task list.
+pub(crate) fn split_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1).min(n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            break;
+        }
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+/// Run `f(lo, hi, chunk)` over row-partitioned disjoint chunks of `out`
+/// (rows of width `row_len`), one scoped thread per chunk. The chunk
+/// passed to `f` covers rows `[lo, hi)`. With one range the call is
+/// inlined on the current thread (no spawn).
+pub(crate) fn par_rows<F>(out: &mut [f32], rows: usize, row_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_len);
+    let ranges = split_ranges(rows, threads);
+    if ranges.len() <= 1 {
+        if let Some(&(lo, hi)) = ranges.first() {
+            f(lo, hi, out);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = out;
+        let mut handles = Vec::with_capacity(ranges.len());
+        for &(lo, hi) in &ranges {
+            // `rest` always starts at row `lo`; peel off this chunk
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_len);
+            rest = tail;
+            let fref = &f;
+            handles.push(s.spawn(move || fref(lo, hi, chunk)));
+        }
+        for h in handles {
+            h.join().expect("kernel worker panicked");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ranges_covers_everything() {
+        for n in [0usize, 1, 2, 5, 7, 16, 103] {
+            for parts in [1usize, 2, 3, 4, 8] {
+                let r = split_ranges(n, parts);
+                let total: usize = r.iter().map(|(lo, hi)| hi - lo).sum();
+                assert_eq!(total, n, "n={n} parts={parts}");
+                let mut expect = 0;
+                for &(lo, hi) in &r {
+                    assert_eq!(lo, expect);
+                    assert!(hi > lo, "no empty ranges");
+                    expect = hi;
+                }
+                assert!(r.len() <= parts.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn par_rows_partitions_disjointly() {
+        for threads in [1usize, 2, 3, 4] {
+            let rows = 7;
+            let d = 3;
+            let mut out = vec![0.0f32; rows * d];
+            par_rows(&mut out, rows, d, threads, |lo, hi, chunk| {
+                assert_eq!(chunk.len(), (hi - lo) * d);
+                for (r, row) in chunk.chunks_mut(d).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (lo + r) as f32;
+                    }
+                }
+            });
+            for r in 0..rows {
+                for c in 0..d {
+                    assert_eq!(out[r * d + c], r as f32, "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_threads_auto_positive() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

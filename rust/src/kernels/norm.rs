@@ -1,0 +1,201 @@
+//! Row L2-normalization forward/backward, matching the model's
+//! `e = p / (‖p‖ + 1e-8)` (the JAX encoder's epsilon-guarded normalize).
+//!
+//! Same determinism contract as the rest of [`crate::kernels`]: rows are
+//! partitioned across threads, per-row reductions are ascending-index,
+//! and both kernels are bitwise equal to their scalar references.
+
+use super::par_rows;
+
+/// The epsilon of the encoder's normalization (kept identical to the JAX
+/// model so the two backends compute the same function).
+pub const NORM_EPS: f32 = 1e-8;
+
+/// Forward: `y_i = x_i / (‖x_i‖ + ε)`; returns the raw norms `‖x_i‖`
+/// (the backward pass and callers need them).
+pub fn l2_normalize_fwd(x: &[f32], m: usize, d: usize, threads: usize) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len(), m * d);
+    let mut y = vec![0.0f32; m * d];
+    let mut norms = vec![0.0f32; m];
+    par_rows(&mut y, m, d, threads, |lo, hi, chunk| {
+        for i in lo..hi {
+            let row = &x[i * d..i * d + d];
+            let mut sq = 0.0f32;
+            for v in row {
+                sq += *v * *v;
+            }
+            let n = sq.sqrt();
+            let inv = 1.0 / (n + NORM_EPS);
+            let out = &mut chunk[(i - lo) * d..(i - lo + 1) * d];
+            for (o, v) in out.iter_mut().zip(row) {
+                *o = *v * inv;
+            }
+        }
+    });
+    // norms pass (tiny): recompute serially so `par_rows` needs only one
+    // mutable target; the reduction order matches the first pass exactly
+    for i in 0..m {
+        let row = &x[i * d..i * d + d];
+        let mut sq = 0.0f32;
+        for v in row {
+            sq += *v * *v;
+        }
+        norms[i] = sq.sqrt();
+    }
+    (y, norms)
+}
+
+/// Backward: with `n_i = ‖x_i‖`, `t_i = n_i + ε`,
+///
+/// ```text
+/// dx_i = dy_i / t_i − x_i · (x_i·dy_i) / (max(n_i, tiny) · t_i²)
+/// ```
+///
+/// (the Jacobian of `x/(‖x‖+ε)`; `max(n, tiny)` guards the undefined
+/// gradient at exactly x = 0 instead of emitting NaN).
+pub fn l2_normalize_bwd(
+    x: &[f32],
+    norms: &[f32],
+    dy: &[f32],
+    m: usize,
+    d: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), m * d);
+    assert_eq!(dy.len(), m * d);
+    assert_eq!(norms.len(), m);
+    let mut dx = vec![0.0f32; m * d];
+    par_rows(&mut dx, m, d, threads, |lo, hi, chunk| {
+        for i in lo..hi {
+            let xrow = &x[i * d..i * d + d];
+            let dyrow = &dy[i * d..i * d + d];
+            let t = norms[i] + NORM_EPS;
+            let mut xd = 0.0f32;
+            for (xv, dv) in xrow.iter().zip(dyrow) {
+                xd += *xv * *dv;
+            }
+            let c = xd / (norms[i].max(1e-30) * t * t);
+            let out = &mut chunk[(i - lo) * d..(i - lo + 1) * d];
+            let inv_t = 1.0 / t;
+            for ((o, xv), dv) in out.iter_mut().zip(xrow).zip(dyrow) {
+                *o = *dv * inv_t - *xv * c;
+            }
+        }
+    });
+    dx
+}
+
+/// Scalar reference for [`l2_normalize_fwd`].
+pub fn l2_normalize_fwd_ref(x: &[f32], m: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; m * d];
+    let mut norms = vec![0.0f32; m];
+    for i in 0..m {
+        let mut sq = 0.0f32;
+        for q in 0..d {
+            sq += x[i * d + q] * x[i * d + q];
+        }
+        let n = sq.sqrt();
+        norms[i] = n;
+        for q in 0..d {
+            y[i * d + q] = x[i * d + q] * (1.0 / (n + NORM_EPS));
+        }
+    }
+    (y, norms)
+}
+
+/// Scalar reference for [`l2_normalize_bwd`].
+pub fn l2_normalize_bwd_ref(x: &[f32], norms: &[f32], dy: &[f32], m: usize, d: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; m * d];
+    for i in 0..m {
+        let t = norms[i] + NORM_EPS;
+        let mut xd = 0.0f32;
+        for q in 0..d {
+            xd += x[i * d + q] * dy[i * d + q];
+        }
+        let c = xd / (norms[i].max(1e-30) * t * t);
+        for q in 0..d {
+            dx[i * d + q] = dy[i * d + q] * (1.0 / t) - x[i * d + q] * c;
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn fwd_bwd_match_ref_bitwise() {
+        for (m, d) in [(1usize, 1usize), (5, 7), (8, 64), (11, 33)] {
+            let x = randn(m * d, 31);
+            let dy = randn(m * d, 32);
+            let (y_want, n_want) = l2_normalize_fwd_ref(&x, m, d);
+            let dx_want = l2_normalize_bwd_ref(&x, &n_want, &dy, m, d);
+            for threads in [1usize, 2, 4] {
+                let (y, norms) = l2_normalize_fwd(&x, m, d, threads);
+                assert_eq!(bits(&y), bits(&y_want), "y t={threads}");
+                assert_eq!(bits(&norms), bits(&n_want), "norms t={threads}");
+                let dx = l2_normalize_bwd(&x, &norms, &dy, m, d, threads);
+                assert_eq!(bits(&dx), bits(&dx_want), "dx t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn rows_become_unit_norm() {
+        let x = randn(6 * 16, 33);
+        let (y, norms) = l2_normalize_fwd(&x, 6, 16, 2);
+        for (i, row) in y.chunks(16).enumerate() {
+            let n: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4, "row {i} norm {n}");
+            assert!(norms[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn bwd_matches_finite_difference() {
+        let (m, d) = (3usize, 5usize);
+        let x = randn(m * d, 34);
+        let w = randn(m * d, 35); // cotangent
+        let value = |x_: &[f32]| -> f64 {
+            let (y, _) = l2_normalize_fwd_ref(x_, m, d);
+            y.iter().zip(&w).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        let (_, norms) = l2_normalize_fwd_ref(&x, m, d);
+        let dx = l2_normalize_bwd_ref(&x, &norms, &w, m, d);
+        let h = 1e-3f32;
+        for idx in 0..m * d {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[idx] += h;
+            xm[idx] -= h;
+            let num = (value(&xp) - value(&xm)) / (2.0 * h as f64);
+            assert!(
+                (num - dx[idx] as f64).abs() < 2e-2 * num.abs().max(1.0),
+                "dx[{idx}] {num} vs {}",
+                dx[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn zero_row_does_not_nan() {
+        let x = vec![0.0f32; 4];
+        let (y, norms) = l2_normalize_fwd(&x, 1, 4, 1);
+        assert!(y.iter().all(|v| v.is_finite()));
+        let dx = l2_normalize_bwd(&x, &norms, &[1.0, 1.0, 1.0, 1.0], 1, 4, 1);
+        assert!(dx.iter().all(|v| v.is_finite()));
+    }
+}

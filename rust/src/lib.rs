@@ -4,12 +4,15 @@
 //!
 //! Architecture (three layers, see `DESIGN.md`):
 //! * **L1/L2** (build time, Python): Pallas contrastive kernels + JAX CLIP
-//!   model, AOT-lowered to HLO-text artifacts by `python/compile/aot.py`.
+//!   model, AOT-lowered to HLO-text artifacts by `python/compile/aot.py` —
+//!   OR, with the default native backend, the pure-Rust [`kernels`] and
+//!   the embedding-table model of [`runtime::NativeBackend`] (no Python,
+//!   no artifacts; DESIGN.md §10).
 //! * **L3** (this crate): the distributed coordinator — worker topology,
 //!   the paper's gradient-reduction strategy, inner-LR (γ) schedules,
 //!   temperature rules v0–v3, optimizers, interconnect cost accounting,
-//!   evaluation and the experiment harness. Python never runs here; the
-//!   binary loads `artifacts/*.hlo.txt` through PJRT (`xla` crate).
+//!   evaluation and the experiment harness, all written against the
+//!   [`runtime::ComputeBackend`] trait (`--backend native|pjrt|auto`).
 //!
 //! Entry points: [`coordinator::Trainer`] for training (with periodic
 //! snapshots and `--resume` through [`ckpt`], DESIGN.md §9),
@@ -22,6 +25,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod kernels;
 pub mod optim;
 pub mod output;
 pub mod runtime;

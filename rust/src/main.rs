@@ -63,6 +63,10 @@ fn print_help() {
          COMMANDS:\n\
            train       run one training configuration\n\
              --algo <id>        {algos}\n\
+             --backend <id>     native|pjrt|auto (default auto; native needs\n\
+                                no artifacts and runs everywhere)\n\
+             --preset <id>      native model preset tiny|small|medium|base\n\
+             --workers K --batch B --kernel-threads T   native topology\n\
              --bundle <dir>     artifact bundle (default artifacts/tiny_k2_b8)\n\
              --config <file>    load a configs/*.toml preset instead of flags\n\
              --steps N --seed S --optimizer adamw|lamb|lion|sgdm\n\
@@ -91,8 +95,16 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
         TrainConfig::new(args.str_or("bundle", "artifacts/tiny_k2_b8"), algo)
     };
     if let Some(b) = args.get("bundle") {
-        cfg.artifact_dir = b.to_string();
+        cfg.set_bundle(b);
     }
+    // backend typos exit non-zero with the valid choices listed
+    cfg.backend = fastclip::runtime::BackendKind::from_id(
+        &args.str_or("backend", cfg.backend.id()),
+    )?;
+    cfg.preset = args.str_or("preset", &cfg.preset);
+    cfg.n_workers = args.usize_or("workers", cfg.n_workers)?;
+    cfg.local_batch = args.usize_or("batch", cfg.local_batch)?;
+    cfg.kernel_threads = args.usize_or("kernel-threads", cfg.kernel_threads)?;
     cfg.steps = args.u32_or("steps", cfg.steps)?;
     cfg.iters_per_epoch = args.u32_or("iters-per-epoch", cfg.iters_per_epoch)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
@@ -142,17 +154,20 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
 
 fn train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
+    let trainer = Trainer::new(cfg.clone())?;
+    let m = trainer.manifest();
     eprintln!(
-        "training {} on {} for {} steps (K={} workers, modeled {}x{} {})",
+        "training {} via the {} backend ({}) for {} steps (K={} workers, modeled {}x{} {})",
         cfg.algorithm.name(),
-        cfg.artifact_dir,
+        cfg.resolved_backend().id(),
+        if m.native { format!("preset {}", m.preset) } else { cfg.artifact_dir.clone() },
         cfg.steps,
-        Manifest::load(&cfg.artifact_dir)?.k_workers,
+        m.k_workers,
         cfg.nodes,
         cfg.gpus_per_node,
         cfg.network.id(),
     );
-    let result = Trainer::new(cfg.clone())?.run()?;
+    let result = trainer.run()?;
 
     let losses: Vec<f32> = result.history.iter().map(|h| h.loss).collect();
     println!("loss curve: {}", sparkline(&losses, 48));
@@ -205,8 +220,8 @@ fn train(args: &Args) -> Result<()> {
 }
 
 fn eval(args: &Args) -> Result<()> {
-    let bundle = args.str_or("bundle", "artifacts/tiny_k2_b8");
-    let manifest = Manifest::load(&bundle)?;
+    let cfg = build_config(args)?;
+    let manifest = cfg.load_manifest()?;
     let params = match args.get("params") {
         Some(path) => {
             let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
@@ -215,12 +230,15 @@ fn eval(args: &Args) -> Result<()> {
         }
         None => manifest.load_init_params()?,
     };
-    let mut rt = fastclip::runtime::WorkerRuntime::load(&manifest, Some("gcl"))?;
-    let mut data_cfg = fastclip::config::DataConfig::default();
-    data_cfg.n_eval = args.usize_or("n-eval", 256)?;
-    data_cfg.n_classes = args.usize_or("n-classes", data_cfg.n_classes)?;
+    let mut rt =
+        fastclip::runtime::create_backend(cfg.backend, &manifest, Some("gcl"), cfg.kernel_threads)?;
+    let data_cfg = fastclip::config::DataConfig {
+        n_eval: args.usize_or("n-eval", 256)?,
+        n_classes: args.usize_or("n-classes", fastclip::config::DataConfig::default().n_classes)?,
+        ..Default::default()
+    };
     let ds = fastclip::data::Dataset::new(data_cfg, manifest.model_dims());
-    let s = fastclip::eval::evaluate(&mut rt, &ds, &params)?;
+    let s = fastclip::eval::evaluate(rt.as_mut(), &ds, &params)?;
     let mut t = Table::new("Evaluation", &["task", "score"]);
     for (name, score) in &s.tasks {
         t.row(vec![name.clone(), format!("{score:.2}")]);

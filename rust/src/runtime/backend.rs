@@ -1,0 +1,179 @@
+//! The compute-backend abstraction (DESIGN.md §10).
+//!
+//! A [`ComputeBackend`] executes the three step phases of the FastCLIP
+//! iteration — `encode`, `phase_g` (the Eq. (1) u-update) and
+//! `step_<variant>` (the surrogate gradient) — for one worker. The
+//! trainer, evaluator and checkpoint subsystem are written against this
+//! trait only; two implementations exist:
+//!
+//! * [`WorkerRuntime`](super::WorkerRuntime) — the PJRT path: loads and
+//!   executes the AOT-lowered HLO artifacts (`--backend pjrt`, requires
+//!   the `pjrt` cargo feature + a built artifact bundle);
+//! * [`NativeBackend`](super::NativeBackend) — the pure-Rust path over
+//!   [`crate::kernels`] (`--backend native`): no artifacts, no Python,
+//!   bitwise deterministic at any kernel thread count.
+//!
+//! `--backend auto` (the default) resolves to `pjrt` when both the
+//! feature and an artifact bundle are present, `native` otherwise.
+
+use anyhow::Result;
+
+use super::Manifest;
+
+/// Temperature inputs for a step call.
+#[derive(Debug, Clone)]
+pub enum TauInput<'a> {
+    /// single global temperature (gcl, gcl_v0, rgcl_g, mbcl)
+    Global(f32),
+    /// gathered per-sample temperatures, each of length Bg (rgcl_i)
+    Individual { tau1g: &'a [f32], tau2g: &'a [f32] },
+}
+
+/// Temperature gradients returned by a step call.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TauGrads {
+    /// scalar dL/dτ (this worker's contribution; SUM-all-reduce it)
+    Global(f32),
+    /// per-LOCAL-sample coordinate gradients (Eq. 9), each of length Bl
+    Individual { tau1: Vec<f32>, tau2: Vec<f32> },
+}
+
+/// Output of one `step_<variant>` execution.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// this worker's gradient contribution, length P (SUM-all-reduce it)
+    pub grad: Vec<f32>,
+    /// this worker's loss contribution (SUM-all-reduce it)
+    pub loss: f32,
+    pub tau: TauGrads,
+}
+
+/// Cumulative executor-side timing, for the Fig. 3 breakdown.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RuntimeTimers {
+    pub encode_s: f64,
+    pub phase_g_s: f64,
+    pub step_s: f64,
+    pub io_s: f64,
+}
+
+impl RuntimeTimers {
+    /// Total time in the three compute phases.
+    pub fn compute_s(&self) -> f64 {
+        self.encode_s + self.phase_g_s + self.step_s
+    }
+}
+
+/// One worker's compute engine. All methods are per-worker local; the
+/// coordinator owns gathering/reduction. Implementations are constructed
+/// inside each worker thread (the PJRT types are `!Send`), so the trait
+/// deliberately has no `Send` bound.
+pub trait ComputeBackend {
+    /// The manifest describing shapes, parameter layout and topology.
+    fn manifest(&self) -> &Manifest;
+
+    /// Stable identifier: "native" or "pjrt".
+    fn backend_id(&self) -> &'static str;
+
+    /// Snapshot of the cumulative phase timers.
+    fn timers(&self) -> RuntimeTimers;
+
+    /// Encode the local batch: (params, images, texts) -> (e1, e2), each
+    /// (Bl × d) row-major, rows L2-normalized.
+    fn encode(&mut self, params: &[f32], images: &[f32], texts: &[i32])
+        -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// The Eq. (1) inner-estimator update for the local rows:
+    /// gathered feats + local u/τ + γ -> (g1, g2, u1_new, u2_new), each Bl.
+    #[allow(clippy::too_many_arguments)]
+    fn phase_g(
+        &mut self,
+        e1g: &[f32],
+        e2g: &[f32],
+        offset: usize,
+        u1: &[f32],
+        u2: &[f32],
+        tau1: &[f32],
+        tau2: &[f32],
+        gamma: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>;
+
+    /// One worker's gradient computation for `variant` — the surrogate
+    /// gradient of DESIGN.md §4 step 3. All outputs are this worker's
+    /// additive contribution; the coordinator SUM-all-reduces them.
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &mut self,
+        variant: &str,
+        params: &[f32],
+        images: &[f32],
+        texts: &[i32],
+        e1g: &[f32],
+        e2g: &[f32],
+        u1g: &[f32],
+        u2g: &[f32],
+        offset: usize,
+        eps: f32,
+        rho: f32,
+        tau: TauInput,
+    ) -> Result<StepOutput>;
+}
+
+/// Which compute backend a run requests (`--backend`, config `backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// pjrt when the feature + an artifact bundle are available,
+    /// native otherwise
+    Auto,
+    /// pure-Rust kernels, no artifacts needed
+    Native,
+    /// PJRT execution of the HLO artifacts (needs `--features pjrt`)
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn all() -> [BackendKind; 3] {
+        [BackendKind::Auto, BackendKind::Native, BackendKind::Pjrt]
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse a CLI/config id; unknown values are an error that lists the
+    /// valid choices (so `--backend` typos exit non-zero, like the `ckpt`
+    /// subcommand).
+    pub fn from_id(id: &str) -> Result<BackendKind> {
+        for b in BackendKind::all() {
+            if b.id() == id {
+                return Ok(b);
+            }
+        }
+        anyhow::bail!("unknown backend '{id}' (expected native|pjrt|auto)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_id_roundtrip() {
+        for b in BackendKind::all() {
+            assert_eq!(BackendKind::from_id(b.id()).unwrap(), b);
+        }
+        let err = BackendKind::from_id("cuda").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("native|pjrt|auto"), "lists valid choices: {msg}");
+    }
+
+    #[test]
+    fn timers_compute_total() {
+        let t = RuntimeTimers { encode_s: 1.0, phase_g_s: 2.0, step_s: 3.0, io_s: 9.0 };
+        assert_eq!(t.compute_s(), 6.0);
+    }
+}

@@ -65,9 +65,45 @@ pub struct Manifest {
     pub seed: u64,
     pub variants: Vec<String>,
     pub executables: Vec<ExecSig>,
+    /// true for synthesized native-backend manifests (DESIGN.md §10):
+    /// no artifact directory, no executables, parameters generated
+    /// deterministically from `seed` instead of read from disk
+    pub native: bool,
 }
 
 impl Manifest {
+    /// Synthesize a manifest for the native CPU backend: preset model
+    /// dims, the native parameter layout, and a `k_workers × local_batch`
+    /// topology — no artifact directory involved (DESIGN.md §10).
+    pub fn native(
+        preset: &str,
+        k_workers: usize,
+        local_batch: usize,
+        seed: u64,
+    ) -> Result<Manifest> {
+        ensure!(k_workers > 0, "k_workers must be > 0");
+        ensure!(local_batch > 0, "local_batch must be > 0");
+        let model = super::native::preset_dims(preset)?;
+        let param_spec = super::native::param_spec(&model);
+        let n_params = param_spec.iter().map(|s| s.size).sum();
+        let manifest = Manifest {
+            dir: PathBuf::new(),
+            preset: preset.to_string(),
+            model,
+            n_params,
+            param_spec,
+            k_workers,
+            local_batch,
+            global_batch: k_workers * local_batch,
+            seed,
+            variants: super::native::VARIANTS.iter().map(|v| v.to_string()).collect(),
+            executables: Vec::new(),
+            native: true,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let j = Json::parse_file(&dir.join("manifest.json"))?;
@@ -122,6 +158,7 @@ impl Manifest {
                 .collect::<Result<_>>()?,
             executables,
             dir,
+            native: false,
         };
         manifest.validate()?;
         Ok(manifest)
@@ -143,14 +180,17 @@ impl Manifest {
             off += seg.size;
         }
         ensure!(off == self.n_params, "param segments cover {off} != n_params {}", self.n_params);
-        for required in ["encode", "phase_g"] {
-            ensure!(self.exec_sig(required).is_some(), "manifest missing executable {required}");
-        }
-        for v in &self.variants {
-            ensure!(
-                self.exec_sig(&format!("step_{v}")).is_some(),
-                "manifest missing executable step_{v}"
-            );
+        // native manifests have no executables — kernels are in-process
+        if !self.native {
+            for required in ["encode", "phase_g"] {
+                ensure!(self.exec_sig(required).is_some(), "manifest missing executable {required}");
+            }
+            for v in &self.variants {
+                ensure!(
+                    self.exec_sig(&format!("step_{v}")).is_some(),
+                    "manifest missing executable step_{v}"
+                );
+            }
         }
         Ok(())
     }
@@ -168,8 +208,13 @@ impl Manifest {
         self.param_spec.iter().map(|s| (s.offset, s.size)).collect()
     }
 
-    /// The deterministic initial parameters written by aot.py.
+    /// The deterministic initial parameters: generated in-process for
+    /// native manifests, read from `init_params.bin` (written by aot.py)
+    /// for artifact bundles.
     pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        if self.native {
+            return Ok(super::native::init_params(self));
+        }
         let path = self.dir.join("init_params.bin");
         let bytes =
             std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
@@ -224,6 +269,38 @@ mod tests {
     }
 
     #[test]
+    fn native_manifest_synthesizes_without_artifacts() {
+        let m = Manifest::native("tiny", 2, 8, 7).unwrap();
+        assert!(m.native);
+        assert_eq!(m.k_workers, 2);
+        assert_eq!(m.local_batch, 8);
+        assert_eq!(m.global_batch, 16);
+        assert_eq!(m.model.d_embed, 64);
+        assert!(m.variants.iter().any(|v| v == "gcl"));
+        assert!(m.variants.iter().any(|v| v == "rgcl_i"));
+        // segments tile the native parameter vector
+        let total: usize = m.segments().iter().map(|(_, l)| l).sum();
+        assert_eq!(total, m.n_params);
+        // deterministic generated init params, correct length
+        let p = m.load_init_params().unwrap();
+        assert_eq!(p.len(), m.n_params);
+        let p2 = Manifest::native("tiny", 2, 8, 7).unwrap().load_init_params().unwrap();
+        assert_eq!(p, p2);
+        // a different seed gives different params
+        let p3 = Manifest::native("tiny", 2, 8, 8).unwrap().load_init_params().unwrap();
+        assert_ne!(p, p3);
+    }
+
+    #[test]
+    fn native_manifest_rejects_bad_topology_and_preset() {
+        assert!(Manifest::native("tiny", 0, 8, 0).is_err());
+        assert!(Manifest::native("tiny", 2, 0, 0).is_err());
+        let err = Manifest::native("gigantic", 2, 8, 0).unwrap_err();
+        assert!(format!("{err}").contains("preset"), "{err}");
+    }
+
+    #[test]
+    #[ignore = "reads an artifact bundle: needs `make artifacts` (JAX toolchain)"]
     fn loads_tiny_bundle() {
         if !bundle_available() {
             eprintln!("skipping: {BUNDLE} not built (run `make artifacts`)");
@@ -245,6 +322,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "reads an artifact bundle: needs `make artifacts` (JAX toolchain)"]
     fn init_params_match_n_params() {
         if !bundle_available() {
             return;
@@ -260,6 +338,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "reads an artifact bundle: needs `make artifacts` (JAX toolchain)"]
     fn signatures_have_expected_shapes() {
         if !bundle_available() {
             return;

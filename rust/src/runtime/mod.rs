@@ -1,27 +1,91 @@
-//! PJRT runtime: loads the HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the L3 hot path.
+//! Compute runtimes behind the [`ComputeBackend`] trait (DESIGN.md §10).
 //!
-//! Python never runs here — after `make artifacts` the Rust binary is
-//! self-contained. Interchange is HLO *text* (xla_extension 0.5.1 rejects
-//! jax≥0.5's 64-bit-id serialized protos; the text parser reassigns ids).
+//! Two engines implement the same `encode` / `phase_g` / `step` surface:
 //!
-//! The `xla` crate types wrap raw PJRT pointers and are neither `Send` nor
-//! `Sync`, so every worker thread owns its own [`WorkerRuntime`] (client +
-//! compiled executables). Parameters are replicated and updated
-//! deterministically on every worker, so no cross-thread buffer sharing is
-//! needed (DESIGN.md §8).
+//! * **native** ([`NativeBackend`]) — pure-Rust kernels
+//!   ([`crate::kernels`]) over a synthesized [`Manifest`]
+//!   ([`Manifest::native`]): no artifacts, no Python, bitwise
+//!   deterministic at any kernel thread count. The default on any machine
+//!   without artifacts.
+//! * **pjrt** ([`WorkerRuntime`]) — loads the HLO-text artifacts produced
+//!   by `python/compile/aot.py` and executes them through PJRT. The `xla`
+//!   crate types wrap raw PJRT pointers and are neither `Send` nor
+//!   `Sync`, so every worker thread owns its own runtime. Builds without
+//!   the `pjrt` cargo feature substitute the in-tree [`pjrt_stub`]:
+//!   marshalling types work, execution fails at client construction with
+//!   an actionable message (DESIGN.md §8). The `pjrt` feature therefore
+//!   only swaps the execution engine — everything above this module is
+//!   backend-agnostic.
+//!
+//! [`create_backend`] constructs the right engine for a resolved
+//! [`BackendKind`]; `BackendKind::Auto` resolves per manifest kind.
 
-//! Builds without the `pjrt` cargo feature substitute the in-tree
-//! [`pjrt_stub`] for the `xla` crate: marshalling types work, execution
-//! fails at client construction with an actionable message. Artifact
-//! bundles are only producible with a working Python/JAX toolchain, so
-//! every test that would execute an artifact skips (or is `#[ignore]`d)
-//! when `artifacts/` is absent.
-
+mod backend;
 mod manifest;
+pub mod native;
 #[cfg(not(feature = "pjrt"))]
 pub mod pjrt_stub;
 mod worker;
 
+use anyhow::Result;
+
+pub use backend::{BackendKind, ComputeBackend, RuntimeTimers, StepOutput, TauGrads, TauInput};
 pub use manifest::{ExecSig, Manifest, ModelInfo, ParamSegment, TensorSig};
-pub use worker::{StepOutput, TauGrads, TauInput, WorkerRuntime};
+pub use native::NativeBackend;
+pub use worker::WorkerRuntime;
+
+/// Construct the compute backend for one worker. `Auto` resolves from the
+/// manifest kind (native manifests run natively, artifact bundles through
+/// PJRT); an explicit kind is honored or errors loudly — a native
+/// manifest cannot execute under PJRT and vice versa (the parameter
+/// layouts differ).
+pub fn create_backend(
+    kind: BackendKind,
+    manifest: &Manifest,
+    variant: Option<&str>,
+    kernel_threads: usize,
+) -> Result<Box<dyn ComputeBackend>> {
+    let resolved = match kind {
+        BackendKind::Auto => {
+            if manifest.native {
+                BackendKind::Native
+            } else {
+                BackendKind::Pjrt
+            }
+        }
+        k => k,
+    };
+    match resolved {
+        BackendKind::Native => Ok(Box::new(NativeBackend::new(manifest, variant, kernel_threads)?)),
+        BackendKind::Pjrt => {
+            anyhow::ensure!(
+                !manifest.native,
+                "--backend pjrt needs an artifact bundle; '{}' is a native manifest \
+                 (use --backend native, or point --bundle at a built artifact dir)",
+                manifest.preset
+            );
+            Ok(Box::new(WorkerRuntime::load(manifest, variant)?))
+        }
+        BackendKind::Auto => unreachable!("resolved above"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_resolves_native_manifest_to_native_backend() {
+        let m = Manifest::native("tiny", 1, 4, 0).unwrap();
+        let b = create_backend(BackendKind::Auto, &m, Some("gcl"), 1).unwrap();
+        assert_eq!(b.backend_id(), "native");
+        assert_eq!(b.manifest().global_batch, 4);
+    }
+
+    #[test]
+    fn pjrt_on_native_manifest_is_an_error() {
+        let m = Manifest::native("tiny", 1, 4, 0).unwrap();
+        let err = create_backend(BackendKind::Pjrt, &m, Some("gcl"), 1).unwrap_err();
+        assert!(format!("{err}").contains("artifact"), "{err}");
+    }
+}

@@ -1,0 +1,784 @@
+//! The native CPU backend (DESIGN.md §10): the full FastCLIP step surface
+//! — `encode`, `phase_g`, `step_<variant>` for every variant of Table 1 —
+//! implemented over the pure-Rust kernels of [`crate::kernels`], with no
+//! artifacts, no Python and no PJRT.
+//!
+//! # Model
+//!
+//! The native model is the embedding-table encoder pair of
+//! [`crate::kernels::encoder`] (patch-mean → linear projection on the
+//! image side; token-table mean on the text side; shared row
+//! L2-normalize). It intentionally replaces the artifact bundle's
+//! transformer towers with something exactly hand-differentiable; the
+//! *algorithm* — Eq. (1) u-estimation, the distributed surrogate gradient
+//! decomposition of `python/compile/losses.py`, the Eq. (8)/(9)/(10)
+//! temperature gradients — is the paper's, unchanged.
+//!
+//! # The surrogate gradient, by hand
+//!
+//! Mirroring `losses.py::_surrogate` term for term: with row weights
+//! `w_i = f'(u_i)` held constant,
+//!
+//! ```text
+//! S = (1/Bg) [ Σ_{i∈local}    w1_i·g1_i(e1_i, E2sp) + w2_i·g2_i(e2_i, E1sp)
+//!            + Σ_{i∈nonlocal} w1_i·ĝ1_i(e1g_i, e2)  + w2_i·ĝ2_i(e2g_i, e1) ]
+//! ```
+//!
+//! where `E*sp` are the gathered embeddings with the local block replaced
+//! by live (recomputed) rows, g is the masked exp row-sum
+//! ([`crate::kernels::softmax`]) and ĝ its no-diag column form. ∂S/∂params
+//! flows through the row kernels' `da` (+ the s_diag path), the local
+//! columns' `db`, and the column kernels' `db`, then back through the
+//! normalize and encoder backward kernels. ∂S/∂τ flows only through the
+//! local *row* calls (each (i, j) pair is counted exactly once across
+//! workers), exactly as the stop-gradient placement in `losses.py`
+//! dictates. A finite-difference oracle in `tests/native_backend.rs` pins
+//! this derivation against [`NativeBackend::surrogate_value`].
+//!
+//! # Determinism
+//!
+//! Every reduction inherits the kernels' fixed summation trees, so one
+//! step is bitwise identical across kernel thread counts and equal to the
+//! scalar-reference composition.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::kernels::{encoder, gemm, norm, resolve_threads, softmax};
+use crate::util::Rng;
+
+use super::backend::{ComputeBackend, RuntimeTimers, StepOutput, TauGrads, TauInput};
+use super::manifest::{Manifest, ModelInfo, ParamSegment};
+
+/// The step variants the native backend implements — all of Table 1.
+pub const VARIANTS: [&str; 5] = ["gcl", "gcl_v0", "rgcl_i", "rgcl_g", "mbcl"];
+
+/// Model dims per preset — mirrors the interface shapes of
+/// `python/compile/model.py::PRESETS` (d_embed, v_patches, v_patch_dim,
+/// t_vocab, t_len); tower widths/depths do not apply to the native model.
+pub fn preset_dims(name: &str) -> Result<ModelInfo> {
+    let (d_embed, v_patches, v_patch_dim, t_vocab, t_len) = match name {
+        "tiny" => (64, 16, 32, 256, 16),
+        "small" => (128, 16, 32, 512, 24),
+        "medium" => (256, 32, 48, 1024, 32),
+        "base" => (512, 49, 64, 4096, 32),
+        other => anyhow::bail!("unknown preset '{other}' (expected tiny|small|medium|base)"),
+    };
+    Ok(ModelInfo { d_embed, v_patches, v_patch_dim, t_vocab, t_len })
+}
+
+/// The native flat-parameter layout: image projection + bias, token
+/// embedding table + bias.
+pub fn param_spec(model: &ModelInfo) -> Vec<ParamSegment> {
+    let d = model.d_embed;
+    let sizes = [
+        ("v.proj", model.v_patch_dim * d),
+        ("v.bias", d),
+        ("t.tok", model.t_vocab * d),
+        ("t.bias", d),
+    ];
+    let mut spec = Vec::with_capacity(sizes.len());
+    let mut off = 0;
+    for (name, size) in sizes {
+        spec.push(ParamSegment { name: name.to_string(), offset: off, size });
+        off += size;
+    }
+    spec
+}
+
+/// Deterministic native init (the aot.py `init_params` analog): the image
+/// projection is fan-in scaled, the token table GPT-style 0.02-std, both
+/// biases zero. Seeded from the manifest so runs are bit-reproducible.
+pub fn init_params(m: &Manifest) -> Vec<f32> {
+    let mut rng = Rng::new(m.seed ^ 0x4E57_1A7E);
+    let mut out = vec![0.0f32; m.n_params];
+    for seg in &m.param_spec {
+        let slice = &mut out[seg.offset..seg.offset + seg.size];
+        match seg.name.as_str() {
+            "v.proj" => {
+                let std = (m.model.v_patch_dim as f32).powf(-0.5);
+                rng.fill_normal(slice, std);
+            }
+            "t.tok" => rng.fill_normal(slice, 0.02),
+            // biases stay zero
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Resolved offsets of the four native parameter leaves.
+#[derive(Debug, Clone, Copy)]
+struct Layout {
+    vproj: (usize, usize),
+    vbias: (usize, usize),
+    ttok: (usize, usize),
+    tbias: (usize, usize),
+}
+
+impl Layout {
+    fn resolve(m: &Manifest) -> Result<Layout> {
+        let find = |name: &str| -> Result<(usize, usize)> {
+            m.param_spec
+                .iter()
+                .find(|s| s.name == name)
+                .map(|s| (s.offset, s.offset + s.size))
+                .ok_or_else(|| anyhow::anyhow!("manifest lacks native parameter leaf '{name}'"))
+        };
+        Ok(Layout {
+            vproj: find("v.proj")?,
+            vbias: find("v.bias")?,
+            ttok: find("t.tok")?,
+            tbias: find("t.bias")?,
+        })
+    }
+}
+
+/// Cached forward activations one step needs for its backward pass.
+struct EncodeCache {
+    xbar: Vec<f32>,
+    pooled1: Vec<f32>,
+    norms1: Vec<f32>,
+    e1: Vec<f32>,
+    pooled2: Vec<f32>,
+    norms2: Vec<f32>,
+    e2: Vec<f32>,
+}
+
+pub struct NativeBackend {
+    manifest: Manifest,
+    layout: Layout,
+    threads: usize,
+    timers: RuntimeTimers,
+}
+
+impl NativeBackend {
+    /// Build a native backend for `manifest` (which must be a native
+    /// manifest — artifact bundles carry a transformer parameter layout
+    /// the native model does not implement). `variant = None` accepts all
+    /// variants; `kernel_threads = 0` auto-sizes.
+    pub fn new(
+        manifest: &Manifest,
+        variant: Option<&str>,
+        kernel_threads: usize,
+    ) -> Result<NativeBackend> {
+        ensure!(
+            manifest.native,
+            "the native backend needs a native manifest (Manifest::native / --backend native); \
+             '{}' is an artifact bundle — use --backend pjrt for it",
+            manifest.preset
+        );
+        if let Some(v) = variant {
+            ensure!(
+                manifest.variants.iter().any(|x| x == v),
+                "variant '{v}' not in bundle {:?}",
+                manifest.variants
+            );
+        }
+        Ok(NativeBackend {
+            layout: Layout::resolve(manifest)?,
+            manifest: manifest.clone(),
+            threads: resolve_threads(kernel_threads),
+            timers: RuntimeTimers::default(),
+        })
+    }
+
+    /// The kernel thread count this backend runs with.
+    pub fn kernel_threads(&self) -> usize {
+        self.threads
+    }
+
+    fn check_encode_inputs(&self, params: &[f32], images: &[f32], texts: &[i32]) -> Result<()> {
+        let m = &self.manifest;
+        let bl = m.local_batch;
+        ensure!(params.len() == m.n_params, "params len {}", params.len());
+        ensure!(images.len() == bl * m.model.v_patches * m.model.v_patch_dim, "images len");
+        ensure!(texts.len() == bl * m.model.t_len, "texts len");
+        let vocab = m.model.t_vocab as i32;
+        ensure!(
+            texts.iter().all(|&t| (0..vocab).contains(&t)),
+            "token id out of vocab range [0, {vocab})"
+        );
+        Ok(())
+    }
+
+    /// Full forward with cached activations (the step's backward needs
+    /// them; `encode` discards everything but e1/e2).
+    fn encode_cached(&self, params: &[f32], images: &[f32], texts: &[i32]) -> EncodeCache {
+        let m = &self.manifest;
+        let (bl, d) = (m.local_batch, m.model.d_embed);
+        let pd = m.model.v_patch_dim;
+        let w = &params[self.layout.vproj.0..self.layout.vproj.1];
+        let bv = &params[self.layout.vbias.0..self.layout.vbias.1];
+        let tok = &params[self.layout.ttok.0..self.layout.ttok.1];
+        let bt = &params[self.layout.tbias.0..self.layout.tbias.1];
+
+        let xbar = encoder::patch_mean(images, bl, m.model.v_patches, pd);
+        let pooled1 = encoder::image_fwd(w, bv, &xbar, bl, pd, d, self.threads);
+        let (e1, norms1) = norm::l2_normalize_fwd(&pooled1, bl, d, self.threads);
+        let pooled2 = encoder::text_fwd(tok, bt, texts, bl, m.model.t_len, m.model.t_vocab, d);
+        let (e2, norms2) = norm::l2_normalize_fwd(&pooled2, bl, d, self.threads);
+        EncodeCache { xbar, pooled1, norms1, e1, pooled2, norms2, e2 }
+    }
+
+    /// The surrogate scalar S whose ∂/∂params is this worker's gradient
+    /// contribution — forward value only, with the gathered inputs and
+    /// u/τ treated as constants (the stop-gradient placement of
+    /// `losses.py`). Public as a finite-difference oracle for the parity
+    /// suite; not part of the training path.
+    #[doc(hidden)]
+    #[allow(clippy::too_many_arguments)]
+    pub fn surrogate_value(
+        &self,
+        variant: &str,
+        params: &[f32],
+        images: &[f32],
+        texts: &[i32],
+        e1g: &[f32],
+        e2g: &[f32],
+        u1g: &[f32],
+        u2g: &[f32],
+        tau1g: &[f32],
+        tau2g: &[f32],
+        offset: usize,
+        eps: f32,
+    ) -> Result<f32> {
+        let m = &self.manifest;
+        let (bl, bg, d) = (m.local_batch, m.global_batch, m.model.d_embed);
+        self.check_encode_inputs(params, images, texts)?;
+        ensure!(offset + bl <= bg, "offset {offset} out of range");
+        let cache = self.encode_cached(params, images, texts);
+        let (e1sp, e2sp) = splice(e1g, e2g, &cache.e1, &cache.e2, offset, bl, d);
+        let bgf = bg as f32;
+        let denom = (bg - 1) as f32;
+        let diag: Vec<isize> = (0..bl).map(|i| (offset + i) as isize).collect();
+        let sd: Vec<f32> = (0..bl)
+            .map(|i| gemm::dot(&cache.e1[i * d..(i + 1) * d], &cache.e2[i * d..(i + 1) * d]))
+            .collect();
+        let u1l = &u1g[offset..offset + bl];
+        let u2l = &u2g[offset..offset + bl];
+        let tau1l = &tau1g[offset..offset + bl];
+        let tau2l = &tau2g[offset..offset + bl];
+        let w1l = weights(variant, u1l, tau1l, eps, bgf);
+        let w2l = weights(variant, u2l, tau2l, eps, bgf);
+        let t = self.threads;
+        let g1 =
+            softmax::masked_exp_rowsum(&cache.e1, &e2sp, &diag, &sd, tau1l, denom, bl, bg, d, t);
+        let g2 =
+            softmax::masked_exp_rowsum(&cache.e2, &e1sp, &diag, &sd, tau2l, denom, bl, bg, d, t);
+        let mut s: f32 = 0.0;
+        for i in 0..bl {
+            s += w1l[i] * g1[i] + w2l[i] * g2[i];
+        }
+        if bg > bl {
+            let nl = nonlocal_indices(bg, bl, offset);
+            let e1nl = gather_rows(e1g, &nl, d);
+            let e2nl = gather_rows(e2g, &nl, d);
+            let sd_nl: Vec<f32> = nl
+                .iter()
+                .map(|&gi| gemm::dot(&e1g[gi * d..(gi + 1) * d], &e2g[gi * d..(gi + 1) * d]))
+                .collect();
+            let no_diag = vec![softmax::NO_DIAG; nl.len()];
+            let u1n: Vec<f32> = nl.iter().map(|&gi| u1g[gi]).collect();
+            let u2n: Vec<f32> = nl.iter().map(|&gi| u2g[gi]).collect();
+            let t1n: Vec<f32> = nl.iter().map(|&gi| tau1g[gi]).collect();
+            let t2n: Vec<f32> = nl.iter().map(|&gi| tau2g[gi]).collect();
+            let w1n = weights(variant, &u1n, &t1n, eps, bgf);
+            let w2n = weights(variant, &u2n, &t2n, eps, bgf);
+            let nn = nl.len();
+            let g1c = softmax::masked_exp_rowsum(
+                &e1nl, &cache.e2, &no_diag, &sd_nl, &t1n, denom, nn, bl, d, t,
+            );
+            let g2c = softmax::masked_exp_rowsum(
+                &e2nl, &cache.e1, &no_diag, &sd_nl, &t2n, denom, nn, bl, d, t,
+            );
+            for i in 0..nl.len() {
+                s += w1n[i] * g1c[i] + w2n[i] * g2c[i];
+            }
+        }
+        Ok(s / bgf)
+    }
+}
+
+/// Row weights f'(u) per loss family (`losses.py::_weights`).
+fn weights(variant: &str, u: &[f32], tau_rows: &[f32], eps: f32, bg: f32) -> Vec<f32> {
+    match variant {
+        "mbcl" => u.iter().map(|&ui| (bg - 1.0) / (1.0 + (bg - 1.0) * ui)).collect(),
+        "gcl_v0" => u.iter().map(|&ui| 1.0 / (eps + ui)).collect(),
+        _ => u.iter().zip(tau_rows).map(|(&ui, &t)| t / (eps + ui)).collect(),
+    }
+}
+
+/// Reported local-mean loss value (`losses.py::_loss_value`), scaled by
+/// 1/K so the SUM over workers is the global mean.
+#[allow(clippy::too_many_arguments)]
+fn local_loss(
+    variant: &str,
+    u1l: &[f32],
+    u2l: &[f32],
+    t1l: &[f32],
+    t2l: &[f32],
+    eps: f32,
+    rho: f32,
+    bg: f32,
+    k_workers: f32,
+) -> f32 {
+    let bl = u1l.len();
+    let mut acc = 0.0f32;
+    for i in 0..bl {
+        acc += match variant {
+            "mbcl" => {
+                (1.0 / bg + (bg - 1.0) / bg * u1l[i]).ln()
+                    + (1.0 / bg + (bg - 1.0) / bg * u2l[i]).ln()
+            }
+            "gcl" | "gcl_v0" => t1l[i] * (eps + u1l[i]).ln() + t2l[i] * (eps + u2l[i]).ln(),
+            // rgcl family carries the +rho margin terms
+            _ => t1l[i] * ((eps + u1l[i]).ln() + rho) + t2l[i] * ((eps + u2l[i]).ln() + rho),
+        };
+    }
+    acc / bl as f32 / k_workers
+}
+
+/// Global indices of the nonlocal rows in the Python `_split_nonlocal`
+/// (rolled) order: offset+bl, …, bg−1, 0, …, offset−1.
+fn nonlocal_indices(bg: usize, bl: usize, offset: usize) -> Vec<usize> {
+    (0..bg - bl).map(|i| (offset + bl + i) % bg).collect()
+}
+
+fn gather_rows(x: &[f32], idx: &[usize], d: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(idx.len() * d);
+    for &i in idx {
+        out.extend_from_slice(&x[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+/// The gathered embeddings with the local block replaced by live rows
+/// (`dynamic_update_slice(sg(eg), e, offset)`).
+#[allow(clippy::too_many_arguments)]
+fn splice(
+    e1g: &[f32],
+    e2g: &[f32],
+    e1: &[f32],
+    e2: &[f32],
+    offset: usize,
+    bl: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut e1sp = e1g.to_vec();
+    let mut e2sp = e2g.to_vec();
+    e1sp[offset * d..(offset + bl) * d].copy_from_slice(e1);
+    e2sp[offset * d..(offset + bl) * d].copy_from_slice(e2);
+    (e1sp, e2sp)
+}
+
+impl ComputeBackend for NativeBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn backend_id(&self) -> &'static str {
+        "native"
+    }
+
+    fn timers(&self) -> RuntimeTimers {
+        self.timers
+    }
+
+    fn encode(
+        &mut self,
+        params: &[f32],
+        images: &[f32],
+        texts: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.check_encode_inputs(params, images, texts)?;
+        let t0 = Instant::now();
+        let cache = self.encode_cached(params, images, texts);
+        self.timers.encode_s += t0.elapsed().as_secs_f64();
+        Ok((cache.e1, cache.e2))
+    }
+
+    fn phase_g(
+        &mut self,
+        e1g: &[f32],
+        e2g: &[f32],
+        offset: usize,
+        u1: &[f32],
+        u2: &[f32],
+        tau1: &[f32],
+        tau2: &[f32],
+        gamma: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let m = &self.manifest;
+        let (bl, bg, d) = (m.local_batch, m.global_batch, m.model.d_embed);
+        ensure!(e1g.len() == bg * d && e2g.len() == bg * d, "gathered feats len");
+        ensure!(u1.len() == bl && u2.len() == bl, "u len");
+        ensure!(tau1.len() == bl && tau2.len() == bl, "tau len");
+        ensure!(offset + bl <= bg, "offset {offset} out of range");
+
+        let t0 = Instant::now();
+        let e1l = &e1g[offset * d..(offset + bl) * d];
+        let e2l = &e2g[offset * d..(offset + bl) * d];
+        let diag: Vec<isize> = (0..bl).map(|i| (offset + i) as isize).collect();
+        // s_diag: the positive-pair similarity <e1_i, e2_i>
+        let sd: Vec<f32> = (0..bl)
+            .map(|i| {
+                gemm::dot(
+                    &e1l[i * d..(i + 1) * d],
+                    &e2g[(offset + i) * d..(offset + i + 1) * d],
+                )
+            })
+            .collect();
+        let denom = (bg - 1) as f32;
+        let t = self.threads;
+        let g1 = softmax::masked_exp_rowsum(e1l, e2g, &diag, &sd, tau1, denom, bl, bg, d, t);
+        let g2 = softmax::masked_exp_rowsum(e2l, e1g, &diag, &sd, tau2, denom, bl, bg, d, t);
+        let mix = |u: &f32, g: &f32| (1.0 - gamma) * *u + gamma * *g;
+        let u1n: Vec<f32> = u1.iter().zip(&g1).map(|(u, g)| mix(u, g)).collect();
+        let u2n: Vec<f32> = u2.iter().zip(&g2).map(|(u, g)| mix(u, g)).collect();
+        self.timers.phase_g_s += t0.elapsed().as_secs_f64();
+        Ok((g1, g2, u1n, u2n))
+    }
+
+    fn step(
+        &mut self,
+        variant: &str,
+        params: &[f32],
+        images: &[f32],
+        texts: &[i32],
+        e1g: &[f32],
+        e2g: &[f32],
+        u1g: &[f32],
+        u2g: &[f32],
+        offset: usize,
+        eps: f32,
+        rho: f32,
+        tau: TauInput,
+    ) -> Result<StepOutput> {
+        let m = &self.manifest;
+        let (bl, bg, d, p) = (m.local_batch, m.global_batch, m.model.d_embed, m.n_params);
+        ensure!(VARIANTS.contains(&variant), "unknown step variant '{variant}'");
+        self.check_encode_inputs(params, images, texts)?;
+        ensure!(e1g.len() == bg * d && e2g.len() == bg * d, "gathered feats len");
+        ensure!(u1g.len() == bg && u2g.len() == bg, "gathered u len");
+        ensure!(offset + bl <= bg, "offset {offset} out of range");
+        let individual = match &tau {
+            TauInput::Global(_) => {
+                ensure!(variant != "rgcl_i", "rgcl_i needs TauInput::Individual");
+                false
+            }
+            TauInput::Individual { tau1g, tau2g } => {
+                ensure!(variant == "rgcl_i", "{variant} takes a global tau");
+                ensure!(tau1g.len() == bg && tau2g.len() == bg, "gathered tau len");
+                true
+            }
+        };
+        let (tau1g_vec, tau2g_vec): (Vec<f32>, Vec<f32>) = match &tau {
+            TauInput::Global(t) => (vec![*t; bg], vec![*t; bg]),
+            TauInput::Individual { tau1g, tau2g } => (tau1g.to_vec(), tau2g.to_vec()),
+        };
+
+        let t0 = Instant::now();
+        let threads = self.threads;
+        let bgf = bg as f32;
+        let k = m.k_workers;
+        let denom = (bg - 1) as f32;
+
+        // ---- live forward + splice --------------------------------------
+        let cache = self.encode_cached(params, images, texts);
+        let (e1sp, e2sp) = splice(e1g, e2g, &cache.e1, &cache.e2, offset, bl, d);
+
+        let u1l = &u1g[offset..offset + bl];
+        let u2l = &u2g[offset..offset + bl];
+        let tau1l = &tau1g_vec[offset..offset + bl];
+        let tau2l = &tau2g_vec[offset..offset + bl];
+        let w1l = weights(variant, u1l, tau1l, eps, bgf);
+        let w2l = weights(variant, u2l, tau2l, eps, bgf);
+        let gbar1: Vec<f32> = w1l.iter().map(|w| w / bgf).collect();
+        let gbar2: Vec<f32> = w2l.iter().map(|w| w / bgf).collect();
+
+        let diag: Vec<isize> = (0..bl).map(|i| (offset + i) as isize).collect();
+        let sd: Vec<f32> = (0..bl)
+            .map(|i| gemm::dot(&cache.e1[i * d..(i + 1) * d], &cache.e2[i * d..(i + 1) * d]))
+            .collect();
+
+        // ---- row part: local rows × all columns -------------------------
+        let g1row = softmax::masked_exp_rowsum(
+            &cache.e1, &e2sp, &diag, &sd, tau1l, denom, bl, bg, d, threads,
+        );
+        let g2row = softmax::masked_exp_rowsum(
+            &cache.e2, &e1sp, &diag, &sd, tau2l, denom, bl, bg, d, threads,
+        );
+
+        let mut de1 = vec![0.0f32; bl * d];
+        let mut de2 = vec![0.0f32; bl * d];
+
+        // Only the LOCAL columns of b are live (the rest of e*sp is
+        // stop-grad), so the candidate-side backward runs over just the
+        // local block — b = live e*, column indices shifted by −offset
+        // (the per-element i-ascending sums are unchanged, so this is
+        // bitwise equal to slicing a full-width bwd_col, at 1/K the work)
+        let local_diag: Vec<isize> = (0..bl as isize).collect();
+
+        // side 1: a = e1 (live), b = e2sp (local columns live)
+        let (da1, dtau1) = softmax::masked_exp_rowsum_bwd_row(
+            &cache.e1, &e2sp, &diag, &sd, tau1l, &gbar1, denom, bl, bg, d, threads,
+        );
+        let db1 = softmax::masked_exp_rowsum_bwd_col(
+            &cache.e1, &cache.e2, &local_diag, &sd, tau1l, &gbar1, denom, bl, bl, d, threads,
+        );
+        add_assign(&mut de1, &da1);
+        add_assign(&mut de2, &db1);
+        // side 2: a = e2 (live), b = e1sp
+        let (da2, dtau2) = softmax::masked_exp_rowsum_bwd_row(
+            &cache.e2, &e1sp, &diag, &sd, tau2l, &gbar2, denom, bl, bg, d, threads,
+        );
+        let db2 = softmax::masked_exp_rowsum_bwd_col(
+            &cache.e2, &cache.e1, &local_diag, &sd, tau2l, &gbar2, denom, bl, bl, d, threads,
+        );
+        add_assign(&mut de2, &da2);
+        add_assign(&mut de1, &db2);
+
+        // s_diag path: sd_i = <e1_i, e2_i>, both live, shared by both
+        // sides — dsd_i = −(ḡ_i/τ_i)·g_i from each
+        for i in 0..bl {
+            let dsd = -(gbar1[i] / tau1l[i]) * g1row[i] - (gbar2[i] / tau2l[i]) * g2row[i];
+            let e1row = &cache.e1[i * d..(i + 1) * d];
+            let e2row = &cache.e2[i * d..(i + 1) * d];
+            for q in 0..d {
+                de1[i * d + q] += dsd * e2row[q];
+                de2[i * d + q] += dsd * e1row[q];
+            }
+        }
+
+        // ---- column part: nonlocal rows × local columns -----------------
+        if bg > bl {
+            let nl = nonlocal_indices(bg, bl, offset);
+            let e1nl = gather_rows(e1g, &nl, d);
+            let e2nl = gather_rows(e2g, &nl, d);
+            let sd_nl: Vec<f32> = nl
+                .iter()
+                .map(|&gi| gemm::dot(&e1g[gi * d..(gi + 1) * d], &e2g[gi * d..(gi + 1) * d]))
+                .collect();
+            let no_diag = vec![softmax::NO_DIAG; nl.len()];
+            let u1n: Vec<f32> = nl.iter().map(|&gi| u1g[gi]).collect();
+            let u2n: Vec<f32> = nl.iter().map(|&gi| u2g[gi]).collect();
+            let t1n: Vec<f32> = nl.iter().map(|&gi| tau1g_vec[gi]).collect();
+            let t2n: Vec<f32> = nl.iter().map(|&gi| tau2g_vec[gi]).collect();
+            let w1n = weights(variant, &u1n, &t1n, eps, bgf);
+            let w2n = weights(variant, &u2n, &t2n, eps, bgf);
+            let gbar1n: Vec<f32> = w1n.iter().map(|w| w / bgf).collect();
+            let gbar2n: Vec<f32> = w2n.iter().map(|w| w / bgf).collect();
+            let nn = nl.len();
+            let db1c = softmax::masked_exp_rowsum_bwd_col(
+                &e1nl, &cache.e2, &no_diag, &sd_nl, &t1n, &gbar1n, denom, nn, bl, d, threads,
+            );
+            add_assign(&mut de2, &db1c);
+            let db2c = softmax::masked_exp_rowsum_bwd_col(
+                &e2nl, &cache.e1, &no_diag, &sd_nl, &t2n, &gbar2n, denom, nn, bl, d, threads,
+            );
+            add_assign(&mut de1, &db2c);
+        }
+
+        // ---- backprop through normalize + encoders ----------------------
+        let dpooled1 = norm::l2_normalize_bwd(&cache.pooled1, &cache.norms1, &de1, bl, d, threads);
+        let (dw, dbv) =
+            encoder::image_bwd(&cache.xbar, &dpooled1, bl, m.model.v_patch_dim, d, threads);
+        let dpooled2 = norm::l2_normalize_bwd(&cache.pooled2, &cache.norms2, &de2, bl, d, threads);
+        let (dtok, dbt) =
+            encoder::text_bwd(texts, &dpooled2, bl, m.model.t_len, m.model.t_vocab, d);
+
+        let mut grad = vec![0.0f32; p];
+        grad[self.layout.vproj.0..self.layout.vproj.1].copy_from_slice(&dw);
+        grad[self.layout.vbias.0..self.layout.vbias.1].copy_from_slice(&dbv);
+        grad[self.layout.ttok.0..self.layout.ttok.1].copy_from_slice(&dtok);
+        grad[self.layout.tbias.0..self.layout.tbias.1].copy_from_slice(&dbt);
+
+        // ---- loss + temperature gradients -------------------------------
+        let loss = local_loss(variant, u1l, u2l, tau1l, tau2l, eps, rho, bgf, k as f32);
+        let tau_out = match variant {
+            "gcl" => TauGrads::Global(0.0),
+            "gcl_v0" | "mbcl" => {
+                TauGrads::Global(dtau1.iter().sum::<f32>() + dtau2.iter().sum::<f32>())
+            }
+            "rgcl_g" => {
+                // Eq. (10): per-worker log terms + the 2ρ constant split
+                // across workers + the exp-path τ gradient
+                let mut log_terms = 0.0f32;
+                for i in 0..bl {
+                    log_terms += (eps + u1l[i]).ln() + (eps + u2l[i]).ln();
+                }
+                TauGrads::Global(
+                    log_terms / bgf
+                        + 2.0 * rho / k as f32
+                        + dtau1.iter().sum::<f32>()
+                        + dtau2.iter().sum::<f32>(),
+                )
+            }
+            _ => {
+                debug_assert!(individual);
+                // Eq. (9), per local sample: the surrogate's dτ carries
+                // the 1/Bg batch scale — rescale to the per-sample
+                // estimator (see losses.py)
+                let tau1v: Vec<f32> = (0..bl)
+                    .map(|i| (eps + u1l[i]).ln() + rho + bgf * dtau1[i])
+                    .collect();
+                let tau2v: Vec<f32> = (0..bl)
+                    .map(|i| (eps + u2l[i]).ln() + rho + bgf * dtau2[i])
+                    .collect();
+                TauGrads::Individual { tau1: tau1v, tau2: tau2v }
+            }
+        };
+        self.timers.step_s += t0.elapsed().as_secs_f64();
+        Ok(StepOutput { grad, loss, tau: tau_out })
+    }
+}
+
+fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a += *b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend(k: usize, bl: usize) -> NativeBackend {
+        let m = Manifest::native("tiny", k, bl, 3).unwrap();
+        NativeBackend::new(&m, Some("gcl"), 1).unwrap()
+    }
+
+    fn demo_inputs(m: &Manifest, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+        let params = m.load_init_params().unwrap();
+        let mut rng = Rng::new(seed);
+        let mut images = vec![0.0; m.local_batch * m.model.v_patches * m.model.v_patch_dim];
+        rng.fill_normal(&mut images, 1.0);
+        let texts: Vec<i32> = (0..m.local_batch * m.model.t_len)
+            .map(|_| rng.below(m.model.t_vocab) as i32)
+            .collect();
+        (params, images, texts)
+    }
+
+    #[test]
+    fn encode_produces_normalized_embeddings() {
+        let mut rt = backend(2, 8);
+        let m = rt.manifest().clone();
+        let (params, images, texts) = demo_inputs(&m, 7);
+        let (e1, e2) = rt.encode(&params, &images, &texts).unwrap();
+        assert_eq!(e1.len(), m.local_batch * m.model.d_embed);
+        for row in e1.chunks(m.model.d_embed).chain(e2.chunks(m.model.d_embed)) {
+            let n: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-3, "norm {n}");
+        }
+        let (e1b, _) = rt.encode(&params, &images, &texts).unwrap();
+        assert_eq!(e1, e1b, "deterministic");
+        assert!(rt.timers().encode_s > 0.0);
+    }
+
+    #[test]
+    fn phase_g_gamma_one_equals_g() {
+        let mut rt = backend(2, 8);
+        let m = rt.manifest().clone();
+        let (params, images, texts) = demo_inputs(&m, 7);
+        let (e1, e2) = rt.encode(&params, &images, &texts).unwrap();
+        let e1g = [e1.clone(), e1.clone()].concat();
+        let e2g = [e2.clone(), e2.clone()].concat();
+        let bl = m.local_batch;
+        let (u1, u2) = (vec![0.5; bl], vec![0.5; bl]);
+        let tau = vec![0.05; bl];
+        let (g1, _g2, u1n, u2n) = rt.phase_g(&e1g, &e2g, 0, &u1, &u2, &tau, &tau, 1.0).unwrap();
+        assert_eq!(g1, u1n, "gamma = 1: u_new == g");
+        assert!(u2n.iter().all(|v| v.is_finite()));
+        assert!(g1.iter().all(|&v| v > 0.0), "exp-sums are positive");
+        let (g1b, _, u1b, _) = rt.phase_g(&e1g, &e2g, 0, &u1, &u2, &tau, &tau, 0.25).unwrap();
+        for i in 0..bl {
+            let want = 0.75 * 0.5 + 0.25 * g1b[i];
+            assert!((u1b[i] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn step_all_variants_run_and_shapes_match() {
+        let mut rt = {
+            let m = Manifest::native("tiny", 2, 8, 3).unwrap();
+            NativeBackend::new(&m, None, 1).unwrap()
+        };
+        let m = rt.manifest().clone();
+        let (params, images, texts) = demo_inputs(&m, 11);
+        let (e1, e2) = rt.encode(&params, &images, &texts).unwrap();
+        let e1g = [e1.clone(), e1.clone()].concat();
+        let e2g = [e2.clone(), e2.clone()].concat();
+        let bg = m.global_batch;
+        let (u1g, u2g) = (vec![0.8; bg], vec![0.8; bg]);
+        let taus: Vec<f32> = (0..bg).map(|i| 0.04 + 0.001 * i as f32).collect();
+        for variant in VARIANTS {
+            let tau = if variant == "rgcl_i" {
+                TauInput::Individual { tau1g: &taus, tau2g: &taus }
+            } else {
+                TauInput::Global(0.05)
+            };
+            let out = rt
+                .step(variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-8, 6.5, tau)
+                .unwrap_or_else(|e| panic!("{variant}: {e:#}"));
+            assert_eq!(out.grad.len(), m.n_params, "{variant}");
+            assert!(out.loss.is_finite(), "{variant}");
+            let gnorm: f32 = out.grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+            assert!(gnorm > 0.0 && gnorm.is_finite(), "{variant}: grad norm {gnorm}");
+            match (variant, &out.tau) {
+                ("gcl", TauGrads::Global(g)) => assert_eq!(*g, 0.0, "gcl has no tau grad"),
+                ("rgcl_i", TauGrads::Individual { tau1, tau2 }) => {
+                    assert_eq!(tau1.len(), m.local_batch);
+                    assert_eq!(tau2.len(), m.local_batch);
+                }
+                (_, TauGrads::Global(g)) => assert!(g.is_finite(), "{variant}"),
+                _ => panic!("{variant}: wrong tau grad kind"),
+            }
+        }
+    }
+
+    #[test]
+    fn step_rejects_wrong_tau_kind_and_variant() {
+        let mut rt = backend(2, 8);
+        let m = rt.manifest().clone();
+        let (params, images, texts) = demo_inputs(&m, 5);
+        let bg = m.global_batch;
+        let d = m.model.d_embed;
+        let feats = vec![0.1; bg * d];
+        let u = vec![0.5; bg];
+        let t = vec![0.05; bg];
+        let r = rt.step(
+            "gcl", &params, &images, &texts, &feats, &feats, &u, &u, 0, 1e-14, 0.0,
+            TauInput::Individual { tau1g: &t, tau2g: &t },
+        );
+        assert!(r.is_err());
+        let r = rt.step(
+            "nonsense", &params, &images, &texts, &feats, &feats, &u, &u, 0, 1e-14, 0.0,
+            TauInput::Global(0.05),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn new_rejects_artifact_manifest_and_unknown_variant() {
+        let m = Manifest::native("tiny", 2, 8, 0).unwrap();
+        assert!(NativeBackend::new(&m, Some("not_a_variant"), 1).is_err());
+        let mut art = m.clone();
+        art.native = false;
+        // artifact manifests need executables, which this one lacks — but
+        // NativeBackend must reject it on kind, not on a missing file
+        let err = NativeBackend::new(&art, Some("gcl"), 1).unwrap_err();
+        assert!(format!("{err}").contains("native"), "{err}");
+    }
+
+    #[test]
+    fn nonlocal_indices_roll_like_python() {
+        // bg=16, bl=8, offset=8 -> 0..8 ; offset=0 -> 8..16
+        assert_eq!(nonlocal_indices(16, 8, 8), (0..8).collect::<Vec<_>>());
+        assert_eq!(nonlocal_indices(16, 8, 0), (8..16).collect::<Vec<_>>());
+        // K=4 middle rank rolls around the end
+        assert_eq!(nonlocal_indices(8, 2, 4), vec![6, 7, 0, 1, 2, 3]);
+    }
+}

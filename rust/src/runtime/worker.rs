@@ -15,44 +15,8 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 #[cfg(not(feature = "pjrt"))]
 use super::pjrt_stub as xla;
 
+use super::backend::{ComputeBackend, RuntimeTimers, StepOutput, TauGrads, TauInput};
 use super::manifest::Manifest;
-
-/// Temperature inputs for a step call.
-#[derive(Debug, Clone)]
-pub enum TauInput<'a> {
-    /// single global temperature (gcl, gcl_v0, rgcl_g, mbcl)
-    Global(f32),
-    /// gathered per-sample temperatures, each of length Bg (rgcl_i)
-    Individual { tau1g: &'a [f32], tau2g: &'a [f32] },
-}
-
-/// Temperature gradients returned by a step call.
-#[derive(Debug, Clone, PartialEq)]
-pub enum TauGrads {
-    /// scalar dL/dτ (this worker's contribution; SUM-all-reduce it)
-    Global(f32),
-    /// per-LOCAL-sample coordinate gradients (Eq. 9), each of length Bl
-    Individual { tau1: Vec<f32>, tau2: Vec<f32> },
-}
-
-/// Output of one `step_<variant>` execution.
-#[derive(Debug, Clone)]
-pub struct StepOutput {
-    /// this worker's gradient contribution, length P (SUM-all-reduce it)
-    pub grad: Vec<f32>,
-    /// this worker's loss contribution (SUM-all-reduce it)
-    pub loss: f32,
-    pub tau: TauGrads,
-}
-
-/// Cumulative executor-side timing, for the Fig. 3 breakdown.
-#[derive(Debug, Default, Clone, Copy)]
-pub struct RuntimeTimers {
-    pub encode_s: f64,
-    pub phase_g_s: f64,
-    pub step_s: f64,
-    pub io_s: f64,
-}
 
 pub struct WorkerRuntime {
     manifest: Manifest,
@@ -291,6 +255,66 @@ impl WorkerRuntime {
     }
 }
 
+/// The PJRT path seen through the backend abstraction: pure delegation to
+/// the inherent methods (which keep their concrete signatures for the
+/// artifact-gated tests and tools).
+impl ComputeBackend for WorkerRuntime {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn backend_id(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn timers(&self) -> RuntimeTimers {
+        self.timers
+    }
+
+    fn encode(
+        &mut self,
+        params: &[f32],
+        images: &[f32],
+        texts: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        WorkerRuntime::encode(self, params, images, texts)
+    }
+
+    fn phase_g(
+        &mut self,
+        e1g: &[f32],
+        e2g: &[f32],
+        offset: usize,
+        u1: &[f32],
+        u2: &[f32],
+        tau1: &[f32],
+        tau2: &[f32],
+        gamma: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        WorkerRuntime::phase_g(self, e1g, e2g, offset, u1, u2, tau1, tau2, gamma)
+    }
+
+    fn step(
+        &mut self,
+        variant: &str,
+        params: &[f32],
+        images: &[f32],
+        texts: &[i32],
+        e1g: &[f32],
+        e2g: &[f32],
+        u1g: &[f32],
+        u2g: &[f32],
+        offset: usize,
+        eps: f32,
+        rho: f32,
+        tau: TauInput,
+    ) -> Result<StepOutput> {
+        WorkerRuntime::step(
+            self, variant, params, images, texts, e1g, e2g, u1g, u2g, offset, eps, rho, tau,
+        )
+    }
+}
+
 fn wrap_xla(e: xla::Error) -> anyhow::Error {
     anyhow!("xla: {e}")
 }
@@ -358,6 +382,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build"]
     fn encode_produces_normalized_embeddings() {
         let Some(mut rt) = runtime(Some("gcl")) else { return };
         let m = rt.manifest().clone();
@@ -374,6 +399,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build"]
     fn phase_g_gamma_one_equals_g() {
         let Some(mut rt) = runtime(Some("gcl")) else { return };
         let m = rt.manifest().clone();
@@ -400,6 +426,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build"]
     fn step_gcl_runs_and_shapes_match() {
         let Some(mut rt) = runtime(Some("gcl")) else { return };
         let m = rt.manifest().clone();
@@ -421,6 +448,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build"]
     fn step_rejects_wrong_tau_kind() {
         let Some(mut rt) = runtime(Some("gcl")) else { return };
         let m = rt.manifest().clone();
@@ -436,6 +464,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build"]
     fn load_rejects_unknown_variant() {
         if !std::path::Path::new(BUNDLE).join("manifest.json").exists() {
             return;

@@ -11,9 +11,9 @@
 //! collectives' bit-exact reduction order; the sharded strategy applies
 //! per-chunk optimizers), with deterministic pseudo-gradients standing in
 //! for the HLO step graphs, and goes through the real checkpoint
-//! writer/reader. End-to-end `Trainer` resume tests run too when the
-//! artifact bundle is built (they skip gracefully otherwise, like every
-//! artifact-dependent test).
+//! writer/reader. End-to-end `Trainer` resume tests run unconditionally
+//! on the native backend (DESIGN.md §10) — real worker threads, real
+//! collectives, real step compute, no artifacts.
 
 use std::path::{Path, PathBuf};
 
@@ -408,22 +408,14 @@ fn elastic_resume_grows_world() {
 }
 
 // ---------------------------------------------------------------------
-// End-to-end Trainer resume (needs the artifact bundle + pjrt runtime;
-// skips gracefully otherwise, like every artifact-executing test).
+// End-to-end Trainer resume on the native backend (DESIGN.md §10):
+// runs unconditionally — no artifacts, no pjrt feature.
 // ---------------------------------------------------------------------
 
-const BUNDLE: &str = "artifacts/tiny_k2_b8";
-
-fn have_bundle() -> bool {
-    let ok = Path::new(BUNDLE).join("manifest.json").exists();
-    if !ok {
-        eprintln!("skipping: {BUNDLE} not built (run `make artifacts`)");
-    }
-    ok
-}
-
 fn trainer_cfg(algo: Algorithm, steps: u32) -> TrainConfig {
-    let mut cfg = TrainConfig::new(BUNDLE, algo);
+    let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", algo);
+    cfg.backend = fastclip::runtime::BackendKind::Native;
+    cfg.kernel_threads = 1;
     cfg.steps = steps;
     cfg.iters_per_epoch = 4;
     cfg.data.n_train = 64;
@@ -435,11 +427,7 @@ fn trainer_cfg(algo: Algorithm, steps: u32) -> TrainConfig {
 }
 
 #[test]
-#[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build (see rust/Cargo.toml)"]
 fn trainer_resume_bitwise_all_variants_and_reduces() {
-    if !have_bundle() {
-        return;
-    }
     use fastclip::comm::{ReduceAlgo, ReduceStrategy};
     let (n, m) = (6u32, 4u32);
     for algo in ALGOS {
@@ -483,13 +471,8 @@ fn trainer_resume_bitwise_all_variants_and_reduces() {
 }
 
 #[test]
-#[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build (see rust/Cargo.toml)"]
 fn trainer_elastic_resume_k2_to_k1() {
-    // K=2 bundle writes the checkpoint; K=1 bundle resumes it (elastic)
-    const BUNDLE_K1: &str = "artifacts/tiny_k1_b16";
-    if !have_bundle() || !Path::new(BUNDLE_K1).join("manifest.json").exists() {
-        return;
-    }
+    // K=2 topology writes the checkpoint; K=1 resumes it (elastic)
     let root = tmp_root("trainer_elastic");
     // schedules must span the same horizon as the resuming run (the
     // hyper echo in the manifest enforces this)
@@ -500,7 +483,7 @@ fn trainer_elastic_resume_k2_to_k1() {
     Trainer::new(leg1).unwrap().run().unwrap();
 
     let mut leg2 = trainer_cfg(Algorithm::FastClipV3, 8);
-    leg2.artifact_dir = BUNDLE_K1.to_string();
+    leg2.set_bundle("artifacts/tiny_k1_b16"); // native K=1, Bl=16
     leg2.ckpt_dir = Some(root.to_string_lossy().into_owned());
     leg2.resume = Some("latest".to_string());
     let r = Trainer::new(leg2).unwrap().run().unwrap();

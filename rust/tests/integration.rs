@@ -5,12 +5,11 @@
 //! reduction algorithm (naive / ring / sharded reduce-scatter) yields
 //! bit-identical replicated parameters.
 //!
-//! Tests that execute HLO artifacts are `#[ignore]`d: the bundles are
-//! produced by `python/compile/aot.py` (`make artifacts`), which needs a
-//! JAX toolchain, and executing them needs the `pjrt` cargo feature.
-//! They additionally skip gracefully when the bundles are absent, so
-//! `cargo test -- --ignored` is safe everywhere. The collective and
-//! optimizer-sharding tests below run unconditionally.
+//! Everything here runs unconditionally on the native backend
+//! (DESIGN.md §10) — no artifacts, no `pjrt` feature needed. The same
+//! invariants hold for the PJRT path, which the artifact-gated
+//! `#[ignore]`d module tests in `src/runtime/worker.rs` cover when a
+//! bundle is present.
 
 use std::sync::Arc;
 
@@ -18,30 +17,18 @@ use fastclip::comm::{reduction, CommWorld, ReduceAlgo};
 use fastclip::config::{Algorithm, DataConfig, OptimizerConfig, TrainConfig};
 use fastclip::coordinator::Trainer;
 use fastclip::optim::{build, shard_segments};
-use fastclip::runtime::{Manifest, TauGrads, TauInput, WorkerRuntime};
+use fastclip::runtime::{ComputeBackend, Manifest, NativeBackend, TauGrads, TauInput};
 use fastclip::util::Rng;
 
-fn have(bundle: &str) -> bool {
-    let ok = std::path::Path::new(bundle).join("manifest.json").exists();
-    if !ok {
-        eprintln!("skipping: {bundle} not built (run `make artifacts`)");
-    }
-    ok
-}
-
 /// THE paper-math invariant: two workers computing the FastCLIP gradient
-/// estimator over their local halves of a global batch (bl=8, bg=16,
-/// bundle tiny_k2_b8), SUMMED, must equal one worker computing it over the
-/// whole batch (bl=16, bg=16, bundle tiny_k1_b16) — Eq. (2)+(3) of the
-/// paper distributes over workers exactly.
+/// estimator over their local halves of a global batch (bl=8, bg=16),
+/// SUMMED, must equal one worker computing it over the whole batch
+/// (bl=16, bg=16) — Eq. (2)+(3) of the paper distributes over workers
+/// exactly. Runs on the native backend, on every machine.
 #[test]
-#[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build (which needs the xla dependency added - see rust/Cargo.toml)"]
 fn distributed_gradient_equals_global_gradient() {
-    if !have("artifacts/tiny_k2_b8") || !have("artifacts/tiny_k1_b16") {
-        return;
-    }
-    let m2 = Manifest::load("artifacts/tiny_k2_b8").unwrap();
-    let m1 = Manifest::load("artifacts/tiny_k1_b16").unwrap();
+    let m2 = Manifest::native("tiny", 2, 8, 0).unwrap();
+    let m1 = Manifest::native("tiny", 1, 16, 0).unwrap();
     assert_eq!(m1.global_batch, m2.global_batch, "bundles must share bg=16");
     assert_eq!(m1.n_params, m2.n_params);
     let (bg, d, p) = (m1.global_batch, m1.model.d_embed, m1.n_params);
@@ -55,9 +42,10 @@ fn distributed_gradient_equals_global_gradient() {
     let texts: Vec<i32> =
         (0..bg * m1.model.t_len).map(|_| rng.below(m1.model.t_vocab) as i32).collect();
 
-    // global embeddings (computed in bl-sized chunks through the k2 bundle,
-    // which shares the encoder weights — encode is batch-row-parallel)
-    let mut rt2 = WorkerRuntime::load(&m2, Some("gcl")).unwrap();
+    // global embeddings (computed in bl-sized chunks through the k2
+    // topology, which shares the encoder weights — encode is
+    // batch-row-parallel)
+    let mut rt2 = NativeBackend::new(&m2, Some("gcl"), 2).unwrap();
     let bl = m2.local_batch;
     let mut e1g = Vec::with_capacity(bg * d);
     let mut e2g = Vec::with_capacity(bg * d);
@@ -80,7 +68,7 @@ fn distributed_gradient_equals_global_gradient() {
 
     for variant in ["gcl", "gcl_v0", "rgcl_g", "mbcl"] {
         // K=2: each worker's contribution over its half
-        let mut rt2 = WorkerRuntime::load(&m2, Some(variant)).unwrap();
+        let mut rt2 = NativeBackend::new(&m2, Some(variant), 2).unwrap();
         let mut grad_sum = vec![0.0f32; p];
         let mut loss_sum = 0.0f32;
         let mut taug_sum = 0.0f32;
@@ -111,7 +99,7 @@ fn distributed_gradient_equals_global_gradient() {
         }
 
         // K=1: one worker over the full batch
-        let mut rt1 = WorkerRuntime::load(&m1, Some(variant)).unwrap();
+        let mut rt1 = NativeBackend::new(&m1, Some(variant), 1).unwrap();
         let out1 = rt1
             .step(
                 variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, eps, rho,
@@ -152,15 +140,13 @@ fn tau_grad_of(t: &TauGrads) -> f32 {
 /// The same invariant, end-to-end through the Trainer: a K=2 run and a
 /// K=1 run with the SAME global batch per step cannot be constructed from
 /// the shard loaders (they shuffle independently), but determinism and
-/// sane loss trajectories can be checked across bundles.
+/// sane loss trajectories can be checked across topologies. The bundle
+/// names map onto native topologies via `TrainConfig::set_bundle`.
 #[test]
-#[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build (which needs the xla dependency added - see rust/Cargo.toml)"]
-fn trainer_runs_across_bundles() {
+fn trainer_runs_across_topologies() {
     for bundle in ["artifacts/tiny_k1_b16", "artifacts/tiny_k2_b8"] {
-        if !have(bundle) {
-            return;
-        }
         let mut cfg = TrainConfig::new(bundle, Algorithm::FastClipV1);
+        cfg.backend = fastclip::runtime::BackendKind::Native;
         cfg.steps = 6;
         cfg.iters_per_epoch = 2;
         cfg.data = DataConfig { n_train: 64, n_eval: 32, n_classes: 8, ..DataConfig::default() };
@@ -176,13 +162,9 @@ fn trainer_runs_across_bundles() {
 /// must also split across workers (τ gradients are per-local-sample and
 /// are not reduced).
 #[test]
-#[ignore = "executes HLO artifacts: needs `make artifacts` and a `--features pjrt` build (which needs the xla dependency added - see rust/Cargo.toml)"]
 fn rgcl_i_gradient_splits_across_workers() {
-    if !have("artifacts/tiny_k2_b8") || !have("artifacts/tiny_k1_b16") {
-        return;
-    }
-    let m2 = Manifest::load("artifacts/tiny_k2_b8").unwrap();
-    let m1 = Manifest::load("artifacts/tiny_k1_b16").unwrap();
+    let m2 = Manifest::native("tiny", 2, 8, 0).unwrap();
+    let m1 = Manifest::native("tiny", 1, 16, 0).unwrap();
     let (bg, p) = (m1.global_batch, m1.n_params);
     let img_dim = m1.model.v_patches * m1.model.v_patch_dim;
     let params = m1.load_init_params().unwrap();
@@ -192,7 +174,7 @@ fn rgcl_i_gradient_splits_across_workers() {
     let texts: Vec<i32> =
         (0..bg * m1.model.t_len).map(|_| rng.below(m1.model.t_vocab) as i32).collect();
 
-    let mut rt2 = WorkerRuntime::load(&m2, Some("rgcl_i")).unwrap();
+    let mut rt2 = NativeBackend::new(&m2, Some("rgcl_i"), 2).unwrap();
     let bl = m2.local_batch;
     let mut e1g = Vec::new();
     let mut e2g = Vec::new();
@@ -238,7 +220,7 @@ fn rgcl_i_gradient_splits_across_workers() {
             tau1_parts.extend(tau1);
         }
     }
-    let mut rt1 = WorkerRuntime::load(&m1, Some("rgcl_i")).unwrap();
+    let mut rt1 = NativeBackend::new(&m1, Some("rgcl_i"), 1).unwrap();
     let out1 = rt1
         .step(
             "rgcl_i", &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-8, 9.0,

@@ -1,0 +1,308 @@
+//! Native-backend parity suite (DESIGN.md §10).
+//!
+//! Pins the three guarantees the native CPU backend makes:
+//!
+//! 1. **Scalar-reference exactness** — every kernel is bitwise equal to
+//!    its naive single-threaded scalar reference on the same summation
+//!    tree, for odd shapes and non-divisible blockings;
+//! 2. **Thread-count determinism** — one step, and a whole training run,
+//!    are bitwise identical across 1/2/4 kernel threads;
+//! 3. **Gradient correctness** — the hand-derived surrogate gradient
+//!    matches a finite-difference oracle of the surrogate value, per
+//!    variant.
+//!
+//! Everything runs unconditionally: no artifacts, no pjrt feature.
+
+use fastclip::config::{Algorithm, DataConfig, TrainConfig};
+use fastclip::coordinator::Trainer;
+use fastclip::kernels::{gemm, norm, softmax};
+use fastclip::runtime::{
+    BackendKind, ComputeBackend, Manifest, NativeBackend, StepOutput, TauGrads, TauInput,
+};
+use fastclip::util::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+// -------------------------------------------------------------------------
+// 1. kernel ↔ scalar reference exactness, odd shapes, 1/2/4 threads
+// -------------------------------------------------------------------------
+
+#[test]
+fn kernel_parity_gemm_all_layouts() {
+    // shapes chosen to cross the KC=64 block boundary non-divisibly and
+    // to leave ragged thread partitions (13 rows over 4 threads)
+    for (m, k, n) in [(1usize, 1usize, 1usize), (13, 65, 9), (8, 64, 16), (3, 200, 5)] {
+        let a = randn(m * k, 100);
+        let b = randn(k * n, 101);
+        let bt = randn(n * k, 102);
+        let ab = randn(m * n, 103);
+        let mut w1 = vec![0.0f32; m * n];
+        gemm::matmul_ref(&a, &b, &mut w1, m, k, n);
+        let mut w2 = vec![0.0f32; m * n];
+        gemm::matmul_bt_ref(&a, &bt, &mut w2, m, k, n);
+        let mut w3 = vec![0.0f32; k * n];
+        gemm::matmul_at_b_ref(&a, &ab, &mut w3, m, k, n);
+        for threads in [1usize, 2, 4] {
+            let mut g1 = vec![0.0f32; m * n];
+            gemm::matmul(&a, &b, &mut g1, m, k, n, threads);
+            assert_eq!(bits(&g1), bits(&w1), "matmul {m}x{k}x{n} t={threads}");
+            let mut g2 = vec![0.0f32; m * n];
+            gemm::matmul_bt(&a, &bt, &mut g2, m, k, n, threads);
+            assert_eq!(bits(&g2), bits(&w2), "matmul_bt {m}x{k}x{n} t={threads}");
+            let mut g3 = vec![0.0f32; k * n];
+            gemm::matmul_at_b(&a, &ab, &mut g3, m, k, n, threads);
+            assert_eq!(bits(&g3), bits(&w3), "matmul_at_b {m}x{k}x{n} t={threads}");
+        }
+    }
+}
+
+#[test]
+fn kernel_parity_contrastive_and_normalize() {
+    for (m, n, d) in [(7usize, 13usize, 5usize), (8, 16, 64), (1, 3, 2)] {
+        let a = randn(m * d, 110);
+        let b = randn(n * d, 111);
+        let diag: Vec<isize> =
+            (0..m).map(|i| if i % 4 == 3 { softmax::NO_DIAG } else { (i % n) as isize }).collect();
+        let sd: Vec<f32> = (0..m).map(|i| 0.05 * i as f32).collect();
+        let tau: Vec<f32> = (0..m).map(|i| 0.04 + 0.003 * i as f32).collect();
+        let gbar: Vec<f32> = (0..m).map(|i| 1.0 - 0.11 * i as f32).collect();
+        let denom = (n.max(2) - 1) as f32;
+        let gw = softmax::masked_exp_rowsum_ref(&a, &b, &diag, &sd, &tau, denom, m, n, d);
+        let (daw, dtw) =
+            softmax::masked_exp_rowsum_bwd_row_ref(&a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d);
+        let dbw =
+            softmax::masked_exp_rowsum_bwd_col_ref(&a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d);
+        let (yw, nw) = norm::l2_normalize_fwd_ref(&a, m, d);
+        let dxw = norm::l2_normalize_bwd_ref(&a, &nw, &b[..m * d], m, d);
+        for threads in [1usize, 2, 4] {
+            let g = softmax::masked_exp_rowsum(&a, &b, &diag, &sd, &tau, denom, m, n, d, threads);
+            assert_eq!(bits(&g), bits(&gw), "fwd t={threads}");
+            let (da, dt) = softmax::masked_exp_rowsum_bwd_row(
+                &a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d, threads,
+            );
+            assert_eq!(bits(&da), bits(&daw), "bwd row t={threads}");
+            assert_eq!(bits(&dt), bits(&dtw), "bwd dtau t={threads}");
+            let db = softmax::masked_exp_rowsum_bwd_col(
+                &a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d, threads,
+            );
+            assert_eq!(bits(&db), bits(&dbw), "bwd col t={threads}");
+            let (y, norms) = norm::l2_normalize_fwd(&a, m, d, threads);
+            assert_eq!(bits(&y), bits(&yw), "normalize t={threads}");
+            let dx = norm::l2_normalize_bwd(&a, &norms, &b[..m * d], m, d, threads);
+            assert_eq!(bits(&dx), bits(&dxw), "normalize bwd t={threads}");
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// 2. thread-count determinism of a full step and a full training run
+// -------------------------------------------------------------------------
+
+struct StepFixture {
+    manifest: Manifest,
+    params: Vec<f32>,
+    images: Vec<f32>,
+    texts: Vec<i32>,
+    e1g: Vec<f32>,
+    e2g: Vec<f32>,
+    u1g: Vec<f32>,
+    u2g: Vec<f32>,
+    tau1g: Vec<f32>,
+    tau2g: Vec<f32>,
+}
+
+fn step_fixture() -> StepFixture {
+    let manifest = Manifest::native("tiny", 2, 8, 5).unwrap();
+    let params = manifest.load_init_params().unwrap();
+    let (bl, bg, d) = (manifest.local_batch, manifest.global_batch, manifest.model.d_embed);
+    let dims = manifest.model_dims();
+    let mut rng = Rng::new(77);
+    let mut images = vec![0.0f32; bl * dims.v_patches * dims.v_patch_dim];
+    rng.fill_normal(&mut images, 1.0);
+    let texts: Vec<i32> =
+        (0..bl * dims.t_len).map(|_| rng.below(dims.t_vocab) as i32).collect();
+    // gathered features: local embeddings + a perturbed "remote" block
+    let mut rt = NativeBackend::new(&manifest, Some("gcl"), 1).unwrap();
+    let (e1, e2) = rt.encode(&params, &images, &texts).unwrap();
+    let mut remote1 = e1.clone();
+    let mut remote2 = e2.clone();
+    for v in remote1.iter_mut().chain(remote2.iter_mut()) {
+        *v = -*v;
+    }
+    let e1g = [e1, remote1].concat();
+    let e2g = [e2, remote2].concat();
+    assert_eq!(e1g.len(), bg * d);
+    let u1g: Vec<f32> = (0..bg).map(|i| 0.3 + 0.02 * i as f32).collect();
+    let u2g: Vec<f32> = (0..bg).map(|i| 0.9 - 0.03 * i as f32).collect();
+    let tau1g: Vec<f32> = (0..bg).map(|i| 0.03 + 0.001 * i as f32).collect();
+    let tau2g: Vec<f32> = (0..bg).map(|i| 0.08 - 0.002 * i as f32).collect();
+    StepFixture { manifest, params, images, texts, e1g, e2g, u1g, u2g, tau1g, tau2g }
+}
+
+fn run_step(f: &StepFixture, variant: &str, threads: usize) -> StepOutput {
+    let mut rt = NativeBackend::new(&f.manifest, Some(variant), threads).unwrap();
+    let tau = if variant == "rgcl_i" {
+        TauInput::Individual { tau1g: &f.tau1g, tau2g: &f.tau2g }
+    } else {
+        TauInput::Global(0.05)
+    };
+    rt.step(
+        variant, &f.params, &f.images, &f.texts, &f.e1g, &f.e2g, &f.u1g, &f.u2g, 0, 1e-8, 6.5,
+        tau,
+    )
+    .unwrap()
+}
+
+#[test]
+fn native_step_bitwise_identical_across_kernel_threads() {
+    let f = step_fixture();
+    for variant in ["gcl", "gcl_v0", "rgcl_g", "rgcl_i", "mbcl"] {
+        let base = run_step(&f, variant, 1);
+        for threads in [2usize, 3, 4] {
+            let got = run_step(&f, variant, threads);
+            assert_eq!(bits(&got.grad), bits(&base.grad), "{variant} t={threads} grad");
+            assert_eq!(got.loss.to_bits(), base.loss.to_bits(), "{variant} t={threads} loss");
+            match (&got.tau, &base.tau) {
+                (TauGrads::Global(a), TauGrads::Global(b)) => {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{variant} t={threads} tau")
+                }
+                (
+                    TauGrads::Individual { tau1: a1, tau2: a2 },
+                    TauGrads::Individual { tau1: b1, tau2: b2 },
+                ) => {
+                    assert_eq!(bits(a1), bits(b1), "{variant} t={threads} tau1");
+                    assert_eq!(bits(a2), bits(b2), "{variant} t={threads} tau2");
+                }
+                _ => panic!("{variant}: tau grad kind changed with threads"),
+            }
+        }
+    }
+}
+
+#[test]
+fn native_training_run_bitwise_identical_across_kernel_threads() {
+    let run = |threads: usize| {
+        let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", Algorithm::FastClipV3);
+        cfg.backend = BackendKind::Native;
+        cfg.kernel_threads = threads;
+        cfg.steps = 8;
+        cfg.iters_per_epoch = 4;
+        cfg.data = DataConfig { n_train: 64, n_eval: 16, n_classes: 8, ..DataConfig::default() };
+        cfg.lr.warmup_iters = 2;
+        cfg.lr.total_iters = 8;
+        Trainer::new(cfg).unwrap().run().unwrap()
+    };
+    let a = run(1);
+    for threads in [2usize, 4] {
+        let b = run(threads);
+        assert_eq!(bits(&a.final_params), bits(&b.final_params), "params t={threads}");
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "loss t={threads}");
+            assert_eq!(x.tau.to_bits(), y.tau.to_bits(), "tau t={threads}");
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// 3. finite-difference oracle for the hand-derived surrogate gradient
+// -------------------------------------------------------------------------
+
+#[test]
+fn step_gradient_matches_finite_difference_oracle() {
+    let f = step_fixture();
+    let d = f.manifest.model.d_embed;
+    // probe indices across all four parameter leaves; the token index
+    // must belong to a token actually present in the batch
+    let tok_used = f.texts[0] as usize;
+    let seg = |name: &str| {
+        f.manifest.param_spec.iter().find(|s| s.name == name).unwrap().offset
+    };
+    let probes = vec![
+        seg("v.proj") + 3,
+        seg("v.proj") + 2 * d + 1,
+        seg("v.bias") + 1,
+        seg("t.tok") + tok_used * d + 2,
+        seg("t.bias") + d - 1,
+    ];
+    for variant in ["gcl", "gcl_v0", "rgcl_g", "rgcl_i", "mbcl"] {
+        let out = run_step(&f, variant, 2);
+        let rt = NativeBackend::new(&f.manifest, Some(variant), 1).unwrap();
+        let value = |params: &[f32]| -> f64 {
+            rt.surrogate_value(
+                variant, params, &f.images, &f.texts, &f.e1g, &f.e2g, &f.u1g, &f.u2g,
+                &f.tau1g, &f.tau2g, 0, 1e-8,
+            )
+            .unwrap() as f64
+        };
+        let h = 2e-2f32;
+        for &idx in &probes {
+            let mut pp = f.params.clone();
+            let mut pm = f.params.clone();
+            pp[idx] += h;
+            pm[idx] -= h;
+            let num = (value(&pp) - value(&pm)) / (2.0 * h as f64);
+            let got = out.grad[idx] as f64;
+            // f32 forward + O(h²) truncation: a loose band, but tight
+            // enough that a dropped term or wrong scale (the failure
+            // modes of a hand-derived backward) is far outside it
+            assert!(
+                (num - got).abs() < 0.1 * num.abs().max(0.05),
+                "{variant} grad[{idx}]: finite-diff {num:.6} vs analytic {got:.6}"
+            );
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// full loop smoke: encode → phase_g → step → eval → snapshot → resume,
+// through the CLI-visible Trainer surface, zero artifacts
+// -------------------------------------------------------------------------
+
+#[test]
+fn full_native_loop_with_eval_snapshot_resume() {
+    let root = std::env::temp_dir().join(format!("fastclip_native_e2e_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", Algorithm::FastClipV3);
+    cfg.backend = BackendKind::Native;
+    cfg.steps = 8;
+    cfg.iters_per_epoch = 4;
+    cfg.data = DataConfig { n_train: 64, n_eval: 16, n_classes: 8, ..DataConfig::default() };
+    cfg.lr.warmup_iters = 2;
+    cfg.lr.total_iters = 8;
+    cfg.eval_every = 3;
+    cfg.ckpt_dir = Some(root.to_string_lossy().into_owned());
+    cfg.ckpt_every = 4;
+
+    let continuous = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+    assert_eq!(continuous.history.len(), 8);
+    assert_eq!(continuous.ckpt.snapshots, 2);
+    assert!(continuous.evals.len() >= 2, "periodic + final evals recorded");
+    assert!(continuous.final_eval.datacomp >= 0.0);
+
+    // resume the latest snapshot (step 8): zero further steps to run is
+    // rejected; resume from step 4 by pointing at that snapshot dir
+    let mut resumed_cfg = cfg.clone();
+    resumed_cfg.resume = Some(ckpt_step_dir(&root, 4));
+    let resumed = Trainer::new(resumed_cfg).unwrap().run().unwrap();
+    assert_eq!(resumed.ckpt.resumed_at, Some(4));
+    assert_eq!(resumed.history.len(), 4);
+    assert_eq!(
+        bits(&continuous.final_params),
+        bits(&resumed.final_params),
+        "native resume is bitwise"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+fn ckpt_step_dir(root: &std::path::Path, step: u32) -> String {
+    root.join(format!("step_{step:08}")).to_string_lossy().into_owned()
+}
