@@ -1,6 +1,7 @@
 //! PJRT runtime benchmarks: executable invocation cost for each artifact
 //! (encode / phase_g / step) plus the literal I/O overhead — the L3↔XLA
-//! boundary that the perf pass optimizes (EXPERIMENTS.md §Perf).
+//! boundary (DESIGN.md §8) whose marshalling cost the runtime keeps to
+//! one copy per literal.
 
 #[path = "harness.rs"]
 mod harness;

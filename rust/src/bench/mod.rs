@@ -18,6 +18,10 @@
 //! Every runner accepts `--steps`, `--seeds`, `--out` and runner-specific
 //! options, prints the paper-shaped rows, and writes CSV + JSON under
 //! `results/`.
+// Not yet part of the rustdoc-gated public surface (ISSUE 4 scoped the
+// doc pass to comm/, ckpt/, kernels/ and the runtime backend); the doc
+// lint is opted out here until this module gets its own pass.
+#![allow(missing_docs)]
 
 pub mod ckpt;
 pub mod common;

@@ -13,11 +13,14 @@ use anyhow::{bail, ensure, Context, Result};
 /// RNG words are `u64`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BlobKind {
+    /// 4-byte little-endian IEEE-754 single floats.
     F32,
+    /// 8-byte little-endian unsigned integers.
     U64,
 }
 
 impl BlobKind {
+    /// File-extension id: `f32` | `u64`.
     pub fn id(&self) -> &'static str {
         match self {
             BlobKind::F32 => "f32",
@@ -25,6 +28,7 @@ impl BlobKind {
         }
     }
 
+    /// Parse an id; unknown values are an error.
     pub fn from_id(id: &str) -> Result<BlobKind> {
         match id {
             "f32" => Ok(BlobKind::F32),
@@ -56,14 +60,26 @@ impl BlobKind {
 /// file's bytes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BlobSpec {
+    /// file name, relative to the checkpoint directory
     pub file: String,
+    /// element type (also the file extension)
     pub kind: BlobKind,
+    /// element count
     pub len: usize,
+    /// FNV-1a 64 hash of the file's raw bytes
     pub hash: u64,
 }
 
 /// FNV-1a 64-bit over raw bytes — tiny, dependency-free, and entirely
 /// adequate for corruption detection (it is not a cryptographic hash).
+///
+/// ```
+/// use fastclip::ckpt::fnv1a64;
+/// // the FNV-1a offset basis: hashing nothing returns it unchanged
+/// assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+/// // one flipped bit changes the hash
+/// assert_ne!(fnv1a64(&[0x00]), fnv1a64(&[0x01]));
+/// ```
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
@@ -73,6 +89,7 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Serialize f32 elements to their little-endian bytes.
 pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(xs.len() * 4);
     for v in xs {
@@ -81,6 +98,8 @@ pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
     out
 }
 
+/// Deserialize little-endian bytes back to f32 elements (bitwise exact,
+/// including NaN payloads and -0.0).
 pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
     ensure!(bytes.len() % 4 == 0, "f32 blob is {} bytes (not a multiple of 4)", bytes.len());
     Ok(bytes
@@ -89,6 +108,7 @@ pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
         .collect())
 }
 
+/// Serialize u64 elements to their little-endian bytes.
 pub fn u64s_to_bytes(xs: &[u64]) -> Vec<u8> {
     let mut out = Vec::with_capacity(xs.len() * 8);
     for v in xs {
@@ -97,6 +117,7 @@ pub fn u64s_to_bytes(xs: &[u64]) -> Vec<u8> {
     out
 }
 
+/// Deserialize little-endian bytes back to u64 elements.
 pub fn bytes_to_u64s(bytes: &[u8]) -> Result<Vec<u64>> {
     ensure!(bytes.len() % 8 == 0, "u64 blob is {} bytes (not a multiple of 8)", bytes.len());
     Ok(bytes
@@ -145,11 +166,13 @@ pub fn read_verified(dir: &Path, spec: &BlobSpec) -> Result<Vec<u8>> {
     Ok(bytes)
 }
 
+/// [`read_verified`] + f32 decode (errors on a non-f32 spec).
 pub fn read_f32_verified(dir: &Path, spec: &BlobSpec) -> Result<Vec<f32>> {
     ensure!(spec.kind == BlobKind::F32, "{} is not an f32 blob", spec.file);
     bytes_to_f32s(&read_verified(dir, spec)?)
 }
 
+/// [`read_verified`] + u64 decode (errors on a non-u64 spec).
 pub fn read_u64_verified(dir: &Path, spec: &BlobSpec) -> Result<Vec<u64>> {
     ensure!(spec.kind == BlobKind::U64, "{} is not a u64 blob", spec.file);
     bytes_to_u64s(&read_verified(dir, spec)?)

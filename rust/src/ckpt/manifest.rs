@@ -13,7 +13,9 @@ use crate::util::Json;
 
 use super::blob::{BlobKind, BlobSpec};
 
+/// Format version stamped into (and checked from) every manifest.
 pub const CKPT_VERSION: usize = 1;
+/// The manifest's file name inside a checkpoint directory.
 pub const MANIFEST_FILE: &str = "MANIFEST.json";
 
 /// Canonical echo of every hyperparameter that drives the update rule or
@@ -67,8 +69,11 @@ pub struct CkptMeta {
     pub step: u32,
     /// worker count the snapshot was written at (K)
     pub world: usize,
+    /// flat parameter-vector length
     pub n_params: usize,
+    /// training-set size (the strided shard partition depends on it)
     pub n_train: usize,
+    /// per-worker batch size the snapshot was written at
     pub local_batch: usize,
     /// [`crate::config::Algorithm::id`]
     pub algorithm: String,
@@ -77,7 +82,9 @@ pub struct CkptMeta {
     /// resolved [`crate::comm::ReduceAlgo::id`] — decides whether the
     /// optimizer state is one replicated blob or K per-rank shards
     pub reduce: String,
+    /// run seed (init, loader shuffling)
     pub seed: u64,
+    /// synthetic-data generator seed
     pub data_seed: u64,
     /// [`hyper_echo`] of the writing run's config — compared exactly on
     /// resume
@@ -112,13 +119,17 @@ impl CkptMeta {
     }
 }
 
+/// The parsed `MANIFEST.json`: run identity plus the blob table.
 #[derive(Debug, Clone)]
 pub struct CkptManifest {
+    /// run identity at snapshot time
     pub meta: CkptMeta,
+    /// every blob in the checkpoint, sorted by file name
     pub blobs: Vec<BlobSpec>,
 }
 
 impl CkptManifest {
+    /// Serialize to the on-disk JSON shape.
     pub fn to_json(&self) -> Json {
         let m = &self.meta;
         Json::obj(vec![
@@ -155,10 +166,13 @@ impl CkptManifest {
         ])
     }
 
+    /// Write `MANIFEST.json` into `dir` (the finalize step writes it
+    /// LAST — a directory without it is not a checkpoint).
     pub fn write(&self, dir: &Path) -> Result<()> {
         self.to_json().write_file(&dir.join(MANIFEST_FILE))
     }
 
+    /// Parse `<dir>/MANIFEST.json`, rejecting unknown format versions.
     pub fn load(dir: &Path) -> Result<CkptManifest> {
         let path = dir.join(MANIFEST_FILE);
         let j = Json::parse_file(&path)?;
@@ -210,6 +224,7 @@ impl CkptManifest {
             .ok_or_else(|| anyhow!("checkpoint is missing blob '{file}'"))
     }
 
+    /// Whether a blob with this file name exists.
     pub fn has_blob(&self, file: &str) -> bool {
         self.blobs.iter().any(|b| b.file == file)
     }

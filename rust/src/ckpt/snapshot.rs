@@ -68,8 +68,14 @@ fn opt_blob(rank: usize, sharded: bool) -> String {
 /// hyperparameters that do not belong in a checkpoint).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TauCkpt {
-    Constant { tau: f32 },
+    /// Constant-τ rule: the single value.
+    Constant {
+        /// the constant temperature
+        tau: f32,
+    },
+    /// Global learnable τ: value + scalar-Adam moments.
     Global(GlobalTauState),
+    /// Per-sample learnable τ: shard values + per-sample Adam moments.
     Individual(IndividualTauState),
 }
 
@@ -428,8 +434,11 @@ pub fn latest(root: &Path) -> Result<Option<PathBuf>> {
 /// One rank's deserialized training state.
 #[derive(Debug, Clone)]
 pub struct RankState {
+    /// Eq. (1) u estimators, image side, one per shard sample
     pub u1: Vec<f32>,
+    /// Eq. (1) u estimators, text side
     pub u2: Vec<f32>,
+    /// temperature-rule state
     pub tau: TauCkpt,
     /// exact loader position — present for same-world resume; `None`
     /// after elastic resizing (the shard partition changed)
@@ -441,7 +450,9 @@ pub struct RankState {
 /// Outcome of [`Checkpoint::verify`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct VerifyReport {
+    /// blobs hashed
     pub blobs: usize,
+    /// total blob bytes read
     pub bytes: u64,
 }
 
@@ -468,14 +479,17 @@ impl Checkpoint {
         Ok(Checkpoint { dir, manifest })
     }
 
+    /// The resolved `step_NNNNNNNN` directory.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// The run identity recorded at snapshot time.
     pub fn meta(&self) -> &CkptMeta {
         &self.manifest.meta
     }
 
+    /// The full parsed manifest (meta + blob table).
     pub fn manifest(&self) -> &CkptManifest {
         &self.manifest
     }
@@ -600,9 +614,13 @@ impl Checkpoint {
 
 /// Everything a worker thread needs to continue a run from a checkpoint.
 pub struct RestoredWorker {
+    /// replicated parameter vector
     pub params: Vec<f32>,
+    /// this rank's u estimators
     pub ustate: UState,
+    /// this rank's live temperature state
     pub tau: TauState,
+    /// this rank's data loader, positioned (or epoch-fast-forwarded)
     pub loader: ShardLoader,
     /// optimizer state sized for this rank (full or chunk, per strategy)
     pub optim: OptimState,

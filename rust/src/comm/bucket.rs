@@ -1,0 +1,167 @@
+//! Size-targeted bucketing of the flat gradient vector (DESIGN.md §11).
+//!
+//! The overlapped reduction pipeline ([`super::OverlapPipeline`]) does not
+//! reduce the P-length gradient in one collective: it partitions the flat
+//! vector into contiguous, ascending **buckets** of a target element
+//! count (`--bucket-mb`, DDP-style) and reduces each bucket as soon as
+//! the backward pass has finished writing it. The partition is exact —
+//! buckets tile `[0, P)` with no gap and no overlap, the last bucket
+//! absorbing the remainder — so per-bucket reduction touches every
+//! element exactly once, in the same rank-ordered summation as the
+//! unbucketed collective (the bitwise-equality argument of
+//! [`super::GradientReduction::reduce_bucket`]).
+
+/// One contiguous bucket `[lo, hi)` of the flat vector, `index`-th in
+/// ascending order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bucket {
+    /// Position in the plan (0-based, ascending with `lo`).
+    pub index: usize,
+    /// First element (inclusive).
+    pub lo: usize,
+    /// One past the last element (exclusive).
+    pub hi: usize,
+}
+
+impl Bucket {
+    /// Number of elements in the bucket.
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// True for the degenerate empty bucket (only possible when the whole
+    /// vector is empty).
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+/// An exact partition of `[0, n)` into ascending size-targeted buckets.
+///
+/// # Example
+///
+/// Buckets tile the vector exactly, the last one absorbing the remainder:
+///
+/// ```
+/// use fastclip::comm::BucketPlan;
+///
+/// let plan = BucketPlan::new(10, 4); // 10 elements, 4 per bucket
+/// let ranges: Vec<(usize, usize)> = plan.iter().map(|b| (b.lo, b.hi)).collect();
+/// assert_eq!(ranges, vec![(0, 4), (4, 8), (8, 10)]);
+/// assert_eq!(plan.iter().map(|b| b.len()).sum::<usize>(), plan.total_len());
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketPlan {
+    buckets: Vec<Bucket>,
+    n: usize,
+}
+
+impl BucketPlan {
+    /// Partition `n` elements into buckets of `target` elements each (the
+    /// last bucket may be short). `target = 0` is treated as 1; a target
+    /// larger than `n` yields a single bucket covering everything.
+    pub fn new(n: usize, target: usize) -> BucketPlan {
+        let target = target.max(1);
+        let count = n.div_ceil(target).max(1);
+        let mut buckets = Vec::with_capacity(count);
+        let mut lo = 0;
+        for index in 0..count {
+            let hi = ((index + 1) * target).min(n);
+            buckets.push(Bucket { index, lo, hi });
+            lo = hi;
+        }
+        BucketPlan { buckets, n }
+    }
+
+    /// Partition `n_elems` f32 elements into buckets of roughly
+    /// `bucket_bytes` bytes (4 bytes per element, at least one element).
+    pub fn for_bytes(n_elems: usize, bucket_bytes: usize) -> BucketPlan {
+        BucketPlan::new(n_elems, (bucket_bytes / 4).max(1))
+    }
+
+    /// Number of buckets (at least 1, even for an empty vector).
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// True when the plan covers zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Total element count the plan partitions (`n`).
+    pub fn total_len(&self) -> usize {
+        self.n
+    }
+
+    /// The `index`-th bucket.
+    pub fn get(&self, index: usize) -> Bucket {
+        self.buckets[index]
+    }
+
+    /// Iterate the buckets in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = Bucket> + '_ {
+        self.buckets.iter().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The satellite property test: for a sweep of vector lengths
+    /// (including odd lengths and 1-element vectors) and bucket targets
+    /// (including 1 and targets larger than the whole vector), the plan
+    /// tiles `[0, n)` exactly — no gap, no overlap, ascending.
+    #[test]
+    fn partition_covers_exactly() {
+        for n in [0usize, 1, 2, 3, 7, 64, 1003, 18560] {
+            for target in [1usize, 2, 3, 5, 64, 1000, n.max(1), n + 7] {
+                let plan = BucketPlan::new(n, target);
+                assert_eq!(plan.total_len(), n);
+                assert!(plan.len() >= 1, "n={n} target={target}");
+                let mut expect = 0;
+                for (i, b) in plan.iter().enumerate() {
+                    assert_eq!(b.index, i, "n={n} target={target}");
+                    assert_eq!(b.lo, expect, "no gap/overlap: n={n} target={target}");
+                    assert!(b.hi >= b.lo && b.hi <= n);
+                    assert!(b.len() <= target, "n={n} target={target}");
+                    // every bucket except the last is exactly `target`
+                    if i + 1 < plan.len() {
+                        assert_eq!(b.len(), target, "n={n} target={target}");
+                    }
+                    expect = b.hi;
+                }
+                assert_eq!(expect, n, "tiles the whole vector: n={n} target={target}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_plans() {
+        // empty vector: one empty bucket, still a valid (trivial) plan
+        let empty = BucketPlan::new(0, 8);
+        assert_eq!(empty.len(), 1);
+        assert!(empty.is_empty());
+        assert!(empty.get(0).is_empty());
+        // target 0 behaves as 1
+        let ones = BucketPlan::new(3, 0);
+        assert_eq!(ones.len(), 3);
+        assert!(ones.iter().all(|b| b.len() == 1));
+        // target beyond the vector: a single covering bucket
+        let single = BucketPlan::new(5, 100);
+        assert_eq!(single.len(), 1);
+        assert_eq!((single.get(0).lo, single.get(0).hi), (0, 5));
+        assert!(!single.get(0).is_empty());
+    }
+
+    #[test]
+    fn for_bytes_converts_elements() {
+        // 16 bytes = 4 f32 elements per bucket
+        let plan = BucketPlan::for_bytes(10, 16);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.get(0).len(), 4);
+        // fewer than 4 bytes still holds one element per bucket
+        assert_eq!(BucketPlan::for_bytes(3, 1).len(), 3);
+    }
+}

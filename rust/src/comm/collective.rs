@@ -41,6 +41,7 @@
 //! algorithms. The trainer resolves [`ReduceStrategy::Auto`] once per
 //! run from the gradient size.
 
+use super::bucket::Bucket;
 use super::cost_model::CostModel;
 use super::world::WorkerComm;
 
@@ -61,10 +62,12 @@ pub enum ReduceAlgo {
 }
 
 impl ReduceAlgo {
+    /// Every algorithm, in the order the tables report them.
     pub fn all() -> [ReduceAlgo; 3] {
         [ReduceAlgo::Naive, ReduceAlgo::Ring, ReduceAlgo::Sharded]
     }
 
+    /// Kebab-case id used by the CLI and config files.
     pub fn id(&self) -> &'static str {
         match self {
             ReduceAlgo::Naive => "naive",
@@ -77,6 +80,7 @@ impl ReduceAlgo {
 /// Config-facing strategy: a fixed algorithm or cost-model-driven choice.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReduceStrategy {
+    /// Always use this algorithm.
     Fixed(ReduceAlgo),
     /// Pick the cheapest algorithm for the gradient size under the run's
     /// α–β topology (see [`CostModel::cheapest_reduce`]).
@@ -84,6 +88,7 @@ pub enum ReduceStrategy {
 }
 
 impl ReduceStrategy {
+    /// Kebab-case id used by the CLI and config files.
     pub fn id(&self) -> &'static str {
         match self {
             ReduceStrategy::Fixed(a) => a.id(),
@@ -91,6 +96,8 @@ impl ReduceStrategy {
         }
     }
 
+    /// Parse a CLI/config id; unknown values are an error listing the
+    /// valid choices.
     pub fn from_id(id: &str) -> anyhow::Result<ReduceStrategy> {
         if id == "auto" {
             return Ok(ReduceStrategy::Auto);
@@ -124,8 +131,10 @@ impl ReduceStrategy {
 /// with this rank's owned chunk only (so the caller must size optimizer
 /// state accordingly — see `optim::shard_segments`).
 pub trait GradientReduction: Send + Sync {
+    /// The concrete algorithm this implementation realizes.
     fn algo(&self) -> ReduceAlgo;
 
+    /// Kebab-case id of [`Self::algo`].
     fn id(&self) -> &'static str {
         self.algo().id()
     }
@@ -149,6 +158,39 @@ pub trait GradientReduction: Send + Sync {
         params: &mut [f32],
         apply: &mut dyn FnMut(&mut [f32], &[f32]),
     );
+
+    /// Collective: reduce ONE bucket of the flat `full_len`-element
+    /// gradient — `data` is this rank's local contribution for
+    /// `[bucket.lo, bucket.hi)` — and return the reduced segment this
+    /// rank is responsible for: the whole bucket for the replicated
+    /// algorithms, the (possibly empty) intersection of the bucket with
+    /// this rank's owned chunk of `full_len` for the sharded one. The
+    /// caller applies the optimizer and, for the sharded strategy,
+    /// all-gathers parameters once per *iteration*, not per bucket.
+    ///
+    /// Bitwise contract (DESIGN.md §11): every element is summed over
+    /// ranks in rank order `0..K` from a 0.0 accumulator, exactly as
+    /// [`Self::reduce_and_apply`] sums it — so reducing any bucketing of
+    /// the vector, in any size, reproduces the unbucketed reduction of
+    /// the same elements bit for bit.
+    fn reduce_bucket(
+        &self,
+        comm: &WorkerComm,
+        data: &[f32],
+        bucket: Bucket,
+        full_len: usize,
+    ) -> ReducedSegment;
+}
+
+/// The reduced output of one [`GradientReduction::reduce_bucket`] call:
+/// `data` holds the reduced values for `[lo, lo + data.len())` of the
+/// flat gradient (absolute offsets).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReducedSegment {
+    /// Absolute offset of the first reduced element.
+    pub lo: usize,
+    /// The reduced values (empty when this rank owns nothing here).
+    pub data: Vec<f32>,
 }
 
 /// Gather-everything-reduce-locally — the seed's strategy. One
@@ -188,6 +230,28 @@ impl GradientReduction for NaiveAllReduce {
         }
         apply(params, grad);
     }
+
+    fn reduce_bucket(
+        &self,
+        comm: &WorkerComm,
+        data: &[f32],
+        bucket: Bucket,
+        _full_len: usize,
+    ) -> ReducedSegment {
+        charge(comm, self, data.len());
+        let n = data.len();
+        let gathered = comm.all_gather(data);
+        // same rank-major, rank-ordered accumulation as reduce_and_apply:
+        // per element the f32 rounding sequence is identical
+        let mut out = vec![0.0f32; n];
+        for r in 0..comm.world_size() {
+            let part = &gathered[r * n..(r + 1) * n];
+            for (g, v) in out.iter_mut().zip(part) {
+                *g += v;
+            }
+        }
+        ReducedSegment { lo: bucket.lo, data: out }
+    }
 }
 
 /// Ring all-reduce: reduce-scatter the gradient, all-gather the reduced
@@ -216,6 +280,19 @@ impl GradientReduction for RingAllReduce {
         // the same rank-ordered (bit-identical) summation
         comm.all_reduce_sum(grad);
         apply(params, grad);
+    }
+
+    fn reduce_bucket(
+        &self,
+        comm: &WorkerComm,
+        data: &[f32],
+        bucket: Bucket,
+        _full_len: usize,
+    ) -> ReducedSegment {
+        charge(comm, self, data.len());
+        let mut out = data.to_vec();
+        comm.all_reduce_sum(&mut out);
+        ReducedSegment { lo: bucket.lo, data: out }
     }
 }
 
@@ -248,13 +325,57 @@ impl GradientReduction for ShardedReduceScatter {
         let shard = comm.reduce_scatter_sum(grad);
         let (lo, hi) = comm.owned_chunk(p);
         apply(&mut params[lo..hi], &shard);
-        // the parameter all-gather replaces the gradient all-gather of a
-        // ring all-reduce; charge it to param_wire_bytes
-        let k = comm.world_size() as u64;
-        comm.stats().add_param_wire((k - 1) * (p as u64 * 4) / k.max(1));
-        let updated = comm.all_gather_chunks(&params[lo..hi], p);
-        params.copy_from_slice(&updated);
+        allgather_updated_params(comm, params, lo, hi);
     }
+
+    fn reduce_bucket(
+        &self,
+        comm: &WorkerComm,
+        data: &[f32],
+        bucket: Bucket,
+        full_len: usize,
+    ) -> ReducedSegment {
+        charge(comm, self, data.len());
+        // ownership stays the GLOBAL chunking of the full vector — the
+        // bucket is reduced into the intersection with this rank's chunk,
+        // so assembling every bucket's segment yields exactly the shard
+        // reduce_and_apply would hand the optimizer (same state layout,
+        // same checkpoint format). The updated-parameter all-gather (and
+        // its param_wire charge) happens once per iteration, in the
+        // pipeline's finish step.
+        let (clo, chi) = comm.owned_chunk(full_len);
+        let s = bucket.lo.max(clo);
+        let e = bucket.hi.min(chi);
+        if s < e {
+            let out = comm.reduce_range_sum(data, s - bucket.lo, e - bucket.lo);
+            ReducedSegment { lo: s, data: out }
+        } else {
+            // empty intersection — the call is still a collective, so
+            // this rank participates with an empty range
+            let out = comm.reduce_range_sum(data, 0, 0);
+            ReducedSegment { lo: clo, data: out }
+        }
+    }
+}
+
+/// The sharded strategy's parameter publication: all-gather the updated
+/// chunk `[lo, hi)` back into a replicated `params` and charge the
+/// traffic to `param_wire_bytes` (the all-gather replaces the gradient
+/// all-gather of a ring all-reduce). Shared by the serial
+/// [`ShardedReduceScatter::reduce_and_apply`] and the overlap pipeline's
+/// finish step (DESIGN.md §11), so the two paths stay provably identical
+/// in both bytes accounting and dataflow.
+pub(crate) fn allgather_updated_params(
+    comm: &WorkerComm,
+    params: &mut [f32],
+    lo: usize,
+    hi: usize,
+) {
+    let p = params.len();
+    let k = comm.world_size() as u64;
+    comm.stats().add_param_wire((k - 1) * (p as u64 * 4) / k);
+    let updated = comm.all_gather_chunks(&params[lo..hi], p);
+    params.copy_from_slice(&updated);
 }
 
 /// Charge this iteration's gradient wire bytes: the chosen algorithm's
@@ -280,6 +401,91 @@ pub fn reduction(algo: ReduceAlgo) -> &'static dyn GradientReduction {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::{BucketPlan, CommWorld};
+    use std::sync::Arc;
+
+    /// Local gradient contribution of `rank` for an `n`-element vector —
+    /// irregular enough that mis-assembled buckets cannot cancel out.
+    fn contribution(rank: usize, n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i * 7 + rank * 13) % 97) as f32 * 0.37 - 11.0).collect()
+    }
+
+    /// The satellite exactness property: reducing any bucketing of the
+    /// flat vector — bucket by bucket, for every algorithm — assembles to
+    /// the bitwise-identical result of the whole-vector reduce, for odd
+    /// lengths, 1-element buckets and buckets larger than the vector.
+    #[test]
+    fn bucketed_reduce_bitwise_equals_whole_vector() {
+        for algo in ReduceAlgo::all() {
+            for (k, n) in [(1usize, 7usize), (2, 64), (4, 10), (3, 1003)] {
+                // whole-vector reference: reduce_and_apply with apply
+                // writing the reduced gradient into params
+                let world = CommWorld::new(k);
+                let whole: Vec<Vec<f32>> = run_ranks(&world, k, move |comm| {
+                    let mut grad = contribution(comm.rank(), n);
+                    let mut params = vec![0.0f32; n];
+                    reduction(algo).reduce_and_apply(
+                        &comm,
+                        &mut grad,
+                        &mut params,
+                        &mut |p, g| p.copy_from_slice(g),
+                    );
+                    params
+                });
+                for target in [1usize, 3, n.div_ceil(2).max(1), n + 5] {
+                    let world = CommWorld::new(k);
+                    let bucketed: Vec<Vec<f32>> = run_ranks(&world, k, move |comm| {
+                        let plan = BucketPlan::new(n, target);
+                        let local = contribution(comm.rank(), n);
+                        // replicated algos fill everything; sharded fills
+                        // only the owned chunk — compare chunk-wise below
+                        let mut out = vec![f32::NAN; n];
+                        for b in plan.iter() {
+                            let seg =
+                                reduction(algo).reduce_bucket(&comm, &local[b.lo..b.hi], b, n);
+                            out[seg.lo..seg.lo + seg.data.len()].copy_from_slice(&seg.data);
+                        }
+                        out
+                    });
+                    for (rank, got) in bucketed.iter().enumerate() {
+                        let (lo, hi) = match algo {
+                            ReduceAlgo::Sharded => crate::comm::chunk_bounds(n, k, rank),
+                            _ => (0, n),
+                        };
+                        assert_eq!(
+                            bits(&got[lo..hi]),
+                            bits(&whole[rank][lo..hi]),
+                            "{} k={k} n={n} target={target} rank={rank}",
+                            algo.id()
+                        );
+                        if algo == ReduceAlgo::Sharded {
+                            // and nothing outside the chunk was written
+                            assert!(got[..lo].iter().chain(&got[hi..]).all(|v| v.is_nan()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn run_ranks<F>(world: &Arc<CommWorld>, k: usize, f: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(crate::comm::WorkerComm) -> Vec<f32> + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..k)
+            .map(|r| {
+                let h = world.handle(r);
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || f(h))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
 
     #[test]
     fn ids_roundtrip() {

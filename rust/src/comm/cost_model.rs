@@ -13,18 +13,25 @@ use anyhow::{bail, Result};
 use super::collective::ReduceAlgo;
 use crate::config::NetworkProfile;
 
+/// Named α–β interconnect profile approximating one of the paper's
+/// clusters (see [`ProfileName::profile`] for the numbers).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ProfileName {
+    /// ~100 Gb/s EDR InfiniBand — the main testbed (Fig. 3).
     InfiniBand,
+    /// Slingshot cluster 1 of Appendix E: higher per-message latency.
     Slingshot1,
+    /// Slingshot cluster 2: similar bandwidth, lower latency.
     Slingshot2,
 }
 
 impl ProfileName {
+    /// Every profile, for id round-trips and sweeps.
     pub fn all() -> [ProfileName; 3] {
         [ProfileName::InfiniBand, ProfileName::Slingshot1, ProfileName::Slingshot2]
     }
 
+    /// CLI/config id: `infiniband` | `slingshot1` | `slingshot2`.
     pub fn id(&self) -> &'static str {
         match self {
             ProfileName::InfiniBand => "infiniband",
@@ -33,6 +40,8 @@ impl ProfileName {
         }
     }
 
+    /// Parse a CLI/config id; unknown values are an error listing the
+    /// valid choices.
     pub fn from_id(id: &str) -> Result<ProfileName> {
         for p in ProfileName::all() {
             if p.id() == id {
@@ -42,6 +51,7 @@ impl ProfileName {
         bail!("unknown network profile '{id}' (expected infiniband|slingshot1|slingshot2)")
     }
 
+    /// The α–β numbers behind the name.
     pub fn profile(&self) -> NetworkProfile {
         match self {
             // ~100 Gb/s EDR InfiniBand, low latency; fast intra-node links.
@@ -72,27 +82,37 @@ impl ProfileName {
     }
 }
 
+/// The collective operations the model prices (`CostModel::time`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Collective {
+    /// Concatenate per-rank payloads on every rank.
     AllGather,
+    /// SUM-reduce, result replicated (ring: RS + AG phases).
     AllReduce,
+    /// SUM-reduce, each rank keeps one chunk.
     ReduceScatter,
+    /// Copy a root rank's payload to every rank (tree).
     Broadcast,
 }
 
 /// Analytic time for ring collectives over `nodes` x `gpus_per_node`.
 #[derive(Debug, Clone, Copy)]
 pub struct CostModel {
+    /// the α–β numbers of the modeled fabric
     pub profile: NetworkProfile,
+    /// modeled node count (may exceed the thread count, DESIGN.md §1)
     pub nodes: usize,
+    /// modeled accelerators per node
     pub gpus_per_node: usize,
 }
 
 impl CostModel {
+    /// A model over `nodes` x `gpus_per_node` ranks of `profile` fabric.
     pub fn new(profile: NetworkProfile, nodes: usize, gpus_per_node: usize) -> Self {
         Self { profile, nodes, gpus_per_node }
     }
 
+    /// Modeled rank count (`nodes * gpus_per_node`).
     pub fn world_size(&self) -> usize {
         self.nodes * self.gpus_per_node
     }

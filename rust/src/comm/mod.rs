@@ -34,6 +34,18 @@
 //! [`CostModel::cheapest_reduce`] implements the α–β selection policy
 //! behind [`ReduceStrategy::Auto`].
 //!
+//! # Overlapped reduction
+//!
+//! All three algorithms also reduce **bucket-wise**
+//! ([`GradientReduction::reduce_bucket`] over a [`BucketPlan`]), which is
+//! bitwise-identical to the whole-vector reduce for any bucket size and
+//! feeds the [`OverlapPipeline`]: a background worker reduces finished
+//! buckets while the backward pass is still writing later ones, hiding
+//! wire time behind compute (`--overlap on|off|auto`, DESIGN.md §11).
+//! [`CommStats`] splits the measured reduction time into
+//! `hidden_comm_us` / `exposed_comm_us` so overlapped runs never
+//! double-count the win.
+//!
 //! # Example
 //!
 //! Four ranks reduce a gradient with the sharded strategy and apply a
@@ -74,13 +86,17 @@
 //! assert!(s.grad_wire_bytes < s.grad_wire_bytes_naive);
 //! ```
 
+pub mod bucket;
 pub mod collective;
 mod cost_model;
+pub mod overlap;
 mod world;
 
+pub use bucket::{Bucket, BucketPlan};
 pub use collective::{
-    reduction, GradientReduction, NaiveAllReduce, ReduceAlgo, ReduceStrategy, RingAllReduce,
-    ShardedReduceScatter,
+    reduction, GradientReduction, NaiveAllReduce, ReduceAlgo, ReduceStrategy, ReducedSegment,
+    RingAllReduce, ShardedReduceScatter,
 };
 pub use cost_model::{Collective, CostModel, ProfileName};
+pub use overlap::{OverlapMode, OverlapPipeline, OverlapReport};
 pub use world::{chunk_bounds, CommStats, CommStatsSnapshot, CommWorld, WorkerComm};

@@ -1,0 +1,463 @@
+//! Overlapped gradient reduction: the bucketed async pipeline that hides
+//! reduction cost behind backward compute (DESIGN.md §11).
+//!
+//! The serial trainer runs encode → phase_g → step → reduce strictly in
+//! sequence, so every reduction microsecond is exposed latency. This
+//! module overlaps them: the backward pass emits the flat gradient in
+//! ascending segments ([`ComputeBackend::step_emit`]), segments fill
+//! size-targeted [`BucketPlan`] buckets, and each completed bucket is
+//! handed to a dedicated **reduction worker thread** that runs the
+//! configured [`GradientReduction::reduce_bucket`] collective while the
+//! compute thread keeps differentiating the remaining parameters. The
+//! compute thread only blocks at [`OverlapPipeline::finish`], on whatever
+//! buckets are still in flight.
+//!
+//! # Why a second collective world
+//!
+//! Collectives are lockstep and share a barrier; if the reduction workers
+//! issued bucket collectives on the *training* world they would interleave
+//! with the compute threads' feature gathers and deadlock or corrupt the
+//! exchange slots. Each rank's reduction worker therefore gets a handle
+//! into a **dedicated sibling world** (same K, same shared
+//! [`CommStats`](super::CommStats) via
+//! [`CommWorld::with_stats`](super::CommWorld::with_stats)): every
+//! rank sends buckets in plan order, so the workers stay in lockstep with
+//! each other and never touch the training world.
+//!
+//! # Determinism
+//!
+//! Pipelining changes *when* reductions happen, never *what* they
+//! compute: buckets tile the vector exactly, each bucket is summed in
+//! rank order (see [`GradientReduction::reduce_bucket`]), and the
+//! optimizer is applied once per iteration over the fully assembled
+//! gradient (or shard) — identical numerics, identical optimizer-state
+//! layout, identical checkpoints. `rust/tests/native_backend.rs` pins
+//! pipelined == serial bitwise for all 5 loss variants × 3 reduction
+//! algorithms.
+//!
+//! [`ComputeBackend::step_emit`]: crate::runtime::ComputeBackend::step_emit
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::bucket::{Bucket, BucketPlan};
+use super::collective::{allgather_updated_params, reduction, GradientReduction, ReduceAlgo};
+use super::world::WorkerComm;
+
+/// Config-facing switch for the overlap pipeline (`--overlap`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Always pipeline, even when it cannot help (K = 1, one bucket) —
+    /// the degenerate pipeline stays bitwise-correct.
+    On,
+    /// Strictly serial reduction (the pre-§11 behaviour).
+    Off,
+    /// Pipeline exactly when it can hide something: more than one rank
+    /// AND more than one bucket for the gradient size.
+    Auto,
+}
+
+impl OverlapMode {
+    /// Every mode, for id round-trips.
+    pub fn all() -> [OverlapMode; 3] {
+        [OverlapMode::On, OverlapMode::Off, OverlapMode::Auto]
+    }
+
+    /// CLI/config id: `on` | `off` | `auto`.
+    pub fn id(&self) -> &'static str {
+        match self {
+            OverlapMode::On => "on",
+            OverlapMode::Off => "off",
+            OverlapMode::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI/config id; unknown values are an error listing the
+    /// valid choices.
+    pub fn from_id(id: &str) -> Result<OverlapMode> {
+        for m in OverlapMode::all() {
+            if m.id() == id {
+                return Ok(m);
+            }
+        }
+        anyhow::bail!("unknown overlap mode '{id}' (expected on|off|auto)")
+    }
+
+    /// Resolve the mode for a world of `k` ranks whose gradient splits
+    /// into `n_buckets` buckets.
+    pub fn enabled(&self, k: usize, n_buckets: usize) -> bool {
+        match self {
+            OverlapMode::On => true,
+            OverlapMode::Off => false,
+            OverlapMode::Auto => k > 1 && n_buckets > 1,
+        }
+    }
+}
+
+/// Measured timing of one pipelined iteration, the overlap-accounting
+/// input (`hidden = max(0, busy − exposed)`, DESIGN.md §11).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OverlapReport {
+    /// Total wall time the reduction worker spent inside bucket
+    /// collectives this iteration (includes peer-wait at their barriers).
+    pub busy_s: f64,
+    /// Wall time the compute thread blocked in
+    /// [`OverlapPipeline::finish`] waiting for in-flight buckets.
+    pub exposed_s: f64,
+}
+
+impl OverlapReport {
+    /// Reduction time hidden behind compute: `max(0, busy − exposed)`.
+    pub fn hidden_s(&self) -> f64 {
+        (self.busy_s - self.exposed_s).max(0.0)
+    }
+}
+
+struct Job {
+    bucket: Bucket,
+    data: Vec<f32>,
+}
+
+struct Done {
+    lo: usize,
+    data: Vec<f32>,
+    busy_s: f64,
+}
+
+/// One rank's overlapped-reduction pipeline: a staging buffer fed by the
+/// backward pass's segment emissions, a background reduction worker, and
+/// the per-iteration finish step that assembles the reduced gradient and
+/// applies the optimizer exactly once (see the module docs for the
+/// determinism argument).
+///
+/// Per iteration: [`OverlapPipeline::emit`] for every gradient segment in
+/// ascending offset order (typically via
+/// [`ComputeBackend::step_emit`](crate::runtime::ComputeBackend::step_emit)),
+/// then [`OverlapPipeline::finish`] with the training-world comm handle,
+/// the parameters and the optimizer-apply callback.
+pub struct OverlapPipeline {
+    plan: BucketPlan,
+    algo: ReduceAlgo,
+    full_len: usize,
+    to_worker: Option<Sender<Job>>,
+    done_rx: Receiver<Done>,
+    worker: Option<JoinHandle<()>>,
+    /// staging for emitted local segments; after finish assembles the
+    /// replicated reductions it holds the reduced gradient
+    staged: Vec<f32>,
+    filled: usize,
+    next_bucket: usize,
+}
+
+impl OverlapPipeline {
+    /// Spawn the reduction worker for one rank. `reduce_comm` must be a
+    /// handle into a world **dedicated to bucket reductions** (all ranks'
+    /// pipelines, nothing else — see the module docs); `plan` and `algo`
+    /// must be identical on every rank.
+    pub fn spawn(
+        reduce_comm: WorkerComm,
+        algo: ReduceAlgo,
+        plan: BucketPlan,
+        full_len: usize,
+    ) -> OverlapPipeline {
+        assert_eq!(plan.total_len(), full_len, "plan must tile the gradient");
+        let (job_tx, job_rx) = channel::<Job>();
+        let (done_tx, done_rx) = channel::<Done>();
+        let rank = reduce_comm.rank();
+        let worker = std::thread::Builder::new()
+            .name(format!("reduce-{rank}"))
+            .spawn(move || {
+                let reducer: &'static dyn GradientReduction = reduction(algo);
+                while let Ok(job) = job_rx.recv() {
+                    let t0 = Instant::now();
+                    let seg = reducer.reduce_bucket(&reduce_comm, &job.data, job.bucket, full_len);
+                    let busy_s = t0.elapsed().as_secs_f64();
+                    if done_tx.send(Done { lo: seg.lo, data: seg.data, busy_s }).is_err() {
+                        break; // pipeline dropped mid-iteration
+                    }
+                }
+            })
+            .expect("spawn reduction worker");
+        OverlapPipeline {
+            plan,
+            algo,
+            full_len,
+            to_worker: Some(job_tx),
+            done_rx,
+            worker: Some(worker),
+            staged: vec![0.0f32; full_len],
+            filled: 0,
+            next_bucket: 0,
+        }
+    }
+
+    /// The number of buckets per iteration.
+    pub fn n_buckets(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// Feed one finished gradient segment `[offset, offset + seg.len())`.
+    /// Segments must arrive in ascending order and tile `[0, P)` exactly
+    /// (the [`step_emit`](crate::runtime::ComputeBackend::step_emit)
+    /// contract); every bucket the segment completes is dispatched to the
+    /// reduction worker immediately.
+    pub fn emit(&mut self, offset: usize, seg: &[f32]) {
+        assert_eq!(
+            offset, self.filled,
+            "gradient segments must be emitted contiguously in ascending order"
+        );
+        self.staged[offset..offset + seg.len()].copy_from_slice(seg);
+        self.filled += seg.len();
+        while self.next_bucket < self.plan.len() {
+            let b = self.plan.get(self.next_bucket);
+            if b.hi > self.filled {
+                break;
+            }
+            let job = Job { bucket: b, data: self.staged[b.lo..b.hi].to_vec() };
+            if let Some(tx) = &self.to_worker {
+                // a send can only fail if the worker died (panicked
+                // collective); surface that in finish(), not here
+                let _ = tx.send(job);
+            }
+            self.next_bucket += 1;
+        }
+    }
+
+    /// Wait for the outstanding bucket reductions, assemble the reduced
+    /// gradient, apply the optimizer exactly once, and — for the sharded
+    /// algorithm — all-gather the updated parameters on the training
+    /// world `comm` (charging `param_wire_bytes` once, as the serial
+    /// [`ShardedReduceScatter`](super::ShardedReduceScatter) does).
+    /// Returns the measured busy/exposed split and resets the pipeline
+    /// for the next iteration.
+    pub fn finish(
+        &mut self,
+        comm: &WorkerComm,
+        params: &mut [f32],
+        apply: &mut dyn FnMut(&mut [f32], &[f32]),
+    ) -> Result<OverlapReport> {
+        ensure!(
+            self.filled == self.full_len && self.next_bucket == self.plan.len(),
+            "backward emitted {} of {} gradient elements ({} of {} buckets dispatched)",
+            self.filled,
+            self.full_len,
+            self.next_bucket,
+            self.plan.len()
+        );
+        let t0 = Instant::now();
+        let mut busy_s = 0.0f64;
+        if self.algo == ReduceAlgo::Sharded {
+            let (clo, chi) = comm.owned_chunk(self.full_len);
+            let mut shard = vec![0.0f32; chi - clo];
+            for _ in 0..self.plan.len() {
+                let done = self.recv_done()?;
+                busy_s += done.busy_s;
+                shard[done.lo - clo..done.lo - clo + done.data.len()].copy_from_slice(&done.data);
+            }
+            let exposed_s = t0.elapsed().as_secs_f64();
+            apply(&mut params[clo..chi], &shard);
+            allgather_updated_params(comm, params, clo, chi);
+            self.reset();
+            return Ok(OverlapReport { busy_s, exposed_s });
+        }
+        for _ in 0..self.plan.len() {
+            let done = self.recv_done()?;
+            busy_s += done.busy_s;
+            self.staged[done.lo..done.lo + done.data.len()].copy_from_slice(&done.data);
+        }
+        let exposed_s = t0.elapsed().as_secs_f64();
+        apply(params, &self.staged);
+        self.reset();
+        Ok(OverlapReport { busy_s, exposed_s })
+    }
+
+    fn recv_done(&self) -> Result<Done> {
+        self.done_rx
+            .recv()
+            .map_err(|_| anyhow!("the bucket-reduction worker thread died mid-iteration"))
+    }
+
+    fn reset(&mut self) {
+        self.filled = 0;
+        self.next_bucket = 0;
+    }
+}
+
+impl Drop for OverlapPipeline {
+    fn drop(&mut self) {
+        // closing the job channel lets the worker's recv() loop end; the
+        // join only blocks if the worker is mid-collective waiting for a
+        // peer rank that died too — the same hang class a serial
+        // collective has when a rank exits early
+        self.to_worker = None;
+        if let Some(worker) = self.worker.take() {
+            let _ = worker.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommStats, CommWorld};
+    use std::sync::Arc;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn contribution(rank: usize, iter: usize, n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i * 31 + rank * 7 + iter * 3) % 113) as f32 * 0.21 - 9.0).collect()
+    }
+
+    /// Drive `iters` SGD-style iterations through the pipeline on K ranks
+    /// and return every rank's final parameters.
+    fn run_pipelined(
+        k: usize,
+        n: usize,
+        algo: ReduceAlgo,
+        target: usize,
+        iters: usize,
+        segments: usize,
+    ) -> Vec<Vec<f32>> {
+        let stats = Arc::new(CommStats::default());
+        let train = CommWorld::with_stats(k, Arc::clone(&stats));
+        let reduce = CommWorld::with_stats(k, Arc::clone(&stats));
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let comm = train.handle(rank);
+                let rcomm = reduce.handle(rank);
+                std::thread::spawn(move || {
+                    let plan = BucketPlan::new(n, target);
+                    let mut pipe = OverlapPipeline::spawn(rcomm, algo, plan, n);
+                    let mut params = vec![1.0f32; n];
+                    for it in 0..iters {
+                        let grad = contribution(rank, it, n);
+                        // emit in `segments` ascending chunks, like a
+                        // backward pass finishing leaf by leaf
+                        let seg_len = n.div_ceil(segments.max(1)).max(1);
+                        let mut off = 0;
+                        while off < n {
+                            let hi = (off + seg_len).min(n);
+                            pipe.emit(off, &grad[off..hi]);
+                            off = hi;
+                        }
+                        let rep = pipe
+                            .finish(&comm, &mut params, &mut |p, g| {
+                                for (pi, gi) in p.iter_mut().zip(g) {
+                                    *pi -= 0.01 * gi;
+                                }
+                            })
+                            .unwrap();
+                        assert!(rep.busy_s >= 0.0 && rep.exposed_s >= 0.0);
+                    }
+                    params
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    /// Serial reference: the same iterations through reduce_and_apply.
+    fn run_serial(k: usize, n: usize, algo: ReduceAlgo, iters: usize) -> Vec<Vec<f32>> {
+        let world = CommWorld::new(k);
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let comm = world.handle(rank);
+                std::thread::spawn(move || {
+                    let mut params = vec![1.0f32; n];
+                    for it in 0..iters {
+                        let mut grad = contribution(rank, it, n);
+                        reduction(algo).reduce_and_apply(
+                            &comm,
+                            &mut grad,
+                            &mut params,
+                            &mut |p, g| {
+                                for (pi, gi) in p.iter_mut().zip(g) {
+                                    *pi -= 0.01 * gi;
+                                }
+                            },
+                        );
+                    }
+                    params
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn pipelined_bitwise_equals_serial_every_algo() {
+        for algo in ReduceAlgo::all() {
+            for (k, n) in [(1usize, 13usize), (2, 64), (3, 97)] {
+                let serial = run_serial(k, n, algo, 3);
+                for (target, segments) in [(1usize, 1usize), (5, 3), (n + 1, 4), (16, 7)] {
+                    let piped = run_pipelined(k, n, algo, target, 3, segments);
+                    for rank in 0..k {
+                        assert_eq!(
+                            bits(&piped[rank]),
+                            bits(&serial[rank]),
+                            "{} k={k} n={n} target={target} segs={segments} rank={rank}",
+                            algo.id()
+                        );
+                    }
+                    // every rank replicated, like the serial postcondition
+                    assert!(piped.iter().all(|p| p == &piped[0]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn finish_rejects_partial_emission() {
+        let stats = Arc::new(CommStats::default());
+        let train = CommWorld::with_stats(1, Arc::clone(&stats));
+        let reduce = CommWorld::with_stats(1, stats);
+        let mut pipe =
+            OverlapPipeline::spawn(reduce.handle(0), ReduceAlgo::Naive, BucketPlan::new(8, 4), 8);
+        pipe.emit(0, &[1.0; 4]);
+        let comm = train.handle(0);
+        let mut params = vec![0.0f32; 8];
+        let err = pipe.finish(&comm, &mut params, &mut |_, _| {}).unwrap_err();
+        assert!(format!("{err}").contains("emitted"), "{err}");
+        // completing the emission recovers the iteration
+        pipe.emit(4, &[2.0; 4]);
+        pipe.finish(&comm, &mut params, &mut |p, g| p.copy_from_slice(g)).unwrap();
+        assert_eq!(&params[..4], &[1.0; 4]);
+        assert_eq!(&params[4..], &[2.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn emit_rejects_out_of_order_segments() {
+        let stats = Arc::new(CommStats::default());
+        let reduce = CommWorld::with_stats(1, stats);
+        let mut pipe =
+            OverlapPipeline::spawn(reduce.handle(0), ReduceAlgo::Ring, BucketPlan::new(8, 4), 8);
+        pipe.emit(4, &[1.0; 4]);
+    }
+
+    #[test]
+    fn overlap_mode_ids_and_resolution() {
+        for m in OverlapMode::all() {
+            assert_eq!(OverlapMode::from_id(m.id()).unwrap(), m);
+        }
+        assert!(OverlapMode::from_id("sometimes").is_err());
+        assert!(OverlapMode::On.enabled(1, 1));
+        assert!(!OverlapMode::Off.enabled(8, 100));
+        assert!(OverlapMode::Auto.enabled(2, 2));
+        assert!(!OverlapMode::Auto.enabled(1, 100), "K=1 has nothing to reduce");
+        assert!(!OverlapMode::Auto.enabled(4, 1), "one bucket hides nothing");
+    }
+
+    #[test]
+    fn report_hidden_clamps_at_zero() {
+        let r = OverlapReport { busy_s: 0.5, exposed_s: 0.2 };
+        assert!((r.hidden_s() - 0.3).abs() < 1e-12);
+        let r = OverlapReport { busy_s: 0.1, exposed_s: 0.4 };
+        assert_eq!(r.hidden_s(), 0.0);
+    }
+}

@@ -23,10 +23,15 @@ use std::sync::{Arc, Barrier, Mutex};
 /// Byte counters per collective, for reporting and model cross-checks.
 #[derive(Debug, Default)]
 pub struct CommStats {
+    /// payload bytes handed to `all_gather` / `all_gather_chunks`
     pub all_gather_bytes: AtomicU64,
+    /// payload bytes handed to `all_reduce_sum` (and `all_reduce_mean`)
     pub all_reduce_bytes: AtomicU64,
+    /// payload bytes handed to `reduce_scatter_sum` / `reduce_range_sum`
     pub reduce_scatter_bytes: AtomicU64,
+    /// payload bytes broadcast from a root rank
     pub broadcast_bytes: AtomicU64,
+    /// number of collective operations charged
     pub ops: AtomicU64,
     /// modeled fabric bytes per rank moved reducing gradients, under the
     /// algorithm actually used
@@ -36,19 +41,41 @@ pub struct CommStats {
     pub grad_wire_bytes_naive: AtomicU64,
     /// sharded strategy only: the updated-parameter all-gather traffic
     pub param_wire_bytes: AtomicU64,
+    /// measured reduction-worker time that ran concurrently with backward
+    /// compute (µs, summed over ranks) — the part of the gradient
+    /// reduction the overlap pipeline HID off the critical path
+    /// (DESIGN.md §11). Zero for serial (`--overlap off`) runs, which
+    /// expose every reduction microsecond.
+    pub hidden_comm_us: AtomicU64,
+    /// measured time the compute thread blocked waiting on outstanding
+    /// bucket reductions after backward finished (µs, summed over ranks)
+    /// — the reduction cost still on the critical path under overlap
+    pub exposed_comm_us: AtomicU64,
 }
 
 /// A point-in-time copy of [`CommStats`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CommStatsSnapshot {
+    /// see [`CommStats::all_gather_bytes`]
     pub all_gather_bytes: u64,
+    /// see [`CommStats::all_reduce_bytes`]
     pub all_reduce_bytes: u64,
+    /// see [`CommStats::reduce_scatter_bytes`]
     pub reduce_scatter_bytes: u64,
+    /// see [`CommStats::broadcast_bytes`]
     pub broadcast_bytes: u64,
+    /// see [`CommStats::ops`]
     pub ops: u64,
+    /// see [`CommStats::grad_wire_bytes`]
     pub grad_wire_bytes: u64,
+    /// see [`CommStats::grad_wire_bytes_naive`]
     pub grad_wire_bytes_naive: u64,
+    /// see [`CommStats::param_wire_bytes`]
     pub param_wire_bytes: u64,
+    /// see [`CommStats::hidden_comm_us`]
+    pub hidden_comm_us: u64,
+    /// see [`CommStats::exposed_comm_us`]
+    pub exposed_comm_us: u64,
 }
 
 impl CommStatsSnapshot {
@@ -72,6 +99,7 @@ impl CommStatsSnapshot {
 }
 
 impl CommStats {
+    /// Copy every counter into an immutable snapshot.
     pub fn snapshot(&self) -> CommStatsSnapshot {
         CommStatsSnapshot {
             all_gather_bytes: self.all_gather_bytes.load(Ordering::Relaxed),
@@ -82,6 +110,8 @@ impl CommStats {
             grad_wire_bytes: self.grad_wire_bytes.load(Ordering::Relaxed),
             grad_wire_bytes_naive: self.grad_wire_bytes_naive.load(Ordering::Relaxed),
             param_wire_bytes: self.param_wire_bytes.load(Ordering::Relaxed),
+            hidden_comm_us: self.hidden_comm_us.load(Ordering::Relaxed),
+            exposed_comm_us: self.exposed_comm_us.load(Ordering::Relaxed),
         }
     }
 
@@ -97,11 +127,28 @@ impl CommStats {
         self.grad_wire_bytes_naive.fetch_add(naive, Ordering::Relaxed);
     }
 
+    /// Charge the sharded strategy's updated-parameter all-gather bytes.
     pub fn add_param_wire(&self, bytes: u64) {
         self.param_wire_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
+
+    /// Charge one iteration's measured overlap split: `hidden_us` of
+    /// reduction ran under backward compute, `exposed_us` blocked the
+    /// compute thread (DESIGN.md §11). Charged once per rank per
+    /// iteration by the overlap pipeline's owner, never by the serial
+    /// path — so serial and pipelined runs are directly comparable
+    /// without double-counting the overlap win.
+    pub fn add_overlap_us(&self, hidden_us: u64, exposed_us: u64) {
+        self.hidden_comm_us.fetch_add(hidden_us, Ordering::Relaxed);
+        self.exposed_comm_us.fetch_add(exposed_us, Ordering::Relaxed);
+    }
 }
 
+/// The collective world shared by K worker threads: a barrier, per-rank
+/// exchange slots and the byte/time counters. Create once per world with
+/// [`CommWorld::new`] (or [`CommWorld::with_stats`] to share counters
+/// with another world) and hand each worker its [`WorkerComm`] via
+/// [`CommWorld::handle`].
 pub struct CommWorld {
     k: usize,
     barrier: Barrier,
@@ -109,25 +156,39 @@ pub struct CommWorld {
     slots: Vec<Mutex<Vec<f32>>>,
     /// per-chunk reduction outputs (chunk c owned by rank c)
     chunks: Vec<Mutex<Vec<f32>>>,
-    pub stats: CommStats,
+    /// shared counters — possibly shared with a sibling world (the
+    /// overlap pipeline runs its bucket collectives on a second world so
+    /// they never interleave with the compute thread's collectives, but
+    /// both charge the same run-level stats)
+    pub stats: Arc<CommStats>,
 }
 
 impl CommWorld {
+    /// A fresh world of `k` ranks with its own counters.
     pub fn new(k: usize) -> Arc<Self> {
+        CommWorld::with_stats(k, Arc::new(CommStats::default()))
+    }
+
+    /// A world of `k` ranks charging an existing set of counters — used
+    /// by the overlap pipeline's dedicated reduction world (DESIGN.md
+    /// §11), whose traffic belongs to the same training run.
+    pub fn with_stats(k: usize, stats: Arc<CommStats>) -> Arc<Self> {
         assert!(k > 0);
         Arc::new(Self {
             k,
             barrier: Barrier::new(k),
             slots: (0..k).map(|_| Mutex::new(Vec::new())).collect(),
             chunks: (0..k).map(|_| Mutex::new(Vec::new())).collect(),
-            stats: CommStats::default(),
+            stats,
         })
     }
 
+    /// Number of ranks in the world.
     pub fn world_size(&self) -> usize {
         self.k
     }
 
+    /// The per-worker handle rank `rank` uses for every collective.
     pub fn handle(self: &Arc<Self>, rank: usize) -> WorkerComm {
         assert!(rank < self.k);
         WorkerComm { world: Arc::clone(self), rank }
@@ -141,18 +202,22 @@ pub struct WorkerComm {
 }
 
 impl WorkerComm {
+    /// This worker's rank in `[0, K)`.
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// Number of ranks in the world.
     pub fn world_size(&self) -> usize {
         self.world.k
     }
 
+    /// The world's shared counters.
     pub fn stats(&self) -> &CommStats {
-        &self.world.stats
+        self.world.stats.as_ref()
     }
 
+    /// Block until every rank reaches the same barrier call.
     pub fn barrier(&self) {
         self.world.barrier.wait();
     }
@@ -217,9 +282,25 @@ impl WorkerComm {
     /// order `0..K`, so the result is bit-identical to a rank-ordered
     /// local reduction of the same contributions.
     pub fn reduce_scatter_sum(&self, buf: &[f32]) -> Vec<f32> {
+        let (lo, hi) = self.owned_chunk(buf.len());
+        self.reduce_range_sum(buf, lo, hi)
+    }
+
+    /// SUM-reduce `buf` across ranks and return the sub-range `[lo, hi)`
+    /// of the reduced buffer. All ranks must pass equal-length buffers
+    /// (lockstep), but each rank may request a *different* — possibly
+    /// empty — sub-range: the overlap pipeline's bucketed sharded
+    /// reduction asks each rank for the intersection of its global
+    /// parameter chunk with the bucket (DESIGN.md §11). Per element the
+    /// additions run in rank order `0..K` from a 0.0 accumulator, exactly
+    /// as [`Self::reduce_scatter_sum`] — which is this method with the
+    /// owned chunk as the range — so any tiling of requests over any
+    /// bucketing reproduces the unbucketed reduction bitwise.
+    pub fn reduce_range_sum(&self, buf: &[f32], lo: usize, hi: usize) -> Vec<f32> {
+        debug_assert!(lo <= hi && hi <= buf.len());
         let w = &self.world;
         if w.k == 1 {
-            return buf.to_vec();
+            return buf[lo..hi].to_vec();
         }
         {
             let mut slot = w.slots[self.rank].lock().unwrap();
@@ -228,7 +309,6 @@ impl WorkerComm {
         }
         w.stats.add_payload(&w.stats.reduce_scatter_bytes, buf.len());
         self.barrier();
-        let (lo, hi) = self.owned_chunk(buf.len());
         let mut acc = vec![0.0f32; hi - lo];
         for r in 0..w.k {
             let slot = w.slots[r].lock().unwrap();
@@ -395,6 +475,48 @@ mod tests {
             }
             assert_eq!(covered, n);
         }
+    }
+
+    #[test]
+    fn reduce_range_sum_arbitrary_ranges() {
+        // per-rank ranges may differ and may be empty; summation matches
+        // reduce_scatter_sum element-for-element (same rank order)
+        for (k, n) in [(1usize, 6usize), (2, 9), (4, 10), (3, 17)] {
+            let outs = run_workers(k, move |c| {
+                let buf: Vec<f32> = (0..n).map(|i| i as f32 * (c.rank() + 1) as f32).collect();
+                // rank r asks for [r, n) clamped — unequal, rank-specific
+                let lo = c.rank().min(n);
+                let mut got = c.reduce_range_sum(&buf, lo, n);
+                // empty range is a legal collective call
+                let empty = c.reduce_range_sum(&buf, 0, 0);
+                assert!(empty.is_empty());
+                got.insert(0, lo as f32); // carry lo for the assertion
+                got
+            });
+            let scale: f32 = (1..=k).map(|r| r as f32).sum();
+            for o in &outs {
+                let lo = o[0] as usize;
+                for (j, v) in o[1..].iter().enumerate() {
+                    let want = (lo + j) as f32 * scale;
+                    assert!((v - want).abs() < 1e-3, "k={k} n={n} lo={lo} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shared_stats_accumulate_across_worlds() {
+        let stats = Arc::new(CommStats::default());
+        let a = CommWorld::with_stats(1, Arc::clone(&stats));
+        let b = CommWorld::with_stats(1, Arc::clone(&stats));
+        a.handle(0).all_gather(&[1.0; 4]);
+        b.handle(0).all_gather(&[1.0; 4]);
+        b.stats.add_overlap_us(70, 30);
+        let s = stats.snapshot();
+        assert_eq!(s.ops, 0, "K=1 gathers are local, nothing charged");
+        assert_eq!(s.hidden_comm_us, 70);
+        assert_eq!(s.exposed_comm_us, 30);
+        assert_eq!(a.stats.snapshot(), b.stats.snapshot());
     }
 
     #[test]

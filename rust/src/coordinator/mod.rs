@@ -7,6 +7,10 @@
 //! * [`temperature`] implements the four τ-update rules of Proc. 5
 //!   (temperature.rs);
 //! * [`timing`] produces the Fig. 3 per-iteration breakdown (timing.rs).
+// Not yet part of the rustdoc-gated public surface (ISSUE 4 scoped the
+// doc pass to comm/, ckpt/, kernels/ and the runtime backend); the doc
+// lint is opted out here until this module gets its own pass.
+#![allow(missing_docs)]
 
 pub mod state;
 pub mod temperature;
@@ -17,7 +21,7 @@ mod trainer;
 pub use state::{IndividualTau, IndividualTauState, UState};
 pub use temperature::{GlobalTau, GlobalTauState, TauState};
 pub use timing::{
-    charge_iteration, charge_iteration_with, IterationVolumes, PerIterMs, TimeBreakdown,
-    OVERLAP_FRACTION,
+    charge_iteration, charge_iteration_overlapped, charge_iteration_with, IterationVolumes,
+    PerIterMs, TimeBreakdown, OVERLAP_FRACTION,
 };
 pub use trainer::{EvalRecord, IterRecord, TrainResult, Trainer};

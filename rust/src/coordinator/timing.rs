@@ -5,18 +5,31 @@
 //! Computation and "others" are *measured* on this host; communication is
 //! *modeled* by the α–β interconnect cost model over the configured
 //! topology (threads on one host are not a fabric — see DESIGN.md §1).
-//! The split follows DDP semantics: the parameter-gradient ALL_REDUCE is
-//! bucketed and overlaps with the backward pass, so up to
-//! [`OVERLAP_FRACTION`] of the step computation can hide it; the feature /
-//! u gathers (and OpenCLIP's REDUCE_SCATTER) happen between forward and
-//! backward and are blocking.
+//! The split follows DDP semantics: the parameter-gradient reduction can
+//! overlap with the backward pass, the feature / u gathers (and
+//! OpenCLIP's REDUCE_SCATTER) happen between forward and backward and
+//! are blocking. How much of the gradient phase hides depends on the run
+//! mode (DESIGN.md §11):
+//!
+//! * **serial** (`--overlap off`, or auto with nothing to hide): the
+//!   trainer reduces after the whole backward, so the overlap is purely
+//!   *hypothetical* — [`charge_iteration_with`] models it with the
+//!   [`OVERLAP_FRACTION`] heuristic, as DDP-style training would achieve;
+//! * **pipelined** (`--overlap on`/`auto`): the bucketed pipeline
+//!   actually overlaps, and [`charge_iteration_overlapped`] splits the
+//!   modeled gradient-phase time by the **measured** hidden fraction of
+//!   this iteration's [`OverlapReport`] instead of the heuristic — so an
+//!   overlapped run never double-counts a win the pipeline did not
+//!   deliver, and `exp reduce` / `bench_iteration` report hidden vs
+//!   exposed from the same measurement.
 
-use crate::comm::{Collective, CostModel, ReduceAlgo};
+use crate::comm::{Collective, CostModel, OverlapReport, ReduceAlgo};
 use crate::config::CommPattern;
 
-/// Fraction of the `step` computation available to hide the gradient
-/// ALL_REDUCE (the backward pass; forward cannot overlap because the
-/// gathers must complete first).
+/// Serial-mode heuristic: fraction of the `step` computation assumed
+/// available to hide the gradient reduction (the backward pass; forward
+/// cannot overlap because the gathers must complete first). Pipelined
+/// runs use the measured fraction instead ([`charge_iteration_overlapped`]).
 pub const OVERLAP_FRACTION: f64 = 0.6;
 
 /// Cumulative timing for one worker, in seconds.
@@ -32,6 +45,13 @@ pub struct TimeBreakdown {
     pub comm_pure_s: f64,
     /// measured: data loading, optimizer, state bookkeeping
     pub others_s: f64,
+    /// measured (pipelined runs only): reduction-worker time that ran
+    /// under backward compute — real hidden communication, DESIGN.md §11
+    pub overlap_hidden_s: f64,
+    /// measured (pipelined runs only): reduction time the compute thread
+    /// blocked on after backward finished
+    pub overlap_exposed_s: f64,
+    /// number of iterations charged
     pub iterations: u64,
 }
 
@@ -54,12 +74,15 @@ impl TimeBreakdown {
         }
     }
 
+    /// Accumulate another worker's (or run's) breakdown into this one.
     pub fn merge(&mut self, other: &TimeBreakdown) {
         self.compute_s += other.compute_s;
         self.comm_total_s += other.comm_total_s;
         self.comm_overlap_s += other.comm_overlap_s;
         self.comm_pure_s += other.comm_pure_s;
         self.others_s += other.others_s;
+        self.overlap_hidden_s += other.overlap_hidden_s;
+        self.overlap_exposed_s += other.overlap_exposed_s;
         self.iterations += other.iterations;
     }
 }
@@ -162,7 +185,51 @@ pub fn charge_iteration_with(
     step_compute_s: f64,
     grad_algo: ReduceAlgo,
 ) {
-    let blocking = model.time(Collective::AllGather, vol.feature_gather_bytes)
+    let blocking = blocking_time(model, vol);
+    let grad = model.reduce_time(grad_algo, vol.grad_reduce_bytes);
+    let overlap = grad.min(OVERLAP_FRACTION * step_compute_s);
+
+    bd.comm_total_s += blocking + grad;
+    bd.comm_overlap_s += overlap;
+    bd.comm_pure_s += blocking + (grad - overlap);
+}
+
+/// Charge one PIPELINED iteration (DESIGN.md §11): the blocking gathers
+/// are modeled as in [`charge_iteration_with`], but the gradient phase is
+/// split by the **measured** hidden fraction of `report` — the share of
+/// reduction-worker time that actually ran under backward compute —
+/// instead of the [`OVERLAP_FRACTION`] heuristic. The measured seconds
+/// themselves accumulate into `overlap_hidden_s` / `overlap_exposed_s`,
+/// so reports can show both the modeled α–β split and the real one
+/// without double-counting either.
+pub fn charge_iteration_overlapped(
+    bd: &mut TimeBreakdown,
+    model: &CostModel,
+    vol: &IterationVolumes,
+    grad_algo: ReduceAlgo,
+    report: &OverlapReport,
+) {
+    let blocking = blocking_time(model, vol);
+    let grad = model.reduce_time(grad_algo, vol.grad_reduce_bytes);
+    let hidden = report.hidden_s();
+    let total = hidden + report.exposed_s;
+    let fraction = if total > 0.0 { hidden / total } else { 0.0 };
+    let overlap = grad * fraction;
+
+    bd.comm_total_s += blocking + grad;
+    bd.comm_overlap_s += overlap;
+    bd.comm_pure_s += blocking + (grad - overlap);
+    bd.overlap_hidden_s += hidden;
+    bd.overlap_exposed_s += report.exposed_s;
+}
+
+/// Modeled time of one iteration's blocking collectives — the feature
+/// gather, the u/τ scalar gather and OpenCLIP's REDUCE_SCATTER — which
+/// sit between forward and backward and can never overlap. Shared by the
+/// serial and pipelined charge paths so they always price the same
+/// volumes identically.
+fn blocking_time(model: &CostModel, vol: &IterationVolumes) -> f64 {
+    model.time(Collective::AllGather, vol.feature_gather_bytes)
         + if vol.scalar_gather_bytes > 0 {
             model.time(Collective::AllGather, vol.scalar_gather_bytes)
         } else {
@@ -172,13 +239,7 @@ pub fn charge_iteration_with(
             model.time(Collective::ReduceScatter, vol.reduce_scatter_bytes)
         } else {
             0.0
-        };
-    let grad = model.reduce_time(grad_algo, vol.grad_reduce_bytes);
-    let overlap = grad.min(OVERLAP_FRACTION * step_compute_s);
-
-    bd.comm_total_s += blocking + grad;
-    bd.comm_overlap_s += overlap;
-    bd.comm_pure_s += blocking + (grad - overlap);
+        }
 }
 
 #[cfg(test)]
@@ -263,6 +324,7 @@ mod tests {
             comm_pure_s: 0.6,
             others_s: 0.4,
             iterations: 2,
+            ..Default::default()
         };
         assert!((bd.total_s() - 3.0).abs() < 1e-12);
         let ms = bd.per_iter_ms();
@@ -297,6 +359,35 @@ mod tests {
         // the blocking (gather) part is identical across algorithms
         let blocking = |bd: &TimeBreakdown| bd.comm_total_s - m.reduce_time(ReduceAlgo::Ring, vol.grad_reduce_bytes);
         assert!((blocking(&ring) - blocking(&sharded)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlapped_charge_uses_measured_fraction() {
+        let m = model(8);
+        let vol = volumes(CommPattern::FastClip);
+        let grad = m.reduce_time(ReduceAlgo::Ring, vol.grad_reduce_bytes);
+
+        // 75% of the reduction measured as hidden → 75% of the modeled
+        // grad time moves off the critical path, heuristic ignored
+        let mut bd = TimeBreakdown::default();
+        let rep = OverlapReport { busy_s: 0.4, exposed_s: 0.1 };
+        charge_iteration_overlapped(&mut bd, &m, &vol, ReduceAlgo::Ring, &rep);
+        assert!((bd.comm_overlap_s - 0.75 * grad).abs() < 1e-12);
+        assert!((bd.overlap_hidden_s - 0.3).abs() < 1e-12);
+        assert!((bd.overlap_exposed_s - 0.1).abs() < 1e-12);
+        assert!((bd.comm_total_s - (bd.comm_pure_s + bd.comm_overlap_s)).abs() < 1e-12);
+
+        // nothing measured → nothing hidden (no double-counted win)
+        let mut none = TimeBreakdown::default();
+        charge_iteration_overlapped(&mut none, &m, &vol, ReduceAlgo::Ring, &Default::default());
+        assert_eq!(none.comm_overlap_s, 0.0);
+        assert!((none.comm_pure_s - none.comm_total_s).abs() < 1e-12);
+
+        // same total as the serial charge for the same volumes
+        let mut serial = TimeBreakdown::default();
+        charge_iteration_with(&mut serial, &m, &vol, 0.5, ReduceAlgo::Ring);
+        assert!((serial.comm_total_s - bd.comm_total_s).abs() < 1e-12);
+        assert_eq!(serial.overlap_hidden_s, 0.0, "serial runs measure no overlap");
     }
 
     #[test]

@@ -22,6 +22,16 @@
 //! strategies leave parameters bitwise replicated; `cfg.reduce` selects
 //! one (or `auto` asks the α–β cost model).
 //!
+//! With `--overlap on|auto` (DESIGN.md §11) steps 5–6 pipeline: the
+//! backward emits the gradient leaf by leaf
+//! ([`step_emit`](crate::runtime::ComputeBackend::step_emit)), completed
+//! [`BucketPlan`](crate::comm::BucketPlan) buckets reduce on a background
+//! worker over a dedicated sibling collective world, and the optimizer
+//! still applies exactly once per iteration — bitwise identical to the
+//! serial path for every variant × reduction algorithm, with the
+//! measured hidden/exposed reduction split charged to [`CommStats`] and
+//! the timing breakdown.
+//!
 //! Numerics are exact (bytes really move between threads); communication
 //! *time* is charged by the α–β cost model over the configured topology
 //! (`timing.rs`).
@@ -33,7 +43,10 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Result};
 
 use crate::ckpt::{self, CkptMeta, CkptRunStats};
-use crate::comm::{reduction, CommWorld, CostModel, ReduceAlgo, ReduceStrategy, WorkerComm};
+use crate::comm::{
+    reduction, BucketPlan, CommStats, CommWorld, CostModel, OverlapPipeline, ReduceAlgo,
+    ReduceStrategy, WorkerComm,
+};
 use crate::config::{OptimizerKind, TrainConfig};
 use crate::data::{Dataset, ShardLoader};
 use crate::eval::{evaluate, EvalSummary};
@@ -41,7 +54,9 @@ use crate::runtime::{ComputeBackend, Manifest, TauGrads, TauInput};
 
 use super::state::UState;
 use super::temperature::TauState;
-use super::timing::{charge_iteration_with, IterationVolumes, TimeBreakdown};
+use super::timing::{
+    charge_iteration_overlapped, charge_iteration_with, IterationVolumes, TimeBreakdown,
+};
 
 /// One logged training iteration (rank-0 view; loss is the global mean).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -72,6 +87,17 @@ pub struct TrainResult {
     pub timing: TimeBreakdown,
     /// the gradient-reduction algorithm the run resolved (`cfg.reduce`)
     pub reduce_algorithm: &'static str,
+    /// whether the bucketed overlap pipeline ran (`cfg.overlap` resolved
+    /// against the world size and bucket count, DESIGN.md §11)
+    pub overlap: bool,
+    /// buckets per iteration under `cfg.bucket_bytes` (1 when serial)
+    pub n_buckets: usize,
+    /// measured reduction time hidden behind backward compute (µs, one
+    /// rank; 0 for serial runs)
+    pub hidden_comm_us: u64,
+    /// measured reduction time still exposed on the critical path under
+    /// overlap (µs, one rank; 0 for serial runs)
+    pub exposed_comm_us: u64,
     /// real bytes moved through the in-process collectives, all ranks
     pub comm_bytes: u64,
     /// modeled gradient bytes-on-wire per rank over the whole run, under
@@ -147,20 +173,28 @@ impl Trainer {
     pub fn run(&self) -> Result<TrainResult> {
         let t0 = Instant::now();
         let k = self.manifest.k_workers;
-        let world = CommWorld::new(k);
+        // two sibling collective worlds over shared counters: the
+        // training world for the lockstep iteration, and a dedicated
+        // world for the overlap pipeline's bucket reductions so the
+        // background workers never interleave with training collectives
+        // (DESIGN.md §11; unused in serial mode)
+        let stats = Arc::new(CommStats::default());
+        let world = CommWorld::with_stats(k, Arc::clone(&stats));
+        let reduce_world = CommWorld::with_stats(k, Arc::clone(&stats));
         let cfg = Arc::new(self.cfg.clone());
         let dataset = Arc::new(Dataset::new(cfg.data, self.manifest.model_dims()));
 
         let mut joins = Vec::with_capacity(k);
         for rank in 0..k {
             let comm = world.handle(rank);
+            let reduce_comm = reduce_world.handle(rank);
             let cfg = Arc::clone(&cfg);
             let dataset = Arc::clone(&dataset);
             let manifest = self.manifest.clone();
             joins.push(
                 std::thread::Builder::new()
                     .name(format!("worker-{rank}"))
-                    .spawn(move || worker_loop(rank, comm, cfg, dataset, manifest))
+                    .spawn(move || worker_loop(rank, comm, reduce_comm, cfg, dataset, manifest))
                     .expect("spawn worker"),
             );
         }
@@ -185,10 +219,14 @@ impl Trainer {
             final_eval: out.final_eval.expect("rank 0 evaluates at end"),
             timing: out.timing,
             reduce_algorithm: out.reduce_id,
+            overlap: out.overlap,
+            n_buckets: out.n_buckets,
             comm_bytes: stats.payload_bytes(),
             // per-rank counters are charged by all K ranks; report one rank's
             grad_wire_bytes: stats.grad_wire_bytes / k as u64,
             grad_wire_bytes_naive: stats.grad_wire_bytes_naive / k as u64,
+            hidden_comm_us: stats.hidden_comm_us / k as u64,
+            exposed_comm_us: stats.exposed_comm_us / k as u64,
             modeled_iter_bytes: out.modeled_iter_bytes,
             final_tau: out.final_tau,
             final_params: out.params,
@@ -205,6 +243,8 @@ struct WorkerOutput {
     timing: TimeBreakdown,
     modeled_iter_bytes: usize,
     reduce_id: &'static str,
+    overlap: bool,
+    n_buckets: usize,
     final_tau: f32,
     params: Vec<f32>,
     ckpt: CkptRunStats,
@@ -213,6 +253,7 @@ struct WorkerOutput {
 fn worker_loop(
     rank: usize,
     comm: WorkerComm,
+    reduce_comm: WorkerComm,
     cfg: Arc<TrainConfig>,
     dataset: Arc<Dataset>,
     manifest: Manifest,
@@ -273,6 +314,17 @@ fn worker_loop(
         ),
         _ => crate::optim::build(&cfg.optimizer, p, manifest.segments()),
     };
+    // overlapped reduction (DESIGN.md §11): split the flat gradient into
+    // size-targeted buckets and reduce finished buckets on a background
+    // worker (over the dedicated reduce world) while the backward pass
+    // still writes later segments. Auto enables it exactly when there is
+    // something to hide: K > 1 and more than one bucket.
+    let plan = BucketPlan::for_bytes(p, cfg.bucket_bytes);
+    let n_buckets = plan.len();
+    let overlap_on = cfg.overlap.enabled(k, n_buckets);
+    let mut pipeline =
+        if overlap_on { Some(OverlapPipeline::spawn(reduce_comm, algo, plan, p)) } else { None };
+
     let n_scalar_vectors = if individual_tau { 4 } else { 2 };
     let volumes = IterationVolumes::for_pattern(
         cfg.algorithm.comm_pattern(),
@@ -378,35 +430,45 @@ fn worker_loop(
             TauInput::Global(tau.global_tau())
         };
 
-        // 5. gradient step ------------------------------------------ (compute)
-        let out = rt.step(
-            variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, offset,
-            cfg.eps, cfg.rho, tau_input,
-        )?;
-
-        // 6. reduce scalars; reduce gradient + apply optimizer -------- (comm)
-        let mut scalars = [out.loss, 0.0];
-        if let TauGrads::Global(g) = out.tau {
-            scalars[1] = g;
-        }
-        comm.all_reduce_sum(&mut scalars);
-        let (loss, tau_grad) = (scalars[0], scalars[1]);
-
-        // the strategy fuses reduction and optimizer application: the
-        // sharded algorithm must run the optimizer between its
-        // reduce-scatter and parameter all-gather phases
-        let mut grad = out.grad;
+        // 5+6. gradient step; reduce scalars; reduce gradient + apply
+        // the optimizer. Pipelined mode reduces buckets in the background
+        // as the backward emits them and only waits out the stragglers;
+        // serial mode reduces after the whole backward. Both paths apply
+        // the optimizer exactly once per iteration — for the sharded
+        // algorithm between the (bucketed) reduce-scatter and the
+        // parameter all-gather — so they are bitwise identical.
         let mut opt_s = 0.0f64;
-        reducer.reduce_and_apply(&comm, &mut grad, &mut params, &mut |pslice, gslice| {
-            let t_opt = Instant::now();
-            optimizer.step(pslice, gslice, lr);
-            opt_s += t_opt.elapsed().as_secs_f64();
-        });
+        let (loss, tau_grad, tau_grads, overlap_rep) = if let Some(pipe) = pipeline.as_mut() {
+            let emit = rt.step_emit(
+                variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, offset,
+                cfg.eps, cfg.rho, tau_input, &mut |off, seg| pipe.emit(off, seg),
+            )?;
+            let (loss, tau_grad) = reduce_step_scalars(&comm, emit.loss, &emit.tau);
+            let rep = pipe.finish(&comm, &mut params, &mut |pslice, gslice| {
+                let t_opt = Instant::now();
+                optimizer.step(pslice, gslice, lr);
+                opt_s += t_opt.elapsed().as_secs_f64();
+            })?;
+            (loss, tau_grad, emit.tau, Some(rep))
+        } else {
+            let out = rt.step(
+                variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, offset,
+                cfg.eps, cfg.rho, tau_input,
+            )?;
+            let (loss, tau_grad) = reduce_step_scalars(&comm, out.loss, &out.tau);
+            let mut grad = out.grad;
+            reducer.reduce_and_apply(&comm, &mut grad, &mut params, &mut |pslice, gslice| {
+                let t_opt = Instant::now();
+                optimizer.step(pslice, gslice, lr);
+                opt_s += t_opt.elapsed().as_secs_f64();
+            });
+            (loss, tau_grad, out.tau, None)
+        };
         others_s += opt_s;
 
         // 7. temperature + schedules ---------------------------------- (others)
         let t_other = Instant::now();
-        match (&mut tau, out.tau) {
+        match (&mut tau, tau_grads) {
             (TauState::Constant(_), _) => {}
             (TauState::Global(g), TauGrads::Global(_)) => g.step(tau_grad),
             (TauState::Individual(it), TauGrads::Individual { tau1, tau2 }) => {
@@ -416,12 +478,21 @@ fn worker_loop(
         }
         others_s += t_other.elapsed().as_secs_f64();
 
-        // timing bookkeeping
+        // timing bookkeeping: pipelined iterations charge the measured
+        // hidden/exposed reduction split (never the serial heuristic on
+        // top of it — no double-counted overlap win)
         let step_compute = rt.timers().step_s - step_before;
         timing.compute_s += rt.timers().compute_s() - compute_before;
         timing.others_s += others_s;
         timing.iterations += 1;
-        charge_iteration_with(&mut timing, &cost, &volumes, step_compute, algo);
+        match &overlap_rep {
+            Some(rep) => {
+                let to_us = |s: f64| (s * 1e6) as u64;
+                comm.stats().add_overlap_us(to_us(rep.hidden_s()), to_us(rep.exposed_s));
+                charge_iteration_overlapped(&mut timing, &cost, &volumes, algo, rep);
+            }
+            None => charge_iteration_with(&mut timing, &cost, &volumes, step_compute, algo),
+        }
 
         if rank == 0 {
             history.push(IterRecord { step: t, epoch, loss, gamma, lr, tau: tau.mean_tau() });
@@ -491,6 +562,10 @@ fn worker_loop(
     };
     comm.barrier();
 
+    // close the job channel and join the reduction worker before the
+    // output leaves the thread
+    drop(pipeline);
+
     Ok(WorkerOutput {
         history,
         evals,
@@ -498,10 +573,25 @@ fn worker_loop(
         timing,
         modeled_iter_bytes: volumes.total_bytes(),
         reduce_id: algo.id(),
+        overlap: overlap_on,
+        n_buckets,
         final_tau: tau.mean_tau(),
         params,
         ckpt: ckpt_stats,
     })
+}
+
+/// SUM-all-reduce one step's scalar contributions — the loss and, for
+/// global temperature rules, dL/dτ. One shared implementation for the
+/// serial and pipelined paths, so the two can never drift in what they
+/// reduce. Returns `(global_loss, global_tau_grad)`.
+fn reduce_step_scalars(comm: &WorkerComm, loss: f32, tau: &TauGrads) -> (f32, f32) {
+    let mut scalars = [loss, 0.0];
+    if let TauGrads::Global(g) = tau {
+        scalars[1] = *g;
+    }
+    comm.all_reduce_sum(&mut scalars);
+    (scalars[0], scalars[1])
 }
 
 /// Collective error propagation for the checkpoint protocol: all ranks
@@ -627,6 +717,41 @@ mod tests {
         assert!(sharded.grad_wire_bytes < sharded.grad_wire_bytes_naive);
         assert_eq!(naive.grad_wire_bytes, naive.grad_wire_bytes_naive);
         assert_eq!(sharded.reduce_algorithm, "sharded");
+    }
+
+    #[test]
+    fn overlap_auto_stays_serial_when_one_bucket() {
+        // tiny preset gradient (~74 KB) fits one default 4 MB bucket:
+        // auto must resolve to the serial path, with zero overlap charged
+        let r = Trainer::new(quick_cfg(Algorithm::FastClipV1, 2)).unwrap().run().unwrap();
+        assert!(!r.overlap);
+        assert_eq!(r.n_buckets, 1);
+        assert_eq!(r.hidden_comm_us, 0);
+        assert_eq!(r.exposed_comm_us, 0);
+        assert_eq!(r.timing.overlap_hidden_s, 0.0);
+    }
+
+    #[test]
+    fn overlap_on_bitwise_equals_serial_quick() {
+        use crate::comm::OverlapMode;
+        let run = |overlap: OverlapMode| {
+            let mut cfg = quick_cfg(Algorithm::FastClipV3, 5);
+            cfg.overlap = overlap;
+            cfg.bucket_bytes = 4 << 10; // ~19 buckets over the tiny preset
+            Trainer::new(cfg).unwrap().run().unwrap()
+        };
+        let serial = run(OverlapMode::Off);
+        let piped = run(OverlapMode::On);
+        assert!(piped.overlap && !serial.overlap);
+        assert!(piped.n_buckets > 1, "small buckets must split the gradient");
+        assert_eq!(serial.final_params, piped.final_params, "bitwise");
+        for (a, b) in serial.history.iter().zip(&piped.history) {
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.tau, b.tau);
+        }
+        // the pipeline measured its reduction split; serial charged none
+        assert!(piped.hidden_comm_us > 0 || piped.exposed_comm_us > 0);
+        assert_eq!(serial.hidden_comm_us + serial.exposed_comm_us, 0);
     }
 
     #[test]

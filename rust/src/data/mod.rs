@@ -6,6 +6,10 @@
 //! frequencies are long-tailed (zipf), and held-out splits support
 //! retrieval, zero-shot classification and distribution-shifted variants —
 //! the same measurement kinds as the Datacomp benchmark.
+// Not yet part of the rustdoc-gated public surface (ISSUE 4 scoped the
+// doc pass to comm/, ckpt/, kernels/ and the runtime backend); the doc
+// lint is opted out here until this module gets its own pass.
+#![allow(missing_docs)]
 
 mod loader;
 mod synthetic;

@@ -11,6 +11,10 @@
 //! * **Datacomp** = mean over all task scores.
 //!
 //! All scores are percentages in [0, 100].
+// Not yet part of the rustdoc-gated public surface (ISSUE 4 scoped the
+// doc pass to comm/, ckpt/, kernels/ and the runtime backend); the doc
+// lint is opted out here until this module gets its own pass.
+#![allow(missing_docs)]
 
 mod metrics;
 

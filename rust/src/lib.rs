@@ -15,8 +15,14 @@
 //!   [`runtime::ComputeBackend`] trait (`--backend native|pjrt|auto`).
 //!
 //! Entry points: [`coordinator::Trainer`] for training (with periodic
-//! snapshots and `--resume` through [`ckpt`], DESIGN.md §9),
+//! snapshots and `--resume` through [`ckpt`], DESIGN.md §9; overlapped
+//! bucketed gradient reduction via `--overlap`, DESIGN.md §11),
 //! [`bench`] for the paper's tables/figures, the `fastclip` CLI for both.
+
+// The documented public surface (comm, ckpt, kernels, runtime) is gated
+// by the CI `docs` job (RUSTDOCFLAGS="-D warnings" + doctests); modules
+// outside it opt out locally until their own doc pass lands.
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod ckpt;

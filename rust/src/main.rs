@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   train       run one training configuration (flags or --config preset)
 //!   eval        evaluate saved parameters on the synthetic benchmark
-//!   exp <id>    regenerate a paper table/figure (see `exp list`)
+//!   exp `<id>`  regenerate a paper table/figure (see `exp list`)
 //!   comm-bench  α–β cost-model sweep over node counts
 //!   inspect     print an artifact bundle's manifest summary
 //!   ckpt        inspect/verify training checkpoints (DESIGN.md §9)
@@ -74,6 +74,8 @@ fn print_help() {
              --eps E --rho R --tau-init T --eval-every N\n\
              --nodes N --gpus-per-node M --network {nets}\n\
              --reduce naive|ring|sharded|auto   gradient-reduction strategy\n\
+             --overlap on|off|auto   overlap bucketed reduction with backward\n\
+             --bucket-mb N           bucket size for the overlap pipeline (MB)\n\
              --ckpt-dir <dir> --ckpt-every N --keep-last N   periodic snapshots\n\
              --resume <dir|latest>              resume a checkpointed run\n\
              --save <file>      save final parameters (f32 LE)\n\
@@ -122,6 +124,12 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     cfg.reduce = fastclip::comm::ReduceStrategy::from_id(
         &args.str_or("reduce", cfg.reduce.id()),
     )?;
+    cfg.overlap = fastclip::comm::OverlapMode::from_id(
+        &args.str_or("overlap", cfg.overlap.id()),
+    )?;
+    if args.get("bucket-mb").is_some() {
+        cfg.bucket_bytes = args.usize_or("bucket-mb", 0)? << 20;
+    }
     cfg.lr.peak = args.f32_or("lr", cfg.lr.peak)?;
     cfg.lr.total_iters = cfg.steps;
     cfg.lr.warmup_iters = args.u32_or("warmup", cfg.steps / 10)?;
@@ -186,6 +194,22 @@ fn train(args: &Args) -> Result<()> {
     t.row(vec!["  others".into(), format!("{:.2}", ms.others)]);
     t.row(vec!["real bytes moved".into(), format!("{}", result.comm_bytes)]);
     t.row(vec!["grad reduction".into(), result.reduce_algorithm.into()]);
+    if result.overlap {
+        t.row(vec![
+            "overlap pipeline".into(),
+            format!("on ({} buckets/iter)", result.n_buckets),
+        ]);
+        t.row(vec![
+            "  reduction hidden/exposed".into(),
+            format!(
+                "{:.1} ms / {:.1} ms measured",
+                result.hidden_comm_us as f64 / 1e3,
+                result.exposed_comm_us as f64 / 1e3
+            ),
+        ]);
+    } else {
+        t.row(vec!["overlap pipeline".into(), "off (serial reduction)".into()]);
+    }
     t.row(vec![
         "grad wire bytes/rank".into(),
         format!(

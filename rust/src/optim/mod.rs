@@ -6,6 +6,10 @@
 //! All state lives here in Rust; the HLO step graphs only produce
 //! gradients. A scalar AdamW (`ScalarAdam`) drives the learnable
 //! temperature (Proc. 5 uses Proc. 4 with λ=0).
+// Not yet part of the rustdoc-gated public surface (ISSUE 4 scoped the
+// doc pass to comm/, ckpt/, kernels/ and the runtime backend); the doc
+// lint is opted out here until this module gets its own pass.
+#![allow(missing_docs)]
 
 use anyhow::{ensure, Result};
 

@@ -1,6 +1,10 @@
 //! Result sinks: pretty console tables, CSV files and JSON result files.
 //! The experiment harness ([`crate::bench`]) prints the paper-shaped rows
 //! through [`Table`] and persists machine-readable copies under `results/`.
+// Not yet part of the rustdoc-gated public surface (ISSUE 4 scoped the
+// doc pass to comm/, ckpt/, kernels/ and the runtime backend); the doc
+// lint is opted out here until this module gets its own pass.
+#![allow(missing_docs)]
 
 use std::fmt::Write as _;
 use std::path::Path;

@@ -45,15 +45,31 @@ pub struct StepOutput {
     pub grad: Vec<f32>,
     /// this worker's loss contribution (SUM-all-reduce it)
     pub loss: f32,
+    /// this worker's temperature-gradient contribution
+    pub tau: TauGrads,
+}
+
+/// Scalar outputs of a segment-emitting step
+/// ([`ComputeBackend::step_emit`]): everything [`StepOutput`] carries
+/// except the gradient, which went through the sink.
+#[derive(Debug, Clone)]
+pub struct StepEmit {
+    /// this worker's loss contribution (SUM-all-reduce it)
+    pub loss: f32,
+    /// this worker's temperature-gradient contribution
     pub tau: TauGrads,
 }
 
 /// Cumulative executor-side timing, for the Fig. 3 breakdown.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct RuntimeTimers {
+    /// seconds in `encode` executions
     pub encode_s: f64,
+    /// seconds in `phase_g` executions
     pub phase_g_s: f64,
+    /// seconds in `step_<variant>` executions
     pub step_s: f64,
+    /// seconds marshalling data in and out of the engine
     pub io_s: f64,
 }
 
@@ -117,6 +133,43 @@ pub trait ComputeBackend {
         rho: f32,
         tau: TauInput,
     ) -> Result<StepOutput>;
+
+    /// Segment-ordered gradient emission: like [`Self::step`], but
+    /// delivers the gradient through `sink(offset, segment)` calls in
+    /// strictly ascending, contiguous offsets that tile `[0, P)`, each
+    /// segment emitted **as soon as its value is final** — the hook the
+    /// overlapped reduction pipeline
+    /// ([`OverlapPipeline`](crate::comm::OverlapPipeline), DESIGN.md §11)
+    /// hangs buckets on. The concatenated segments are bitwise-identical
+    /// to [`Self::step`]'s `grad`.
+    ///
+    /// The default forwards to [`Self::step`] and emits the whole
+    /// gradient as one segment: correct for any backend, zero intra-step
+    /// overlap. [`NativeBackend`](super::NativeBackend) overrides it to
+    /// emit each parameter leaf as its backward finishes.
+    #[allow(clippy::too_many_arguments)]
+    fn step_emit(
+        &mut self,
+        variant: &str,
+        params: &[f32],
+        images: &[f32],
+        texts: &[i32],
+        e1g: &[f32],
+        e2g: &[f32],
+        u1g: &[f32],
+        u2g: &[f32],
+        offset: usize,
+        eps: f32,
+        rho: f32,
+        tau: TauInput,
+        sink: &mut dyn FnMut(usize, &[f32]),
+    ) -> Result<StepEmit> {
+        let out = self.step(
+            variant, params, images, texts, e1g, e2g, u1g, u2g, offset, eps, rho, tau,
+        )?;
+        sink(0, &out.grad);
+        Ok(StepEmit { loss: out.loss, tau: out.tau })
+    }
 }
 
 /// Which compute backend a run requests (`--backend`, config `backend`).
@@ -132,10 +185,12 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Every backend kind, for id round-trips.
     pub fn all() -> [BackendKind; 3] {
         [BackendKind::Auto, BackendKind::Native, BackendKind::Pjrt]
     }
 
+    /// CLI/config id: `auto` | `native` | `pjrt`.
     pub fn id(&self) -> &'static str {
         match self {
             BackendKind::Auto => "auto",

@@ -15,30 +15,42 @@ use crate::util::Json;
 /// `ModelConfig`; the rest only matters at lowering time).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ModelInfo {
+    /// embedding width d
     pub d_embed: usize,
+    /// image patches per sample
     pub v_patches: usize,
+    /// flattened size of one patch
     pub v_patch_dim: usize,
+    /// text vocabulary size
     pub t_vocab: usize,
+    /// tokens per text sample
     pub t_len: usize,
 }
 
 /// One leaf of the flat parameter vector (LAMB normalizes per leaf).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParamSegment {
+    /// leaf name, e.g. `v.proj` / `t.tok`
     pub name: String,
+    /// first element in the flat vector
     pub offset: usize,
+    /// element count
     pub size: usize,
 }
 
 /// Shape+dtype of one executable input/output.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSig {
+    /// argument/result name
     pub name: String,
+    /// dimensions (empty = scalar)
     pub shape: Vec<usize>,
+    /// dtype string as lowered (e.g. `f32`, `s32`)
     pub dtype: String,
 }
 
 impl TensorSig {
+    /// Total element count (1 for scalars).
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -47,23 +59,39 @@ impl TensorSig {
 /// Signature of one executable.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ExecSig {
+    /// executable name (`encode`, `phase_g`, `step_<variant>`)
     pub name: String,
+    /// input signatures, in call order
     pub inputs: Vec<TensorSig>,
+    /// output signatures, in result order
     pub outputs: Vec<TensorSig>,
 }
 
+/// The typed view of one bundle's `manifest.json` — or, for the native
+/// backend, the synthesized equivalent ([`Manifest::native`]).
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// bundle directory (empty for native manifests)
     pub dir: PathBuf,
+    /// model preset name (tiny|small|medium|base)
     pub preset: String,
+    /// interface dimensions
     pub model: ModelInfo,
+    /// flat parameter-vector length P
     pub n_params: usize,
+    /// per-leaf segmentation of the flat vector (tiles [0, P) in order)
     pub param_spec: Vec<ParamSegment>,
+    /// worker count K the bundle was lowered for
     pub k_workers: usize,
+    /// per-worker batch size Bl
     pub local_batch: usize,
+    /// global batch Bg = K · Bl
     pub global_batch: usize,
+    /// init seed (native manifests generate parameters from it)
     pub seed: u64,
+    /// the `step_<variant>` graphs available
     pub variants: Vec<String>,
+    /// executable signatures (empty for native manifests)
     pub executables: Vec<ExecSig>,
     /// true for synthesized native-backend manifests (DESIGN.md §10):
     /// no artifact directory, no executables, parameters generated
@@ -104,6 +132,7 @@ impl Manifest {
         Ok(manifest)
     }
 
+    /// Load and validate `<dir>/manifest.json` (an artifact bundle).
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let j = Json::parse_file(&dir.join("manifest.json"))?;
@@ -195,10 +224,12 @@ impl Manifest {
         Ok(())
     }
 
+    /// Signature of executable `name`, if the bundle carries it.
     pub fn exec_sig(&self, name: &str) -> Option<&ExecSig> {
         self.executables.iter().find(|e| e.name == name)
     }
 
+    /// Path of executable `name`'s HLO-text file in the bundle.
     pub fn hlo_path(&self, name: &str) -> PathBuf {
         self.dir.join(format!("{name}.hlo.txt"))
     }

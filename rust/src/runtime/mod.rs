@@ -29,7 +29,9 @@ mod worker;
 
 use anyhow::Result;
 
-pub use backend::{BackendKind, ComputeBackend, RuntimeTimers, StepOutput, TauGrads, TauInput};
+pub use backend::{
+    BackendKind, ComputeBackend, RuntimeTimers, StepEmit, StepOutput, TauGrads, TauInput,
+};
 pub use manifest::{ExecSig, Manifest, ModelInfo, ParamSegment, TensorSig};
 pub use native::NativeBackend;
 pub use worker::WorkerRuntime;

@@ -48,7 +48,7 @@ use anyhow::{ensure, Result};
 use crate::kernels::{encoder, gemm, norm, resolve_threads, softmax};
 use crate::util::Rng;
 
-use super::backend::{ComputeBackend, RuntimeTimers, StepOutput, TauGrads, TauInput};
+use super::backend::{ComputeBackend, RuntimeTimers, StepEmit, StepOutput, TauGrads, TauInput};
 use super::manifest::{Manifest, ModelInfo, ParamSegment};
 
 /// The step variants the native backend implements — all of Table 1.
@@ -146,6 +146,10 @@ struct EncodeCache {
     e2: Vec<f32>,
 }
 
+/// The pure-Rust compute engine: the full `encode` / `phase_g` /
+/// `step_<variant>` surface over [`crate::kernels`], no artifacts, no
+/// Python, bitwise deterministic at any kernel thread count (see the
+/// module docs and DESIGN.md §10).
 pub struct NativeBackend {
     manifest: Manifest,
     layout: Layout,
@@ -456,8 +460,40 @@ impl ComputeBackend for NativeBackend {
         rho: f32,
         tau: TauInput,
     ) -> Result<StepOutput> {
+        // the emitting path is the implementation; assembling its
+        // segments here is exactly the old whole-gradient layout
+        let p = self.manifest.n_params;
+        let mut grad = vec![0.0f32; p];
+        let out = self.step_emit(
+            variant, params, images, texts, e1g, e2g, u1g, u2g, offset, eps, rho, tau,
+            &mut |off, seg| grad[off..off + seg.len()].copy_from_slice(seg),
+        )?;
+        Ok(StepOutput { grad, loss: out.loss, tau: out.tau })
+    }
+
+    /// The native backward emits each parameter leaf the moment its
+    /// gradient is final, in layout order: `v.proj`, `v.bias` right after
+    /// the image-side backward, then `t.tok`, `t.bias` after the
+    /// text-side backward — so the overlap pipeline can start reducing
+    /// the image leaves while the text backward is still running.
+    fn step_emit(
+        &mut self,
+        variant: &str,
+        params: &[f32],
+        images: &[f32],
+        texts: &[i32],
+        e1g: &[f32],
+        e2g: &[f32],
+        u1g: &[f32],
+        u2g: &[f32],
+        offset: usize,
+        eps: f32,
+        rho: f32,
+        tau: TauInput,
+        sink: &mut dyn FnMut(usize, &[f32]),
+    ) -> Result<StepEmit> {
         let m = &self.manifest;
-        let (bl, bg, d, p) = (m.local_batch, m.global_batch, m.model.d_embed, m.n_params);
+        let (bl, bg, d) = (m.local_batch, m.global_batch, m.model.d_embed);
         ensure!(VARIANTS.contains(&variant), "unknown step variant '{variant}'");
         self.check_encode_inputs(params, images, texts)?;
         ensure!(e1g.len() == bg * d && e2g.len() == bg * d, "gathered feats len");
@@ -582,18 +618,20 @@ impl ComputeBackend for NativeBackend {
         }
 
         // ---- backprop through normalize + encoders ----------------------
+        // segment-ordered emission (DESIGN.md §11): each leaf's gradient
+        // goes to the sink the moment it is final, image side first —
+        // its buckets reduce in the background while the text backward
+        // (the t.tok scatter, usually the largest leaf) still runs
         let dpooled1 = norm::l2_normalize_bwd(&cache.pooled1, &cache.norms1, &de1, bl, d, threads);
         let (dw, dbv) =
             encoder::image_bwd(&cache.xbar, &dpooled1, bl, m.model.v_patch_dim, d, threads);
+        sink(self.layout.vproj.0, &dw);
+        sink(self.layout.vbias.0, &dbv);
         let dpooled2 = norm::l2_normalize_bwd(&cache.pooled2, &cache.norms2, &de2, bl, d, threads);
         let (dtok, dbt) =
             encoder::text_bwd(texts, &dpooled2, bl, m.model.t_len, m.model.t_vocab, d);
-
-        let mut grad = vec![0.0f32; p];
-        grad[self.layout.vproj.0..self.layout.vproj.1].copy_from_slice(&dw);
-        grad[self.layout.vbias.0..self.layout.vbias.1].copy_from_slice(&dbv);
-        grad[self.layout.ttok.0..self.layout.ttok.1].copy_from_slice(&dtok);
-        grad[self.layout.tbias.0..self.layout.tbias.1].copy_from_slice(&dbt);
+        sink(self.layout.ttok.0, &dtok);
+        sink(self.layout.tbias.0, &dbt);
 
         // ---- loss + temperature gradients -------------------------------
         let loss = local_loss(variant, u1l, u2l, tau1l, tau2l, eps, rho, bgf, k as f32);
@@ -631,7 +669,7 @@ impl ComputeBackend for NativeBackend {
             }
         };
         self.timers.step_s += t0.elapsed().as_secs_f64();
-        Ok(StepOutput { grad, loss, tau: tau_out })
+        Ok(StepEmit { loss, tau: tau_out })
     }
 }
 
@@ -736,6 +774,58 @@ mod tests {
                 (_, TauGrads::Global(g)) => assert!(g.is_finite(), "{variant}"),
                 _ => panic!("{variant}: wrong tau grad kind"),
             }
+        }
+    }
+
+    #[test]
+    fn step_emit_segments_tile_and_match_step_bitwise() {
+        let mut rt = {
+            let m = Manifest::native("tiny", 2, 8, 3).unwrap();
+            NativeBackend::new(&m, None, 2).unwrap()
+        };
+        let m = rt.manifest().clone();
+        let (params, images, texts) = demo_inputs(&m, 13);
+        let (e1, e2) = rt.encode(&params, &images, &texts).unwrap();
+        let e1g = [e1.clone(), e1.clone()].concat();
+        let e2g = [e2.clone(), e2.clone()].concat();
+        let bg = m.global_batch;
+        let (u1g, u2g) = (vec![0.7; bg], vec![0.6; bg]);
+        for variant in VARIANTS {
+            let taus: Vec<f32> = (0..bg).map(|i| 0.04 + 0.001 * i as f32).collect();
+            let tau = if variant == "rgcl_i" {
+                TauInput::Individual { tau1g: &taus, tau2g: &taus }
+            } else {
+                TauInput::Global(0.05)
+            };
+            let whole = rt
+                .step(
+                    variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-8, 6.5,
+                    tau.clone(),
+                )
+                .unwrap();
+            // emission: contiguous ascending segments (one per leaf)
+            // whose concatenation is bitwise the whole gradient
+            let mut assembled = vec![0.0f32; m.n_params];
+            let mut cursor = 0usize;
+            let mut n_segments = 0usize;
+            let emit = rt
+                .step_emit(
+                    variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-8, 6.5,
+                    tau,
+                    &mut |off, seg| {
+                        assert_eq!(off, cursor, "{variant}: segments must be contiguous");
+                        assembled[off..off + seg.len()].copy_from_slice(seg);
+                        cursor = off + seg.len();
+                        n_segments += 1;
+                    },
+                )
+                .unwrap();
+            assert_eq!(cursor, m.n_params, "{variant}: segments tile [0, P)");
+            assert_eq!(n_segments, 4, "{variant}: one segment per parameter leaf");
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&assembled), bits(&whole.grad), "{variant}");
+            assert_eq!(emit.loss.to_bits(), whole.loss.to_bits(), "{variant}");
+            assert_eq!(emit.tau, whole.tau, "{variant}");
         }
     }
 

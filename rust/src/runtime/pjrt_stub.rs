@@ -9,6 +9,10 @@
 //! client-construction time with an actionable message. Everything that
 //! needs to *execute* an artifact already skips gracefully when the
 //! artifact bundles are absent, which is always the case in a stub build.
+// Not yet part of the rustdoc-gated public surface (ISSUE 4 scoped the
+// doc pass to comm/, ckpt/, kernels/ and the runtime backend); the doc
+// lint is opted out here until this module gets its own pass.
+#![allow(missing_docs)]
 
 use std::fmt;
 use std::path::Path;

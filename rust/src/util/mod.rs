@@ -2,6 +2,10 @@
 //! `xla` + `anyhow`): a deterministic splittable PRNG, a JSON
 //! parser/writer (artifact manifests, result files), a small CLI argument
 //! parser, a key-value config file format, and numeric helpers.
+// Not yet part of the rustdoc-gated public surface (ISSUE 4 scoped the
+// doc pass to comm/, ckpt/, kernels/ and the runtime backend); the doc
+// lint is opted out here until this module gets its own pass.
+#![allow(missing_docs)]
 
 mod cli;
 mod json;

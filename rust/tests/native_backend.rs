@@ -10,9 +10,14 @@
 //! 3. **Gradient correctness** — the hand-derived surrogate gradient
 //!    matches a finite-difference oracle of the surrogate value, per
 //!    variant.
+//! 4. **Overlap determinism** (DESIGN.md §11) — the bucketed async
+//!    reduction pipeline (`--overlap on`) trains bitwise-identically to
+//!    the serial path for all 5 loss variants × naive|ring|sharded, and
+//!    checkpoint/resume stays bitwise-exact under overlap.
 //!
 //! Everything runs unconditionally: no artifacts, no pjrt feature.
 
+use fastclip::comm::{OverlapMode, ReduceAlgo, ReduceStrategy};
 use fastclip::config::{Algorithm, DataConfig, TrainConfig};
 use fastclip::coordinator::Trainer;
 use fastclip::kernels::{gemm, norm, softmax};
@@ -260,6 +265,123 @@ fn step_gradient_matches_finite_difference_oracle() {
             );
         }
     }
+}
+
+// -------------------------------------------------------------------------
+// 4. overlap determinism: the bucketed async pipeline is bitwise equal to
+//    serial training for every variant × reduction algorithm
+// -------------------------------------------------------------------------
+
+fn overlap_cfg(algo: Algorithm, reduce: ReduceAlgo, overlap: OverlapMode) -> TrainConfig {
+    let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", algo);
+    cfg.backend = BackendKind::Native;
+    cfg.kernel_threads = 1;
+    cfg.steps = 4;
+    cfg.iters_per_epoch = 2;
+    cfg.data = DataConfig { n_train: 64, n_eval: 16, n_classes: 8, ..DataConfig::default() };
+    cfg.lr.warmup_iters = 1;
+    cfg.lr.total_iters = 4;
+    cfg.reduce = ReduceStrategy::Fixed(reduce);
+    cfg.overlap = overlap;
+    // ~2 KB buckets split the tiny preset's ~74 KB gradient into ~37
+    // buckets, crossing every parameter-leaf boundary
+    cfg.bucket_bytes = 2 << 10;
+    cfg
+}
+
+/// The acceptance matrix of DESIGN.md §11: 5 step variants (one
+/// representative algorithm each) × 3 reduction algorithms, `--overlap
+/// on` bitwise-equal to `--overlap off` in parameters, losses and τ.
+#[test]
+fn overlap_bitwise_equals_serial_all_variants_and_reduces() {
+    // one algorithm per step variant: mbcl, gcl, gcl_v0, rgcl_i, rgcl_g
+    let variants = [
+        Algorithm::OpenClip,
+        Algorithm::FastClipV1,
+        Algorithm::FastClipV0,
+        Algorithm::FastClipV2,
+        Algorithm::FastClipV3,
+    ];
+    for algo in variants {
+        for reduce in ReduceAlgo::all() {
+            let label = format!("{} x {}", algo.id(), reduce.id());
+            let serial = Trainer::new(overlap_cfg(algo, reduce, OverlapMode::Off))
+                .unwrap()
+                .run()
+                .unwrap_or_else(|e| panic!("{label} serial: {e:#}"));
+            let piped = Trainer::new(overlap_cfg(algo, reduce, OverlapMode::On))
+                .unwrap()
+                .run()
+                .unwrap_or_else(|e| panic!("{label} overlap: {e:#}"));
+            assert!(piped.overlap && !serial.overlap, "{label}");
+            assert!(piped.n_buckets > 1, "{label}: gradient must split into buckets");
+            assert_eq!(
+                bits(&serial.final_params),
+                bits(&piped.final_params),
+                "{label}: overlapped params must be bitwise serial"
+            );
+            for (s, p) in serial.history.iter().zip(&piped.history) {
+                assert_eq!(s.loss.to_bits(), p.loss.to_bits(), "{label} step {}", s.step);
+                assert_eq!(s.tau.to_bits(), p.tau.to_bits(), "{label} step {}", s.step);
+            }
+            assert_eq!(serial.final_tau.to_bits(), piped.final_tau.to_bits(), "{label}");
+        }
+    }
+}
+
+/// Checkpoint/resume stays bitwise-exact under `--overlap on`: a
+/// snapshotted + resumed overlapped run matches both the uninterrupted
+/// overlapped run and the uninterrupted serial run.
+#[test]
+fn overlap_snapshot_resume_bitwise() {
+    let root = std::env::temp_dir().join(format!("fastclip_overlap_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let base = || {
+        let mut cfg = overlap_cfg(Algorithm::FastClipV3, ReduceAlgo::Sharded, OverlapMode::On);
+        cfg.steps = 8;
+        cfg.lr.total_iters = 8;
+        cfg.ckpt_dir = Some(root.to_string_lossy().into_owned());
+        cfg.ckpt_every = 4;
+        cfg
+    };
+    let continuous = Trainer::new(base()).unwrap().run().unwrap();
+    assert!(continuous.overlap);
+    assert_eq!(continuous.ckpt.snapshots, 2);
+
+    let mut serial_cfg = base();
+    serial_cfg.overlap = OverlapMode::Off;
+    serial_cfg.ckpt_dir = None;
+    serial_cfg.ckpt_every = 0;
+    let serial = Trainer::new(serial_cfg).unwrap().run().unwrap();
+    assert_eq!(
+        bits(&continuous.final_params),
+        bits(&serial.final_params),
+        "overlapped training with snapshots equals serial training"
+    );
+
+    let mut resumed_cfg = base();
+    resumed_cfg.resume = Some(ckpt_step_dir(&root, 4));
+    let resumed = Trainer::new(resumed_cfg).unwrap().run().unwrap();
+    assert_eq!(resumed.ckpt.resumed_at, Some(4));
+    assert_eq!(
+        bits(&continuous.final_params),
+        bits(&resumed.final_params),
+        "resume under overlap is bitwise"
+    );
+
+    // overlap is an execution detail, not training state: a snapshot
+    // written under overlap resumes bitwise in serial mode too
+    let mut cross_cfg = base();
+    cross_cfg.overlap = OverlapMode::Off;
+    cross_cfg.resume = Some(ckpt_step_dir(&root, 4));
+    let cross = Trainer::new(cross_cfg).unwrap().run().unwrap();
+    assert!(!cross.overlap);
+    assert_eq!(
+        bits(&continuous.final_params),
+        bits(&cross.final_params),
+        "serial resume of an overlapped snapshot is bitwise"
+    );
+    let _ = std::fs::remove_dir_all(&root);
 }
 
 // -------------------------------------------------------------------------
