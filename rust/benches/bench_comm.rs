@@ -72,11 +72,17 @@ fn bench_reduction(algo: ReduceAlgo, k: usize, n: usize) -> fastclip::comm::Comm
                 std::thread::spawn(move || {
                     let mut grad = vec![rank as f32 + 0.5; n];
                     let mut params = vec![1.0f32; n];
-                    reduction(algo).reduce_and_apply(&h, &mut grad, &mut params, &mut |p, g| {
-                        for (pi, gi) in p.iter_mut().zip(g) {
-                            *pi -= 1e-3 * gi;
-                        }
-                    });
+                    reduction(algo).reduce_and_apply(
+                        &h,
+                        &mut grad,
+                        &mut params,
+                        fastclip::kernels::Precision::F32,
+                        &mut |p, g| {
+                            for (pi, gi) in p.iter_mut().zip(g) {
+                                *pi -= 1e-3 * gi;
+                            }
+                        },
+                    );
                     black_box(params[0]);
                 })
             })

@@ -2,15 +2,21 @@
 //! full distributed iterations (encode → gathers → phase_g → step →
 //! reduce → optimizer) per algorithm on the NATIVE backend, reporting
 //! the Fig. 3 compute / pure-comm / overlap / others split plus real
-//! iteration throughput, **serial vs overlapped** (DESIGN.md §11): every
-//! algorithm runs once with `--overlap off` and once with the bucketed
-//! pipeline on, and the report carries both rows plus the speedup.
+//! iteration throughput, **serial vs overlapped** (DESIGN.md §11) and
+//! **f32 vs bf16** (DESIGN.md §12): every algorithm runs serial-f32,
+//! overlapped-f32 and serial-bf16, and the report carries all three rows
+//! plus the speedups. A trailing wire-format section measures the
+//! per-iteration gradient bytes-on-wire for every reduction algorithm at
+//! both precisions (`wire/<algo>/<precision>` rows) and asserts the bf16
+//! wire format halves them exactly.
 //!
 //! Runs on any machine (no artifacts). CI (`bench-smoke`) runs it in
 //! `--quick` mode, writes `BENCH_iteration.json` and gates iteration
-//! throughput against the committed baseline
-//! (`benches/baseline/BENCH_iteration.json`, 25% floor; the overlap rows
-//! are new and report-only until they join the baseline):
+//! throughput — and, via the wire rows (rate = 1e6 / bytes, higher is
+//! better, so byte growth trips the same floor), wire-byte regressions —
+//! against the committed baseline
+//! (`benches/baseline/BENCH_iteration.json`, 25% floor; the serial f32
+//! row names are unchanged so the historical gate keeps biting):
 //!
 //! ```text
 //! cargo bench --bench bench_iteration -- --quick \
@@ -21,11 +27,12 @@
 #[path = "harness.rs"]
 mod harness;
 
-use fastclip::comm::OverlapMode;
+use fastclip::comm::{OverlapMode, ReduceAlgo, ReduceStrategy};
 use fastclip::config::{Algorithm, TrainConfig};
 use fastclip::coordinator::Trainer;
+use fastclip::kernels::Precision;
 use fastclip::runtime::BackendKind;
-use fastclip::util::Args;
+use fastclip::util::{ratio_cell, safe_rate, safe_ratio, Args};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
@@ -35,16 +42,16 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "end-to-end native iterations (preset tiny, K=2, Bl=8; {steps} steps x {repeats} runs, \
-         modeled 8x4 infiniband; serial vs overlapped reduction)\n"
+         modeled 8x4 infiniband; serial vs overlapped reduction, f32 vs bf16 storage)\n"
     );
     println!(
-        "{:<14} {:<8} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8}",
+        "{:<14} {:<12} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8}",
         "algorithm", "mode", "iters/s", "total", "compute", "pure", "overlap", "others", "speedup"
     );
 
     let mut rows = Vec::new();
     for algo in Algorithm::all() {
-        let make_cfg = |overlap: OverlapMode| {
+        let make_cfg = |overlap: OverlapMode, precision: Precision| {
             let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", algo);
             cfg.backend = BackendKind::Native;
             cfg.steps = steps;
@@ -56,36 +63,29 @@ fn main() -> anyhow::Result<()> {
             cfg.nodes = 8;
             cfg.gpus_per_node = 4;
             cfg.overlap = overlap;
+            cfg.precision = precision;
             // small buckets so the tiny preset's ~74 KB gradient actually
             // splits (the 4 MB default would pipeline as a single bucket)
             cfg.bucket_bytes = 8 << 10;
             cfg
         };
-        // per mode: warmup run (thread pools, page faults), then timed
-        // repeats; the MEDIAN run's throughput goes into the report
-        let measure = |overlap: OverlapMode| -> anyhow::Result<(f64, fastclip::TrainResult)> {
-            let _ = Trainer::new(make_cfg(overlap))?.run()?;
-            let mut samples = Vec::with_capacity(repeats);
-            let mut last = None;
-            for _ in 0..repeats {
-                let r = Trainer::new(make_cfg(overlap))?.run()?;
-                samples.push(r.wall_s);
-                last = Some(r);
-            }
-            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            Ok((steps as f64 / samples[samples.len() / 2], last.expect("at least one run")))
-        };
-        let (serial_rate, serial_run) = measure(OverlapMode::Off)?;
-        let (overlap_rate, overlap_run) = measure(OverlapMode::On)?;
+        let (serial_rate, serial_run) =
+            measure(&make_cfg, OverlapMode::Off, Precision::F32, steps, repeats)?;
+        let (overlap_rate, overlap_run) =
+            measure(&make_cfg, OverlapMode::On, Precision::F32, steps, repeats)?;
+        let (bf16_rate, bf16_run) =
+            measure(&make_cfg, OverlapMode::Off, Precision::Bf16, steps, repeats)?;
         assert!(overlap_run.overlap && overlap_run.n_buckets > 1, "pipeline must engage");
+        assert_eq!(bf16_run.precision, "bf16");
 
         for (mode, rate, run, speedup) in [
             ("serial", serial_rate, &serial_run, None),
-            ("overlap", overlap_rate, &overlap_run, Some(overlap_rate / serial_rate)),
+            ("overlap", overlap_rate, &overlap_run, safe_ratio(overlap_rate, serial_rate)),
+            ("serial/bf16", bf16_rate, &bf16_run, safe_ratio(bf16_rate, serial_rate)),
         ] {
             let ms = run.timing.per_iter_ms();
             println!(
-                "{:<14} {:<8} {:>10.1} {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>8}",
+                "{:<14} {:<12} {:>10.1} {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>8}",
                 algo.name(),
                 mode,
                 rate,
@@ -94,16 +94,17 @@ fn main() -> anyhow::Result<()> {
                 ms.comm_pure,
                 ms.comm_overlap,
                 ms.others,
-                speedup.map_or(String::from("-"), |s| format!("{s:.2}x")),
+                if mode == "serial" { "-".to_string() } else { ratio_cell(speedup) },
             );
         }
         println!(
-            "{:<14} {:<8} measured reduction: {:.1} us hidden / {:.1} us exposed per run",
+            "{:<14} {:<12} measured reduction: {:.1} us hidden / {:.1} us exposed per run",
             "", "", overlap_run.hidden_comm_us as f64, overlap_run.exposed_comm_us as f64
         );
 
-        // the serial row keeps the historical name so the committed
-        // baseline keeps gating it; overlap rows ride along report-only
+        // the serial f32 row keeps the historical name so the committed
+        // baseline keeps gating it; overlap and bf16 rows gate against
+        // their own (conservative) baseline entries
         rows.push(harness::JsonRow {
             name: format!("iteration/{}", algo.id()),
             rate_per_sec: serial_rate,
@@ -114,7 +115,86 @@ fn main() -> anyhow::Result<()> {
             rate_per_sec: overlap_rate,
             median_s: 1.0 / overlap_rate,
         });
+        rows.push(harness::JsonRow {
+            name: format!("iteration/{}/bf16", algo.id()),
+            rate_per_sec: bf16_rate,
+            median_s: 1.0 / bf16_rate,
+        });
+    }
+
+    // ---- gradient wire bytes per iteration, f32 vs bf16 -----------------
+    // deterministic micro-runs (fixed reduce, serial) so the committed
+    // baseline can carry EXACT byte counts: the rows gate as a rate
+    // (1e6 / bytes-per-iter — higher is better), so wire-byte growth
+    // beyond the floor fails CI exactly like a throughput collapse.
+    // `median_s` carries the raw bytes-per-iteration for readability.
+    println!("\ngradient wire bytes per iteration and rank (tiny preset, K=2):");
+    println!("{:<10} {:>14} {:>14} {:>8}", "reduce", "f32 B/iter", "bf16 B/iter", "ratio");
+    let wire_steps = 4u32;
+    for reduce in ReduceAlgo::all() {
+        let run = |precision: Precision| -> anyhow::Result<u64> {
+            let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", Algorithm::FastClipV1);
+            cfg.backend = BackendKind::Native;
+            cfg.steps = wire_steps;
+            cfg.iters_per_epoch = 4;
+            cfg.data.n_train = 64;
+            cfg.data.n_eval = 16;
+            cfg.data.n_classes = 8;
+            cfg.lr.total_iters = wire_steps;
+            cfg.lr.warmup_iters = 1;
+            cfg.overlap = OverlapMode::Off;
+            cfg.reduce = ReduceStrategy::Fixed(reduce);
+            cfg.precision = precision;
+            let r = Trainer::new(cfg)?.run()?;
+            Ok(r.grad_wire_bytes / wire_steps as u64)
+        };
+        let f32_bytes = run(Precision::F32)?;
+        let bf16_bytes = run(Precision::Bf16)?;
+        assert_eq!(
+            f32_bytes,
+            2 * bf16_bytes,
+            "{}: the bf16 wire format must halve gradient bytes exactly",
+            reduce.id()
+        );
+        println!(
+            "{:<10} {:>14} {:>14} {:>8}",
+            reduce.id(),
+            f32_bytes,
+            bf16_bytes,
+            ratio_cell(safe_ratio(f32_bytes as f64, bf16_bytes as f64)),
+        );
+        for (precision, bytes) in [(Precision::F32, f32_bytes), (Precision::Bf16, bf16_bytes)] {
+            rows.push(harness::JsonRow {
+                name: format!("wire/{}/{}", reduce.id(), precision.id()),
+                rate_per_sec: safe_ratio(1e6, bytes as f64).unwrap_or(f64::NAN),
+                median_s: bytes as f64,
+            });
+        }
     }
 
     harness::finalize_report("iteration", quick, &rows, &args)
+}
+
+/// Warmup run (thread pools, page faults), then `repeats` timed runs;
+/// the MEDIAN run's throughput is reported. A rate of NaN means
+/// "unmeasurable" (degenerate zero wall time): printed n/a, written as
+/// JSON null, never gated (see harness.rs).
+fn measure(
+    make_cfg: &dyn Fn(OverlapMode, Precision) -> TrainConfig,
+    overlap: OverlapMode,
+    precision: Precision,
+    steps: u32,
+    repeats: usize,
+) -> anyhow::Result<(f64, fastclip::TrainResult)> {
+    let _ = Trainer::new(make_cfg(overlap, precision))?.run()?;
+    let mut samples = Vec::with_capacity(repeats);
+    let mut last = None;
+    for _ in 0..repeats {
+        let r = Trainer::new(make_cfg(overlap, precision))?.run()?;
+        samples.push(r.wall_s);
+        last = Some(r);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rate = safe_rate(steps as f64, samples[samples.len() / 2]).unwrap_or(f64::NAN);
+    Ok((rate, last.expect("at least one run")))
 }

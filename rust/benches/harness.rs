@@ -91,9 +91,23 @@ pub fn black_box<T>(x: T) -> T {
 pub struct JsonRow {
     pub name: String,
     /// operations (iterations, kernel calls, …) per second — the metric
-    /// the regression gate compares
+    /// the regression gate compares. A non-finite value means "not
+    /// measurable" (e.g. a zero-duration quick run): it is written as
+    /// JSON `null`, printed as `n/a`, and never gated — NaN/inf must not
+    /// reach the document (JSON cannot encode them) or the gate (every
+    /// NaN comparison is false, which would silently pass).
     pub rate_per_sec: f64,
     pub median_s: f64,
+}
+
+/// Encode a rate for the report: finite numbers as numbers, anything
+/// else as an explicit `null` (see [`JsonRow::rate_per_sec`]).
+pub fn rate_json(rate: f64) -> fastclip::util::Json {
+    if rate.is_finite() {
+        fastclip::util::Json::num(rate)
+    } else {
+        fastclip::util::Json::Null
+    }
 }
 
 /// Shared tail of every bench binary (the `bench-smoke` CI contract):
@@ -122,8 +136,8 @@ pub fn finalize_report(
                 Json::arr(rows.iter().map(|r| {
                     Json::obj(vec![
                         ("name", Json::str(r.name.clone())),
-                        ("rate_per_sec", Json::num(r.rate_per_sec)),
-                        ("median_s", Json::num(r.median_s)),
+                        ("rate_per_sec", rate_json(r.rate_per_sec)),
+                        ("median_s", rate_json(r.median_s)),
                     ])
                 })),
             ),
@@ -139,11 +153,28 @@ pub fn finalize_report(
     let mut regressions = Vec::new();
     for base_row in baseline.get("results")?.as_arr()? {
         let name = base_row.get("name")?.as_str()?.to_string();
-        let base_rate = base_row.get("rate_per_sec")?.as_f64()?;
+        // a null baseline rate means "was not measurable when committed"
+        // — report-only, never gates
+        let base = base_row.get("rate_per_sec")?;
+        let base_rate = match base.as_f64() {
+            Ok(r) if r.is_finite() => r,
+            _ => {
+                println!("baseline row '{name}' has no finite rate — skipping");
+                continue;
+            }
+        };
         let Some(cur) = rows.iter().find(|r| r.name == name) else {
             println!("baseline row '{name}' not measured in this run — skipping");
             continue;
         };
+        if !cur.rate_per_sec.is_finite() {
+            // NaN < floor is false: without this arm an unmeasurable run
+            // would silently pass the gate
+            println!(
+                "{name:<40} n/a (unmeasurable this run) vs baseline {base_rate:.2}/s — skipping"
+            );
+            continue;
+        }
         let floor = base_rate * (1.0 - max_regress);
         let verdict = if cur.rate_per_sec < floor { "REGRESSED" } else { "ok" };
         println!(

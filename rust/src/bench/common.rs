@@ -157,8 +157,8 @@ pub fn algo_config(setting: Setting, algo: Algorithm) -> TrainConfig {
 }
 
 /// Apply the common CLI overrides (`--steps`, `--seeds`, `--bundle`,
-/// `--n-train`, `--eval-every`, `--nodes`, `--gpus-per-node`) to a base
-/// config. Returns the seed list.
+/// `--n-train`, `--eval-every`, `--nodes`, `--gpus-per-node`,
+/// `--precision`) to a base config. Returns the seed list.
 pub fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<Vec<u64>> {
     cfg.steps = args.u32_or("steps", cfg.steps)?;
     cfg.lr.total_iters = cfg.steps;
@@ -168,6 +168,9 @@ pub fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<Vec<u64>> {
     cfg.eval_every = args.u32_or("eval-every", cfg.eval_every)?;
     cfg.nodes = args.usize_or("nodes", cfg.nodes)?;
     cfg.gpus_per_node = args.usize_or("gpus-per-node", cfg.gpus_per_node)?;
+    cfg.precision = crate::kernels::Precision::from_id(
+        &args.str_or("precision", cfg.precision.id()),
+    )?;
     if let Some(b) = args.get("bundle") {
         cfg.set_bundle(b);
     }
@@ -178,7 +181,7 @@ pub fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<Vec<u64>> {
 /// Common options shared by every experiment runner (for check_known).
 pub const COMMON_OPTS: &[&str] = &[
     "steps", "seeds", "setting", "bundle", "n-train", "n-eval", "eval-every",
-    "out", "nodes", "gpus-per-node",
+    "out", "nodes", "gpus-per-node", "precision",
 ];
 
 /// Run one configuration across seeds, logging progress to stderr.

@@ -12,6 +12,7 @@ use anyhow::Result;
 
 use crate::comm::{reduction, CommWorld, CostModel, ProfileName, ReduceAlgo};
 use crate::config::{Algorithm, GammaSchedule, OptimizerKind};
+use crate::kernels::Precision;
 use crate::output::{mean_std_cell, Table};
 use crate::util::{Args, Json};
 
@@ -148,19 +149,29 @@ pub fn table5(args: &Args) -> Result<()> {
     finish(args, "table5", table, json_rows)
 }
 
-/// `reduce` — the gradient-reduction strategy study (DESIGN.md §4). Needs
-/// no artifact bundles: for each world size × gradient size it reports
-/// each algorithm's modeled bytes-on-wire per rank and α–β time (and the
-/// cost model's `auto` pick), then verifies on REAL in-process collectives
-/// that all strategies produce bit-identical parameters while the sharded
-/// strategy's gradient traffic, as counted by `CommStats`, is strictly
-/// lower than the naive baseline.
+/// `reduce` — the gradient-reduction strategy study (DESIGN.md §4/§12).
+/// Needs no artifact bundles: for each world size × gradient size it
+/// reports each algorithm's modeled bytes-on-wire per rank (at both the
+/// f32 and the half-width bf16 wire format) and α–β time (and the cost
+/// model's `auto` pick), then verifies on REAL in-process collectives —
+/// at both wire precisions — that all strategies produce bit-identical
+/// parameters, that the sharded strategy's gradient traffic, as counted
+/// by `CommStats`, is strictly lower than the naive baseline, and that
+/// the bf16 wire format charges exactly half the f32 bytes.
 pub fn reduce_table(args: &Args) -> Result<()> {
     let profile = ProfileName::from_id(&args.str_or("profile", "infiniband"))?;
     let n_params = args.usize_or("n-params", 20_000_000)?;
     let mut table = Table::new(
         "Gradient-reduction strategies (bytes-on-wire per rank, alpha-beta time)",
-        &["Nodes x GPUs", "Grad MB", "Algorithm", "Wire MB/rank", "Time (ms)", "Auto pick"],
+        &[
+            "Nodes x GPUs",
+            "Grad MB",
+            "Algorithm",
+            "Wire MB/rank",
+            "bf16 MB/rank",
+            "Time (ms)",
+            "Auto pick",
+        ],
     );
     let mut json_rows = Vec::new();
     for (nodes, gpus) in [(1usize, 2usize), (1, 4), (2, 4), (8, 4)] {
@@ -171,13 +182,17 @@ pub fn reduce_table(args: &Args) -> Result<()> {
             let auto = cost.cheapest_reduce(bytes);
             for algo in ReduceAlgo::all() {
                 let r = reduction(algo);
-                let wire = r.grad_wire_bytes(k, bytes as u64);
+                // divide on elements, scale by width (see comm::collective
+                // charge()): keeps the bf16 column exactly half of f32
+                let wire = r.grad_wire_bytes(k, n as u64) * 4;
+                let wire_bf16 = r.grad_wire_bytes(k, n as u64) * 2;
                 let time = cost.reduce_time(algo, bytes);
                 table.row(vec![
                     format!("{nodes}x{gpus}"),
                     format!("{:.2}", bytes as f64 / 1e6),
                     algo.id().into(),
                     format!("{:.3}", wire as f64 / 1e6),
+                    format!("{:.3}", wire_bf16 as f64 / 1e6),
                     format!("{:.3}", time * 1e3),
                     if algo == auto { "<-".into() } else { String::new() },
                 ]);
@@ -187,65 +202,85 @@ pub fn reduce_table(args: &Args) -> Result<()> {
                     ("grad_bytes", Json::num(bytes as f64)),
                     ("algorithm", Json::str(algo.id())),
                     ("wire_bytes_per_rank", Json::num(wire as f64)),
+                    ("wire_bytes_per_rank_bf16", Json::num(wire_bf16 as f64)),
                     ("modeled_time_s", Json::num(time)),
                     ("auto_pick", Json::str(auto.id())),
                 ]));
             }
         }
     }
-    // live exactness + traffic check on real collectives (threads);
-    // finish() prints the table afterwards
+    // live exactness + traffic check on real collectives (threads), once
+    // per wire precision; finish() prints the table afterwards
 
     let k = 4usize;
     let n = 1003; // non-divisible chunking
-    let mut reference: Option<Vec<f32>> = None; // naive's result, the baseline
-    for algo in ReduceAlgo::all() {
-        let world = CommWorld::new(k);
-        let handles: Vec<_> = (0..k)
-            .map(|rank| {
-                let comm = world.handle(rank);
-                std::thread::spawn(move || {
-                    let mut grad: Vec<f32> =
-                        (0..n).map(|i| ((i * 7 + rank * 13) % 97) as f32 * 0.125).collect();
-                    let mut params = vec![0.0f32; n];
-                    reduction(algo).reduce_and_apply(
-                        &comm,
-                        &mut grad,
-                        &mut params,
-                        &mut |p, g| p.copy_from_slice(g),
-                    );
-                    params
+    let mut f32_wire_bytes: Vec<u64> = Vec::new(); // per algo, filled by the f32 pass
+    for wire in Precision::all() {
+        let mut reference: Option<Vec<f32>> = None; // naive's result, the baseline
+        for (ai, algo) in ReduceAlgo::all().into_iter().enumerate() {
+            let world = CommWorld::new(k);
+            let handles: Vec<_> = (0..k)
+                .map(|rank| {
+                    let comm = world.handle(rank);
+                    std::thread::spawn(move || {
+                        let mut grad: Vec<f32> =
+                            (0..n).map(|i| ((i * 7 + rank * 13) % 97) as f32 * 0.125).collect();
+                        let mut params = vec![0.0f32; n];
+                        reduction(algo).reduce_and_apply(
+                            &comm,
+                            &mut grad,
+                            &mut params,
+                            wire,
+                            &mut |p, g| p.copy_from_slice(g),
+                        );
+                        params
+                    })
                 })
-            })
-            .collect();
-        let outs: Vec<Vec<f32>> =
-            handles.into_iter().map(|h| h.join().unwrap()).collect();
-        anyhow::ensure!(
-            outs.iter().all(|o| o == &outs[0]),
-            "{}: ranks disagree on the reduced result",
-            algo.id()
-        );
-        // cross-ALGORITHM bit-identity (inputs are identical per world)
-        match &reference {
-            None => reference = Some(outs[0].clone()),
-            Some(r) => anyhow::ensure!(
-                &outs[0] == r,
-                "{}: result differs bitwise from naive",
-                algo.id()
-            ),
+                .collect();
+            let outs: Vec<Vec<f32>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            anyhow::ensure!(
+                outs.iter().all(|o| o == &outs[0]),
+                "{} ({}): ranks disagree on the reduced result",
+                algo.id(),
+                wire.id()
+            );
+            // cross-ALGORITHM bit-identity (inputs are identical per world)
+            match &reference {
+                None => reference = Some(outs[0].clone()),
+                Some(r) => anyhow::ensure!(
+                    &outs[0] == r,
+                    "{} ({}): result differs bitwise from naive",
+                    algo.id(),
+                    wire.id()
+                ),
+            }
+            let s = world.stats.snapshot();
+            anyhow::ensure!(
+                algo != ReduceAlgo::Sharded || s.grad_wire_bytes < s.grad_wire_bytes_naive,
+                "sharded must move fewer gradient bytes than naive"
+            );
+            // the DESIGN.md §12 acceptance check: bf16 charges exactly
+            // half the f32 wire bytes, algorithm by algorithm
+            match wire {
+                Precision::F32 => f32_wire_bytes.push(s.grad_wire_bytes),
+                Precision::Bf16 => anyhow::ensure!(
+                    2 * s.grad_wire_bytes == f32_wire_bytes[ai],
+                    "{}: bf16 wire must charge exactly half of f32 ({} vs {})",
+                    algo.id(),
+                    s.grad_wire_bytes,
+                    f32_wire_bytes[ai]
+                ),
+            }
+            eprintln!(
+                "exactness ok: {:8} {:5}  grad wire {:>7} B (naive baseline {:>7} B, {:.2}x)",
+                algo.id(),
+                wire.id(),
+                s.grad_wire_bytes / k as u64,
+                s.grad_wire_bytes_naive / k as u64,
+                s.grad_wire_saving()
+            );
         }
-        let s = world.stats.snapshot();
-        anyhow::ensure!(
-            algo != ReduceAlgo::Sharded || s.grad_wire_bytes < s.grad_wire_bytes_naive,
-            "sharded must move fewer gradient bytes than naive"
-        );
-        eprintln!(
-            "exactness ok: {:8}  grad wire {:>7} B (naive baseline {:>7} B, {:.2}x)",
-            algo.id(),
-            s.grad_wire_bytes / k as u64,
-            s.grad_wire_bytes_naive / k as u64,
-            s.grad_wire_saving()
-        );
     }
 
     // live overlapped-reduction check (DESIGN.md §11): a short pipelined
@@ -254,7 +289,8 @@ pub fn reduce_table(args: &Args) -> Result<()> {
     // modeled wire/time table above never adds a second overlap credit.
     {
         use crate::comm::OverlapMode;
-        let quick = |overlap: OverlapMode| -> Result<crate::coordinator::TrainResult> {
+        use crate::coordinator::TrainResult;
+        let quick = |overlap: OverlapMode, precision: Precision| -> Result<TrainResult> {
             let mut cfg = crate::config::TrainConfig::new("native", Algorithm::FastClipV3);
             cfg.backend = crate::runtime::BackendKind::Native;
             cfg.steps = 6;
@@ -265,11 +301,15 @@ pub fn reduce_table(args: &Args) -> Result<()> {
             cfg.lr.warmup_iters = 1;
             cfg.lr.total_iters = 6;
             cfg.overlap = overlap;
+            cfg.precision = precision;
+            // pinned: auto could resolve differently for the half-width
+            // gradient, which would break the exact-2x byte comparison
+            cfg.reduce = crate::comm::ReduceStrategy::Fixed(ReduceAlgo::Ring);
             cfg.bucket_bytes = 4 << 10;
             crate::coordinator::Trainer::new(cfg)?.run()
         };
-        let serial = quick(OverlapMode::Off)?;
-        let piped = quick(OverlapMode::On)?;
+        let serial = quick(OverlapMode::Off, Precision::F32)?;
+        let piped = quick(OverlapMode::On, Precision::F32)?;
         anyhow::ensure!(
             serial.final_params == piped.final_params,
             "overlapped reduction diverged from serial training"
@@ -278,6 +318,24 @@ pub fn reduce_table(args: &Args) -> Result<()> {
             "overlap ok: {} buckets/iter, bitwise equal to serial; measured reduction \
              {} us hidden / {} us exposed",
             piped.n_buckets, piped.hidden_comm_us, piped.exposed_comm_us
+        );
+        // the same invariants under the bf16 wire + storage path, plus
+        // the end-to-end ~2x wire-byte cut vs the f32 run above
+        let bf_serial = quick(OverlapMode::Off, Precision::Bf16)?;
+        let bf_piped = quick(OverlapMode::On, Precision::Bf16)?;
+        anyhow::ensure!(
+            bf_serial.final_params == bf_piped.final_params,
+            "bf16 overlapped reduction diverged from bf16 serial training"
+        );
+        anyhow::ensure!(
+            serial.grad_wire_bytes == 2 * bf_serial.grad_wire_bytes,
+            "bf16 training must halve gradient wire bytes ({} vs {})",
+            bf_serial.grad_wire_bytes,
+            serial.grad_wire_bytes
+        );
+        eprintln!(
+            "bf16 ok: bitwise serial==overlap; grad wire {} B vs f32 {} B per rank",
+            bf_serial.grad_wire_bytes, serial.grad_wire_bytes
         );
     }
     finish(args, "reduce", table, json_rows)

@@ -1,29 +1,38 @@
-//! Raw tensor blobs: little-endian `f32` / `u64` files with FNV-1a 64
-//! integrity hashes (DESIGN.md §9). A blob file is exactly its elements'
-//! LE bytes — no header; the checkpoint manifest records each blob's
-//! kind, element count and hash, so a single flipped byte anywhere is
-//! detected on read and by `fastclip ckpt verify`.
+//! Raw tensor blobs: little-endian `f32` / `bf16` / `u64` files with
+//! FNV-1a 64 integrity hashes (DESIGN.md §9). A blob file is exactly its
+//! elements' LE bytes — no header; the checkpoint manifest records each
+//! blob's dtype tag, element count and hash, so a single flipped byte
+//! anywhere is detected on read and by `fastclip ckpt verify`.
+//!
+//! The `bf16` kind (DESIGN.md §12) tags half-width bfloat16 payloads —
+//! exports and derived artifacts. Training state itself is deliberately
+//! never written bf16: the snapshot carries the f32 *master* weights and
+//! estimators even for `--precision bf16` runs, which is what keeps
+//! resume bitwise and elastic re-sharding precision-agnostic.
 
 use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
-/// Element type of a blob. Everything the training state needs reduces to
-/// these two: all continuous state is `f32`, all counters / cursors /
-/// RNG words are `u64`.
+/// Element type of a blob. Continuous training state is `f32` (always —
+/// masters are snapshotted, see the module docs), counters / cursors /
+/// RNG words are `u64`, and `bf16` tags half-width exports.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BlobKind {
     /// 4-byte little-endian IEEE-754 single floats.
     F32,
+    /// 2-byte little-endian bfloat16 (raw `u16` words, DESIGN.md §12).
+    Bf16,
     /// 8-byte little-endian unsigned integers.
     U64,
 }
 
 impl BlobKind {
-    /// File-extension id: `f32` | `u64`.
+    /// File-extension id: `f32` | `bf16` | `u64`.
     pub fn id(&self) -> &'static str {
         match self {
             BlobKind::F32 => "f32",
+            BlobKind::Bf16 => "bf16",
             BlobKind::U64 => "u64",
         }
     }
@@ -32,8 +41,9 @@ impl BlobKind {
     pub fn from_id(id: &str) -> Result<BlobKind> {
         match id {
             "f32" => Ok(BlobKind::F32),
+            "bf16" => Ok(BlobKind::Bf16),
             "u64" => Ok(BlobKind::U64),
-            _ => bail!("unknown blob kind '{id}' (expected f32|u64)"),
+            _ => bail!("unknown blob kind '{id}' (expected f32|bf16|u64)"),
         }
     }
 
@@ -41,16 +51,18 @@ impl BlobKind {
     pub fn width(&self) -> usize {
         match self {
             BlobKind::F32 => 4,
+            BlobKind::Bf16 => 2,
             BlobKind::U64 => 8,
         }
     }
 
-    /// Kind from a blob file's extension (`.f32` / `.u64`).
+    /// Kind from a blob file's extension (`.f32` / `.bf16` / `.u64`).
     pub fn from_path(path: &Path) -> Result<BlobKind> {
         match path.extension().and_then(|e| e.to_str()) {
             Some("f32") => Ok(BlobKind::F32),
+            Some("bf16") => Ok(BlobKind::Bf16),
             Some("u64") => Ok(BlobKind::U64),
-            _ => bail!("{} is not a blob file (.f32/.u64)", path.display()),
+            _ => bail!("{} is not a blob file (.f32/.bf16/.u64)", path.display()),
         }
     }
 }
@@ -108,6 +120,22 @@ pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
         .collect())
 }
 
+/// Serialize raw bf16 words to their little-endian bytes.
+pub fn bf16s_to_bytes(xs: &[u16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Deserialize little-endian bytes back to raw bf16 words (bitwise
+/// exact, including NaN payloads).
+pub fn bytes_to_bf16s(bytes: &[u8]) -> Result<Vec<u16>> {
+    ensure!(bytes.len() % 2 == 0, "bf16 blob is {} bytes (not a multiple of 2)", bytes.len());
+    Ok(bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+}
+
 /// Serialize u64 elements to their little-endian bytes.
 pub fn u64s_to_bytes(xs: &[u64]) -> Vec<u8> {
     let mut out = Vec::with_capacity(xs.len() * 8);
@@ -130,6 +158,13 @@ pub fn bytes_to_u64s(bytes: &[u8]) -> Result<Vec<u64>> {
 pub fn write_f32_blob(dir: &Path, name: &str, xs: &[f32]) -> Result<()> {
     let path = dir.join(format!("{name}.f32"));
     std::fs::write(&path, f32s_to_bytes(xs))
+        .with_context(|| format!("writing blob {}", path.display()))
+}
+
+/// Write `<dir>/<name>.bf16`.
+pub fn write_bf16_blob(dir: &Path, name: &str, xs: &[u16]) -> Result<()> {
+    let path = dir.join(format!("{name}.bf16"));
+    std::fs::write(&path, bf16s_to_bytes(xs))
         .with_context(|| format!("writing blob {}", path.display()))
 }
 
@@ -172,13 +207,19 @@ pub fn read_f32_verified(dir: &Path, spec: &BlobSpec) -> Result<Vec<f32>> {
     bytes_to_f32s(&read_verified(dir, spec)?)
 }
 
+/// [`read_verified`] + bf16 decode (errors on a non-bf16 spec).
+pub fn read_bf16_verified(dir: &Path, spec: &BlobSpec) -> Result<Vec<u16>> {
+    ensure!(spec.kind == BlobKind::Bf16, "{} is not a bf16 blob", spec.file);
+    bytes_to_bf16s(&read_verified(dir, spec)?)
+}
+
 /// [`read_verified`] + u64 decode (errors on a non-u64 spec).
 pub fn read_u64_verified(dir: &Path, spec: &BlobSpec) -> Result<Vec<u64>> {
     ensure!(spec.kind == BlobKind::U64, "{} is not a u64 blob", spec.file);
     bytes_to_u64s(&read_verified(dir, spec)?)
 }
 
-/// Hash every blob file in `dir` (anything with a `.f32`/`.u64`
+/// Hash every blob file in `dir` (anything with a `.f32`/`.bf16`/`.u64`
 /// extension) into a sorted blob table — the finalize step of a snapshot.
 pub fn scan_dir(dir: &Path) -> Result<Vec<BlobSpec>> {
     let mut specs = Vec::new();
@@ -234,20 +275,37 @@ mod tests {
     }
 
     #[test]
+    fn bf16_bytes_roundtrip_and_kind_tags() {
+        let ws = vec![0x0000u16, 0x8000, 0x3F80, 0x7F80, 0xFF80, 0x7FC1, 0x0001];
+        assert_eq!(bytes_to_bf16s(&bf16s_to_bytes(&ws)).unwrap(), ws);
+        assert!(bytes_to_bf16s(&[0u8; 3]).is_err());
+        assert_eq!(BlobKind::from_id("bf16").unwrap(), BlobKind::Bf16);
+        assert_eq!(BlobKind::Bf16.width(), 2);
+        assert_eq!(BlobKind::from_path(Path::new("x/params.bf16")).unwrap(), BlobKind::Bf16);
+        assert!(BlobKind::from_id("f16").is_err());
+    }
+
+    #[test]
     fn write_scan_read_verify_cycle() {
         let dir = std::env::temp_dir().join("fastclip_blob_test");
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         write_f32_blob(&dir, "a", &[1.0, 2.0, -0.5]).unwrap();
         write_u64_blob(&dir, "b", &[7, 8]).unwrap();
+        write_bf16_blob(&dir, "c", &[0x3F80, 0xC000]).unwrap();
         std::fs::write(dir.join("MANIFEST.json"), "{}").unwrap();
         let specs = scan_dir(&dir).unwrap();
-        assert_eq!(specs.len(), 2, "manifest not scanned as a blob");
+        assert_eq!(specs.len(), 3, "manifest not scanned as a blob");
         assert_eq!(specs[0].file, "a.f32");
         assert_eq!(specs[0].len, 3);
         assert_eq!(specs[1].file, "b.u64");
+        assert_eq!(specs[2].file, "c.bf16");
+        assert_eq!(specs[2].kind, BlobKind::Bf16);
+        assert_eq!(specs[2].len, 2);
         assert_eq!(read_f32_verified(&dir, &specs[0]).unwrap(), vec![1.0, 2.0, -0.5]);
         assert_eq!(read_u64_verified(&dir, &specs[1]).unwrap(), vec![7, 8]);
+        assert_eq!(read_bf16_verified(&dir, &specs[2]).unwrap(), vec![0x3F80, 0xC000]);
+        assert!(read_bf16_verified(&dir, &specs[0]).is_err(), "kind mismatch rejected");
 
         // flip one byte: the read must fail the integrity check
         let path = dir.join("a.f32");

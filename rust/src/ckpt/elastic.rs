@@ -54,7 +54,7 @@ pub fn resize_rank_state(
     // whenever shard sizes divide evenly; the reference rank otherwise)
     let epoch = old[0].epoch;
 
-    let new_len = shard_len_for(n, new_world, new_rank);
+    let new_len = shard_len_for(n, new_world, new_rank)?;
     let mut u1 = Vec::with_capacity(new_len);
     let mut u2 = Vec::with_capacity(new_len);
     let individual = matches!(old[0].tau, TauCkpt::Individual(_));

@@ -22,9 +22,13 @@ pub const MANIFEST_FILE: &str = "MANIFEST.json";
 /// the synthetic data — anything whose drift between snapshot and resume
 /// would silently break the bitwise-continuation guarantee. Deliberately
 /// excludes `steps` (resume legitimately extends it), the topology /
-/// network / reduce knobs (timing and layout only — layouts convert),
-/// and `n_train` / seeds / world (checked as dedicated fields). f32
-/// Display is shortest-round-trip, so string equality is value equality.
+/// network / reduce / overlap knobs (timing and layout only — layouts
+/// convert), and `n_train` / seeds / world (checked as dedicated
+/// fields). The compute `precision` IS included: unlike overlap it
+/// changes the numerics (bf16 working copies round every activation), so
+/// resuming a bf16 snapshot under f32 — or vice versa — would silently
+/// fork the trajectory. f32 Display is shortest-round-trip, so string
+/// equality is value equality.
 pub fn hyper_echo(cfg: &TrainConfig) -> String {
     let o = &cfg.optimizer;
     let d = &cfg.data;
@@ -37,7 +41,7 @@ pub fn hyper_echo(cfg: &TrainConfig) -> String {
     format!(
         "tau=({},{},{},{:?}) eps={} rho={} gamma={gamma} \
          lr=({},{},{},{}) iters_per_epoch={} opt=({},{},{},{},{}) \
-         data=({},{},{})",
+         data=({},{},{}) prec={}",
         cfg.tau_init,
         cfg.tau_lr,
         cfg.tau_min,
@@ -57,6 +61,7 @@ pub fn hyper_echo(cfg: &TrainConfig) -> String {
         d.n_classes,
         d.noise,
         d.zipf_s,
+        cfg.precision.id(),
     )
 }
 
@@ -291,6 +296,11 @@ mod tests {
         let mut cfg3 = TrainConfig::new("x", crate::config::Algorithm::FastClipV3);
         cfg3.data.noise += 0.1;
         assert_ne!(hyper_echo(&cfg3), base);
+        // precision changes the numerics, so it is part of the echo —
+        // a bf16 snapshot cannot silently resume under f32
+        let mut cfg4 = TrainConfig::new("x", crate::config::Algorithm::FastClipV3);
+        cfg4.precision = crate::kernels::Precision::Bf16;
+        assert_ne!(hyper_echo(&cfg4), base);
     }
 
     #[test]

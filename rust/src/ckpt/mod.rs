@@ -79,6 +79,27 @@ mod tests {
         CkptMeta::for_run(cfg, step, world, n_params, 4, "ring")
     }
 
+    /// Pre-§12 checkpoints carry a hyper echo without the trailing
+    /// ` prec=` field (they were all f32 runs): an f32 resume must still
+    /// accept them, a bf16 resume must not, and a precision flip between
+    /// current-format snapshots is rejected either way.
+    #[test]
+    fn legacy_echo_without_precision_resumes_under_f32_only() {
+        let c = cfg(Algorithm::FastClipV1);
+        let mut meta = meta_for(&c, 3, 2, 11);
+        // simulate a PR-2..4-era manifest: strip the precision suffix
+        meta.hyper = meta.hyper.strip_suffix(" prec=f32").unwrap().to_string();
+        check_compatible(&meta, &c, 11).expect("legacy f32 checkpoint must stay resumable");
+        let mut bf = c.clone();
+        bf.precision = crate::kernels::Precision::Bf16;
+        let err = check_compatible(&meta, &bf, 11).unwrap_err();
+        assert!(format!("{err}").contains("hyper"), "{err}");
+        // current-format echoes: precision drift is rejected both ways
+        let meta_bf = meta_for(&bf, 3, 2, 11);
+        assert!(check_compatible(&meta_bf, &c, 11).is_err());
+        assert!(check_compatible(&meta_bf, &bf, 11).is_ok());
+    }
+
     /// Full write→finalize→open→restore cycle for each temperature rule,
     /// asserting every piece of state survives bit-for-bit.
     #[test]

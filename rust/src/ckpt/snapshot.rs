@@ -534,7 +534,7 @@ impl Checkpoint {
         let u = self.read_f32(&u_blob(rank))?;
         ensure!(u.len() % 2 == 0, "u blob length {} is odd", u.len());
         let l = u.len() / 2;
-        let expect = shard_len_for(self.manifest.meta.n_train, world, rank);
+        let expect = shard_len_for(self.manifest.meta.n_train, world, rank)?;
         ensure!(l == expect, "u blob covers {l} samples, shard has {expect}");
         let (u1, u2) = (u[..l].to_vec(), u[l..].to_vec());
 
@@ -666,8 +666,15 @@ pub fn check_compatible(meta: &CkptMeta, cfg: &TrainConfig, n_params: usize) -> 
         cfg.data.seed
     );
     let run_hyper = super::manifest::hyper_echo(cfg);
+    // pre-§12 checkpoints (written before the precision knob existed)
+    // lack the trailing " prec=" field; they were all f32 runs, so an
+    // f32 resume whose echo matches theirs up to that suffix is the
+    // same trajectory — keep them resumable instead of failing with a
+    // misleading "hyperparameters differ"
+    let legacy_f32_ok = cfg.precision == crate::kernels::Precision::F32
+        && run_hyper.strip_suffix(" prec=f32") == Some(meta.hyper.as_str());
     ensure!(
-        meta.hyper == run_hyper,
+        meta.hyper == run_hyper || legacy_f32_ok,
         "checkpoint hyperparameters differ from the run's — resume would not \
          continue the checkpointed trajectory\n  checkpoint: {}\n  run:        {run_hyper}",
         meta.hyper

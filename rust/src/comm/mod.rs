@@ -54,6 +54,7 @@
 //!
 //! ```
 //! use fastclip::comm::{reduction, CommWorld, ReduceAlgo};
+//! use fastclip::kernels::Precision;
 //!
 //! let k = 4;
 //! let n = 10; // non-divisible: ranks own chunks of 3,3,3,1
@@ -68,6 +69,7 @@
 //!                 &comm,
 //!                 &mut grad,
 //!                 &mut params,
+//!                 Precision::F32, // or Bf16 for the half-width wire format
 //!                 &mut |p, g| {
 //!                     for (pi, gi) in p.iter_mut().zip(g) {
 //!                         *pi -= 0.1 * gi; // each rank updates only its shard

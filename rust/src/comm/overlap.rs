@@ -43,6 +43,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
 
+use crate::kernels::Precision;
+
 use super::bucket::{Bucket, BucketPlan};
 use super::collective::{allgather_updated_params, reduction, GradientReduction, ReduceAlgo};
 use super::world::WorkerComm;
@@ -155,13 +157,15 @@ pub struct OverlapPipeline {
 impl OverlapPipeline {
     /// Spawn the reduction worker for one rank. `reduce_comm` must be a
     /// handle into a world **dedicated to bucket reductions** (all ranks'
-    /// pipelines, nothing else — see the module docs); `plan` and `algo`
-    /// must be identical on every rank.
+    /// pipelines, nothing else — see the module docs); `plan`, `algo` and
+    /// the `wire` precision (DESIGN.md §12) must be identical on every
+    /// rank.
     pub fn spawn(
         reduce_comm: WorkerComm,
         algo: ReduceAlgo,
         plan: BucketPlan,
         full_len: usize,
+        wire: Precision,
     ) -> OverlapPipeline {
         assert_eq!(plan.total_len(), full_len, "plan must tile the gradient");
         let (job_tx, job_rx) = channel::<Job>();
@@ -173,7 +177,8 @@ impl OverlapPipeline {
                 let reducer: &'static dyn GradientReduction = reduction(algo);
                 while let Ok(job) = job_rx.recv() {
                     let t0 = Instant::now();
-                    let seg = reducer.reduce_bucket(&reduce_comm, &job.data, job.bucket, full_len);
+                    let seg =
+                        reducer.reduce_bucket(&reduce_comm, &job.data, job.bucket, full_len, wire);
                     let busy_s = t0.elapsed().as_secs_f64();
                     if done_tx.send(Done { lo: seg.lo, data: seg.data, busy_s }).is_err() {
                         break; // pipeline dropped mid-iteration
@@ -322,6 +327,7 @@ mod tests {
         target: usize,
         iters: usize,
         segments: usize,
+        wire: Precision,
     ) -> Vec<Vec<f32>> {
         let stats = Arc::new(CommStats::default());
         let train = CommWorld::with_stats(k, Arc::clone(&stats));
@@ -332,7 +338,7 @@ mod tests {
                 let rcomm = reduce.handle(rank);
                 std::thread::spawn(move || {
                     let plan = BucketPlan::new(n, target);
-                    let mut pipe = OverlapPipeline::spawn(rcomm, algo, plan, n);
+                    let mut pipe = OverlapPipeline::spawn(rcomm, algo, plan, n, wire);
                     let mut params = vec![1.0f32; n];
                     for it in 0..iters {
                         let grad = contribution(rank, it, n);
@@ -362,7 +368,13 @@ mod tests {
     }
 
     /// Serial reference: the same iterations through reduce_and_apply.
-    fn run_serial(k: usize, n: usize, algo: ReduceAlgo, iters: usize) -> Vec<Vec<f32>> {
+    fn run_serial(
+        k: usize,
+        n: usize,
+        algo: ReduceAlgo,
+        iters: usize,
+        wire: Precision,
+    ) -> Vec<Vec<f32>> {
         let world = CommWorld::new(k);
         let handles: Vec<_> = (0..k)
             .map(|rank| {
@@ -375,6 +387,7 @@ mod tests {
                             &comm,
                             &mut grad,
                             &mut params,
+                            wire,
                             &mut |p, g| {
                                 for (pi, gi) in p.iter_mut().zip(g) {
                                     *pi -= 0.01 * gi;
@@ -391,21 +404,24 @@ mod tests {
 
     #[test]
     fn pipelined_bitwise_equals_serial_every_algo() {
-        for algo in ReduceAlgo::all() {
-            for (k, n) in [(1usize, 13usize), (2, 64), (3, 97)] {
-                let serial = run_serial(k, n, algo, 3);
-                for (target, segments) in [(1usize, 1usize), (5, 3), (n + 1, 4), (16, 7)] {
-                    let piped = run_pipelined(k, n, algo, target, 3, segments);
-                    for rank in 0..k {
-                        assert_eq!(
-                            bits(&piped[rank]),
-                            bits(&serial[rank]),
-                            "{} k={k} n={n} target={target} segs={segments} rank={rank}",
-                            algo.id()
-                        );
+        for wire in Precision::all() {
+            for algo in ReduceAlgo::all() {
+                for (k, n) in [(1usize, 13usize), (2, 64), (3, 97)] {
+                    let serial = run_serial(k, n, algo, 3, wire);
+                    for (target, segments) in [(1usize, 1usize), (5, 3), (n + 1, 4), (16, 7)] {
+                        let piped = run_pipelined(k, n, algo, target, 3, segments, wire);
+                        for rank in 0..k {
+                            assert_eq!(
+                                bits(&piped[rank]),
+                                bits(&serial[rank]),
+                                "{} k={k} n={n} target={target} segs={segments} rank={rank} {}",
+                                algo.id(),
+                                wire.id()
+                            );
+                        }
+                        // every rank replicated, like the serial postcondition
+                        assert!(piped.iter().all(|p| p == &piped[0]));
                     }
-                    // every rank replicated, like the serial postcondition
-                    assert!(piped.iter().all(|p| p == &piped[0]));
                 }
             }
         }
@@ -416,8 +432,13 @@ mod tests {
         let stats = Arc::new(CommStats::default());
         let train = CommWorld::with_stats(1, Arc::clone(&stats));
         let reduce = CommWorld::with_stats(1, stats);
-        let mut pipe =
-            OverlapPipeline::spawn(reduce.handle(0), ReduceAlgo::Naive, BucketPlan::new(8, 4), 8);
+        let mut pipe = OverlapPipeline::spawn(
+            reduce.handle(0),
+            ReduceAlgo::Naive,
+            BucketPlan::new(8, 4),
+            8,
+            Precision::F32,
+        );
         pipe.emit(0, &[1.0; 4]);
         let comm = train.handle(0);
         let mut params = vec![0.0f32; 8];
@@ -435,8 +456,13 @@ mod tests {
     fn emit_rejects_out_of_order_segments() {
         let stats = Arc::new(CommStats::default());
         let reduce = CommWorld::with_stats(1, stats);
-        let mut pipe =
-            OverlapPipeline::spawn(reduce.handle(0), ReduceAlgo::Ring, BucketPlan::new(8, 4), 8);
+        let mut pipe = OverlapPipeline::spawn(
+            reduce.handle(0),
+            ReduceAlgo::Ring,
+            BucketPlan::new(8, 4),
+            8,
+            Precision::F32,
+        );
         pipe.emit(4, &[1.0; 4]);
     }
 

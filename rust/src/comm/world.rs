@@ -9,72 +9,81 @@
 //!
 //! * **payload counters** (`*_bytes`): the per-rank payload each collective
 //!   was called with — what the seed tracked, useful for cross-checking
-//!   the modeled volumes;
+//!   the modeled volumes. Payloads are charged at the wire width of the
+//!   run's [`Precision`] (4 bytes/element for f32, 2 for bf16);
 //! * **wire counters** (`grad_wire_bytes`, `grad_wire_bytes_naive`,
 //!   `param_wire_bytes`): the bytes a real fabric would carry per rank
 //!   under the chosen gradient-reduction algorithm, charged by
 //!   [`super::GradientReduction::reduce_and_apply`]. The
 //!   naive-baseline counter is always charged alongside the chosen
 //!   algorithm's, so every run carries its own before/after comparison.
+//!
+//! # Snapshot consistency
+//!
+//! Every counter lives behind ONE mutex, and multi-counter updates (the
+//! chosen/naive gradient-wire pair, the hidden/exposed overlap split)
+//! happen under a single lock acquisition — so a [`CommStats::snapshot`]
+//! taken while the overlap pipeline's reduction workers are mid-update
+//! can never pair one bucket's bytes with another's timing. (The counters
+//! used to be independent relaxed atomics read field-by-field, which
+//! could tear exactly that way.) The lock is uncontended in practice:
+//! it is taken once per collective, not per element.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 
+use crate::kernels::Precision;
+
+/// Which payload counter a collective charges (see [`CommStats`]).
+#[derive(Debug, Clone, Copy)]
+enum Payload {
+    Gather,
+    AllReduce,
+    ReduceScatter,
+    Broadcast,
+}
+
 /// Byte counters per collective, for reporting and model cross-checks.
+/// All updates and reads go through one internal mutex — see the module
+/// docs for the snapshot-consistency guarantee.
 #[derive(Debug, Default)]
 pub struct CommStats {
+    inner: Mutex<CommStatsSnapshot>,
+}
+
+/// A point-in-time copy of [`CommStats`] — consistent by construction:
+/// every field was read under the same lock each writer held.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommStatsSnapshot {
     /// payload bytes handed to `all_gather` / `all_gather_chunks`
-    pub all_gather_bytes: AtomicU64,
+    pub all_gather_bytes: u64,
     /// payload bytes handed to `all_reduce_sum` (and `all_reduce_mean`)
-    pub all_reduce_bytes: AtomicU64,
+    pub all_reduce_bytes: u64,
     /// payload bytes handed to `reduce_scatter_sum` / `reduce_range_sum`
-    pub reduce_scatter_bytes: AtomicU64,
+    pub reduce_scatter_bytes: u64,
     /// payload bytes broadcast from a root rank
-    pub broadcast_bytes: AtomicU64,
+    pub broadcast_bytes: u64,
     /// number of collective operations charged
-    pub ops: AtomicU64,
+    pub ops: u64,
     /// modeled fabric bytes per rank moved reducing gradients, under the
-    /// algorithm actually used
-    pub grad_wire_bytes: AtomicU64,
+    /// algorithm actually used (and at the wire width actually used:
+    /// bf16 payloads charge half the f32 bytes, DESIGN.md §12)
+    pub grad_wire_bytes: u64,
     /// what [`super::NaiveAllReduce`] would have moved for the same
-    /// reductions — the "before" of the before/after comparison
-    pub grad_wire_bytes_naive: AtomicU64,
+    /// reductions at the same wire width — the "before" of the
+    /// before/after comparison
+    pub grad_wire_bytes_naive: u64,
     /// sharded strategy only: the updated-parameter all-gather traffic
-    pub param_wire_bytes: AtomicU64,
+    /// (always full-width f32 — the parameters are the master state)
+    pub param_wire_bytes: u64,
     /// measured reduction-worker time that ran concurrently with backward
     /// compute (µs, summed over ranks) — the part of the gradient
     /// reduction the overlap pipeline HID off the critical path
     /// (DESIGN.md §11). Zero for serial (`--overlap off`) runs, which
     /// expose every reduction microsecond.
-    pub hidden_comm_us: AtomicU64,
+    pub hidden_comm_us: u64,
     /// measured time the compute thread blocked waiting on outstanding
     /// bucket reductions after backward finished (µs, summed over ranks)
     /// — the reduction cost still on the critical path under overlap
-    pub exposed_comm_us: AtomicU64,
-}
-
-/// A point-in-time copy of [`CommStats`].
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct CommStatsSnapshot {
-    /// see [`CommStats::all_gather_bytes`]
-    pub all_gather_bytes: u64,
-    /// see [`CommStats::all_reduce_bytes`]
-    pub all_reduce_bytes: u64,
-    /// see [`CommStats::reduce_scatter_bytes`]
-    pub reduce_scatter_bytes: u64,
-    /// see [`CommStats::broadcast_bytes`]
-    pub broadcast_bytes: u64,
-    /// see [`CommStats::ops`]
-    pub ops: u64,
-    /// see [`CommStats::grad_wire_bytes`]
-    pub grad_wire_bytes: u64,
-    /// see [`CommStats::grad_wire_bytes_naive`]
-    pub grad_wire_bytes_naive: u64,
-    /// see [`CommStats::param_wire_bytes`]
-    pub param_wire_bytes: u64,
-    /// see [`CommStats::hidden_comm_us`]
-    pub hidden_comm_us: u64,
-    /// see [`CommStats::exposed_comm_us`]
     pub exposed_comm_us: u64,
 }
 
@@ -99,37 +108,37 @@ impl CommStatsSnapshot {
 }
 
 impl CommStats {
-    /// Copy every counter into an immutable snapshot.
+    /// Copy every counter into an immutable snapshot — one lock
+    /// acquisition, so the copy is consistent even while other threads
+    /// are charging counters (see the module docs).
     pub fn snapshot(&self) -> CommStatsSnapshot {
-        CommStatsSnapshot {
-            all_gather_bytes: self.all_gather_bytes.load(Ordering::Relaxed),
-            all_reduce_bytes: self.all_reduce_bytes.load(Ordering::Relaxed),
-            reduce_scatter_bytes: self.reduce_scatter_bytes.load(Ordering::Relaxed),
-            broadcast_bytes: self.broadcast_bytes.load(Ordering::Relaxed),
-            ops: self.ops.load(Ordering::Relaxed),
-            grad_wire_bytes: self.grad_wire_bytes.load(Ordering::Relaxed),
-            grad_wire_bytes_naive: self.grad_wire_bytes_naive.load(Ordering::Relaxed),
-            param_wire_bytes: self.param_wire_bytes.load(Ordering::Relaxed),
-            hidden_comm_us: self.hidden_comm_us.load(Ordering::Relaxed),
-            exposed_comm_us: self.exposed_comm_us.load(Ordering::Relaxed),
-        }
+        *self.inner.lock().unwrap()
     }
 
-    fn add_payload(&self, counter: &AtomicU64, len_f32: usize) {
-        counter.fetch_add((len_f32 * 4) as u64, Ordering::Relaxed);
-        self.ops.fetch_add(1, Ordering::Relaxed);
+    fn add_payload(&self, which: Payload, elems: usize, wire: Precision) {
+        let bytes = (elems * wire.width()) as u64;
+        let mut s = self.inner.lock().unwrap();
+        match which {
+            Payload::Gather => s.all_gather_bytes += bytes,
+            Payload::AllReduce => s.all_reduce_bytes += bytes,
+            Payload::ReduceScatter => s.reduce_scatter_bytes += bytes,
+            Payload::Broadcast => s.broadcast_bytes += bytes,
+        }
+        s.ops += 1;
     }
 
     /// Charge one gradient reduction: the chosen algorithm's wire bytes
-    /// and the naive baseline's, per rank.
+    /// and the naive baseline's, per rank. The pair is written under one
+    /// lock, so no snapshot can observe one half without the other.
     pub fn add_grad_wire(&self, chosen: u64, naive: u64) {
-        self.grad_wire_bytes.fetch_add(chosen, Ordering::Relaxed);
-        self.grad_wire_bytes_naive.fetch_add(naive, Ordering::Relaxed);
+        let mut s = self.inner.lock().unwrap();
+        s.grad_wire_bytes += chosen;
+        s.grad_wire_bytes_naive += naive;
     }
 
     /// Charge the sharded strategy's updated-parameter all-gather bytes.
     pub fn add_param_wire(&self, bytes: u64) {
-        self.param_wire_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.inner.lock().unwrap().param_wire_bytes += bytes;
     }
 
     /// Charge one iteration's measured overlap split: `hidden_us` of
@@ -137,10 +146,12 @@ impl CommStats {
     /// compute thread (DESIGN.md §11). Charged once per rank per
     /// iteration by the overlap pipeline's owner, never by the serial
     /// path — so serial and pipelined runs are directly comparable
-    /// without double-counting the overlap win.
+    /// without double-counting the overlap win. The pair is written under
+    /// one lock acquisition (no torn hidden/exposed snapshots).
     pub fn add_overlap_us(&self, hidden_us: u64, exposed_us: u64) {
-        self.hidden_comm_us.fetch_add(hidden_us, Ordering::Relaxed);
-        self.exposed_comm_us.fetch_add(exposed_us, Ordering::Relaxed);
+        let mut s = self.inner.lock().unwrap();
+        s.hidden_comm_us += hidden_us;
+        s.exposed_comm_us += exposed_us;
     }
 }
 
@@ -230,18 +241,28 @@ impl WorkerComm {
     }
 
     /// Concatenate every rank's `data` in rank order. All ranks must pass
-    /// equal-length slices.
+    /// equal-length slices. Full-width (f32) wire format.
     pub fn all_gather(&self, data: &[f32]) -> Vec<f32> {
+        self.all_gather_px(data, Precision::F32)
+    }
+
+    /// [`Self::all_gather`] at an explicit wire precision (DESIGN.md
+    /// §12): under `Bf16` every rank's contribution is rounded to bf16
+    /// before it enters the wire (a no-op when the payload is already
+    /// bf16-representable, as the native backend's embeddings are) and
+    /// the payload counters charge 2 bytes/element instead of 4.
+    pub fn all_gather_px(&self, data: &[f32], wire: Precision) -> Vec<f32> {
         let w = &self.world;
         if w.k == 1 {
-            return data.to_vec();
+            return wire.quantized(data);
         }
         {
             let mut slot = w.slots[self.rank].lock().unwrap();
             slot.clear();
             slot.extend_from_slice(data);
+            wire.quantize(&mut slot);
         }
-        w.stats.add_payload(&w.stats.all_gather_bytes, data.len());
+        w.stats.add_payload(Payload::Gather, data.len(), wire);
         self.barrier();
         let mut out = Vec::with_capacity(data.len() * w.k);
         for r in 0..w.k {
@@ -255,6 +276,8 @@ impl WorkerComm {
     /// the gather half of the sharded strategy, where the chunking of
     /// [`Self::owned_chunk`] leaves the tail ranks short. `total_len` is
     /// the expected concatenated length (a cheap lockstep sanity check).
+    /// Always full-width: this collective carries updated parameters —
+    /// master state — which never travel in bf16 (DESIGN.md §12).
     pub fn all_gather_chunks(&self, mine: &[f32], total_len: usize) -> Vec<f32> {
         let w = &self.world;
         if w.k == 1 {
@@ -266,7 +289,7 @@ impl WorkerComm {
             slot.clear();
             slot.extend_from_slice(mine);
         }
-        w.stats.add_payload(&w.stats.all_gather_bytes, mine.len());
+        w.stats.add_payload(Payload::Gather, mine.len(), Precision::F32);
         self.barrier();
         let mut out = Vec::with_capacity(total_len);
         for r in 0..w.k {
@@ -286,6 +309,13 @@ impl WorkerComm {
         self.reduce_range_sum(buf, lo, hi)
     }
 
+    /// [`Self::reduce_scatter_sum`] at an explicit wire precision — see
+    /// [`Self::reduce_range_sum_px`] for the bf16 wire contract.
+    pub fn reduce_scatter_sum_px(&self, buf: &[f32], wire: Precision) -> Vec<f32> {
+        let (lo, hi) = self.owned_chunk(buf.len());
+        self.reduce_range_sum_px(buf, lo, hi, wire)
+    }
+
     /// SUM-reduce `buf` across ranks and return the sub-range `[lo, hi)`
     /// of the reduced buffer. All ranks must pass equal-length buffers
     /// (lockstep), but each rank may request a *different* — possibly
@@ -297,17 +327,39 @@ impl WorkerComm {
     /// owned chunk as the range — so any tiling of requests over any
     /// bucketing reproduces the unbucketed reduction bitwise.
     pub fn reduce_range_sum(&self, buf: &[f32], lo: usize, hi: usize) -> Vec<f32> {
+        self.reduce_range_sum_px(buf, lo, hi, Precision::F32)
+    }
+
+    /// [`Self::reduce_range_sum`] at an explicit wire precision. The bf16
+    /// wire contract (DESIGN.md §12), per element: every rank's
+    /// contribution is rounded to bf16 before transmission, the K
+    /// contributions are summed in **f32** in rank order `0..K`, and the
+    /// reduced value is rounded to bf16 again for the return leg —
+    /// `q(Σ_r q(g_r))`. The same per-element operation sequence holds for
+    /// every algorithm, every bucketing and K = 1 (where `q(q(x)) =
+    /// q(x)`), which is what keeps naive|ring|sharded × bucketed|whole
+    /// bitwise identical under bf16 exactly as under f32.
+    pub fn reduce_range_sum_px(
+        &self,
+        buf: &[f32],
+        lo: usize,
+        hi: usize,
+        wire: Precision,
+    ) -> Vec<f32> {
         debug_assert!(lo <= hi && hi <= buf.len());
         let w = &self.world;
         if w.k == 1 {
-            return buf[lo..hi].to_vec();
+            let mut out = wire.quantized(&buf[lo..hi]);
+            wire.quantize(&mut out); // idempotent: matches q(Σ q(·))
+            return out;
         }
         {
             let mut slot = w.slots[self.rank].lock().unwrap();
             slot.clear();
             slot.extend_from_slice(buf);
+            wire.quantize(&mut slot);
         }
-        w.stats.add_payload(&w.stats.reduce_scatter_bytes, buf.len());
+        w.stats.add_payload(Payload::ReduceScatter, buf.len(), wire);
         self.barrier();
         let mut acc = vec![0.0f32; hi - lo];
         for r in 0..w.k {
@@ -317,6 +369,7 @@ impl WorkerComm {
             }
         }
         self.barrier(); // slots free for reuse
+        wire.quantize(&mut acc);
         acc
     }
 
@@ -324,16 +377,27 @@ impl WorkerComm {
     /// Implemented reduce-scatter + all-gather style: rank r reduces chunk
     /// r so the reduction parallelizes across workers (O(n) per rank).
     pub fn all_reduce_sum(&self, buf: &mut [f32]) {
+        self.all_reduce_sum_px(buf, Precision::F32)
+    }
+
+    /// [`Self::all_reduce_sum`] at an explicit wire precision — the same
+    /// per-element `q(Σ_r q(g_r))` contract as
+    /// [`Self::reduce_range_sum_px`] (the contribution is quantized
+    /// outbound, summed in f32 by the chunk owner, and the reduced value
+    /// quantized again for the all-gather leg).
+    pub fn all_reduce_sum_px(&self, buf: &mut [f32], wire: Precision) {
         let w = &self.world;
         if w.k == 1 {
+            wire.quantize(buf); // q(q(x)) = q(x): matches the K>1 contract
             return;
         }
+        wire.quantize(buf);
         {
             let mut slot = w.slots[self.rank].lock().unwrap();
             slot.clear();
             slot.extend_from_slice(buf);
         }
-        w.stats.add_payload(&w.stats.all_reduce_bytes, buf.len());
+        w.stats.add_payload(Payload::AllReduce, buf.len(), wire);
         self.barrier();
 
         let n = buf.len();
@@ -346,6 +410,7 @@ impl WorkerComm {
                     *a += v;
                 }
             }
+            wire.quantize(&mut acc);
             let mut out = w.chunks[self.rank].lock().unwrap();
             *out = acc;
         }
@@ -377,7 +442,7 @@ impl WorkerComm {
             let mut slot = w.slots[root].lock().unwrap();
             slot.clear();
             slot.extend_from_slice(buf);
-            w.stats.add_payload(&w.stats.broadcast_bytes, buf.len());
+            w.stats.add_payload(Payload::Broadcast, buf.len(), Precision::F32);
         }
         self.barrier();
         if self.rank != root {
@@ -400,6 +465,7 @@ pub fn chunk_bounds(n: usize, k: usize, r: usize) -> (usize, usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::precision::bf16_round;
 
     fn run_workers<F>(k: usize, f: F) -> Vec<Vec<f32>>
     where
@@ -502,6 +568,101 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The bf16 wire contract: per element `q(Σ_r q(g_r))`, and the
+    /// payload counters charge exactly half the f32 bytes.
+    #[test]
+    fn bf16_wire_quantizes_and_charges_half() {
+        for k in [1usize, 2, 3] {
+            let n = 37;
+            let outs = run_workers(k, move |c| {
+                let buf: Vec<f32> =
+                    (0..n).map(|i| 0.1 + i as f32 * 1.017 + c.rank() as f32 * 0.31).collect();
+                c.reduce_range_sum_px(&buf, 0, n, Precision::Bf16)
+            });
+            // reference: quantize contributions, f32 sum in rank order,
+            // quantize the result
+            for o in &outs {
+                for (i, v) in o.iter().enumerate() {
+                    let mut acc = 0.0f32;
+                    for r in 0..k {
+                        acc += bf16_round(0.1 + i as f32 * 1.017 + r as f32 * 0.31);
+                    }
+                    let want = bf16_round(acc);
+                    assert_eq!(v.to_bits(), want.to_bits(), "k={k} i={i}");
+                }
+            }
+        }
+        // payload accounting at half width (K=2 so bytes actually move)
+        let stats_at = |wire: Precision| {
+            let world = CommWorld::new(2);
+            let handles: Vec<_> = (0..2)
+                .map(|r| {
+                    let h = world.handle(r);
+                    std::thread::spawn(move || {
+                        let buf = vec![1.5f32; 64];
+                        h.all_gather_px(&buf, wire);
+                        let mut b = buf.clone();
+                        h.all_reduce_sum_px(&mut b, wire);
+                        h.reduce_range_sum_px(&buf, 0, 64, wire);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            world.stats.snapshot()
+        };
+        let f = stats_at(Precision::F32);
+        let b = stats_at(Precision::Bf16);
+        assert_eq!(f.all_gather_bytes, 2 * b.all_gather_bytes);
+        assert_eq!(f.all_reduce_bytes, 2 * b.all_reduce_bytes);
+        assert_eq!(f.reduce_scatter_bytes, 2 * b.reduce_scatter_bytes);
+        assert_eq!(f.ops, b.ops);
+    }
+
+    /// Regression test for torn snapshots: paired counters (hidden vs
+    /// exposed, chosen vs naive wire bytes) are updated under one lock,
+    /// so a snapshot taken mid-hammering always observes exact pair
+    /// ratios — never one bucket's bytes with another's timing. With the
+    /// old field-by-field relaxed atomics this raced.
+    #[test]
+    fn snapshots_never_tear_paired_counters() {
+        let stats = Arc::new(CommStats::default());
+        let writers: Vec<_> = (0..4)
+            .map(|_| {
+                let s = Arc::clone(&stats);
+                std::thread::spawn(move || {
+                    for _ in 0..5_000 {
+                        s.add_overlap_us(70, 30);
+                        s.add_grad_wire(512, 1536);
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let s = Arc::clone(&stats);
+            std::thread::spawn(move || {
+                for _ in 0..20_000 {
+                    let snap = s.snapshot();
+                    // every update adds (70, 30): hidden/exposed must sit
+                    // exactly on the 7:3 line at every instant
+                    assert_eq!(snap.hidden_comm_us * 3, snap.exposed_comm_us * 7);
+                    // every update adds (512, 1536): exact 1:3 line
+                    assert_eq!(snap.grad_wire_bytes * 3, snap.grad_wire_bytes_naive);
+                }
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        reader.join().unwrap();
+        let s = stats.snapshot();
+        assert_eq!(s.hidden_comm_us, 4 * 5_000 * 70);
+        assert_eq!(s.exposed_comm_us, 4 * 5_000 * 30);
+        assert_eq!(s.grad_wire_bytes, 4 * 5_000 * 512);
+        assert_eq!(s.grad_wire_bytes_naive, 4 * 5_000 * 1536);
     }
 
     #[test]

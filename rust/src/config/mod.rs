@@ -367,6 +367,11 @@ pub struct TrainConfig {
     /// threads per worker for the native kernels (0 = auto); any value
     /// yields bitwise-identical results (DESIGN.md §10)
     pub kernel_threads: usize,
+    /// compute + gradient-wire storage precision (DESIGN.md §12):
+    /// f32 (default) or bf16 (bf16 working copies / activations /
+    /// half-width gradient wire; f32 master weights, optimizer state and
+    /// checkpoints). bf16 needs the native backend.
+    pub precision: crate::kernels::Precision,
 }
 
 impl TrainConfig {
@@ -439,6 +444,7 @@ impl TrainConfig {
             n_workers: 2,
             local_batch: 8,
             kernel_threads: 0,
+            precision: crate::kernels::Precision::F32,
         };
         let dir: String = artifact_dir.into();
         cfg.set_bundle(&dir);
@@ -495,6 +501,15 @@ impl TrainConfig {
         if let GammaSchedule::Cosine { gamma_min, .. } = self.gamma {
             ensure!(gamma_min > 0.0 && gamma_min <= 1.0, "gamma_min must be in (0,1]");
         }
+        // an empty training set means every worker's strided shard is
+        // empty — reject it here so the trainer, `exp` runners and the
+        // examples all fail with the same actionable message instead of
+        // a downstream shard-math surprise (shard_len_for errors too)
+        ensure!(
+            self.data.n_train > 0,
+            "data.n_train must be > 0: there is nothing to train on — every worker's shard \
+             of an empty dataset is empty (default 8192)"
+        );
         // evaluation always runs on a materialized split: an empty one
         // (n_eval = 0) would score NaN over zero samples — reject it up
         // front instead of "evaluating" an empty set
@@ -545,6 +560,7 @@ impl TrainConfig {
             "bucket_mb", "bucket_bytes", "tau_lr_decay_below",
             "ckpt_dir", "ckpt_every", "keep_last", "resume",
             "backend", "preset", "n_workers", "local_batch", "kernel_threads",
+            "precision",
             "optimizer.kind", "optimizer.beta1", "optimizer.beta2",
             "optimizer.eps", "optimizer.weight_decay", "optimizer.momentum",
             "lr.peak", "lr.min", "lr.warmup_iters", "lr.total_iters",
@@ -594,6 +610,8 @@ impl TrainConfig {
         cfg.n_workers = kv.parse_or("n_workers", cfg.n_workers)?;
         cfg.local_batch = kv.parse_or("local_batch", cfg.local_batch)?;
         cfg.kernel_threads = kv.parse_or("kernel_threads", cfg.kernel_threads)?;
+        cfg.precision =
+            crate::kernels::Precision::from_id(&kv.str_or("precision", cfg.precision.id()))?;
 
         if let Some(kind) = kv.get("optimizer.kind") {
             cfg.optimizer.kind = OptimizerKind::from_id(kind)?;
@@ -672,6 +690,7 @@ impl TrainConfig {
         let _ = writeln!(s, "n_workers = {}", self.n_workers);
         let _ = writeln!(s, "local_batch = {}", self.local_batch);
         let _ = writeln!(s, "kernel_threads = {}", self.kernel_threads);
+        let _ = writeln!(s, "precision = \"{}\"", self.precision.id());
         let _ = writeln!(s, "\n[optimizer]");
         let _ = writeln!(s, "kind = \"{}\"", self.optimizer.kind.id());
         let _ = writeln!(s, "beta1 = {}", self.optimizer.beta1);
@@ -869,6 +888,30 @@ mod tests {
         let mut bad = TrainConfig::new("x", Algorithm::FastClipV1);
         bad.bucket_bytes = 2;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn precision_roundtrips_and_rejects_typos() {
+        use crate::kernels::Precision;
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV1);
+        assert_eq!(cfg.precision, Precision::F32, "precision defaults to f32");
+        cfg.precision = Precision::Bf16;
+        cfg.validate().unwrap();
+        let kv = crate::util::KvFile::parse(&cfg.to_file_string()).unwrap();
+        let back = TrainConfig::from_kv(&kv).unwrap();
+        assert_eq!(back.precision, Precision::Bf16);
+        // typo'd precision errors with the valid choices listed
+        let kv = crate::util::KvFile::parse("precision = \"fp16\"").unwrap();
+        let err = TrainConfig::from_kv(&kv).unwrap_err();
+        assert!(format!("{err}").contains("f32|bf16"), "{err}");
+    }
+
+    #[test]
+    fn empty_training_set_is_a_config_error() {
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV1);
+        cfg.data.n_train = 0;
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err}").contains("n_train"), "{err}");
     }
 
     #[test]

@@ -74,6 +74,18 @@ impl TimeBreakdown {
         }
     }
 
+    /// Measured fraction of the overlapped reduction that ran hidden
+    /// behind backward compute — `hidden / (hidden + exposed)` — or
+    /// `None` when nothing was measured (serial runs, zero iterations):
+    /// the 0/0 of an empty run must surface as "n/a", never as a NaN
+    /// that poisons a report (the `inf`/`NaN` hardening satellite).
+    pub fn hidden_fraction(&self) -> Option<f64> {
+        crate::util::safe_ratio(
+            self.overlap_hidden_s,
+            self.overlap_hidden_s + self.overlap_exposed_s,
+        )
+    }
+
     /// Accumulate another worker's (or run's) breakdown into this one.
     pub fn merge(&mut self, other: &TimeBreakdown) {
         self.compute_s += other.compute_s;
@@ -212,8 +224,9 @@ pub fn charge_iteration_overlapped(
     let blocking = blocking_time(model, vol);
     let grad = model.reduce_time(grad_algo, vol.grad_reduce_bytes);
     let hidden = report.hidden_s();
-    let total = hidden + report.exposed_s;
-    let fraction = if total > 0.0 { hidden / total } else { 0.0 };
+    // guarded: an all-zero report (nothing measured) hides nothing —
+    // 0/0 must not leak a NaN into the breakdown
+    let fraction = crate::util::safe_ratio(hidden, hidden + report.exposed_s).unwrap_or(0.0);
     let overlap = grad * fraction;
 
     bd.comm_total_s += blocking + grad;
@@ -388,6 +401,24 @@ mod tests {
         charge_iteration_with(&mut serial, &m, &vol, 0.5, ReduceAlgo::Ring);
         assert!((serial.comm_total_s - bd.comm_total_s).abs() < 1e-12);
         assert_eq!(serial.overlap_hidden_s, 0.0, "serial runs measure no overlap");
+    }
+
+    #[test]
+    fn hidden_fraction_guards_empty_runs() {
+        // a zero-iteration / serial breakdown has no measured overlap:
+        // the fraction is None (rendered "n/a"), never NaN
+        let empty = TimeBreakdown::default();
+        assert_eq!(empty.hidden_fraction(), None);
+        let bd = TimeBreakdown {
+            overlap_hidden_s: 0.3,
+            overlap_exposed_s: 0.1,
+            ..Default::default()
+        };
+        let f = bd.hidden_fraction().unwrap();
+        assert!((f - 0.75).abs() < 1e-12);
+        // per-iter ms of an empty run is all zeros, not inf
+        let ms = empty.per_iter_ms();
+        assert!(ms.total.is_finite() && ms.total == 0.0);
     }
 
     #[test]

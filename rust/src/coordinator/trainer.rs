@@ -50,6 +50,7 @@ use crate::comm::{
 use crate::config::{OptimizerKind, TrainConfig};
 use crate::data::{Dataset, ShardLoader};
 use crate::eval::{evaluate, EvalSummary};
+use crate::kernels::Precision;
 use crate::runtime::{ComputeBackend, Manifest, TauGrads, TauInput};
 
 use super::state::UState;
@@ -87,6 +88,9 @@ pub struct TrainResult {
     pub timing: TimeBreakdown,
     /// the gradient-reduction algorithm the run resolved (`cfg.reduce`)
     pub reduce_algorithm: &'static str,
+    /// the storage/wire precision the run computed at (`cfg.precision`,
+    /// DESIGN.md §12): "f32" or "bf16"
+    pub precision: &'static str,
     /// whether the bucketed overlap pipeline ran (`cfg.overlap` resolved
     /// against the world size and bucket count, DESIGN.md §11)
     pub overlap: bool,
@@ -163,6 +167,13 @@ impl Trainer {
             manifest.k_workers,
             manifest.local_batch
         );
+        // fail before spawning workers: the PJRT graphs are f32-only
+        ensure!(
+            cfg.precision == Precision::F32
+                || cfg.resolved_backend() == crate::runtime::BackendKind::Native,
+            "--precision bf16 requires the native backend (the AOT-lowered HLO artifacts \
+             compute in f32); pass --backend native"
+        );
         Ok(Trainer { cfg, manifest })
     }
 
@@ -219,6 +230,7 @@ impl Trainer {
             final_eval: out.final_eval.expect("rank 0 evaluates at end"),
             timing: out.timing,
             reduce_algorithm: out.reduce_id,
+            precision: self.cfg.precision.id(),
             overlap: out.overlap,
             n_buckets: out.n_buckets,
             comm_bytes: stats.payload_bytes(),
@@ -267,8 +279,14 @@ fn worker_loop(
         &manifest,
         Some(variant),
         cfg.kernel_threads,
+        cfg.precision,
     )?;
     let rt = rt.as_mut();
+    // the wire precision (DESIGN.md §12): bf16 halves gradient payloads
+    // (and the feature gathers, whose embeddings are bf16-representable
+    // under bf16 compute); master-state legs (u/τ gathers, the sharded
+    // parameter all-gather, loss scalars) always stay f32
+    let wire = cfg.precision;
     let k = comm.world_size();
     let bl = manifest.local_batch;
     let (d, p) = (manifest.model.d_embed, manifest.n_params);
@@ -290,10 +308,11 @@ fn worker_loop(
     // may exceed the thread count — volumes and α–β times follow the model
     let cost = CostModel::new(cfg.network.profile(), cfg.nodes, cfg.gpus_per_node);
 
-    // gradient-reduction strategy: resolved once from the gradient size;
-    // the sharded strategy builds optimizer state over this rank's chunk
-    // only (segments clipped to the shard, DESIGN.md §4)
-    let mut algo = cfg.reduce.resolve(&cost, p * 4);
+    // gradient-reduction strategy: resolved once from the gradient's
+    // WIRE size (half under bf16 — the cheapest algorithm can change
+    // with the width); the sharded strategy builds optimizer state over
+    // this rank's chunk only (segments clipped to the shard, DESIGN.md §4)
+    let mut algo = cfg.reduce.resolve(&cost, p * wire.width());
     if algo == ReduceAlgo::Sharded
         && cfg.reduce == ReduceStrategy::Auto
         && cfg.optimizer.kind == OptimizerKind::Lamb
@@ -322,8 +341,11 @@ fn worker_loop(
     let plan = BucketPlan::for_bytes(p, cfg.bucket_bytes);
     let n_buckets = plan.len();
     let overlap_on = cfg.overlap.enabled(k, n_buckets);
-    let mut pipeline =
-        if overlap_on { Some(OverlapPipeline::spawn(reduce_comm, algo, plan, p)) } else { None };
+    let mut pipeline = if overlap_on {
+        Some(OverlapPipeline::spawn(reduce_comm, algo, plan, p, wire))
+    } else {
+        None
+    };
 
     let n_scalar_vectors = if individual_tau { 4 } else { 2 };
     let volumes = IterationVolumes::for_pattern(
@@ -401,9 +423,12 @@ fn worker_loop(
         let mut others_s = t_other.elapsed().as_secs_f64();
 
         // 2. encode + gather features ------------------- (compute + comm)
+        // under bf16 the embeddings are already bf16-representable, so
+        // the half-width gather is lossless — only the payload accounting
+        // changes (DESIGN.md §12)
         let (e1, e2) = rt.encode(&params, &images, &texts)?;
-        let e1g = comm.all_gather(&e1);
-        let e2g = comm.all_gather(&e2);
+        let e1g = comm.all_gather_px(&e1, wire);
+        let e2g = comm.all_gather_px(&e2, wire);
 
         // 3. phase_g: Eq. (1) u update ---------------------------- (compute)
         let t_other = Instant::now();
@@ -457,7 +482,7 @@ fn worker_loop(
             )?;
             let (loss, tau_grad) = reduce_step_scalars(&comm, out.loss, &out.tau);
             let mut grad = out.grad;
-            reducer.reduce_and_apply(&comm, &mut grad, &mut params, &mut |pslice, gslice| {
+            reducer.reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |pslice, gslice| {
                 let t_opt = Instant::now();
                 optimizer.step(pslice, gslice, lr);
                 opt_s += t_opt.elapsed().as_secs_f64();

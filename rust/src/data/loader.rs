@@ -17,11 +17,26 @@ pub struct Batch {
 
 /// Number of samples in rank `rank`'s strided shard of `n_train` samples
 /// over `world` workers — |{rank, rank+world, rank+2·world, ...}|.
-pub fn shard_len_for(n_train: usize, world: usize, rank: usize) -> usize {
+///
+/// Validates the topology with the same rules as [`ShardLoader::new`]
+/// (the two must agree — callers size per-rank state off this count):
+/// `world == 0`, `rank >= world` and `n_train == 0` are actionable
+/// errors, not silent zero-length shards. A rank whose shard is
+/// legitimately empty (`rank >= n_train > 0`, i.e. fewer samples than
+/// workers) still returns `Ok(0)` — [`ShardLoader::new`] then rejects it
+/// against the batch size with its own message.
+pub fn shard_len_for(n_train: usize, world: usize, rank: usize) -> Result<usize> {
+    ensure!(world > 0, "world size must be > 0");
+    ensure!(rank < world, "rank {rank} out of range for world size {world}");
+    ensure!(
+        n_train > 0,
+        "no training samples (n_train = 0): every worker's strided shard is empty — \
+         raise data.n_train"
+    );
     if rank >= n_train {
-        0
+        Ok(0)
     } else {
-        (n_train - rank).div_ceil(world)
+        Ok((n_train - rank).div_ceil(world))
     }
 }
 
@@ -61,6 +76,11 @@ impl ShardLoader {
         ensure!(world > 0, "world size must be > 0");
         ensure!(rank < world, "rank {rank} out of range for world size {world}");
         ensure!(batch > 0, "local batch must be > 0");
+        ensure!(
+            n_train > 0,
+            "no training samples (n_train = 0): every worker's strided shard is empty — \
+             raise data.n_train"
+        );
         let shard: Vec<usize> = (rank..n_train).step_by(world).collect();
         ensure!(
             shard.len() >= batch,
@@ -176,22 +196,39 @@ mod tests {
                 assert!(seen.insert(g), "index {g} in two shards");
                 assert_eq!(g % 4, rank);
             }
-            assert_eq!(l.shard_len(), shard_len_for(n, 4, rank));
+            assert_eq!(l.shard_len(), shard_len_for(n, 4, rank).unwrap());
         }
         assert_eq!(seen.len(), n);
     }
 
     #[test]
     fn shard_len_for_counts_strided_members() {
-        for (n, k) in [(103usize, 4usize), (64, 2), (10, 4), (7, 8), (0, 3)] {
+        for (n, k) in [(103usize, 4usize), (64, 2), (10, 4), (7, 8)] {
             let mut total = 0;
             for r in 0..k {
                 let expect = (r..n).step_by(k).count();
-                assert_eq!(shard_len_for(n, k, r), expect, "n={n} k={k} r={r}");
+                assert_eq!(shard_len_for(n, k, r).unwrap(), expect, "n={n} k={k} r={r}");
                 total += expect;
             }
             assert_eq!(total, n);
         }
+    }
+
+    #[test]
+    fn shard_len_for_agrees_with_loader_on_degenerate_topologies() {
+        // the satellite contract: shard_len_for validates exactly what
+        // ShardLoader::new validates (minus the batch size)
+        assert!(shard_len_for(10, 0, 0).is_err(), "empty world");
+        assert!(shard_len_for(10, 2, 2).is_err(), "rank >= world");
+        let err = shard_len_for(0, 3, 0).unwrap_err();
+        assert!(format!("{err}").contains("n_train"), "actionable: {err}");
+        // fewer samples than workers: the count is legitimately 0 and
+        // the loader rejects it against the batch with its own message
+        assert_eq!(shard_len_for(7, 8, 7).unwrap(), 0);
+        assert!(ShardLoader::new(7, 7, 8, 1, 0).is_err());
+        // n_train == 0 errors in the loader with the same message shape
+        let err = ShardLoader::new(0, 0, 2, 1, 0).unwrap_err();
+        assert!(format!("{err}").contains("n_train"), "actionable: {err}");
     }
 
     #[test]

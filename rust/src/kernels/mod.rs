@@ -25,7 +25,10 @@
 pub mod encoder;
 pub mod gemm;
 pub mod norm;
+pub mod precision;
 pub mod softmax;
+
+pub use precision::Precision;
 
 /// Resolve a requested kernel thread count: 0 means "auto" (the machine's
 /// available parallelism, capped at 8 — these are latency-bound tiles,

@@ -1,0 +1,550 @@
+//! The dtype layer: bfloat16 storage with f32 accumulation (DESIGN.md
+//! §12).
+//!
+//! bf16 is the top 16 bits of an IEEE-754 f32 — same 8-bit exponent,
+//! mantissa truncated from 23 to 7 bits — so widening is exact (a shift)
+//! and narrowing is a pure rounding step. This module provides:
+//!
+//! * the [`Precision`] knob (`--precision f32|bf16`) shared by the
+//!   compute backend, the gradient wire format and config/CLI;
+//! * scalar and vector conversions with **round-to-nearest-even**
+//!   ([`f32_to_bf16`], [`bf16_to_f32`], [`bf16_round`]);
+//! * bf16-*storage* kernel entry points ([`matmul_bf16`],
+//!   [`image_fwd_bf16`], [`text_fwd_bf16`], [`masked_exp_rowsum_bf16`]):
+//!   operands are raw bf16 words (`u16`), every accumulator is f32, and
+//!   each is **bitwise identical** to widening the operands and calling
+//!   the f32 kernel of the same name — same summation tree, same thread
+//!   partitioning, so the whole §10 determinism contract carries over
+//!   unchanged.
+//!
+//! That bitwise-equivalence is the load-bearing property of the emulated
+//! mixed-precision path: anywhere a buffer holds only bf16-representable
+//! values (i.e. values that already went through [`bf16_round`]), running
+//! the f32 kernel on it computes exactly what the bf16-storage kernel
+//! would — so the backend can quantize at storage boundaries and keep the
+//! existing kernels on the hot path without changing a single bit of the
+//! result. The tests pin this for every entry point at 1/2/4 threads.
+
+use anyhow::Result;
+
+use super::gemm;
+use super::par_rows;
+
+/// Numeric storage precision for compute and the gradient wire format
+/// (`--precision`, DESIGN.md §12). `F32` is the historical default;
+/// `Bf16` stores parameters' working copies, activations and gradient
+/// payloads in bfloat16 while every accumulation, the optimizer's master
+/// weights and all checkpointed state stay f32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// full-width IEEE-754 single precision everywhere
+    F32,
+    /// bfloat16 storage + wire format, f32 accumulation and master state
+    Bf16,
+}
+
+impl Precision {
+    /// Every precision, for id round-trips.
+    pub fn all() -> [Precision; 2] {
+        [Precision::F32, Precision::Bf16]
+    }
+
+    /// CLI/config id: `f32` | `bf16`.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a CLI/config id; unknown values are an error listing the
+    /// valid choices.
+    pub fn from_id(id: &str) -> Result<Precision> {
+        for p in Precision::all() {
+            if p.id() == id {
+                return Ok(p);
+            }
+        }
+        anyhow::bail!("unknown precision '{id}' (expected f32|bf16)")
+    }
+
+    /// Bytes one stored element occupies on the wire / in storage.
+    pub fn width(&self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 => 2,
+        }
+    }
+
+    /// Round every element of `buf` to its nearest storable value:
+    /// identity for `F32`, [`bf16_round`] for `Bf16`. Element-wise and
+    /// deterministic, hence thread-count invariant; idempotent (rounding
+    /// a bf16-representable value is exact).
+    pub fn quantize(&self, buf: &mut [f32]) {
+        if *self == Precision::Bf16 {
+            for v in buf.iter_mut() {
+                *v = bf16_round(*v);
+            }
+        }
+    }
+
+    /// [`Self::quantize`] into a fresh vector, leaving the input intact.
+    pub fn quantized(&self, buf: &[f32]) -> Vec<f32> {
+        let mut out = buf.to_vec();
+        self.quantize(&mut out);
+        out
+    }
+}
+
+/// Narrow an f32 to raw bf16 bits with round-to-nearest-even. Overflow
+/// rounds to the same-signed infinity (the IEEE behaviour); NaNs keep
+/// their sign and top payload bits with the quiet bit forced so the
+/// narrowed value can never collapse into an infinity.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE in pure bit arithmetic: add half an ulp of the 16-bit target
+    // (0x7FFF) plus the round-to-even tie-break (the target's own lsb),
+    // then truncate. Covers normals, subnormals, ±0 and ±inf uniformly.
+    let lsb = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF + lsb)) >> 16) as u16
+}
+
+/// Widen raw bf16 bits to the f32 with the identical value (exact).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round an f32 to its nearest bf16-representable value and widen back —
+/// the storage-boundary operation of the emulated bf16 path.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+/// Narrow a whole f32 slice to raw bf16 words.
+pub fn to_bf16(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_bf16(x)).collect()
+}
+
+/// Widen a whole bf16 slice back to f32 (exact).
+pub fn from_bf16(bs: &[u16]) -> Vec<f32> {
+    bs.iter().map(|&b| bf16_to_f32(b)).collect()
+}
+
+/// Sequential (ascending-index) dot product over bf16-stored operands
+/// with an f32 accumulator — bitwise identical to widening both slices
+/// and calling [`gemm::dot`].
+#[inline]
+pub fn dot_bf16(x: &[u16], y: &[u16]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f32;
+    for (a, b) in x.iter().zip(y) {
+        acc += bf16_to_f32(*a) * bf16_to_f32(*b);
+    }
+    acc
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]` with A and B stored bf16, C and every
+/// accumulator f32 — the bf16-storage twin of [`gemm::matmul`]: same KC
+/// blocking, same ascending-k summation tree, same output-row thread
+/// partitioning, hence bitwise equal to widening A/B and calling it.
+pub fn matmul_bf16(
+    a: &[u16],
+    b: &[u16],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    par_rows(c, m, n, threads, |lo, hi, chunk| {
+        chunk.fill(0.0);
+        for kb in (0..k).step_by(gemm::KC) {
+            let kend = (kb + gemm::KC).min(k);
+            for i in lo..hi {
+                let crow = &mut chunk[(i - lo) * n..(i - lo + 1) * n];
+                for kk in kb..kend {
+                    let aik = bf16_to_f32(a[i * k + kk]);
+                    let brow = &b[kk * n..kk * n + n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bf16_to_f32(*bv);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Image-encoder forward over bf16-stored weights and pooled patches:
+/// `pooled = widen(xbar) · widen(W) + widen(b)` with f32 accumulation —
+/// the bf16-storage twin of [`super::encoder::image_fwd`].
+pub fn image_fwd_bf16(
+    w: &[u16],
+    bias: &[u16],
+    xbar: &[u16],
+    bl: usize,
+    pd: usize,
+    d: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(w.len(), pd * d);
+    assert_eq!(bias.len(), d);
+    assert_eq!(xbar.len(), bl * pd);
+    let mut pooled = vec![0.0f32; bl * d];
+    matmul_bf16(xbar, w, &mut pooled, bl, pd, d, threads);
+    for row in pooled.chunks_mut(d) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += bf16_to_f32(*b);
+        }
+    }
+    pooled
+}
+
+/// Text-encoder forward over a bf16-stored token table:
+/// `pooled_i = (1/L)·Σ_l widen(T[tok_{i,l}]) + widen(b_t)`, tokens walked
+/// in ascending position order with f32 accumulation — the bf16-storage
+/// twin of [`super::encoder::text_fwd`].
+pub fn text_fwd_bf16(
+    table: &[u16],
+    bias: &[u16],
+    texts: &[i32],
+    bl: usize,
+    t_len: usize,
+    vocab: usize,
+    d: usize,
+) -> Vec<f32> {
+    assert_eq!(table.len(), vocab * d);
+    assert_eq!(bias.len(), d);
+    assert_eq!(texts.len(), bl * t_len);
+    let inv = 1.0 / t_len as f32;
+    let mut pooled = vec![0.0f32; bl * d];
+    for i in 0..bl {
+        let out = &mut pooled[i * d..(i + 1) * d];
+        for l in 0..t_len {
+            let tok = texts[i * t_len + l] as usize;
+            debug_assert!(tok < vocab, "token {tok} out of vocab {vocab}");
+            let row = &table[tok * d..(tok + 1) * d];
+            for (o, v) in out.iter_mut().zip(row) {
+                *o += bf16_to_f32(*v);
+            }
+        }
+        for (o, b) in out.iter_mut().zip(bias) {
+            *o = *o * inv + bf16_to_f32(*b);
+        }
+    }
+    pooled
+}
+
+/// [`text_fwd_bf16`] reading an **f32 master table**, rounding each
+/// accessed row to bf16 on load — bitwise equal to narrowing the whole
+/// table up front (`text_fwd_bf16(&to_bf16(table), …)`), but only the
+/// rows the batch actually touches are ever converted. The token table
+/// is by far the largest parameter leaf, so the hot path must not pay
+/// an O(vocab·d) conversion per step for rows it never reads.
+pub fn text_fwd_bf16_from_f32(
+    table: &[f32],
+    bias: &[u16],
+    texts: &[i32],
+    bl: usize,
+    t_len: usize,
+    vocab: usize,
+    d: usize,
+) -> Vec<f32> {
+    assert_eq!(table.len(), vocab * d);
+    assert_eq!(bias.len(), d);
+    assert_eq!(texts.len(), bl * t_len);
+    let inv = 1.0 / t_len as f32;
+    let mut pooled = vec![0.0f32; bl * d];
+    for i in 0..bl {
+        let out = &mut pooled[i * d..(i + 1) * d];
+        for l in 0..t_len {
+            let tok = texts[i * t_len + l] as usize;
+            debug_assert!(tok < vocab, "token {tok} out of vocab {vocab}");
+            let row = &table[tok * d..(tok + 1) * d];
+            for (o, v) in out.iter_mut().zip(row) {
+                *o += bf16_round(*v);
+            }
+        }
+        for (o, b) in out.iter_mut().zip(bias) {
+            *o = *o * inv + bf16_to_f32(*b);
+        }
+    }
+    pooled
+}
+
+/// The fused masked exp row-sum over bf16-stored anchor/candidate
+/// embeddings (τ, `sd` and the output stay f32; every reduction
+/// accumulates in f32 in ascending j) — the bf16-storage twin of
+/// [`super::softmax::masked_exp_rowsum`].
+#[allow(clippy::too_many_arguments)]
+pub fn masked_exp_rowsum_bf16(
+    a: &[u16],
+    b: &[u16],
+    diag: &[isize],
+    sd: &[f32],
+    tau: &[f32],
+    denom: f32,
+    m: usize,
+    n: usize,
+    d: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * d, "anchor shape");
+    assert_eq!(b.len(), n * d, "candidate shape");
+    assert_eq!(diag.len(), m, "diag len");
+    assert_eq!(sd.len(), m, "sd len");
+    assert_eq!(tau.len(), m, "tau len");
+    let mut g = vec![0.0f32; m];
+    par_rows(&mut g, m, 1, threads, |lo, hi, chunk| {
+        for i in lo..hi {
+            let arow = &a[i * d..i * d + d];
+            // shared with the f32 kernel: x * (1/τ), not x / τ — the
+            // bitwise contract spans both storage widths
+            let inv_tau = 1.0 / tau[i];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                if j as isize == diag[i] {
+                    continue;
+                }
+                acc += ((dot_bf16(arow, &b[j * d..j * d + d]) - sd[i]) * inv_tau).exp();
+            }
+            chunk[i - lo] = acc / denom;
+        }
+    });
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{encoder, softmax};
+    use crate::util::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn ids_roundtrip() {
+        for p in Precision::all() {
+            assert_eq!(Precision::from_id(p.id()).unwrap(), p);
+        }
+        assert!(Precision::from_id("fp16").is_err());
+        assert_eq!(Precision::F32.width(), 4);
+        assert_eq!(Precision::Bf16.width(), 2);
+    }
+
+    /// Exhaustive over every bf16 bit pattern: widen → narrow is the
+    /// identity for every non-NaN value (bf16 values are exactly
+    /// representable, so RNE must return them unchanged); NaNs keep sign
+    /// and NaN-ness (the quiet bit is forced, payloads may change).
+    #[test]
+    fn widen_narrow_identity_all_bf16_patterns() {
+        for b in 0u16..=u16::MAX {
+            let x = bf16_to_f32(b);
+            let back = f32_to_bf16(x);
+            if x.is_nan() {
+                assert!(bf16_to_f32(back).is_nan(), "{b:04x}");
+                assert_eq!(back & 0x8000, b & 0x8000, "{b:04x}: sign preserved");
+            } else {
+                assert_eq!(back, b, "{b:04x}");
+            }
+        }
+    }
+
+    /// Scalar reference for RNE narrowing: pick whichever of the two
+    /// bracketing bf16 neighbours is closer; on an exact tie pick the one
+    /// with an even (0) last mantissa bit.
+    fn f32_to_bf16_ref(x: f32) -> u16 {
+        if x.is_nan() {
+            return ((x.to_bits() >> 16) as u16) | 0x0040;
+        }
+        let lo = (x.to_bits() >> 16) as u16; // truncate toward zero in magnitude
+        let hi = lo.wrapping_add(1);
+        let lov = bf16_to_f32(lo);
+        if lov == x {
+            return lo;
+        }
+        // `hi` is one bf16 ulp further from zero; when lo is the
+        // max-finite pattern, hi is ±inf — IEEE overflow rounds as if
+        // infinity sat one full ulp (2^120 at that exponent) past lo
+        let hiv = bf16_to_f32(hi);
+        let lov64 = lov as f64;
+        let hiv64 = if hiv.is_infinite() {
+            lov64 + lov64.signum() * 2f64.powi(120)
+        } else {
+            hiv as f64
+        };
+        let dl = (x as f64 - lov64).abs();
+        let dh = (hiv64 - x as f64).abs();
+        match dl.partial_cmp(&dh).expect("distances are finite") {
+            std::cmp::Ordering::Less => lo,
+            std::cmp::Ordering::Greater => hi,
+            // exact tie: even (lsb 0) wins
+            std::cmp::Ordering::Equal => {
+                if lo & 1 == 0 {
+                    lo
+                } else {
+                    hi
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn narrowing_is_nearest_even_random_sweep() {
+        // random f32 bit patterns, skipping NaNs (payloads differ by
+        // design); includes subnormals, huge and tiny magnitudes
+        let mut rng = Rng::new(0xbf16);
+        for _ in 0..200_000 {
+            let bits = ((rng.below(1 << 16) as u32) << 16) | (rng.below(1 << 16) as u32);
+            let x = f32::from_bits(bits);
+            if x.is_nan() {
+                continue;
+            }
+            assert_eq!(
+                f32_to_bf16(x),
+                f32_to_bf16_ref(x),
+                "x = {x} ({bits:08x})"
+            );
+        }
+    }
+
+    #[test]
+    fn narrowing_edge_cases() {
+        // RNE ties: 1.0 + 2^-8 sits exactly between bf16 1.0 (0x3F80,
+        // even) and 1.0078125 (0x3F81, odd) → even wins
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // next tie up: between 0x3F81 (odd) and 0x3F82 (even) → 0x3F82
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // signed zeros survive exactly
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        assert_eq!(bf16_to_f32(0x8000).to_bits(), (-0.0f32).to_bits());
+        // infinities survive exactly
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xFF80);
+        // past max-finite-bf16 magnitudes round to infinity (IEEE)
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::MIN), 0xFF80);
+        // subnormals: the smallest positive f32 rounds to +0 (its
+        // magnitude is far below half a bf16-subnormal ulp)…
+        assert_eq!(f32_to_bf16(f32::from_bits(1)), 0x0000);
+        // …while a genuine bf16 subnormal round-trips exactly
+        let sub = bf16_to_f32(0x0001);
+        assert!(sub > 0.0 && sub.is_subnormal());
+        assert_eq!(f32_to_bf16(sub), 0x0001);
+        // NaN narrows to a same-signed quiet NaN, never an infinity
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        let neg_nan = f32::from_bits(0xFF80_0001);
+        let b = f32_to_bf16(neg_nan);
+        assert!(bf16_to_f32(b).is_nan());
+        assert_eq!(b & 0x8000, 0x8000, "sign preserved");
+    }
+
+    #[test]
+    fn quantize_is_idempotent_and_f32_is_identity() {
+        let xs = randn(257, 3);
+        let once = Precision::Bf16.quantized(&xs);
+        let twice = Precision::Bf16.quantized(&once);
+        assert_eq!(bits(&once), bits(&twice), "bf16 rounding is idempotent");
+        assert_eq!(bits(&Precision::F32.quantized(&xs)), bits(&xs));
+        // the vector converters agree with the rounding path
+        assert_eq!(bits(&from_bf16(&to_bf16(&xs))), bits(&once));
+    }
+
+    /// The load-bearing equivalence (module docs): every bf16-storage
+    /// entry point is bitwise equal to widening its operands and calling
+    /// the f32 kernel, at any thread count.
+    #[test]
+    fn bf16_kernels_bitwise_equal_widened_f32_kernels() {
+        let (m, k, n) = (5usize, 67usize, 9usize); // crosses KC non-divisibly
+        let a = to_bf16(&randn(m * k, 10));
+        let b = to_bf16(&randn(k * n, 11));
+        let (aw, bw) = (from_bf16(&a), from_bf16(&b));
+        for threads in [1usize, 2, 4] {
+            let mut got = vec![0.0f32; m * n];
+            matmul_bf16(&a, &b, &mut got, m, k, n, threads);
+            let mut want = vec![0.0f32; m * n];
+            gemm::matmul(&aw, &bw, &mut want, m, k, n, threads);
+            assert_eq!(bits(&got), bits(&want), "matmul t={threads}");
+        }
+
+        let (bl, pd, d) = (3usize, 7usize, 5usize);
+        let w = to_bf16(&randn(pd * d, 12));
+        let bias = to_bf16(&randn(d, 13));
+        let xbar = to_bf16(&randn(bl * pd, 14));
+        for threads in [1usize, 2] {
+            let got = image_fwd_bf16(&w, &bias, &xbar, bl, pd, d, threads);
+            let want = encoder::image_fwd(
+                &from_bf16(&w),
+                &from_bf16(&bias),
+                &from_bf16(&xbar),
+                bl,
+                pd,
+                d,
+                threads,
+            );
+            assert_eq!(bits(&got), bits(&want), "image_fwd t={threads}");
+        }
+
+        let (t_len, vocab) = (4usize, 11usize);
+        let table = to_bf16(&randn(vocab * d, 15));
+        let mut rng = Rng::new(16);
+        let texts: Vec<i32> = (0..bl * t_len).map(|_| rng.below(vocab) as i32).collect();
+        let got = text_fwd_bf16(&table, &bias, &texts, bl, t_len, vocab, d);
+        let want =
+            encoder::text_fwd(&from_bf16(&table), &from_bf16(&bias), &texts, bl, t_len, vocab, d);
+        assert_eq!(bits(&got), bits(&want), "text_fwd");
+        // the on-access variant converts only touched rows, same bits
+        let master = randn(vocab * d, 15);
+        let lazy = text_fwd_bf16_from_f32(&master, &bias, &texts, bl, t_len, vocab, d);
+        let eager = text_fwd_bf16(&to_bf16(&master), &bias, &texts, bl, t_len, vocab, d);
+        assert_eq!(bits(&lazy), bits(&eager), "text_fwd on-access");
+
+        let (rm, rn, rd) = (5usize, 8usize, 6usize);
+        let ra = to_bf16(&randn(rm * rd, 17));
+        let rb = to_bf16(&randn(rn * rd, 18));
+        let diag: Vec<isize> = (0..rm)
+            .map(|i| if i % 3 == 2 { softmax::NO_DIAG } else { (i % rn) as isize })
+            .collect();
+        let sd: Vec<f32> = (0..rm).map(|i| 0.03 * i as f32).collect();
+        let tau: Vec<f32> = (0..rm).map(|i| 0.05 + 0.004 * i as f32).collect();
+        for threads in [1usize, 2, 4] {
+            let got =
+                masked_exp_rowsum_bf16(&ra, &rb, &diag, &sd, &tau, 7.0, rm, rn, rd, threads);
+            let want = softmax::masked_exp_rowsum(
+                &from_bf16(&ra),
+                &from_bf16(&rb),
+                &diag,
+                &sd,
+                &tau,
+                7.0,
+                rm,
+                rn,
+                rd,
+                threads,
+            );
+            assert_eq!(bits(&got), bits(&want), "rowsum t={threads}");
+        }
+        // dot_bf16 sits on the same tree as gemm::dot
+        assert_eq!(
+            dot_bf16(&ra[..rd], &rb[..rd]).to_bits(),
+            gemm::dot(&from_bf16(&ra[..rd]), &from_bf16(&rb[..rd])).to_bits()
+        );
+    }
+}

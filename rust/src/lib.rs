@@ -16,7 +16,8 @@
 //!
 //! Entry points: [`coordinator::Trainer`] for training (with periodic
 //! snapshots and `--resume` through [`ckpt`], DESIGN.md §9; overlapped
-//! bucketed gradient reduction via `--overlap`, DESIGN.md §11),
+//! bucketed gradient reduction via `--overlap`, DESIGN.md §11; bf16
+//! storage + half-width gradient wire via `--precision`, DESIGN.md §12),
 //! [`bench`] for the paper's tables/figures, the `fastclip` CLI for both.
 
 // The documented public surface (comm, ckpt, kernels, runtime) is gated

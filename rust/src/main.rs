@@ -67,6 +67,8 @@ fn print_help() {
                                 no artifacts and runs everywhere)\n\
              --preset <id>      native model preset tiny|small|medium|base\n\
              --workers K --batch B --kernel-threads T   native topology\n\
+             --precision f32|bf16   bf16 compute + half-width gradient wire\n\
+                                (native backend; f32 master weights, DESIGN.md §12)\n\
              --bundle <dir>     artifact bundle (default artifacts/tiny_k2_b8)\n\
              --config <file>    load a configs/*.toml preset instead of flags\n\
              --steps N --seed S --optimizer adamw|lamb|lion|sgdm\n\
@@ -107,6 +109,10 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     cfg.n_workers = args.usize_or("workers", cfg.n_workers)?;
     cfg.local_batch = args.usize_or("batch", cfg.local_batch)?;
     cfg.kernel_threads = args.usize_or("kernel-threads", cfg.kernel_threads)?;
+    // precision typos exit non-zero with the valid choices listed
+    cfg.precision = fastclip::kernels::Precision::from_id(
+        &args.str_or("precision", cfg.precision.id()),
+    )?;
     cfg.steps = args.u32_or("steps", cfg.steps)?;
     cfg.iters_per_epoch = args.u32_or("iters-per-epoch", cfg.iters_per_epoch)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
@@ -194,6 +200,7 @@ fn train(args: &Args) -> Result<()> {
     t.row(vec!["  others".into(), format!("{:.2}", ms.others)]);
     t.row(vec!["real bytes moved".into(), format!("{}", result.comm_bytes)]);
     t.row(vec!["grad reduction".into(), result.reduce_algorithm.into()]);
+    t.row(vec!["precision".into(), result.precision.into()]);
     if result.overlap {
         t.row(vec![
             "overlap pipeline".into(),
@@ -206,6 +213,14 @@ fn train(args: &Args) -> Result<()> {
                 result.hidden_comm_us as f64 / 1e3,
                 result.exposed_comm_us as f64 / 1e3
             ),
+        ]);
+        // guarded: "n/a" (never NaN) when nothing was measured
+        t.row(vec![
+            "  hidden fraction".into(),
+            result
+                .timing
+                .hidden_fraction()
+                .map_or_else(|| "n/a".into(), |f| format!("{:.0}%", f * 100.0)),
         ]);
     } else {
         t.row(vec!["overlap pipeline".into(), "off (serial reduction)".into()]);
@@ -254,8 +269,13 @@ fn eval(args: &Args) -> Result<()> {
         }
         None => manifest.load_init_params()?,
     };
-    let mut rt =
-        fastclip::runtime::create_backend(cfg.backend, &manifest, Some("gcl"), cfg.kernel_threads)?;
+    let mut rt = fastclip::runtime::create_backend(
+        cfg.backend,
+        &manifest,
+        Some("gcl"),
+        cfg.kernel_threads,
+        cfg.precision,
+    )?;
     let data_cfg = fastclip::config::DataConfig {
         n_eval: args.usize_or("n-eval", 256)?,
         n_classes: args.usize_or("n-classes", fastclip::config::DataConfig::default().n_classes)?,

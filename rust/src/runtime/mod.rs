@@ -40,12 +40,15 @@ pub use worker::WorkerRuntime;
 /// manifest kind (native manifests run natively, artifact bundles through
 /// PJRT); an explicit kind is honored or errors loudly — a native
 /// manifest cannot execute under PJRT and vice versa (the parameter
-/// layouts differ).
+/// layouts differ). `precision` selects the storage width (DESIGN.md
+/// §12); only the native backend implements the bf16 path — the
+/// AOT-lowered PJRT graphs are f32-only, so `bf16` there is an error.
 pub fn create_backend(
     kind: BackendKind,
     manifest: &Manifest,
     variant: Option<&str>,
     kernel_threads: usize,
+    precision: crate::kernels::Precision,
 ) -> Result<Box<dyn ComputeBackend>> {
     let resolved = match kind {
         BackendKind::Auto => {
@@ -58,13 +61,23 @@ pub fn create_backend(
         k => k,
     };
     match resolved {
-        BackendKind::Native => Ok(Box::new(NativeBackend::new(manifest, variant, kernel_threads)?)),
+        BackendKind::Native => Ok(Box::new(NativeBackend::with_precision(
+            manifest,
+            variant,
+            kernel_threads,
+            precision,
+        )?)),
         BackendKind::Pjrt => {
             anyhow::ensure!(
                 !manifest.native,
                 "--backend pjrt needs an artifact bundle; '{}' is a native manifest \
                  (use --backend native, or point --bundle at a built artifact dir)",
                 manifest.preset
+            );
+            anyhow::ensure!(
+                precision == crate::kernels::Precision::F32,
+                "--precision bf16 requires the native backend: the AOT-lowered HLO \
+                 artifacts compute in f32 (use --backend native)"
             );
             Ok(Box::new(WorkerRuntime::load(manifest, variant)?))
         }
@@ -76,18 +89,24 @@ pub fn create_backend(
 mod tests {
     use super::*;
 
+    use crate::kernels::Precision;
+
     #[test]
     fn auto_resolves_native_manifest_to_native_backend() {
         let m = Manifest::native("tiny", 1, 4, 0).unwrap();
-        let b = create_backend(BackendKind::Auto, &m, Some("gcl"), 1).unwrap();
+        let b = create_backend(BackendKind::Auto, &m, Some("gcl"), 1, Precision::F32).unwrap();
         assert_eq!(b.backend_id(), "native");
         assert_eq!(b.manifest().global_batch, 4);
+        // bf16 is a native-backend capability; constructing one works
+        let b = create_backend(BackendKind::Native, &m, Some("gcl"), 1, Precision::Bf16).unwrap();
+        assert_eq!(b.backend_id(), "native");
     }
 
     #[test]
     fn pjrt_on_native_manifest_is_an_error() {
         let m = Manifest::native("tiny", 1, 4, 0).unwrap();
-        let err = create_backend(BackendKind::Pjrt, &m, Some("gcl"), 1).unwrap_err();
+        let err =
+            create_backend(BackendKind::Pjrt, &m, Some("gcl"), 1, Precision::F32).unwrap_err();
         assert!(format!("{err}").contains("artifact"), "{err}");
     }
 }

@@ -45,7 +45,7 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::kernels::{encoder, gemm, norm, resolve_threads, softmax};
+use crate::kernels::{encoder, gemm, norm, precision, resolve_threads, softmax, Precision};
 use crate::util::Rng;
 
 use super::backend::{ComputeBackend, RuntimeTimers, StepEmit, StepOutput, TauGrads, TauInput};
@@ -154,6 +154,7 @@ pub struct NativeBackend {
     manifest: Manifest,
     layout: Layout,
     threads: usize,
+    precision: Precision,
     timers: RuntimeTimers,
 }
 
@@ -161,11 +162,28 @@ impl NativeBackend {
     /// Build a native backend for `manifest` (which must be a native
     /// manifest — artifact bundles carry a transformer parameter layout
     /// the native model does not implement). `variant = None` accepts all
-    /// variants; `kernel_threads = 0` auto-sizes.
+    /// variants; `kernel_threads = 0` auto-sizes. Computes in full f32;
+    /// use [`Self::with_precision`] for the bf16 storage path.
     pub fn new(
         manifest: &Manifest,
         variant: Option<&str>,
         kernel_threads: usize,
+    ) -> Result<NativeBackend> {
+        Self::with_precision(manifest, variant, kernel_threads, Precision::F32)
+    }
+
+    /// [`Self::new`] with an explicit compute [`Precision`] (DESIGN.md
+    /// §12). Under `Bf16` the parameter working copies and the cached
+    /// activations are stored bfloat16 (the f32 `params` the caller holds
+    /// stay the untouched master weights) and the emitted gradient leaves
+    /// are bf16-rounded; every kernel accumulation stays f32, so the §10
+    /// determinism contract — bitwise identical at any kernel thread
+    /// count — holds unchanged.
+    pub fn with_precision(
+        manifest: &Manifest,
+        variant: Option<&str>,
+        kernel_threads: usize,
+        precision: Precision,
     ) -> Result<NativeBackend> {
         ensure!(
             manifest.native,
@@ -184,6 +202,7 @@ impl NativeBackend {
             layout: Layout::resolve(manifest)?,
             manifest: manifest.clone(),
             threads: resolve_threads(kernel_threads),
+            precision,
             timers: RuntimeTimers::default(),
         })
     }
@@ -191,6 +210,11 @@ impl NativeBackend {
     /// The kernel thread count this backend runs with.
     pub fn kernel_threads(&self) -> usize {
         self.threads
+    }
+
+    /// The storage precision this backend computes at (DESIGN.md §12).
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     fn check_encode_inputs(&self, params: &[f32], images: &[f32], texts: &[i32]) -> Result<()> {
@@ -209,6 +233,14 @@ impl NativeBackend {
 
     /// Full forward with cached activations (the step's backward needs
     /// them; `encode` discards everything but e1/e2).
+    ///
+    /// Under `--precision bf16` (DESIGN.md §12) the parameter leaves get
+    /// bf16 *working copies* (`params` itself — the caller's master
+    /// weights — is never touched) and the forward runs through the
+    /// bf16-storage kernel entry points of [`crate::kernels::precision`];
+    /// every activation is rounded to bf16 at its storage boundary, so
+    /// the cache holds exactly the (bf16-representable) values the
+    /// backward must differentiate through. Accumulations stay f32.
     fn encode_cached(&self, params: &[f32], images: &[f32], texts: &[i32]) -> EncodeCache {
         let m = &self.manifest;
         let (bl, d) = (m.local_batch, m.model.d_embed);
@@ -219,6 +251,32 @@ impl NativeBackend {
         let bt = &params[self.layout.tbias.0..self.layout.tbias.1];
 
         let xbar = encoder::patch_mean(images, bl, m.model.v_patches, pd);
+        if self.precision == Precision::Bf16 {
+            let (wq, bvq) = (precision::to_bf16(w), precision::to_bf16(bv));
+            let btq = precision::to_bf16(bt);
+            let xq = precision::to_bf16(&xbar);
+            let xbar = precision::from_bf16(&xq);
+            let mut pooled1 = precision::image_fwd_bf16(&wq, &bvq, &xq, bl, pd, d, self.threads);
+            self.precision.quantize(&mut pooled1);
+            let (mut e1, norms1) = norm::l2_normalize_fwd(&pooled1, bl, d, self.threads);
+            self.precision.quantize(&mut e1);
+            // on-access variant: the token table is ~90% of the
+            // parameters — converting all of it per call would spend
+            // more bandwidth than bf16 storage saves
+            let mut pooled2 = precision::text_fwd_bf16_from_f32(
+                tok,
+                &btq,
+                texts,
+                bl,
+                m.model.t_len,
+                m.model.t_vocab,
+                d,
+            );
+            self.precision.quantize(&mut pooled2);
+            let (mut e2, norms2) = norm::l2_normalize_fwd(&pooled2, bl, d, self.threads);
+            self.precision.quantize(&mut e2);
+            return EncodeCache { xbar, pooled1, norms1, e1, pooled2, norms2, e2 };
+        }
         let pooled1 = encoder::image_fwd(w, bv, &xbar, bl, pd, d, self.threads);
         let (e1, norms1) = norm::l2_normalize_fwd(&pooled1, bl, d, self.threads);
         let pooled2 = encoder::text_fwd(tok, bt, texts, bl, m.model.t_len, m.model.t_vocab, d);
@@ -230,7 +288,9 @@ impl NativeBackend {
     /// contribution — forward value only, with the gathered inputs and
     /// u/τ treated as constants (the stop-gradient placement of
     /// `losses.py`). Public as a finite-difference oracle for the parity
-    /// suite; not part of the training path.
+    /// suite; not part of the training path. A bf16 backend evaluates the
+    /// quantized forward; the bf16 gradient check therefore differences
+    /// an `F32` oracle backend and widens its tolerance (DESIGN.md §12).
     #[doc(hidden)]
     #[allow(clippy::too_many_arguments)]
     pub fn surrogate_value(
@@ -621,15 +681,24 @@ impl ComputeBackend for NativeBackend {
         // segment-ordered emission (DESIGN.md §11): each leaf's gradient
         // goes to the sink the moment it is final, image side first —
         // its buckets reduce in the background while the text backward
-        // (the t.tok scatter, usually the largest leaf) still runs
+        // (the t.tok scatter, usually the largest leaf) still runs.
+        // Cotangents accumulate in f32; under bf16 only the FINAL
+        // per-leaf gradients are rounded to storage width before
+        // emission (DESIGN.md §12) — so the wire's own bf16 rounding of
+        // the local contribution is a no-op and serial vs bucketed paths
+        // see identical payloads.
         let dpooled1 = norm::l2_normalize_bwd(&cache.pooled1, &cache.norms1, &de1, bl, d, threads);
-        let (dw, dbv) =
+        let (mut dw, mut dbv) =
             encoder::image_bwd(&cache.xbar, &dpooled1, bl, m.model.v_patch_dim, d, threads);
+        self.precision.quantize(&mut dw);
+        self.precision.quantize(&mut dbv);
         sink(self.layout.vproj.0, &dw);
         sink(self.layout.vbias.0, &dbv);
         let dpooled2 = norm::l2_normalize_bwd(&cache.pooled2, &cache.norms2, &de2, bl, d, threads);
-        let (dtok, dbt) =
+        let (mut dtok, mut dbt) =
             encoder::text_bwd(texts, &dpooled2, bl, m.model.t_len, m.model.t_vocab, d);
+        self.precision.quantize(&mut dtok);
+        self.precision.quantize(&mut dbt);
         sink(self.layout.ttok.0, &dtok);
         sink(self.layout.tbias.0, &dbt);
 

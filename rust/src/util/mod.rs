@@ -10,9 +10,11 @@
 mod cli;
 mod json;
 mod kv;
+mod ratio;
 mod rng;
 
 pub use cli::Args;
 pub use json::Json;
 pub use kv::KvFile;
+pub use ratio::{ratio_cell, safe_rate, safe_ratio};
 pub use rng::{l2_normalize_rows, mean, std_dev, Rng, RngState};

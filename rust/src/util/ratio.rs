@@ -1,0 +1,69 @@
+//! Guarded ratio/rate helpers for reporting code (the `inf`/`NaN`
+//! hardening satellite): every speedup, throughput and hidden-fraction a
+//! report emits goes through these, so a zero-duration or zero-iteration
+//! run yields an explicit `None` — rendered as `"n/a"` / JSON `null` —
+//! instead of a non-finite number that JSON cannot encode and a
+//! regression gate cannot compare.
+
+/// `count / seconds` as a rate, or `None` when the denominator is zero,
+/// negative or non-finite (an unmeasurably fast or empty run), or the
+/// numerator is non-finite.
+pub fn safe_rate(count: f64, seconds: f64) -> Option<f64> {
+    safe_ratio(count, seconds)
+}
+
+/// `a / b`, or `None` when the quotient would be non-finite (`b` zero or
+/// non-finite, `a` non-finite). `b` must be strictly positive — rates
+/// and durations are magnitudes.
+pub fn safe_ratio(a: f64, b: f64) -> Option<f64> {
+    if !a.is_finite() || !b.is_finite() || b <= 0.0 {
+        return None;
+    }
+    let q = a / b;
+    q.is_finite().then_some(q)
+}
+
+/// Render an optional ratio for a table cell: `"{:.2}x"` or `"n/a"`.
+pub fn ratio_cell(r: Option<f64>) -> String {
+    match r {
+        Some(v) => format!("{v:.2}x"),
+        None => "n/a".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_duration_is_none_not_inf() {
+        // the regression the satellite pins: a 0-second run must not
+        // produce inf/NaN speedups
+        assert_eq!(safe_rate(12.0, 0.0), None);
+        assert_eq!(safe_rate(0.0, 0.0), None, "0/0 would be NaN");
+        assert_eq!(safe_ratio(1.0, -2.0), None, "negative denominators rejected");
+        assert_eq!(safe_ratio(f64::INFINITY, 2.0), None);
+        assert_eq!(safe_ratio(3.0, f64::NAN), None);
+        assert_eq!(safe_ratio(1.0, 5e-324), None, "overflowing quotient");
+        assert_eq!(safe_rate(12.0, 2.0), Some(6.0));
+        assert_eq!(ratio_cell(Some(1.5)), "1.50x");
+        assert_eq!(ratio_cell(None), "n/a");
+    }
+
+    #[test]
+    fn emitted_json_stays_valid_for_missing_rates() {
+        // None → Json::Null; and even a raw non-finite Num degrades to
+        // null (not an invalid token), so a BENCH_*.json always parses
+        use crate::util::Json;
+        let doc = Json::obj(vec![
+            ("rate", Json::Null),
+            ("bad", Json::num(f64::NAN)),
+            ("worse", Json::num(f64::INFINITY)),
+        ]);
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).expect("document must stay valid JSON");
+        assert!(matches!(back.get("rate").unwrap(), Json::Null));
+        assert!(matches!(back.get("bad").unwrap(), Json::Null));
+        assert!(matches!(back.get("worse").unwrap(), Json::Null));
+    }
+}

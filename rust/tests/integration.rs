@@ -16,6 +16,7 @@ use std::sync::Arc;
 use fastclip::comm::{reduction, CommWorld, ReduceAlgo};
 use fastclip::config::{Algorithm, DataConfig, OptimizerConfig, TrainConfig};
 use fastclip::coordinator::Trainer;
+use fastclip::kernels::Precision;
 use fastclip::optim::{build, shard_segments};
 use fastclip::runtime::{ComputeBackend, Manifest, NativeBackend, TauGrads, TauInput};
 use fastclip::util::Rng;
@@ -278,17 +279,28 @@ fn contribution(rank: usize, n: usize) -> Vec<f32> {
     g
 }
 
-/// Reduce with `algo` and recover the full reduced vector on every rank
-/// by using an identity "optimizer" (params := reduced grad slice).
-fn reduce_full(algo: ReduceAlgo, k: usize, n: usize) -> (Vec<Vec<f32>>, fastclip::comm::CommStatsSnapshot) {
+/// Reduce with `algo` at `wire` precision and recover the full reduced
+/// vector on every rank by using an identity "optimizer" (params :=
+/// reduced grad slice).
+fn reduce_full_px(
+    algo: ReduceAlgo,
+    k: usize,
+    n: usize,
+    wire: Precision,
+) -> (Vec<Vec<f32>>, fastclip::comm::CommStatsSnapshot) {
     run_world(k, move |comm| {
         let mut grad = contribution(comm.rank(), n);
         let mut params = vec![0.0f32; n];
-        reduction(algo).reduce_and_apply(&comm, &mut grad, &mut params, &mut |p, g| {
+        reduction(algo).reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |p, g| {
             p.copy_from_slice(g)
         });
         params
     })
+}
+
+/// [`reduce_full_px`] at the default f32 wire format.
+fn reduce_full(algo: ReduceAlgo, k: usize, n: usize) -> (Vec<Vec<f32>>, fastclip::comm::CommStatsSnapshot) {
+    reduce_full_px(algo, k, n, Precision::F32)
 }
 
 /// THE exactness invariant of the pluggable collectives: reduce-scatter +
@@ -313,6 +325,41 @@ fn reduce_strategies_bit_identical_to_naive() {
             let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
             assert_eq!(bits(&naive[0]), bits(&ring[0]), "k={k} n={n}: ring != naive");
             assert_eq!(bits(&naive[0]), bits(&sharded[0]), "k={k} n={n}: sharded != naive");
+        }
+    }
+}
+
+/// The bf16 wire format (DESIGN.md §12) keeps the exactness invariant:
+/// all three algorithms stay bit-identical to each other under the
+/// half-width wire, replicated across ranks — and each charges exactly
+/// half its f32 wire bytes.
+#[test]
+fn bf16_wire_reduce_bit_identical_across_algorithms_and_halves_bytes() {
+    for k in [1usize, 2, 4] {
+        for n in [1usize, 5, 10, 1023] {
+            let (naive, sn) = reduce_full_px(ReduceAlgo::Naive, k, n, Precision::Bf16);
+            let (ring, sr) = reduce_full_px(ReduceAlgo::Ring, k, n, Precision::Bf16);
+            let (sharded, ss) = reduce_full_px(ReduceAlgo::Sharded, k, n, Precision::Bf16);
+            for outs in [&naive, &ring, &sharded] {
+                for o in outs.iter() {
+                    assert_eq!(o, &outs[0], "k={k} n={n}: not replicated under bf16");
+                }
+            }
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&naive[0]), bits(&ring[0]), "k={k} n={n}: bf16 ring != naive");
+            assert_eq!(bits(&naive[0]), bits(&sharded[0]), "k={k} n={n}: bf16 sharded != naive");
+            // exactly half the f32 bytes, per algorithm
+            for (algo, sb) in
+                [(ReduceAlgo::Naive, sn), (ReduceAlgo::Ring, sr), (ReduceAlgo::Sharded, ss)]
+            {
+                let (_, sf) = reduce_full_px(algo, k, n, Precision::F32);
+                assert_eq!(
+                    sf.grad_wire_bytes,
+                    2 * sb.grad_wire_bytes,
+                    "{} k={k} n={n}: bf16 wire must charge exactly half",
+                    algo.id()
+                );
+            }
         }
     }
 }
@@ -364,9 +411,13 @@ fn sharded_training_loop_matches_replicated() {
                 for (i, g) in grad.iter_mut().enumerate() {
                     *g = (*g + t as f32).sin() + params[i % n] * 0.1;
                 }
-                reduction(algo).reduce_and_apply(&comm, &mut grad, &mut params, &mut |p, g| {
-                    opt.step(p, g, 1e-2)
-                });
+                reduction(algo).reduce_and_apply(
+                    &comm,
+                    &mut grad,
+                    &mut params,
+                    Precision::F32,
+                    &mut |p, g| opt.step(p, g, 1e-2),
+                );
             }
             params
         });
