@@ -22,7 +22,7 @@ fn bench_all_reduce(k: usize, n: usize) {
                 let h = world.handle(rank);
                 std::thread::spawn(move || {
                     let mut buf = vec![rank as f32; n];
-                    h.all_reduce_sum(&mut buf);
+                    h.all_reduce_sum(&mut buf).unwrap();
                     black_box(buf[0]);
                 })
             })
@@ -41,7 +41,7 @@ fn bench_all_gather(k: usize, n: usize) {
                 let h = world.handle(rank);
                 std::thread::spawn(move || {
                     let buf = vec![rank as f32; n];
-                    black_box(h.all_gather(&buf));
+                    black_box(h.all_gather(&buf).unwrap());
                 })
             })
             .collect();
@@ -72,17 +72,19 @@ fn bench_reduction(algo: ReduceAlgo, k: usize, n: usize) -> fastclip::comm::Comm
                 std::thread::spawn(move || {
                     let mut grad = vec![rank as f32 + 0.5; n];
                     let mut params = vec![1.0f32; n];
-                    reduction(algo).reduce_and_apply(
-                        &h,
-                        &mut grad,
-                        &mut params,
-                        fastclip::kernels::Precision::F32,
-                        &mut |p, g| {
-                            for (pi, gi) in p.iter_mut().zip(g) {
-                                *pi -= 1e-3 * gi;
-                            }
-                        },
-                    );
+                    reduction(algo)
+                        .reduce_and_apply(
+                            &h,
+                            &mut grad,
+                            &mut params,
+                            fastclip::kernels::Precision::F32,
+                            &mut |p, g| {
+                                for (pi, gi) in p.iter_mut().zip(g) {
+                                    *pi -= 1e-3 * gi;
+                                }
+                            },
+                        )
+                        .unwrap();
                     black_box(params[0]);
                 })
             })

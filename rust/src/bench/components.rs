@@ -226,13 +226,11 @@ pub fn reduce_table(args: &Args) -> Result<()> {
                         let mut grad: Vec<f32> =
                             (0..n).map(|i| ((i * 7 + rank * 13) % 97) as f32 * 0.125).collect();
                         let mut params = vec![0.0f32; n];
-                        reduction(algo).reduce_and_apply(
-                            &comm,
-                            &mut grad,
-                            &mut params,
-                            wire,
-                            &mut |p, g| p.copy_from_slice(g),
-                        );
+                        reduction(algo)
+                            .reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |p, g| {
+                                p.copy_from_slice(g)
+                            })
+                            .unwrap();
                         params
                     })
                 })

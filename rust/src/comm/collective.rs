@@ -52,7 +52,7 @@ use crate::kernels::Precision;
 
 use super::bucket::Bucket;
 use super::cost_model::CostModel;
-use super::world::WorkerComm;
+use super::world::{CommResult, WorkerComm};
 
 /// A concrete reduction algorithm (the resolved form of
 /// [`ReduceStrategy`]).
@@ -161,11 +161,14 @@ pub trait GradientReduction: Send + Sync {
     fn grad_wire_bytes(&self, k: usize, n: u64) -> u64;
 
     /// Collective: reduce `grad` over all ranks at the `wire` precision
-    /// and apply the update. Postcondition: `params` is updated and
-    /// bitwise replicated on every rank. `grad` contents are
+    /// and apply the update. Postcondition on `Ok`: `params` is updated
+    /// and bitwise replicated on every rank. `grad` contents are
     /// algorithm-dependent afterwards (the replicated algorithms leave
     /// the reduced gradient in it, the sharded one leaves the — possibly
-    /// bf16-rounded — local contribution) — treat it as scratch.
+    /// bf16-rounded — local contribution) — treat it as scratch. `Err`
+    /// means the world was cancelled (a rank lost, DESIGN.md §13):
+    /// `grad`/`params` are unspecified and the iteration must be rolled
+    /// back, never committed.
     fn reduce_and_apply(
         &self,
         comm: &WorkerComm,
@@ -173,7 +176,7 @@ pub trait GradientReduction: Send + Sync {
         params: &mut [f32],
         wire: Precision,
         apply: &mut dyn FnMut(&mut [f32], &[f32]),
-    );
+    ) -> CommResult<()>;
 
     /// Collective: reduce ONE bucket of the flat `full_len`-element
     /// gradient — `data` is this rank's local contribution for
@@ -190,7 +193,9 @@ pub trait GradientReduction: Send + Sync {
     /// (bf16-rounded under `Bf16`) contributions, exactly as
     /// [`Self::reduce_and_apply`] sums it — so reducing any bucketing of
     /// the vector, in any size, reproduces the unbucketed reduction of
-    /// the same elements bit for bit, at either wire width.
+    /// the same elements bit for bit, at either wire width. `Err` means
+    /// the world was cancelled mid-bucket — the overlap pipeline
+    /// propagates it out of `finish` so the trainer can roll back.
     fn reduce_bucket(
         &self,
         comm: &WorkerComm,
@@ -198,7 +203,7 @@ pub trait GradientReduction: Send + Sync {
         bucket: Bucket,
         full_len: usize,
         wire: Precision,
-    ) -> ReducedSegment;
+    ) -> CommResult<ReducedSegment>;
 }
 
 /// The reduced output of one [`GradientReduction::reduce_bucket`] call:
@@ -233,10 +238,10 @@ impl GradientReduction for NaiveAllReduce {
         params: &mut [f32],
         wire: Precision,
         apply: &mut dyn FnMut(&mut [f32], &[f32]),
-    ) {
+    ) -> CommResult<()> {
         charge(comm, self, grad.len(), wire);
         let n = grad.len();
-        let gathered = comm.all_gather_px(grad, wire);
+        let gathered = comm.all_gather_px(grad, wire)?;
         // rank-major accumulation: sequential access over the K·n buffer,
         // and per element the additions still happen in rank order from a
         // 0.0 accumulator — identical f32 rounding on every rank and to
@@ -251,6 +256,7 @@ impl GradientReduction for NaiveAllReduce {
         }
         wire.quantize(grad);
         apply(params, grad);
+        Ok(())
     }
 
     fn reduce_bucket(
@@ -260,10 +266,10 @@ impl GradientReduction for NaiveAllReduce {
         bucket: Bucket,
         _full_len: usize,
         wire: Precision,
-    ) -> ReducedSegment {
+    ) -> CommResult<ReducedSegment> {
         charge(comm, self, data.len(), wire);
         let n = data.len();
-        let gathered = comm.all_gather_px(data, wire);
+        let gathered = comm.all_gather_px(data, wire)?;
         // same rank-major, rank-ordered accumulation as reduce_and_apply:
         // per element the f32 rounding sequence is identical
         let mut out = vec![0.0f32; n];
@@ -274,7 +280,7 @@ impl GradientReduction for NaiveAllReduce {
             }
         }
         wire.quantize(&mut out);
-        ReducedSegment { lo: bucket.lo, data: out }
+        Ok(ReducedSegment { lo: bucket.lo, data: out })
     }
 }
 
@@ -299,13 +305,14 @@ impl GradientReduction for RingAllReduce {
         params: &mut [f32],
         wire: Precision,
         apply: &mut dyn FnMut(&mut [f32], &[f32]),
-    ) {
+    ) -> CommResult<()> {
         charge(comm, self, grad.len(), wire);
         // all_reduce_sum IS the RS+AG ring dataflow, in place and with
         // the same rank-ordered (bit-identical) summation and the same
         // per-element wire rounding
-        comm.all_reduce_sum_px(grad, wire);
+        comm.all_reduce_sum_px(grad, wire)?;
         apply(params, grad);
+        Ok(())
     }
 
     fn reduce_bucket(
@@ -315,11 +322,11 @@ impl GradientReduction for RingAllReduce {
         bucket: Bucket,
         _full_len: usize,
         wire: Precision,
-    ) -> ReducedSegment {
+    ) -> CommResult<ReducedSegment> {
         charge(comm, self, data.len(), wire);
         let mut out = data.to_vec();
-        comm.all_reduce_sum_px(&mut out, wire);
-        ReducedSegment { lo: bucket.lo, data: out }
+        comm.all_reduce_sum_px(&mut out, wire)?;
+        Ok(ReducedSegment { lo: bucket.lo, data: out })
     }
 }
 
@@ -346,14 +353,14 @@ impl GradientReduction for ShardedReduceScatter {
         params: &mut [f32],
         wire: Precision,
         apply: &mut dyn FnMut(&mut [f32], &[f32]),
-    ) {
+    ) -> CommResult<()> {
         charge(comm, self, grad.len(), wire);
         let p = params.len();
         debug_assert_eq!(p, grad.len(), "sharded update needs grad.len == params.len");
-        let shard = comm.reduce_scatter_sum_px(grad, wire);
+        let shard = comm.reduce_scatter_sum_px(grad, wire)?;
         let (lo, hi) = comm.owned_chunk(p);
         apply(&mut params[lo..hi], &shard);
-        allgather_updated_params(comm, params, lo, hi);
+        allgather_updated_params(comm, params, lo, hi)
     }
 
     fn reduce_bucket(
@@ -363,7 +370,7 @@ impl GradientReduction for ShardedReduceScatter {
         bucket: Bucket,
         full_len: usize,
         wire: Precision,
-    ) -> ReducedSegment {
+    ) -> CommResult<ReducedSegment> {
         charge(comm, self, data.len(), wire);
         // ownership stays the GLOBAL chunking of the full vector — the
         // bucket is reduced into the intersection with this rank's chunk,
@@ -376,13 +383,13 @@ impl GradientReduction for ShardedReduceScatter {
         let s = bucket.lo.max(clo);
         let e = bucket.hi.min(chi);
         if s < e {
-            let out = comm.reduce_range_sum_px(data, s - bucket.lo, e - bucket.lo, wire);
-            ReducedSegment { lo: s, data: out }
+            let out = comm.reduce_range_sum_px(data, s - bucket.lo, e - bucket.lo, wire)?;
+            Ok(ReducedSegment { lo: s, data: out })
         } else {
             // empty intersection — the call is still a collective, so
             // this rank participates with an empty range
-            let out = comm.reduce_range_sum_px(data, 0, 0, wire);
-            ReducedSegment { lo: clo, data: out }
+            let out = comm.reduce_range_sum_px(data, 0, 0, wire)?;
+            Ok(ReducedSegment { lo: clo, data: out })
         }
     }
 }
@@ -401,12 +408,13 @@ pub(crate) fn allgather_updated_params(
     params: &mut [f32],
     lo: usize,
     hi: usize,
-) {
+) -> CommResult<()> {
     let p = params.len();
     let k = comm.world_size() as u64;
     comm.stats().add_param_wire((k - 1) * (p as u64 * 4) / k);
-    let updated = comm.all_gather_chunks(&params[lo..hi], p);
+    let updated = comm.all_gather_chunks(&params[lo..hi], p)?;
     params.copy_from_slice(&updated);
+    Ok(())
 }
 
 /// Charge this iteration's gradient wire bytes: the chosen algorithm's
@@ -470,13 +478,11 @@ mod tests {
                     let whole: Vec<Vec<f32>> = run_ranks(&world, k, move |comm| {
                         let mut grad = contribution(comm.rank(), n);
                         let mut params = vec![0.0f32; n];
-                        reduction(algo).reduce_and_apply(
-                            &comm,
-                            &mut grad,
-                            &mut params,
-                            wire,
-                            &mut |p, g| p.copy_from_slice(g),
-                        );
+                        reduction(algo)
+                            .reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |p, g| {
+                                p.copy_from_slice(g)
+                            })
+                            .unwrap();
                         params
                     });
                     // cross-algorithm bit-identity at this wire width
@@ -500,13 +506,9 @@ mod tests {
                             // chunk-wise below
                             let mut out = vec![f32::NAN; n];
                             for b in plan.iter() {
-                                let seg = reduction(algo).reduce_bucket(
-                                    &comm,
-                                    &local[b.lo..b.hi],
-                                    b,
-                                    n,
-                                    wire,
-                                );
+                                let seg = reduction(algo)
+                                    .reduce_bucket(&comm, &local[b.lo..b.hi], b, n, wire)
+                                    .unwrap();
                                 out[seg.lo..seg.lo + seg.data.len()].copy_from_slice(&seg.data);
                             }
                             out
@@ -546,13 +548,11 @@ mod tests {
                 let outs = run_ranks(&world, 4, move |comm| {
                     let mut grad = contribution(comm.rank(), 1003);
                     let mut params = vec![0.0f32; 1003];
-                    reduction(algo).reduce_and_apply(
-                        &comm,
-                        &mut grad,
-                        &mut params,
-                        wire,
-                        &mut |p, g| p.copy_from_slice(g),
-                    );
+                    reduction(algo)
+                        .reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |p, g| {
+                            p.copy_from_slice(g)
+                        })
+                        .unwrap();
                     params
                 });
                 (world.stats.snapshot(), outs)

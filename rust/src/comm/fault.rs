@@ -1,0 +1,459 @@
+//! Fault model for the in-process collective world (DESIGN.md §13):
+//! cancellation tokens, a cancellable barrier, and deterministic failure
+//! injection.
+//!
+//! A lost rank in a lockstep collective system is a *deadlock*, not an
+//! error: every surviving rank blocks forever on a barrier the dead rank
+//! will never reach. This module turns that hang into a typed error.
+//! Every world carries a shared [`CancellationToken`]; the moment a rank
+//! is declared lost (or a watchdog expires) every blocking wait in the
+//! world returns [`CommError`] instead of blocking, the overlap workers
+//! drain out, and the trainer can roll back and shrink (DESIGN.md §13).
+//!
+//! Failure *injection* is configuration, not chaos: [`FailSpec`] kills a
+//! specific rank at a specific iteration (`--fail rank=R@iter=N`) and
+//! [`StraggleSpec`] skews a rank's per-collective latency (`--straggle
+//! rank=R:ms=M`), so every fault scenario is deterministic and
+//! CI-replayable.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// Why a collective returned instead of completing. Implements
+/// [`std::error::Error`], so it travels through `anyhow` chains and the
+/// trainer can `downcast_ref` it to decide whether a failure is
+/// shrinkable (a lost rank) or fatal (a watchdog bug).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CommError {
+    /// One or more ranks were declared lost (sorted, deduplicated).
+    /// Survivors can roll back to the last snapshot and shrink the world.
+    RanksLost(Vec<usize>),
+    /// A watchdog expired with no rank declared lost — a liveness bug or
+    /// a watchdog set shorter than the slowest straggler; not shrinkable.
+    Watchdog,
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::RanksLost(ranks) => {
+                write!(f, "collective cancelled: rank(s) {ranks:?} lost")
+            }
+            CommError::Watchdog => {
+                write!(f, "collective watchdog expired with no rank declared lost")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// Shared cancellation state for one collective world (and its overlap
+/// sibling — the trainer hands both worlds the SAME token, so a loss
+/// detected on either cancels every blocking wait on both).
+///
+/// Cancellation is permanent: once set, every subsequent collective on
+/// the world returns [`CommError`] immediately. Survivors build fresh
+/// worlds (with a fresh token) for the post-shrink incarnation.
+#[derive(Debug, Default)]
+pub struct CancellationToken {
+    cancelled: AtomicBool,
+    watchdog_fired: AtomicBool,
+    lost: Mutex<Vec<usize>>,
+}
+
+impl CancellationToken {
+    /// A fresh, uncancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare `rank` lost and cancel every blocking wait on worlds
+    /// sharing this token. Idempotent; multiple losses accumulate.
+    pub fn declare_lost(&self, rank: usize) {
+        let mut lost = self.lost.lock().unwrap();
+        if !lost.contains(&rank) {
+            lost.push(rank);
+            lost.sort_unstable();
+        }
+        // ordering: the rank list is published before the flag flips, so
+        // any waiter that observes `cancelled` finds a non-empty list
+        drop(lost);
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    /// Cancel because a watchdog expired (no specific rank to blame).
+    pub fn cancel_watchdog(&self) {
+        self.watchdog_fired.store(true, Ordering::SeqCst);
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    /// Has any loss or watchdog cancelled this token?
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// The ranks declared lost so far (sorted, deduplicated).
+    pub fn lost(&self) -> Vec<usize> {
+        self.lost.lock().unwrap().clone()
+    }
+
+    /// The error every cancelled wait returns: the lost ranks when any
+    /// were declared, [`CommError::Watchdog`] otherwise.
+    pub fn error(&self) -> CommError {
+        let lost = self.lost();
+        if lost.is_empty() {
+            CommError::Watchdog
+        } else {
+            CommError::RanksLost(lost)
+        }
+    }
+}
+
+/// How often a parked waiter re-checks its token and watchdog. The happy
+/// path never polls — the last arriver wakes everyone via `notify_all` —
+/// this only bounds how stale a *cancellation* can go unnoticed.
+const POLL: Duration = Duration::from_millis(1);
+
+/// A [`std::sync::Barrier`] that can be cancelled: `wait` returns
+/// `Err(CommError)` instead of blocking forever when the token is
+/// cancelled or the watchdog deadline passes. The normal path costs the
+/// same one-mutex-one-condvar handshake as `std::sync::Barrier`.
+#[derive(Debug)]
+pub struct CancellableBarrier {
+    k: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+#[derive(Debug)]
+struct BarrierState {
+    count: usize,
+    generation: u64,
+}
+
+impl CancellableBarrier {
+    /// A barrier for `k` participants.
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        Self { k, state: Mutex::new(BarrierState { count: 0, generation: 0 }), cv: Condvar::new() }
+    }
+
+    /// Block until all `k` participants arrive, the token is cancelled,
+    /// or `watchdog` (when set) expires — whichever comes first. A waiter
+    /// that leaves on cancellation *withdraws* its arrival, which is safe
+    /// because cancellation is permanent: every later arriver errors out
+    /// at its own entry check, so a half-filled generation can never
+    /// complete spuriously. Watchdog expiry cancels the token itself, so
+    /// one stuck barrier releases every waiter in the world.
+    pub fn wait(
+        &self,
+        token: &CancellationToken,
+        watchdog: Option<Duration>,
+    ) -> std::result::Result<(), CommError> {
+        if token.is_cancelled() {
+            return Err(token.error());
+        }
+        let deadline = watchdog.map(|d| Instant::now() + d);
+        let mut s = self.state.lock().unwrap();
+        s.count += 1;
+        if s.count == self.k {
+            s.count = 0;
+            s.generation = s.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let gen = s.generation;
+        while s.generation == gen {
+            if token.is_cancelled() {
+                s.count -= 1; // withdraw: this generation must not complete
+                return Err(token.error());
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    token.cancel_watchdog();
+                    s.count -= 1;
+                    return Err(token.error());
+                }
+            }
+            s = self.cv.wait_timeout(s, POLL).unwrap().0;
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic failure injection: kill rank `rank` at the top of
+/// iteration `iter` (0-based step index). Grammar: `rank=R@iter=N`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailSpec {
+    /// The rank that dies.
+    pub rank: usize,
+    /// The 0-based training step at whose start it dies.
+    pub iter: u32,
+}
+
+/// Deterministic latency skew: rank `rank` sleeps `ms` milliseconds at
+/// the entry of every collective. Grammar: `rank=R:ms=M`, comma-separated
+/// for several ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StraggleSpec {
+    /// The straggling rank.
+    pub rank: usize,
+    /// Added latency per collective, in milliseconds.
+    pub ms: u64,
+}
+
+/// The fault scenario of one run: at most one injected death, any number
+/// of stragglers, and the watchdog bound on every blocking wait.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The injected death, if any.
+    pub fail: Option<FailSpec>,
+    /// Per-rank latency skew.
+    pub straggle: Vec<StraggleSpec>,
+    /// Explicit watchdog in milliseconds (0 = pick a default when faults
+    /// are active, no watchdog otherwise).
+    pub watchdog_ms: u64,
+}
+
+/// Default watchdog when faults are injected but none was configured:
+/// generous enough for CI machines, finite enough that no fault test can
+/// hang (the ISSUE's "every blocking path is watchdog-bounded").
+const DEFAULT_WATCHDOG: Duration = Duration::from_secs(60);
+
+impl FaultPlan {
+    /// Build a plan from the raw config strings (`None` = absent).
+    pub fn parse(
+        fail: Option<&str>,
+        straggle: Option<&str>,
+        watchdog_ms: u64,
+    ) -> Result<FaultPlan> {
+        Ok(FaultPlan {
+            fail: fail.map(parse_fail).transpose()?,
+            straggle: straggle.map(parse_straggle).transpose()?.unwrap_or_default(),
+            watchdog_ms,
+        })
+    }
+
+    /// Is any fault injected?
+    pub fn active(&self) -> bool {
+        self.fail.is_some() || !self.straggle.is_empty()
+    }
+
+    /// The watchdog every blocking wait runs under: the configured bound,
+    /// a 60 s default when faults are injected, none otherwise (a clean
+    /// run pays no deadline bookkeeping).
+    pub fn watchdog(&self) -> Option<Duration> {
+        if self.watchdog_ms > 0 {
+            Some(Duration::from_millis(self.watchdog_ms))
+        } else if self.active() {
+            Some(DEFAULT_WATCHDOG)
+        } else {
+            None
+        }
+    }
+
+    /// Per-rank straggle sleeps for a world of `k` ranks.
+    pub fn straggle_for(&self, k: usize) -> Vec<Duration> {
+        let mut out = vec![Duration::ZERO; k];
+        for s in &self.straggle {
+            if s.rank < k {
+                out[s.rank] = Duration::from_millis(s.ms);
+            }
+        }
+        out
+    }
+
+    /// Reject specs that name ranks outside a world of `k` ranks.
+    pub fn check_ranks(&self, k: usize) -> Result<()> {
+        if let Some(f) = &self.fail {
+            if f.rank >= k {
+                bail!("--fail rank={} is outside the world (K={k} ranks, 0..{})", f.rank, k - 1);
+            }
+            if k == 1 {
+                bail!("--fail with K=1 kills the only rank: nothing survives to shrink");
+            }
+        }
+        for s in &self.straggle {
+            if s.rank >= k {
+                bail!(
+                    "--straggle rank={} is outside the world (K={k} ranks, 0..{})",
+                    s.rank,
+                    k - 1
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+const FAIL_GRAMMAR: &str = "expected rank=R@iter=N (e.g. --fail rank=1@iter=17)";
+const STRAGGLE_GRAMMAR: &str =
+    "expected rank=R:ms=M[,rank=R2:ms=M2] (e.g. --straggle rank=0:ms=20)";
+
+fn field<T: std::str::FromStr>(part: &str, key: &str, grammar: &str) -> Result<T>
+where
+    T::Err: fmt::Display,
+{
+    let val = part
+        .strip_prefix(key)
+        .and_then(|r| r.strip_prefix('='))
+        .with_context(|| format!("bad fault spec field '{part}': {grammar}"))?;
+    val.parse::<T>()
+        .map_err(|e| anyhow::anyhow!("bad fault spec value '{val}' for {key} ({e}): {grammar}"))
+}
+
+/// Parse `rank=R@iter=N`.
+pub fn parse_fail(s: &str) -> Result<FailSpec> {
+    let (r, i) = s.split_once('@').with_context(|| format!("bad --fail '{s}': {FAIL_GRAMMAR}"))?;
+    Ok(FailSpec { rank: field(r, "rank", FAIL_GRAMMAR)?, iter: field(i, "iter", FAIL_GRAMMAR)? })
+}
+
+/// Parse `rank=R:ms=M[,rank=R2:ms=M2]`.
+pub fn parse_straggle(s: &str) -> Result<Vec<StraggleSpec>> {
+    s.split(',')
+        .map(|spec| {
+            let (r, m) = spec
+                .split_once(':')
+                .with_context(|| format!("bad --straggle '{spec}': {STRAGGLE_GRAMMAR}"))?;
+            Ok(StraggleSpec {
+                rank: field(r, "rank", STRAGGLE_GRAMMAR)?,
+                ms: field(m, "ms", STRAGGLE_GRAMMAR)?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fail_spec_grammar_roundtrip_and_rejection() {
+        assert_eq!(parse_fail("rank=1@iter=17").unwrap(), FailSpec { rank: 1, iter: 17 });
+        assert_eq!(parse_fail("rank=0@iter=0").unwrap(), FailSpec { rank: 0, iter: 0 });
+        for bad in ["", "rank=1", "rank=1@iter=", "iter=3@rank=1", "rank=x@iter=2", "1@17"] {
+            let err = parse_fail(bad).unwrap_err();
+            assert!(format!("{err:#}").contains("rank=R@iter=N"), "{bad}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn straggle_spec_grammar_roundtrip_and_rejection() {
+        assert_eq!(
+            parse_straggle("rank=0:ms=20").unwrap(),
+            vec![StraggleSpec { rank: 0, ms: 20 }]
+        );
+        assert_eq!(
+            parse_straggle("rank=0:ms=5,rank=3:ms=11").unwrap(),
+            vec![StraggleSpec { rank: 0, ms: 5 }, StraggleSpec { rank: 3, ms: 11 }]
+        );
+        for bad in ["", "rank=0", "rank=0:ms=x", "ms=5:rank=0", "rank=0:ms=1,,"] {
+            let err = parse_straggle(bad).unwrap_err();
+            assert!(format!("{err:#}").contains("rank=R:ms=M"), "{bad}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn fault_plan_bounds_and_defaults() {
+        let none = FaultPlan::default();
+        assert!(!none.active());
+        assert_eq!(none.watchdog(), None, "clean runs pay no watchdog");
+
+        let plan = FaultPlan::parse(Some("rank=1@iter=3"), Some("rank=0:ms=7"), 0).unwrap();
+        assert!(plan.active());
+        assert_eq!(plan.watchdog(), Some(Duration::from_secs(60)));
+        assert_eq!(plan.straggle_for(2), vec![Duration::from_millis(7), Duration::ZERO]);
+        plan.check_ranks(2).unwrap();
+        assert!(plan.check_ranks(1).is_err(), "failing rank 1 of a K=1 world");
+
+        let explicit = FaultPlan::parse(None, None, 250).unwrap();
+        assert_eq!(explicit.watchdog(), Some(Duration::from_millis(250)));
+
+        let k1_kill = FaultPlan::parse(Some("rank=0@iter=1"), None, 0).unwrap();
+        let err = k1_kill.check_ranks(1).unwrap_err();
+        assert!(format!("{err}").contains("nothing survives"), "{err}");
+    }
+
+    #[test]
+    fn token_records_losses_and_is_permanent() {
+        let t = CancellationToken::new();
+        assert!(!t.is_cancelled());
+        assert_eq!(t.error(), CommError::Watchdog, "no loss recorded yet");
+        t.declare_lost(3);
+        t.declare_lost(1);
+        t.declare_lost(3); // idempotent
+        assert!(t.is_cancelled());
+        assert_eq!(t.lost(), vec![1, 3]);
+        assert_eq!(t.error(), CommError::RanksLost(vec![1, 3]));
+    }
+
+    #[test]
+    fn barrier_completes_normally_and_repeatedly() {
+        let k = 4;
+        let barrier = Arc::new(CancellableBarrier::new(k));
+        let token = Arc::new(CancellationToken::new());
+        let handles: Vec<_> = (0..k)
+            .map(|_| {
+                let b = Arc::clone(&barrier);
+                let t = Arc::clone(&token);
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        b.wait(&t, Some(Duration::from_secs(10))).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn barrier_cancellation_releases_every_waiter() {
+        let k = 3;
+        let barrier = Arc::new(CancellableBarrier::new(k));
+        let token = Arc::new(CancellationToken::new());
+        // only k-1 threads arrive; the missing rank is declared lost
+        let handles: Vec<_> = (0..k - 1)
+            .map(|_| {
+                let b = Arc::clone(&barrier);
+                let t = Arc::clone(&token);
+                std::thread::spawn(move || b.wait(&t, Some(Duration::from_secs(30))))
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(20));
+        token.declare_lost(k - 1);
+        for h in handles {
+            let err = h.join().unwrap().unwrap_err();
+            assert_eq!(err, CommError::RanksLost(vec![k - 1]));
+        }
+        // and the world stays cancelled: later arrivals error immediately
+        let err = barrier.wait(&token, None).unwrap_err();
+        assert_eq!(err, CommError::RanksLost(vec![k - 1]));
+    }
+
+    #[test]
+    fn barrier_watchdog_bounds_the_wait_and_cancels_the_token() {
+        let barrier = CancellableBarrier::new(2);
+        let token = CancellationToken::new();
+        let t0 = Instant::now();
+        let err = barrier.wait(&token, Some(Duration::from_millis(50))).unwrap_err();
+        assert_eq!(err, CommError::Watchdog);
+        assert!(t0.elapsed() < Duration::from_secs(10), "watchdog must bound the wait");
+        assert!(token.is_cancelled(), "watchdog expiry cancels the whole world");
+    }
+
+    #[test]
+    fn comm_error_travels_through_anyhow() {
+        let e: anyhow::Error = CommError::RanksLost(vec![2]).into();
+        let e = e.context("reducing bucket 3").context("iteration 17");
+        let c = e.root_cause().downcast_ref::<CommError>().unwrap();
+        assert_eq!(*c, CommError::RanksLost(vec![2]));
+    }
+}

@@ -16,10 +16,22 @@
 //! Every method on [`WorkerComm`] and every
 //! [`GradientReduction::reduce_and_apply`] call is a *collective*: all K
 //! ranks must call the same operation in the same order (lockstep), as
-//! with MPI/NCCL. A rank that skips a collective deadlocks the world; a
-//! rank that passes a different buffer length panics. Collectives return
-//! only after every rank's contribution is visible, and buffers handed in
-//! by value are safe to reuse immediately on return.
+//! with MPI/NCCL. A rank that passes a different buffer length panics.
+//! Collectives return `Ok` only after every rank's contribution is
+//! visible, and buffers handed in by value are safe to reuse immediately
+//! on return.
+//!
+//! # Fault model
+//!
+//! A rank that stops participating no longer deadlocks the world: every
+//! world carries a shared [`CancellationToken`], every barrier is a
+//! [`CancellableBarrier`], and every collective returns
+//! `Err(`[`CommError::RanksLost`]`)` once a loss is declared — including
+//! mid-collective, from every waiter, bounded by an optional watchdog
+//! ([`CommError::Watchdog`]). [`FaultPlan`] parses the deterministic
+//! injection grammar (`--fail rank=R@iter=N`, `--straggle rank=R:ms=M`)
+//! the trainer and tests drive this machinery with. See DESIGN.md §13
+//! for the failure model and the live-shrink protocol built on top.
 //!
 //! # Gradient-reduction algorithms
 //!
@@ -65,17 +77,19 @@
 //!         std::thread::spawn(move || {
 //!             let mut grad: Vec<f32> = (0..n).map(|i| (i + rank) as f32).collect();
 //!             let mut params = vec![1.0f32; n];
-//!             reduction(ReduceAlgo::Sharded).reduce_and_apply(
-//!                 &comm,
-//!                 &mut grad,
-//!                 &mut params,
-//!                 Precision::F32, // or Bf16 for the half-width wire format
-//!                 &mut |p, g| {
-//!                     for (pi, gi) in p.iter_mut().zip(g) {
-//!                         *pi -= 0.1 * gi; // each rank updates only its shard
-//!                     }
-//!                 },
-//!             );
+//!             reduction(ReduceAlgo::Sharded)
+//!                 .reduce_and_apply(
+//!                     &comm,
+//!                     &mut grad,
+//!                     &mut params,
+//!                     Precision::F32, // or Bf16 for the half-width wire format
+//!                     &mut |p, g| {
+//!                         for (pi, gi) in p.iter_mut().zip(g) {
+//!                             *pi -= 0.1 * gi; // each rank updates only its shard
+//!                         }
+//!                     },
+//!                 )
+//!                 .unwrap(); // Err only when the world is cancelled (a rank lost)
 //!             params
 //!         })
 //!     })
@@ -91,6 +105,7 @@
 pub mod bucket;
 pub mod collective;
 mod cost_model;
+pub mod fault;
 pub mod overlap;
 mod world;
 
@@ -100,5 +115,9 @@ pub use collective::{
     RingAllReduce, ShardedReduceScatter,
 };
 pub use cost_model::{Collective, CostModel, ProfileName};
+pub use fault::{
+    parse_fail, parse_straggle, CancellableBarrier, CancellationToken, CommError, FailSpec,
+    FaultPlan, StraggleSpec,
+};
 pub use overlap::{OverlapMode, OverlapPipeline, OverlapReport};
-pub use world::{chunk_bounds, CommStats, CommStatsSnapshot, CommWorld, WorkerComm};
+pub use world::{chunk_bounds, CommResult, CommStats, CommStatsSnapshot, CommWorld, WorkerComm};

@@ -47,6 +47,7 @@ use crate::kernels::Precision;
 
 use super::bucket::{Bucket, BucketPlan};
 use super::collective::{allgather_updated_params, reduction, GradientReduction, ReduceAlgo};
+use super::fault::CommError;
 use super::world::WorkerComm;
 
 /// Config-facing switch for the overlap pipeline (`--overlap`).
@@ -129,6 +130,12 @@ struct Done {
     busy_s: f64,
 }
 
+/// What the reduction worker sends back per bucket: the reduced segment,
+/// or the [`CommError`] that cancelled it (a rank lost mid-bucket —
+/// DESIGN.md §13). After an `Err` the worker exits its loop, so the
+/// pipeline's `Drop` join never blocks on a cancelled world.
+type BucketResult = Result<Done, CommError>;
+
 /// One rank's overlapped-reduction pipeline: a staging buffer fed by the
 /// backward pass's segment emissions, a background reduction worker, and
 /// the per-iteration finish step that assembles the reduced gradient and
@@ -145,7 +152,7 @@ pub struct OverlapPipeline {
     algo: ReduceAlgo,
     full_len: usize,
     to_worker: Option<Sender<Job>>,
-    done_rx: Receiver<Done>,
+    done_rx: Receiver<BucketResult>,
     worker: Option<JoinHandle<()>>,
     /// staging for emitted local segments; after finish assembles the
     /// replicated reductions it holds the reduced gradient
@@ -169,7 +176,7 @@ impl OverlapPipeline {
     ) -> OverlapPipeline {
         assert_eq!(plan.total_len(), full_len, "plan must tile the gradient");
         let (job_tx, job_rx) = channel::<Job>();
-        let (done_tx, done_rx) = channel::<Done>();
+        let (done_tx, done_rx) = channel::<BucketResult>();
         let rank = reduce_comm.rank();
         let worker = std::thread::Builder::new()
             .name(format!("reduce-{rank}"))
@@ -177,11 +184,22 @@ impl OverlapPipeline {
                 let reducer: &'static dyn GradientReduction = reduction(algo);
                 while let Ok(job) = job_rx.recv() {
                     let t0 = Instant::now();
-                    let seg =
-                        reducer.reduce_bucket(&reduce_comm, &job.data, job.bucket, full_len, wire);
-                    let busy_s = t0.elapsed().as_secs_f64();
-                    if done_tx.send(Done { lo: seg.lo, data: seg.data, busy_s }).is_err() {
-                        break; // pipeline dropped mid-iteration
+                    match reducer.reduce_bucket(&reduce_comm, &job.data, job.bucket, full_len, wire)
+                    {
+                        Ok(seg) => {
+                            let busy_s = t0.elapsed().as_secs_f64();
+                            let done = Done { lo: seg.lo, data: seg.data, busy_s };
+                            if done_tx.send(Ok(done)).is_err() {
+                                break; // pipeline dropped mid-iteration
+                            }
+                        }
+                        Err(e) => {
+                            // the world is cancelled: report once and exit
+                            // so Drop's join returns promptly — further
+                            // buckets would only error the same way
+                            let _ = done_tx.send(Err(e));
+                            break;
+                        }
                     }
                 }
             })
@@ -238,6 +256,12 @@ impl OverlapPipeline {
     /// [`ShardedReduceScatter`](super::ShardedReduceScatter) does).
     /// Returns the measured busy/exposed split and resets the pipeline
     /// for the next iteration.
+    ///
+    /// `Err` is either a caller bug (partial emission) or a cancelled
+    /// world — the latter carries a [`CommError`] as the root cause
+    /// (downcastable through `anyhow`), `params` is unspecified, and the
+    /// pipeline must be dropped: the trainer rolls the iteration back
+    /// and rebuilds at K′ (DESIGN.md §13).
     pub fn finish(
         &mut self,
         comm: &WorkerComm,
@@ -264,7 +288,7 @@ impl OverlapPipeline {
             }
             let exposed_s = t0.elapsed().as_secs_f64();
             apply(&mut params[clo..chi], &shard);
-            allgather_updated_params(comm, params, clo, chi);
+            allgather_updated_params(comm, params, clo, chi)?;
             self.reset();
             return Ok(OverlapReport { busy_s, exposed_s });
         }
@@ -280,9 +304,13 @@ impl OverlapPipeline {
     }
 
     fn recv_done(&self) -> Result<Done> {
-        self.done_rx
+        let res = self
+            .done_rx
             .recv()
-            .map_err(|_| anyhow!("the bucket-reduction worker thread died mid-iteration"))
+            .map_err(|_| anyhow!("the bucket-reduction worker thread died mid-iteration"))?;
+        // a CommError from a cancelled bucket propagates with the lost
+        // ranks intact (the trainer downcasts it for the shrink decision)
+        Ok(res?)
     }
 
     fn reset(&mut self) {
@@ -293,10 +321,10 @@ impl OverlapPipeline {
 
 impl Drop for OverlapPipeline {
     fn drop(&mut self) {
-        // closing the job channel lets the worker's recv() loop end; the
-        // join only blocks if the worker is mid-collective waiting for a
-        // peer rank that died too — the same hang class a serial
-        // collective has when a rank exits early
+        // closing the job channel lets the worker's recv() loop end. A
+        // worker mid-collective cannot hang the join anymore: its
+        // barriers are cancellable, so a dead peer cancels the world,
+        // the bucket errors, and the worker exits (DESIGN.md §13)
         self.to_worker = None;
         if let Some(worker) = self.worker.take() {
             let _ = worker.join();
@@ -383,17 +411,13 @@ mod tests {
                     let mut params = vec![1.0f32; n];
                     for it in 0..iters {
                         let mut grad = contribution(rank, it, n);
-                        reduction(algo).reduce_and_apply(
-                            &comm,
-                            &mut grad,
-                            &mut params,
-                            wire,
-                            &mut |p, g| {
+                        reduction(algo)
+                            .reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |p, g| {
                                 for (pi, gi) in p.iter_mut().zip(g) {
                                     *pi -= 0.01 * gi;
                                 }
-                            },
-                        );
+                            })
+                            .unwrap();
                     }
                     params
                 })
@@ -477,6 +501,48 @@ mod tests {
         assert!(OverlapMode::Auto.enabled(2, 2));
         assert!(!OverlapMode::Auto.enabled(1, 100), "K=1 has nothing to reduce");
         assert!(!OverlapMode::Auto.enabled(4, 1), "one bucket hides nothing");
+    }
+
+    /// A world cancelled while buckets are in flight surfaces a
+    /// [`CommError`] out of `finish` (downcastable through anyhow) on
+    /// every surviving rank, and dropping the pipeline does not hang on
+    /// the reduction worker.
+    #[test]
+    fn cancelled_world_errors_finish_and_drop_joins() {
+        let k = 3;
+        let stats = Arc::new(CommStats::default());
+        let train = CommWorld::with_stats(k, Arc::clone(&stats));
+        let reduce = CommWorld::with_stats(k, Arc::clone(&stats));
+        let token = Arc::clone(reduce.token());
+        // ranks 0 and 1 run a full iteration; rank 2 never participates
+        // and is declared lost shortly after the buckets go in flight
+        let handles: Vec<_> = (0..2)
+            .map(|rank| {
+                let comm = train.handle(rank);
+                let rcomm = reduce.handle(rank);
+                std::thread::spawn(move || {
+                    let n = 64;
+                    let plan = BucketPlan::new(n, 16);
+                    let mut pipe =
+                        OverlapPipeline::spawn(rcomm, ReduceAlgo::Ring, plan, n, Precision::F32);
+                    let grad = contribution(rank, 0, n);
+                    pipe.emit(0, &grad);
+                    let mut params = vec![0.0f32; n];
+                    pipe.finish(&comm, &mut params, &mut |_, _| {})
+                        .expect_err("finish must fail on a cancelled world")
+                })
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        token.declare_lost(2);
+        for h in handles {
+            let err = h.join().unwrap();
+            let comm_err = err
+                .root_cause()
+                .downcast_ref::<CommError>()
+                .expect("root cause must be the CommError");
+            assert_eq!(*comm_err, CommError::RanksLost(vec![2]));
+        }
     }
 
     #[test]

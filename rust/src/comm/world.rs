@@ -5,6 +5,19 @@
 //! numerics of distributed training are exact); time is charged separately
 //! through [`super::CostModel`] by the coordinator.
 //!
+//! # Fault model
+//!
+//! Every collective returns `Result<_, `[`CommError`]`>`: a world whose
+//! shared [`CancellationToken`] is cancelled (a rank declared lost, or a
+//! watchdog expiry) fails every blocking wait instead of deadlocking —
+//! the barrier is a [`CancellableBarrier`], and every collective checks
+//! the token on entry, so a cancelled world is permanently failed and
+//! survivors can rebuild at K′ (DESIGN.md §13). Clean runs pay one atomic
+//! load per collective for this. Deterministic latency skew (`--straggle`)
+//! is injected here too: a configured rank sleeps at the entry of every
+//! collective, which is how the straggler harness produces honest
+//! hidden/exposed numbers without touching the numerics.
+//!
 //! Two kinds of byte accounting coexist in [`CommStats`]:
 //!
 //! * **payload counters** (`*_bytes`): the per-rank payload each collective
@@ -29,9 +42,17 @@
 //! could tear exactly that way.) The lock is uncontended in practice:
 //! it is taken once per collective, not per element.
 
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::kernels::Precision;
+
+use super::fault::{CancellableBarrier, CancellationToken, CommError};
+
+/// Per-collective result: `Err` only when the world was cancelled (a
+/// rank lost or a watchdog expiry), never for data errors — length
+/// mismatches remain panics, as they are caller bugs, not faults.
+pub type CommResult<T> = std::result::Result<T, CommError>;
 
 /// Which payload counter a collective charges (see [`CommStats`]).
 #[derive(Debug, Clone, Copy)]
@@ -155,18 +176,28 @@ impl CommStats {
     }
 }
 
-/// The collective world shared by K worker threads: a barrier, per-rank
-/// exchange slots and the byte/time counters. Create once per world with
-/// [`CommWorld::new`] (or [`CommWorld::with_stats`] to share counters
-/// with another world) and hand each worker its [`WorkerComm`] via
-/// [`CommWorld::handle`].
+/// The collective world shared by K worker threads: a cancellable
+/// barrier, per-rank exchange slots, the shared cancellation token and
+/// the byte/time counters. Create once per world with [`CommWorld::new`]
+/// (or [`CommWorld::with_stats`] to share counters with another world,
+/// or [`CommWorld::with_faults`] for a fault-injected world) and hand
+/// each worker its [`WorkerComm`] via [`CommWorld::handle`].
 pub struct CommWorld {
     k: usize,
-    barrier: Barrier,
+    barrier: CancellableBarrier,
     /// per-rank input slots
     slots: Vec<Mutex<Vec<f32>>>,
     /// per-chunk reduction outputs (chunk c owned by rank c)
     chunks: Vec<Mutex<Vec<f32>>>,
+    /// shared cancellation state — possibly shared with a sibling world
+    /// (the trainer hands the training and reduction worlds one token,
+    /// so a loss cancels both; see DESIGN.md §13)
+    token: Arc<CancellationToken>,
+    /// watchdog bound on every blocking wait (None = wait forever, the
+    /// pre-fault behaviour — clean runs pay no deadline bookkeeping)
+    watchdog: Option<Duration>,
+    /// injected per-rank latency skew, applied at collective entry
+    straggle: Vec<Duration>,
     /// shared counters — possibly shared with a sibling world (the
     /// overlap pipeline runs its bucket collectives on a second world so
     /// they never interleave with the compute thread's collectives, but
@@ -182,14 +213,40 @@ impl CommWorld {
 
     /// A world of `k` ranks charging an existing set of counters — used
     /// by the overlap pipeline's dedicated reduction world (DESIGN.md
-    /// §11), whose traffic belongs to the same training run.
+    /// §11), whose traffic belongs to the same training run. No faults:
+    /// fresh token, no watchdog, no straggle.
     pub fn with_stats(k: usize, stats: Arc<CommStats>) -> Arc<Self> {
+        CommWorld::with_faults(
+            k,
+            stats,
+            Arc::new(CancellationToken::new()),
+            None,
+            vec![Duration::ZERO; k],
+        )
+    }
+
+    /// A fault-aware world: `token` is the shared cancellation state
+    /// (pass one token to sibling worlds so a loss cancels both),
+    /// `watchdog` bounds every blocking wait, and `straggle[r]` is the
+    /// latency rank `r` sleeps at the entry of every collective
+    /// (DESIGN.md §13).
+    pub fn with_faults(
+        k: usize,
+        stats: Arc<CommStats>,
+        token: Arc<CancellationToken>,
+        watchdog: Option<Duration>,
+        straggle: Vec<Duration>,
+    ) -> Arc<Self> {
         assert!(k > 0);
+        assert_eq!(straggle.len(), k, "straggle must name every rank");
         Arc::new(Self {
             k,
-            barrier: Barrier::new(k),
+            barrier: CancellableBarrier::new(k),
             slots: (0..k).map(|_| Mutex::new(Vec::new())).collect(),
             chunks: (0..k).map(|_| Mutex::new(Vec::new())).collect(),
+            token,
+            watchdog,
+            straggle,
             stats,
         })
     }
@@ -197,6 +254,11 @@ impl CommWorld {
     /// Number of ranks in the world.
     pub fn world_size(&self) -> usize {
         self.k
+    }
+
+    /// The shared cancellation token (declare losses through this).
+    pub fn token(&self) -> &Arc<CancellationToken> {
+        &self.token
     }
 
     /// The per-worker handle rank `rank` uses for every collective.
@@ -228,9 +290,34 @@ impl WorkerComm {
         self.world.stats.as_ref()
     }
 
-    /// Block until every rank reaches the same barrier call.
-    pub fn barrier(&self) {
-        self.world.barrier.wait();
+    /// The world's shared cancellation token.
+    pub fn token(&self) -> &Arc<CancellationToken> {
+        self.world.token()
+    }
+
+    /// Collective entry protocol: fail fast on a cancelled world, then
+    /// apply this rank's injected straggle. The cancel check is what
+    /// makes a failed world *permanently* failed — no collective can be
+    /// issued on it again — and the straggle sleep models a slow rank
+    /// without touching any numerics. K = 1 skips the sleep (there is no
+    /// peer to be slow relative to) but keeps the cancel check.
+    fn pre_op(&self) -> CommResult<()> {
+        let w = &self.world;
+        if w.token.is_cancelled() {
+            return Err(w.token.error());
+        }
+        let skew = w.straggle[self.rank];
+        if w.k > 1 && skew > Duration::ZERO {
+            std::thread::sleep(skew);
+        }
+        Ok(())
+    }
+
+    /// Block until every rank reaches the same barrier call — or until
+    /// the world is cancelled / the watchdog expires, in which case every
+    /// waiter returns `Err` instead of hanging (DESIGN.md §13).
+    pub fn barrier(&self) -> CommResult<()> {
+        self.world.barrier.wait(&self.world.token, self.world.watchdog)
     }
 
     /// Bounds `[lo, hi)` of the chunk this rank owns when an `n`-element
@@ -242,7 +329,7 @@ impl WorkerComm {
 
     /// Concatenate every rank's `data` in rank order. All ranks must pass
     /// equal-length slices. Full-width (f32) wire format.
-    pub fn all_gather(&self, data: &[f32]) -> Vec<f32> {
+    pub fn all_gather(&self, data: &[f32]) -> CommResult<Vec<f32>> {
         self.all_gather_px(data, Precision::F32)
     }
 
@@ -251,10 +338,11 @@ impl WorkerComm {
     /// before it enters the wire (a no-op when the payload is already
     /// bf16-representable, as the native backend's embeddings are) and
     /// the payload counters charge 2 bytes/element instead of 4.
-    pub fn all_gather_px(&self, data: &[f32], wire: Precision) -> Vec<f32> {
+    pub fn all_gather_px(&self, data: &[f32], wire: Precision) -> CommResult<Vec<f32>> {
+        self.pre_op()?;
         let w = &self.world;
         if w.k == 1 {
-            return wire.quantized(data);
+            return Ok(wire.quantized(data));
         }
         {
             let mut slot = w.slots[self.rank].lock().unwrap();
@@ -263,13 +351,13 @@ impl WorkerComm {
             wire.quantize(&mut slot);
         }
         w.stats.add_payload(Payload::Gather, data.len(), wire);
-        self.barrier();
+        self.barrier()?;
         let mut out = Vec::with_capacity(data.len() * w.k);
         for r in 0..w.k {
             out.extend_from_slice(&w.slots[r].lock().unwrap());
         }
-        self.barrier(); // slots free for reuse
-        out
+        self.barrier()?; // slots free for reuse
+        Ok(out)
     }
 
     /// Concatenate per-rank chunks of *unequal* lengths in rank order —
@@ -278,11 +366,12 @@ impl WorkerComm {
     /// the expected concatenated length (a cheap lockstep sanity check).
     /// Always full-width: this collective carries updated parameters —
     /// master state — which never travel in bf16 (DESIGN.md §12).
-    pub fn all_gather_chunks(&self, mine: &[f32], total_len: usize) -> Vec<f32> {
+    pub fn all_gather_chunks(&self, mine: &[f32], total_len: usize) -> CommResult<Vec<f32>> {
+        self.pre_op()?;
         let w = &self.world;
         if w.k == 1 {
             assert_eq!(mine.len(), total_len);
-            return mine.to_vec();
+            return Ok(mine.to_vec());
         }
         {
             let mut slot = w.slots[self.rank].lock().unwrap();
@@ -290,28 +379,28 @@ impl WorkerComm {
             slot.extend_from_slice(mine);
         }
         w.stats.add_payload(Payload::Gather, mine.len(), Precision::F32);
-        self.barrier();
+        self.barrier()?;
         let mut out = Vec::with_capacity(total_len);
         for r in 0..w.k {
             out.extend_from_slice(&w.slots[r].lock().unwrap());
         }
-        self.barrier(); // slots free for reuse
+        self.barrier()?; // slots free for reuse
         assert_eq!(out.len(), total_len, "ranks disagreed on chunking");
-        out
+        Ok(out)
     }
 
     /// SUM-reduce `buf` across ranks and return only the chunk this rank
     /// owns (see [`Self::owned_chunk`]). Elements are summed in rank
     /// order `0..K`, so the result is bit-identical to a rank-ordered
     /// local reduction of the same contributions.
-    pub fn reduce_scatter_sum(&self, buf: &[f32]) -> Vec<f32> {
+    pub fn reduce_scatter_sum(&self, buf: &[f32]) -> CommResult<Vec<f32>> {
         let (lo, hi) = self.owned_chunk(buf.len());
         self.reduce_range_sum(buf, lo, hi)
     }
 
     /// [`Self::reduce_scatter_sum`] at an explicit wire precision — see
     /// [`Self::reduce_range_sum_px`] for the bf16 wire contract.
-    pub fn reduce_scatter_sum_px(&self, buf: &[f32], wire: Precision) -> Vec<f32> {
+    pub fn reduce_scatter_sum_px(&self, buf: &[f32], wire: Precision) -> CommResult<Vec<f32>> {
         let (lo, hi) = self.owned_chunk(buf.len());
         self.reduce_range_sum_px(buf, lo, hi, wire)
     }
@@ -326,7 +415,7 @@ impl WorkerComm {
     /// as [`Self::reduce_scatter_sum`] — which is this method with the
     /// owned chunk as the range — so any tiling of requests over any
     /// bucketing reproduces the unbucketed reduction bitwise.
-    pub fn reduce_range_sum(&self, buf: &[f32], lo: usize, hi: usize) -> Vec<f32> {
+    pub fn reduce_range_sum(&self, buf: &[f32], lo: usize, hi: usize) -> CommResult<Vec<f32>> {
         self.reduce_range_sum_px(buf, lo, hi, Precision::F32)
     }
 
@@ -345,13 +434,14 @@ impl WorkerComm {
         lo: usize,
         hi: usize,
         wire: Precision,
-    ) -> Vec<f32> {
+    ) -> CommResult<Vec<f32>> {
         debug_assert!(lo <= hi && hi <= buf.len());
+        self.pre_op()?;
         let w = &self.world;
         if w.k == 1 {
             let mut out = wire.quantized(&buf[lo..hi]);
             wire.quantize(&mut out); // idempotent: matches q(Σ q(·))
-            return out;
+            return Ok(out);
         }
         {
             let mut slot = w.slots[self.rank].lock().unwrap();
@@ -360,7 +450,7 @@ impl WorkerComm {
             wire.quantize(&mut slot);
         }
         w.stats.add_payload(Payload::ReduceScatter, buf.len(), wire);
-        self.barrier();
+        self.barrier()?;
         let mut acc = vec![0.0f32; hi - lo];
         for r in 0..w.k {
             let slot = w.slots[r].lock().unwrap();
@@ -368,15 +458,17 @@ impl WorkerComm {
                 *a += v;
             }
         }
-        self.barrier(); // slots free for reuse
+        self.barrier()?; // slots free for reuse
         wire.quantize(&mut acc);
-        acc
+        Ok(acc)
     }
 
     /// Element-wise SUM across ranks, result replicated into `buf`.
     /// Implemented reduce-scatter + all-gather style: rank r reduces chunk
     /// r so the reduction parallelizes across workers (O(n) per rank).
-    pub fn all_reduce_sum(&self, buf: &mut [f32]) {
+    /// On `Err` the contents of `buf` are unspecified (partially
+    /// exchanged) — a cancelled iteration's data is rolled back anyway.
+    pub fn all_reduce_sum(&self, buf: &mut [f32]) -> CommResult<()> {
         self.all_reduce_sum_px(buf, Precision::F32)
     }
 
@@ -385,11 +477,12 @@ impl WorkerComm {
     /// [`Self::reduce_range_sum_px`] (the contribution is quantized
     /// outbound, summed in f32 by the chunk owner, and the reduced value
     /// quantized again for the all-gather leg).
-    pub fn all_reduce_sum_px(&self, buf: &mut [f32], wire: Precision) {
+    pub fn all_reduce_sum_px(&self, buf: &mut [f32], wire: Precision) -> CommResult<()> {
+        self.pre_op()?;
         let w = &self.world;
         if w.k == 1 {
             wire.quantize(buf); // q(q(x)) = q(x): matches the K>1 contract
-            return;
+            return Ok(());
         }
         wire.quantize(buf);
         {
@@ -398,7 +491,7 @@ impl WorkerComm {
             slot.extend_from_slice(buf);
         }
         w.stats.add_payload(Payload::AllReduce, buf.len(), wire);
-        self.barrier();
+        self.barrier()?;
 
         let n = buf.len();
         let (lo, hi) = self.owned_chunk(n);
@@ -414,29 +507,32 @@ impl WorkerComm {
             let mut out = w.chunks[self.rank].lock().unwrap();
             *out = acc;
         }
-        self.barrier();
+        self.barrier()?;
         for r in 0..w.k {
             let (lo_r, hi_r) = chunk_bounds(n, w.k, r);
             let part = w.chunks[r].lock().unwrap();
             buf[lo_r..hi_r].copy_from_slice(&part);
         }
-        self.barrier();
+        self.barrier()?;
+        Ok(())
     }
 
     /// Mean across ranks (sum then scale).
-    pub fn all_reduce_mean(&self, buf: &mut [f32]) {
-        self.all_reduce_sum(buf);
+    pub fn all_reduce_mean(&self, buf: &mut [f32]) -> CommResult<()> {
+        self.all_reduce_sum(buf)?;
         let inv = 1.0 / self.world.k as f32;
         for v in buf.iter_mut() {
             *v *= inv;
         }
+        Ok(())
     }
 
     /// Copy `root`'s buffer to every rank.
-    pub fn broadcast(&self, buf: &mut [f32], root: usize) {
+    pub fn broadcast(&self, buf: &mut [f32], root: usize) -> CommResult<()> {
+        self.pre_op()?;
         let w = &self.world;
         if w.k == 1 {
-            return;
+            return Ok(());
         }
         if self.rank == root {
             let mut slot = w.slots[root].lock().unwrap();
@@ -444,12 +540,13 @@ impl WorkerComm {
             slot.extend_from_slice(buf);
             w.stats.add_payload(Payload::Broadcast, buf.len(), Precision::F32);
         }
-        self.barrier();
+        self.barrier()?;
         if self.rank != root {
             let slot = w.slots[root].lock().unwrap();
             buf.copy_from_slice(&slot);
         }
-        self.barrier();
+        self.barrier()?;
+        Ok(())
     }
 }
 
@@ -488,7 +585,7 @@ mod tests {
         for k in [1, 2, 4, 7] {
             let outs = run_workers(k, move |c| {
                 let mine = vec![c.rank() as f32; 3];
-                c.all_gather(&mine)
+                c.all_gather(&mine).unwrap()
             });
             let expect: Vec<f32> =
                 (0..k).flat_map(|r| std::iter::repeat(r as f32).take(3)).collect();
@@ -505,7 +602,7 @@ mod tests {
             let outs = run_workers(k, move |c| {
                 let mut buf: Vec<f32> =
                     (0..n).map(|i| (i as f32) + c.rank() as f32).collect();
-                c.all_reduce_sum(&mut buf);
+                c.all_reduce_sum(&mut buf).unwrap();
                 buf
             });
             let rank_sum: f32 = (0..k).map(|r| r as f32).sum();
@@ -524,7 +621,7 @@ mod tests {
         for (k, n) in [(1usize, 7usize), (2, 9), (4, 10), (3, 1000)] {
             let outs = run_workers(k, move |c| {
                 let buf: Vec<f32> = (0..n).map(|i| i as f32 * (c.rank() + 1) as f32).collect();
-                c.reduce_scatter_sum(&buf)
+                c.reduce_scatter_sum(&buf).unwrap()
             });
             let scale: f32 = (1..=k).map(|r| r as f32).sum();
             let mut covered = 0;
@@ -552,9 +649,9 @@ mod tests {
                 let buf: Vec<f32> = (0..n).map(|i| i as f32 * (c.rank() + 1) as f32).collect();
                 // rank r asks for [r, n) clamped — unequal, rank-specific
                 let lo = c.rank().min(n);
-                let mut got = c.reduce_range_sum(&buf, lo, n);
+                let mut got = c.reduce_range_sum(&buf, lo, n).unwrap();
                 // empty range is a legal collective call
-                let empty = c.reduce_range_sum(&buf, 0, 0);
+                let empty = c.reduce_range_sum(&buf, 0, 0).unwrap();
                 assert!(empty.is_empty());
                 got.insert(0, lo as f32); // carry lo for the assertion
                 got
@@ -579,7 +676,7 @@ mod tests {
             let outs = run_workers(k, move |c| {
                 let buf: Vec<f32> =
                     (0..n).map(|i| 0.1 + i as f32 * 1.017 + c.rank() as f32 * 0.31).collect();
-                c.reduce_range_sum_px(&buf, 0, n, Precision::Bf16)
+                c.reduce_range_sum_px(&buf, 0, n, Precision::Bf16).unwrap()
             });
             // reference: quantize contributions, f32 sum in rank order,
             // quantize the result
@@ -602,10 +699,10 @@ mod tests {
                     let h = world.handle(r);
                     std::thread::spawn(move || {
                         let buf = vec![1.5f32; 64];
-                        h.all_gather_px(&buf, wire);
+                        h.all_gather_px(&buf, wire).unwrap();
                         let mut b = buf.clone();
-                        h.all_reduce_sum_px(&mut b, wire);
-                        h.reduce_range_sum_px(&buf, 0, 64, wire);
+                        h.all_reduce_sum_px(&mut b, wire).unwrap();
+                        h.reduce_range_sum_px(&buf, 0, 64, wire).unwrap();
                     })
                 })
                 .collect();
@@ -670,8 +767,8 @@ mod tests {
         let stats = Arc::new(CommStats::default());
         let a = CommWorld::with_stats(1, Arc::clone(&stats));
         let b = CommWorld::with_stats(1, Arc::clone(&stats));
-        a.handle(0).all_gather(&[1.0; 4]);
-        b.handle(0).all_gather(&[1.0; 4]);
+        a.handle(0).all_gather(&[1.0; 4]).unwrap();
+        b.handle(0).all_gather(&[1.0; 4]).unwrap();
         b.stats.add_overlap_us(70, 30);
         let s = stats.snapshot();
         assert_eq!(s.ops, 0, "K=1 gathers are local, nothing charged");
@@ -686,7 +783,7 @@ mod tests {
             let outs = run_workers(k, move |c| {
                 let (lo, hi) = c.owned_chunk(n);
                 let mine: Vec<f32> = (lo..hi).map(|i| i as f32).collect();
-                c.all_gather_chunks(&mine, n)
+                c.all_gather_chunks(&mine, n).unwrap()
             });
             let expect: Vec<f32> = (0..n).map(|i| i as f32).collect();
             for o in outs {
@@ -699,7 +796,7 @@ mod tests {
     fn all_reduce_mean_correct() {
         let outs = run_workers(4, |c| {
             let mut buf = vec![c.rank() as f32; 5];
-            c.all_reduce_mean(&mut buf);
+            c.all_reduce_mean(&mut buf).unwrap();
             buf
         });
         for o in outs {
@@ -713,7 +810,7 @@ mod tests {
     fn broadcast_from_root() {
         let outs = run_workers(4, |c| {
             let mut buf = if c.rank() == 2 { vec![7.0; 4] } else { vec![0.0; 4] };
-            c.broadcast(&mut buf, 2);
+            c.broadcast(&mut buf, 2).unwrap();
             buf
         });
         for o in outs {
@@ -726,12 +823,12 @@ mod tests {
         let outs = run_workers(3, |c| {
             let mut acc = vec![0.0f32; 3];
             for it in 0..50 {
-                let g = c.all_gather(&[it as f32, c.rank() as f32]);
+                let g = c.all_gather(&[it as f32, c.rank() as f32]).unwrap();
                 acc[0] += g.iter().sum::<f32>();
                 let mut buf = vec![1.0f32; 2];
-                c.all_reduce_sum(&mut buf);
+                c.all_reduce_sum(&mut buf).unwrap();
                 acc[1] += buf[0];
-                let chunk = c.reduce_scatter_sum(&[1.0; 5]);
+                let chunk = c.reduce_scatter_sum(&[1.0; 5]).unwrap();
                 acc[2] += chunk.iter().sum::<f32>();
             }
             acc
@@ -747,11 +844,11 @@ mod tests {
         let h0 = world.handle(0);
         let h1 = world.handle(1);
         let t = std::thread::spawn(move || {
-            h1.all_gather(&[1.0; 8]);
-            h1.reduce_scatter_sum(&[1.0; 8]);
+            h1.all_gather(&[1.0; 8]).unwrap();
+            h1.reduce_scatter_sum(&[1.0; 8]).unwrap();
         });
-        h0.all_gather(&[2.0; 8]);
-        h0.reduce_scatter_sum(&[2.0; 8]);
+        h0.all_gather(&[2.0; 8]).unwrap();
+        h0.reduce_scatter_sum(&[2.0; 8]).unwrap();
         t.join().unwrap();
         let s = world.stats.snapshot();
         assert_eq!(s.all_gather_bytes, 2 * 8 * 4);
@@ -759,5 +856,72 @@ mod tests {
         assert_eq!(s.ops, 4);
         assert_eq!(s.payload_bytes(), 4 * 8 * 4);
         assert_eq!(s.grad_wire_saving(), 1.0, "no gradient reductions charged");
+    }
+
+    /// A cancelled world fails every rank's collective with the lost
+    /// ranks, never hangs — including a rank that arrives at the
+    /// collective only after cancellation.
+    #[test]
+    fn cancellation_fails_collectives_instead_of_hanging() {
+        use crate::comm::fault::CommError;
+        let world = CommWorld::new(3);
+        // ranks 0 and 1 enter the collective; rank 2 never will
+        let h: Vec<_> = (0..2)
+            .map(|r| {
+                let c = world.handle(r);
+                std::thread::spawn(move || {
+                    let mut buf = vec![r as f32; 16];
+                    c.all_reduce_sum(&mut buf)
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(20));
+        world.token().declare_lost(2);
+        for t in h {
+            assert_eq!(t.join().unwrap().unwrap_err(), CommError::RanksLost(vec![2]));
+        }
+        // permanently failed: a later collective errs immediately, K=1
+        // fast paths included
+        let c = world.handle(0);
+        assert!(c.all_gather(&[1.0]).is_err());
+        assert!(c.barrier().is_err());
+    }
+
+    /// An injected straggler delays but does not change results, and the
+    /// hidden/exposed accounting the bench paths build on stays exact.
+    #[test]
+    fn straggler_skews_latency_not_numerics() {
+        let k = 2;
+        let make = |skew_ms: u64| {
+            let straggle = vec![Duration::from_millis(skew_ms), Duration::ZERO];
+            CommWorld::with_faults(
+                k,
+                Arc::new(CommStats::default()),
+                Arc::new(CancellationToken::new()),
+                Some(Duration::from_secs(30)),
+                straggle,
+            )
+        };
+        let run = |world: &Arc<CommWorld>| {
+            let handles: Vec<_> = (0..k)
+                .map(|r| {
+                    let c = world.handle(r);
+                    std::thread::spawn(move || {
+                        let mut buf: Vec<f32> = (0..17).map(|i| (i + r) as f32).collect();
+                        c.all_reduce_sum(&mut buf).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        };
+        let skewed = make(15);
+        let clean = make(0);
+        let t0 = std::time::Instant::now();
+        let a = run(&skewed);
+        let skewed_elapsed = t0.elapsed();
+        let b = run(&clean);
+        assert_eq!(a, b, "straggle must not change any reduced value");
+        assert!(skewed_elapsed >= Duration::from_millis(15), "the skew really applies");
     }
 }

@@ -372,6 +372,15 @@ pub struct TrainConfig {
     /// half-width gradient wire; f32 master weights, optimizer state and
     /// checkpoints). bf16 needs the native backend.
     pub precision: crate::kernels::Precision,
+    /// fault injection (DESIGN.md §13): kill rank R at the top of
+    /// iteration N, grammar `rank=R@iter=N`; None = no injected failure
+    pub fail: Option<String>,
+    /// straggler injection: per-rank latency skew before every
+    /// collective, grammar `rank=R:ms=M[,rank=R2:ms=M2]`; None = no skew
+    pub straggle: Option<String>,
+    /// watchdog for blocking collectives, in milliseconds (0 = default:
+    /// 60 s whenever fault injection is active, unbounded otherwise)
+    pub watchdog_ms: u64,
 }
 
 impl TrainConfig {
@@ -445,6 +454,9 @@ impl TrainConfig {
             local_batch: 8,
             kernel_threads: 0,
             precision: crate::kernels::Precision::F32,
+            fail: None,
+            straggle: None,
+            watchdog_ms: 0,
         };
         let dir: String = artifact_dir.into();
         cfg.set_bundle(&dir);
@@ -537,6 +549,13 @@ impl TrainConfig {
                 "resume = \"latest\" requires ckpt_dir"
             );
         }
+        // fault-injection grammar (DESIGN.md §13): reject malformed specs
+        // up front — the parse error spells out the expected grammar
+        crate::comm::FaultPlan::parse(
+            self.fail.as_deref(),
+            self.straggle.as_deref(),
+            self.watchdog_ms,
+        )?;
         Ok(())
     }
 
@@ -560,7 +579,7 @@ impl TrainConfig {
             "bucket_mb", "bucket_bytes", "tau_lr_decay_below",
             "ckpt_dir", "ckpt_every", "keep_last", "resume",
             "backend", "preset", "n_workers", "local_batch", "kernel_threads",
-            "precision",
+            "precision", "fail", "straggle", "watchdog_ms",
             "optimizer.kind", "optimizer.beta1", "optimizer.beta2",
             "optimizer.eps", "optimizer.weight_decay", "optimizer.momentum",
             "lr.peak", "lr.min", "lr.warmup_iters", "lr.total_iters",
@@ -612,6 +631,13 @@ impl TrainConfig {
         cfg.kernel_threads = kv.parse_or("kernel_threads", cfg.kernel_threads)?;
         cfg.precision =
             crate::kernels::Precision::from_id(&kv.str_or("precision", cfg.precision.id()))?;
+        if let Some(v) = kv.get("fail") {
+            cfg.fail = Some(v.to_string());
+        }
+        if let Some(v) = kv.get("straggle") {
+            cfg.straggle = Some(v.to_string());
+        }
+        cfg.watchdog_ms = kv.parse_or("watchdog_ms", cfg.watchdog_ms)?;
 
         if let Some(kind) = kv.get("optimizer.kind") {
             cfg.optimizer.kind = OptimizerKind::from_id(kind)?;
@@ -691,6 +717,15 @@ impl TrainConfig {
         let _ = writeln!(s, "local_batch = {}", self.local_batch);
         let _ = writeln!(s, "kernel_threads = {}", self.kernel_threads);
         let _ = writeln!(s, "precision = \"{}\"", self.precision.id());
+        if let Some(f) = &self.fail {
+            let _ = writeln!(s, "fail = \"{f}\"");
+        }
+        if let Some(g) = &self.straggle {
+            let _ = writeln!(s, "straggle = \"{g}\"");
+        }
+        if self.watchdog_ms > 0 {
+            let _ = writeln!(s, "watchdog_ms = {}", self.watchdog_ms);
+        }
         let _ = writeln!(s, "\n[optimizer]");
         let _ = writeln!(s, "kind = \"{}\"", self.optimizer.kind.id());
         let _ = writeln!(s, "beta1 = {}", self.optimizer.beta1);
@@ -812,6 +847,33 @@ mod tests {
         let mut bad = TrainConfig::new("x", Algorithm::FastClipV1);
         bad.resume = Some("latest".into());
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn fault_fields_roundtrip_and_validate() {
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV3);
+        cfg.fail = Some("rank=1@iter=17".into());
+        cfg.straggle = Some("rank=0:ms=20,rank=1:ms=5".into());
+        cfg.watchdog_ms = 4000;
+        cfg.validate().unwrap();
+        let kv = crate::util::KvFile::parse(&cfg.to_file_string()).unwrap();
+        let back = TrainConfig::from_kv(&kv).unwrap();
+        assert_eq!(back.fail.as_deref(), Some("rank=1@iter=17"));
+        assert_eq!(back.straggle.as_deref(), Some("rank=0:ms=20,rank=1:ms=5"));
+        assert_eq!(back.watchdog_ms, 4000);
+        // defaults are omitted from the file format entirely
+        let text = TrainConfig::new("x", Algorithm::FastClipV3).to_file_string();
+        assert!(!text.contains("fail") && !text.contains("straggle"));
+        assert!(!text.contains("watchdog_ms"));
+        // malformed specs are rejected with the grammar in the message
+        let mut bad = TrainConfig::new("x", Algorithm::FastClipV3);
+        bad.fail = Some("rank=1,iter=17".into());
+        let err = bad.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("rank=R@iter=N"), "{err:#}");
+        let mut bad = TrainConfig::new("x", Algorithm::FastClipV3);
+        bad.straggle = Some("rank=0".into());
+        let err = bad.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("rank=R:ms=M"), "{err:#}");
     }
 
     #[test]

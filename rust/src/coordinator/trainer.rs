@@ -35,17 +35,32 @@
 //! Numerics are exact (bytes really move between threads); communication
 //! *time* is charged by the α–β cost model over the configured topology
 //! (`timing.rs`).
+//!
+//! # Fault tolerance (DESIGN.md §13)
+//!
+//! Every worker thread runs an **incarnation loop**: the lockstep
+//! iteration body above, restarted when the world shrinks. A rank lost
+//! mid-run (injected with `--fail rank=R@iter=N`, or any future real
+//! detector) cancels both collective worlds; every survivor's blocking
+//! collective returns `Err(RanksLost)`, the survivors meet at a
+//! [`ShrinkCell`] rendezvous, roll back to the latest finalized
+//! snapshot, rebuild both worlds at K′ = K − lost, re-shard u/τ/optimizer
+//! state through the elastic restore path (DESIGN.md §9) and continue.
+//! Because the incarnation body keys everything off the *current* world
+//! size and the restore path is exactly the one `--resume` uses, the
+//! post-shrink trajectory is bitwise-equal to a cold elastic resume at
+//! K′ from the same snapshot — pinned by `tests/fault_injection.rs`.
 
 use std::path::Path;
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::ckpt::{self, CkptMeta, CkptRunStats};
 use crate::comm::{
-    reduction, BucketPlan, CommStats, CommWorld, CostModel, OverlapPipeline, ReduceAlgo,
-    ReduceStrategy, WorkerComm,
+    reduction, BucketPlan, CancellationToken, CommError, CommStats, CommWorld, CostModel,
+    FailSpec, FaultPlan, OverlapPipeline, ReduceAlgo, ReduceStrategy, WorkerComm,
 };
 use crate::config::{OptimizerKind, TrainConfig};
 use crate::data::{Dataset, ShardLoader};
@@ -117,6 +132,13 @@ pub struct TrainResult {
     /// checkpoint activity: snapshots written, write/restore wall time,
     /// and the step resumed from (DESIGN.md §9)
     pub ckpt: CkptRunStats,
+    /// ranks in the world when the run finished — smaller than the
+    /// configured K after a live shrink (DESIGN.md §13)
+    pub final_world: usize,
+    /// live shrinks survived (0 for a clean run)
+    pub shrinks: u32,
+    /// the ranks declared lost, by their rank at the time of loss
+    pub lost_ranks: Vec<usize>,
 }
 
 impl TrainResult {
@@ -137,6 +159,7 @@ impl TrainResult {
 pub struct Trainer {
     cfg: TrainConfig,
     manifest: Manifest,
+    fault: FaultPlan,
 }
 
 impl Trainer {
@@ -174,7 +197,32 @@ impl Trainer {
             "--precision bf16 requires the native backend (the AOT-lowered HLO artifacts \
              compute in f32); pass --backend native"
         );
-        Ok(Trainer { cfg, manifest })
+        // fault injection (DESIGN.md §13): grammar was validated with the
+        // config; rank bounds need the world size, and an injected death
+        // needs a snapshot boundary to roll back to
+        let fault = FaultPlan::parse(cfg.fail.as_deref(), cfg.straggle.as_deref(), cfg.watchdog_ms)
+            .context("parsing the fault-injection flags")?;
+        fault.check_ranks(manifest.k_workers)?;
+        if let Some(f) = &fault.fail {
+            ensure!(
+                f.iter < cfg.steps,
+                "--fail iter={} is past the run ({} steps): nothing would be injected",
+                f.iter,
+                cfg.steps
+            );
+            ensure!(
+                cfg.ckpt_every > 0 && cfg.ckpt_dir.is_some(),
+                "--fail needs a rollback snapshot: set --ckpt-dir and --ckpt-every"
+            );
+            ensure!(
+                f.iter >= cfg.ckpt_every,
+                "--fail at iter {} precedes the first snapshot boundary (--ckpt-every {}): \
+                 the survivors would have nothing to roll back to",
+                f.iter,
+                cfg.ckpt_every
+            );
+        }
+        Ok(Trainer { cfg, manifest, fault })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -188,39 +236,74 @@ impl Trainer {
         // training world for the lockstep iteration, and a dedicated
         // world for the overlap pipeline's bucket reductions so the
         // background workers never interleave with training collectives
-        // (DESIGN.md §11; unused in serial mode)
+        // (DESIGN.md §11; unused in serial mode). Both share ONE
+        // cancellation token, so a loss detected on either — a training
+        // collective or an in-flight bucket — cancels both (DESIGN.md §13)
         let stats = Arc::new(CommStats::default());
-        let world = CommWorld::with_stats(k, Arc::clone(&stats));
-        let reduce_world = CommWorld::with_stats(k, Arc::clone(&stats));
+        let token = Arc::new(CancellationToken::new());
+        let watchdog = self.fault.watchdog();
+        let straggle = self.fault.straggle_for(k);
+        let world = CommWorld::with_faults(
+            k,
+            Arc::clone(&stats),
+            Arc::clone(&token),
+            watchdog,
+            straggle.clone(),
+        );
+        let reduce_world = CommWorld::with_faults(k, Arc::clone(&stats), token, watchdog, straggle);
         let cfg = Arc::new(self.cfg.clone());
         let dataset = Arc::new(Dataset::new(cfg.data, self.manifest.model_dims()));
+        let shrink = Arc::new(ShrinkCell::new());
 
         let mut joins = Vec::with_capacity(k);
         for rank in 0..k {
-            let comm = world.handle(rank);
-            let reduce_comm = reduce_world.handle(rank);
+            let train_world = Arc::clone(&world);
+            let reduce_world = Arc::clone(&reduce_world);
             let cfg = Arc::clone(&cfg);
             let dataset = Arc::clone(&dataset);
             let manifest = self.manifest.clone();
+            let fault = self.fault.clone();
+            let shrink = Arc::clone(&shrink);
+            let stats = Arc::clone(&stats);
             joins.push(
                 std::thread::Builder::new()
                     .name(format!("worker-{rank}"))
-                    .spawn(move || worker_loop(rank, comm, reduce_comm, cfg, dataset, manifest))
+                    .spawn(move || {
+                        worker_thread(
+                            rank,
+                            train_world,
+                            reduce_world,
+                            cfg,
+                            dataset,
+                            manifest,
+                            fault,
+                            shrink,
+                            stats,
+                        )
+                    })
                     .expect("spawn worker"),
             );
         }
 
-        let mut rank0: Option<WorkerOutput> = None;
+        // the lead output is whichever worker finished as rank 0 of the
+        // FINAL incarnation — after a shrink that may be a different
+        // thread than original rank 0 (which may be the one that died,
+        // returning None)
+        let mut lead: Option<WorkerOutput> = None;
         for (rank, j) in joins.into_iter().enumerate() {
             let out = j
                 .join()
-                .map_err(|_| anyhow::anyhow!("worker {rank} panicked"))?
+                .map_err(|_| anyhow!("worker {rank} panicked"))?
                 .with_context(|| format!("worker {rank} failed"))?;
-            if rank == 0 {
-                rank0 = Some(out);
+            if let Some(out) = out {
+                if out.rank == 0 {
+                    ensure!(lead.is_none(), "two workers finished as rank 0");
+                    lead = Some(out);
+                }
             }
         }
-        let out = rank0.expect("rank 0 output");
+        let out = lead.ok_or_else(|| anyhow!("no worker finished as rank 0"))?;
+        let k_final = out.world;
         let stats = world.stats.snapshot();
 
         Ok(TrainResult {
@@ -234,21 +317,33 @@ impl Trainer {
             overlap: out.overlap,
             n_buckets: out.n_buckets,
             comm_bytes: stats.payload_bytes(),
-            // per-rank counters are charged by all K ranks; report one rank's
-            grad_wire_bytes: stats.grad_wire_bytes / k as u64,
-            grad_wire_bytes_naive: stats.grad_wire_bytes_naive / k as u64,
-            hidden_comm_us: stats.hidden_comm_us / k as u64,
-            exposed_comm_us: stats.exposed_comm_us / k as u64,
+            // per-rank counters are charged by every rank; report one
+            // rank's share (after a shrink the divisor is the final world,
+            // so shrink runs over-attribute slightly — the counters mixed
+            // K- and K′-rank incarnations)
+            grad_wire_bytes: stats.grad_wire_bytes / k_final as u64,
+            grad_wire_bytes_naive: stats.grad_wire_bytes_naive / k_final as u64,
+            hidden_comm_us: stats.hidden_comm_us / k_final as u64,
+            exposed_comm_us: stats.exposed_comm_us / k_final as u64,
             modeled_iter_bytes: out.modeled_iter_bytes,
             final_tau: out.final_tau,
             final_params: out.params,
             wall_s: t0.elapsed().as_secs_f64(),
             ckpt: out.ckpt,
+            final_world: k_final,
+            shrinks: out.shrinks,
+            lost_ranks: out.lost,
         })
     }
 }
 
 struct WorkerOutput {
+    /// this worker's rank in the FINAL incarnation
+    rank: usize,
+    /// world size of the final incarnation (= K for clean runs)
+    world: usize,
+    shrinks: u32,
+    lost: Vec<usize>,
     history: Vec<IterRecord>,
     evals: Vec<EvalRecord>,
     final_eval: Option<EvalSummary>,
@@ -262,21 +357,231 @@ struct WorkerOutput {
     ckpt: CkptRunStats,
 }
 
-fn worker_loop(
-    rank: usize,
-    comm: WorkerComm,
-    reduce_comm: WorkerComm,
+/// State a worker accumulates ACROSS incarnations: the training history
+/// and evals (truncated to the rollback step on each shrink, so the
+/// final record covers every step exactly once) and the timing and
+/// checkpoint counters (never truncated — rolled-back work was really
+/// performed, and the accounting stays honest about it).
+#[derive(Default)]
+struct Accum {
+    history: Vec<IterRecord>,
+    evals: Vec<EvalRecord>,
+    timing: TimeBreakdown,
+    ckpt: CkptRunStats,
+}
+
+/// The new-world plan one survivor builds at the shrink rendezvous and
+/// every survivor adopts: two fresh collective worlds at K′ (sharing the
+/// run's counters, carrying a fresh shared token), the snapshot every
+/// survivor rolls back to, and the survivor → new-rank mapping.
+struct ShrinkPlan {
+    train: Arc<CommWorld>,
+    reduce: Arc<CommWorld>,
+    /// the rollback snapshot directory (`ckpt::latest` at shrink time)
+    resume: String,
+    /// surviving previous ranks, sorted; position = new rank
+    survivors: Vec<usize>,
+}
+
+impl ShrinkPlan {
+    fn new_rank(&self, prev_rank: usize) -> Option<usize> {
+        self.survivors.iter().position(|&r| r == prev_rank)
+    }
+}
+
+/// The survivors' rendezvous point after a loss cancels the world: each
+/// survivor arrives with the lost-rank list its collective error carried;
+/// the LAST arriver builds the [`ShrinkPlan`] (everyone must agree on one
+/// `ckpt::latest` answer and one pair of new worlds) and wakes the rest.
+/// Single-shot: one fail spec means at most one shrink per run. All waits
+/// are deadline-bounded — the rendezvous itself must not reintroduce the
+/// unbounded blocking the cancellable collectives just removed.
+struct ShrinkCell {
+    state: Mutex<ShrinkState>,
+    cv: Condvar,
+}
+
+struct ShrinkState {
+    arrived: Vec<usize>,
+    plan: Option<std::result::Result<Arc<ShrinkPlan>, String>>,
+}
+
+impl ShrinkCell {
+    fn new() -> ShrinkCell {
+        ShrinkCell {
+            state: Mutex::new(ShrinkState { arrived: Vec::new(), plan: None }),
+            cv: Condvar::new(),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn rendezvous(
+        &self,
+        rank: usize,
+        prev_k: usize,
+        lost: &[usize],
+        fault: &FaultPlan,
+        stats: &Arc<CommStats>,
+        ckpt_dir: Option<&str>,
+    ) -> Result<Arc<ShrinkPlan>> {
+        let survivors: Vec<usize> = (0..prev_k).filter(|r| !lost.contains(r)).collect();
+        // a shrink implies an injected fault, so watchdog() is Some; the
+        // fallback keeps the wait bounded even for exotic callers
+        let bound = fault.watchdog().unwrap_or(Duration::from_secs(60));
+        let deadline = Instant::now() + bound;
+        let mut s = self.state.lock().unwrap();
+        ensure!(!s.arrived.contains(&rank), "rank {rank} arrived twice at the shrink rendezvous");
+        s.arrived.push(rank);
+        if s.arrived.len() == survivors.len() {
+            let mut arrived = s.arrived.clone();
+            arrived.sort_unstable();
+            let built = (|| -> Result<Arc<ShrinkPlan>> {
+                ensure!(
+                    arrived == survivors,
+                    "shrink rendezvous mismatch: arrived {arrived:?}, expected {survivors:?}"
+                );
+                let root = ckpt_dir.ok_or_else(|| {
+                    anyhow!("cannot shrink without --ckpt-dir: no snapshot to roll back to")
+                })?;
+                let dir = ckpt::latest(Path::new(root))?.ok_or_else(|| {
+                    anyhow!("cannot shrink: no finalized snapshot under {root} to roll back to")
+                })?;
+                let k2 = survivors.len();
+                let token = Arc::new(CancellationToken::new());
+                // stragglers keep their skew in their new slots
+                let prev = fault.straggle_for(prev_k);
+                let skew: Vec<Duration> = survivors.iter().map(|&r| prev[r]).collect();
+                let train = CommWorld::with_faults(
+                    k2,
+                    Arc::clone(stats),
+                    Arc::clone(&token),
+                    fault.watchdog(),
+                    skew.clone(),
+                );
+                let reduce =
+                    CommWorld::with_faults(k2, Arc::clone(stats), token, fault.watchdog(), skew);
+                eprintln!(
+                    "rank(s) {lost:?} lost: shrinking world {prev_k} -> {k2}, rolling back to {}",
+                    dir.display()
+                );
+                Ok(Arc::new(ShrinkPlan {
+                    train,
+                    reduce,
+                    resume: dir.to_string_lossy().into_owned(),
+                    survivors: survivors.clone(),
+                }))
+            })();
+            s.plan = Some(built.map_err(|e| format!("{e:#}")));
+            self.cv.notify_all();
+        }
+        loop {
+            match &s.plan {
+                Some(Ok(p)) => return Ok(Arc::clone(p)),
+                Some(Err(msg)) => bail!("shrink failed: {msg}"),
+                None => {
+                    ensure!(
+                        Instant::now() < deadline,
+                        "shrink rendezvous timed out after {bound:?}: expected survivors \
+                         {survivors:?}, arrived {:?}",
+                        s.arrived
+                    );
+                    s = self.cv.wait_timeout(s, Duration::from_millis(1)).unwrap().0;
+                }
+            }
+        }
+    }
+}
+
+/// One worker thread for the whole run: the incarnation loop. Returns
+/// `Ok(None)` when this rank was the injected death (its exit is the
+/// fault, not an error), `Ok(Some(output))` when it finished training in
+/// the final incarnation, `Err` for real failures.
+#[allow(clippy::too_many_arguments)]
+fn worker_thread(
+    orig_rank: usize,
+    mut train_world: Arc<CommWorld>,
+    mut reduce_world: Arc<CommWorld>,
     cfg: Arc<TrainConfig>,
     dataset: Arc<Dataset>,
     manifest: Manifest,
-) -> Result<WorkerOutput> {
+    fault: FaultPlan,
+    shrink: Arc<ShrinkCell>,
+    stats: Arc<CommStats>,
+) -> Result<Option<WorkerOutput>> {
+    let mut rank = orig_rank;
+    let mut inc_cfg = (*cfg).clone();
+    let mut acc = Accum::default();
+    let mut shrinks = 0u32;
+    let mut lost_all: Vec<usize> = Vec::new();
+    loop {
+        let comm = train_world.handle(rank);
+        let reduce_comm = reduce_world.handle(rank);
+        let attempt = worker_loop(
+            orig_rank,
+            comm,
+            reduce_comm,
+            &inc_cfg,
+            &dataset,
+            &manifest,
+            fault.fail,
+            &mut acc,
+        );
+        match attempt {
+            Ok(None) => return Ok(None),
+            Ok(Some(mut out)) => {
+                out.shrinks = shrinks;
+                out.lost = lost_all;
+                return Ok(Some(out));
+            }
+            Err(e) => {
+                // shrinkable failures are exactly the lost-rank errors;
+                // anything else (I/O, watchdog-without-loss) is fatal
+                let lost = match e.root_cause().downcast_ref::<CommError>() {
+                    Some(CommError::RanksLost(l)) => l.clone(),
+                    _ => return Err(e),
+                };
+                let plan = shrink
+                    .rendezvous(
+                        rank,
+                        train_world.world_size(),
+                        &lost,
+                        &fault,
+                        &stats,
+                        inc_cfg.ckpt_dir.as_deref(),
+                    )
+                    .with_context(|| format!("after losing rank(s) {lost:?}"))?;
+                rank = plan.new_rank(rank).expect("survivor has a new rank");
+                train_world = Arc::clone(&plan.train);
+                reduce_world = Arc::clone(&plan.reduce);
+                inc_cfg.resume = Some(plan.resume.clone());
+                shrinks += 1;
+                lost_all.extend(lost);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    orig_rank: usize,
+    comm: WorkerComm,
+    reduce_comm: WorkerComm,
+    cfg: &TrainConfig,
+    dataset: &Dataset,
+    manifest: &Manifest,
+    fail: Option<FailSpec>,
+    acc: &mut Accum,
+) -> Result<Option<WorkerOutput>> {
+    // the rank in THIS incarnation's world; `orig_rank` (the thread's
+    // rank at spawn) only matters for matching the injected fail spec
+    let rank = comm.rank();
     let variant = cfg.algorithm.variant();
     // `cfg.backend` may still be Auto here: create_backend resolves it
     // against the manifest kind, which `TrainConfig::load_manifest`
     // already fixed, so every worker lands on the same engine
     let mut rt = crate::runtime::create_backend(
         cfg.backend,
-        &manifest,
+        manifest,
         Some(variant),
         cfg.kernel_threads,
         cfg.precision,
@@ -301,7 +606,7 @@ fn worker_loop(
     let mut loader = ShardLoader::new(cfg.data.n_train, rank, k, bl, cfg.seed)
         .context("building the shard loader")?;
     let mut ustate = UState::new(loader.shard_len());
-    let mut tau = TauState::new(&cfg, loader.shard_len());
+    let mut tau = TauState::new(cfg, loader.shard_len());
     let mut params = manifest.load_init_params()?;
 
     // communication accounting: modeled topology (cfg.nodes×gpus_per_node)
@@ -364,16 +669,15 @@ fn worker_loop(
     // Every fallible step goes through `ckpt_sync`: a rank that bailed
     // with a local `?` while its peers head into the next collective
     // would deadlock the world, so errors are made collective instead.
-    let mut ckpt_stats = CkptRunStats::default();
     let mut start_step: u32 = 0;
     if let Some(resume) = &cfg.resume {
         let t0 = Instant::now();
         let attempt = (|| -> Result<ckpt::RestoredWorker> {
             let ck = ckpt::Checkpoint::open(Path::new(resume))
                 .with_context(|| format!("opening checkpoint {resume}"))?;
-            ckpt::check_compatible(ck.meta(), &cfg, p)?;
+            ckpt::check_compatible(ck.meta(), cfg, p)?;
             let restored =
-                ckpt::restore_worker(&ck, &cfg, rank, k, bl, algo == ReduceAlgo::Sharded)
+                ckpt::restore_worker(&ck, cfg, rank, k, bl, algo == ReduceAlgo::Sharded)
                     .with_context(|| format!("restoring rank {rank} from {resume}"))?;
             ensure!(
                 restored.start_step <= cfg.steps,
@@ -399,17 +703,31 @@ fn worker_loop(
         start_step = restored.start_step;
         let imported = optimizer.import_state(&restored.optim);
         ckpt_sync(&comm, imported, "importing optimizer state")?;
-        ckpt_stats.restore_s = t0.elapsed().as_secs_f64();
-        ckpt_stats.resumed_at = Some(start_step);
+        acc.ckpt.restore_s += t0.elapsed().as_secs_f64();
+        acc.ckpt.resumed_at = Some(start_step);
+        // a live shrink replays [start_step, crash): drop the rolled-back
+        // records so the final history holds every step exactly once
+        acc.history.retain(|r| r.step < start_step);
+        acc.evals.retain(|e| e.step < start_step);
     }
 
-    let mut timing = TimeBreakdown::default();
-    let mut history = Vec::new();
-    let mut evals = Vec::new();
     let mut images = vec![0.0f32; bl * img_dim];
     let mut texts = vec![0i32; bl * dims.t_len];
 
     for t in start_step..cfg.steps {
+        // deterministic failure injection (DESIGN.md §13): the rank dies
+        // at the TOP of its iteration — after the previous iteration
+        // fully committed (including any snapshot at this boundary),
+        // before any collective of this one. Declaring the loss cancels
+        // both worlds, so every survivor's next blocking wait errors out
+        // instead of hanging; this thread then simply exits, as a dead
+        // process would.
+        if let Some(f) = fail {
+            if f.rank == orig_rank && f.iter == t {
+                comm.token().declare_lost(orig_rank);
+                return Ok(None);
+            }
+        }
         let epoch = t / cfg.iters_per_epoch.max(1);
         let gamma = if cfg.algorithm.forces_gamma_one() { 1.0 } else { cfg.gamma.value(epoch) };
         let lr = cfg.lr.value(t);
@@ -427,8 +745,8 @@ fn worker_loop(
         // the half-width gather is lossless — only the payload accounting
         // changes (DESIGN.md §12)
         let (e1, e2) = rt.encode(&params, &images, &texts)?;
-        let e1g = comm.all_gather_px(&e1, wire);
-        let e2g = comm.all_gather_px(&e2, wire);
+        let e1g = comm.all_gather_px(&e1, wire)?;
+        let e2g = comm.all_gather_px(&e2, wire)?;
 
         // 3. phase_g: Eq. (1) u update ---------------------------- (compute)
         let t_other = Instant::now();
@@ -443,12 +761,12 @@ fn worker_loop(
         others_s += t_other.elapsed().as_secs_f64();
 
         // 4. gather the scalar state ---------------------------------- (comm)
-        let u1g = comm.all_gather(&u1n);
-        let u2g = comm.all_gather(&u2n);
+        let u1g = comm.all_gather(&u1n)?;
+        let u2g = comm.all_gather(&u2n)?;
         let tau_input_vecs; // keeps gathered τ alive across the step call
         let tau_input = if individual_tau {
-            let t1g = comm.all_gather(&tau1_rows);
-            let t2g = comm.all_gather(&tau2_rows);
+            let t1g = comm.all_gather(&tau1_rows)?;
+            let t2g = comm.all_gather(&tau2_rows)?;
             tau_input_vecs = (t1g, t2g);
             TauInput::Individual { tau1g: &tau_input_vecs.0, tau2g: &tau_input_vecs.1 }
         } else {
@@ -468,7 +786,7 @@ fn worker_loop(
                 variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, offset,
                 cfg.eps, cfg.rho, tau_input, &mut |off, seg| pipe.emit(off, seg),
             )?;
-            let (loss, tau_grad) = reduce_step_scalars(&comm, emit.loss, &emit.tau);
+            let (loss, tau_grad) = reduce_step_scalars(&comm, emit.loss, &emit.tau)?;
             let rep = pipe.finish(&comm, &mut params, &mut |pslice, gslice| {
                 let t_opt = Instant::now();
                 optimizer.step(pslice, gslice, lr);
@@ -480,13 +798,13 @@ fn worker_loop(
                 variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, offset,
                 cfg.eps, cfg.rho, tau_input,
             )?;
-            let (loss, tau_grad) = reduce_step_scalars(&comm, out.loss, &out.tau);
+            let (loss, tau_grad) = reduce_step_scalars(&comm, out.loss, &out.tau)?;
             let mut grad = out.grad;
             reducer.reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |pslice, gslice| {
                 let t_opt = Instant::now();
                 optimizer.step(pslice, gslice, lr);
                 opt_s += t_opt.elapsed().as_secs_f64();
-            });
+            })?;
             (loss, tau_grad, out.tau, None)
         };
         others_s += opt_s;
@@ -507,30 +825,31 @@ fn worker_loop(
         // hidden/exposed reduction split (never the serial heuristic on
         // top of it — no double-counted overlap win)
         let step_compute = rt.timers().step_s - step_before;
-        timing.compute_s += rt.timers().compute_s() - compute_before;
-        timing.others_s += others_s;
-        timing.iterations += 1;
+        acc.timing.compute_s += rt.timers().compute_s() - compute_before;
+        acc.timing.others_s += others_s;
+        acc.timing.iterations += 1;
         match &overlap_rep {
             Some(rep) => {
                 let to_us = |s: f64| (s * 1e6) as u64;
                 comm.stats().add_overlap_us(to_us(rep.hidden_s()), to_us(rep.exposed_s));
-                charge_iteration_overlapped(&mut timing, &cost, &volumes, algo, rep);
+                charge_iteration_overlapped(&mut acc.timing, &cost, &volumes, algo, rep);
             }
-            None => charge_iteration_with(&mut timing, &cost, &volumes, step_compute, algo),
+            None => charge_iteration_with(&mut acc.timing, &cost, &volumes, step_compute, algo),
         }
 
-        if rank == 0 {
-            history.push(IterRecord { step: t, epoch, loss, gamma, lr, tau: tau.mean_tau() });
-        }
+        // every rank records history (the values are replicated — loss is
+        // all-reduced, schedules are deterministic): after a shrink ANY
+        // survivor can end up as the lead rank reporting the full run
+        acc.history.push(IterRecord { step: t, epoch, loss, gamma, lr, tau: tau.mean_tau() });
 
         // periodic evaluation (rank 0 computes; all ranks synchronize)
         if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 && t + 1 < cfg.steps {
-            comm.barrier();
+            comm.barrier()?;
             if rank == 0 {
-                let summary = evaluate(&mut *rt, &dataset, &params)?;
-                evals.push(EvalRecord { step: t + 1, summary });
+                let summary = evaluate(&mut *rt, dataset, &params)?;
+                acc.evals.push(EvalRecord { step: t + 1, summary });
             }
-            comm.barrier();
+            comm.barrier()?;
         }
 
         // periodic snapshot (DESIGN.md §9): rank 0 stages, every rank
@@ -563,7 +882,7 @@ fn worker_loop(
             );
             ckpt_sync(&comm, wrote, "writing rank state blobs")?;
             let finalized = if rank == 0 {
-                let meta = CkptMeta::for_run(&cfg, t + 1, k, p, bl, algo.id());
+                let meta = CkptMeta::for_run(cfg, t + 1, k, p, bl, algo.id());
                 ckpt::finalize(root, &stage, &meta, &params, cfg.keep_last)
                     .map(|_| ())
                     .with_context(|| format!("writing checkpoint at step {}", t + 1))
@@ -571,52 +890,56 @@ fn worker_loop(
                 Ok(())
             };
             ckpt_sync(&comm, finalized, "finalizing the snapshot")?;
-            ckpt_stats.snapshots += 1;
-            ckpt_stats.write_s += t0.elapsed().as_secs_f64();
+            acc.ckpt.snapshots += 1;
+            acc.ckpt.write_s += t0.elapsed().as_secs_f64();
         }
     }
 
     // final evaluation on rank 0
-    comm.barrier();
+    comm.barrier()?;
     let final_eval = if rank == 0 {
-        let summary = evaluate(&mut *rt, &dataset, &params)?;
-        evals.push(EvalRecord { step: cfg.steps, summary: summary.clone() });
+        let summary = evaluate(&mut *rt, dataset, &params)?;
+        acc.evals.push(EvalRecord { step: cfg.steps, summary: summary.clone() });
         Some(summary)
     } else {
         None
     };
-    comm.barrier();
+    comm.barrier()?;
 
     // close the job channel and join the reduction worker before the
     // output leaves the thread
     drop(pipeline);
 
-    Ok(WorkerOutput {
-        history,
-        evals,
+    Ok(Some(WorkerOutput {
+        rank,
+        world: k,
+        shrinks: 0, // worker_thread fills these from its incarnation count
+        lost: Vec::new(),
+        history: std::mem::take(&mut acc.history),
+        evals: std::mem::take(&mut acc.evals),
         final_eval,
-        timing,
+        timing: std::mem::take(&mut acc.timing),
         modeled_iter_bytes: volumes.total_bytes(),
         reduce_id: algo.id(),
         overlap: overlap_on,
         n_buckets,
         final_tau: tau.mean_tau(),
         params,
-        ckpt: ckpt_stats,
-    })
+        ckpt: std::mem::take(&mut acc.ckpt),
+    }))
 }
 
 /// SUM-all-reduce one step's scalar contributions — the loss and, for
 /// global temperature rules, dL/dτ. One shared implementation for the
 /// serial and pipelined paths, so the two can never drift in what they
 /// reduce. Returns `(global_loss, global_tau_grad)`.
-fn reduce_step_scalars(comm: &WorkerComm, loss: f32, tau: &TauGrads) -> (f32, f32) {
+fn reduce_step_scalars(comm: &WorkerComm, loss: f32, tau: &TauGrads) -> Result<(f32, f32)> {
     let mut scalars = [loss, 0.0];
     if let TauGrads::Global(g) = tau {
         scalars[1] = *g;
     }
-    comm.all_reduce_sum(&mut scalars);
-    (scalars[0], scalars[1])
+    comm.all_reduce_sum(&mut scalars)?;
+    Ok((scalars[0], scalars[1]))
 }
 
 /// Collective error propagation for the checkpoint protocol: all ranks
@@ -626,9 +949,16 @@ fn reduce_step_scalars(comm: &WorkerComm, loss: f32, tau: &TauGrads) -> (f32, f3
 /// exits the lockstep loop while its peers block forever on the next
 /// collective — turning a disk-full error into a hang of
 /// [`Trainer::run`].
+///
+/// The reduce is cancellable, which closes the protocol's former
+/// death-window deadlock: a rank that dies between raising its flag and
+/// the reduce's internal barriers cancels the world, so every survivor
+/// errors out of this call — with the lost ranks attached, ready for the
+/// shrink path — instead of waiting forever (pinned by
+/// `tests/fault_injection.rs`).
 fn ckpt_sync<T>(comm: &WorkerComm, local: Result<T>, what: &str) -> Result<T> {
     let mut flag = [if local.is_err() { 1.0f32 } else { 0.0 }];
-    comm.all_reduce_sum(&mut flag);
+    comm.all_reduce_sum(&mut flag).with_context(|| format!("checkpoint: {what}"))?;
     match local {
         Err(e) => Err(e).with_context(|| format!("checkpoint: {what}")),
         Ok(v) => {

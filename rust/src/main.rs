@@ -80,6 +80,12 @@ fn print_help() {
              --bucket-mb N           bucket size for the overlap pipeline (MB)\n\
              --ckpt-dir <dir> --ckpt-every N --keep-last N   periodic snapshots\n\
              --resume <dir|latest>              resume a checkpointed run\n\
+             --fail rank=R@iter=N    kill rank R at iteration N; survivors\n\
+                                roll back and shrink the world (DESIGN.md §13)\n\
+             --straggle rank=R:ms=M[,...]   per-rank latency skew before\n\
+                                every collective (numerics unchanged)\n\
+             --watchdog-ms N    collective watchdog (default 60000 when\n\
+                                fault injection is active, unbounded otherwise)\n\
              --save <file>      save final parameters (f32 LE)\n\
            eval        evaluate parameters: --bundle <dir> --params <file>\n\
            exp <id>    regenerate a paper table/figure (exp list to enumerate)\n\
@@ -153,6 +159,15 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(r) = args.get("resume") {
         cfg.resume = Some(r.to_string());
     }
+    // fault injection (DESIGN.md §13); grammar typos exit non-zero with
+    // the expected grammar in the message (via cfg.validate below)
+    if let Some(f) = args.get("fail") {
+        cfg.fail = Some(f.to_string());
+    }
+    if let Some(sg) = args.get("straggle") {
+        cfg.straggle = Some(sg.to_string());
+    }
+    cfg.watchdog_ms = args.u64_or("watchdog-ms", cfg.watchdog_ms)?;
     let epochs = (cfg.steps / cfg.iters_per_epoch.max(1)).max(1);
     if let Some(g) = args.get("gamma-const") {
         cfg.gamma = GammaSchedule::Constant { gamma: g.parse().map_err(anyhow::Error::msg)? };
@@ -234,6 +249,15 @@ fn train(args: &Args) -> Result<()> {
             result.grad_wire_bytes_naive as f64 / result.grad_wire_bytes.max(1) as f64
         ),
     ]);
+    if result.shrinks > 0 {
+        t.row(vec![
+            "world shrank".into(),
+            format!(
+                "{} time(s): lost rank(s) {:?}, finished at K={}",
+                result.shrinks, result.lost_ranks, result.final_world
+            ),
+        ]);
+    }
     if let Some(step) = result.ckpt.resumed_at {
         t.row(vec![
             "resumed at step".into(),

@@ -1,0 +1,400 @@
+//! Fault-tolerance tests (DESIGN.md §13): deadlock-freedom of the
+//! cancellable collectives under randomized failure timing, bitwise
+//! equivalence of a live shrink with a cold elastic resume from the same
+//! rollback snapshot, straggler-skew accounting, and the checkpoint
+//! protocol's former death-window deadlock.
+//!
+//! Every wait in this file is bounded — by the collective watchdog inside
+//! the comm layer and by `recv_timeout` in the harness — so a regression
+//! back to a hang fails loudly instead of wedging the suite.
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use fastclip::ckpt;
+use fastclip::comm::{
+    reduction, BucketPlan, CancellationToken, CommError, CommStats, CommWorld, GradientReduction,
+    OverlapMode, OverlapPipeline, ReduceAlgo, ReduceStrategy, WorkerComm,
+};
+use fastclip::config::{Algorithm, TrainConfig};
+use fastclip::coordinator::Trainer;
+use fastclip::kernels::Precision;
+
+fn tmp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fastclip_fault_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Native-backend trainer config (DESIGN.md §10): runs everywhere, no
+/// artifacts — K=2 workers, local batch 8 (mirrors `ckpt_resume.rs`).
+fn trainer_cfg(algo: Algorithm, steps: u32) -> TrainConfig {
+    let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", algo);
+    cfg.backend = fastclip::runtime::BackendKind::Native;
+    cfg.kernel_threads = 1;
+    cfg.steps = steps;
+    cfg.iters_per_epoch = 4;
+    cfg.data.n_train = 64;
+    cfg.data.n_eval = 32;
+    cfg.data.n_classes = 8;
+    cfg.lr.warmup_iters = 2;
+    cfg.lr.total_iters = steps;
+    cfg
+}
+
+/// Deterministic splitmix-style generator: the stress trials must be
+/// reproducible from the trial number alone.
+fn next_rand(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    let mut z = *state;
+    z = (z ^ (z >> 33)).wrapping_mul(0xff51afd7ed558ccd);
+    z ^ (z >> 33)
+}
+
+// ---------------------------------------------------------------------
+// 1. Deadlock-freedom stress: randomized cancellation timing across
+//    K ∈ {2,4} × {naive, ring, sharded} × {serial, overlap}. Every
+//    survivor must come back with Err(RanksLost) — never hang.
+// ---------------------------------------------------------------------
+
+/// One rank's life in a stress trial: iterate collective reductions in
+/// lockstep until the world is cancelled. The victim participates for
+/// `warm` full iterations, sleeps a seeded delay (so cancellation lands
+/// at a different point of the collective protocol each trial), declares
+/// itself lost and exits — like a process dying mid-iteration.
+#[allow(clippy::too_many_arguments)]
+fn stress_rank(
+    rank: usize,
+    victim: usize,
+    warm: u64,
+    delay_us: u64,
+    comm: WorkerComm,
+    reduce_comm: WorkerComm,
+    algo: ReduceAlgo,
+    overlap: bool,
+    n: usize,
+) -> Result<(), CommError> {
+    let wire = Precision::F32;
+    let reducer = reduction(algo);
+    let plan = BucketPlan::new(n, 16);
+    let mut params = vec![0.5f32; n];
+    let mut pipe = if overlap {
+        Some(OverlapPipeline::spawn(reduce_comm, algo, plan.clone(), n, wire))
+    } else {
+        None
+    };
+    let mut it = 0u64;
+    loop {
+        if rank == victim && it == warm {
+            std::thread::sleep(Duration::from_micros(delay_us));
+            comm.token().declare_lost(rank);
+            return Ok(()); // dropping `pipe` joins the cancelled worker
+        }
+        let mut grad: Vec<f32> =
+            (0..n).map(|i| ((i + rank + it as usize) % 13) as f32 * 0.125).collect();
+        if let Some(p) = pipe.as_mut() {
+            for b in plan.iter() {
+                p.emit(b.lo, &grad[b.lo..b.hi]);
+            }
+            if let Err(e) = p.finish(&comm, &mut params, &mut |ps, gs| ps.copy_from_slice(gs)) {
+                let ce = e
+                    .root_cause()
+                    .downcast_ref::<CommError>()
+                    .cloned()
+                    .expect("pipeline failure must carry a CommError root cause");
+                return Err(ce);
+            }
+        } else {
+            reducer.reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |ps, gs| {
+                ps.copy_from_slice(gs)
+            })?;
+        }
+        it += 1;
+        assert!(it < 10_000, "cancellation never landed");
+    }
+}
+
+fn stress_trial(trial: u64) {
+    // cycle the full matrix deterministically; randomize only the timing
+    let k = [2usize, 4][(trial % 2) as usize];
+    let algos = [ReduceAlgo::Naive, ReduceAlgo::Ring, ReduceAlgo::Sharded];
+    let algo = algos[((trial / 2) % 3) as usize];
+    let overlap = (trial / 6) % 2 == 1;
+    let mut rng = 0x9e3779b97f4a7c15u64 ^ trial;
+    let victim = (next_rand(&mut rng) as usize) % k;
+    let warm = next_rand(&mut rng) % 3;
+    let delay_us = next_rand(&mut rng) % 3000;
+    let n = 64usize;
+    let label = format!("trial {trial}: k={k} algo={algo:?} overlap={overlap} victim={victim}");
+
+    let stats = Arc::new(CommStats::default());
+    let token = Arc::new(CancellationToken::new());
+    let watchdog = Some(Duration::from_secs(10));
+    let zeros = vec![Duration::ZERO; k];
+    let world =
+        CommWorld::with_faults(k, Arc::clone(&stats), Arc::clone(&token), watchdog, zeros.clone());
+    let reduce_world = CommWorld::with_faults(k, stats, token, watchdog, zeros);
+
+    let (tx, rx) = mpsc::channel();
+    let mut joins = Vec::new();
+    for rank in 0..k {
+        let comm = world.handle(rank);
+        let reduce_comm = reduce_world.handle(rank);
+        let tx = tx.clone();
+        joins.push(std::thread::spawn(move || {
+            let res =
+                stress_rank(rank, victim, warm, delay_us, comm, reduce_comm, algo, overlap, n);
+            tx.send((rank, res)).unwrap();
+        }));
+    }
+    drop(tx);
+    for _ in 0..k {
+        // the harness wait is bounded too: a hung rank fails the test
+        // instead of wedging it
+        let (rank, res) = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|_| panic!("{label}: a rank hung"));
+        if rank == victim {
+            res.unwrap_or_else(|e| panic!("{label}: the victim exits cleanly, got {e}"));
+        } else {
+            let err = match res {
+                Ok(()) => panic!("{label}: survivor {rank} must observe the loss"),
+                Err(e) => e,
+            };
+            assert_eq!(err, CommError::RanksLost(vec![victim]), "{label}: survivor {rank}");
+        }
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn cancellation_is_deadlock_free_across_the_matrix() {
+    for trial in 0..50u64 {
+        stress_trial(trial);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. The tentpole invariant: a live shrink (kill rank R at iter N, roll
+//    back, re-shard, continue at K′) is bitwise-equal to a cold elastic
+//    resume at K′ from the same rollback snapshot — params, u, τ and the
+//    post-rollback loss trajectory — for every step-graph variant of
+//    DESIGN.md §3, in f32 and bf16.
+// ---------------------------------------------------------------------
+
+/// One algorithm per step-graph variant (mbcl, gcl_v0, gcl, rgcl_i,
+/// rgcl_g), with reduction strategies chosen to cover all three.
+const SHRINK_MATRIX: [(Algorithm, ReduceAlgo); 5] = [
+    (Algorithm::OpenClip, ReduceAlgo::Ring),
+    (Algorithm::FastClipV0, ReduceAlgo::Naive),
+    (Algorithm::FastClipV1, ReduceAlgo::Ring),
+    (Algorithm::FastClipV2, ReduceAlgo::Ring),
+    (Algorithm::FastClipV3, ReduceAlgo::Sharded),
+];
+
+fn shrink_matches_cold_elastic_resume(precision: Precision) {
+    let (steps, every, fail_iter) = (10u32, 4u32, 6u32);
+    for (algo, reduce) in SHRINK_MATRIX {
+        // kill rank 0 for one variant: the lead role must fail over
+        let victim = if algo == Algorithm::FastClipV1 { 0 } else { 1 };
+        let label = format!("{} reduce={} prec={}", algo.id(), reduce.id(), precision.id());
+        let live_root = tmp_root(&format!("live_{}_{}", algo.id(), precision.id()));
+        let cold_root = tmp_root(&format!("cold_{}_{}", algo.id(), precision.id()));
+
+        let mut live = trainer_cfg(algo, steps);
+        live.precision = precision;
+        live.reduce = ReduceStrategy::Fixed(reduce);
+        live.ckpt_dir = Some(live_root.to_string_lossy().into_owned());
+        live.ckpt_every = every;
+        live.fail = Some(format!("rank={victim}@iter={fail_iter}"));
+        live.watchdog_ms = 20_000;
+        let lr = Trainer::new(live).unwrap().run().unwrap();
+        assert_eq!(lr.shrinks, 1, "{label}");
+        assert_eq!(lr.final_world, 1, "{label}");
+        assert_eq!(lr.lost_ranks, vec![victim], "{label}");
+        // rolled-back steps appear exactly once in the final history
+        assert_eq!(lr.history.len(), steps as usize, "{label}");
+        let step_seq: Vec<u32> = lr.history.iter().map(|h| h.step).collect();
+        assert_eq!(step_seq, (0..steps).collect::<Vec<_>>(), "{label}");
+
+        // cold elastic resume at K′=1 from the same rollback snapshot
+        // (the shrink rolled back to step `every` — the last snapshot
+        // finalized before the injected death)
+        let snap = live_root.join(format!("step_{every:08}"));
+        let mut cold = trainer_cfg(algo, steps);
+        cold.precision = precision;
+        cold.reduce = ReduceStrategy::Fixed(reduce);
+        cold.n_workers = 1;
+        cold.local_batch = 8;
+        cold.resume = Some(snap.to_string_lossy().into_owned());
+        cold.ckpt_dir = Some(cold_root.to_string_lossy().into_owned());
+        cold.ckpt_every = every;
+        let cold_cfg = cold.clone();
+        let cr = Trainer::new(cold).unwrap().run().unwrap();
+        assert_eq!(cr.ckpt.resumed_at, Some(every), "{label}");
+
+        // parameters and τ after the remaining M iterations: bitwise
+        assert_eq!(lr.final_params, cr.final_params, "params: {label}");
+        assert_eq!(lr.final_tau.to_bits(), cr.final_tau.to_bits(), "tau: {label}");
+        // the post-rollback trajectory: bitwise, step by step
+        let tail = &lr.history[every as usize..];
+        assert_eq!(tail.len(), cr.history.len(), "{label}");
+        for (a, b) in tail.iter().zip(&cr.history) {
+            assert_eq!(a.step, b.step, "{label}");
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss at step {}: {label}", a.step);
+            assert_eq!(a.tau.to_bits(), b.tau.to_bits(), "tau at step {}: {label}", a.step);
+        }
+
+        // u/τ/loader state: both runs snapshot at step 8 (the boundary
+        // after the shrink) — restore both through the real reader and
+        // compare the full worker state bitwise
+        let sharded = reduce == ReduceAlgo::Sharded;
+        let a = ckpt::Checkpoint::open(&live_root.join("step_00000008")).unwrap();
+        let b = ckpt::Checkpoint::open(&cold_root.join("step_00000008")).unwrap();
+        assert_eq!(a.meta().world, 1, "{label}: post-shrink snapshot is a K′=1 world");
+        let ra = ckpt::restore_worker(&a, &cold_cfg, 0, 1, 8, sharded).unwrap();
+        let rb = ckpt::restore_worker(&b, &cold_cfg, 0, 1, 8, sharded).unwrap();
+        assert_eq!(ra.params, rb.params, "snapshot params: {label}");
+        assert_eq!(ra.ustate.parts(), rb.ustate.parts(), "u state: {label}");
+        assert_eq!(ckpt::export_tau(&ra.tau), ckpt::export_tau(&rb.tau), "tau state: {label}");
+        assert_eq!(ra.loader.export(), rb.loader.export(), "loader: {label}");
+        assert_eq!(ra.optim, rb.optim, "optimizer state: {label}");
+
+        let _ = std::fs::remove_dir_all(&live_root);
+        let _ = std::fs::remove_dir_all(&cold_root);
+    }
+}
+
+#[test]
+fn live_shrink_is_bitwise_cold_elastic_resume_f32() {
+    shrink_matches_cold_elastic_resume(Precision::F32);
+}
+
+#[test]
+fn live_shrink_is_bitwise_cold_elastic_resume_bf16() {
+    shrink_matches_cold_elastic_resume(Precision::Bf16);
+}
+
+// ---------------------------------------------------------------------
+// 3. Straggler regression: injected latency skew must not perturb the
+//    numerics, and the hidden/exposed comm accounting must stay finite
+//    and consistent under skew.
+// ---------------------------------------------------------------------
+
+#[test]
+fn straggler_skews_time_never_numerics_and_accounting_stays_finite() {
+    let build = |straggle: Option<&str>| {
+        let mut cfg = trainer_cfg(Algorithm::FastClipV3, 6);
+        cfg.reduce = ReduceStrategy::Fixed(ReduceAlgo::Ring);
+        // force the overlap pipeline with several buckets so the skew
+        // lands inside the hidden/exposed split, not just pure comm
+        cfg.overlap = OverlapMode::On;
+        cfg.bucket_bytes = 1024;
+        cfg.straggle = straggle.map(str::to_string);
+        cfg.watchdog_ms = 20_000;
+        cfg
+    };
+    let clean = Trainer::new(build(None)).unwrap().run().unwrap();
+    let skewed = Trainer::new(build(Some("rank=0:ms=1"))).unwrap().run().unwrap();
+
+    // numerics: bitwise identical to the clean run
+    assert_eq!(clean.final_params, skewed.final_params);
+    for (a, b) in clean.history.iter().zip(&skewed.history) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss at step {}", a.step);
+        assert_eq!(a.tau.to_bits(), b.tau.to_bits(), "tau at step {}", a.step);
+    }
+    // same bytes on the wire: skew delays collectives, it does not
+    // change what they move
+    assert_eq!(clean.comm_bytes, skewed.comm_bytes);
+    assert_eq!(clean.grad_wire_bytes, skewed.grad_wire_bytes);
+
+    // accounting: the hidden/exposed split and its derived fraction stay
+    // finite and consistent under skew
+    for r in [&clean, &skewed] {
+        assert!(r.overlap, "the pipeline must actually run for this regression");
+        let ms = r.timing.per_iter_ms();
+        for v in [ms.total, ms.compute, ms.comm_pure, ms.comm_overlap, ms.others] {
+            assert!(v.is_finite() && v >= 0.0, "per-iter breakdown must stay finite");
+        }
+        if let Some(f) = r.timing.hidden_fraction() {
+            assert!((0.0..=1.0).contains(&f), "hidden fraction {f} out of range");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. The checkpoint protocol's former death-window deadlock: a rank that
+//    dies between raising its ckpt_sync failure flag and the flag
+//    all-reduce used to strand every survivor inside the reduce forever.
+//    The reduce is cancellable now — the survivor must get an error.
+// ---------------------------------------------------------------------
+
+#[test]
+fn ckpt_sync_death_window_errors_instead_of_deadlocking() {
+    let stats = Arc::new(CommStats::default());
+    let token = Arc::new(CancellationToken::new());
+    let world = CommWorld::with_faults(
+        2,
+        stats,
+        Arc::clone(&token),
+        Some(Duration::from_secs(10)),
+        vec![Duration::ZERO; 2],
+    );
+    let survivor = world.handle(0);
+    let t = std::thread::spawn(move || {
+        // trainer::ckpt_sync's exact shape: SUM-reduce a failure flag
+        let mut flag = [0.0f32];
+        survivor.all_reduce_sum(&mut flag)
+    });
+    // let the survivor commit to the reduce (it blocks at the internal
+    // barrier waiting for rank 1), then rank 1 dies
+    std::thread::sleep(Duration::from_millis(20));
+    token.declare_lost(1);
+    let res = t.join().unwrap();
+    assert_eq!(res.unwrap_err(), CommError::RanksLost(vec![1]));
+}
+
+// ---------------------------------------------------------------------
+// 5. Front-loaded validation: an injected fault that could never shrink
+//    cleanly is rejected at Trainer construction with an actionable
+//    message, not discovered as a hang or a meaningless run.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fail_flag_validation_is_actionable() {
+    let base = |fail: &str| {
+        let mut cfg = trainer_cfg(Algorithm::FastClipV3, 8);
+        cfg.ckpt_dir = Some(tmp_root("validation").to_string_lossy().into_owned());
+        cfg.ckpt_every = 2;
+        cfg.fail = Some(fail.to_string());
+        cfg
+    };
+    let err = |cfg: TrainConfig| match Trainer::new(cfg) {
+        Ok(_) => panic!("config must be rejected"),
+        Err(e) => format!("{e:#}"),
+    };
+
+    // grammar typos carry the expected grammar
+    assert!(err(base("rank=1,iter=4")).contains("rank=R@iter=N"));
+    // rank outside the world
+    assert!(err(base("rank=5@iter=4")).contains("outside the world"));
+    // a fail without any snapshot configured cannot roll back
+    let mut no_ckpt = trainer_cfg(Algorithm::FastClipV3, 8);
+    no_ckpt.fail = Some("rank=1@iter=4".to_string());
+    assert!(err(no_ckpt).contains("rollback snapshot"));
+    // a fail before the first snapshot boundary cannot roll back either
+    let mut early = base("rank=1@iter=4");
+    early.ckpt_every = 6;
+    assert!(err(early).contains("precedes the first snapshot boundary"));
+    // a fail past the end of the run would never fire
+    assert!(err(base("rank=1@iter=99")).contains("past the run"));
+    // K=1: killing the only rank leaves nothing to shrink
+    let mut solo = base("rank=0@iter=4");
+    solo.n_workers = 1;
+    solo.local_batch = 8;
+    assert!(err(solo).contains("kills the only rank"));
+}

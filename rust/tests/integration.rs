@@ -291,9 +291,11 @@ fn reduce_full_px(
     run_world(k, move |comm| {
         let mut grad = contribution(comm.rank(), n);
         let mut params = vec![0.0f32; n];
-        reduction(algo).reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |p, g| {
-            p.copy_from_slice(g)
-        });
+        reduction(algo)
+            .reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |p, g| {
+                p.copy_from_slice(g)
+            })
+            .unwrap();
         params
     })
 }
@@ -411,13 +413,11 @@ fn sharded_training_loop_matches_replicated() {
                 for (i, g) in grad.iter_mut().enumerate() {
                     *g = (*g + t as f32).sin() + params[i % n] * 0.1;
                 }
-                reduction(algo).reduce_and_apply(
-                    &comm,
-                    &mut grad,
-                    &mut params,
-                    Precision::F32,
-                    &mut |p, g| opt.step(p, g, 1e-2),
-                );
+                reduction(algo)
+                    .reduce_and_apply(&comm, &mut grad, &mut params, Precision::F32, &mut |p, g| {
+                        opt.step(p, g, 1e-2)
+                    })
+                    .unwrap();
             }
             params
         });
