@@ -39,6 +39,11 @@ fn main() -> anyhow::Result<()> {
     let quick = args.flag("quick");
     let steps: u32 = if quick { 12 } else { 32 };
     let repeats: usize = if quick { 3 } else { 5 };
+    // `--trace-out FILE`: every benchmarked run writes its JSONL trace
+    // there (each run truncates, so the file ends up holding the LAST
+    // run — enough to `fastclip trace summary` a representative
+    // iteration profile without rerunning, DESIGN.md §14)
+    let trace_out = args.get("trace-out").map(str::to_string);
 
     println!(
         "end-to-end native iterations (preset tiny, K=2, Bl=8; {steps} steps x {repeats} runs, \
@@ -51,7 +56,8 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
     for algo in Algorithm::all() {
-        let make_cfg = |overlap: OverlapMode, precision: Precision| {
+        let trace_out = trace_out.clone();
+        let make_cfg = move |overlap: OverlapMode, precision: Precision| {
             let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", algo);
             cfg.backend = BackendKind::Native;
             cfg.steps = steps;
@@ -67,6 +73,7 @@ fn main() -> anyhow::Result<()> {
             // small buckets so the tiny preset's ~74 KB gradient actually
             // splits (the 4 MB default would pipeline as a single bucket)
             cfg.bucket_bytes = 8 << 10;
+            cfg.trace_out = trace_out.clone();
             cfg
         };
         let (serial_rate, serial_run) =

@@ -119,7 +119,10 @@ pub fn rate_json(rate: f64) -> fastclip::util::Json {
 ///                        drops below `baseline · (1 − f)` (default 0.25)
 ///
 /// Rows present on only one side are reported but never gate — adding or
-/// retiring a benchmark must not break CI.
+/// retiring a benchmark must not break CI. Every skipped row is counted
+/// and listed at the end, and a baseline whose gateable rows were ALL
+/// skipped fails the run: a silent rename (or a bench that stopped
+/// measuring anything) must not read as "no regressions".
 pub fn finalize_report(
     bench_name: &str,
     quick: bool,
@@ -151,10 +154,13 @@ pub fn finalize_report(
     let max_regress = args.f64_or("max-regress", 0.25)?;
     let baseline = fastclip::util::Json::parse_file(std::path::Path::new(baseline_path))?;
     let mut regressions = Vec::new();
+    let mut skipped: Vec<String> = Vec::new();
+    let mut gateable = 0usize;
+    let mut compared = 0usize;
     for base_row in baseline.get("results")?.as_arr()? {
         let name = base_row.get("name")?.as_str()?.to_string();
         // a null baseline rate means "was not measurable when committed"
-        // — report-only, never gates
+        // — report-only, never gates (and does not count as gateable)
         let base = base_row.get("rate_per_sec")?;
         let base_rate = match base.as_f64() {
             Ok(r) if r.is_finite() => r,
@@ -163,8 +169,10 @@ pub fn finalize_report(
                 continue;
             }
         };
+        gateable += 1;
         let Some(cur) = rows.iter().find(|r| r.name == name) else {
             println!("baseline row '{name}' not measured in this run — skipping");
+            skipped.push(name);
             continue;
         };
         if !cur.rate_per_sec.is_finite() {
@@ -173,8 +181,10 @@ pub fn finalize_report(
             println!(
                 "{name:<40} n/a (unmeasurable this run) vs baseline {base_rate:.2}/s — skipping"
             );
+            skipped.push(name);
             continue;
         }
+        compared += 1;
         let floor = base_rate * (1.0 - max_regress);
         let verdict = if cur.rate_per_sec < floor { "REGRESSED" } else { "ok" };
         println!(
@@ -185,6 +195,19 @@ pub fn finalize_report(
             regressions.push(name);
         }
     }
+    if !skipped.is_empty() {
+        println!(
+            "gate skipped {}/{gateable} baseline row(s): {}",
+            skipped.len(),
+            skipped.join(", ")
+        );
+    }
+    anyhow::ensure!(
+        gateable == 0 || compared > 0,
+        "baseline {baseline_path} has {gateable} gateable row(s) but NONE were compared \
+         (all skipped: {}) — the regression gate measured nothing",
+        skipped.join(", ")
+    );
     anyhow::ensure!(
         regressions.is_empty(),
         "throughput regressed >{:.0}% vs {baseline_path}: {}",

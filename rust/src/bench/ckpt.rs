@@ -25,7 +25,7 @@ use crate::optim::Optimizer;
 use crate::output::Table;
 use crate::util::{Args, Json};
 
-use super::common::results_dir;
+use super::common::{progress_logger, results_dir};
 
 /// One rank's synthetic worker state in the richest shape (individual τ
 /// with per-sample Adam moments + AdamW) — the shared fixture for the
@@ -96,6 +96,7 @@ pub fn snapshot_synthetic(
 }
 
 pub fn ckpt_study(args: &Args) -> Result<()> {
+    let log = progress_logger(args)?;
     let mut json_rows = Vec::new();
     state_throughput(args, &mut json_rows)?;
 
@@ -103,15 +104,15 @@ pub fn ckpt_study(args: &Args) -> Result<()> {
     if Path::new(&bundle).join("manifest.json").exists() {
         interrupted_run(args, &bundle, &mut json_rows)?;
     } else {
-        eprintln!(
+        log.status(&format!(
             "note: skipping the interrupted-run study — {bundle} not built \
              (run `make artifacts`; needs the pjrt feature to execute)"
-        );
+        ));
     }
 
     let dir = results_dir(args);
     crate::output::write_result(&dir, "ckpt", &Json::arr(json_rows))?;
-    eprintln!("wrote {}/ckpt.json", dir.display());
+    log.status(&format!("wrote {}/ckpt.json", dir.display()));
     Ok(())
 }
 

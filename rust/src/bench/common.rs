@@ -7,6 +7,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{Algorithm, DataConfig, GammaSchedule, TrainConfig};
 use crate::coordinator::{TrainResult, Trainer};
+use crate::telemetry::Logger;
 use crate::util::Args;
 
 /// The experiment settings of Table 2, scaled to this testbed (see
@@ -174,18 +175,35 @@ pub fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<Vec<u64>> {
     if let Some(b) = args.get("bundle") {
         cfg.set_bundle(b);
     }
+    // `--trace-out FILE` wires the run into the telemetry subsystem
+    // (DESIGN.md §14); with multiple runs the file holds the LAST one
+    if let Some(t) = args.get("trace-out") {
+        cfg.trace_out = Some(t.to_string());
+    }
     let n_seeds = args.usize_or("seeds", 2)?.max(1);
     Ok((0..n_seeds as u64).collect())
+}
+
+/// The progress logger for an experiment runner, from the common
+/// `--quiet` / `--log-format text|json` flags (rejects unknown formats).
+pub fn progress_logger(args: &Args) -> Result<Logger> {
+    Logger::from_format(args.flag("quiet"), &args.str_or("log-format", "text"))
 }
 
 /// Common options shared by every experiment runner (for check_known).
 pub const COMMON_OPTS: &[&str] = &[
     "steps", "seeds", "setting", "bundle", "n-train", "n-eval", "eval-every",
-    "out", "nodes", "gpus-per-node", "precision",
+    "out", "nodes", "gpus-per-node", "precision", "quiet", "log-format", "trace-out",
 ];
 
-/// Run one configuration across seeds, logging progress to stderr.
-pub fn run_seeds(base: &TrainConfig, seeds: &[u64], label: &str) -> Result<Vec<TrainResult>> {
+/// Run one configuration across seeds, reporting per-seed progress
+/// through the logger (stderr in text mode; `--quiet` silences it).
+pub fn run_seeds(
+    base: &TrainConfig,
+    seeds: &[u64],
+    label: &str,
+    log: Logger,
+) -> Result<Vec<TrainResult>> {
     let mut out = Vec::with_capacity(seeds.len());
     for &seed in seeds {
         let mut cfg = base.clone();
@@ -196,12 +214,12 @@ pub fn run_seeds(base: &TrainConfig, seeds: &[u64], label: &str) -> Result<Vec<T
             .with_context(|| format!("{label} seed {seed}"))?
             .run()
             .with_context(|| format!("{label} seed {seed}"))?;
-        eprintln!(
+        log.status(&format!(
             "  [{label} seed={seed}] loss {:.4} datacomp {:.2} ({:.1}s)",
             r.tail_loss(8),
             r.final_eval.datacomp,
             t0.elapsed().as_secs_f64()
-        );
+        ));
         out.push(r);
     }
     Ok(out)

@@ -16,7 +16,9 @@ use crate::kernels::Precision;
 use crate::output::{mean_std_cell, Table};
 use crate::util::{Args, Json};
 
-use super::common::{algo_config, apply_overrides, results_dir, run_seeds, scores, Setting};
+use super::common::{
+    algo_config, apply_overrides, progress_logger, results_dir, run_seeds, scores, Setting,
+};
 
 fn settings_from(args: &Args) -> Result<Vec<Setting>> {
     match args.get("setting") {
@@ -28,6 +30,7 @@ fn settings_from(args: &Args) -> Result<Vec<Setting>> {
 
 /// Table 3 / Fig. 8: constant γ vs cosine γ, three algorithm pairs.
 pub fn table3(args: &Args) -> Result<()> {
+    let log = progress_logger(args)?;
     let mut table = Table::new(
         "Table 3 — inner LR schedule (constant vs cosine gamma)",
         &["Setting", "Algorithm", "Schedule", "Datacomp", "Retrieval", "IN&Var"],
@@ -49,7 +52,7 @@ pub fn table3(args: &Args) -> Result<()> {
                 cfg.gamma = GammaSchedule::Constant { gamma: 0.6 };
             }
             let seeds = apply_overrides(&mut cfg, args)?;
-            let results = run_seeds(&cfg, &seeds, label)?;
+            let results = run_seeds(&cfg, &seeds, label, log)?;
             let s = scores(&results);
             let schedule = match cfg.gamma {
                 GammaSchedule::Constant { .. } => "constant",
@@ -71,6 +74,7 @@ pub fn table3(args: &Args) -> Result<()> {
 
 /// Table 4 / Fig. 9(a,b): temperature update rules v0–v3.
 pub fn table4(args: &Args) -> Result<()> {
+    let log = progress_logger(args)?;
     let mut table = Table::new(
         "Table 4 — temperature parameter updates (FastCLIP-v0..v3)",
         &["Setting", "Algorithm", "Datacomp", "Retrieval", "IN&Var"],
@@ -85,7 +89,7 @@ pub fn table4(args: &Args) -> Result<()> {
         ] {
             let mut cfg = algo_config(setting, algo);
             let seeds = apply_overrides(&mut cfg, args)?;
-            let results = run_seeds(&cfg, &seeds, algo.name())?;
+            let results = run_seeds(&cfg, &seeds, algo.name(), log)?;
             let s = scores(&results);
             table.row(vec![
                 setting.name().into(),
@@ -102,6 +106,7 @@ pub fn table4(args: &Args) -> Result<()> {
 
 /// Table 5 / Fig. 9(c,d): optimizers on FastCLIP-v3.
 pub fn table5(args: &Args) -> Result<()> {
+    let log = progress_logger(args)?;
     let mut table = Table::new(
         "Table 5 — optimizers (FastCLIP-v3 base)",
         &["Setting", "Optimizer", "Datacomp", "Retrieval", "IN&Var"],
@@ -134,7 +139,7 @@ pub fn table5(args: &Args) -> Result<()> {
                 OptimizerKind::AdamW => {}
             }
             let seeds = apply_overrides(&mut cfg, args)?;
-            let results = run_seeds(&cfg, &seeds, kind.name())?;
+            let results = run_seeds(&cfg, &seeds, kind.name(), log)?;
             let s = scores(&results);
             table.row(vec![
                 setting.name().into(),
@@ -159,6 +164,7 @@ pub fn table5(args: &Args) -> Result<()> {
 /// by `CommStats`, is strictly lower than the naive baseline, and that
 /// the bf16 wire format charges exactly half the f32 bytes.
 pub fn reduce_table(args: &Args) -> Result<()> {
+    let log = progress_logger(args)?;
     let profile = ProfileName::from_id(&args.str_or("profile", "infiniband"))?;
     let n_params = args.usize_or("n-params", 20_000_000)?;
     let mut table = Table::new(
@@ -270,14 +276,14 @@ pub fn reduce_table(args: &Args) -> Result<()> {
                     f32_wire_bytes[ai]
                 ),
             }
-            eprintln!(
+            log.status(&format!(
                 "exactness ok: {:8} {:5}  grad wire {:>7} B (naive baseline {:>7} B, {:.2}x)",
                 algo.id(),
                 wire.id(),
                 s.grad_wire_bytes / k as u64,
                 s.grad_wire_bytes_naive / k as u64,
                 s.grad_wire_saving()
-            );
+            ));
         }
     }
 
@@ -304,6 +310,9 @@ pub fn reduce_table(args: &Args) -> Result<()> {
             // gradient, which would break the exact-2x byte comparison
             cfg.reduce = crate::comm::ReduceStrategy::Fixed(ReduceAlgo::Ring);
             cfg.bucket_bytes = 4 << 10;
+            // `--trace-out` wires the live check into the telemetry
+            // subsystem too (last run wins, like bench_iteration)
+            cfg.trace_out = args.get("trace-out").map(str::to_string);
             crate::coordinator::Trainer::new(cfg)?.run()
         };
         let serial = quick(OverlapMode::Off, Precision::F32)?;
@@ -312,11 +321,11 @@ pub fn reduce_table(args: &Args) -> Result<()> {
             serial.final_params == piped.final_params,
             "overlapped reduction diverged from serial training"
         );
-        eprintln!(
+        log.status(&format!(
             "overlap ok: {} buckets/iter, bitwise equal to serial; measured reduction \
              {} us hidden / {} us exposed",
             piped.n_buckets, piped.hidden_comm_us, piped.exposed_comm_us
-        );
+        ));
         // the same invariants under the bf16 wire + storage path, plus
         // the end-to-end ~2x wire-byte cut vs the f32 run above
         let bf_serial = quick(OverlapMode::Off, Precision::Bf16)?;
@@ -331,10 +340,10 @@ pub fn reduce_table(args: &Args) -> Result<()> {
             bf_serial.grad_wire_bytes,
             serial.grad_wire_bytes
         );
-        eprintln!(
+        log.status(&format!(
             "bf16 ok: bitwise serial==overlap; grad wire {} B vs f32 {} B per rank",
             bf_serial.grad_wire_bytes, serial.grad_wire_bytes
-        );
+        ));
     }
     finish(args, "reduce", table, json_rows)
 }
@@ -360,10 +369,11 @@ fn result_json(setting: Setting, label: &str, extra: &str, s: &super::common::Sc
 }
 
 fn finish(args: &Args, name: &str, table: Table, rows: Vec<Json>) -> Result<()> {
+    let log = progress_logger(args)?;
     table.print();
     let dir = results_dir(args);
     table.write_csv(&dir.join(format!("{name}.csv")))?;
     crate::output::write_result(&dir, name, &Json::arr(rows))?;
-    eprintln!("wrote {}/{name}.{{csv,json}}", dir.display());
+    log.status(&format!("wrote {}/{name}.{{csv,json}}", dir.display()));
     Ok(())
 }

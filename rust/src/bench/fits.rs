@@ -12,7 +12,7 @@ use crate::config::Algorithm;
 use crate::output::{f2, Table};
 use crate::util::{Args, Json};
 
-use super::common::{algo_config, apply_overrides, results_dir, run_seeds, Setting};
+use super::common::{algo_config, apply_overrides, progress_logger, results_dir, run_seeds, Setting};
 
 /// Least-squares fit of p = -a/x + b. Returns (a, b).
 pub fn fit_reciprocal(xs: &[f64], ps: &[f64]) -> (f64, f64) {
@@ -70,6 +70,7 @@ pub fn fit_power(xs: &[f64], ps: &[f64]) -> (f64, f64, f64) {
 /// Fig. 6: OpenCLIP batch-size sweep (reciprocal fit) and dataset-size
 /// sweep (power fit).
 pub fn fits(args: &Args) -> Result<()> {
+    let log = progress_logger(args)?;
     // ---- batch-size sweep -------------------------------------------------
     let bundles = match args.get("bundles") {
         Some(list) => list.split(',').map(|s| s.to_string()).collect::<Vec<_>>(),
@@ -97,7 +98,7 @@ pub fn fits(args: &Args) -> Result<()> {
         cfg.steps = (base_samples / m.global_batch as u32).max(8);
         cfg.lr.total_iters = cfg.steps;
         cfg.lr.warmup_iters = cfg.steps / 8;
-        let results = run_seeds(&cfg, &seeds[..1], &format!("bg={}", m.global_batch))?;
+        let results = run_seeds(&cfg, &seeds[..1], &format!("bg={}", m.global_batch), log)?;
         let zs = results[0].final_eval.task("zeroshot_clean").unwrap_or(f32::NAN) as f64;
         table.row(vec![
             m.global_batch.to_string(),
@@ -127,7 +128,7 @@ pub fn fits(args: &Args) -> Result<()> {
         let mut cfg = algo_config(Setting::Medium, Algorithm::OpenClip);
         let seeds = apply_overrides(&mut cfg, args)?;
         cfg.data.n_train = n_train;
-        let results = run_seeds(&cfg, &seeds[..1], &format!("n={n_train}"))?;
+        let results = run_seeds(&cfg, &seeds[..1], &format!("n={n_train}"), log)?;
         let zs = results[0].final_eval.task("zeroshot_clean").unwrap_or(f32::NAN) as f64;
         table2.row(vec![
             n_train.to_string(),

@@ -10,9 +10,10 @@ use crate::config::{Algorithm, GammaSchedule};
 use crate::output::{sparkline, Table};
 use crate::util::{Args, Json};
 
-use super::common::{algo_config, apply_overrides, results_dir, run_seeds, Setting};
+use super::common::{algo_config, apply_overrides, progress_logger, results_dir, run_seeds, Setting};
 
 pub fn gamma_min(args: &Args) -> Result<()> {
+    let log = progress_logger(args)?;
     let mut table = Table::new(
         "Fig. 5 analog — gamma_min x batch size (FastCLIP-v3)",
         &["Bundle", "gamma_min", "Datacomp(mid)", "Datacomp(final)"],
@@ -34,10 +35,11 @@ pub fn gamma_min(args: &Args) -> Result<()> {
                 gamma_min,
                 decay_epochs: ((cfg.steps / cfg.iters_per_epoch).max(1) / 2).max(1),
             };
-            let results = run_seeds(&cfg, &seeds[..1], &format!("{bundle} gmin={gamma_min}"))?;
+            let results =
+                run_seeds(&cfg, &seeds[..1], &format!("{bundle} gmin={gamma_min}"), log)?;
             let r = &results[0];
             let curve: Vec<f32> = r.evals.iter().map(|e| e.summary.datacomp).collect();
-            eprintln!("  {} gmin={gamma_min}: {}", bundle, sparkline(&curve, 32));
+            log.status(&format!("  {} gmin={gamma_min}: {}", bundle, sparkline(&curve, 32)));
             let mid = curve.get(curve.len() / 2).copied().unwrap_or(f32::NAN);
             let fin = curve.last().copied().unwrap_or(f32::NAN);
             table.row(vec![

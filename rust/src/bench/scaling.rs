@@ -11,7 +11,9 @@ use crate::config::Algorithm;
 use crate::output::{f2, mean_std_cell, Table};
 use crate::util::{Args, Json};
 
-use super::common::{algo_config, apply_overrides, results_dir, run_seeds, scores, Setting};
+use super::common::{
+    algo_config, apply_overrides, progress_logger, results_dir, run_seeds, scores, Setting,
+};
 
 fn node_counts(args: &Args) -> Result<Vec<usize>> {
     match args.get("node-counts") {
@@ -30,6 +32,7 @@ pub fn scaling(args: &Args) -> Result<()> {
         None => Setting::Medium,
     };
     let nodes = node_counts(args)?;
+    let log = progress_logger(args)?;
     let mut datacomp = Table::new(
         format!("Table 12 analog — Datacomp ({} setting)", setting.name()),
         &header(&nodes),
@@ -53,7 +56,7 @@ pub fn scaling(args: &Args) -> Result<()> {
             cfg.tau_lr *= scale;
             let seeds = apply_overrides(&mut cfg, args)?;
             let label = format!("{} {n}n", algo.name());
-            let results = run_seeds(&cfg, &seeds, &label)?;
+            let results = run_seeds(&cfg, &seeds, &label, log)?;
             let s = scores(&results);
             row_cells.push([
                 mean_std_cell(&s.datacomp),
@@ -106,7 +109,7 @@ pub fn scaling(args: &Args) -> Result<()> {
     retrieval.write_csv(&dir.join("scaling_retrieval.csv"))?;
     invar.write_csv(&dir.join("scaling_in_variants.csv"))?;
     crate::output::write_result(&dir, "scaling", &Json::arr(json_rows))?;
-    eprintln!("wrote {}/scaling_*.csv and scaling.json", dir.display());
+    log.status(&format!("wrote {}/scaling_*.csv and scaling.json", dir.display()));
     Ok(())
 }
 
@@ -131,6 +134,7 @@ pub fn speedup(args: &Args) -> Result<()> {
         None => Setting::Medium,
     };
     let nodes = node_counts(args)?;
+    let log = progress_logger(args)?;
     let algos = [
         Algorithm::OpenClip,
         Algorithm::FastClipV1,
@@ -153,7 +157,7 @@ pub fn speedup(args: &Args) -> Result<()> {
             cfg.lr.total_iters = cfg.steps;
             cfg.lr.warmup_iters = 1;
             cfg.data.n_train = args.usize_or("n-train", 1024)?;
-            let r = run_seeds(&cfg, &[0], &format!("{} {n}n", algo.name()))?;
+            let r = run_seeds(&cfg, &[0], &format!("{} {n}n", algo.name()), log)?;
             let ms = r[0].timing.per_iter_ms();
             // per-sample normalization: global batch grows with n, so the
             // 1-node-equivalent time for the same work is total/throughput

@@ -14,7 +14,7 @@ use crate::config::Algorithm;
 use crate::output::{f2, Table};
 use crate::util::{Args, Json};
 
-use super::common::{algo_config, results_dir, Setting};
+use super::common::{algo_config, progress_logger, results_dir, Setting};
 
 /// Paper-scale model dimensions per setting (Table 2): used by
 /// `--paper-scale` to charge communication at the sizes the paper's
@@ -56,6 +56,7 @@ pub fn timing(args: &Args) -> Result<()> {
         None => vec![1, 2, 4, 8],
         Some(s) => s.split(',').map(|t| t.parse().unwrap()).collect(),
     };
+    let log = progress_logger(args)?;
 
     let mut table = Table::new(
         format!(
@@ -79,7 +80,7 @@ pub fn timing(args: &Args) -> Result<()> {
             cfg.lr.total_iters = steps;
             cfg.lr.warmup_iters = 1;
             cfg.data.n_train = 1024;
-            let r = super::common::run_seeds(&cfg, &[0], &format!("{} {n}n", algo.name()))?;
+            let r = super::common::run_seeds(&cfg, &[0], &format!("{} {n}n", algo.name()), log)?;
             let mut timing = r[0].timing;
             let mut modeled_bytes = r[0].modeled_iter_bytes;
             if paper_scale {
@@ -142,7 +143,7 @@ pub fn timing(args: &Args) -> Result<()> {
     let name = format!("timing_{}", profile.id());
     table.write_csv(&dir.join(format!("{name}.csv")))?;
     crate::output::write_result(&dir, &name, &Json::arr(json_rows))?;
-    eprintln!("wrote {}/{name}.{{csv,json}}", dir.display());
+    log.status(&format!("wrote {}/{name}.{{csv,json}}", dir.display()));
     Ok(())
 }
 

@@ -10,10 +10,11 @@ use crate::config::Algorithm;
 use crate::output::{f2, sparkline, Table};
 use crate::util::{Args, Json};
 
-use super::common::{algo_config, apply_overrides, results_dir, run_seeds, Setting};
+use super::common::{algo_config, apply_overrides, progress_logger, results_dir, run_seeds, Setting};
 
 /// Fig. 4(a) / Table 6: the xlarge accuracy curve + final table.
 pub fn xlarge(args: &Args) -> Result<()> {
+    let log = progress_logger(args)?;
     let mut table = Table::new(
         "Table 6 analog — xlarge setting (IN-analog zero-shot, final)",
         &["Algorithm", "ZeroShot(IN-analog)", "Datacomp", "Retrieval"],
@@ -23,7 +24,7 @@ pub fn xlarge(args: &Args) -> Result<()> {
         let mut cfg = algo_config(Setting::XLarge, algo);
         cfg.eval_every = args.u32_or("eval-every", (cfg.steps / 6).max(1))?;
         let seeds = apply_overrides(&mut cfg, args)?;
-        let results = run_seeds(&cfg, &seeds[..1], algo.name())?;
+        let results = run_seeds(&cfg, &seeds[..1], algo.name(), log)?;
         let r = &results[0];
         let curve: Vec<(u32, f32)> = r
             .evals
@@ -31,12 +32,12 @@ pub fn xlarge(args: &Args) -> Result<()> {
             .map(|e| (e.step, e.summary.task("zeroshot_clean").unwrap_or(f32::NAN)))
             .collect();
         let series: Vec<f32> = curve.iter().map(|(_, v)| *v).collect();
-        eprintln!(
+        log.status(&format!(
             "  {} IN-analog curve: {}  (final {:.2})",
             algo.name(),
             sparkline(&series, 32),
             series.last().copied().unwrap_or(f32::NAN)
-        );
+        ));
         table.row(vec![
             algo.name().into(),
             f2(series.last().copied().unwrap_or(f32::NAN) as f64),
@@ -69,6 +70,7 @@ pub fn xlarge(args: &Args) -> Result<()> {
 /// a larger ε bounds the 1/(ε+u) gradient scaling for well-learned
 /// examples and improves xlarge accuracy.
 pub fn epsilon(args: &Args) -> Result<()> {
+    let log = progress_logger(args)?;
     let mut table = Table::new(
         "Fig. 7 analog — effect of eps in RGCL-g (xlarge setting)",
         &["eps", "ZeroShot(IN-analog)", "Datacomp", "final loss"],
@@ -80,14 +82,14 @@ pub fn epsilon(args: &Args) -> Result<()> {
         cfg.eval_every = args.u32_or("eval-every", (cfg.steps / 6).max(1))?;
         let seeds = apply_overrides(&mut cfg, args)?;
         cfg.eps = eps; // keep after overrides
-        let results = run_seeds(&cfg, &seeds[..1], &format!("eps={eps:e}"))?;
+        let results = run_seeds(&cfg, &seeds[..1], &format!("eps={eps:e}"), log)?;
         let r = &results[0];
         let zs: Vec<f32> = r
             .evals
             .iter()
             .map(|e| e.summary.task("zeroshot_clean").unwrap_or(f32::NAN))
             .collect();
-        eprintln!("  eps={eps:e} curve: {}", sparkline(&zs, 32));
+        log.status(&format!("  eps={eps:e} curve: {}", sparkline(&zs, 32)));
         table.row(vec![
             format!("{eps:e}"),
             f2(zs.last().copied().unwrap_or(f32::NAN) as f64),

@@ -120,4 +120,7 @@ pub use fault::{
     FaultPlan, StraggleSpec,
 };
 pub use overlap::{OverlapMode, OverlapPipeline, OverlapReport};
-pub use world::{chunk_bounds, CommResult, CommStats, CommStatsSnapshot, CommWorld, WorkerComm};
+pub use world::{
+    chunk_bounds, CommResult, CommStats, CommStatsSnapshot, CommWorld, TraceEvent, TraceEventKind,
+    WorkerComm,
+};

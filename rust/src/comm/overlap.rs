@@ -159,6 +159,11 @@ pub struct OverlapPipeline {
     staged: Vec<f32>,
     filled: usize,
     next_bucket: usize,
+    /// buckets dispatched to the worker and not yet received back
+    in_flight: usize,
+    /// high-water mark of `in_flight` over the pipeline's lifetime —
+    /// the bucket-queue depth telemetry gauge (DESIGN.md §14)
+    max_depth: usize,
 }
 
 impl OverlapPipeline {
@@ -214,12 +219,22 @@ impl OverlapPipeline {
             staged: vec![0.0f32; full_len],
             filled: 0,
             next_bucket: 0,
+            in_flight: 0,
+            max_depth: 0,
         }
     }
 
     /// The number of buckets per iteration.
     pub fn n_buckets(&self) -> usize {
         self.plan.len()
+    }
+
+    /// High-water mark of the bucket queue: the most reductions that
+    /// were ever in flight (dispatched, not yet drained) at once. A
+    /// depth that keeps hitting [`Self::n_buckets`] means the worker
+    /// never kept up with the backward pass — buckets were all exposed.
+    pub fn max_queue_depth(&self) -> usize {
+        self.max_depth
     }
 
     /// Feed one finished gradient segment `[offset, offset + seg.len())`.
@@ -246,6 +261,8 @@ impl OverlapPipeline {
                 let _ = tx.send(job);
             }
             self.next_bucket += 1;
+            self.in_flight += 1;
+            self.max_depth = self.max_depth.max(self.in_flight);
         }
     }
 
@@ -303,11 +320,12 @@ impl OverlapPipeline {
         Ok(OverlapReport { busy_s, exposed_s })
     }
 
-    fn recv_done(&self) -> Result<Done> {
+    fn recv_done(&mut self) -> Result<Done> {
         let res = self
             .done_rx
             .recv()
             .map_err(|_| anyhow!("the bucket-reduction worker thread died mid-iteration"))?;
+        self.in_flight = self.in_flight.saturating_sub(1);
         // a CommError from a cancelled bucket propagates with the lost
         // ranks intact (the trainer downcasts it for the shrink decision)
         Ok(res?)
@@ -316,6 +334,7 @@ impl OverlapPipeline {
     fn reset(&mut self) {
         self.filled = 0;
         self.next_bucket = 0;
+        self.in_flight = 0;
     }
 }
 

@@ -66,9 +66,83 @@ enum Payload {
 /// Byte counters per collective, for reporting and model cross-checks.
 /// All updates and reads go through one internal mutex — see the module
 /// docs for the snapshot-consistency guarantee.
+///
+/// Beyond the byte counters, the stats block carries the run's
+/// **fault-event log** ([`TraceEvent`]): straggle sleeps, watchdog
+/// expiries, rank losses, shrinks and resumes, recorded here because
+/// the stats `Arc` is the one structure shared across both comm worlds
+/// and *every incarnation* of an elastic run — events recorded before a
+/// shrink survive it. The trainer drains the log into the `--trace-out`
+/// JSONL sink ([`CommStats::take_events`]).
 #[derive(Debug, Default)]
 pub struct CommStats {
     inner: Mutex<CommStatsSnapshot>,
+    events: Mutex<EventLog>,
+    /// last iteration each rank reported via [`CommStats::set_rank_iter`]
+    /// — stamps comm-layer events (which have no iteration context of
+    /// their own) with the iteration the rank was in.
+    cur_iter: Mutex<Vec<u64>>,
+}
+
+/// What kind of fault-path occurrence a [`TraceEvent`] records
+/// (DESIGN.md §13/§14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEventKind {
+    /// An injected `--straggle` sleep at a collective entry.
+    Straggle,
+    /// A watchdog expiry on a blocking wait (`CommError::Watchdog`).
+    Watchdog,
+    /// A rank observed as lost (cancellation with a declared loss).
+    RankLost,
+    /// A live world shrink K→K′ after a loss.
+    Shrink,
+    /// A worker (re)starting from a snapshot — cold resume or
+    /// post-shrink rollback.
+    Resume,
+}
+
+impl TraceEventKind {
+    /// Stable identifier used in the JSONL `"kind"` field.
+    pub fn id(&self) -> &'static str {
+        match self {
+            TraceEventKind::Straggle => "straggle",
+            TraceEventKind::Watchdog => "watchdog",
+            TraceEventKind::RankLost => "rank_lost",
+            TraceEventKind::Shrink => "shrink",
+            TraceEventKind::Resume => "resume",
+        }
+    }
+}
+
+/// One fault-path event: what happened, to which rank, at which
+/// iteration (per [`CommStats::set_rank_iter`], 0 if never set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// What happened.
+    pub kind: TraceEventKind,
+    /// The rank it happened to (for `Shrink`/`Resume`: the reporting
+    /// rank in the NEW world).
+    pub rank: usize,
+    /// The iteration the rank last reported before the event.
+    pub iter: u64,
+    /// Kind-specific payload: straggle/watchdog duration in µs,
+    /// `Shrink`'s previous K, `Resume`'s snapshot step.
+    pub a: u64,
+    /// Kind-specific payload: `Shrink`'s new K′ (0 otherwise).
+    pub b: u64,
+}
+
+/// Bounded event buffer: a runaway straggle configuration must not grow
+/// memory without bound, so past [`EventLog::CAP`] events are counted
+/// but dropped.
+#[derive(Debug, Default)]
+struct EventLog {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+impl EventLog {
+    const CAP: usize = 65_536;
 }
 
 /// A point-in-time copy of [`CommStats`] — consistent by construction:
@@ -160,6 +234,48 @@ impl CommStats {
     /// Charge the sharded strategy's updated-parameter all-gather bytes.
     pub fn add_param_wire(&self, bytes: u64) {
         self.inner.lock().unwrap().param_wire_bytes += bytes;
+    }
+
+    /// Report that `rank` entered iteration `iter`, so comm-layer events
+    /// recorded from inside collectives carry the right iteration tag.
+    /// Ranks beyond the initial world (never: worlds only shrink) grow
+    /// the table on demand.
+    pub fn set_rank_iter(&self, rank: usize, iter: u64) {
+        let mut cur = self.cur_iter.lock().unwrap();
+        if cur.len() <= rank {
+            cur.resize(rank + 1, 0);
+        }
+        cur[rank] = iter;
+    }
+
+    /// Record one fault-path event for `rank`, stamped with the rank's
+    /// last reported iteration. `a`/`b` are kind-specific (see
+    /// [`TraceEvent`]). Bounded: past the internal cap (65536 events)
+    /// the log only counts drops.
+    pub fn record_event(&self, kind: TraceEventKind, rank: usize, a: u64, b: u64) {
+        let iter = self.cur_iter.lock().unwrap().get(rank).copied().unwrap_or(0);
+        let mut log = self.events.lock().unwrap();
+        if log.events.len() >= EventLog::CAP {
+            log.dropped += 1;
+            return;
+        }
+        log.events.push(TraceEvent { kind, rank, iter, a, b });
+    }
+
+    /// Record one injected straggle sleep of `dur` on `rank`.
+    pub fn record_straggle(&self, rank: usize, dur: Duration) {
+        self.record_event(TraceEventKind::Straggle, rank, dur.as_micros() as u64, 0);
+    }
+
+    /// Take every recorded event, leaving the log empty (the trainer
+    /// drains into the JSONL sink at the end of the run).
+    pub fn take_events(&self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.events.lock().unwrap().events)
+    }
+
+    /// How many events the bounded log dropped (see [`Self::record_event`]).
+    pub fn events_dropped(&self) -> u64 {
+        self.events.lock().unwrap().dropped
     }
 
     /// Charge one iteration's measured overlap split: `hidden_us` of
@@ -309,15 +425,24 @@ impl WorkerComm {
         let skew = w.straggle[self.rank];
         if w.k > 1 && skew > Duration::ZERO {
             std::thread::sleep(skew);
+            // telemetry after the sleep: clock-only, outside numerics
+            w.stats.record_straggle(self.rank, skew);
         }
         Ok(())
     }
 
     /// Block until every rank reaches the same barrier call — or until
     /// the world is cancelled / the watchdog expires, in which case every
-    /// waiter returns `Err` instead of hanging (DESIGN.md §13).
+    /// waiter returns `Err` instead of hanging (DESIGN.md §13). A
+    /// watchdog expiry is recorded in the shared event log before it is
+    /// returned, so the trail names the rank whose wait timed out.
     pub fn barrier(&self) -> CommResult<()> {
-        self.world.barrier.wait(&self.world.token, self.world.watchdog)
+        let res = self.world.barrier.wait(&self.world.token, self.world.watchdog);
+        if matches!(res, Err(CommError::Watchdog)) {
+            let us = self.world.watchdog.map_or(0, |d| d.as_micros() as u64);
+            self.world.stats.record_event(TraceEventKind::Watchdog, self.rank, us, 0);
+        }
+        res
     }
 
     /// Bounds `[lo, hi)` of the chunk this rank owns when an `n`-element
@@ -578,6 +703,44 @@ mod tests {
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn event_log_records_tags_and_drains() {
+        let stats = CommStats::default();
+        stats.set_rank_iter(1, 7);
+        stats.record_straggle(1, Duration::from_micros(250));
+        stats.record_event(TraceEventKind::Shrink, 0, 4, 2);
+        let evs = stats.take_events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, TraceEventKind::Straggle);
+        assert_eq!((evs[0].rank, evs[0].iter, evs[0].a), (1, 7, 250));
+        assert_eq!(evs[1].kind, TraceEventKind::Shrink);
+        assert_eq!((evs[1].iter, evs[1].a, evs[1].b), (0, 4, 2));
+        assert!(stats.take_events().is_empty(), "take drains the log");
+        assert_eq!(stats.events_dropped(), 0);
+    }
+
+    #[test]
+    fn straggle_sleep_is_recorded_per_collective() {
+        let stats = Arc::new(CommStats::default());
+        let token = Arc::new(CancellationToken::new());
+        let mut straggle = vec![Duration::ZERO; 2];
+        straggle[1] = Duration::from_micros(10);
+        let world = CommWorld::with_faults(2, Arc::clone(&stats), token, None, straggle);
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let h = world.handle(r);
+                std::thread::spawn(move || h.all_reduce_sum(&mut [1.0f32]).unwrap())
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let evs = stats.take_events();
+        assert!(!evs.is_empty(), "the straggler must log its sleeps");
+        assert!(evs.iter().all(|e| e.kind == TraceEventKind::Straggle && e.rank == 1));
+        assert!(evs.iter().all(|e| e.a == 10));
     }
 
     #[test]

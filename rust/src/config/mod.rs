@@ -381,6 +381,22 @@ pub struct TrainConfig {
     /// watchdog for blocking collectives, in milliseconds (0 = default:
     /// 60 s whenever fault injection is active, unbounded otherwise)
     pub watchdog_ms: u64,
+    /// structured telemetry (DESIGN.md §14): write one schema-versioned
+    /// JSONL event per line to this file (spans, iteration timing,
+    /// fault events, metrics); None = telemetry off. Cannot perturb the
+    /// numerics — telemetry-on runs are bitwise-identical to
+    /// telemetry-off (pinned in `tests/telemetry.rs`).
+    pub trace_out: Option<String>,
+    /// heartbeat period: every N iterations rank 0 logs step/loss/τ and
+    /// (with `trace_out`) emits a heartbeat event; 0 = no heartbeat
+    pub log_every: u32,
+    /// suppress progress output (run headers, per-seed lines, shrink
+    /// notices); result tables and errors still print
+    pub quiet: bool,
+    /// progress output format: "text" (default, the pre-telemetry
+    /// streams byte-for-byte) or "json" (one compact
+    /// `{"v":1,"type":"log",...}` object per line on the same stream)
+    pub log_format: String,
 }
 
 impl TrainConfig {
@@ -457,6 +473,10 @@ impl TrainConfig {
             fail: None,
             straggle: None,
             watchdog_ms: 0,
+            trace_out: None,
+            log_every: 0,
+            quiet: false,
+            log_format: "text".to_string(),
         };
         let dir: String = artifact_dir.into();
         cfg.set_bundle(&dir);
@@ -556,6 +576,13 @@ impl TrainConfig {
             self.straggle.as_deref(),
             self.watchdog_ms,
         )?;
+        // the progress-output switch (DESIGN.md §14): reject typos here
+        // so every entry point (CLI, config file, exp harness) names
+        // the accepted formats instead of silently printing text
+        crate::telemetry::Logger::from_format(self.quiet, &self.log_format)?;
+        if let Some(t) = &self.trace_out {
+            ensure!(!t.is_empty(), "trace_out must name a file");
+        }
         Ok(())
     }
 
@@ -580,6 +607,7 @@ impl TrainConfig {
             "ckpt_dir", "ckpt_every", "keep_last", "resume",
             "backend", "preset", "n_workers", "local_batch", "kernel_threads",
             "precision", "fail", "straggle", "watchdog_ms",
+            "trace_out", "log_every", "quiet", "log_format",
             "optimizer.kind", "optimizer.beta1", "optimizer.beta2",
             "optimizer.eps", "optimizer.weight_decay", "optimizer.momentum",
             "lr.peak", "lr.min", "lr.warmup_iters", "lr.total_iters",
@@ -638,6 +666,12 @@ impl TrainConfig {
             cfg.straggle = Some(v.to_string());
         }
         cfg.watchdog_ms = kv.parse_or("watchdog_ms", cfg.watchdog_ms)?;
+        if let Some(v) = kv.get("trace_out") {
+            cfg.trace_out = Some(v.to_string());
+        }
+        cfg.log_every = kv.parse_or("log_every", cfg.log_every)?;
+        cfg.quiet = kv.parse_or("quiet", cfg.quiet)?;
+        cfg.log_format = kv.str_or("log_format", &cfg.log_format);
 
         if let Some(kind) = kv.get("optimizer.kind") {
             cfg.optimizer.kind = OptimizerKind::from_id(kind)?;
@@ -725,6 +759,18 @@ impl TrainConfig {
         }
         if self.watchdog_ms > 0 {
             let _ = writeln!(s, "watchdog_ms = {}", self.watchdog_ms);
+        }
+        if let Some(t) = &self.trace_out {
+            let _ = writeln!(s, "trace_out = \"{t}\"");
+        }
+        if self.log_every > 0 {
+            let _ = writeln!(s, "log_every = {}", self.log_every);
+        }
+        if self.quiet {
+            let _ = writeln!(s, "quiet = true");
+        }
+        if self.log_format != "text" {
+            let _ = writeln!(s, "log_format = \"{}\"", self.log_format);
         }
         let _ = writeln!(s, "\n[optimizer]");
         let _ = writeln!(s, "kind = \"{}\"", self.optimizer.kind.id());
@@ -874,6 +920,33 @@ mod tests {
         bad.straggle = Some("rank=0".into());
         let err = bad.validate().unwrap_err();
         assert!(format!("{err:#}").contains("rank=R:ms=M"), "{err:#}");
+    }
+
+    #[test]
+    fn telemetry_fields_roundtrip_and_validate() {
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV3);
+        cfg.trace_out = Some("traces/run1.jsonl".into());
+        cfg.log_every = 10;
+        cfg.quiet = true;
+        cfg.log_format = "json".into();
+        cfg.validate().unwrap();
+        let kv = crate::util::KvFile::parse(&cfg.to_file_string()).unwrap();
+        let back = TrainConfig::from_kv(&kv).unwrap();
+        assert_eq!(back.trace_out.as_deref(), Some("traces/run1.jsonl"));
+        assert_eq!(back.log_every, 10);
+        assert!(back.quiet);
+        assert_eq!(back.log_format, "json");
+        // defaults are omitted from the file format entirely
+        let text = TrainConfig::new("x", Algorithm::FastClipV3).to_file_string();
+        assert!(!text.contains("trace_out") && !text.contains("log_every"));
+        assert!(!text.contains("quiet") && !text.contains("log_format"));
+        // unknown formats and empty trace paths are config errors
+        let mut bad = TrainConfig::new("x", Algorithm::FastClipV3);
+        bad.log_format = "yaml".into();
+        assert!(bad.validate().is_err());
+        let mut bad = TrainConfig::new("x", Algorithm::FastClipV3);
+        bad.trace_out = Some(String::new());
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -60,13 +60,15 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::ckpt::{self, CkptMeta, CkptRunStats};
 use crate::comm::{
     reduction, BucketPlan, CancellationToken, CommError, CommStats, CommWorld, CostModel,
-    FailSpec, FaultPlan, OverlapPipeline, ReduceAlgo, ReduceStrategy, WorkerComm,
+    FailSpec, FaultPlan, OverlapPipeline, ReduceAlgo, ReduceStrategy, TraceEventKind, WorkerComm,
 };
 use crate::config::{OptimizerKind, TrainConfig};
 use crate::data::{Dataset, ShardLoader};
 use crate::eval::{evaluate, EvalSummary};
 use crate::kernels::Precision;
 use crate::runtime::{ComputeBackend, Manifest, TauGrads, TauInput};
+use crate::telemetry::{sink as tsink, Logger, MetricsRegistry, SpanRecorder, TraceSink};
+use crate::util::Json;
 
 use super::state::UState;
 use super::temperature::TauState;
@@ -232,6 +234,31 @@ impl Trainer {
     pub fn run(&self) -> Result<TrainResult> {
         let t0 = Instant::now();
         let k = self.manifest.k_workers;
+        // telemetry (DESIGN.md §14): one shared JSONL sink, one shared
+        // span epoch (keeps per-rank start_us monotone across shrink
+        // incarnations), one progress logger. The `meta` line is written
+        // here, before any worker spawns, so it is always line 1.
+        let log = Logger::from_format(self.cfg.quiet, &self.cfg.log_format)?;
+        let sink = match &self.cfg.trace_out {
+            Some(p) => Some(Arc::new(TraceSink::create(p)?)),
+            None => None,
+        };
+        if let Some(s) = &sink {
+            s.emit(&tsink::event(
+                "meta",
+                vec![
+                    ("algo", Json::str(self.cfg.algorithm.id())),
+                    ("world", Json::num(k as f64)),
+                    ("steps", Json::num(self.cfg.steps)),
+                    ("precision", Json::str(self.cfg.precision.id())),
+                    ("reduce", Json::str(self.cfg.reduce.id())),
+                    ("overlap", Json::str(self.cfg.overlap.id())),
+                    ("preset", Json::str(self.cfg.preset.as_str())),
+                    ("seed", Json::num(self.cfg.seed as f64)),
+                ],
+            ));
+        }
+        let span_epoch = Instant::now();
         // two sibling collective worlds over shared counters: the
         // training world for the lockstep iteration, and a dedicated
         // world for the overlap pipeline's bucket reductions so the
@@ -265,6 +292,7 @@ impl Trainer {
             let fault = self.fault.clone();
             let shrink = Arc::clone(&shrink);
             let stats = Arc::clone(&stats);
+            let sink = sink.clone();
             joins.push(
                 std::thread::Builder::new()
                     .name(format!("worker-{rank}"))
@@ -279,6 +307,9 @@ impl Trainer {
                             fault,
                             shrink,
                             stats,
+                            sink,
+                            log,
+                            span_epoch,
                         )
                     })
                     .expect("spawn worker"),
@@ -305,6 +336,32 @@ impl Trainer {
         let out = lead.ok_or_else(|| anyhow!("no worker finished as rank 0"))?;
         let k_final = out.world;
         let stats = world.stats.snapshot();
+
+        // telemetry epilogue (workers already joined): drain the
+        // comm-layer fault events into `"event"` lines, then write one
+        // exact `"metrics"` line — the registry absorbs the same
+        // CommStats/TimeBreakdown totals TrainResult reports, so `trace
+        // summary` reproduces the in-process breakdown exactly.
+        if let Some(s) = &sink {
+            let events = world.stats.take_events();
+            let reg = MetricsRegistry::new();
+            reg.absorb_comm(&stats);
+            reg.absorb_timing(&out.timing);
+            reg.gauge_set("overlap.max_queue_depth", out.max_queue_depth as f64);
+            reg.counter_add("events.dropped", world.stats.events_dropped());
+            for e in &events {
+                reg.counter_add(&format!("events.{}", e.kind.id()), 1);
+                s.emit(&tsink::fault_event(e));
+            }
+            let mut ev = tsink::event("metrics", vec![]);
+            if let Json::Obj(map) = reg.to_json() {
+                for (key, val) in map {
+                    ev.set(&key, val);
+                }
+            }
+            s.emit(&ev);
+            s.flush();
+        }
 
         Ok(TrainResult {
             algorithm: self.cfg.algorithm.name(),
@@ -352,6 +409,9 @@ struct WorkerOutput {
     reduce_id: &'static str,
     overlap: bool,
     n_buckets: usize,
+    /// high-water mark of the overlap pipeline's bucket queue (0 when
+    /// serial) — reported as the `overlap.max_queue_depth` gauge
+    max_queue_depth: usize,
     final_tau: f32,
     params: Vec<f32>,
     ckpt: CkptRunStats,
@@ -423,6 +483,7 @@ impl ShrinkCell {
         fault: &FaultPlan,
         stats: &Arc<CommStats>,
         ckpt_dir: Option<&str>,
+        log: Logger,
     ) -> Result<Arc<ShrinkPlan>> {
         let survivors: Vec<usize> = (0..prev_k).filter(|r| !lost.contains(r)).collect();
         // a shrink implies an injected fault, so watchdog() is Some; the
@@ -460,10 +521,17 @@ impl ShrinkCell {
                 );
                 let reduce =
                     CommWorld::with_faults(k2, Arc::clone(stats), token, fault.watchdog(), skew);
-                eprintln!(
+                // one survivor builds the plan, so these record exactly
+                // once per shrink; the events surface in the JSONL trail
+                // at the end of the run (DESIGN.md §14)
+                for &l in lost {
+                    stats.record_event(TraceEventKind::RankLost, l, 0, 0);
+                }
+                stats.record_event(TraceEventKind::Shrink, rank, prev_k as u64, k2 as u64);
+                log.status(&format!(
                     "rank(s) {lost:?} lost: shrinking world {prev_k} -> {k2}, rolling back to {}",
                     dir.display()
-                );
+                ));
                 Ok(Arc::new(ShrinkPlan {
                     train,
                     reduce,
@@ -507,6 +575,9 @@ fn worker_thread(
     fault: FaultPlan,
     shrink: Arc<ShrinkCell>,
     stats: Arc<CommStats>,
+    sink: Option<Arc<TraceSink>>,
+    log: Logger,
+    span_epoch: Instant,
 ) -> Result<Option<WorkerOutput>> {
     let mut rank = orig_rank;
     let mut inc_cfg = (*cfg).clone();
@@ -525,6 +596,9 @@ fn worker_thread(
             &manifest,
             fault.fail,
             &mut acc,
+            &sink,
+            log,
+            span_epoch,
         );
         match attempt {
             Ok(None) => return Ok(None),
@@ -540,6 +614,11 @@ fn worker_thread(
                     Some(CommError::RanksLost(l)) => l.clone(),
                     _ => return Err(e),
                 };
+                // the trail must survive the crash: push buffered trace
+                // lines to the OS before heading into the rendezvous
+                if let Some(s) = &sink {
+                    s.flush();
+                }
                 let plan = shrink
                     .rendezvous(
                         rank,
@@ -548,6 +627,7 @@ fn worker_thread(
                         &fault,
                         &stats,
                         inc_cfg.ckpt_dir.as_deref(),
+                        log,
                     )
                     .with_context(|| format!("after losing rank(s) {lost:?}"))?;
                 rank = plan.new_rank(rank).expect("survivor has a new rank");
@@ -571,10 +651,17 @@ fn worker_loop(
     manifest: &Manifest,
     fail: Option<FailSpec>,
     acc: &mut Accum,
+    sink: &Option<Arc<TraceSink>>,
+    log: Logger,
+    span_epoch: Instant,
 ) -> Result<Option<WorkerOutput>> {
     // the rank in THIS incarnation's world; `orig_rank` (the thread's
     // rank at spawn) only matters for matching the injected fail spec
     let rank = comm.rank();
+    // per-rank span recorder (DESIGN.md §14): the shared epoch keeps
+    // start_us monotone across incarnations; disabled (no --trace-out)
+    // it never reads the clock, so telemetry-off runs are untouched
+    let mut rec = SpanRecorder::with_epoch(rank, sink.is_some(), span_epoch);
     let variant = cfg.algorithm.variant();
     // `cfg.backend` may still be Auto here: create_backend resolves it
     // against the manifest kind, which `TrainConfig::load_manifest`
@@ -686,12 +773,12 @@ fn worker_loop(
                 cfg.steps
             );
             if rank == 0 {
-                eprintln!(
+                log.status(&format!(
                     "resumed from {} at step {} (checkpoint world {}, run world {k})",
                     ck.dir().display(),
                     restored.start_step,
                     ck.meta().world
-                );
+                ));
             }
             Ok(restored)
         })();
@@ -705,6 +792,9 @@ fn worker_loop(
         ckpt_sync(&comm, imported, "importing optimizer state")?;
         acc.ckpt.restore_s += t0.elapsed().as_secs_f64();
         acc.ckpt.resumed_at = Some(start_step);
+        if rank == 0 {
+            comm.stats().record_event(TraceEventKind::Resume, 0, start_step as u64, 0);
+        }
         // a live shrink replays [start_step, crash): drop the rolled-back
         // records so the final history holds every step exactly once
         acc.history.retain(|r| r.step < start_step);
@@ -728,6 +818,12 @@ fn worker_loop(
                 return Ok(None);
             }
         }
+        // tag the comm layer with this rank's iteration so straggle and
+        // watchdog events it records carry the right `iter`; open the
+        // root span the phase spans below nest under (DESIGN.md §14)
+        comm.stats().set_rank_iter(rank, t as u64);
+        let iter_tok = rec.begin("iter", t);
+        let timing_before = acc.timing;
         let epoch = t / cfg.iters_per_epoch.max(1);
         let gamma = if cfg.algorithm.forces_gamma_one() { 1.0 } else { cfg.gamma.value(epoch) };
         let lr = cfg.lr.value(t);
@@ -744,9 +840,11 @@ fn worker_loop(
         // under bf16 the embeddings are already bf16-representable, so
         // the half-width gather is lossless — only the payload accounting
         // changes (DESIGN.md §12)
-        let (e1, e2) = rt.encode(&params, &images, &texts)?;
+        let (e1, e2) = crate::span!(rec, "encode", t, rt.encode(&params, &images, &texts))?;
+        let gather_tok = rec.begin("gather", t);
         let e1g = comm.all_gather_px(&e1, wire)?;
         let e2g = comm.all_gather_px(&e2, wire)?;
+        rec.end(gather_tok);
 
         // 3. phase_g: Eq. (1) u update ---------------------------- (compute)
         let t_other = Instant::now();
@@ -754,13 +852,18 @@ fn worker_loop(
         let (tau1_rows, tau2_rows) = tau.rows(&batch.local_positions);
         others_s += t_other.elapsed().as_secs_f64();
         let offset = rank * bl;
-        let (_g1, _g2, u1n, u2n) =
-            rt.phase_g(&e1g, &e2g, offset, &u1, &u2, &tau1_rows, &tau2_rows, gamma)?;
+        let (_g1, _g2, u1n, u2n) = crate::span!(
+            rec,
+            "phase_g",
+            t,
+            rt.phase_g(&e1g, &e2g, offset, &u1, &u2, &tau1_rows, &tau2_rows, gamma)
+        )?;
         let t_other = Instant::now();
         ustate.scatter(&batch.local_positions, &u1n, &u2n);
         others_s += t_other.elapsed().as_secs_f64();
 
         // 4. gather the scalar state ---------------------------------- (comm)
+        let gather_tok = rec.begin("gather", t);
         let u1g = comm.all_gather(&u1n)?;
         let u2g = comm.all_gather(&u2n)?;
         let tau_input_vecs; // keeps gathered τ alive across the step call
@@ -772,6 +875,7 @@ fn worker_loop(
         } else {
             TauInput::Global(tau.global_tau())
         };
+        rec.end(gather_tok);
 
         // 5+6. gradient step; reduce scalars; reduce gradient + apply
         // the optimizer. Pipelined mode reduces buckets in the background
@@ -782,29 +886,37 @@ fn worker_loop(
         // parameter all-gather — so they are bitwise identical.
         let mut opt_s = 0.0f64;
         let (loss, tau_grad, tau_grads, overlap_rep) = if let Some(pipe) = pipeline.as_mut() {
+            let step_tok = rec.begin("step", t);
             let emit = rt.step_emit(
                 variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, offset,
                 cfg.eps, cfg.rho, tau_input, &mut |off, seg| pipe.emit(off, seg),
             )?;
             let (loss, tau_grad) = reduce_step_scalars(&comm, emit.loss, &emit.tau)?;
+            rec.end(step_tok);
+            let reduce_tok = rec.begin("reduce", t);
             let rep = pipe.finish(&comm, &mut params, &mut |pslice, gslice| {
                 let t_opt = Instant::now();
                 optimizer.step(pslice, gslice, lr);
                 opt_s += t_opt.elapsed().as_secs_f64();
             })?;
+            rec.end(reduce_tok);
             (loss, tau_grad, emit.tau, Some(rep))
         } else {
+            let step_tok = rec.begin("step", t);
             let out = rt.step(
                 variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, offset,
                 cfg.eps, cfg.rho, tau_input,
             )?;
             let (loss, tau_grad) = reduce_step_scalars(&comm, out.loss, &out.tau)?;
+            rec.end(step_tok);
             let mut grad = out.grad;
+            let reduce_tok = rec.begin("reduce", t);
             reducer.reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |pslice, gslice| {
                 let t_opt = Instant::now();
                 optimizer.step(pslice, gslice, lr);
                 opt_s += t_opt.elapsed().as_secs_f64();
             })?;
+            rec.end(reduce_tok);
             (loss, tau_grad, out.tau, None)
         };
         others_s += opt_s;
@@ -836,6 +948,7 @@ fn worker_loop(
             }
             None => charge_iteration_with(&mut acc.timing, &cost, &volumes, step_compute, algo),
         }
+        rec.end(iter_tok);
 
         // every rank records history (the values are replicated — loss is
         // all-reduced, schedules are deterministic): after a shrink ANY
@@ -846,7 +959,7 @@ fn worker_loop(
         if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 && t + 1 < cfg.steps {
             comm.barrier()?;
             if rank == 0 {
-                let summary = evaluate(&mut *rt, dataset, &params)?;
+                let summary = crate::span!(rec, "eval", t, evaluate(&mut *rt, dataset, &params))?;
                 acc.evals.push(EvalRecord { step: t + 1, summary });
             }
             comm.barrier()?;
@@ -859,7 +972,9 @@ fn worker_loop(
         // synchronization point): an I/O error — disk full, permissions —
         // on ANY rank surfaces as an error on EVERY rank, instead of one
         // rank exiting early and deadlocking its peers on a barrier.
-        if cfg.ckpt_every > 0 && (t + 1) % cfg.ckpt_every == 0 {
+        let wrote_snapshot = cfg.ckpt_every > 0 && (t + 1) % cfg.ckpt_every == 0;
+        if wrote_snapshot {
+            let ckpt_tok = rec.begin("ckpt", t);
             let t0 = Instant::now();
             let root_s = cfg.ckpt_dir.as_deref().expect("validated: ckpt_every requires ckpt_dir");
             let root = Path::new(root_s);
@@ -892,22 +1007,93 @@ fn worker_loop(
             ckpt_sync(&comm, finalized, "finalizing the snapshot")?;
             acc.ckpt.snapshots += 1;
             acc.ckpt.write_s += t0.elapsed().as_secs_f64();
+            rec.end(ckpt_tok);
+        }
+
+        // telemetry drain — after ALL the iteration's bookkeeping, off
+        // the compute/comm path (DESIGN.md §14): this rank's spans, plus
+        // (rank 0 only) the exact per-iteration timing deltas and the
+        // `--log-every` heartbeat
+        let heartbeat = cfg.log_every > 0 && (t + 1) % cfg.log_every == 0 && rank == 0;
+        if heartbeat {
+            log.line(&format!(
+                "step {:>6}/{} loss {:.4} lr {:.5} tau {:.4}",
+                t + 1,
+                cfg.steps,
+                loss,
+                lr,
+                tau.mean_tau()
+            ));
+        }
+        if let Some(s) = sink {
+            let mut evs = tsink::span_events(rank, &rec.drain());
+            if rank == 0 {
+                let d = |cur: f64, before: f64| Json::num(cur - before);
+                evs.push(tsink::event(
+                    "iter",
+                    vec![
+                        ("rank", Json::num(0)),
+                        ("iter", Json::num(t)),
+                        ("loss", Json::num(loss as f64)),
+                        ("compute_s", d(acc.timing.compute_s, timing_before.compute_s)),
+                        ("comm_total_s", d(acc.timing.comm_total_s, timing_before.comm_total_s)),
+                        (
+                            "comm_overlap_s",
+                            d(acc.timing.comm_overlap_s, timing_before.comm_overlap_s),
+                        ),
+                        ("comm_pure_s", d(acc.timing.comm_pure_s, timing_before.comm_pure_s)),
+                        ("others_s", d(acc.timing.others_s, timing_before.others_s)),
+                        (
+                            "overlap_hidden_s",
+                            d(acc.timing.overlap_hidden_s, timing_before.overlap_hidden_s),
+                        ),
+                        (
+                            "overlap_exposed_s",
+                            d(acc.timing.overlap_exposed_s, timing_before.overlap_exposed_s),
+                        ),
+                    ],
+                ));
+            }
+            if heartbeat {
+                evs.push(tsink::event(
+                    "heartbeat",
+                    vec![
+                        ("rank", Json::num(0)),
+                        ("iter", Json::num(t)),
+                        ("t_us", Json::num(s.now_us() as f64)),
+                        ("loss", Json::num(loss as f64)),
+                        ("lr", Json::num(lr as f64)),
+                        ("tau", Json::num(tau.mean_tau() as f64)),
+                    ],
+                ));
+            }
+            s.emit_all(&evs);
+            // snapshot boundaries double as trace durability points
+            if wrote_snapshot {
+                s.flush();
+            }
         }
     }
 
     // final evaluation on rank 0
     comm.barrier()?;
     let final_eval = if rank == 0 {
-        let summary = evaluate(&mut *rt, dataset, &params)?;
+        let summary =
+            crate::span!(rec, "eval", cfg.steps, evaluate(&mut *rt, dataset, &params))?;
         acc.evals.push(EvalRecord { step: cfg.steps, summary: summary.clone() });
         Some(summary)
     } else {
         None
     };
     comm.barrier()?;
+    if let Some(s) = sink {
+        s.emit_all(&tsink::span_events(rank, &rec.drain()));
+        s.flush();
+    }
 
     // close the job channel and join the reduction worker before the
     // output leaves the thread
+    let max_queue_depth = pipeline.as_ref().map_or(0, |p| p.max_queue_depth());
     drop(pipeline);
 
     Ok(Some(WorkerOutput {
@@ -923,6 +1109,7 @@ fn worker_loop(
         reduce_id: algo.id(),
         overlap: overlap_on,
         n_buckets,
+        max_queue_depth,
         final_tau: tau.mean_tau(),
         params,
         ckpt: std::mem::take(&mut acc.ckpt),

@@ -17,7 +17,8 @@
 //! Entry points: [`coordinator::Trainer`] for training (with periodic
 //! snapshots and `--resume` through [`ckpt`], DESIGN.md §9; overlapped
 //! bucketed gradient reduction via `--overlap`, DESIGN.md §11; bf16
-//! storage + half-width gradient wire via `--precision`, DESIGN.md §12),
+//! storage + half-width gradient wire via `--precision`, DESIGN.md §12;
+//! structured tracing via `--trace-out` + [`telemetry`], DESIGN.md §14),
 //! [`bench`] for the paper's tables/figures, the `fastclip` CLI for both.
 
 // The documented public surface (comm, ckpt, kernels, runtime) is gated
@@ -36,6 +37,7 @@ pub mod kernels;
 pub mod optim;
 pub mod output;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 
 pub use config::TrainConfig;

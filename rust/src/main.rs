@@ -7,6 +7,7 @@
 //!   comm-bench  α–β cost-model sweep over node counts
 //!   inspect     print an artifact bundle's manifest summary
 //!   ckpt        inspect/verify training checkpoints (DESIGN.md §9)
+//!   trace       analyze a `--trace-out` JSONL trace (DESIGN.md §14)
 //!
 //! Examples:
 //!   fastclip train --algo fastclip-v3 --bundle artifacts/tiny_k2_b8 --steps 100
@@ -46,6 +47,7 @@ fn run() -> Result<()> {
         "comm-bench" => bench::timing::comm_bench(&args),
         "inspect" => inspect(&args),
         "ckpt" => ckpt_cmd(&args),
+        "trace" => fastclip::telemetry::trace::trace_cmd(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -86,12 +88,18 @@ fn print_help() {
                                 every collective (numerics unchanged)\n\
              --watchdog-ms N    collective watchdog (default 60000 when\n\
                                 fault injection is active, unbounded otherwise)\n\
+             --trace-out <file> write a per-rank JSONL trace (spans, events,\n\
+                                metrics — DESIGN.md §14; analyze with `trace`)\n\
+             --log-every N      heartbeat every N steps (iter/loss/lr/tau)\n\
+             --quiet            suppress progress output (results still print)\n\
+             --log-format <f>   text|json progress lines (default text)\n\
              --save <file>      save final parameters (f32 LE)\n\
            eval        evaluate parameters: --bundle <dir> --params <file>\n\
            exp <id>    regenerate a paper table/figure (exp list to enumerate)\n\
            comm-bench  cost-model sweep: --profile <net> --n-params P\n\
            inspect     <bundle-dir>: print manifest summary\n\
-           ckpt        inspect <dir> | verify <dir>  (a step dir or a ckpt root)\n",
+           ckpt        inspect <dir> | verify <dir>  (a step dir or a ckpt root)\n\
+           trace       summary <f> | verify <f> | diff <a> <b>  (JSONL traces)\n",
         algos = Algorithm::all().map(|a| a.id()).join("|"),
         nets = "infiniband|slingshot1|slingshot2",
     );
@@ -168,6 +176,13 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
         cfg.straggle = Some(sg.to_string());
     }
     cfg.watchdog_ms = args.u64_or("watchdog-ms", cfg.watchdog_ms)?;
+    // telemetry (DESIGN.md §14): JSONL trace, heartbeat, progress channel
+    if let Some(t) = args.get("trace-out") {
+        cfg.trace_out = Some(t.to_string());
+    }
+    cfg.log_every = args.u32_or("log-every", cfg.log_every)?;
+    cfg.quiet = cfg.quiet || args.flag("quiet");
+    cfg.log_format = args.str_or("log-format", &cfg.log_format);
     let epochs = (cfg.steps / cfg.iters_per_epoch.max(1)).max(1);
     if let Some(g) = args.get("gamma-const") {
         cfg.gamma = GammaSchedule::Constant { gamma: g.parse().map_err(anyhow::Error::msg)? };
@@ -183,9 +198,10 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
 
 fn train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
+    let log = fastclip::telemetry::Logger::from_format(cfg.quiet, &cfg.log_format)?;
     let trainer = Trainer::new(cfg.clone())?;
     let m = trainer.manifest();
-    eprintln!(
+    log.status(&format!(
         "training {} via the {} backend ({}) for {} steps (K={} workers, modeled {}x{} {})",
         cfg.algorithm.name(),
         cfg.resolved_backend().id(),
@@ -195,11 +211,11 @@ fn train(args: &Args) -> Result<()> {
         cfg.nodes,
         cfg.gpus_per_node,
         cfg.network.id(),
-    );
+    ));
     let result = trainer.run()?;
 
     let losses: Vec<f32> = result.history.iter().map(|h| h.loss).collect();
-    println!("loss curve: {}", sparkline(&losses, 48));
+    log.line(&format!("loss curve: {}", sparkline(&losses, 48)));
     let mut t = Table::new("Run summary", &["metric", "value"]);
     t.row(vec!["algorithm".into(), result.algorithm.into()]);
     t.row(vec!["final loss (tail-8 mean)".into(), format!("{:.4}", result.tail_loss(8))]);
@@ -277,7 +293,7 @@ fn train(args: &Args) -> Result<()> {
         let bytes: Vec<u8> =
             result.final_params.iter().flat_map(|v| v.to_le_bytes()).collect();
         std::fs::write(path, bytes).with_context(|| format!("saving {path}"))?;
-        eprintln!("saved {} params to {path}", result.final_params.len());
+        log.status(&format!("saved {} params to {path}", result.final_params.len()));
     }
     Ok(())
 }

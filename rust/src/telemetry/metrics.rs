@@ -1,0 +1,209 @@
+//! The metrics registry: counters, gauges and fixed-bucket histograms
+//! behind string names, serialized into one `"metrics"` JSONL event at
+//! the end of a run (DESIGN.md §14).
+//!
+//! The registry absorbs the bespoke aggregate structs —
+//! [`CommStatsSnapshot`](crate::comm::CommStatsSnapshot) and
+//! [`TimeBreakdown`](crate::coordinator::TimeBreakdown) — as
+//! first-class instruments, so the JSONL trail carries the same
+//! quantities the in-process report prints (`comm.*` counters,
+//! `time.*` gauges), plus instruments those structs never had:
+//! bucket-queue depth, fault-event counts, heartbeat counts.
+//!
+//! Names are dotted paths (`comm.grad_wire_bytes`,
+//! `overlap.max_queue_depth`); the registry is internally locked so any
+//! thread may record, but in practice only the lead worker writes it,
+//! once, after the workers join.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::comm::CommStatsSnapshot;
+use crate::coordinator::TimeBreakdown;
+use crate::util::Json;
+
+/// A fixed-bucket histogram: `counts[i]` observations fell in
+/// `(bounds[i-1], bounds[i]]` (first bucket: `<= bounds[0]`), with one
+/// overflow bucket above the last bound.
+#[derive(Debug, Clone)]
+struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        Histogram { bounds: bounds.to_vec(), counts: vec![0; bounds.len() + 1], sum: 0.0, n: 0 }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let i = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.sum += v;
+        self.n += 1;
+    }
+}
+
+/// Registry of named counters (monotone `u64`), gauges (`f64`
+/// last-write-wins) and fixed-bucket histograms.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `v` to the counter `name` (created at zero on first use).
+    pub fn counter_add(&self, name: &str, v: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Set the gauge `name` to `v` (last write wins).
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    /// Declare the histogram `name` with the given ascending upper
+    /// bucket bounds (plus an implicit overflow bucket). Re-declaring
+    /// an existing histogram is a no-op.
+    pub fn hist_declare(&self, name: &str, bounds: &[f64]) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(bounds));
+    }
+
+    /// Record one observation into the histogram `name`. Undeclared
+    /// names get a default power-of-ten µs-scale bucket layout.
+    pub fn observe(&self, name: &str, v: f64) {
+        const DEFAULT_BOUNDS: [f64; 7] = [1.0, 10.0, 100.0, 1e3, 1e4, 1e5, 1e6];
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(&DEFAULT_BOUNDS))
+            .observe(v);
+    }
+
+    /// Absorb a [`CommStatsSnapshot`] as `comm.*` counters — payload
+    /// bytes per collective, op count, gradient/parameter wire bytes
+    /// (chosen and naive baseline), and the measured hidden/exposed
+    /// overlap microseconds.
+    pub fn absorb_comm(&self, s: &CommStatsSnapshot) {
+        self.counter_add("comm.all_gather_bytes", s.all_gather_bytes);
+        self.counter_add("comm.all_reduce_bytes", s.all_reduce_bytes);
+        self.counter_add("comm.reduce_scatter_bytes", s.reduce_scatter_bytes);
+        self.counter_add("comm.broadcast_bytes", s.broadcast_bytes);
+        self.counter_add("comm.payload_bytes", s.payload_bytes());
+        self.counter_add("comm.ops", s.ops);
+        self.counter_add("comm.grad_wire_bytes", s.grad_wire_bytes);
+        self.counter_add("comm.grad_wire_bytes_naive", s.grad_wire_bytes_naive);
+        self.counter_add("comm.param_wire_bytes", s.param_wire_bytes);
+        self.counter_add("comm.hidden_comm_us", s.hidden_comm_us);
+        self.counter_add("comm.exposed_comm_us", s.exposed_comm_us);
+    }
+
+    /// Absorb a [`TimeBreakdown`] as `time.*` gauges (seconds), the
+    /// Fig.-3 split: compute / total / overlapped / pure communication
+    /// / others, the measured hidden/exposed seconds, and the iteration
+    /// count.
+    pub fn absorb_timing(&self, t: &TimeBreakdown) {
+        self.gauge_set("time.compute_s", t.compute_s);
+        self.gauge_set("time.comm_total_s", t.comm_total_s);
+        self.gauge_set("time.comm_overlap_s", t.comm_overlap_s);
+        self.gauge_set("time.comm_pure_s", t.comm_pure_s);
+        self.gauge_set("time.others_s", t.others_s);
+        self.gauge_set("time.overlap_hidden_s", t.overlap_hidden_s);
+        self.gauge_set("time.overlap_exposed_s", t.overlap_exposed_s);
+        self.gauge_set("time.iterations", t.iterations as f64);
+        if let Some(f) = t.hidden_fraction() {
+            self.gauge_set("time.hidden_fraction", f);
+        }
+    }
+
+    /// Serialize every instrument:
+    /// `{"counters": {..}, "gauges": {..}, "histograms": {name:
+    /// {"bounds": [..], "counts": [..], "sum": s, "n": n}}}`.
+    pub fn to_json(&self) -> Json {
+        let counters = self.counters.lock().unwrap();
+        let gauges = self.gauges.lock().unwrap();
+        let hists = self.histograms.lock().unwrap();
+        let mut c = Json::obj(vec![]);
+        for (k, v) in counters.iter() {
+            c.set(k, Json::num(*v as f64));
+        }
+        let mut g = Json::obj(vec![]);
+        for (k, v) in gauges.iter() {
+            g.set(k, Json::num(*v));
+        }
+        let mut h = Json::obj(vec![]);
+        for (k, v) in hists.iter() {
+            h.set(
+                k,
+                Json::obj(vec![
+                    ("bounds", Json::arr(v.bounds.iter().map(|&b| Json::num(b)))),
+                    ("counts", Json::arr(v.counts.iter().map(|&c| Json::num(c as f64)))),
+                    ("sum", Json::num(v.sum)),
+                    ("n", Json::num(v.n as f64)),
+                ]),
+            );
+        }
+        Json::obj(vec![("counters", c), ("gauges", g), ("histograms", h)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms() {
+        let m = MetricsRegistry::new();
+        m.counter_add("a.b", 3);
+        m.counter_add("a.b", 4);
+        m.gauge_set("g", 1.5);
+        m.gauge_set("g", 2.5);
+        m.hist_declare("h", &[10.0, 100.0]);
+        for v in [5.0, 50.0, 500.0, 7.0] {
+            m.observe("h", v);
+        }
+        let j = m.to_json();
+        assert_eq!(j.get("counters").unwrap().get("a.b").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(j.get("gauges").unwrap().get("g").unwrap().as_f64().unwrap(), 2.5);
+        let h = j.get("histograms").unwrap().get("h").unwrap();
+        let bins = h.get("counts").unwrap().as_arr().unwrap();
+        let counts: Vec<usize> = bins.iter().map(|c| c.as_usize().unwrap()).collect();
+        assert_eq!(counts, vec![2, 1, 1]);
+        assert_eq!(h.get("n").unwrap().as_usize().unwrap(), 4);
+    }
+
+    #[test]
+    fn absorbs_comm_and_timing() {
+        let m = MetricsRegistry::new();
+        let s = CommStatsSnapshot {
+            all_gather_bytes: 100,
+            grad_wire_bytes: 40,
+            ..Default::default()
+        };
+        m.absorb_comm(&s);
+        let t = TimeBreakdown { compute_s: 2.0, iterations: 4, ..Default::default() };
+        m.absorb_timing(&t);
+        let j = m.to_json();
+        let c = j.get("counters").unwrap();
+        assert_eq!(c.get("comm.all_gather_bytes").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(c.get("comm.payload_bytes").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(c.get("comm.grad_wire_bytes").unwrap().as_usize().unwrap(), 40);
+        let g = j.get("gauges").unwrap();
+        assert_eq!(g.get("time.compute_s").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(g.get("time.iterations").unwrap().as_f64().unwrap(), 4.0);
+    }
+}

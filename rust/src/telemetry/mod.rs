@@ -1,0 +1,44 @@
+//! Structured telemetry: per-rank spans, a metrics registry, a JSONL
+//! event sink and the `fastclip trace` analyzer (DESIGN.md §14).
+//!
+//! The paper's efficiency claims are time-breakdown claims (Fig. 3 /
+//! Tables 15–22), and the fault-tolerance layer (§13) produces event
+//! sequences — shrink, watchdog, straggle — that are invisible in
+//! end-of-run aggregates. This module gives every layer a common,
+//! durable trail:
+//!
+//! * [`span`] — a per-rank span recorder: `begin`/`end` tokens around
+//!   encode/phase_g/step/gather/reduce/ckpt, with explicit parent
+//!   nesting, buffered per rank and drained *off* the hot path. The
+//!   recorder only reads the clock — telemetry-on runs are
+//!   bitwise-identical to telemetry-off (pinned in
+//!   `tests/telemetry.rs`).
+//! * [`metrics`] — counters / gauges / fixed-bucket histograms that
+//!   absorb `CommStats` and `TimeBreakdown` as first-class instruments.
+//! * [`sink`] — the JSONL sink behind `--trace-out FILE`: one
+//!   schema-versioned event per line, rank-tagged, flushed on snapshot
+//!   boundaries and on `RanksLost` so the trail survives a crash; plus
+//!   [`sink::Logger`], the `--quiet` / `--log-format text|json` switch
+//!   for human progress output.
+//! * [`trace`] — the `fastclip trace summary|verify|diff` subcommand:
+//!   replays a JSONL file into the Fig.-3-style breakdown, validates
+//!   schema / monotonicity / span balance, diffs two runs phase by
+//!   phase.
+//!
+//! Every event line carries `"v": 1` ([`SCHEMA_VERSION`]) and a
+//! `"type"` tag; unknown types are a verify error, unknown *fields*
+//! are ignored (forward-compatible).
+
+pub mod metrics;
+pub mod sink;
+pub mod span;
+pub mod trace;
+
+pub use metrics::MetricsRegistry;
+pub use sink::{Logger, TraceSink};
+pub use span::{SpanRecord, SpanRecorder, SpanToken};
+
+/// Version tag stamped on every JSONL event line as `"v"`. Bump on any
+/// schema change that a reader must distinguish; `trace verify` rejects
+/// files written by a different version.
+pub const SCHEMA_VERSION: u32 = 1;

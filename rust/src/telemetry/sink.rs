@@ -1,0 +1,246 @@
+//! The JSONL trace sink (`--trace-out FILE`) and the human progress
+//! logger (`--quiet`, `--log-format text|json`) — DESIGN.md §14.
+//!
+//! One schema-versioned JSON object per line ([`super::SCHEMA_VERSION`]
+//! as `"v"`, a `"type"` tag, and a `"rank"` on everything per-rank).
+//! Writes are line-atomic under an internal mutex; `emit` is
+//! best-effort (a full disk must never fail a training run), and
+//! [`TraceSink::flush`] is called on snapshot boundaries, on
+//! `RanksLost` (so the trail survives a crash) and at the end of the
+//! run.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::{TraceEvent, TraceEventKind};
+use crate::util::Json;
+
+use super::span::SpanRecord;
+use super::SCHEMA_VERSION;
+
+/// Build one event object: `{"v": 1, "type": kind, ...fields}`.
+pub fn event(kind: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut obj = Json::obj(vec![("v", Json::num(SCHEMA_VERSION)), ("type", Json::str(kind))]);
+    for (k, v) in fields {
+        obj.set(k, v);
+    }
+    obj
+}
+
+/// Serialize one rank's drained span buffer into `"span"` events.
+/// `records` must be one [`SpanRecorder::drain`](super::SpanRecorder)
+/// result: parent indices are resolved against the same slice.
+pub fn span_events(rank: usize, records: &[SpanRecord]) -> Vec<Json> {
+    records
+        .iter()
+        .map(|r| {
+            let parent = match r.parent {
+                Some(i) => Json::str(records[i].name),
+                None => Json::Null,
+            };
+            event(
+                "span",
+                vec![
+                    ("rank", Json::num(rank as f64)),
+                    ("name", Json::str(r.name)),
+                    ("iter", Json::num(r.iter)),
+                    ("start_us", Json::num(r.start_us as f64)),
+                    ("end_us", Json::num(r.end_us as f64)),
+                    ("dur_us", Json::num((r.end_us - r.start_us) as f64)),
+                    ("parent", parent),
+                ],
+            )
+        })
+        .collect()
+}
+
+/// Serialize one comm-layer fault event (straggle / watchdog /
+/// rank-lost / shrink / resume) as an `"event"` line with kind-specific
+/// payload fields.
+pub fn fault_event(e: &TraceEvent) -> Json {
+    let mut fields = vec![
+        ("kind", Json::str(e.kind.id())),
+        ("rank", Json::num(e.rank as f64)),
+        ("iter", Json::num(e.iter as f64)),
+    ];
+    match e.kind {
+        TraceEventKind::Straggle | TraceEventKind::Watchdog => {
+            fields.push(("dur_us", Json::num(e.a as f64)));
+        }
+        TraceEventKind::Shrink => {
+            fields.push(("prev_k", Json::num(e.a as f64)));
+            fields.push(("new_k", Json::num(e.b as f64)));
+        }
+        TraceEventKind::Resume => fields.push(("step", Json::num(e.a as f64))),
+        TraceEventKind::RankLost => {}
+    }
+    event("event", fields)
+}
+
+/// Line-buffered JSONL writer shared by every worker thread of a run.
+#[derive(Debug)]
+pub struct TraceSink {
+    out: Mutex<BufWriter<File>>,
+    epoch: Instant,
+}
+
+impl TraceSink {
+    /// Create (truncate) the trace file at `path`.
+    pub fn create(path: &str) -> Result<TraceSink> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating trace dir {}", dir.display()))?;
+            }
+        }
+        let f = File::create(path).with_context(|| format!("creating trace file {path}"))?;
+        Ok(TraceSink { out: Mutex::new(BufWriter::new(f)), epoch: Instant::now() })
+    }
+
+    /// Microseconds since the sink was created (the run clock stamped
+    /// on heartbeats).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Append one event as a compact single line. Best-effort: I/O
+    /// errors are swallowed — telemetry must never fail the run.
+    pub fn emit(&self, ev: &Json) {
+        let mut out = self.out.lock().unwrap();
+        let _ = writeln!(out, "{}", ev.to_string_compact());
+    }
+
+    /// Append a batch of events under one lock acquisition (keeps one
+    /// rank's iteration contiguous in the file).
+    pub fn emit_all(&self, evs: &[Json]) {
+        let mut out = self.out.lock().unwrap();
+        for ev in evs {
+            let _ = writeln!(out, "{}", ev.to_string_compact());
+        }
+    }
+
+    /// Flush buffered lines to the OS. Best-effort, called on snapshot
+    /// boundaries, on `RanksLost` and at the end of the run.
+    pub fn flush(&self) {
+        let _ = self.out.lock().unwrap().flush();
+    }
+}
+
+/// The human progress channel: routes the trainer's and the experiment
+/// harness's progress output through one switch instead of scattered
+/// `println!`/`eprintln!`. Text to the original streams is the default
+/// (CI greps keep working); `--log-format json` wraps each message as a
+/// compact `{"v":1,"type":"log","msg":...}` line on the same stream,
+/// and `--quiet` suppresses progress entirely (result tables and errors
+/// are NOT routed here and always print).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Logger {
+    quiet: bool,
+    json: bool,
+}
+
+impl Logger {
+    /// A logger with explicit switches.
+    pub fn new(quiet: bool, json: bool) -> Logger {
+        Logger { quiet, json }
+    }
+
+    /// Build from the CLI values, rejecting unknown formats.
+    pub fn from_format(quiet: bool, format: &str) -> Result<Logger> {
+        match format {
+            "text" => Ok(Logger::new(quiet, false)),
+            "json" => Ok(Logger::new(quiet, true)),
+            other => bail!("unknown --log-format '{other}' (text|json)"),
+        }
+    }
+
+    /// Whether progress output is suppressed.
+    pub fn is_quiet(&self) -> bool {
+        self.quiet
+    }
+
+    fn render(&self, msg: &str) -> String {
+        if self.json {
+            event("log", vec![("msg", Json::str(msg))]).to_string_compact()
+        } else {
+            msg.to_string()
+        }
+    }
+
+    /// Progress to stdout (the trainer's per-step lines).
+    pub fn line(&self, msg: &str) {
+        if !self.quiet {
+            println!("{}", self.render(msg));
+        }
+    }
+
+    /// Progress to stderr (run headers, shrink/resume notices, seeds).
+    pub fn status(&self, msg: &str) {
+        if !self.quiet {
+            eprintln!("{}", self.render(msg));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_versioned_single_lines() {
+        let ev = event("heartbeat", vec![("iter", Json::num(3))]);
+        assert_eq!(ev.get("v").unwrap().as_usize().unwrap(), SCHEMA_VERSION as usize);
+        assert_eq!(ev.get("type").unwrap().as_str().unwrap(), "heartbeat");
+        let line = ev.to_string_compact();
+        assert!(!line.contains('\n'));
+        assert_eq!(&Json::parse(&line).unwrap(), &ev);
+    }
+
+    #[test]
+    fn span_events_resolve_parents() {
+        let recs = vec![
+            SpanRecord { name: "step", iter: 2, start_us: 10, end_us: 40, parent: None },
+            SpanRecord { name: "reduce", iter: 2, start_us: 15, end_us: 30, parent: Some(0) },
+        ];
+        let evs = span_events(1, &recs);
+        assert_eq!(evs.len(), 2);
+        assert!(matches!(evs[0].get("parent").unwrap(), Json::Null));
+        assert_eq!(evs[1].get("parent").unwrap().as_str().unwrap(), "step");
+        assert_eq!(evs[1].get("dur_us").unwrap().as_usize().unwrap(), 15);
+        assert_eq!(evs[1].get("rank").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn sink_writes_parseable_jsonl() {
+        let path = std::env::temp_dir().join("fastclip_sink_test.jsonl");
+        let sink = TraceSink::create(path.to_str().unwrap()).unwrap();
+        sink.emit(&event("meta", vec![("k", Json::num(2))]));
+        sink.emit_all(&[event("heartbeat", vec![]), event("iter", vec![])]);
+        sink.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for l in &lines {
+            Json::parse(l).unwrap();
+        }
+        assert!(sink.now_us() < 60_000_000, "run clock is fresh");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn logger_formats() {
+        let l = Logger::from_format(false, "json").unwrap();
+        let rendered = l.render("hello");
+        let j = Json::parse(&rendered).unwrap();
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "log");
+        assert_eq!(j.get("msg").unwrap().as_str().unwrap(), "hello");
+        let t = Logger::from_format(true, "text").unwrap();
+        assert!(t.is_quiet());
+        assert_eq!(t.render("x"), "x");
+        assert!(Logger::from_format(false, "yaml").is_err());
+    }
+}

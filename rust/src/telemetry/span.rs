@@ -1,0 +1,184 @@
+//! Per-rank span recording: timed, nested phases of a training
+//! iteration, buffered off the hot path (DESIGN.md §14).
+//!
+//! A [`SpanRecorder`] lives on ONE worker thread (no locks, no
+//! sharing); [`SpanRecorder::begin`] stamps the clock and pushes an open
+//! record, [`SpanRecorder::end`] closes it, and the trainer drains the
+//! buffer into the JSONL sink *after* the iteration's timing
+//! bookkeeping — never between compute and communication. A disabled
+//! recorder (`--trace-out` absent) never reads the clock at all, so the
+//! only difference between telemetry-on and telemetry-off is wall time
+//! spent in `Instant::now`, which no numeric path observes.
+
+use std::time::Instant;
+
+/// One closed span: a named, timed phase of one iteration on one rank.
+///
+/// `parent` is an index into the recorder's buffer (the enclosing span
+/// that was open at `begin` time), resolved to the parent's *name* when
+/// the record is serialized. Parents always appear before their
+/// children in the drained buffer because `begin` pushes in call order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Phase name: the per-iteration root `"iter"`, its children
+    /// `"encode"`, `"gather"`, `"phase_g"`, `"step"`, `"reduce"`, and
+    /// the top-level `"ckpt"` / `"eval"` phases.
+    pub name: &'static str,
+    /// Training iteration the span belongs to.
+    pub iter: u32,
+    /// Start, µs since the recorder's epoch.
+    pub start_us: u64,
+    /// End, µs since the recorder's epoch (`>= start_us`).
+    pub end_us: u64,
+    /// Buffer index of the enclosing span, if any.
+    pub parent: Option<usize>,
+}
+
+/// Token returned by [`SpanRecorder::begin`], consumed by
+/// [`SpanRecorder::end`]. Spans must close in LIFO order (enforced by
+/// a debug assertion); the token of a disabled recorder is a sentinel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanToken(usize);
+
+const DISABLED: usize = usize::MAX;
+
+/// Single-thread span recorder for one rank (see module docs).
+#[derive(Debug)]
+pub struct SpanRecorder {
+    rank: usize,
+    enabled: bool,
+    epoch: Instant,
+    buf: Vec<SpanRecord>,
+    stack: Vec<usize>,
+}
+
+impl SpanRecorder {
+    /// A recorder for `rank`; `enabled == false` makes every call a
+    /// no-op that never reads the clock.
+    pub fn new(rank: usize, enabled: bool) -> SpanRecorder {
+        SpanRecorder::with_epoch(rank, enabled, Instant::now())
+    }
+
+    /// A recorder whose timestamps count from a caller-supplied epoch.
+    /// The trainer shares ONE epoch across all ranks and incarnations,
+    /// so per-rank `start_us` stays monotone in the trace file even
+    /// when a shrink re-creates recorders (`trace verify` checks this).
+    pub fn with_epoch(rank: usize, enabled: bool, epoch: Instant) -> SpanRecorder {
+        SpanRecorder { rank, enabled, epoch, buf: Vec::new(), stack: Vec::new() }
+    }
+
+    /// The rank this recorder belongs to.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Whether spans are being recorded.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Open a span named `name` for iteration `iter`. The currently
+    /// open span (if any) becomes its parent.
+    pub fn begin(&mut self, name: &'static str, iter: u32) -> SpanToken {
+        if !self.enabled {
+            return SpanToken(DISABLED);
+        }
+        let idx = self.buf.len();
+        let now = self.epoch.elapsed().as_micros() as u64;
+        self.buf.push(SpanRecord {
+            name,
+            iter,
+            start_us: now,
+            end_us: now,
+            parent: self.stack.last().copied(),
+        });
+        self.stack.push(idx);
+        SpanToken(idx)
+    }
+
+    /// Close the span opened by `token`. Must be the innermost open
+    /// span.
+    pub fn end(&mut self, token: SpanToken) {
+        if token.0 == DISABLED {
+            return;
+        }
+        let popped = self.stack.pop();
+        debug_assert_eq!(popped, Some(token.0), "spans must close in LIFO order");
+        self.buf[token.0].end_us = self.epoch.elapsed().as_micros() as u64;
+    }
+
+    /// Take the buffered records (begin order: parents before
+    /// children), leaving the recorder empty for the next iteration.
+    /// Call with no span open.
+    pub fn drain(&mut self) -> Vec<SpanRecord> {
+        debug_assert!(self.stack.is_empty(), "drain with a span still open");
+        std::mem::take(&mut self.buf)
+    }
+}
+
+/// Time a block of code as a span on `$rec`: opens `$name` for
+/// iteration `$iter`, evaluates `$body`, closes the span, and returns
+/// the body's value. Put `?` *outside* the macro so an early return
+/// cannot leave the span open:
+///
+/// ```
+/// use fastclip::telemetry::SpanRecorder;
+/// let mut rec = SpanRecorder::new(0, true);
+/// let sum: u64 = fastclip::span!(rec, "encode", 3, (0..10u64).sum());
+/// assert_eq!(sum, 45);
+/// assert_eq!(rec.drain().len(), 1);
+/// ```
+#[macro_export]
+macro_rules! span {
+    ($rec:expr, $name:expr, $iter:expr, $body:expr) => {{
+        let __span_tok = $rec.begin($name, $iter);
+        let __span_val = $body;
+        $rec.end(__span_tok);
+        __span_val
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nesting_and_drain() {
+        let mut rec = SpanRecorder::new(2, true);
+        let outer = rec.begin("step", 7);
+        let inner = rec.begin("reduce", 7);
+        rec.end(inner);
+        rec.end(outer);
+        let spans = rec.drain();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "step");
+        assert_eq!(spans[0].parent, None);
+        assert_eq!(spans[1].name, "reduce");
+        assert_eq!(spans[1].parent, Some(0));
+        assert!(spans[1].start_us >= spans[0].start_us);
+        assert!(spans[1].end_us <= spans[0].end_us);
+        assert!(spans.iter().all(|s| s.end_us >= s.start_us && s.iter == 7));
+        assert!(rec.drain().is_empty(), "drain empties the buffer");
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut rec = SpanRecorder::new(0, false);
+        let t = rec.begin("encode", 0);
+        rec.end(t);
+        let v: u32 = crate::span!(rec, "phase_g", 1, 41 + 1);
+        assert_eq!(v, 42);
+        assert!(rec.drain().is_empty());
+        assert!(!rec.enabled());
+    }
+
+    #[test]
+    fn macro_returns_body_value_and_balances() {
+        let mut rec = SpanRecorder::new(1, true);
+        let r: Result<u32, ()> = crate::span!(rec, "gather", 5, Ok(9));
+        assert_eq!(r, Ok(9));
+        let spans = rec.drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!((spans[0].name, spans[0].iter), ("gather", 5));
+    }
+}

@@ -1,0 +1,540 @@
+//! The `fastclip trace` subcommand: replay, validate and compare JSONL
+//! traces written by `--trace-out` (DESIGN.md §14).
+//!
+//! * `trace summary FILE` — replays the file into the Fig.-3-style
+//!   per-iteration breakdown (compute / pure comm / overlapped comm /
+//!   others), per-span statistics and fault-event counts. The
+//!   breakdown prefers the end-of-run `"metrics"` event (the exact
+//!   in-process totals); without one it telescopes the per-iteration
+//!   `"iter"` deltas.
+//! * `trace verify FILE` — structural validation: schema version,
+//!   known event types, required fields, per-rank span-start
+//!   monotonicity, span balance (`end >= start`, `dur == end - start`,
+//!   a named parent that exists on the same rank and contains the
+//!   child's interval), exactly one leading `"meta"` line.
+//! * `trace diff A B` — phase-by-phase comparison of two runs (e.g.
+//!   serial vs overlap, f32 vs bf16).
+//!
+//! [`verify_file`] and [`summarize_file`] are library entry points so
+//! tests and CI assert on traces without shelling out.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::TimeBreakdown;
+use crate::output::Table;
+use crate::util::{Args, Json};
+
+use super::SCHEMA_VERSION;
+
+/// Event types a v1 trace may contain.
+const KNOWN_TYPES: [&str; 7] = ["meta", "span", "event", "iter", "metrics", "heartbeat", "log"];
+/// Fault-event kinds (`"event"` lines) a v1 trace may contain.
+const KNOWN_KINDS: [&str; 5] = ["straggle", "watchdog", "rank_lost", "shrink", "resume"];
+/// The per-iteration timing deltas an `"iter"` line must carry.
+const ITER_FIELDS: [&str; 7] = [
+    "compute_s",
+    "comm_total_s",
+    "comm_overlap_s",
+    "comm_pure_s",
+    "others_s",
+    "overlap_hidden_s",
+    "overlap_exposed_s",
+];
+
+fn fget(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)?.as_f64()
+}
+
+fn uget(j: &Json, key: &str) -> Result<u64> {
+    let v = fget(j, key)?;
+    ensure!(v >= 0.0 && v.is_finite(), "field '{key}' must be a non-negative number, got {v}");
+    Ok(v as u64)
+}
+
+/// Count + total duration of one span name across a trace.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SpanStat {
+    /// Number of spans with this name.
+    pub count: u64,
+    /// Summed duration, µs.
+    pub total_us: u64,
+}
+
+/// Aggregate view of one trace file (see [`summarize_file`]).
+#[derive(Debug, Default)]
+pub struct TraceSummary {
+    /// Total event lines.
+    pub lines: usize,
+    /// `"span"` lines.
+    pub spans: u64,
+    /// Distinct ranks that emitted spans or events.
+    pub ranks: std::collections::BTreeSet<usize>,
+    /// `"heartbeat"` lines.
+    pub heartbeats: u64,
+    /// The Fig.-3 breakdown replayed from the trace.
+    pub breakdown: TimeBreakdown,
+    /// Where the breakdown came from: `"metrics"` (exact end-of-run
+    /// totals) or `"iter-sum"` (telescoped per-iteration deltas).
+    pub breakdown_source: &'static str,
+    /// Per-span-name count and total duration.
+    pub span_stats: BTreeMap<String, SpanStat>,
+    /// Fault-event counts by kind (straggle / watchdog / ...).
+    pub event_counts: BTreeMap<String, u64>,
+    /// The run's `"meta"` line, if present.
+    pub meta: Option<Json>,
+}
+
+/// What [`verify_file`] checked, for reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct VerifyReport {
+    /// Total event lines validated.
+    pub lines: usize,
+    /// `"span"` lines validated.
+    pub spans: u64,
+    /// Distinct ranks seen.
+    pub ranks: usize,
+}
+
+/// Structurally validate a JSONL trace (see the module docs for the
+/// exact checks). Errors name the offending line.
+pub fn verify_file(path: &Path) -> Result<VerifyReport> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let mut lines = 0usize;
+    let mut spans = 0u64;
+    let mut metas = 0usize;
+    let mut ranks = std::collections::BTreeSet::new();
+    // per-rank monotonicity cursor and last-closed-span-by-name
+    let mut last_start: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut last_span: BTreeMap<(usize, String), (u64, u64)> = BTreeMap::new();
+    for (i, raw) in text.lines().enumerate() {
+        if raw.trim().is_empty() {
+            continue;
+        }
+        let where_ = || format!("{}:{}", path.display(), i + 1);
+        let j = Json::parse(raw).with_context(where_)?;
+        (|| -> Result<()> {
+            let v = uget(&j, "v")?;
+            ensure!(v == SCHEMA_VERSION as u64, "schema version {v} != {SCHEMA_VERSION}");
+            let ty = j.get("type")?.as_str()?.to_string();
+            ensure!(KNOWN_TYPES.contains(&ty.as_str()), "unknown event type '{ty}'");
+            if ty == "meta" {
+                metas += 1;
+                ensure!(lines == 0, "'meta' must be the first event of the trace");
+            }
+            match ty.as_str() {
+                "span" => {
+                    spans += 1;
+                    let rank = j.get("rank")?.as_usize()?;
+                    ranks.insert(rank);
+                    let name = j.get("name")?.as_str()?.to_string();
+                    let (start, end) = (uget(&j, "start_us")?, uget(&j, "end_us")?);
+                    let dur = uget(&j, "dur_us")?;
+                    ensure!(end >= start, "span '{name}': end_us {end} < start_us {start}");
+                    ensure!(dur == end - start, "span '{name}': dur_us {dur} != end - start");
+                    let cursor = last_start.entry(rank).or_insert(0);
+                    ensure!(
+                        start >= *cursor,
+                        "span '{name}': start_us {start} goes backwards on rank {rank}"
+                    );
+                    *cursor = start;
+                    match j.get("parent")? {
+                        Json::Null => {}
+                        p => {
+                            let pname = p.as_str().context("span parent must be a name or null")?;
+                            let key = (rank, pname.to_string());
+                            let (ps, pe) = *last_span.get(&key).with_context(|| {
+                                format!("span '{name}': parent '{pname}' never seen on rank {rank}")
+                            })?;
+                            ensure!(
+                                ps <= start && end <= pe,
+                                "span '{name}' [{start},{end}] not contained in \
+                                 parent '{pname}' [{ps},{pe}] on rank {rank}"
+                            );
+                        }
+                    }
+                    last_span.insert((rank, name), (start, end));
+                }
+                "event" => {
+                    let kind = j.get("kind")?.as_str()?;
+                    ensure!(KNOWN_KINDS.contains(&kind), "unknown fault-event kind '{kind}'");
+                    ranks.insert(j.get("rank")?.as_usize()?);
+                    uget(&j, "iter")?;
+                }
+                "iter" => {
+                    uget(&j, "iter")?;
+                    for key in ITER_FIELDS {
+                        let v = fget(&j, key)?;
+                        ensure!(v.is_finite() && v >= 0.0, "iter field '{key}' = {v}");
+                    }
+                }
+                "heartbeat" => {
+                    uget(&j, "iter")?;
+                    uget(&j, "t_us")?;
+                }
+                "metrics" => {
+                    j.get("counters")?;
+                    j.get("gauges")?;
+                }
+                _ => {} // meta / log: no required payload beyond v/type
+            }
+            Ok(())
+        })()
+        .with_context(where_)?;
+        lines += 1;
+    }
+    ensure!(lines > 0, "{}: empty trace", path.display());
+    ensure!(metas == 1, "{}: expected exactly one 'meta' event, found {metas}", path.display());
+    Ok(VerifyReport { lines, spans, ranks: ranks.len() })
+}
+
+/// Replay a JSONL trace into a [`TraceSummary`]. Unlike
+/// [`verify_file`] this only needs each line to parse and carry a
+/// known type — run `verify` first for the structural guarantees.
+pub fn summarize_file(path: &Path) -> Result<TraceSummary> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let mut sum = TraceSummary { breakdown_source: "iter-sum", ..Default::default() };
+    let mut iter_acc = TimeBreakdown::default();
+    let mut metrics_bd: Option<TimeBreakdown> = None;
+    for (i, raw) in text.lines().enumerate() {
+        if raw.trim().is_empty() {
+            continue;
+        }
+        let j =
+            Json::parse(raw).with_context(|| format!("{}:{}", path.display(), i + 1))?;
+        sum.lines += 1;
+        match j.get("type")?.as_str()? {
+            "meta" => sum.meta = Some(j.clone()),
+            "span" => {
+                sum.spans += 1;
+                sum.ranks.insert(j.get("rank")?.as_usize()?);
+                let stat = sum
+                    .span_stats
+                    .entry(j.get("name")?.as_str()?.to_string())
+                    .or_default();
+                stat.count += 1;
+                stat.total_us += uget(&j, "dur_us")?;
+            }
+            "event" => {
+                sum.ranks.insert(j.get("rank")?.as_usize()?);
+                *sum.event_counts.entry(j.get("kind")?.as_str()?.to_string()).or_insert(0) += 1;
+            }
+            "iter" => {
+                iter_acc.compute_s += fget(&j, "compute_s")?;
+                iter_acc.comm_total_s += fget(&j, "comm_total_s")?;
+                iter_acc.comm_overlap_s += fget(&j, "comm_overlap_s")?;
+                iter_acc.comm_pure_s += fget(&j, "comm_pure_s")?;
+                iter_acc.others_s += fget(&j, "others_s")?;
+                iter_acc.overlap_hidden_s += fget(&j, "overlap_hidden_s")?;
+                iter_acc.overlap_exposed_s += fget(&j, "overlap_exposed_s")?;
+                iter_acc.iterations += 1;
+            }
+            "metrics" => {
+                let g = j.get("gauges")?;
+                let f = |key: &str| g.opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+                metrics_bd = Some(TimeBreakdown {
+                    compute_s: f("time.compute_s"),
+                    comm_total_s: f("time.comm_total_s"),
+                    comm_overlap_s: f("time.comm_overlap_s"),
+                    comm_pure_s: f("time.comm_pure_s"),
+                    others_s: f("time.others_s"),
+                    overlap_hidden_s: f("time.overlap_hidden_s"),
+                    overlap_exposed_s: f("time.overlap_exposed_s"),
+                    iterations: f("time.iterations") as u64,
+                });
+            }
+            "heartbeat" => sum.heartbeats += 1,
+            "log" => {}
+            other => bail!("{}:{}: unknown event type '{other}'", path.display(), i + 1),
+        }
+    }
+    if let Some(bd) = metrics_bd {
+        sum.breakdown = bd;
+        sum.breakdown_source = "metrics";
+    } else {
+        sum.breakdown = iter_acc;
+    }
+    Ok(sum)
+}
+
+fn meta_line(meta: &Option<Json>) -> String {
+    let Some(m) = meta else { return "(no meta event)".to_string() };
+    let s = |key: &str| m.opt(key).and_then(|v| v.as_str().ok().map(str::to_string));
+    let n = |key: &str| m.opt(key).and_then(|v| v.as_f64().ok()).map(|v| format!("{v}"));
+    [
+        s("algo").map(|v| format!("algo={v}")),
+        n("world").map(|v| format!("k={v}")),
+        n("steps").map(|v| format!("steps={v}")),
+        s("precision").map(|v| format!("precision={v}")),
+        s("reduce").map(|v| format!("reduce={v}")),
+        s("overlap").map(|v| format!("overlap={v}")),
+    ]
+    .into_iter()
+    .flatten()
+    .collect::<Vec<_>>()
+    .join(" ")
+}
+
+/// Render one summary as the Fig.-3 breakdown + span/event tables.
+pub fn print_summary(path: &Path, sum: &TraceSummary) {
+    println!("trace {} — {}", path.display(), meta_line(&sum.meta));
+    println!(
+        "  {} events: {} spans on {} rank(s), {} iteration(s), {} heartbeat(s)",
+        sum.lines,
+        sum.spans,
+        sum.ranks.len(),
+        sum.breakdown.iterations,
+        sum.heartbeats
+    );
+    let ms = sum.breakdown.per_iter_ms();
+    let denom = ms.compute + ms.comm_pure + ms.comm_overlap + ms.others;
+    let share = |v: f64| match crate::util::safe_ratio(v, denom) {
+        Some(f) => format!("{:.1}%", f * 100.0),
+        None => "n/a".to_string(),
+    };
+    let mut t = Table::new(
+        format!("Per-iteration breakdown (rank 0, source: {})", sum.breakdown_source),
+        &["Phase", "ms/iter", "Share"],
+    );
+    t.row(vec!["compute".into(), format!("{:.3}", ms.compute), share(ms.compute)]);
+    t.row(vec!["comm (pure)".into(), format!("{:.3}", ms.comm_pure), share(ms.comm_pure)]);
+    t.row(vec![
+        "comm (overlapped)".into(),
+        format!("{:.3}", ms.comm_overlap),
+        share(ms.comm_overlap),
+    ]);
+    t.row(vec!["others".into(), format!("{:.3}", ms.others), share(ms.others)]);
+    t.row(vec!["total (wall)".into(), format!("{:.3}", ms.total), String::new()]);
+    t.print();
+    if let Some(f) = sum.breakdown.hidden_fraction() {
+        println!("  measured overlap hidden fraction: {:.1}%", f * 100.0);
+    }
+    if !sum.span_stats.is_empty() {
+        let mut st = Table::new("Spans", &["Name", "Count", "Mean us", "Total ms"]);
+        for (name, s) in &sum.span_stats {
+            let mean = s.total_us as f64 / s.count.max(1) as f64;
+            st.row(vec![
+                name.clone(),
+                format!("{}", s.count),
+                format!("{mean:.1}"),
+                format!("{:.2}", s.total_us as f64 / 1e3),
+            ]);
+        }
+        st.print();
+    }
+    if !sum.event_counts.is_empty() {
+        let counts: Vec<String> =
+            sum.event_counts.iter().map(|(k, n)| format!("{k}={n}")).collect();
+        println!("  fault events: {}", counts.join(" "));
+    }
+}
+
+fn print_diff(pa: &Path, a: &TraceSummary, pb: &Path, b: &TraceSummary) {
+    println!("trace diff");
+    println!("  A: {} — {}", pa.display(), meta_line(&a.meta));
+    println!("  B: {} — {}", pb.display(), meta_line(&b.meta));
+    let (ma, mb) = (a.breakdown.per_iter_ms(), b.breakdown.per_iter_ms());
+    let mut t = Table::new(
+        "Per-iteration breakdown (ms/iter)",
+        &["Phase", "A", "B", "Delta"],
+    );
+    let delta = |x: f64, y: f64| match crate::util::safe_ratio(y - x, x) {
+        Some(f) => format!("{:+.1}%", f * 100.0),
+        None => "n/a".to_string(),
+    };
+    for (name, x, y) in [
+        ("compute", ma.compute, mb.compute),
+        ("comm (pure)", ma.comm_pure, mb.comm_pure),
+        ("comm (overlapped)", ma.comm_overlap, mb.comm_overlap),
+        ("others", ma.others, mb.others),
+        ("total (wall)", ma.total, mb.total),
+    ] {
+        t.row(vec![name.into(), format!("{x:.3}"), format!("{y:.3}"), delta(x, y)]);
+    }
+    t.print();
+    let names: std::collections::BTreeSet<&String> =
+        a.span_stats.keys().chain(b.span_stats.keys()).collect();
+    if !names.is_empty() {
+        let mut st = Table::new("Span mean (us)", &["Name", "A", "B", "Delta"]);
+        let mean = |s: Option<&SpanStat>| {
+            s.filter(|s| s.count > 0).map(|s| s.total_us as f64 / s.count as f64)
+        };
+        for name in names {
+            let (x, y) = (mean(a.span_stats.get(name)), mean(b.span_stats.get(name)));
+            st.row(vec![
+                name.clone(),
+                x.map_or("-".into(), |v| format!("{v:.1}")),
+                y.map_or("-".into(), |v| format!("{v:.1}")),
+                match (x, y) {
+                    (Some(x), Some(y)) => delta(x, y),
+                    _ => "n/a".into(),
+                },
+            ]);
+        }
+        st.print();
+    }
+}
+
+/// `fastclip trace <summary|verify|diff> FILE [FILE2]`.
+pub fn trace_cmd(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
+    let file = |idx: usize, what: &str| -> Result<std::path::PathBuf> {
+        args.positional
+            .get(idx)
+            .map(std::path::PathBuf::from)
+            .with_context(|| format!("usage: fastclip trace {sub} {what}"))
+    };
+    match sub {
+        "summary" => {
+            let path = file(2, "TRACE.jsonl")?;
+            print_summary(&path, &summarize_file(&path)?);
+            Ok(())
+        }
+        "verify" => {
+            let path = file(2, "TRACE.jsonl")?;
+            let r = verify_file(&path)?;
+            println!(
+                "OK: {} — {} events, {} spans, {} rank(s): schema v{}, spans \
+                 monotone and balanced",
+                path.display(),
+                r.lines,
+                r.spans,
+                r.ranks,
+                SCHEMA_VERSION
+            );
+            Ok(())
+        }
+        "diff" => {
+            let (pa, pb) = (file(2, "A.jsonl B.jsonl")?, file(3, "A.jsonl B.jsonl")?);
+            print_diff(&pa, &summarize_file(&pa)?, &pb, &summarize_file(&pb)?);
+            Ok(())
+        }
+        other => bail!("unknown trace subcommand '{other}' (summary|verify|diff)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sink::{event, span_events, TraceSink};
+    use super::super::span::SpanRecord;
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fastclip_trace_{name}.jsonl"))
+    }
+
+    fn write_trace(name: &str, extra: &[Json]) -> std::path::PathBuf {
+        let path = tmp(name);
+        let sink = TraceSink::create(path.to_str().unwrap()).unwrap();
+        sink.emit(&event("meta", vec![("algo", Json::str("fastclip-v3")), ("world", Json::num(2))]));
+        let recs = vec![
+            SpanRecord { name: "step", iter: 0, start_us: 100, end_us: 400, parent: None },
+            SpanRecord { name: "reduce", iter: 0, start_us: 150, end_us: 300, parent: Some(0) },
+        ];
+        sink.emit_all(&span_events(0, &recs));
+        sink.emit(&event(
+            "iter",
+            vec![
+                ("iter", Json::num(0)),
+                ("compute_s", Json::num(0.2)),
+                ("comm_total_s", Json::num(0.1)),
+                ("comm_overlap_s", Json::num(0.06)),
+                ("comm_pure_s", Json::num(0.04)),
+                ("others_s", Json::num(0.01)),
+                ("overlap_hidden_s", Json::num(0.05)),
+                ("overlap_exposed_s", Json::num(0.01)),
+            ],
+        ));
+        sink.emit(&event(
+            "event",
+            vec![
+                ("kind", Json::str("straggle")),
+                ("rank", Json::num(1)),
+                ("iter", Json::num(0)),
+                ("dur_us", Json::num(900)),
+            ],
+        ));
+        sink.emit(&event(
+            "heartbeat",
+            vec![("iter", Json::num(0)), ("t_us", Json::num(12345))],
+        ));
+        for e in extra {
+            sink.emit(e);
+        }
+        sink.flush();
+        path
+    }
+
+    #[test]
+    fn verify_and_summarize_a_clean_trace() {
+        let path = write_trace("clean", &[]);
+        let r = verify_file(&path).unwrap();
+        assert_eq!(r.lines, 6);
+        assert_eq!(r.spans, 2);
+        let s = summarize_file(&path).unwrap();
+        assert_eq!(s.breakdown.iterations, 1);
+        assert_eq!(s.breakdown_source, "iter-sum");
+        assert!((s.breakdown.compute_s - 0.2).abs() < 1e-12);
+        assert_eq!(s.span_stats["reduce"].count, 1);
+        assert_eq!(s.span_stats["reduce"].total_us, 150);
+        assert_eq!(s.event_counts["straggle"], 1);
+        assert_eq!(s.heartbeats, 1);
+        print_summary(&path, &s); // must not panic
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn metrics_event_overrides_iter_sum() {
+        let mut gauges = Json::obj(vec![]);
+        gauges.set("time.compute_s", Json::num(1.5));
+        gauges.set("time.iterations", Json::num(3));
+        let metrics =
+            event("metrics", vec![("counters", Json::obj(vec![])), ("gauges", gauges)]);
+        let path = write_trace("metrics", &[metrics]);
+        verify_file(&path).unwrap();
+        let s = summarize_file(&path).unwrap();
+        assert_eq!(s.breakdown_source, "metrics");
+        assert!((s.breakdown.compute_s - 1.5).abs() < 1e-12);
+        assert_eq!(s.breakdown.iterations, 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn verify_rejects_structural_violations() {
+        let write_raw = |name: &str, lines: &[&str]| {
+            let path = tmp(name);
+            std::fs::write(&path, lines.join("\n")).unwrap();
+            path
+        };
+        let meta = r#"{"v": 1, "type": "meta"}"#;
+        // wrong schema version
+        let p = write_raw("badv", &[r#"{"v": 99, "type": "meta"}"#]);
+        assert!(format!("{:#}", verify_file(&p).unwrap_err()).contains("schema version"));
+        // unknown type
+        let p = write_raw("badty", &[meta, r#"{"v": 1, "type": "wat"}"#]);
+        assert!(format!("{:#}", verify_file(&p).unwrap_err()).contains("unknown event type"));
+        // span going backwards on a rank
+        let s1 = r#"{"v":1,"type":"span","rank":0,"name":"a","iter":0,"start_us":100,"end_us":200,"dur_us":100,"parent":null}"#;
+        let s2 = r#"{"v":1,"type":"span","rank":0,"name":"b","iter":0,"start_us":50,"end_us":60,"dur_us":10,"parent":null}"#;
+        let p = write_raw("mono", &[meta, s1, s2]);
+        assert!(format!("{:#}", verify_file(&p).unwrap_err()).contains("goes backwards"));
+        // child escaping its parent's interval
+        let c = r#"{"v":1,"type":"span","rank":0,"name":"b","iter":0,"start_us":150,"end_us":250,"dur_us":100,"parent":"a"}"#;
+        let p = write_raw("contain", &[meta, s1, c]);
+        assert!(format!("{:#}", verify_file(&p).unwrap_err()).contains("not contained"));
+        // parent never seen
+        let orphan = r#"{"v":1,"type":"span","rank":1,"name":"b","iter":0,"start_us":150,"end_us":160,"dur_us":10,"parent":"a"}"#;
+        let p = write_raw("orphan", &[meta, s1, orphan]);
+        assert!(format!("{:#}", verify_file(&p).unwrap_err()).contains("never seen"));
+        // missing meta
+        let p = write_raw("nometa", &[s1]);
+        assert!(format!("{:#}", verify_file(&p).unwrap_err()).contains("one 'meta'"));
+        for n in ["badv", "badty", "mono", "contain", "orphan", "nometa"] {
+            let _ = std::fs::remove_file(tmp(n));
+        }
+    }
+}

@@ -168,6 +168,15 @@ impl Json {
         out
     }
 
+    /// Single-line encoding, for JSONL event streams (one event per
+    /// line — the `--trace-out` sink, DESIGN.md §14). Same numeric and
+    /// escaping rules as [`Json::to_string_pretty`], no newlines.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -453,6 +462,23 @@ mod tests {
     fn parse_escapes() {
         let v = Json::parse(r#""a\n\t\"\\ A""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "a\n\t\"\\ A");
+    }
+
+    #[test]
+    fn compact_is_one_parseable_line() {
+        let orig = Json::obj(vec![
+            ("type", Json::str("span")),
+            ("msg", Json::str("two\nlines")),
+            ("vals", Json::arr([Json::num(1), Json::Null, Json::Bool(true)])),
+            ("nested", Json::obj(vec![("k", Json::num(-0.5))])),
+            ("empty", Json::obj(vec![])),
+        ]);
+        let line = orig.to_string_compact();
+        assert!(!line.contains('\n'), "compact output must be a single line: {line}");
+        assert_eq!(Json::parse(&line).unwrap(), orig);
+        // scalar fast paths match the pretty writer's rules
+        assert_eq!(Json::num(42).to_string_compact(), "42");
+        assert_eq!(Json::Null.to_string_compact(), "null");
     }
 
     #[test]

@@ -15,11 +15,13 @@ use std::time::Duration;
 use fastclip::ckpt;
 use fastclip::comm::{
     reduction, BucketPlan, CancellationToken, CommError, CommStats, CommWorld, GradientReduction,
-    OverlapMode, OverlapPipeline, ReduceAlgo, ReduceStrategy, WorkerComm,
+    OverlapMode, OverlapPipeline, ReduceAlgo, ReduceStrategy, TraceEventKind, WorkerComm,
 };
 use fastclip::config::{Algorithm, TrainConfig};
 use fastclip::coordinator::Trainer;
 use fastclip::kernels::Precision;
+use fastclip::telemetry::trace;
+use fastclip::util::Json;
 
 fn tmp_root(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("fastclip_fault_{name}"));
@@ -287,7 +289,8 @@ fn live_shrink_is_bitwise_cold_elastic_resume_bf16() {
 
 #[test]
 fn straggler_skews_time_never_numerics_and_accounting_stays_finite() {
-    let build = |straggle: Option<&str>| {
+    let trace_path = tmp_root("straggle_trace").join("trace.jsonl");
+    let build = |straggle: Option<&str>, trace_out: Option<&PathBuf>| {
         let mut cfg = trainer_cfg(Algorithm::FastClipV3, 6);
         cfg.reduce = ReduceStrategy::Fixed(ReduceAlgo::Ring);
         // force the overlap pipeline with several buckets so the skew
@@ -295,11 +298,13 @@ fn straggler_skews_time_never_numerics_and_accounting_stays_finite() {
         cfg.overlap = OverlapMode::On;
         cfg.bucket_bytes = 1024;
         cfg.straggle = straggle.map(str::to_string);
+        cfg.trace_out = trace_out.map(|p| p.to_string_lossy().into_owned());
         cfg.watchdog_ms = 20_000;
         cfg
     };
-    let clean = Trainer::new(build(None)).unwrap().run().unwrap();
-    let skewed = Trainer::new(build(Some("rank=0:ms=1"))).unwrap().run().unwrap();
+    let clean = Trainer::new(build(None, None)).unwrap().run().unwrap();
+    let skewed =
+        Trainer::new(build(Some("rank=0:ms=1"), Some(&trace_path))).unwrap().run().unwrap();
 
     // numerics: bitwise identical to the clean run
     assert_eq!(clean.final_params, skewed.final_params);
@@ -324,6 +329,60 @@ fn straggler_skews_time_never_numerics_and_accounting_stays_finite() {
             assert!((0.0..=1.0).contains(&f), "hidden fraction {f} out of range");
         }
     }
+
+    // telemetry (DESIGN.md §14): the skewed run's trace must validate
+    // structurally and carry the injected sleeps as `straggle` events
+    // with rank / iter / dur_us payloads
+    trace::verify_file(&trace_path).unwrap();
+    let sum = trace::summarize_file(&trace_path).unwrap();
+    assert!(sum.event_counts["straggle"] >= 1, "straggle sleeps must be logged");
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let straggles: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .filter(|j| {
+            j.get("type").unwrap().as_str().unwrap() == "event"
+                && j.get("kind").unwrap().as_str().unwrap() == "straggle"
+        })
+        .collect();
+    assert!(!straggles.is_empty());
+    for ev in &straggles {
+        assert_eq!(ev.get("rank").unwrap().as_usize().unwrap(), 0, "only rank 0 straggles");
+        // rank=0:ms=1 sleeps exactly 1 ms per collective entry
+        assert_eq!(ev.get("dur_us").unwrap().as_usize().unwrap(), 1000);
+        assert!(ev.get("iter").unwrap().as_usize().unwrap() < 6, "iter tag within the run");
+    }
+    let _ = std::fs::remove_dir_all(trace_path.parent().unwrap());
+}
+
+// ---------------------------------------------------------------------
+// 3b. Watchdog firings are telemetry events: a barrier that times out
+//     must both return Err(Watchdog) and log a `watchdog` event tagged
+//     with the firing rank and the configured timeout.
+// ---------------------------------------------------------------------
+
+#[test]
+fn watchdog_firing_is_a_telemetry_event() {
+    let stats = Arc::new(CommStats::default());
+    let world = CommWorld::with_faults(
+        2,
+        Arc::clone(&stats),
+        Arc::new(CancellationToken::new()),
+        Some(Duration::from_millis(50)),
+        vec![Duration::ZERO; 2],
+    );
+    stats.set_rank_iter(0, 3);
+    let lone = world.handle(0);
+    // rank 1 never arrives: the 50 ms watchdog must fire
+    let res = std::thread::spawn(move || lone.barrier()).join().unwrap();
+    assert_eq!(res.unwrap_err(), CommError::Watchdog);
+    let evs = stats.take_events();
+    let fired: Vec<_> =
+        evs.iter().filter(|e| e.kind == TraceEventKind::Watchdog).collect();
+    assert_eq!(fired.len(), 1, "exactly one watchdog event");
+    assert_eq!(fired[0].rank, 0);
+    assert_eq!(fired[0].iter, 3, "stamped with the rank's last reported iteration");
+    assert_eq!(fired[0].a, 50_000, "payload carries the timeout in us");
 }
 
 // ---------------------------------------------------------------------

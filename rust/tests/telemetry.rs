@@ -1,0 +1,121 @@
+//! Telemetry determinism and trace fidelity (DESIGN.md §14).
+//!
+//! The tentpole contract of the telemetry subsystem: turning on the
+//! full observability surface (`--trace-out` JSONL spans + `--log-every`
+//! heartbeats) must be **bitwise invisible** to training — telemetry
+//! reads clocks and buffers records, it never sits between compute and
+//! communication. Checked here for f32 and bf16 at 1 and 4 kernel
+//! threads, with the overlap pipeline engaged so every span kind is
+//! exercised. The written trace must also validate structurally and
+//! reproduce the in-process Fig.-3 breakdown within 1% (the end-of-run
+//! `"metrics"` event carries the exact totals, so the comparison is in
+//! practice exact).
+
+use std::path::PathBuf;
+
+use fastclip::comm::{OverlapMode, ReduceAlgo, ReduceStrategy};
+use fastclip::config::{Algorithm, TrainConfig};
+use fastclip::coordinator::Trainer;
+use fastclip::kernels::Precision;
+use fastclip::telemetry::trace;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fastclip_telemetry_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Native-backend K=2 run with the overlap pipeline forced through
+/// several buckets — the richest span set (encode / gather / phase_g /
+/// step / reduce under an `iter` root).
+fn base_cfg(precision: Precision, threads: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", Algorithm::FastClipV3);
+    cfg.backend = fastclip::runtime::BackendKind::Native;
+    cfg.kernel_threads = threads;
+    cfg.steps = 8;
+    cfg.iters_per_epoch = 4;
+    cfg.data.n_train = 64;
+    cfg.data.n_eval = 32;
+    cfg.data.n_classes = 8;
+    cfg.lr.warmup_iters = 2;
+    cfg.lr.total_iters = 8;
+    cfg.precision = precision;
+    cfg.overlap = OverlapMode::On;
+    cfg.reduce = ReduceStrategy::Fixed(ReduceAlgo::Ring);
+    cfg.bucket_bytes = 1024;
+    cfg
+}
+
+fn telemetry_is_bitwise_invisible(precision: Precision) {
+    for threads in [1usize, 4] {
+        let label = format!("precision={} threads={threads}", precision.id());
+        let off = Trainer::new(base_cfg(precision, threads)).unwrap().run().unwrap();
+
+        let dir = tmp_dir(&format!("det_{}_{threads}", precision.id()));
+        let trace_path = dir.join("trace.jsonl");
+        let mut cfg = base_cfg(precision, threads);
+        cfg.trace_out = Some(trace_path.to_string_lossy().into_owned());
+        cfg.log_every = 2;
+        cfg.quiet = true;
+        let on = Trainer::new(cfg).unwrap().run().unwrap();
+
+        // ---- bitwise equality: params, τ, and the whole trajectory ----
+        assert_eq!(off.final_params, on.final_params, "params: {label}");
+        assert_eq!(off.final_tau.to_bits(), on.final_tau.to_bits(), "tau: {label}");
+        assert_eq!(off.history.len(), on.history.len(), "{label}");
+        for (a, b) in off.history.iter().zip(&on.history) {
+            assert_eq!(a.step, b.step, "{label}");
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss at step {}: {label}", a.step);
+            assert_eq!(a.tau.to_bits(), b.tau.to_bits(), "tau at step {}: {label}", a.step);
+        }
+        // telemetry must not change what moves on the wire either
+        assert_eq!(off.comm_bytes, on.comm_bytes, "{label}");
+        assert_eq!(off.grad_wire_bytes, on.grad_wire_bytes, "{label}");
+
+        // ---- the trace validates and reproduces the breakdown ---------
+        trace::verify_file(&trace_path).unwrap();
+        let sum = trace::summarize_file(&trace_path).unwrap();
+        assert_eq!(sum.breakdown_source, "metrics", "{label}");
+        assert_eq!(sum.breakdown.iterations, on.timing.iterations, "{label}");
+        for (name, got, want) in [
+            ("compute_s", sum.breakdown.compute_s, on.timing.compute_s),
+            ("comm_total_s", sum.breakdown.comm_total_s, on.timing.comm_total_s),
+            ("comm_overlap_s", sum.breakdown.comm_overlap_s, on.timing.comm_overlap_s),
+            ("comm_pure_s", sum.breakdown.comm_pure_s, on.timing.comm_pure_s),
+            ("others_s", sum.breakdown.others_s, on.timing.others_s),
+            ("overlap_hidden_s", sum.breakdown.overlap_hidden_s, on.timing.overlap_hidden_s),
+            ("overlap_exposed_s", sum.breakdown.overlap_exposed_s, on.timing.overlap_exposed_s),
+        ] {
+            // the acceptance bound is 1%; the metrics event makes it exact
+            let tol = want.abs() * 0.01 + 1e-12;
+            assert!(
+                (got - want).abs() <= tol,
+                "trace {name} {got} vs in-process {want}: {label}"
+            );
+        }
+
+        // ---- span + heartbeat structure -------------------------------
+        let meta = sum.meta.as_ref().expect("meta event");
+        assert_eq!(meta.get("algo").unwrap().as_str().unwrap(), "fastclip-v3");
+        assert_eq!(meta.get("precision").unwrap().as_str().unwrap(), precision.id());
+        assert_eq!(sum.ranks.len(), 2, "both ranks traced: {label}");
+        assert_eq!(sum.heartbeats, 4, "log_every=2 over 8 steps: {label}");
+        for name in ["iter", "encode", "phase_g", "step", "reduce"] {
+            assert!(sum.span_stats.contains_key(name), "span '{name}' missing: {label}");
+        }
+        assert_eq!(sum.span_stats["iter"].count, 2 * 8, "2 ranks x 8 iters: {label}");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn telemetry_is_bitwise_invisible_f32() {
+    telemetry_is_bitwise_invisible(Precision::F32);
+}
+
+#[test]
+fn telemetry_is_bitwise_invisible_bf16() {
+    telemetry_is_bitwise_invisible(Precision::Bf16);
+}
