@@ -2,15 +2,16 @@
 //! all_reduce / reduce_scatter) across worker counts and payload sizes,
 //! the pluggable gradient-reduction algorithms with their bytes-on-wire
 //! accounting (naive vs ring vs sharded — the before/after comparison of
-//! DESIGN.md §4 "Gradient reduction"), and the α–β cost model's analytic
-//! times for the same shapes — the microbenchmark behind the Fig. 3
-//! communication bars.
+//! DESIGN.md §4 "Gradient reduction"), the gradient wire codecs
+//! (f32/bf16/int8/topk, DESIGN.md §15) over the ring reduction, and the
+//! α–β cost model's analytic times for the same shapes — the
+//! microbenchmark behind the Fig. 3 communication bars.
 
 #[path = "harness.rs"]
 mod harness;
 
 use fastclip::comm::{
-    reduction, Collective, CommWorld, CostModel, ProfileName, ReduceAlgo,
+    reduction, Collective, CommWorld, CostModel, ProfileName, ReduceAlgo, ReduceCtx, WireCodec,
 };
 use harness::{black_box, Bench};
 
@@ -22,7 +23,7 @@ fn bench_all_reduce(k: usize, n: usize) {
                 let h = world.handle(rank);
                 std::thread::spawn(move || {
                     let mut buf = vec![rank as f32; n];
-                    h.all_reduce_sum(&mut buf).unwrap();
+                    h.all_reduce_sum(&mut buf, WireCodec::F32).unwrap();
                     black_box(buf[0]);
                 })
             })
@@ -41,7 +42,7 @@ fn bench_all_gather(k: usize, n: usize) {
                 let h = world.handle(rank);
                 std::thread::spawn(move || {
                     let buf = vec![rank as f32; n];
-                    black_box(h.all_gather(&buf).unwrap());
+                    black_box(h.all_gather(&buf, WireCodec::F32).unwrap());
                 })
             })
             .collect();
@@ -57,12 +58,17 @@ const REDUCE_WARMUP: usize = 2;
 const REDUCE_SAMPLES: usize = 20;
 const REDUCE_EXECS: u64 = (REDUCE_WARMUP + REDUCE_SAMPLES) as u64;
 
-/// One full gradient reduction + optimizer-style apply with `algo`.
-/// Returns the CommStats snapshot so main() can print the wire-byte
-/// comparison next to the timings.
-fn bench_reduction(algo: ReduceAlgo, k: usize, n: usize) -> fastclip::comm::CommStatsSnapshot {
+/// One full gradient reduction + optimizer-style apply with `algo` over
+/// the `wire` codec. Returns the CommStats snapshot so main() can print
+/// the wire-byte comparison next to the timings.
+fn bench_reduction(
+    algo: ReduceAlgo,
+    wire: WireCodec,
+    k: usize,
+    n: usize,
+) -> fastclip::comm::CommStatsSnapshot {
     let world = CommWorld::new(k);
-    Bench::new(format!("reduce[{}] k={k} n={n}", algo.id()))
+    Bench::new(format!("reduce[{}/{}] k={k} n={n}", algo.id(), wire.id()))
         .samples(REDUCE_SAMPLES)
         .warmup(REDUCE_WARMUP)
         .run(|| {
@@ -70,20 +76,15 @@ fn bench_reduction(algo: ReduceAlgo, k: usize, n: usize) -> fastclip::comm::Comm
             .map(|rank| {
                 let h = world.handle(rank);
                 std::thread::spawn(move || {
+                    let ctx = ReduceCtx::for_run(wire, n);
                     let mut grad = vec![rank as f32 + 0.5; n];
                     let mut params = vec![1.0f32; n];
                     reduction(algo)
-                        .reduce_and_apply(
-                            &h,
-                            &mut grad,
-                            &mut params,
-                            fastclip::kernels::Precision::F32,
-                            &mut |p, g| {
-                                for (pi, gi) in p.iter_mut().zip(g) {
-                                    *pi -= 1e-3 * gi;
-                                }
-                            },
-                        )
+                        .reduce_and_apply(&h, &mut grad, &mut params, &ctx, &mut |p, g| {
+                            for (pi, gi) in p.iter_mut().zip(g) {
+                                *pi -= 1e-3 * gi;
+                            }
+                        })
                         .unwrap();
                     black_box(params[0]);
                 })
@@ -112,7 +113,7 @@ fn main() {
         let n = 1 << 20;
         let mut snaps = Vec::new();
         for algo in ReduceAlgo::all() {
-            snaps.push((algo, bench_reduction(algo, k, n)));
+            snaps.push((algo, bench_reduction(algo, WireCodec::F32, k, n)));
         }
         // counters accumulate over all REDUCE_EXECS executions and all k
         // ranks; divide back to one rank's traffic for ONE reduction
@@ -137,6 +138,25 @@ fn main() {
             sharded.1.grad_wire_bytes < sharded.1.grad_wire_bytes_naive,
             "sharded must move strictly fewer gradient bytes than naive for K={k}"
         );
+    }
+
+    println!("\n== gradient wire codecs over the ring reduction (DESIGN.md §15) ==");
+    {
+        let (k, n) = (4usize, 1 << 20);
+        let mut f32_wire = 0u64;
+        for wire in WireCodec::all() {
+            let s = bench_reduction(ReduceAlgo::Ring, wire, k, n);
+            let per = s.grad_wire_bytes / k as u64 / REDUCE_EXECS;
+            if wire == WireCodec::F32 {
+                f32_wire = per;
+            }
+            println!(
+                "  {:5} {:>14} B/rank/reduction   ({:.2}x fewer than f32)",
+                wire.id(),
+                per,
+                f32_wire as f64 / per.max(1) as f64
+            );
+        }
     }
 
     println!("\n== alpha-beta cost model (paper-scale volumes, analytic) ==");

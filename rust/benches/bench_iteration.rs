@@ -6,9 +6,10 @@
 //! **f32 vs bf16** (DESIGN.md §12): every algorithm runs serial-f32,
 //! overlapped-f32 and serial-bf16, and the report carries all three rows
 //! plus the speedups. A trailing wire-format section measures the
-//! per-iteration gradient bytes-on-wire for every reduction algorithm at
-//! both precisions (`wire/<algo>/<precision>` rows) and asserts the bf16
-//! wire format halves them exactly.
+//! per-iteration gradient bytes-on-wire for every reduction algorithm
+//! under every wire codec (`wire/<algo>/<codec>` rows, DESIGN.md §15)
+//! and asserts the exact cuts: bf16 1/2, int8 1/4 and topk 1/8 of the
+//! f32 bytes (the tiny preset's gradient divides by the topk block).
 //!
 //! Runs on any machine (no artifacts). CI (`bench-smoke`) runs it in
 //! `--quick` mode, writes `BENCH_iteration.json` and gates iteration
@@ -27,7 +28,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use fastclip::comm::{OverlapMode, ReduceAlgo, ReduceStrategy};
+use fastclip::comm::{OverlapMode, ReduceAlgo, ReduceStrategy, WireCodec};
 use fastclip::config::{Algorithm, TrainConfig};
 use fastclip::coordinator::Trainer;
 use fastclip::kernels::Precision;
@@ -129,17 +130,18 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
-    // ---- gradient wire bytes per iteration, f32 vs bf16 -----------------
-    // deterministic micro-runs (fixed reduce, serial) so the committed
-    // baseline can carry EXACT byte counts: the rows gate as a rate
-    // (1e6 / bytes-per-iter — higher is better), so wire-byte growth
-    // beyond the floor fails CI exactly like a throughput collapse.
-    // `median_s` carries the raw bytes-per-iteration for readability.
+    // ---- gradient wire bytes per iteration, per codec -------------------
+    // deterministic micro-runs (fixed reduce, serial, f32 compute — the
+    // codec is the ONLY thing varied) so the committed baseline can
+    // carry EXACT byte counts: the rows gate as a rate (1e6 /
+    // bytes-per-iter — higher is better), so wire-byte growth beyond the
+    // floor fails CI exactly like a throughput collapse. `median_s`
+    // carries the raw bytes-per-iteration for readability.
     println!("\ngradient wire bytes per iteration and rank (tiny preset, K=2):");
-    println!("{:<10} {:>14} {:>14} {:>8}", "reduce", "f32 B/iter", "bf16 B/iter", "ratio");
+    println!("{:<10} {:>8} {:>14} {:>8}", "reduce", "codec", "B/iter", "vs f32");
     let wire_steps = 4u32;
     for reduce in ReduceAlgo::all() {
-        let run = |precision: Precision| -> anyhow::Result<u64> {
+        let run = |wire: WireCodec| -> anyhow::Result<u64> {
             let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", Algorithm::FastClipV1);
             cfg.backend = BackendKind::Native;
             cfg.steps = wire_steps;
@@ -151,28 +153,37 @@ fn main() -> anyhow::Result<()> {
             cfg.lr.warmup_iters = 1;
             cfg.overlap = OverlapMode::Off;
             cfg.reduce = ReduceStrategy::Fixed(reduce);
-            cfg.precision = precision;
+            cfg.wire = Some(wire);
             let r = Trainer::new(cfg)?.run()?;
             Ok(r.grad_wire_bytes / wire_steps as u64)
         };
-        let f32_bytes = run(Precision::F32)?;
-        let bf16_bytes = run(Precision::Bf16)?;
-        assert_eq!(
-            f32_bytes,
-            2 * bf16_bytes,
-            "{}: the bf16 wire format must halve gradient bytes exactly",
-            reduce.id()
-        );
-        println!(
-            "{:<10} {:>14} {:>14} {:>8}",
-            reduce.id(),
-            f32_bytes,
-            bf16_bytes,
-            ratio_cell(safe_ratio(f32_bytes as f64, bf16_bytes as f64)),
-        );
-        for (precision, bytes) in [(Precision::F32, f32_bytes), (Precision::Bf16, bf16_bytes)] {
+        let f32_bytes = run(WireCodec::F32)?;
+        for wire in WireCodec::all() {
+            let bytes = if wire == WireCodec::F32 { f32_bytes } else { run(wire)? };
+            // the exact encoded-width contracts (DESIGN.md §15), gated
+            // per reduction algorithm; int8 is the §15 acceptance check
+            let cut = match wire {
+                WireCodec::F32 => 1,
+                WireCodec::Bf16 => 2,
+                WireCodec::Int8 => 4,
+                WireCodec::TopK => 8,
+            };
+            assert_eq!(
+                f32_bytes,
+                cut * bytes,
+                "{}/{}: wire bytes must be exactly 1/{cut} of f32",
+                reduce.id(),
+                wire.id()
+            );
+            println!(
+                "{:<10} {:>8} {:>14} {:>8}",
+                reduce.id(),
+                wire.id(),
+                bytes,
+                ratio_cell(safe_ratio(f32_bytes as f64, bytes as f64)),
+            );
             rows.push(harness::JsonRow {
-                name: format!("wire/{}/{}", reduce.id(), precision.id()),
+                name: format!("wire/{}/{}", reduce.id(), wire.id()),
                 rate_per_sec: safe_ratio(1e6, bytes as f64).unwrap_or(f64::NAN),
                 median_s: bytes as f64,
             });

@@ -89,6 +89,7 @@ pub fn snapshot_synthetic(
             &f.tau,
             &f.loader,
             os.as_ref().map(|s| (s, false)),
+            None,
         )?;
     }
     let meta = CkptMeta::for_run(cfg, step, ranks.len(), n_params, local_batch, "ring");

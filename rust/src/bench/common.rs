@@ -159,7 +159,7 @@ pub fn algo_config(setting: Setting, algo: Algorithm) -> TrainConfig {
 
 /// Apply the common CLI overrides (`--steps`, `--seeds`, `--bundle`,
 /// `--n-train`, `--eval-every`, `--nodes`, `--gpus-per-node`,
-/// `--precision`) to a base config. Returns the seed list.
+/// `--precision`, `--wire`) to a base config. Returns the seed list.
 pub fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<Vec<u64>> {
     cfg.steps = args.u32_or("steps", cfg.steps)?;
     cfg.lr.total_iters = cfg.steps;
@@ -172,6 +172,9 @@ pub fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<Vec<u64>> {
     cfg.precision = crate::kernels::Precision::from_id(
         &args.str_or("precision", cfg.precision.id()),
     )?;
+    if let Some(w) = args.get("wire") {
+        cfg.wire = Some(crate::comm::WireCodec::from_id(w)?);
+    }
     if let Some(b) = args.get("bundle") {
         cfg.set_bundle(b);
     }
@@ -193,7 +196,7 @@ pub fn progress_logger(args: &Args) -> Result<Logger> {
 /// Common options shared by every experiment runner (for check_known).
 pub const COMMON_OPTS: &[&str] = &[
     "steps", "seeds", "setting", "bundle", "n-train", "n-eval", "eval-every",
-    "out", "nodes", "gpus-per-node", "precision", "quiet", "log-format", "trace-out",
+    "out", "nodes", "gpus-per-node", "precision", "wire", "quiet", "log-format", "trace-out",
 ];
 
 /// Run one configuration across seeds, reporting per-seed progress

@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use crate::comm::{reduction, CommWorld, CostModel, ProfileName, ReduceAlgo};
+use crate::comm::{reduction, CommWorld, CostModel, ProfileName, ReduceAlgo, ReduceCtx, WireCodec};
 use crate::config::{Algorithm, GammaSchedule, OptimizerKind};
 use crate::kernels::Precision;
 use crate::output::{mean_std_cell, Table};
@@ -154,15 +154,17 @@ pub fn table5(args: &Args) -> Result<()> {
     finish(args, "table5", table, json_rows)
 }
 
-/// `reduce` — the gradient-reduction strategy study (DESIGN.md §4/§12).
+/// `reduce` — the gradient-reduction strategy study (DESIGN.md §4/§12/§15).
 /// Needs no artifact bundles: for each world size × gradient size it
 /// reports each algorithm's modeled bytes-on-wire per rank (at both the
 /// f32 and the half-width bf16 wire format) and α–β time (and the cost
 /// model's `auto` pick), then verifies on REAL in-process collectives —
-/// at both wire precisions — that all strategies produce bit-identical
-/// parameters, that the sharded strategy's gradient traffic, as counted
-/// by `CommStats`, is strictly lower than the naive baseline, and that
-/// the bf16 wire format charges exactly half the f32 bytes.
+/// under every wire codec — that all strategies produce bit-identical
+/// parameters for the lossless codecs (and rank-replicated ones for the
+/// lossy codecs), that the sharded strategy's gradient traffic, as
+/// counted by `CommStats`, is strictly lower than the naive baseline,
+/// and that each codec charges its exact encoded byte width against f32
+/// (bf16 1/2, int8 1/4, topk per its 8-bytes-per-kept-element format).
 pub fn reduce_table(args: &Args) -> Result<()> {
     let log = progress_logger(args)?;
     let profile = ProfileName::from_id(&args.str_or("profile", "infiniband"))?;
@@ -216,12 +218,12 @@ pub fn reduce_table(args: &Args) -> Result<()> {
         }
     }
     // live exactness + traffic check on real collectives (threads), once
-    // per wire precision; finish() prints the table afterwards
+    // per wire codec; finish() prints the table afterwards
 
     let k = 4usize;
     let n = 1003; // non-divisible chunking
     let mut f32_wire_bytes: Vec<u64> = Vec::new(); // per algo, filled by the f32 pass
-    for wire in Precision::all() {
+    for wire in WireCodec::all() {
         let mut reference: Option<Vec<f32>> = None; // naive's result, the baseline
         for (ai, algo) in ReduceAlgo::all().into_iter().enumerate() {
             let world = CommWorld::new(k);
@@ -229,11 +231,12 @@ pub fn reduce_table(args: &Args) -> Result<()> {
                 .map(|rank| {
                     let comm = world.handle(rank);
                     std::thread::spawn(move || {
+                        let ctx = ReduceCtx::for_run(wire, n);
                         let mut grad: Vec<f32> =
                             (0..n).map(|i| ((i * 7 + rank * 13) % 97) as f32 * 0.125).collect();
                         let mut params = vec![0.0f32; n];
                         reduction(algo)
-                            .reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |p, g| {
+                            .reduce_and_apply(&comm, &mut grad, &mut params, &ctx, &mut |p, g| {
                                 p.copy_from_slice(g)
                             })
                             .unwrap();
@@ -249,31 +252,49 @@ pub fn reduce_table(args: &Args) -> Result<()> {
                 algo.id(),
                 wire.id()
             );
-            // cross-ALGORITHM bit-identity (inputs are identical per world)
-            match &reference {
-                None => reference = Some(outs[0].clone()),
-                Some(r) => anyhow::ensure!(
-                    &outs[0] == r,
-                    "{} ({}): result differs bitwise from naive",
-                    algo.id(),
-                    wire.id()
-                ),
+            // cross-ALGORITHM bit-identity — the lossless contract only:
+            // lossy codecs round at algorithm-specific slice boundaries,
+            // so they promise determinism per (codec, algo), not
+            // cross-algo equality (DESIGN.md §15)
+            if !wire.lossy() {
+                match &reference {
+                    None => reference = Some(outs[0].clone()),
+                    Some(r) => anyhow::ensure!(
+                        &outs[0] == r,
+                        "{} ({}): result differs bitwise from naive",
+                        algo.id(),
+                        wire.id()
+                    ),
+                }
             }
             let s = world.stats.snapshot();
             anyhow::ensure!(
                 algo != ReduceAlgo::Sharded || s.grad_wire_bytes < s.grad_wire_bytes_naive,
                 "sharded must move fewer gradient bytes than naive"
             );
-            // the DESIGN.md §12 acceptance check: bf16 charges exactly
-            // half the f32 wire bytes, algorithm by algorithm
+            // the §12/§15 acceptance checks: every codec charges its
+            // exact encoded width against f32, algorithm by algorithm
+            let per_rank_elems = f32_wire_bytes.get(ai).copied().unwrap_or(0) / 4 / k as u64;
             match wire {
-                Precision::F32 => f32_wire_bytes.push(s.grad_wire_bytes),
-                Precision::Bf16 => anyhow::ensure!(
+                WireCodec::F32 => f32_wire_bytes.push(s.grad_wire_bytes),
+                WireCodec::Bf16 => anyhow::ensure!(
                     2 * s.grad_wire_bytes == f32_wire_bytes[ai],
                     "{}: bf16 wire must charge exactly half of f32 ({} vs {})",
                     algo.id(),
                     s.grad_wire_bytes,
                     f32_wire_bytes[ai]
+                ),
+                WireCodec::Int8 => anyhow::ensure!(
+                    4 * s.grad_wire_bytes == f32_wire_bytes[ai],
+                    "{}: int8 wire must charge exactly a quarter of f32 ({} vs {})",
+                    algo.id(),
+                    s.grad_wire_bytes,
+                    f32_wire_bytes[ai]
+                ),
+                WireCodec::TopK => anyhow::ensure!(
+                    s.grad_wire_bytes == k as u64 * wire.encoded_bytes(per_rank_elems),
+                    "{}: topk wire bytes off the 8-bytes-per-kept-element format",
+                    algo.id()
                 ),
             }
             log.status(&format!(
@@ -294,7 +315,10 @@ pub fn reduce_table(args: &Args) -> Result<()> {
     {
         use crate::comm::OverlapMode;
         use crate::coordinator::TrainResult;
-        let quick = |overlap: OverlapMode, precision: Precision| -> Result<TrainResult> {
+        let quick = |overlap: OverlapMode,
+                     precision: Precision,
+                     wire: Option<WireCodec>|
+         -> Result<TrainResult> {
             let mut cfg = crate::config::TrainConfig::new("native", Algorithm::FastClipV3);
             cfg.backend = crate::runtime::BackendKind::Native;
             cfg.steps = 6;
@@ -306,6 +330,7 @@ pub fn reduce_table(args: &Args) -> Result<()> {
             cfg.lr.total_iters = 6;
             cfg.overlap = overlap;
             cfg.precision = precision;
+            cfg.wire = wire;
             // pinned: auto could resolve differently for the half-width
             // gradient, which would break the exact-2x byte comparison
             cfg.reduce = crate::comm::ReduceStrategy::Fixed(ReduceAlgo::Ring);
@@ -315,8 +340,8 @@ pub fn reduce_table(args: &Args) -> Result<()> {
             cfg.trace_out = args.get("trace-out").map(str::to_string);
             crate::coordinator::Trainer::new(cfg)?.run()
         };
-        let serial = quick(OverlapMode::Off, Precision::F32)?;
-        let piped = quick(OverlapMode::On, Precision::F32)?;
+        let serial = quick(OverlapMode::Off, Precision::F32, None)?;
+        let piped = quick(OverlapMode::On, Precision::F32, None)?;
         anyhow::ensure!(
             serial.final_params == piped.final_params,
             "overlapped reduction diverged from serial training"
@@ -328,8 +353,8 @@ pub fn reduce_table(args: &Args) -> Result<()> {
         ));
         // the same invariants under the bf16 wire + storage path, plus
         // the end-to-end ~2x wire-byte cut vs the f32 run above
-        let bf_serial = quick(OverlapMode::Off, Precision::Bf16)?;
-        let bf_piped = quick(OverlapMode::On, Precision::Bf16)?;
+        let bf_serial = quick(OverlapMode::Off, Precision::Bf16, None)?;
+        let bf_piped = quick(OverlapMode::On, Precision::Bf16, None)?;
         anyhow::ensure!(
             bf_serial.final_params == bf_piped.final_params,
             "bf16 overlapped reduction diverged from bf16 serial training"
@@ -343,6 +368,32 @@ pub fn reduce_table(args: &Args) -> Result<()> {
         log.status(&format!(
             "bf16 ok: bitwise serial==overlap; grad wire {} B vs f32 {} B per rank",
             bf_serial.grad_wire_bytes, serial.grad_wire_bytes
+        ));
+        // lossy gradient codecs end-to-end (DESIGN.md §15): run-to-run
+        // deterministic under a fixed (codec, algo), with the exact
+        // modeled byte cuts against the f32 serial run above
+        let i8a = quick(OverlapMode::Off, Precision::F32, Some(WireCodec::Int8))?;
+        let i8b = quick(OverlapMode::Off, Precision::F32, Some(WireCodec::Int8))?;
+        anyhow::ensure!(
+            i8a.final_params == i8b.final_params,
+            "int8-wire training must be run-to-run deterministic"
+        );
+        anyhow::ensure!(
+            4 * i8a.grad_wire_bytes == serial.grad_wire_bytes,
+            "int8 training must quarter gradient wire bytes ({} vs {})",
+            i8a.grad_wire_bytes,
+            serial.grad_wire_bytes
+        );
+        let tk = quick(OverlapMode::Off, Precision::F32, Some(WireCodec::TopK))?;
+        anyhow::ensure!(
+            8 * tk.grad_wire_bytes == serial.grad_wire_bytes,
+            "topk (1-in-16 kept, 8 B each) must cut gradient wire bytes 8x ({} vs {})",
+            tk.grad_wire_bytes,
+            serial.grad_wire_bytes
+        );
+        log.status(&format!(
+            "lossy codecs ok: int8 {} B, topk {} B vs f32 {} B per rank",
+            i8a.grad_wire_bytes, tk.grad_wire_bytes, serial.grad_wire_bytes
         ));
     }
     finish(args, "reduce", table, json_rows)

@@ -1,0 +1,101 @@
+//! `exp compress` — the gradient-compression study (DESIGN.md §15).
+//!
+//! Trains the same short configuration once per wire codec (f32, bf16,
+//! int8-blockwise, top-k with error feedback) with the reduction
+//! algorithm FIXED to ring, so the only thing that varies across rows is
+//! the codec. Reports gradient bytes-on-wire per rank against the final
+//! loss and eval scores — the bytes-vs-convergence trade each codec
+//! buys — plus the exact byte cut relative to the f32 row.
+//!
+//! Needs no artifact bundles: runs on the native backend everywhere.
+
+use anyhow::Result;
+
+use crate::comm::{ReduceAlgo, ReduceStrategy, WireCodec};
+use crate::config::{Algorithm, TrainConfig};
+use crate::coordinator::{TrainResult, Trainer};
+use crate::output::Table;
+use crate::util::{Args, Json};
+
+use super::common::{progress_logger, results_dir};
+
+/// Run the bytes-vs-convergence sweep and write `results/compress.*`.
+pub fn compress(args: &Args) -> Result<()> {
+    let log = progress_logger(args)?;
+    let algo = Algorithm::from_id(&args.str_or("algo", "fastclip-v3"))?;
+    let steps = args.u32_or("steps", 30)?;
+
+    let run = |wire: WireCodec| -> Result<TrainResult> {
+        let mut cfg = TrainConfig::new("native", algo);
+        cfg.backend = crate::runtime::BackendKind::Native;
+        cfg.preset = args.str_or("preset", &cfg.preset);
+        cfg.steps = steps;
+        cfg.iters_per_epoch = (steps / 4).max(1);
+        cfg.data.n_train = args.usize_or("n-train", 128)?;
+        cfg.data.n_eval = args.usize_or("n-eval", 64)?;
+        cfg.data.n_classes = 8;
+        cfg.lr.warmup_iters = (steps / 10).max(1);
+        cfg.lr.total_iters = steps;
+        // pinned algorithm: `auto` could legitimately pick a different
+        // reduction per codec (the encoded widths differ 8x), which
+        // would confound the bytes column
+        cfg.reduce = ReduceStrategy::Fixed(ReduceAlgo::Ring);
+        cfg.wire = Some(wire);
+        cfg.trace_out = args.get("trace-out").map(str::to_string);
+        Trainer::new(cfg)?.run()
+    };
+
+    let mut table = Table::new(
+        format!("Gradient wire codecs — bytes vs convergence ({}, {steps} steps)", algo.name()),
+        &["Codec", "Wire B/rank", "vs f32", "Final loss", "Loss vs f32", "Datacomp"],
+    );
+    let mut json_rows = Vec::new();
+    let mut f32_row: Option<(u64, f32)> = None; // (bytes, loss) baseline
+    for wire in WireCodec::all() {
+        let r = run(wire)?;
+        let loss = r.tail_loss(4);
+        let (fb, fl) = *f32_row.get_or_insert((r.grad_wire_bytes, loss));
+        anyhow::ensure!(
+            r.history.iter().all(|h| h.loss.is_finite()),
+            "{}: training diverged",
+            wire.id()
+        );
+        if wire == WireCodec::Int8 {
+            // the §15 acceptance check, live: exactly a 4x cut
+            anyhow::ensure!(
+                4 * r.grad_wire_bytes == fb,
+                "int8 must cut gradient wire bytes exactly 4x ({} vs {fb})",
+                r.grad_wire_bytes
+            );
+        }
+        table.row(vec![
+            wire.id().into(),
+            r.grad_wire_bytes.to_string(),
+            format!("{:.2}x", fb as f64 / r.grad_wire_bytes.max(1) as f64),
+            format!("{loss:.4}"),
+            format!("{:+.4}", loss - fl),
+            format!("{:.2}", r.final_eval.datacomp),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("codec", Json::str(wire.id())),
+            ("lossy", Json::Bool(wire.lossy())),
+            ("grad_wire_bytes_per_rank", Json::num(r.grad_wire_bytes as f64)),
+            ("bytes_vs_f32", Json::num(fb as f64 / r.grad_wire_bytes.max(1) as f64)),
+            ("final_loss", Json::num(loss as f64)),
+            ("loss_vs_f32", Json::num((loss - fl) as f64)),
+            ("datacomp", Json::num(r.final_eval.datacomp as f64)),
+            ("retrieval", Json::num(r.final_eval.retrieval as f64)),
+        ]));
+        log.status(&format!(
+            "{:5} done: {:>8} wire B/rank, final loss {loss:.4}",
+            wire.id(),
+            r.grad_wire_bytes
+        ));
+    }
+    table.print();
+    let dir = results_dir(args);
+    table.write_csv(&dir.join("compress.csv"))?;
+    crate::output::write_result(&dir, "compress", &Json::arr(json_rows))?;
+    log.status(&format!("wrote {}/compress.{{csv,json}}", dir.display()));
+    Ok(())
+}

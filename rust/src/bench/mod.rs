@@ -14,6 +14,7 @@
 //! | gamma-min | Fig. 5 / Appendix B         | gamma::gamma_min      |
 //! | fits      | Fig. 6 / Appendix C         | fits::fits            |
 //! | ckpt      | DESIGN.md §9 resume study   | ckpt::ckpt_study      |
+//! | compress  | DESIGN.md §15 wire codecs   | compress::compress    |
 //!
 //! Every runner accepts `--steps`, `--seeds`, `--out` and runner-specific
 //! options, prints the paper-shaped rows, and writes CSV + JSON under
@@ -26,6 +27,7 @@
 pub mod ckpt;
 pub mod common;
 pub mod components;
+pub mod compress;
 pub mod fits;
 pub mod gamma;
 pub mod scaling;
@@ -49,6 +51,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("gamma-min", "gamma_min x batch size (Fig. 5)"),
     ("fits", "batch/data-size fits for OpenCLIP (Fig. 6)"),
     ("ckpt", "checkpoint/resume: snapshot+restore overhead, bitwise equivalence (DESIGN.md §9)"),
+    ("compress", "gradient wire codecs: bytes vs convergence, f32/bf16/int8/topk (DESIGN.md §15)"),
 ];
 
 /// Dispatch an experiment id to its runner.
@@ -66,6 +69,7 @@ pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
         "gamma-min" => gamma::gamma_min(args),
         "fits" => fits::fits(args),
         "ckpt" => ckpt::ckpt_study(args),
+        "compress" => compress::compress(args),
         _ => bail!(
             "unknown experiment '{id}'; available:\n{}",
             EXPERIMENTS.iter().map(|(k, v)| format!("  {k:10} {v}")).collect::<Vec<_>>().join("\n")

@@ -1,14 +1,21 @@
-//! Raw tensor blobs: little-endian `f32` / `bf16` / `u64` files with
-//! FNV-1a 64 integrity hashes (DESIGN.md §9). A blob file is exactly its
-//! elements' LE bytes — no header; the checkpoint manifest records each
-//! blob's dtype tag, element count and hash, so a single flipped byte
-//! anywhere is detected on read and by `fastclip ckpt verify`.
+//! Raw tensor blobs: little-endian `f32` / `bf16` / `u64` / `resid`
+//! files with FNV-1a 64 integrity hashes (DESIGN.md §9). A blob file is
+//! exactly its elements' LE bytes — no header; the checkpoint manifest
+//! records each blob's dtype tag, element count and hash, so a single
+//! flipped byte anywhere is detected on read and by `fastclip ckpt
+//! verify`.
 //!
 //! The `bf16` kind (DESIGN.md §12) tags half-width bfloat16 payloads —
 //! exports and derived artifacts. Training state itself is deliberately
 //! never written bf16: the snapshot carries the f32 *master* weights and
 //! estimators even for `--precision bf16` runs, which is what keeps
 //! resume bitwise and elastic re-sharding precision-agnostic.
+//!
+//! The `resid` kind (DESIGN.md §15) tags per-rank error-feedback
+//! residuals banked by the `topk` wire codec. The payload is f32 LE —
+//! the distinct tag keeps residuals from being confused with model or
+//! estimator state by tools that scan the blob table, and lets resume
+//! detect their presence cheaply.
 
 use std::path::Path;
 
@@ -25,15 +32,20 @@ pub enum BlobKind {
     Bf16,
     /// 8-byte little-endian unsigned integers.
     U64,
+    /// 4-byte little-endian f32 error-feedback residuals of the `topk`
+    /// wire codec (DESIGN.md §15) — same encoding as [`BlobKind::F32`],
+    /// distinct tag.
+    Resid,
 }
 
 impl BlobKind {
-    /// File-extension id: `f32` | `bf16` | `u64`.
+    /// File-extension id: `f32` | `bf16` | `u64` | `resid`.
     pub fn id(&self) -> &'static str {
         match self {
             BlobKind::F32 => "f32",
             BlobKind::Bf16 => "bf16",
             BlobKind::U64 => "u64",
+            BlobKind::Resid => "resid",
         }
     }
 
@@ -43,26 +55,29 @@ impl BlobKind {
             "f32" => Ok(BlobKind::F32),
             "bf16" => Ok(BlobKind::Bf16),
             "u64" => Ok(BlobKind::U64),
-            _ => bail!("unknown blob kind '{id}' (expected f32|bf16|u64)"),
+            "resid" => Ok(BlobKind::Resid),
+            _ => bail!("unknown blob kind '{id}' (expected f32|bf16|u64|resid)"),
         }
     }
 
     /// Bytes per element.
     pub fn width(&self) -> usize {
         match self {
-            BlobKind::F32 => 4,
+            BlobKind::F32 | BlobKind::Resid => 4,
             BlobKind::Bf16 => 2,
             BlobKind::U64 => 8,
         }
     }
 
-    /// Kind from a blob file's extension (`.f32` / `.bf16` / `.u64`).
+    /// Kind from a blob file's extension
+    /// (`.f32` / `.bf16` / `.u64` / `.resid`).
     pub fn from_path(path: &Path) -> Result<BlobKind> {
         match path.extension().and_then(|e| e.to_str()) {
             Some("f32") => Ok(BlobKind::F32),
             Some("bf16") => Ok(BlobKind::Bf16),
             Some("u64") => Ok(BlobKind::U64),
-            _ => bail!("{} is not a blob file (.f32/.bf16/.u64)", path.display()),
+            Some("resid") => Ok(BlobKind::Resid),
+            _ => bail!("{} is not a blob file (.f32/.bf16/.u64/.resid)", path.display()),
         }
     }
 }
@@ -175,6 +190,13 @@ pub fn write_u64_blob(dir: &Path, name: &str, xs: &[u64]) -> Result<()> {
         .with_context(|| format!("writing blob {}", path.display()))
 }
 
+/// Write `<dir>/<name>.resid` — f32 LE payload, residual tag.
+pub fn write_resid_blob(dir: &Path, name: &str, xs: &[f32]) -> Result<()> {
+    let path = dir.join(format!("{name}.resid"));
+    std::fs::write(&path, f32s_to_bytes(xs))
+        .with_context(|| format!("writing blob {}", path.display()))
+}
+
 /// Read a blob's bytes and verify length + integrity hash against its
 /// manifest entry. Every checkpoint read goes through this, so corruption
 /// surfaces at resume time, not as silently wrong training state.
@@ -219,8 +241,16 @@ pub fn read_u64_verified(dir: &Path, spec: &BlobSpec) -> Result<Vec<u64>> {
     bytes_to_u64s(&read_verified(dir, spec)?)
 }
 
-/// Hash every blob file in `dir` (anything with a `.f32`/`.bf16`/`.u64`
-/// extension) into a sorted blob table — the finalize step of a snapshot.
+/// [`read_verified`] + f32 decode of a residual blob (errors on a
+/// non-resid spec). Bitwise exact — error-feedback resume depends on it.
+pub fn read_resid_verified(dir: &Path, spec: &BlobSpec) -> Result<Vec<f32>> {
+    ensure!(spec.kind == BlobKind::Resid, "{} is not a resid blob", spec.file);
+    bytes_to_f32s(&read_verified(dir, spec)?)
+}
+
+/// Hash every blob file in `dir` (anything with a
+/// `.f32`/`.bf16`/`.u64`/`.resid` extension) into a sorted blob table —
+/// the finalize step of a snapshot.
 pub fn scan_dir(dir: &Path) -> Result<Vec<BlobSpec>> {
     let mut specs = Vec::new();
     for entry in
@@ -282,6 +312,9 @@ mod tests {
         assert_eq!(BlobKind::from_id("bf16").unwrap(), BlobKind::Bf16);
         assert_eq!(BlobKind::Bf16.width(), 2);
         assert_eq!(BlobKind::from_path(Path::new("x/params.bf16")).unwrap(), BlobKind::Bf16);
+        assert_eq!(BlobKind::from_id("resid").unwrap(), BlobKind::Resid);
+        assert_eq!(BlobKind::Resid.width(), 4);
+        assert_eq!(BlobKind::from_path(Path::new("x/ef_rank0.resid")).unwrap(), BlobKind::Resid);
         assert!(BlobKind::from_id("f16").is_err());
     }
 
@@ -293,19 +326,30 @@ mod tests {
         write_f32_blob(&dir, "a", &[1.0, 2.0, -0.5]).unwrap();
         write_u64_blob(&dir, "b", &[7, 8]).unwrap();
         write_bf16_blob(&dir, "c", &[0x3F80, 0xC000]).unwrap();
+        write_resid_blob(&dir, "d", &[-0.0, 3.5e-12, 9.0]).unwrap();
         std::fs::write(dir.join("MANIFEST.json"), "{}").unwrap();
         let specs = scan_dir(&dir).unwrap();
-        assert_eq!(specs.len(), 3, "manifest not scanned as a blob");
+        assert_eq!(specs.len(), 4, "manifest not scanned as a blob");
         assert_eq!(specs[0].file, "a.f32");
         assert_eq!(specs[0].len, 3);
         assert_eq!(specs[1].file, "b.u64");
         assert_eq!(specs[2].file, "c.bf16");
         assert_eq!(specs[2].kind, BlobKind::Bf16);
         assert_eq!(specs[2].len, 2);
+        assert_eq!(specs[3].file, "d.resid");
+        assert_eq!(specs[3].kind, BlobKind::Resid);
+        assert_eq!(specs[3].len, 3);
         assert_eq!(read_f32_verified(&dir, &specs[0]).unwrap(), vec![1.0, 2.0, -0.5]);
         assert_eq!(read_u64_verified(&dir, &specs[1]).unwrap(), vec![7, 8]);
         assert_eq!(read_bf16_verified(&dir, &specs[2]).unwrap(), vec![0x3F80, 0xC000]);
+        let resid = read_resid_verified(&dir, &specs[3]).unwrap();
+        assert_eq!(resid.iter().map(|v| v.to_bits()).collect::<Vec<_>>(), vec![
+            (-0.0f32).to_bits(),
+            3.5e-12f32.to_bits(),
+            9.0f32.to_bits()
+        ]);
         assert!(read_bf16_verified(&dir, &specs[0]).is_err(), "kind mismatch rejected");
+        assert!(read_resid_verified(&dir, &specs[0]).is_err(), "f32 blob is not a resid blob");
 
         // flip one byte: the read must fail the integrity check
         let path = dir.join("a.f32");

@@ -97,7 +97,10 @@ pub fn resize_rank_state(
         old[0].tau.clone() // replicated scalar state: any rank's copy
     };
 
-    Ok(RankState { u1, u2, tau, loader: None, epoch })
+    // topk error-feedback residuals are per-rank wire state; a resized
+    // world has different per-rank selections anyway, so resume restarts
+    // the codec from zero residuals (same as the live-shrink path)
+    Ok(RankState { u1, u2, tau, loader: None, epoch, resid: None })
 }
 
 /// Reassemble a full optimizer state from per-rank shards written under

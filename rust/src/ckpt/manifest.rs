@@ -29,6 +29,13 @@ pub const MANIFEST_FILE: &str = "MANIFEST.json";
 /// resuming a bf16 snapshot under f32 — or vice versa — would silently
 /// fork the trajectory. f32 Display is shortest-round-trip, so string
 /// equality is value equality.
+///
+/// The gradient wire codec is echoed as a trailing ` wire=<id>` field
+/// **only when it differs from the precision's default**
+/// ([`crate::comm::WireCodec::from_precision`]): a lossy codec changes
+/// the update numerics, but the default wire echoes nothing so every
+/// pre-§15 checkpoint stays resumable (same trick as the `prec=` legacy
+/// suffix handling in [`super::check_compatible`]).
 pub fn hyper_echo(cfg: &TrainConfig) -> String {
     let o = &cfg.optimizer;
     let d = &cfg.data;
@@ -38,7 +45,7 @@ pub fn hyper_echo(cfg: &TrainConfig) -> String {
             format!("cosine({gamma_min},{decay_epochs})")
         }
     };
-    format!(
+    let mut echo = format!(
         "tau=({},{},{},{:?}) eps={} rho={} gamma={gamma} \
          lr=({},{},{},{}) iters_per_epoch={} opt=({},{},{},{},{}) \
          data=({},{},{}) prec={}",
@@ -62,7 +69,12 @@ pub fn hyper_echo(cfg: &TrainConfig) -> String {
         d.noise,
         d.zipf_s,
         cfg.precision.id(),
-    )
+    );
+    let wire = cfg.wire_codec();
+    if wire != crate::comm::WireCodec::from_precision(cfg.precision) {
+        echo.push_str(&format!(" wire={}", wire.id()));
+    }
+    echo
 }
 
 /// Run identity recorded with every snapshot. Resume checks it against
@@ -301,6 +313,18 @@ mod tests {
         let mut cfg4 = TrainConfig::new("x", crate::config::Algorithm::FastClipV3);
         cfg4.precision = crate::kernels::Precision::Bf16;
         assert_ne!(hyper_echo(&cfg4), base);
+        // the wire codec is echoed only when it departs from the
+        // precision default: default wires keep old checkpoints readable
+        let mut cfg5 = TrainConfig::new("x", crate::config::Algorithm::FastClipV3);
+        cfg5.wire = Some(crate::comm::WireCodec::F32);
+        assert_eq!(hyper_echo(&cfg5), base, "explicit default wire must echo nothing");
+        cfg5.wire = Some(crate::comm::WireCodec::TopK);
+        assert_eq!(hyper_echo(&cfg5), format!("{base} wire=topk"));
+        cfg5.wire = Some(crate::comm::WireCodec::Int8);
+        assert!(hyper_echo(&cfg5).ends_with(" wire=int8"));
+        // bf16 wire on a bf16-precision run is that precision's default
+        cfg4.wire = Some(crate::comm::WireCodec::Bf16);
+        assert!(!hyper_echo(&cfg4).contains("wire="));
     }
 
     #[test]

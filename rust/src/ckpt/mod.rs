@@ -145,13 +145,18 @@ mod tests {
                 states.push((loader, ustate, tau, opt, p));
             }
 
-            // snapshot (replicated optimizer: rank 0 writes it)
+            // snapshot (replicated optimizer: rank 0 writes it); each
+            // rank also banks distinct topk error-feedback residuals
+            let resid_for = |rank: usize| -> Vec<f32> {
+                (0..n_params).map(|i| (rank as f32 + 1.0) * (i as f32 - 4.5) * 1e-3).collect()
+            };
             let stage = stage_path(&root, 11);
             prepare_stage(&stage).unwrap();
             for (rank, (loader, ustate, tau, opt, _)) in states.iter().enumerate() {
                 let opt_state = opt.export_state();
                 let opt_arg = if rank == 0 { Some((&opt_state, false)) } else { None };
-                write_rank_state(&stage, rank, ustate, tau, loader, opt_arg).unwrap();
+                write_rank_state(&stage, rank, ustate, tau, loader, opt_arg, Some(&resid_for(rank)))
+                    .unwrap();
             }
             let meta = meta_for(&c, 11, world, n_params);
             let final_dir = finalize(&root, &stage, &meta, &states[0].4, 3).unwrap();
@@ -176,7 +181,12 @@ mod tests {
                 assert_eq!(export_tau(&r.tau), export_tau(tau), "{}", algo.id());
                 assert_eq!(r.loader.export(), loader.export());
                 assert_eq!(r.optim, opt.export_state());
+                // per-rank residuals come back bitwise, tagged .resid
+                assert_eq!(r.resid.as_deref(), Some(resid_for(rank).as_slice()));
             }
+            // elastic resume restarts the codec from zero residuals
+            let elastic = restore_worker(&ck, &c, 0, 1, 4, false).unwrap();
+            assert!(elastic.resid.is_none(), "resized world must not inherit residuals");
             let _ = std::fs::remove_dir_all(&root);
         }
     }
@@ -192,7 +202,7 @@ mod tests {
         let stage = stage_path(&root, 1);
         prepare_stage(&stage).unwrap();
         let os = opt.export_state();
-        write_rank_state(&stage, 0, &ustate, &tau, &loader, Some((&os, false))).unwrap();
+        write_rank_state(&stage, 0, &ustate, &tau, &loader, Some((&os, false)), None).unwrap();
         let meta = CkptMeta { world: 1, step: 1, ..meta_for(&c, 1, 1, 5) };
         let dir = finalize(&root, &stage, &meta, &[0.25; 5], 0).unwrap();
 
@@ -224,7 +234,7 @@ mod tests {
             let stage = stage_path(&root, step);
             prepare_stage(&stage).unwrap();
             let os = opt.export_state();
-            write_rank_state(&stage, 0, &ustate, &tau, &loader, Some((&os, false))).unwrap();
+            write_rank_state(&stage, 0, &ustate, &tau, &loader, Some((&os, false)), None).unwrap();
             let meta = CkptMeta { step, ..meta_for(&c, step, 1, 3) };
             finalize(&root, &stage, &meta, &[1.0; 3], 2).unwrap();
         }
@@ -249,7 +259,7 @@ mod tests {
             let stage = stage_path(&root, step);
             prepare_stage(&stage).unwrap();
             let os = opt.export_state();
-            write_rank_state(&stage, 0, &ustate, &tau, &loader, Some((&os, false))).unwrap();
+            write_rank_state(&stage, 0, &ustate, &tau, &loader, Some((&os, false)), None).unwrap();
             finalize(&root, &stage, &meta_for(&c, step, 1, 3), &[val; 3], 0).unwrap()
         };
         // a stale stage from a "crashed" earlier run at an unrelated step

@@ -11,6 +11,8 @@
 //! loader_rank<r>.u64   rank r's ShardLoader position + RNG stream state
 //! opt_full.f32/.u64    replicated optimizer state (naive/ring reduction)
 //! opt_rank<r>.f32/.u64 per-rank optimizer shards (sharded reduction)
+//! ef_rank<r>.resid     rank r's topk error-feedback residuals (--wire
+//!                      topk runs only, DESIGN.md §15)
 //! ```
 //!
 //! **Write protocol** (collective, driven by the trainer): rank 0 creates
@@ -59,6 +61,10 @@ fn opt_blob(rank: usize, sharded: bool) -> String {
     } else {
         "opt_full".to_string()
     }
+}
+
+fn ef_blob(rank: usize) -> String {
+    format!("ef_rank{rank}")
 }
 
 // ---------------------------------------------------- temperature codec
@@ -255,6 +261,10 @@ pub fn prepare_stage(stage: &Path) -> Result<()> {
 /// `Some` on every rank under the sharded reduction (each writes its own
 /// shard) and only on rank 0 under replicated reductions (the state is
 /// identical everywhere — one blob suffices and keeps snapshots small).
+/// `resid` is `Some` on every rank when the gradient wire runs the
+/// `topk` codec: each rank's error-feedback residuals are genuinely
+/// per-rank state, and snapshotting them is what makes `topk` resume
+/// bitwise-exact (DESIGN.md §15).
 pub fn write_rank_state(
     stage: &Path,
     rank: usize,
@@ -262,6 +272,7 @@ pub fn write_rank_state(
     tau: &TauState,
     loader: &ShardLoader,
     optim: Option<(&OptimState, bool)>,
+    resid: Option<&[f32]>,
 ) -> Result<()> {
     let (u1, u2) = ustate.parts();
     let mut u = Vec::with_capacity(u1.len() * 2);
@@ -282,6 +293,10 @@ pub fn write_rank_state(
         let name = opt_blob(rank, sharded);
         blob::write_f32_blob(stage, &name, &of)?;
         blob::write_u64_blob(stage, &name, &ou)?;
+    }
+
+    if let Some(resid) = resid {
+        blob::write_resid_blob(stage, &ef_blob(rank), resid)?;
     }
     Ok(())
 }
@@ -445,6 +460,10 @@ pub struct RankState {
     pub loader: Option<LoaderState>,
     /// epoch to fast-forward a fresh loader to when `loader` is `None`
     pub epoch: u32,
+    /// topk error-feedback residuals (full parameter length) — present
+    /// only when the checkpointed run banked them (`--wire topk`) and
+    /// the world size is unchanged; elastic resume restarts from zeros
+    pub resid: Option<Vec<f32>>,
 }
 
 /// Outcome of [`Checkpoint::verify`].
@@ -515,6 +534,15 @@ impl Checkpoint {
         }
     }
 
+    fn read_resid_opt(&self, name: &str) -> Result<Option<Vec<f32>>> {
+        if self.manifest.has_blob(&format!("{name}.resid")) {
+            let spec = self.manifest.blob(&format!("{name}.resid"))?;
+            Ok(Some(blob::read_resid_verified(&self.dir, spec)?))
+        } else {
+            Ok(None)
+        }
+    }
+
     /// The replicated parameters.
     pub fn load_params(&self) -> Result<Vec<f32>> {
         let p = self.read_f32("params")?;
@@ -551,7 +579,17 @@ impl Checkpoint {
             loader.order.len()
         );
         let epoch = loader.epoch;
-        Ok(RankState { u1, u2, tau, loader: Some(loader), epoch })
+
+        let resid = self.read_resid_opt(&ef_blob(rank))?;
+        if let Some(r) = &resid {
+            ensure!(
+                r.len() == self.manifest.meta.n_params,
+                "residual blob covers {} elements, model has {} parameters",
+                r.len(),
+                self.manifest.meta.n_params
+            );
+        }
+        Ok(RankState { u1, u2, tau, loader: Some(loader), epoch, resid })
     }
 
     /// Optimizer state sized for `target_rank` of a `target_world`-worker
@@ -624,6 +662,10 @@ pub struct RestoredWorker {
     pub loader: ShardLoader,
     /// optimizer state sized for this rank (full or chunk, per strategy)
     pub optim: OptimState,
+    /// topk error-feedback residuals, bitwise as checkpointed — `None`
+    /// when the checkpoint has none or after an elastic resize (the
+    /// trainer then starts the codec from zero residuals)
+    pub resid: Option<Vec<f32>>,
     /// completed steps at snapshot time — training resumes here
     pub start_step: u32,
 }
@@ -726,5 +768,13 @@ pub fn restore_worker(
     let tau = restore_tau(cfg, loader.shard_len(), &rs.tau)?;
     let optim = ck.load_optimizer(rank, world, sharded)?;
 
-    Ok(RestoredWorker { params, ustate, tau, loader, optim, start_step: ck.meta().step })
+    Ok(RestoredWorker {
+        params,
+        ustate,
+        tau,
+        loader,
+        optim,
+        resid: rs.resid,
+        start_step: ck.meta().step,
+    })
 }

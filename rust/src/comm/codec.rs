@@ -1,0 +1,591 @@
+//! Pluggable gradient wire codecs (DESIGN.md §15).
+//!
+//! A [`WireCodec`] decides how a rank's f32 contribution is represented
+//! on the wire during a collective, and how many bytes that
+//! representation costs. PR 5's `Precision`-typed `_px` collectives
+//! hard-wired the two dtype widths into every signature; this layer
+//! replaces them with a closed set of codecs (enum-dispatched, like
+//! [`Precision`] and [`super::ReduceAlgo`]) so new wire formats plug in
+//! without fanning a new parameter through every call site:
+//!
+//! | codec  | wire representation                  | bytes per element    |
+//! |--------|--------------------------------------|----------------------|
+//! | `f32`  | identity                             | 4                    |
+//! | `bf16` | round-to-nearest-even bf16           | 2                    |
+//! | `int8` | blockwise int8, per-block f32 scale  | 1 (scales = framing) |
+//! | `topk` | top `1/16` by magnitude, value+index | 8·⌈n/16⌉ total       |
+//!
+//! The f32 and bf16 codecs reproduce the pre-codec paths bit for bit:
+//! `f32` is the identity ([`WireCodec::wire_round`] is a no-op) and
+//! `bf16` delegates to the exact [`Precision::quantize`] rounding of
+//! DESIGN.md §12. The two lossy codecs trade exactness for bytes:
+//!
+//! * **`int8`** quantizes each [`INT8_BLOCK`]-element block to signed
+//!   8-bit codes against the block's max-|v| scale — a 4× payload cut
+//!   against f32. The per-block f32 scale is declared wire *framing*
+//!   (like lengths and tags, which no codec charges), so the accounted
+//!   payload is exactly 1 byte/element and the 4× invariant is exact —
+//!   the CI byte gates depend on that. Non-finite values pass through
+//!   verbatim and are excluded from the scale; an all-zero (or
+//!   no-finite) block is left untouched.
+//! * **`topk`** transmits only the k = ⌈n/[`TOPK_DIVISOR`]⌉ largest
+//!   elements by magnitude. A sparse payload must carry indices, so each
+//!   selected element costs 8 bytes (4 value + 4 index) — the index
+//!   overhead is real and [`WireCodec::encoded_bytes`] charges it, which
+//!   is why the `--reduce auto` cost model resolves through the codec
+//!   and not a dtype width. Selection is deterministic: strict
+//!   [`f32::total_cmp`] ordering on |v| with ties to the lower index
+//!   (NaNs sort largest and are transmitted). The dropped mass is not
+//!   lost: [`ReduceCtx`] carries a per-rank [`EfState`] error-feedback
+//!   residual that is added back into the next contribution before
+//!   selection, and the residual rides the checkpoint as its own blob
+//!   kind so resume stays bitwise-exact (DESIGN.md §15).
+//!
+//! Determinism contract: the lossy codecs drop bitwise-equality to the
+//! f32 path *and* to each other across algorithm / bucketing / overlap
+//! choices, but under a FIXED (codec, algorithm, bucketing, overlap)
+//! configuration every run remains bitwise deterministic — run-to-run,
+//! across kernel thread counts, and across checkpoint/resume.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::kernels::Precision;
+
+/// Elements per `int8` quantization block: each block of 64 carries its
+/// own f32 scale, so one outlier only coarsens 63 neighbours.
+pub const INT8_BLOCK: usize = 64;
+
+/// Density divisor of the `topk` codec: k = ⌈n / 16⌉ elements survive
+/// selection (¹⁄₁₆ of the gradient, at least one element).
+pub const TOPK_DIVISOR: usize = 16;
+
+/// A gradient wire format (see the module docs for the table). Copy and
+/// 2 bytes wide, so it travels freely into reduction-worker closures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireCodec {
+    /// Identity: full-width f32 elements, 4 bytes each.
+    #[default]
+    F32,
+    /// Round-to-nearest-even bf16 on both wire legs (DESIGN.md §12),
+    /// 2 bytes per element.
+    Bf16,
+    /// Blockwise signed 8-bit quantization, 1 byte per element (the
+    /// per-block scales are framing — see the module docs).
+    Int8,
+    /// Top-⌈n/16⌉ magnitude sparsification with per-rank error-feedback
+    /// residuals; 8 bytes per selected element (value + index).
+    TopK,
+}
+
+impl WireCodec {
+    /// Every codec, in the order tables and sweeps report them.
+    pub fn all() -> [WireCodec; 4] {
+        [WireCodec::F32, WireCodec::Bf16, WireCodec::Int8, WireCodec::TopK]
+    }
+
+    /// Kebab-case id used by the CLI (`--wire`), config files, trace
+    /// meta and bench row names.
+    pub fn id(&self) -> &'static str {
+        match self {
+            WireCodec::F32 => "f32",
+            WireCodec::Bf16 => "bf16",
+            WireCodec::Int8 => "int8",
+            WireCodec::TopK => "topk",
+        }
+    }
+
+    /// Parse a CLI/config id; unknown values are an error listing the
+    /// valid choices.
+    pub fn from_id(id: &str) -> Result<WireCodec> {
+        for c in WireCodec::all() {
+            if c.id() == id {
+                return Ok(c);
+            }
+        }
+        anyhow::bail!("unknown wire codec '{id}' (expected f32|bf16|int8|topk)")
+    }
+
+    /// The codec matching a compute [`Precision`]'s wire behaviour —
+    /// what a run uses when `--wire` is not given, which keeps every
+    /// pre-codec configuration bitwise unchanged.
+    pub fn from_precision(p: Precision) -> WireCodec {
+        match p {
+            Precision::F32 => WireCodec::F32,
+            Precision::Bf16 => WireCodec::Bf16,
+        }
+    }
+
+    /// Whether the codec loses information (drops bitwise-equality to
+    /// the f32 path — see the module-level determinism contract).
+    pub fn lossy(&self) -> bool {
+        matches!(self, WireCodec::Int8 | WireCodec::TopK)
+    }
+
+    /// Exact wire bytes for an `elems`-element payload under this codec
+    /// — the ONE place byte accounting knows codec widths. Callers
+    /// compute element counts first and encode last, so the truncating
+    /// `(K-1)/K`-style divisions round identically for every codec and
+    /// the exact-ratio invariants (bf16 = ½, int8 = ¼ of f32) hold.
+    pub fn encoded_bytes(&self, elems: u64) -> u64 {
+        match self {
+            WireCodec::F32 => 4 * elems,
+            WireCodec::Bf16 => 2 * elems,
+            WireCodec::Int8 => elems,
+            WireCodec::TopK => 8 * elems.div_ceil(TOPK_DIVISOR as u64),
+        }
+    }
+
+    /// The per-leg wire transform, applied in place: what a value looks
+    /// like after travelling one wire leg under this codec. `f32` is the
+    /// identity; `bf16` is the exact [`Precision::quantize`] rounding
+    /// (bitwise-identical to the pre-codec path); `int8` is the
+    /// blockwise quantize→dequantize round trip (blocks of
+    /// [`INT8_BLOCK`] from the start of `buf`); `topk` is a no-op here —
+    /// sparsification happens once per contribution in
+    /// [`ReduceCtx::sparsify`], above the collective layer, because it
+    /// needs the error-feedback state.
+    pub fn wire_round(&self, buf: &mut [f32]) {
+        match self {
+            WireCodec::F32 | WireCodec::TopK => {}
+            WireCodec::Bf16 => Precision::Bf16.quantize(buf),
+            WireCodec::Int8 => {
+                for block in buf.chunks_mut(INT8_BLOCK) {
+                    int8_round_block(block);
+                }
+            }
+        }
+    }
+
+    /// [`Self::wire_round`] into a fresh vector.
+    pub fn wire_rounded(&self, data: &[f32]) -> Vec<f32> {
+        let mut out = data.to_vec();
+        self.wire_round(&mut out);
+        out
+    }
+}
+
+/// Quantize→dequantize one block against its max-|v| scale over FINITE
+/// values: `code = round(v · 127/scale)` clamped to [−127, 127],
+/// `v' = code · scale/127`. Non-finite values pass through verbatim; a
+/// block with no finite non-zero value has no scale and is left as-is.
+fn int8_round_block(block: &mut [f32]) {
+    let mut scale = 0.0f32;
+    for &v in block.iter() {
+        if v.is_finite() {
+            scale = scale.max(v.abs());
+        }
+    }
+    if scale == 0.0 {
+        return;
+    }
+    let enc = 127.0f32 / scale;
+    let dec = scale / 127.0f32;
+    for v in block.iter_mut() {
+        if v.is_finite() {
+            let code = (*v * enc).round().clamp(-127.0, 127.0);
+            *v = code * dec;
+        }
+    }
+}
+
+/// Zero all but the k = ⌈n/[`TOPK_DIVISOR`]⌉ largest-|v| elements of
+/// `acc` (ties to the lower index; NaNs sort largest and survive).
+/// When `resid` is given, dropped values move into it VERBATIM and kept
+/// positions are zeroed there, so per element exactly one of
+/// (transmitted, residual) carries `acc`'s original bits — the exact
+/// carry-forward the error-feedback tests pin.
+fn topk_split(acc: &mut [f32], mut resid: Option<&mut [f32]>) {
+    let n = acc.len();
+    if n == 0 {
+        return;
+    }
+    let k = n.div_ceil(TOPK_DIVISOR);
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    if k < n {
+        // strict total order (total_cmp + index tie-break) makes the
+        // selected SET deterministic regardless of partition internals
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            acc[b as usize]
+                .abs()
+                .total_cmp(&acc[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+    }
+    let mut keep = vec![false; n];
+    for &i in &idx[..k] {
+        keep[i as usize] = true;
+    }
+    for (i, kept) in keep.iter().enumerate() {
+        if *kept {
+            if let Some(r) = resid.as_deref_mut() {
+                r[i] = 0.0;
+            }
+        } else {
+            if let Some(r) = resid.as_deref_mut() {
+                r[i] = acc[i];
+            }
+            acc[i] = 0.0;
+        }
+    }
+}
+
+/// One rank's error-feedback residual for the `topk` codec: the gradient
+/// mass dropped by past selections, full parameter length, added back
+/// into the next contribution before selection (momentum-style
+/// compensation, after the DisTrO-family trainers). Shared via `Arc`
+/// between the serial reducer and the overlap pipeline's reduction
+/// worker — only one of them reduces any given iteration, and bucket
+/// slices are disjoint, so the mutex is uncontended.
+#[derive(Debug)]
+pub struct EfState {
+    resid: Mutex<Vec<f32>>,
+}
+
+impl EfState {
+    /// Fresh all-zero residual for an `n`-parameter gradient.
+    pub fn new(n: usize) -> EfState {
+        EfState { resid: Mutex::new(vec![0.0f32; n]) }
+    }
+
+    /// Rebuild from a checkpointed residual blob (bitwise-exact resume).
+    pub fn from_residual(resid: Vec<f32>) -> EfState {
+        EfState { resid: Mutex::new(resid) }
+    }
+
+    /// Snapshot the residual for a checkpoint blob.
+    pub fn export(&self) -> Vec<f32> {
+        self.resid.lock().unwrap().clone()
+    }
+
+    /// Residual length (= the parameter count it was built for).
+    pub fn len(&self) -> usize {
+        self.resid.lock().unwrap().len()
+    }
+
+    /// Whether the residual is zero-length.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Everything a gradient reduction needs beyond the data itself: the
+/// wire codec and (for `topk`) the shared error-feedback state. Bundled
+/// so future knobs ride along without fanning a new parameter through
+/// [`super::GradientReduction`], the overlap pipeline and every test
+/// again. Cheap to clone (`Copy` codec + `Arc` residual) and `Send`, so
+/// the overlap pipeline moves a clone into its reduction worker.
+#[derive(Debug, Clone, Default)]
+pub struct ReduceCtx {
+    /// The gradient wire codec for this run.
+    pub codec: WireCodec,
+    /// Per-rank error-feedback residual; `Some` exactly when `codec` is
+    /// [`WireCodec::TopK`] in a trainer run. `None` under `topk` means
+    /// plain (uncompensated) top-k — used by micro-tests and benches.
+    pub ef: Option<Arc<EfState>>,
+}
+
+impl ReduceCtx {
+    /// The identity context: f32 wire, no residual — the pre-codec
+    /// behaviour, and what scalar/bootstrap collectives use.
+    pub fn f32() -> ReduceCtx {
+        ReduceCtx { codec: WireCodec::F32, ef: None }
+    }
+
+    /// A context for `codec` with no error-feedback state.
+    pub fn new(codec: WireCodec) -> ReduceCtx {
+        ReduceCtx { codec, ef: None }
+    }
+
+    /// The trainer's constructor: allocates the error-feedback residual
+    /// exactly when the codec needs one (`topk`), sized for an
+    /// `n_params`-element gradient.
+    pub fn for_run(codec: WireCodec, n_params: usize) -> ReduceCtx {
+        let ef = (codec == WireCodec::TopK).then(|| Arc::new(EfState::new(n_params)));
+        ReduceCtx { codec, ef }
+    }
+
+    /// Apply the codec's pre-collective transform to this rank's
+    /// contribution for `[global_lo, global_lo + buf.len())` of the flat
+    /// gradient, in place. A no-op for every codec except `topk`, which
+    /// adds the error-feedback residual slice back in, keeps the top
+    /// ⌈n/16⌉ elements and banks the rest into the residual (see
+    /// [`EfState`]). `global_lo` addresses the residual, so bucketed
+    /// reductions compensate exactly the elements they transmit.
+    pub fn sparsify(&self, buf: &mut [f32], global_lo: usize) {
+        if self.codec != WireCodec::TopK {
+            return;
+        }
+        match &self.ef {
+            Some(ef) => {
+                let mut resid = ef.resid.lock().unwrap();
+                let r = &mut resid[global_lo..global_lo + buf.len()];
+                for (b, ri) in buf.iter_mut().zip(r.iter()) {
+                    *b += *ri;
+                }
+                topk_split(buf, Some(r));
+            }
+            None => topk_split(buf, None),
+        }
+    }
+
+    /// [`Self::sparsify`] without mutating the caller's slice: returns
+    /// the transformed copy, or `None` when the codec's transform is a
+    /// no-op (everything but `topk`) — so the f32/bf16/int8 hot paths
+    /// pay no copy.
+    pub fn sparsified(&self, data: &[f32], global_lo: usize) -> Option<Vec<f32>> {
+        if self.codec != WireCodec::TopK {
+            return None;
+        }
+        let mut out = data.to_vec();
+        self.sparsify(&mut out, global_lo);
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn ids_roundtrip_and_precision_mapping() {
+        for c in WireCodec::all() {
+            assert_eq!(WireCodec::from_id(c.id()).unwrap(), c);
+        }
+        assert!(WireCodec::from_id("fp8").is_err());
+        assert_eq!(WireCodec::from_precision(Precision::F32), WireCodec::F32);
+        assert_eq!(WireCodec::from_precision(Precision::Bf16), WireCodec::Bf16);
+        assert_eq!(WireCodec::default(), WireCodec::F32);
+        assert!(!WireCodec::F32.lossy() && !WireCodec::Bf16.lossy());
+        assert!(WireCodec::Int8.lossy() && WireCodec::TopK.lossy());
+    }
+
+    /// Exact byte accounting per codec, including the odd tails the
+    /// `(K-1)/K` divisions produce and topk's index overhead.
+    #[test]
+    fn encoded_bytes_exact() {
+        for n in [0u64, 1, 15, 16, 17, 1003, 18_560] {
+            assert_eq!(WireCodec::F32.encoded_bytes(n), 4 * n);
+            assert_eq!(WireCodec::Bf16.encoded_bytes(n), 2 * n);
+            assert_eq!(WireCodec::Int8.encoded_bytes(n), n);
+            // int8 is EXACTLY 4x below f32 for every element count —
+            // the CI baseline gate depends on this being exact
+            assert_eq!(WireCodec::F32.encoded_bytes(n), 4 * WireCodec::Int8.encoded_bytes(n));
+            // topk: 8 bytes (value + index) per selected element
+            assert_eq!(WireCodec::TopK.encoded_bytes(n), 8 * n.div_ceil(16));
+        }
+        assert_eq!(WireCodec::TopK.encoded_bytes(17), 16, "17 elems -> k=2 -> 16 B");
+    }
+
+    /// f32 is the identity and bf16 delegates to the exact Precision
+    /// rounding — the bitwise bridge to the pre-codec paths.
+    #[test]
+    fn f32_identity_bf16_matches_precision() {
+        let xs: Vec<f32> = (0..257).map(|i| 0.1 + i as f32 * 1.017).collect();
+        assert_eq!(bits(&WireCodec::F32.wire_rounded(&xs)), bits(&xs));
+        assert_eq!(
+            bits(&WireCodec::Bf16.wire_rounded(&xs)),
+            bits(&Precision::Bf16.quantized(&xs))
+        );
+        // topk's wire_round is a no-op: sparsification happens in
+        // ReduceCtx::sparsify, above the collective layer
+        assert_eq!(bits(&WireCodec::TopK.wire_rounded(&xs)), bits(&xs));
+    }
+
+    /// int8 round trip: every finite value lands within half a code
+    /// step (scale/254) of its input, blocks are independent, and the
+    /// max-|v| element of each block is reproduced to a code step.
+    #[test]
+    fn int8_roundtrip_error_bound() {
+        // 2.5 blocks: exercises the odd 32-element tail block
+        let xs: Vec<f32> = (0..160).map(|i| (i as f32 * 0.73 - 37.0) * 1.3).collect();
+        let q = WireCodec::Int8.wire_rounded(&xs);
+        for (b, (orig, got)) in xs.chunks(INT8_BLOCK).zip(q.chunks(INT8_BLOCK)).enumerate() {
+            let scale = orig.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            for (i, (o, g)) in orig.iter().zip(got).enumerate() {
+                assert!(
+                    (o - g).abs() <= scale / 254.0 + scale * 1e-5,
+                    "block {b} elem {i}: {o} -> {g} (scale {scale})"
+                );
+            }
+        }
+        // a value only ~1/127 of its block max still quantizes to a
+        // nonzero code; values below half a code step collapse to zero
+        let mut small = vec![0.0f32; INT8_BLOCK];
+        small[0] = 127.0;
+        small[1] = 1.0; // exactly one code step
+        small[2] = 0.4; // under half a step
+        let q = WireCodec::Int8.wire_rounded(&small);
+        assert_eq!(q[0], 127.0);
+        assert_eq!(q[1], 1.0);
+        assert_eq!(q[2], 0.0);
+    }
+
+    /// int8 edge policy: all-zero blocks pass through, non-finite values
+    /// pass through verbatim and do not poison the block's scale.
+    #[test]
+    fn int8_edge_blocks() {
+        // reference transform, mirrored from int8_round_block
+        let step = |v: f32, scale: f32| -> f32 {
+            (v * (127.0 / scale)).round().clamp(-127.0, 127.0) * (scale / 127.0)
+        };
+
+        // all-zero block is untouched (no 0/0 scale)
+        let zeros = vec![0.0f32; INT8_BLOCK];
+        assert_eq!(bits(&WireCodec::Int8.wire_rounded(&zeros)), bits(&zeros));
+
+        // non-finite values are excluded from the scale and forwarded
+        // verbatim; their finite neighbours quantize against max|finite|
+        let mut xs = vec![0.5f32; INT8_BLOCK];
+        xs[3] = f32::INFINITY;
+        xs[7] = f32::NEG_INFINITY;
+        xs[11] = f32::NAN;
+        xs[20] = 2.0; // the block scale
+        let q = WireCodec::Int8.wire_rounded(&xs);
+        assert_eq!(q[3], f32::INFINITY);
+        assert_eq!(q[4].to_bits(), step(0.5, 2.0).to_bits(), "finite path vs max|finite| scale");
+        assert_eq!(q[7], f32::NEG_INFINITY);
+        assert!(q[11].is_nan());
+        assert_eq!(q[20].to_bits(), step(2.0, 2.0).to_bits());
+
+        // a block that is ONLY non-finite has no scale: verbatim
+        let inf = vec![f32::INFINITY; 5];
+        assert_eq!(WireCodec::Int8.wire_rounded(&inf), inf);
+
+        // blocks are independent: a huge value in block 0 must not
+        // coarsen block 1
+        let mut two = vec![0.01f32; 2 * INT8_BLOCK];
+        two[0] = 1e6;
+        let q = WireCodec::Int8.wire_rounded(&two);
+        assert_eq!(q[INT8_BLOCK].to_bits(), step(0.01, 0.01).to_bits());
+        assert!(q[1] == 0.0, "0.01 is far below 1e6's half code step");
+        assert_eq!(q[0].to_bits(), step(1e6, 1e6).to_bits());
+    }
+
+    /// topk selection: exactly ⌈n/16⌉ survivors, by magnitude, ties to
+    /// the lower index, NaNs transmitted — all deterministic.
+    #[test]
+    fn topk_selection_deterministic() {
+        // 33 elements -> k = 3
+        let mut xs: Vec<f32> = (0..33).map(|i| ((i * 7) % 13) as f32 - 6.0).collect();
+        let ctx = ReduceCtx::new(WireCodec::TopK);
+        ctx.sparsify(&mut xs, 0);
+        let kept: Vec<usize> =
+            xs.iter().enumerate().filter(|(_, v)| **v != 0.0).map(|(i, _)| i).collect();
+        assert_eq!(kept.len(), 3);
+        // |v| = 6 occurs at multiple indices (values ±6): the lower
+        // indices win the tie deterministically
+        let mut mags: Vec<(u32, usize)> = (0..33)
+            .map(|i| ((((i * 7) % 13) as f32 - 6.0f32).abs().to_bits(), i))
+            .collect();
+        mags.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let expect: Vec<usize> = {
+            let mut e: Vec<usize> = mags[..3].iter().map(|&(_, i)| i).collect();
+            e.sort_unstable();
+            e
+        };
+        assert_eq!(kept, expect);
+
+        // NaN sorts above everything under total_cmp on |v|
+        let mut ys = vec![1.0f32, f32::NAN, 3.0, -9.0, 2.0, 0.5, 0.25, 0.125];
+        ctx.sparsify(&mut ys, 0); // 8 elements -> k = ceil(8/16) = 1
+        let survivors: Vec<usize> =
+            ys.iter().enumerate().filter(|(_, v)| **v != 0.0).map(|(i, _)| i).collect();
+        assert_eq!(survivors, vec![1], "the NaN is the one transmitted element");
+
+        // short vectors keep at least one element
+        let mut one = vec![0.25f32];
+        ctx.sparsify(&mut one, 0);
+        assert_eq!(one, vec![0.25]);
+    }
+
+    /// Error feedback: per element exactly one of (transmitted,
+    /// residual) carries the accumulated value's exact bits, and the
+    /// banked mass re-enters the next round's selection.
+    #[test]
+    fn topk_error_feedback_carry_is_exact() {
+        let n = 48; // k = 3
+        let ef = Arc::new(EfState::new(n));
+        let ctx = ReduceCtx { codec: WireCodec::TopK, ef: Some(Arc::clone(&ef)) };
+
+        let g1: Vec<f32> = (0..n).map(|i| ((i * 11) % 17) as f32 * 0.37 - 2.9).collect();
+        let mut t1 = g1.clone();
+        ctx.sparsify(&mut t1, 0);
+        let r1 = ef.export();
+        for i in 0..n {
+            // acc == g1 here (residual started at zero)
+            let (t, r, a) = (t1[i].to_bits(), r1[i].to_bits(), g1[i].to_bits());
+            assert!(
+                (t == a && r == 0.0f32.to_bits()) || (t == 0.0f32.to_bits() && r == a),
+                "elem {i}: transmitted {t:08x} residual {r:08x} acc {a:08x}"
+            );
+        }
+        assert_eq!(t1.iter().filter(|v| **v != 0.0).count(), 3);
+
+        // round 2: the residual is added back before selection
+        let g2: Vec<f32> = (0..n).map(|i| ((i * 5) % 23) as f32 * 0.21 - 2.1).collect();
+        let acc: Vec<f32> = g2.iter().zip(&r1).map(|(g, r)| g + r).collect();
+        let mut t2 = g2.clone();
+        ctx.sparsify(&mut t2, 0);
+        let r2 = ef.export();
+        for i in 0..n {
+            let (t, r, a) = (t2[i].to_bits(), r2[i].to_bits(), acc[i].to_bits());
+            assert!(
+                (t == a && r == 0.0f32.to_bits()) || (t == 0.0f32.to_bits() && r == a),
+                "round 2 elem {i}"
+            );
+        }
+    }
+
+    /// Bucketed sparsification addresses the residual by global offset:
+    /// compensating `[lo, hi)` touches exactly that residual slice.
+    #[test]
+    fn topk_residual_addressed_by_global_offset() {
+        let ef = Arc::new(EfState::new(64));
+        let ctx = ReduceCtx { codec: WireCodec::TopK, ef: Some(Arc::clone(&ef)) };
+        let mut bucket: Vec<f32> = (0..32).map(|i| i as f32 + 1.0).collect();
+        ctx.sparsify(&mut bucket, 16); // covers global [16, 48)
+        let r = ef.export();
+        assert!(r[..16].iter().all(|v| *v == 0.0), "below the bucket: untouched");
+        assert!(r[48..].iter().all(|v| *v == 0.0), "above the bucket: untouched");
+        // k = 2 of 32 kept -> 30 residual entries banked inside [16,48)
+        assert_eq!(r[16..48].iter().filter(|v| **v != 0.0).count(), 30);
+        assert_eq!(bucket.iter().filter(|v| **v != 0.0).count(), 2);
+    }
+
+    /// The non-sparsifying codecs are exempt from the copy: sparsified
+    /// returns None and sparsify leaves the buffer untouched.
+    #[test]
+    fn non_topk_codecs_skip_sparsify() {
+        let xs: Vec<f32> = (0..40).map(|i| i as f32 * 0.3).collect();
+        for codec in [WireCodec::F32, WireCodec::Bf16, WireCodec::Int8] {
+            let ctx = ReduceCtx::new(codec);
+            assert!(ctx.sparsified(&xs, 0).is_none(), "{}", codec.id());
+            let mut ys = xs.clone();
+            ctx.sparsify(&mut ys, 0);
+            assert_eq!(bits(&ys), bits(&xs), "{}", codec.id());
+        }
+        let ctx = ReduceCtx::f32();
+        assert_eq!(ctx.codec, WireCodec::F32);
+        assert!(ctx.ef.is_none());
+        // for_run allocates the residual only for topk
+        assert!(ReduceCtx::for_run(WireCodec::Int8, 10).ef.is_none());
+        let t = ReduceCtx::for_run(WireCodec::TopK, 10);
+        assert_eq!(t.ef.as_ref().unwrap().len(), 10);
+        assert!(!t.ef.unwrap().is_empty());
+    }
+
+    /// EfState checkpoint round trip is bitwise.
+    #[test]
+    fn ef_state_export_import_roundtrip() {
+        let vals: Vec<f32> = (0..9).map(|i| i as f32 * 0.7 - 3.0).collect();
+        let ef = EfState::from_residual(vals.clone());
+        assert_eq!(bits(&ef.export()), bits(&vals));
+        assert_eq!(ef.len(), 9);
+    }
+}

@@ -46,6 +46,16 @@
 //! [`CostModel::cheapest_reduce`] implements the α–β selection policy
 //! behind [`ReduceStrategy::Auto`].
 //!
+//! # Wire codecs
+//!
+//! What travels on the wire is decided by a [`WireCodec`] ([`codec`],
+//! DESIGN.md §15): `f32` identity, `bf16` half-width rounding, `int8`
+//! blockwise quantization (4× cut) or `topk` sparsification with
+//! per-rank error-feedback residuals ([`EfState`]). The codec — plus
+//! the residual state — rides in a [`ReduceCtx`] through every
+//! reduction signature; collectives charge the codec's exact encoded
+//! bytes and [`ReduceStrategy::Auto`] prices algorithms with them.
+//!
 //! # Overlapped reduction
 //!
 //! All three algorithms also reduce **bucket-wise**
@@ -65,8 +75,7 @@
 //! all-reduce:
 //!
 //! ```
-//! use fastclip::comm::{reduction, CommWorld, ReduceAlgo};
-//! use fastclip::kernels::Precision;
+//! use fastclip::comm::{reduction, CommWorld, ReduceAlgo, ReduceCtx};
 //!
 //! let k = 4;
 //! let n = 10; // non-divisible: ranks own chunks of 3,3,3,1
@@ -82,7 +91,9 @@
 //!                     &comm,
 //!                     &mut grad,
 //!                     &mut params,
-//!                     Precision::F32, // or Bf16 for the half-width wire format
+//!                     // f32 identity wire — or ReduceCtx::new(WireCodec::Bf16)
+//!                     // etc. for a compressed gradient wire
+//!                     &ReduceCtx::f32(),
 //!                     &mut |p, g| {
 //!                         for (pi, gi) in p.iter_mut().zip(g) {
 //!                             *pi -= 0.1 * gi; // each rank updates only its shard
@@ -103,6 +114,7 @@
 //! ```
 
 pub mod bucket;
+pub mod codec;
 pub mod collective;
 mod cost_model;
 pub mod fault;
@@ -110,6 +122,7 @@ pub mod overlap;
 mod world;
 
 pub use bucket::{Bucket, BucketPlan};
+pub use codec::{EfState, ReduceCtx, WireCodec};
 pub use collective::{
     reduction, GradientReduction, NaiveAllReduce, ReduceAlgo, ReduceStrategy, ReducedSegment,
     RingAllReduce, ShardedReduceScatter,

@@ -35,6 +35,12 @@
 //! pipelined == serial bitwise for all 5 loss variants × 3 reduction
 //! algorithms.
 //!
+//! That pipelined == serial guarantee holds for the **lossless** wire
+//! codecs (`f32`, `bf16`). A lossy codec like `topk` selects per call
+//! buffer, so bucketing changes *which* elements travel — pipelined runs
+//! are still deterministic for a fixed plan, but are a different (equally
+//! valid) compression than the serial whole-vector reduce (DESIGN.md §15).
+//!
 //! [`ComputeBackend::step_emit`]: crate::runtime::ComputeBackend::step_emit
 
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -43,9 +49,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::kernels::Precision;
-
 use super::bucket::{Bucket, BucketPlan};
+use super::codec::ReduceCtx;
 use super::collective::{allgather_updated_params, reduction, GradientReduction, ReduceAlgo};
 use super::fault::CommError;
 use super::world::WorkerComm;
@@ -170,14 +175,18 @@ impl OverlapPipeline {
     /// Spawn the reduction worker for one rank. `reduce_comm` must be a
     /// handle into a world **dedicated to bucket reductions** (all ranks'
     /// pipelines, nothing else — see the module docs); `plan`, `algo` and
-    /// the `wire` precision (DESIGN.md §12) must be identical on every
-    /// rank.
+    /// the wire codec inside `ctx` (DESIGN.md §15) must be identical on
+    /// every rank. The [`ReduceCtx`] is owned by the worker thread for
+    /// the pipeline's lifetime — for `topk` it carries this rank's
+    /// error-feedback residuals, addressed by each bucket's global
+    /// offset, so pipelined and serial runs bank leftovers at the same
+    /// parameter indices.
     pub fn spawn(
         reduce_comm: WorkerComm,
         algo: ReduceAlgo,
         plan: BucketPlan,
         full_len: usize,
-        wire: Precision,
+        ctx: ReduceCtx,
     ) -> OverlapPipeline {
         assert_eq!(plan.total_len(), full_len, "plan must tile the gradient");
         let (job_tx, job_rx) = channel::<Job>();
@@ -189,7 +198,7 @@ impl OverlapPipeline {
                 let reducer: &'static dyn GradientReduction = reduction(algo);
                 while let Ok(job) = job_rx.recv() {
                     let t0 = Instant::now();
-                    match reducer.reduce_bucket(&reduce_comm, &job.data, job.bucket, full_len, wire)
+                    match reducer.reduce_bucket(&reduce_comm, &job.data, job.bucket, full_len, &ctx)
                     {
                         Ok(seg) => {
                             let busy_s = t0.elapsed().as_secs_f64();
@@ -354,7 +363,7 @@ impl Drop for OverlapPipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::{CommStats, CommWorld};
+    use crate::comm::{CommStats, CommWorld, WireCodec};
     use std::sync::Arc;
 
     fn bits(v: &[f32]) -> Vec<u32> {
@@ -374,7 +383,7 @@ mod tests {
         target: usize,
         iters: usize,
         segments: usize,
-        wire: Precision,
+        wire: WireCodec,
     ) -> Vec<Vec<f32>> {
         let stats = Arc::new(CommStats::default());
         let train = CommWorld::with_stats(k, Arc::clone(&stats));
@@ -385,7 +394,8 @@ mod tests {
                 let rcomm = reduce.handle(rank);
                 std::thread::spawn(move || {
                     let plan = BucketPlan::new(n, target);
-                    let mut pipe = OverlapPipeline::spawn(rcomm, algo, plan, n, wire);
+                    let mut pipe =
+                        OverlapPipeline::spawn(rcomm, algo, plan, n, ReduceCtx::new(wire));
                     let mut params = vec![1.0f32; n];
                     for it in 0..iters {
                         let grad = contribution(rank, it, n);
@@ -420,7 +430,7 @@ mod tests {
         n: usize,
         algo: ReduceAlgo,
         iters: usize,
-        wire: Precision,
+        wire: WireCodec,
     ) -> Vec<Vec<f32>> {
         let world = CommWorld::new(k);
         let handles: Vec<_> = (0..k)
@@ -430,8 +440,9 @@ mod tests {
                     let mut params = vec![1.0f32; n];
                     for it in 0..iters {
                         let mut grad = contribution(rank, it, n);
+                        let ctx = ReduceCtx::new(wire);
                         reduction(algo)
-                            .reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |p, g| {
+                            .reduce_and_apply(&comm, &mut grad, &mut params, &ctx, &mut |p, g| {
                                 for (pi, gi) in p.iter_mut().zip(g) {
                                     *pi -= 0.01 * gi;
                                 }
@@ -447,7 +458,10 @@ mod tests {
 
     #[test]
     fn pipelined_bitwise_equals_serial_every_algo() {
-        for wire in Precision::all() {
+        // lossless codecs only: topk's per-bucket selection is a
+        // different (valid) compression than the serial whole-vector
+        // reduce, so bitwise equality is not part of its contract
+        for wire in [WireCodec::F32, WireCodec::Bf16] {
             for algo in ReduceAlgo::all() {
                 for (k, n) in [(1usize, 13usize), (2, 64), (3, 97)] {
                     let serial = run_serial(k, n, algo, 3, wire);
@@ -480,7 +494,7 @@ mod tests {
             ReduceAlgo::Naive,
             BucketPlan::new(8, 4),
             8,
-            Precision::F32,
+            ReduceCtx::f32(),
         );
         pipe.emit(0, &[1.0; 4]);
         let comm = train.handle(0);
@@ -504,7 +518,7 @@ mod tests {
             ReduceAlgo::Ring,
             BucketPlan::new(8, 4),
             8,
-            Precision::F32,
+            ReduceCtx::f32(),
         );
         pipe.emit(4, &[1.0; 4]);
     }
@@ -543,7 +557,7 @@ mod tests {
                     let n = 64;
                     let plan = BucketPlan::new(n, 16);
                     let mut pipe =
-                        OverlapPipeline::spawn(rcomm, ReduceAlgo::Ring, plan, n, Precision::F32);
+                        OverlapPipeline::spawn(rcomm, ReduceAlgo::Ring, plan, n, ReduceCtx::f32());
                     let grad = contribution(rank, 0, n);
                     pipe.emit(0, &grad);
                     let mut params = vec![0.0f32; n];

@@ -22,8 +22,9 @@
 //!
 //! * **payload counters** (`*_bytes`): the per-rank payload each collective
 //!   was called with — what the seed tracked, useful for cross-checking
-//!   the modeled volumes. Payloads are charged at the wire width of the
-//!   run's [`Precision`] (4 bytes/element for f32, 2 for bf16);
+//!   the modeled volumes. Payloads are charged at the encoded width of
+//!   the collective's [`WireCodec`] (4 bytes/element for f32, 2 for
+//!   bf16, 1 for int8, 8 per selected element for topk — DESIGN.md §15);
 //! * **wire counters** (`grad_wire_bytes`, `grad_wire_bytes_naive`,
 //!   `param_wire_bytes`): the bytes a real fabric would carry per rank
 //!   under the chosen gradient-reduction algorithm, charged by
@@ -45,8 +46,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::kernels::Precision;
-
+use super::codec::WireCodec;
 use super::fault::{CancellableBarrier, CancellationToken, CommError};
 
 /// Per-collective result: `Err` only when the world was cancelled (a
@@ -160,8 +160,9 @@ pub struct CommStatsSnapshot {
     /// number of collective operations charged
     pub ops: u64,
     /// modeled fabric bytes per rank moved reducing gradients, under the
-    /// algorithm actually used (and at the wire width actually used:
-    /// bf16 payloads charge half the f32 bytes, DESIGN.md §12)
+    /// algorithm actually used (and at the encoded width of the wire
+    /// codec actually used: bf16 charges half the f32 bytes, int8 a
+    /// quarter — DESIGN.md §12/§15)
     pub grad_wire_bytes: u64,
     /// what [`super::NaiveAllReduce`] would have moved for the same
     /// reductions at the same wire width — the "before" of the
@@ -210,8 +211,8 @@ impl CommStats {
         *self.inner.lock().unwrap()
     }
 
-    fn add_payload(&self, which: Payload, elems: usize, wire: Precision) {
-        let bytes = (elems * wire.width()) as u64;
+    fn add_payload(&self, which: Payload, elems: usize, wire: WireCodec) {
+        let bytes = wire.encoded_bytes(elems as u64);
         let mut s = self.inner.lock().unwrap();
         match which {
             Payload::Gather => s.all_gather_bytes += bytes,
@@ -453,27 +454,25 @@ impl WorkerComm {
     }
 
     /// Concatenate every rank's `data` in rank order. All ranks must pass
-    /// equal-length slices. Full-width (f32) wire format.
-    pub fn all_gather(&self, data: &[f32]) -> CommResult<Vec<f32>> {
-        self.all_gather_px(data, Precision::F32)
-    }
-
-    /// [`Self::all_gather`] at an explicit wire precision (DESIGN.md
-    /// §12): under `Bf16` every rank's contribution is rounded to bf16
-    /// before it enters the wire (a no-op when the payload is already
-    /// bf16-representable, as the native backend's embeddings are) and
-    /// the payload counters charge 2 bytes/element instead of 4.
-    pub fn all_gather_px(&self, data: &[f32], wire: Precision) -> CommResult<Vec<f32>> {
+    /// equal-length slices. The codec sets the wire format (DESIGN.md
+    /// §12/§15): every rank's contribution is passed through
+    /// [`WireCodec::wire_round`] before it enters the wire (the identity
+    /// for `f32`, bf16 rounding for `bf16`, the blockwise round trip for
+    /// `int8` — a no-op when the payload is already representable, as
+    /// the native backend's bf16 embeddings are) and the payload
+    /// counters charge the codec's encoded bytes. A gather has no return
+    /// leg, so the transform is applied exactly once — K = 1 included.
+    pub fn all_gather(&self, data: &[f32], wire: WireCodec) -> CommResult<Vec<f32>> {
         self.pre_op()?;
         let w = &self.world;
         if w.k == 1 {
-            return Ok(wire.quantized(data));
+            return Ok(wire.wire_rounded(data));
         }
         {
             let mut slot = w.slots[self.rank].lock().unwrap();
             slot.clear();
             slot.extend_from_slice(data);
-            wire.quantize(&mut slot);
+            wire.wire_round(&mut slot);
         }
         w.stats.add_payload(Payload::Gather, data.len(), wire);
         self.barrier()?;
@@ -503,7 +502,7 @@ impl WorkerComm {
             slot.clear();
             slot.extend_from_slice(mine);
         }
-        w.stats.add_payload(Payload::Gather, mine.len(), Precision::F32);
+        w.stats.add_payload(Payload::Gather, mine.len(), WireCodec::F32);
         self.barrier()?;
         let mut out = Vec::with_capacity(total_len);
         for r in 0..w.k {
@@ -517,17 +516,11 @@ impl WorkerComm {
     /// SUM-reduce `buf` across ranks and return only the chunk this rank
     /// owns (see [`Self::owned_chunk`]). Elements are summed in rank
     /// order `0..K`, so the result is bit-identical to a rank-ordered
-    /// local reduction of the same contributions.
-    pub fn reduce_scatter_sum(&self, buf: &[f32]) -> CommResult<Vec<f32>> {
+    /// local reduction of the same contributions. See
+    /// [`Self::reduce_range_sum`] for the codec's wire contract.
+    pub fn reduce_scatter_sum(&self, buf: &[f32], wire: WireCodec) -> CommResult<Vec<f32>> {
         let (lo, hi) = self.owned_chunk(buf.len());
-        self.reduce_range_sum(buf, lo, hi)
-    }
-
-    /// [`Self::reduce_scatter_sum`] at an explicit wire precision — see
-    /// [`Self::reduce_range_sum_px`] for the bf16 wire contract.
-    pub fn reduce_scatter_sum_px(&self, buf: &[f32], wire: Precision) -> CommResult<Vec<f32>> {
-        let (lo, hi) = self.owned_chunk(buf.len());
-        self.reduce_range_sum_px(buf, lo, hi, wire)
+        self.reduce_range_sum(buf, lo, hi, wire)
     }
 
     /// SUM-reduce `buf` across ranks and return the sub-range `[lo, hi)`
@@ -540,39 +533,38 @@ impl WorkerComm {
     /// as [`Self::reduce_scatter_sum`] — which is this method with the
     /// owned chunk as the range — so any tiling of requests over any
     /// bucketing reproduces the unbucketed reduction bitwise.
-    pub fn reduce_range_sum(&self, buf: &[f32], lo: usize, hi: usize) -> CommResult<Vec<f32>> {
-        self.reduce_range_sum_px(buf, lo, hi, Precision::F32)
-    }
-
-    /// [`Self::reduce_range_sum`] at an explicit wire precision. The bf16
-    /// wire contract (DESIGN.md §12), per element: every rank's
-    /// contribution is rounded to bf16 before transmission, the K
-    /// contributions are summed in **f32** in rank order `0..K`, and the
-    /// reduced value is rounded to bf16 again for the return leg —
-    /// `q(Σ_r q(g_r))`. The same per-element operation sequence holds for
-    /// every algorithm, every bucketing and K = 1 (where `q(q(x)) =
-    /// q(x)`), which is what keeps naive|ring|sharded × bucketed|whole
-    /// bitwise identical under bf16 exactly as under f32.
-    pub fn reduce_range_sum_px(
+    ///
+    /// The codec's wire contract (DESIGN.md §12/§15), per element: every
+    /// rank's contribution passes through [`WireCodec::wire_round`]
+    /// before transmission, the K contributions are summed in **f32** in
+    /// rank order `0..K`, and the reduced value is rounded again for the
+    /// return leg — `q(Σ_r q(g_r))`. The same per-element operation
+    /// sequence holds for every algorithm, every bucketing and K = 1
+    /// (which applies `q(q(·))` explicitly rather than relying on the
+    /// codec being idempotent — bf16 is, int8 need not be), which is
+    /// what keeps a FIXED codec bitwise deterministic everywhere, and
+    /// keeps naive|ring|sharded × bucketed|whole identical under f32 and
+    /// bf16 exactly as before.
+    pub fn reduce_range_sum(
         &self,
         buf: &[f32],
         lo: usize,
         hi: usize,
-        wire: Precision,
+        wire: WireCodec,
     ) -> CommResult<Vec<f32>> {
         debug_assert!(lo <= hi && hi <= buf.len());
         self.pre_op()?;
         let w = &self.world;
         if w.k == 1 {
-            let mut out = wire.quantized(&buf[lo..hi]);
-            wire.quantize(&mut out); // idempotent: matches q(Σ q(·))
+            let mut out = wire.wire_rounded(&buf[lo..hi]);
+            wire.wire_round(&mut out); // return leg: q(Σ q(·)) with K = 1
             return Ok(out);
         }
         {
             let mut slot = w.slots[self.rank].lock().unwrap();
             slot.clear();
             slot.extend_from_slice(buf);
-            wire.quantize(&mut slot);
+            wire.wire_round(&mut slot);
         }
         w.stats.add_payload(Payload::ReduceScatter, buf.len(), wire);
         self.barrier()?;
@@ -584,7 +576,7 @@ impl WorkerComm {
             }
         }
         self.barrier()?; // slots free for reuse
-        wire.quantize(&mut acc);
+        wire.wire_round(&mut acc);
         Ok(acc)
     }
 
@@ -593,23 +585,21 @@ impl WorkerComm {
     /// r so the reduction parallelizes across workers (O(n) per rank).
     /// On `Err` the contents of `buf` are unspecified (partially
     /// exchanged) — a cancelled iteration's data is rolled back anyway.
-    pub fn all_reduce_sum(&self, buf: &mut [f32]) -> CommResult<()> {
-        self.all_reduce_sum_px(buf, Precision::F32)
-    }
-
-    /// [`Self::all_reduce_sum`] at an explicit wire precision — the same
-    /// per-element `q(Σ_r q(g_r))` contract as
-    /// [`Self::reduce_range_sum_px`] (the contribution is quantized
-    /// outbound, summed in f32 by the chunk owner, and the reduced value
-    /// quantized again for the all-gather leg).
-    pub fn all_reduce_sum_px(&self, buf: &mut [f32], wire: Precision) -> CommResult<()> {
+    /// Same per-element `q(Σ_r q(g_r))` codec contract as
+    /// [`Self::reduce_range_sum`] (the contribution is rounded outbound,
+    /// summed in f32 by the chunk owner, and the reduced value rounded
+    /// again for the all-gather leg).
+    pub fn all_reduce_sum(&self, buf: &mut [f32], wire: WireCodec) -> CommResult<()> {
         self.pre_op()?;
         let w = &self.world;
         if w.k == 1 {
-            wire.quantize(buf); // q(q(x)) = q(x): matches the K>1 contract
+            // both legs explicitly — q(q(x)) — rather than relying on the
+            // codec being idempotent (bf16 is; int8 need not be)
+            wire.wire_round(buf);
+            wire.wire_round(buf);
             return Ok(());
         }
-        wire.quantize(buf);
+        wire.wire_round(buf);
         {
             let mut slot = w.slots[self.rank].lock().unwrap();
             slot.clear();
@@ -628,7 +618,7 @@ impl WorkerComm {
                     *a += v;
                 }
             }
-            wire.quantize(&mut acc);
+            wire.wire_round(&mut acc);
             let mut out = w.chunks[self.rank].lock().unwrap();
             *out = acc;
         }
@@ -642,9 +632,10 @@ impl WorkerComm {
         Ok(())
     }
 
-    /// Mean across ranks (sum then scale).
+    /// Mean across ranks (sum then scale). Always full-width f32: the
+    /// mean is used for scalars and bootstrap state, never gradients.
     pub fn all_reduce_mean(&self, buf: &mut [f32]) -> CommResult<()> {
-        self.all_reduce_sum(buf)?;
+        self.all_reduce_sum(buf, WireCodec::F32)?;
         let inv = 1.0 / self.world.k as f32;
         for v in buf.iter_mut() {
             *v *= inv;
@@ -663,7 +654,7 @@ impl WorkerComm {
             let mut slot = w.slots[root].lock().unwrap();
             slot.clear();
             slot.extend_from_slice(buf);
-            w.stats.add_payload(Payload::Broadcast, buf.len(), Precision::F32);
+            w.stats.add_payload(Payload::Broadcast, buf.len(), WireCodec::F32);
         }
         self.barrier()?;
         if self.rank != root {
@@ -731,7 +722,9 @@ mod tests {
         let handles: Vec<_> = (0..2)
             .map(|r| {
                 let h = world.handle(r);
-                std::thread::spawn(move || h.all_reduce_sum(&mut [1.0f32]).unwrap())
+                std::thread::spawn(move || {
+                    h.all_reduce_sum(&mut [1.0f32], WireCodec::F32).unwrap()
+                })
             })
             .collect();
         for h in handles {
@@ -748,7 +741,7 @@ mod tests {
         for k in [1, 2, 4, 7] {
             let outs = run_workers(k, move |c| {
                 let mine = vec![c.rank() as f32; 3];
-                c.all_gather(&mine).unwrap()
+                c.all_gather(&mine, WireCodec::F32).unwrap()
             });
             let expect: Vec<f32> =
                 (0..k).flat_map(|r| std::iter::repeat(r as f32).take(3)).collect();
@@ -765,7 +758,7 @@ mod tests {
             let outs = run_workers(k, move |c| {
                 let mut buf: Vec<f32> =
                     (0..n).map(|i| (i as f32) + c.rank() as f32).collect();
-                c.all_reduce_sum(&mut buf).unwrap();
+                c.all_reduce_sum(&mut buf, WireCodec::F32).unwrap();
                 buf
             });
             let rank_sum: f32 = (0..k).map(|r| r as f32).sum();
@@ -784,7 +777,7 @@ mod tests {
         for (k, n) in [(1usize, 7usize), (2, 9), (4, 10), (3, 1000)] {
             let outs = run_workers(k, move |c| {
                 let buf: Vec<f32> = (0..n).map(|i| i as f32 * (c.rank() + 1) as f32).collect();
-                c.reduce_scatter_sum(&buf).unwrap()
+                c.reduce_scatter_sum(&buf, WireCodec::F32).unwrap()
             });
             let scale: f32 = (1..=k).map(|r| r as f32).sum();
             let mut covered = 0;
@@ -812,9 +805,9 @@ mod tests {
                 let buf: Vec<f32> = (0..n).map(|i| i as f32 * (c.rank() + 1) as f32).collect();
                 // rank r asks for [r, n) clamped — unequal, rank-specific
                 let lo = c.rank().min(n);
-                let mut got = c.reduce_range_sum(&buf, lo, n).unwrap();
+                let mut got = c.reduce_range_sum(&buf, lo, n, WireCodec::F32).unwrap();
                 // empty range is a legal collective call
-                let empty = c.reduce_range_sum(&buf, 0, 0).unwrap();
+                let empty = c.reduce_range_sum(&buf, 0, 0, WireCodec::F32).unwrap();
                 assert!(empty.is_empty());
                 got.insert(0, lo as f32); // carry lo for the assertion
                 got
@@ -830,6 +823,28 @@ mod tests {
         }
     }
 
+    /// Run one of each data collective at `wire` on a K=2 world and
+    /// return the charged payload counters (64 elements per call).
+    fn stats_at(wire: WireCodec) -> CommStatsSnapshot {
+        let world = CommWorld::new(2);
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let h = world.handle(r);
+                std::thread::spawn(move || {
+                    let buf = vec![1.5f32; 64];
+                    h.all_gather(&buf, wire).unwrap();
+                    let mut b = buf.clone();
+                    h.all_reduce_sum(&mut b, wire).unwrap();
+                    h.reduce_range_sum(&buf, 0, 64, wire).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        world.stats.snapshot()
+    }
+
     /// The bf16 wire contract: per element `q(Σ_r q(g_r))`, and the
     /// payload counters charge exactly half the f32 bytes.
     #[test]
@@ -839,7 +854,7 @@ mod tests {
             let outs = run_workers(k, move |c| {
                 let buf: Vec<f32> =
                     (0..n).map(|i| 0.1 + i as f32 * 1.017 + c.rank() as f32 * 0.31).collect();
-                c.reduce_range_sum_px(&buf, 0, n, Precision::Bf16).unwrap()
+                c.reduce_range_sum(&buf, 0, n, WireCodec::Bf16).unwrap()
             });
             // reference: quantize contributions, f32 sum in rank order,
             // quantize the result
@@ -855,31 +870,30 @@ mod tests {
             }
         }
         // payload accounting at half width (K=2 so bytes actually move)
-        let stats_at = |wire: Precision| {
-            let world = CommWorld::new(2);
-            let handles: Vec<_> = (0..2)
-                .map(|r| {
-                    let h = world.handle(r);
-                    std::thread::spawn(move || {
-                        let buf = vec![1.5f32; 64];
-                        h.all_gather_px(&buf, wire).unwrap();
-                        let mut b = buf.clone();
-                        h.all_reduce_sum_px(&mut b, wire).unwrap();
-                        h.reduce_range_sum_px(&buf, 0, 64, wire).unwrap();
-                    })
-                })
-                .collect();
-            for h in handles {
-                h.join().unwrap();
-            }
-            world.stats.snapshot()
-        };
-        let f = stats_at(Precision::F32);
-        let b = stats_at(Precision::Bf16);
+        let f = stats_at(WireCodec::F32);
+        let b = stats_at(WireCodec::Bf16);
         assert_eq!(f.all_gather_bytes, 2 * b.all_gather_bytes);
         assert_eq!(f.all_reduce_bytes, 2 * b.all_reduce_bytes);
         assert_eq!(f.reduce_scatter_bytes, 2 * b.reduce_scatter_bytes);
         assert_eq!(f.ops, b.ops);
+    }
+
+    /// The lossy codecs charge their exact encoded widths: int8 exactly
+    /// a quarter of f32 (the CI 4x gate), topk 8 bytes per selected
+    /// element — 64 elems -> k = 4 -> 32 B vs f32's 256 B.
+    #[test]
+    fn lossy_codecs_charge_encoded_bytes() {
+        let f = stats_at(WireCodec::F32);
+        let i8s = stats_at(WireCodec::Int8);
+        let t = stats_at(WireCodec::TopK);
+        assert_eq!(f.all_gather_bytes, 4 * i8s.all_gather_bytes);
+        assert_eq!(f.all_reduce_bytes, 4 * i8s.all_reduce_bytes);
+        assert_eq!(f.reduce_scatter_bytes, 4 * i8s.reduce_scatter_bytes);
+        assert_eq!(t.all_gather_bytes, 2 * 8 * (64u64 / 16));
+        assert_eq!(t.all_reduce_bytes, 2 * 8 * (64u64 / 16));
+        assert_eq!(t.reduce_scatter_bytes, 2 * 8 * (64u64 / 16));
+        assert_eq!(f.ops, i8s.ops);
+        assert_eq!(f.ops, t.ops);
     }
 
     /// Regression test for torn snapshots: paired counters (hidden vs
@@ -930,8 +944,8 @@ mod tests {
         let stats = Arc::new(CommStats::default());
         let a = CommWorld::with_stats(1, Arc::clone(&stats));
         let b = CommWorld::with_stats(1, Arc::clone(&stats));
-        a.handle(0).all_gather(&[1.0; 4]).unwrap();
-        b.handle(0).all_gather(&[1.0; 4]).unwrap();
+        a.handle(0).all_gather(&[1.0; 4], WireCodec::F32).unwrap();
+        b.handle(0).all_gather(&[1.0; 4], WireCodec::F32).unwrap();
         b.stats.add_overlap_us(70, 30);
         let s = stats.snapshot();
         assert_eq!(s.ops, 0, "K=1 gathers are local, nothing charged");
@@ -986,12 +1000,12 @@ mod tests {
         let outs = run_workers(3, |c| {
             let mut acc = vec![0.0f32; 3];
             for it in 0..50 {
-                let g = c.all_gather(&[it as f32, c.rank() as f32]).unwrap();
+                let g = c.all_gather(&[it as f32, c.rank() as f32], WireCodec::F32).unwrap();
                 acc[0] += g.iter().sum::<f32>();
                 let mut buf = vec![1.0f32; 2];
-                c.all_reduce_sum(&mut buf).unwrap();
+                c.all_reduce_sum(&mut buf, WireCodec::F32).unwrap();
                 acc[1] += buf[0];
-                let chunk = c.reduce_scatter_sum(&[1.0; 5]).unwrap();
+                let chunk = c.reduce_scatter_sum(&[1.0; 5], WireCodec::F32).unwrap();
                 acc[2] += chunk.iter().sum::<f32>();
             }
             acc
@@ -1007,11 +1021,11 @@ mod tests {
         let h0 = world.handle(0);
         let h1 = world.handle(1);
         let t = std::thread::spawn(move || {
-            h1.all_gather(&[1.0; 8]).unwrap();
-            h1.reduce_scatter_sum(&[1.0; 8]).unwrap();
+            h1.all_gather(&[1.0; 8], WireCodec::F32).unwrap();
+            h1.reduce_scatter_sum(&[1.0; 8], WireCodec::F32).unwrap();
         });
-        h0.all_gather(&[2.0; 8]).unwrap();
-        h0.reduce_scatter_sum(&[2.0; 8]).unwrap();
+        h0.all_gather(&[2.0; 8], WireCodec::F32).unwrap();
+        h0.reduce_scatter_sum(&[2.0; 8], WireCodec::F32).unwrap();
         t.join().unwrap();
         let s = world.stats.snapshot();
         assert_eq!(s.all_gather_bytes, 2 * 8 * 4);
@@ -1034,7 +1048,7 @@ mod tests {
                 let c = world.handle(r);
                 std::thread::spawn(move || {
                     let mut buf = vec![r as f32; 16];
-                    c.all_reduce_sum(&mut buf)
+                    c.all_reduce_sum(&mut buf, WireCodec::F32)
                 })
             })
             .collect();
@@ -1046,7 +1060,7 @@ mod tests {
         // permanently failed: a later collective errs immediately, K=1
         // fast paths included
         let c = world.handle(0);
-        assert!(c.all_gather(&[1.0]).is_err());
+        assert!(c.all_gather(&[1.0], WireCodec::F32).is_err());
         assert!(c.barrier().is_err());
     }
 
@@ -1071,7 +1085,7 @@ mod tests {
                     let c = world.handle(r);
                     std::thread::spawn(move || {
                         let mut buf: Vec<f32> = (0..17).map(|i| (i + r) as f32).collect();
-                        c.all_reduce_sum(&mut buf).unwrap();
+                        c.all_reduce_sum(&mut buf, WireCodec::F32).unwrap();
                         buf
                     })
                 })

@@ -372,6 +372,13 @@ pub struct TrainConfig {
     /// half-width gradient wire; f32 master weights, optimizer state and
     /// checkpoints). bf16 needs the native backend.
     pub precision: crate::kernels::Precision,
+    /// gradient wire codec (DESIGN.md §15): f32 | bf16 | int8 | topk.
+    /// `None` (the default) follows the compute precision — f32 wire for
+    /// f32 runs, bf16 wire for bf16 runs. Set explicitly to compress the
+    /// gradient wire independently of compute: int8 moves exactly 4×
+    /// fewer gradient bytes than f32, topk moves ~8× fewer with
+    /// error-feedback residuals carrying what was dropped.
+    pub wire: Option<crate::comm::WireCodec>,
     /// fault injection (DESIGN.md §13): kill rank R at the top of
     /// iteration N, grammar `rank=R@iter=N`; None = no injected failure
     pub fail: Option<String>,
@@ -470,6 +477,7 @@ impl TrainConfig {
             local_batch: 8,
             kernel_threads: 0,
             precision: crate::kernels::Precision::F32,
+            wire: None,
             fail: None,
             straggle: None,
             watchdog_ms: 0,
@@ -517,6 +525,15 @@ impl TrainConfig {
 
     pub fn epochs(&self) -> u32 {
         self.steps / self.iters_per_epoch.max(1)
+    }
+
+    /// The gradient wire codec this run reduces with: the explicit
+    /// `wire` choice, or — when unset — the compute precision's default
+    /// ([`crate::comm::WireCodec::from_precision`]), which reproduces
+    /// the pre-§15 behaviour exactly.
+    pub fn wire_codec(&self) -> crate::comm::WireCodec {
+        self.wire
+            .unwrap_or_else(|| crate::comm::WireCodec::from_precision(self.precision))
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -606,7 +623,7 @@ impl TrainConfig {
             "bucket_mb", "bucket_bytes", "tau_lr_decay_below",
             "ckpt_dir", "ckpt_every", "keep_last", "resume",
             "backend", "preset", "n_workers", "local_batch", "kernel_threads",
-            "precision", "fail", "straggle", "watchdog_ms",
+            "precision", "wire", "fail", "straggle", "watchdog_ms",
             "trace_out", "log_every", "quiet", "log_format",
             "optimizer.kind", "optimizer.beta1", "optimizer.beta2",
             "optimizer.eps", "optimizer.weight_decay", "optimizer.momentum",
@@ -659,6 +676,9 @@ impl TrainConfig {
         cfg.kernel_threads = kv.parse_or("kernel_threads", cfg.kernel_threads)?;
         cfg.precision =
             crate::kernels::Precision::from_id(&kv.str_or("precision", cfg.precision.id()))?;
+        if let Some(v) = kv.get("wire") {
+            cfg.wire = Some(crate::comm::WireCodec::from_id(v)?);
+        }
         if let Some(v) = kv.get("fail") {
             cfg.fail = Some(v.to_string());
         }
@@ -751,6 +771,9 @@ impl TrainConfig {
         let _ = writeln!(s, "local_batch = {}", self.local_batch);
         let _ = writeln!(s, "kernel_threads = {}", self.kernel_threads);
         let _ = writeln!(s, "precision = \"{}\"", self.precision.id());
+        if let Some(w) = self.wire {
+            let _ = writeln!(s, "wire = \"{}\"", w.id());
+        }
         if let Some(f) = &self.fail {
             let _ = writeln!(s, "fail = \"{f}\"");
         }
@@ -1039,6 +1062,31 @@ mod tests {
         let kv = crate::util::KvFile::parse("precision = \"fp16\"").unwrap();
         let err = TrainConfig::from_kv(&kv).unwrap_err();
         assert!(format!("{err}").contains("f32|bf16"), "{err}");
+    }
+
+    #[test]
+    fn wire_codec_roundtrips_and_defaults_to_precision() {
+        use crate::comm::WireCodec;
+        use crate::kernels::Precision;
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV1);
+        assert_eq!(cfg.wire, None, "wire defaults to unset");
+        assert_eq!(cfg.wire_codec(), WireCodec::F32, "f32 precision -> f32 wire");
+        cfg.precision = Precision::Bf16;
+        assert_eq!(cfg.wire_codec(), WireCodec::Bf16, "bf16 precision -> bf16 wire");
+        // unset wire writes no key, so old config files stay valid
+        assert!(!cfg.to_file_string().contains("wire ="));
+        cfg.precision = Precision::F32;
+        for codec in WireCodec::all() {
+            cfg.wire = Some(codec);
+            cfg.validate().unwrap();
+            let kv = crate::util::KvFile::parse(&cfg.to_file_string()).unwrap();
+            let back = TrainConfig::from_kv(&kv).unwrap();
+            assert_eq!(back.wire, Some(codec));
+            assert_eq!(back.wire_codec(), codec, "explicit wire overrides precision");
+        }
+        let kv = crate::util::KvFile::parse("wire = \"int4\"").unwrap();
+        let err = TrainConfig::from_kv(&kv).unwrap_err();
+        assert!(format!("{err}").contains("f32|bf16|int8|topk"), "{err}");
     }
 
     #[test]

@@ -59,8 +59,9 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::ckpt::{self, CkptMeta, CkptRunStats};
 use crate::comm::{
-    reduction, BucketPlan, CancellationToken, CommError, CommStats, CommWorld, CostModel,
-    FailSpec, FaultPlan, OverlapPipeline, ReduceAlgo, ReduceStrategy, TraceEventKind, WorkerComm,
+    reduction, BucketPlan, CancellationToken, CommError, CommStats, CommWorld, CostModel, EfState,
+    FailSpec, FaultPlan, OverlapPipeline, ReduceAlgo, ReduceCtx, ReduceStrategy, TraceEventKind,
+    WireCodec, WorkerComm,
 };
 use crate::config::{OptimizerKind, TrainConfig};
 use crate::data::{Dataset, ShardLoader};
@@ -108,6 +109,9 @@ pub struct TrainResult {
     /// the storage/wire precision the run computed at (`cfg.precision`,
     /// DESIGN.md §12): "f32" or "bf16"
     pub precision: &'static str,
+    /// the gradient wire codec the run reduced with (`cfg.wire`,
+    /// DESIGN.md §15): "f32", "bf16", "int8" or "topk"
+    pub wire: &'static str,
     /// whether the bucketed overlap pipeline ran (`cfg.overlap` resolved
     /// against the world size and bucket count, DESIGN.md §11)
     pub overlap: bool,
@@ -251,6 +255,7 @@ impl Trainer {
                     ("world", Json::num(k as f64)),
                     ("steps", Json::num(self.cfg.steps)),
                     ("precision", Json::str(self.cfg.precision.id())),
+                    ("wire", Json::str(self.cfg.wire_codec().id())),
                     ("reduce", Json::str(self.cfg.reduce.id())),
                     ("overlap", Json::str(self.cfg.overlap.id())),
                     ("preset", Json::str(self.cfg.preset.as_str())),
@@ -371,6 +376,7 @@ impl Trainer {
             timing: out.timing,
             reduce_algorithm: out.reduce_id,
             precision: self.cfg.precision.id(),
+            wire: self.cfg.wire_codec().id(),
             overlap: out.overlap,
             n_buckets: out.n_buckets,
             comm_bytes: stats.payload_bytes(),
@@ -674,11 +680,14 @@ fn worker_loop(
         cfg.precision,
     )?;
     let rt = rt.as_mut();
-    // the wire precision (DESIGN.md §12): bf16 halves gradient payloads
-    // (and the feature gathers, whose embeddings are bf16-representable
-    // under bf16 compute); master-state legs (u/τ gathers, the sharded
-    // parameter all-gather, loss scalars) always stay f32
-    let wire = cfg.precision;
+    // wire codecs (DESIGN.md §15): the feature gathers follow the compute
+    // precision (embeddings are bf16-representable under bf16 compute),
+    // while the gradient wire can compress independently (`--wire`) —
+    // int8-blockwise or top-k with error feedback. Master-state legs
+    // (u/τ gathers, the sharded parameter all-gather, loss scalars)
+    // always stay f32.
+    let feat_wire = WireCodec::from_precision(cfg.precision);
+    let grad_wire = cfg.wire_codec();
     let k = comm.world_size();
     let bl = manifest.local_batch;
     let (d, p) = (manifest.model.d_embed, manifest.n_params);
@@ -701,10 +710,11 @@ fn worker_loop(
     let cost = CostModel::new(cfg.network.profile(), cfg.nodes, cfg.gpus_per_node);
 
     // gradient-reduction strategy: resolved once from the gradient's
-    // WIRE size (half under bf16 — the cheapest algorithm can change
-    // with the width); the sharded strategy builds optimizer state over
-    // this rank's chunk only (segments clipped to the shard, DESIGN.md §4)
-    let mut algo = cfg.reduce.resolve(&cost, p * wire.width());
+    // encoded WIRE size (the codec changes the byte width, and with it
+    // the cheapest algorithm — topk's index overhead included); the
+    // sharded strategy builds optimizer state over this rank's chunk
+    // only (segments clipped to the shard, DESIGN.md §4)
+    let mut algo = cfg.reduce.resolve(&cost, grad_wire, p);
     if algo == ReduceAlgo::Sharded
         && cfg.reduce == ReduceStrategy::Auto
         && cfg.optimizer.kind == OptimizerKind::Lamb
@@ -729,15 +739,12 @@ fn worker_loop(
     // size-targeted buckets and reduce finished buckets on a background
     // worker (over the dedicated reduce world) while the backward pass
     // still writes later segments. Auto enables it exactly when there is
-    // something to hide: K > 1 and more than one bucket.
+    // something to hide: K > 1 and more than one bucket. The pipeline
+    // itself is spawned after the resume block so its reduction context
+    // can be seeded from the checkpoint's residuals.
     let plan = BucketPlan::for_bytes(p, cfg.bucket_bytes);
     let n_buckets = plan.len();
     let overlap_on = cfg.overlap.enabled(k, n_buckets);
-    let mut pipeline = if overlap_on {
-        Some(OverlapPipeline::spawn(reduce_comm, algo, plan, p, wire))
-    } else {
-        None
-    };
 
     let n_scalar_vectors = if individual_tau { 4 } else { 2 };
     let volumes = IterationVolumes::for_pattern(
@@ -757,6 +764,7 @@ fn worker_loop(
     // with a local `?` while its peers head into the next collective
     // would deadlock the world, so errors are made collective instead.
     let mut start_step: u32 = 0;
+    let mut restored_resid: Option<Vec<f32>> = None;
     if let Some(resume) = &cfg.resume {
         let t0 = Instant::now();
         let attempt = (|| -> Result<ckpt::RestoredWorker> {
@@ -788,6 +796,7 @@ fn worker_loop(
         tau = restored.tau;
         loader = restored.loader;
         start_step = restored.start_step;
+        restored_resid = restored.resid;
         let imported = optimizer.import_state(&restored.optim);
         ckpt_sync(&comm, imported, "importing optimizer state")?;
         acc.ckpt.restore_s += t0.elapsed().as_secs_f64();
@@ -800,6 +809,25 @@ fn worker_loop(
         acc.history.retain(|r| r.step < start_step);
         acc.evals.retain(|e| e.step < start_step);
     }
+
+    // gradient-wire reduction context (DESIGN.md §15): the codec plus,
+    // for topk, this rank's error-feedback residuals — seeded from the
+    // checkpoint on a same-world resume so the compressed trajectory
+    // continues bitwise, zeroed otherwise
+    let ctx = match (grad_wire, restored_resid) {
+        (WireCodec::TopK, Some(r)) => {
+            ReduceCtx { codec: grad_wire, ef: Some(Arc::new(EfState::from_residual(r))) }
+        }
+        _ => ReduceCtx::for_run(grad_wire, p),
+    };
+    let mut pipeline = if overlap_on {
+        // the worker thread owns a clone of the context — same codec,
+        // same shared residual store — so pipelined topk banks residuals
+        // at the same global parameter indices the serial path would
+        Some(OverlapPipeline::spawn(reduce_comm, algo, plan, p, ctx.clone()))
+    } else {
+        None
+    };
 
     let mut images = vec![0.0f32; bl * img_dim];
     let mut texts = vec![0i32; bl * dims.t_len];
@@ -842,8 +870,8 @@ fn worker_loop(
         // changes (DESIGN.md §12)
         let (e1, e2) = crate::span!(rec, "encode", t, rt.encode(&params, &images, &texts))?;
         let gather_tok = rec.begin("gather", t);
-        let e1g = comm.all_gather_px(&e1, wire)?;
-        let e2g = comm.all_gather_px(&e2, wire)?;
+        let e1g = comm.all_gather(&e1, feat_wire)?;
+        let e2g = comm.all_gather(&e2, feat_wire)?;
         rec.end(gather_tok);
 
         // 3. phase_g: Eq. (1) u update ---------------------------- (compute)
@@ -864,12 +892,12 @@ fn worker_loop(
 
         // 4. gather the scalar state ---------------------------------- (comm)
         let gather_tok = rec.begin("gather", t);
-        let u1g = comm.all_gather(&u1n)?;
-        let u2g = comm.all_gather(&u2n)?;
+        let u1g = comm.all_gather(&u1n, WireCodec::F32)?;
+        let u2g = comm.all_gather(&u2n, WireCodec::F32)?;
         let tau_input_vecs; // keeps gathered τ alive across the step call
         let tau_input = if individual_tau {
-            let t1g = comm.all_gather(&tau1_rows)?;
-            let t2g = comm.all_gather(&tau2_rows)?;
+            let t1g = comm.all_gather(&tau1_rows, WireCodec::F32)?;
+            let t2g = comm.all_gather(&tau2_rows, WireCodec::F32)?;
             tau_input_vecs = (t1g, t2g);
             TauInput::Individual { tau1g: &tau_input_vecs.0, tau2g: &tau_input_vecs.1 }
         } else {
@@ -911,7 +939,7 @@ fn worker_loop(
             rec.end(step_tok);
             let mut grad = out.grad;
             let reduce_tok = rec.begin("reduce", t);
-            reducer.reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |pslice, gslice| {
+            reducer.reduce_and_apply(&comm, &mut grad, &mut params, &ctx, &mut |pslice, gslice| {
                 let t_opt = Instant::now();
                 optimizer.step(pslice, gslice, lr);
                 opt_s += t_opt.elapsed().as_secs_f64();
@@ -987,6 +1015,10 @@ fn worker_loop(
             let sharded = algo == ReduceAlgo::Sharded;
             let opt_state =
                 if sharded || rank == 0 { Some(optimizer.export_state()) } else { None };
+            // topk wire state: every rank snapshots its error-feedback
+            // residuals so a same-world resume continues the compressed
+            // trajectory bitwise (DESIGN.md §15)
+            let resid = ctx.ef.as_ref().map(|ef| ef.export());
             let wrote = ckpt::write_rank_state(
                 &stage,
                 rank,
@@ -994,6 +1026,7 @@ fn worker_loop(
                 &tau,
                 &loader,
                 opt_state.as_ref().map(|s| (s, sharded)),
+                resid.as_deref(),
             );
             ckpt_sync(&comm, wrote, "writing rank state blobs")?;
             let finalized = if rank == 0 {
@@ -1125,7 +1158,7 @@ fn reduce_step_scalars(comm: &WorkerComm, loss: f32, tau: &TauGrads) -> Result<(
     if let TauGrads::Global(g) = tau {
         scalars[1] = *g;
     }
-    comm.all_reduce_sum(&mut scalars)?;
+    comm.all_reduce_sum(&mut scalars, WireCodec::F32)?;
     Ok((scalars[0], scalars[1]))
 }
 
@@ -1145,7 +1178,8 @@ fn reduce_step_scalars(comm: &WorkerComm, loss: f32, tau: &TauGrads) -> Result<(
 /// `tests/fault_injection.rs`).
 fn ckpt_sync<T>(comm: &WorkerComm, local: Result<T>, what: &str) -> Result<T> {
     let mut flag = [if local.is_err() { 1.0f32 } else { 0.0 }];
-    comm.all_reduce_sum(&mut flag).with_context(|| format!("checkpoint: {what}"))?;
+    comm.all_reduce_sum(&mut flag, WireCodec::F32)
+        .with_context(|| format!("checkpoint: {what}"))?;
     match local {
         Err(e) => Err(e).with_context(|| format!("checkpoint: {what}")),
         Ok(v) => {
@@ -1294,6 +1328,37 @@ mod tests {
         // the pipeline measured its reduction split; serial charged none
         assert!(piped.hidden_comm_us > 0 || piped.exposed_comm_us > 0);
         assert_eq!(serial.hidden_comm_us + serial.exposed_comm_us, 0);
+    }
+
+    #[test]
+    fn lossy_wire_codecs_train_and_cut_gradient_bytes() {
+        use crate::comm::{ReduceAlgo, ReduceStrategy, WireCodec};
+        let run = |wire: Option<WireCodec>| {
+            let mut cfg = quick_cfg(Algorithm::FastClipV1, 4);
+            // fix the algorithm so byte counts compare across codecs
+            cfg.reduce = ReduceStrategy::Fixed(ReduceAlgo::Ring);
+            cfg.wire = wire;
+            Trainer::new(cfg).unwrap().run().unwrap()
+        };
+        let f = run(None);
+        let int8 = run(Some(WireCodec::Int8));
+        let topk = run(Some(WireCodec::TopK));
+        assert_eq!(f.wire, "f32");
+        assert_eq!(int8.wire, "int8");
+        assert_eq!(topk.wire, "topk");
+        // int8 is an exact 4x cut (per-block scales are framing, §15);
+        // topk moves 8 bytes per kept element, 1 in 16 kept
+        assert_eq!(int8.grad_wire_bytes * 4, f.grad_wire_bytes);
+        assert_eq!(topk.grad_wire_bytes * 8, f.grad_wire_bytes);
+        for r in [&int8, &topk] {
+            assert!(r.history.iter().all(|h| h.loss.is_finite()));
+            assert!(r.final_params.iter().all(|p| p.is_finite()));
+        }
+        // lossy wires stay run-to-run deterministic
+        let int8b = run(Some(WireCodec::Int8));
+        assert_eq!(int8.final_params, int8b.final_params);
+        let topkb = run(Some(WireCodec::TopK));
+        assert_eq!(topk.final_params, topkb.final_params);
     }
 
     #[test]

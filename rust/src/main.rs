@@ -71,6 +71,9 @@ fn print_help() {
              --workers K --batch B --kernel-threads T   native topology\n\
              --precision f32|bf16   bf16 compute + half-width gradient wire\n\
                                 (native backend; f32 master weights, DESIGN.md §12)\n\
+             --wire f32|bf16|int8|topk   gradient wire codec (default follows\n\
+                                --precision; int8 = exact 4x cut, topk = ~8x\n\
+                                with error feedback — DESIGN.md §15)\n\
              --bundle <dir>     artifact bundle (default artifacts/tiny_k2_b8)\n\
              --config <file>    load a configs/*.toml preset instead of flags\n\
              --steps N --seed S --optimizer adamw|lamb|lion|sgdm\n\
@@ -127,6 +130,11 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     cfg.precision = fastclip::kernels::Precision::from_id(
         &args.str_or("precision", cfg.precision.id()),
     )?;
+    // gradient wire codec (DESIGN.md §15): unset keeps the precision's
+    // lossless default; codec typos exit non-zero with the choices listed
+    if let Some(w) = args.get("wire") {
+        cfg.wire = Some(fastclip::comm::WireCodec::from_id(w)?);
+    }
     cfg.steps = args.u32_or("steps", cfg.steps)?;
     cfg.iters_per_epoch = args.u32_or("iters-per-epoch", cfg.iters_per_epoch)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
@@ -232,6 +240,7 @@ fn train(args: &Args) -> Result<()> {
     t.row(vec!["real bytes moved".into(), format!("{}", result.comm_bytes)]);
     t.row(vec!["grad reduction".into(), result.reduce_algorithm.into()]);
     t.row(vec!["precision".into(), result.precision.into()]);
+    t.row(vec!["grad wire codec".into(), result.wire.into()]);
     if result.overlap {
         t.row(vec![
             "overlap pipeline".into(),

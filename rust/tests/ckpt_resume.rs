@@ -197,8 +197,16 @@ impl SimWorld {
         for r in 0..self.k {
             let os = self.opts[r].export_state();
             let arg = if self.sharded || r == 0 { Some((&os, self.sharded)) } else { None };
-            ckpt::write_rank_state(&stage, r, &self.ustates[r], &self.taus[r], &self.loaders[r], arg)
-                .unwrap();
+            ckpt::write_rank_state(
+                &stage,
+                r,
+                &self.ustates[r],
+                &self.taus[r],
+                &self.loaders[r],
+                arg,
+                None,
+            )
+            .unwrap();
         }
         ckpt::finalize(root, &stage, &self.meta(), &self.params[0], 3).unwrap()
     }
@@ -464,6 +472,56 @@ fn trainer_resume_bitwise_all_variants_and_reduces() {
                 assert_eq!(a.loss, b.loss, "{} reduce={}", algo.id(), reduce.id());
                 assert_eq!(a.step, b.step);
                 assert_eq!(a.tau, b.tau);
+            }
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+}
+
+/// Top-k error-feedback residuals ride the checkpoint as `Resid` blobs
+/// (DESIGN.md §15): same-world resume must be bitwise — the resumed rank
+/// seeds its `EfState` from `ef_rank{r}` so the dropped-coordinate
+/// accumulators continue exactly where the snapshot left off. Covered
+/// across every reduction algorithm × serial|overlap execution.
+#[test]
+fn trainer_resume_bitwise_topk_residuals_all_reduces_and_overlap() {
+    use fastclip::comm::{OverlapMode, ReduceAlgo, ReduceStrategy, WireCodec};
+    let (n, m) = (6u32, 4u32);
+    for reduce in [ReduceAlgo::Naive, ReduceAlgo::Ring, ReduceAlgo::Sharded] {
+        for overlap in [OverlapMode::Off, OverlapMode::On] {
+            let label = format!("reduce={} overlap={}", reduce.id(), overlap.id());
+            let root = tmp_root(&format!("topk_{}_{}", reduce.id(), overlap.id()));
+            let mut base = trainer_cfg(Algorithm::FastClipV3, n + m);
+            base.reduce = ReduceStrategy::Fixed(reduce);
+            base.overlap = overlap;
+            base.bucket_bytes = 1024; // several buckets when overlapped
+            base.wire = Some(WireCodec::TopK);
+
+            let continuous = Trainer::new(base.clone()).unwrap().run().unwrap();
+            assert_eq!(continuous.wire, "topk", "{label}");
+
+            let mut leg1 = base.clone();
+            leg1.steps = n;
+            leg1.ckpt_dir = Some(root.to_string_lossy().into_owned());
+            leg1.ckpt_every = n;
+            let first = Trainer::new(leg1).unwrap().run().unwrap();
+            assert_eq!(first.ckpt.snapshots, 1, "{label}");
+
+            let mut leg2 = base.clone();
+            leg2.ckpt_dir = Some(root.to_string_lossy().into_owned());
+            leg2.resume = Some("latest".to_string());
+            let resumed = Trainer::new(leg2).unwrap().run().unwrap();
+            assert_eq!(resumed.ckpt.resumed_at, Some(n), "{label}");
+
+            // residual restoration defects would desync the EF carry and
+            // break this equality within a step or two
+            assert_eq!(
+                continuous.final_params, resumed.final_params,
+                "topk resume params must be bitwise equal: {label}"
+            );
+            assert_eq!(continuous.final_tau.to_bits(), resumed.final_tau.to_bits(), "{label}");
+            for (a, b) in continuous.history[n as usize..].iter().zip(&resumed.history) {
+                assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}: {label}", a.step);
             }
             let _ = std::fs::remove_dir_all(&root);
         }

@@ -15,7 +15,8 @@ use std::time::Duration;
 use fastclip::ckpt;
 use fastclip::comm::{
     reduction, BucketPlan, CancellationToken, CommError, CommStats, CommWorld, GradientReduction,
-    OverlapMode, OverlapPipeline, ReduceAlgo, ReduceStrategy, TraceEventKind, WorkerComm,
+    OverlapMode, OverlapPipeline, ReduceAlgo, ReduceCtx, ReduceStrategy, TraceEventKind,
+    WireCodec, WorkerComm,
 };
 use fastclip::config::{Algorithm, TrainConfig};
 use fastclip::coordinator::Trainer;
@@ -78,12 +79,12 @@ fn stress_rank(
     overlap: bool,
     n: usize,
 ) -> Result<(), CommError> {
-    let wire = Precision::F32;
+    let ctx = ReduceCtx::f32();
     let reducer = reduction(algo);
     let plan = BucketPlan::new(n, 16);
     let mut params = vec![0.5f32; n];
     let mut pipe = if overlap {
-        Some(OverlapPipeline::spawn(reduce_comm, algo, plan.clone(), n, wire))
+        Some(OverlapPipeline::spawn(reduce_comm, algo, plan.clone(), n, ctx.clone()))
     } else {
         None
     };
@@ -109,7 +110,7 @@ fn stress_rank(
                 return Err(ce);
             }
         } else {
-            reducer.reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |ps, gs| {
+            reducer.reduce_and_apply(&comm, &mut grad, &mut params, &ctx, &mut |ps, gs| {
                 ps.copy_from_slice(gs)
             })?;
         }
@@ -198,17 +199,24 @@ const SHRINK_MATRIX: [(Algorithm, ReduceAlgo); 5] = [
     (Algorithm::FastClipV3, ReduceAlgo::Sharded),
 ];
 
-fn shrink_matches_cold_elastic_resume(precision: Precision) {
+fn shrink_matches_cold_elastic_resume(precision: Precision, wire: Option<WireCodec>) {
     let (steps, every, fail_iter) = (10u32, 4u32, 6u32);
+    let wire_id = wire.map_or("default", |w| w.id());
     for (algo, reduce) in SHRINK_MATRIX {
         // kill rank 0 for one variant: the lead role must fail over
         let victim = if algo == Algorithm::FastClipV1 { 0 } else { 1 };
-        let label = format!("{} reduce={} prec={}", algo.id(), reduce.id(), precision.id());
-        let live_root = tmp_root(&format!("live_{}_{}", algo.id(), precision.id()));
-        let cold_root = tmp_root(&format!("cold_{}_{}", algo.id(), precision.id()));
+        let label = format!(
+            "{} reduce={} prec={} wire={wire_id}",
+            algo.id(),
+            reduce.id(),
+            precision.id()
+        );
+        let live_root = tmp_root(&format!("live_{}_{}_{wire_id}", algo.id(), precision.id()));
+        let cold_root = tmp_root(&format!("cold_{}_{}_{wire_id}", algo.id(), precision.id()));
 
         let mut live = trainer_cfg(algo, steps);
         live.precision = precision;
+        live.wire = wire;
         live.reduce = ReduceStrategy::Fixed(reduce);
         live.ckpt_dir = Some(live_root.to_string_lossy().into_owned());
         live.ckpt_every = every;
@@ -229,6 +237,7 @@ fn shrink_matches_cold_elastic_resume(precision: Precision) {
         let snap = live_root.join(format!("step_{every:08}"));
         let mut cold = trainer_cfg(algo, steps);
         cold.precision = precision;
+        cold.wire = wire;
         cold.reduce = ReduceStrategy::Fixed(reduce);
         cold.n_workers = 1;
         cold.local_batch = 8;
@@ -265,6 +274,10 @@ fn shrink_matches_cold_elastic_resume(precision: Precision) {
         assert_eq!(ckpt::export_tau(&ra.tau), ckpt::export_tau(&rb.tau), "tau state: {label}");
         assert_eq!(ra.loader.export(), rb.loader.export(), "loader: {label}");
         assert_eq!(ra.optim, rb.optim, "optimizer state: {label}");
+        // topk runs: the error-feedback residual blobs must match too
+        // (both absent for the lossless wires)
+        assert_eq!(ra.resid, rb.resid, "ef residuals: {label}");
+        assert_eq!(ra.resid.is_some(), wire == Some(WireCodec::TopK), "resid presence: {label}");
 
         let _ = std::fs::remove_dir_all(&live_root);
         let _ = std::fs::remove_dir_all(&cold_root);
@@ -273,12 +286,21 @@ fn shrink_matches_cold_elastic_resume(precision: Precision) {
 
 #[test]
 fn live_shrink_is_bitwise_cold_elastic_resume_f32() {
-    shrink_matches_cold_elastic_resume(Precision::F32);
+    shrink_matches_cold_elastic_resume(Precision::F32, None);
 }
 
 #[test]
 fn live_shrink_is_bitwise_cold_elastic_resume_bf16() {
-    shrink_matches_cold_elastic_resume(Precision::Bf16);
+    shrink_matches_cold_elastic_resume(Precision::Bf16, None);
+}
+
+/// The lossy topk wire (DESIGN.md §15) preserves the invariant: a live
+/// shrink zeroes the error-feedback residuals exactly like a cold
+/// elastic resume does (a resized world re-selects per rank anyway), so
+/// the two post-rollback trajectories stay bitwise identical.
+#[test]
+fn live_shrink_is_bitwise_cold_elastic_resume_topk_wire() {
+    shrink_matches_cold_elastic_resume(Precision::F32, Some(WireCodec::TopK));
 }
 
 // ---------------------------------------------------------------------
@@ -407,7 +429,7 @@ fn ckpt_sync_death_window_errors_instead_of_deadlocking() {
     let t = std::thread::spawn(move || {
         // trainer::ckpt_sync's exact shape: SUM-reduce a failure flag
         let mut flag = [0.0f32];
-        survivor.all_reduce_sum(&mut flag)
+        survivor.all_reduce_sum(&mut flag, WireCodec::F32)
     });
     // let the survivor commit to the reduce (it blocks at the internal
     // barrier waiting for rank 1), then rank 1 dies

@@ -13,10 +13,9 @@
 
 use std::sync::Arc;
 
-use fastclip::comm::{reduction, CommWorld, ReduceAlgo};
+use fastclip::comm::{reduction, CommWorld, ReduceAlgo, ReduceCtx, WireCodec};
 use fastclip::config::{Algorithm, DataConfig, OptimizerConfig, TrainConfig};
 use fastclip::coordinator::Trainer;
-use fastclip::kernels::Precision;
 use fastclip::optim::{build, shard_segments};
 use fastclip::runtime::{ComputeBackend, Manifest, NativeBackend, TauGrads, TauInput};
 use fastclip::util::Rng;
@@ -279,20 +278,21 @@ fn contribution(rank: usize, n: usize) -> Vec<f32> {
     g
 }
 
-/// Reduce with `algo` at `wire` precision and recover the full reduced
-/// vector on every rank by using an identity "optimizer" (params :=
-/// reduced grad slice).
-fn reduce_full_px(
+/// Reduce with `algo` over the `wire` codec and recover the full
+/// reduced vector on every rank by using an identity "optimizer"
+/// (params := reduced grad slice).
+fn reduce_full_wire(
     algo: ReduceAlgo,
     k: usize,
     n: usize,
-    wire: Precision,
+    wire: WireCodec,
 ) -> (Vec<Vec<f32>>, fastclip::comm::CommStatsSnapshot) {
     run_world(k, move |comm| {
+        let ctx = ReduceCtx::for_run(wire, n);
         let mut grad = contribution(comm.rank(), n);
         let mut params = vec![0.0f32; n];
         reduction(algo)
-            .reduce_and_apply(&comm, &mut grad, &mut params, wire, &mut |p, g| {
+            .reduce_and_apply(&comm, &mut grad, &mut params, &ctx, &mut |p, g| {
                 p.copy_from_slice(g)
             })
             .unwrap();
@@ -300,9 +300,9 @@ fn reduce_full_px(
     })
 }
 
-/// [`reduce_full_px`] at the default f32 wire format.
+/// [`reduce_full_wire`] at the default f32 wire codec.
 fn reduce_full(algo: ReduceAlgo, k: usize, n: usize) -> (Vec<Vec<f32>>, fastclip::comm::CommStatsSnapshot) {
-    reduce_full_px(algo, k, n, Precision::F32)
+    reduce_full_wire(algo, k, n, WireCodec::F32)
 }
 
 /// THE exactness invariant of the pluggable collectives: reduce-scatter +
@@ -339,9 +339,9 @@ fn reduce_strategies_bit_identical_to_naive() {
 fn bf16_wire_reduce_bit_identical_across_algorithms_and_halves_bytes() {
     for k in [1usize, 2, 4] {
         for n in [1usize, 5, 10, 1023] {
-            let (naive, sn) = reduce_full_px(ReduceAlgo::Naive, k, n, Precision::Bf16);
-            let (ring, sr) = reduce_full_px(ReduceAlgo::Ring, k, n, Precision::Bf16);
-            let (sharded, ss) = reduce_full_px(ReduceAlgo::Sharded, k, n, Precision::Bf16);
+            let (naive, sn) = reduce_full_wire(ReduceAlgo::Naive, k, n, WireCodec::Bf16);
+            let (ring, sr) = reduce_full_wire(ReduceAlgo::Ring, k, n, WireCodec::Bf16);
+            let (sharded, ss) = reduce_full_wire(ReduceAlgo::Sharded, k, n, WireCodec::Bf16);
             for outs in [&naive, &ring, &sharded] {
                 for o in outs.iter() {
                     assert_eq!(o, &outs[0], "k={k} n={n}: not replicated under bf16");
@@ -354,13 +354,56 @@ fn bf16_wire_reduce_bit_identical_across_algorithms_and_halves_bytes() {
             for (algo, sb) in
                 [(ReduceAlgo::Naive, sn), (ReduceAlgo::Ring, sr), (ReduceAlgo::Sharded, ss)]
             {
-                let (_, sf) = reduce_full_px(algo, k, n, Precision::F32);
+                let (_, sf) = reduce_full_wire(algo, k, n, WireCodec::F32);
                 assert_eq!(
                     sf.grad_wire_bytes,
                     2 * sb.grad_wire_bytes,
                     "{} k={k} n={n}: bf16 wire must charge exactly half",
                     algo.id()
                 );
+            }
+        }
+    }
+}
+
+/// The lossy wire codecs (DESIGN.md §15): every reduction algorithm
+/// stays replicated across ranks and deterministic run-to-run under a
+/// fixed (codec, algorithm) pair, and each codec charges exactly its
+/// encoded byte width (int8 a quarter of f32; topk 8 bytes per kept
+/// element, 1 in 16 kept).
+#[test]
+fn lossy_wire_codecs_replicated_deterministic_exact_bytes() {
+    for k in [1usize, 2, 4] {
+        for n in [1usize, 5, 64, 1023] {
+            for algo in ReduceAlgo::all() {
+                let (_, sf) = reduce_full_wire(algo, k, n, WireCodec::F32);
+                let per_rank_elems = sf.grad_wire_bytes / 4 / k as u64;
+                for wire in [WireCodec::Int8, WireCodec::TopK] {
+                    let (outs, s) = reduce_full_wire(algo, k, n, wire);
+                    for o in &outs {
+                        assert_eq!(
+                            o, &outs[0],
+                            "{} {} k={k} n={n}: not replicated",
+                            algo.id(),
+                            wire.id()
+                        );
+                    }
+                    let (again, _) = reduce_full_wire(algo, k, n, wire);
+                    assert_eq!(
+                        outs,
+                        again,
+                        "{} {} k={k} n={n}: not deterministic",
+                        algo.id(),
+                        wire.id()
+                    );
+                    assert_eq!(
+                        s.grad_wire_bytes,
+                        k as u64 * wire.encoded_bytes(per_rank_elems),
+                        "{} {} k={k} n={n}: wrong encoded byte charge",
+                        algo.id(),
+                        wire.id()
+                    );
+                }
             }
         }
     }
@@ -414,7 +457,7 @@ fn sharded_training_loop_matches_replicated() {
                     *g = (*g + t as f32).sin() + params[i % n] * 0.1;
                 }
                 reduction(algo)
-                    .reduce_and_apply(&comm, &mut grad, &mut params, Precision::F32, &mut |p, g| {
+                    .reduce_and_apply(&comm, &mut grad, &mut params, &ReduceCtx::f32(), &mut |p, g| {
                         opt.step(p, g, 1e-2)
                     })
                     .unwrap();

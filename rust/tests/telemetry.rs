@@ -99,6 +99,8 @@ fn telemetry_is_bitwise_invisible(precision: Precision) {
         let meta = sum.meta.as_ref().expect("meta event");
         assert_eq!(meta.get("algo").unwrap().as_str().unwrap(), "fastclip-v3");
         assert_eq!(meta.get("precision").unwrap().as_str().unwrap(), precision.id());
+        // the default wire codec follows the precision (DESIGN.md §15)
+        assert_eq!(meta.get("wire").unwrap().as_str().unwrap(), precision.id());
         assert_eq!(sum.ranks.len(), 2, "both ranks traced: {label}");
         assert_eq!(sum.heartbeats, 4, "log_every=2 over 8 steps: {label}");
         for name in ["iter", "encode", "phase_g", "step", "reduce"] {
