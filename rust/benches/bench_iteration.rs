@@ -10,6 +10,10 @@
 //! under every wire codec (`wire/<algo>/<codec>` rows, DESIGN.md §15)
 //! and asserts the exact cuts: bf16 1/2, int8 1/4 and topk 1/8 of the
 //! f32 bytes (the tiny preset's gradient divides by the topk block).
+//! A final sharded-loss section (DESIGN.md §16) pins the loss-stage
+//! peak bytes per rank on a K=4 world (`loss_mem/<mode>` rows, exact:
+//! the shard cuts the peak (2K+4)/4 = 3×) and gates `--loss-shard on`
+//! throughput per step-graph variant (`shard/<variant>` rows).
 //!
 //! Runs on any machine (no artifacts). CI (`bench-smoke`) runs it in
 //! `--quick` mode, writes `BENCH_iteration.json` and gates iteration
@@ -188,6 +192,89 @@ fn main() -> anyhow::Result<()> {
                 median_s: bytes as f64,
             });
         }
+    }
+
+    // ---- sharded loss: memory and throughput (DESIGN.md §16) ------------
+    // loss_mem/<mode>: the loss-stage peak working set per rank on a K=4
+    // world, gated EXACTLY like the wire rows (rate = 1e6 / bytes, so
+    // byte growth trips the floor; `median_s` carries the raw bytes).
+    // shard/<variant>: iteration throughput with `--loss-shard on`, one
+    // representative algorithm per step-graph variant.
+    println!("\nloss-stage peak bytes per rank (tiny preset, K=4, Bl=4):");
+    println!("{:<10} {:>14} {:>8}", "mode", "B/rank", "vs off");
+    let mem_cfg = |mode: fastclip::runtime::LossShardMode| {
+        let mut cfg = TrainConfig::new("artifacts/tiny_k4_b4", Algorithm::FastClipV3);
+        cfg.backend = BackendKind::Native;
+        cfg.n_workers = 4;
+        cfg.local_batch = 4;
+        cfg.steps = 4;
+        cfg.iters_per_epoch = 4;
+        cfg.data.n_train = 64;
+        cfg.data.n_eval = 16;
+        cfg.data.n_classes = 8;
+        cfg.lr.total_iters = 4;
+        cfg.lr.warmup_iters = 1;
+        cfg.loss_shard = mode;
+        cfg
+    };
+    let mut off_bytes = 0u64;
+    for mode in [fastclip::runtime::LossShardMode::Off, fastclip::runtime::LossShardMode::On] {
+        let r = Trainer::new(mem_cfg(mode))?.run()?;
+        let bytes = r.loss_peak_bytes;
+        if mode == fastclip::runtime::LossShardMode::Off {
+            off_bytes = bytes;
+        } else {
+            // the §16 contract: exactly (2K+4)/4 = 3x smaller at K=4
+            assert_eq!(off_bytes, 3 * bytes, "loss_mem: K=4 shard must cut the peak 3x");
+        }
+        println!(
+            "{:<10} {:>14} {:>8}",
+            mode.id(),
+            bytes,
+            ratio_cell(safe_ratio(off_bytes as f64, bytes as f64)),
+        );
+        rows.push(harness::JsonRow {
+            name: format!("loss_mem/{}", mode.id()),
+            rate_per_sec: safe_ratio(1e6, bytes as f64).unwrap_or(f64::NAN),
+            median_s: bytes as f64,
+        });
+    }
+
+    println!("\nsharded-loss iteration throughput (one algorithm per step-graph variant):");
+    println!("{:<10} {:<14} {:>10}", "variant", "algorithm", "iters/s");
+    for algo in [
+        Algorithm::FastClipV1, // gcl
+        Algorithm::FastClipV0, // gcl_v0
+        Algorithm::FastClipV2, // rgcl_i
+        Algorithm::FastClipV3, // rgcl_g
+        Algorithm::OpenClip,   // mbcl
+    ] {
+        let trace_out = trace_out.clone();
+        let make_cfg = move |overlap: OverlapMode, precision: Precision| {
+            let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", algo);
+            cfg.backend = BackendKind::Native;
+            cfg.steps = steps;
+            cfg.iters_per_epoch = 8;
+            cfg.data.n_train = 256;
+            cfg.data.n_eval = 16;
+            cfg.lr.total_iters = steps;
+            cfg.lr.warmup_iters = 2;
+            cfg.nodes = 8;
+            cfg.gpus_per_node = 4;
+            cfg.overlap = overlap;
+            cfg.precision = precision;
+            cfg.loss_shard = fastclip::runtime::LossShardMode::On;
+            cfg.trace_out = trace_out.clone();
+            cfg
+        };
+        let (rate, run) = measure(&make_cfg, OverlapMode::Off, Precision::F32, steps, repeats)?;
+        assert!(run.loss_shard, "the shard rows must actually run sharded");
+        println!("{:<10} {:<14} {:>10.1}", algo.variant(), algo.name(), rate);
+        rows.push(harness::JsonRow {
+            name: format!("shard/{}", algo.variant()),
+            rate_per_sec: rate,
+            median_s: 1.0 / rate,
+        });
     }
 
     harness::finalize_report("iteration", quick, &rows, &args)

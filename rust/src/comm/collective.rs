@@ -229,6 +229,31 @@ pub trait GradientReduction: Send + Sync {
         full_len: usize,
         ctx: &ReduceCtx,
     ) -> CommResult<ReducedSegment>;
+
+    /// Collective: the sharded-loss feature-gradient leg (DESIGN.md
+    /// §16). `fill(s, seg)` writes this rank's `seg_len`-element
+    /// contribution to destination rank `s`'s features; the return is
+    /// this rank's sum over all sources, folded in ascending
+    /// source-rank order — [`WorkerComm::exchange_block_sums`]'s
+    /// `q(Σ_r q(g_r))` contract under `ctx`'s codec.
+    ///
+    /// Provided (identical) for every algorithm: the exchange is a
+    /// fixed dest-major block pattern with nothing algorithm-shaped to
+    /// vary — what `--reduce` chooses is how the PARAMETER gradient is
+    /// reduced, while this leg's fold order is pinned by the §16
+    /// bitwise contract. It lives on the trait so the loss shard rides
+    /// the same machinery (and the same `ReduceCtx`) as every other
+    /// reduction, and so a future algorithm CAN specialize the
+    /// dataflow as long as it preserves the fold.
+    fn reduce_feature_grads(
+        &self,
+        comm: &WorkerComm,
+        seg_len: usize,
+        fill: &mut dyn FnMut(usize, &mut [f32]),
+        ctx: &ReduceCtx,
+    ) -> CommResult<Vec<f32>> {
+        comm.exchange_block_sums(seg_len, fill, ctx.codec)
+    }
 }
 
 /// The reduced output of one [`GradientReduction::reduce_bucket`] call:
@@ -707,6 +732,60 @@ mod tests {
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    /// The feature-gradient leg (DESIGN.md §16) is algorithm-invariant:
+    /// all three `--reduce` choices route it through the same
+    /// ascending-source-rank fold, so their outputs are bitwise
+    /// identical to each other and to a locally computed
+    /// `q(Σ_src q(g_src))` — under both the f32 identity wire and a
+    /// lossy one.
+    #[test]
+    fn feature_grad_leg_identical_across_algorithms() {
+        use crate::kernels::precision::bf16_round;
+        let (k, seg) = (3usize, 11usize);
+        let contrib = |src: usize, dest: usize, j: usize| -> f32 {
+            0.1 + (src * 10 + dest) as f32 * 0.31 + j as f32 * 1.017
+        };
+        for wire in [WireCodec::F32, WireCodec::Bf16] {
+            let mut per_algo: Vec<Vec<Vec<f32>>> = Vec::new();
+            for algo in ReduceAlgo::all() {
+                let world = CommWorld::new(k);
+                let outs = run_ranks(&world, k, move |comm| {
+                    let src = comm.rank();
+                    let ctx = ReduceCtx::new(wire);
+                    reduction(algo)
+                        .reduce_feature_grads(
+                            &comm,
+                            seg,
+                            &mut |dest, out| {
+                                for (j, v) in out.iter_mut().enumerate() {
+                                    *v = contrib(src, dest, j);
+                                }
+                            },
+                            &ctx,
+                        )
+                        .unwrap()
+                });
+                per_algo.push(outs);
+            }
+            for outs in &per_algo[1..] {
+                for r in 0..k {
+                    assert_eq!(bits(&outs[r]), bits(&per_algo[0][r]), "wire={}", wire.id());
+                }
+            }
+            // local replay of the pinned fold
+            let q = |v: f32| match wire {
+                WireCodec::Bf16 => bf16_round(v),
+                _ => v,
+            };
+            for (dest, got) in per_algo[0].iter().enumerate() {
+                let want: Vec<f32> = (0..seg)
+                    .map(|j| q((0..k).fold(0.0f32, |acc, src| acc + q(contrib(src, dest, j)))))
+                    .collect();
+                assert_eq!(bits(got), bits(&want), "dest={dest} wire={}", wire.id());
+            }
+        }
     }
 
     #[test]

@@ -44,7 +44,11 @@
 //! in bytes-on-wire and local work, which [`CommStats`] and
 //! [`CostModel::reduce_time`] account per algorithm.
 //! [`CostModel::cheapest_reduce`] implements the α–β selection policy
-//! behind [`ReduceStrategy::Auto`].
+//! behind [`ReduceStrategy::Auto`]. Under `--loss-shard on` the trait
+//! carries a fourth leg, [`GradientReduction::reduce_feature_grads`]:
+//! the sharded contrastive loss exchanges per-rank feature-gradient
+//! segments through [`WorkerComm::exchange_block_sums`], charged
+//! separately as `featgrad_wire_bytes` (DESIGN.md §16).
 //!
 //! # Wire codecs
 //!

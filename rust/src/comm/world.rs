@@ -171,6 +171,11 @@ pub struct CommStatsSnapshot {
     /// sharded strategy only: the updated-parameter all-gather traffic
     /// (always full-width f32 — the parameters are the master state)
     pub param_wire_bytes: u64,
+    /// `--loss-shard on` only: the cross-rank feature-gradient exchange
+    /// traffic (DESIGN.md §16) — the (K−1) remote-destination segments
+    /// each rank sends per [`WorkerComm::exchange_block_sums`], at the
+    /// exchange codec's encoded width. Zero when the loss is unsharded.
+    pub featgrad_wire_bytes: u64,
     /// measured reduction-worker time that ran concurrently with backward
     /// compute (µs, summed over ranks) — the part of the gradient
     /// reduction the overlap pipeline HID off the critical path
@@ -235,6 +240,13 @@ impl CommStats {
     /// Charge the sharded strategy's updated-parameter all-gather bytes.
     pub fn add_param_wire(&self, bytes: u64) {
         self.inner.lock().unwrap().param_wire_bytes += bytes;
+    }
+
+    /// Charge one sharded-loss feature-gradient exchange's wire bytes
+    /// (the remote-destination segments only — see
+    /// [`WorkerComm::exchange_block_sums`]).
+    pub fn add_featgrad_wire(&self, bytes: u64) {
+        self.inner.lock().unwrap().featgrad_wire_bytes += bytes;
     }
 
     /// Report that `rank` entered iteration `iter`, so comm-layer events
@@ -572,6 +584,69 @@ impl WorkerComm {
         for r in 0..w.k {
             let slot = w.slots[r].lock().unwrap();
             for (a, v) in acc.iter_mut().zip(&slot[lo..hi]) {
+                *a += v;
+            }
+        }
+        self.barrier()?; // slots free for reuse
+        wire.wire_round(&mut acc);
+        Ok(acc)
+    }
+
+    /// The sharded-loss feature-gradient exchange (DESIGN.md §16):
+    /// every rank contributes one `seg_len`-element segment per
+    /// DESTINATION rank — `fill(s, seg)` is called for each destination
+    /// `s` in ascending order (including `s == self`) and must write
+    /// this rank's contribution to rank `s`'s features — and each rank
+    /// receives the SUM over all source ranks of the segments destined
+    /// for it.
+    ///
+    /// The per-element fold is the [`Self::reduce_range_sum`] wire
+    /// contract verbatim: each segment passes through
+    /// [`WireCodec::wire_round`] outbound, the K contributions are
+    /// summed in f32 in **ascending source-rank order** from a 0.0
+    /// accumulator, and the result is rounded again for the return leg
+    /// — `q(Σ_r q(g_r))`, K = 1 applying `q(q(·))` explicitly. That
+    /// fixed fold is the reduction order DESIGN.md §16 pins for both
+    /// shard modes.
+    ///
+    /// Accounting: one ReduceScatter-payload charge of `K·seg_len`
+    /// elements, plus `featgrad_wire_bytes` for the `(K−1)` segments a
+    /// real fabric would carry off-rank (the self-segment never leaves
+    /// the device). K = 1 charges nothing, like every other local fast
+    /// path.
+    pub fn exchange_block_sums(
+        &self,
+        seg_len: usize,
+        fill: &mut dyn FnMut(usize, &mut [f32]),
+        wire: WireCodec,
+    ) -> CommResult<Vec<f32>> {
+        self.pre_op()?;
+        let w = &self.world;
+        if w.k == 1 {
+            let mut seg = vec![0.0f32; seg_len];
+            fill(0, &mut seg);
+            wire.wire_round(&mut seg); // outbound leg
+            wire.wire_round(&mut seg); // return leg: q(Σ q(·)) with K = 1
+            return Ok(seg);
+        }
+        {
+            let mut slot = w.slots[self.rank].lock().unwrap();
+            slot.clear();
+            slot.resize(w.k * seg_len, 0.0);
+            for s in 0..w.k {
+                let seg = &mut slot[s * seg_len..(s + 1) * seg_len];
+                fill(s, seg);
+                wire.wire_round(seg);
+            }
+        }
+        w.stats.add_payload(Payload::ReduceScatter, w.k * seg_len, wire);
+        w.stats.add_featgrad_wire((w.k as u64 - 1) * wire.encoded_bytes(seg_len as u64));
+        self.barrier()?;
+        let mut acc = vec![0.0f32; seg_len];
+        for r in 0..w.k {
+            let slot = w.slots[r].lock().unwrap();
+            let seg = &slot[self.rank * seg_len..(self.rank + 1) * seg_len];
+            for (a, v) in acc.iter_mut().zip(seg) {
                 *a += v;
             }
         }
@@ -952,6 +1027,106 @@ mod tests {
         assert_eq!(s.hidden_comm_us, 70);
         assert_eq!(s.exposed_comm_us, 30);
         assert_eq!(a.stats.snapshot(), b.stats.snapshot());
+    }
+
+    /// exchange_block_sums: each rank receives the ascending-source-rank
+    /// f32 fold of every rank's segment destined for it — bitwise equal
+    /// to the same fold computed locally — and the accounting charges
+    /// one K·seg_len ReduceScatter payload plus (K−1) segments of
+    /// featgrad wire per call per rank.
+    #[test]
+    fn exchange_block_sums_folds_in_rank_order() {
+        for k in [1usize, 2, 3, 4] {
+            let n = 13; // non-divisible by anything interesting
+            let outs = run_workers(k, move |c| {
+                c.exchange_block_sums(
+                    n,
+                    &mut |dest, seg| {
+                        for (j, v) in seg.iter_mut().enumerate() {
+                            // distinct per (src, dest, j) contribution
+                            *v = (c.rank() * 100 + dest * 10) as f32 + j as f32 * 0.25;
+                        }
+                    },
+                    WireCodec::F32,
+                )
+                .unwrap()
+            });
+            for (dest, o) in outs.iter().enumerate() {
+                for (j, v) in o.iter().enumerate() {
+                    // the pinned fold: ascending source rank from 0.0
+                    let mut want = 0.0f32;
+                    for src in 0..k {
+                        want += (src * 100 + dest * 10) as f32 + j as f32 * 0.25;
+                    }
+                    assert_eq!(v.to_bits(), want.to_bits(), "k={k} dest={dest} j={j}");
+                }
+            }
+        }
+    }
+
+    /// The exchange honors the per-segment codec contract
+    /// (q(Σ_r q(g_r))) and charges the codec's encoded bytes — K = 1
+    /// applies both legs but charges nothing.
+    #[test]
+    fn exchange_block_sums_codec_contract_and_accounting() {
+        let k = 3;
+        let n = 37;
+        let world = CommWorld::new(k);
+        let handles: Vec<_> = (0..k)
+            .map(|r| {
+                let c = world.handle(r);
+                std::thread::spawn(move || {
+                    c.exchange_block_sums(
+                        n,
+                        &mut |dest, seg| {
+                            for (j, v) in seg.iter_mut().enumerate() {
+                                *v = 0.1 + (r + dest) as f32 * 0.31 + j as f32 * 1.017;
+                            }
+                        },
+                        WireCodec::Bf16,
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        let outs: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (dest, o) in outs.iter().enumerate() {
+            for (j, v) in o.iter().enumerate() {
+                let mut acc = 0.0f32;
+                for src in 0..k {
+                    acc += bf16_round(0.1 + (src + dest) as f32 * 0.31 + j as f32 * 1.017);
+                }
+                let want = bf16_round(acc);
+                assert_eq!(v.to_bits(), want.to_bits(), "dest={dest} j={j}");
+            }
+        }
+        let s = world.stats.snapshot();
+        // one call per rank: K·n elements of bf16 ReduceScatter payload
+        assert_eq!(s.reduce_scatter_bytes, k as u64 * (k * n) as u64 * 2);
+        // featgrad wire: (K−1) segments of n bf16 elements per rank
+        assert_eq!(s.featgrad_wire_bytes, k as u64 * (k as u64 - 1) * (n as u64 * 2));
+        assert_eq!(s.ops, k as u64);
+
+        // K = 1: local, both codec legs applied, nothing charged
+        let world1 = CommWorld::new(1);
+        let got = world1
+            .handle(0)
+            .exchange_block_sums(
+                4,
+                &mut |dest, seg| {
+                    assert_eq!(dest, 0);
+                    seg.copy_from_slice(&[0.1, 1.117, 2.134, 3.151]);
+                },
+                WireCodec::Bf16,
+            )
+            .unwrap();
+        for (j, v) in got.iter().enumerate() {
+            let want = bf16_round(bf16_round(0.1 + j as f32 * 1.017));
+            assert_eq!(v.to_bits(), want.to_bits(), "K=1 j={j}");
+        }
+        let s1 = world1.stats.snapshot();
+        assert_eq!(s1.reduce_scatter_bytes, 0);
+        assert_eq!(s1.featgrad_wire_bytes, 0);
     }
 
     #[test]

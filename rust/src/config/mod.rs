@@ -379,6 +379,14 @@ pub struct TrainConfig {
     /// fewer gradient bytes than f32, topk moves ~8× fewer with
     /// error-feedback residuals carrying what was dropped.
     pub wire: Option<crate::comm::WireCodec>,
+    /// memory-sharded global contrastive loss (DESIGN.md §16):
+    /// on | off | auto. `auto` (the default) shards when the run
+    /// resolves to the native backend and stays unsharded otherwise;
+    /// `on` with the pjrt backend is rejected at startup. Both settings
+    /// produce bitwise-identical training — sharding only changes the
+    /// loss-stage peak memory (the `loss.peak_bytes` gauge) and the
+    /// feature-gradient wire accounting
+    pub loss_shard: crate::runtime::LossShardMode,
     /// fault injection (DESIGN.md §13): kill rank R at the top of
     /// iteration N, grammar `rank=R@iter=N`; None = no injected failure
     pub fail: Option<String>,
@@ -478,6 +486,7 @@ impl TrainConfig {
             kernel_threads: 0,
             precision: crate::kernels::Precision::F32,
             wire: None,
+            loss_shard: crate::runtime::LossShardMode::Auto,
             fail: None,
             straggle: None,
             watchdog_ms: 0,
@@ -623,7 +632,7 @@ impl TrainConfig {
             "bucket_mb", "bucket_bytes", "tau_lr_decay_below",
             "ckpt_dir", "ckpt_every", "keep_last", "resume",
             "backend", "preset", "n_workers", "local_batch", "kernel_threads",
-            "precision", "wire", "fail", "straggle", "watchdog_ms",
+            "precision", "wire", "loss_shard", "fail", "straggle", "watchdog_ms",
             "trace_out", "log_every", "quiet", "log_format",
             "optimizer.kind", "optimizer.beta1", "optimizer.beta2",
             "optimizer.eps", "optimizer.weight_decay", "optimizer.momentum",
@@ -679,6 +688,9 @@ impl TrainConfig {
         if let Some(v) = kv.get("wire") {
             cfg.wire = Some(crate::comm::WireCodec::from_id(v)?);
         }
+        cfg.loss_shard = crate::runtime::LossShardMode::from_id(
+            &kv.str_or("loss_shard", cfg.loss_shard.id()),
+        )?;
         if let Some(v) = kv.get("fail") {
             cfg.fail = Some(v.to_string());
         }
@@ -773,6 +785,9 @@ impl TrainConfig {
         let _ = writeln!(s, "precision = \"{}\"", self.precision.id());
         if let Some(w) = self.wire {
             let _ = writeln!(s, "wire = \"{}\"", w.id());
+        }
+        if self.loss_shard != crate::runtime::LossShardMode::Auto {
+            let _ = writeln!(s, "loss_shard = \"{}\"", self.loss_shard.id());
         }
         if let Some(f) = &self.fail {
             let _ = writeln!(s, "fail = \"{f}\"");
@@ -1087,6 +1102,25 @@ mod tests {
         let kv = crate::util::KvFile::parse("wire = \"int4\"").unwrap();
         let err = TrainConfig::from_kv(&kv).unwrap_err();
         assert!(format!("{err}").contains("f32|bf16|int8|topk"), "{err}");
+    }
+
+    #[test]
+    fn loss_shard_roundtrips_and_defaults_to_auto() {
+        use crate::runtime::LossShardMode;
+        let mut cfg = TrainConfig::new("x", Algorithm::FastClipV1);
+        assert_eq!(cfg.loss_shard, LossShardMode::Auto, "loss_shard defaults to auto");
+        // the default is omitted from the file format, so old configs stay valid
+        assert!(!cfg.to_file_string().contains("loss_shard"));
+        for mode in [LossShardMode::On, LossShardMode::Off] {
+            cfg.loss_shard = mode;
+            cfg.validate().unwrap();
+            let kv = crate::util::KvFile::parse(&cfg.to_file_string()).unwrap();
+            assert_eq!(TrainConfig::from_kv(&kv).unwrap().loss_shard, mode);
+        }
+        // typos exit with the valid choices listed
+        let kv = crate::util::KvFile::parse("loss_shard = \"maybe\"").unwrap();
+        let err = TrainConfig::from_kv(&kv).unwrap_err();
+        assert!(format!("{err}").contains("on|off|auto"), "{err}");
     }
 
     #[test]

@@ -60,14 +60,14 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::ckpt::{self, CkptMeta, CkptRunStats};
 use crate::comm::{
     reduction, BucketPlan, CancellationToken, CommError, CommStats, CommWorld, CostModel, EfState,
-    FailSpec, FaultPlan, OverlapPipeline, ReduceAlgo, ReduceCtx, ReduceStrategy, TraceEventKind,
-    WireCodec, WorkerComm,
+    FailSpec, FaultPlan, GradientReduction, OverlapPipeline, ReduceAlgo, ReduceCtx, ReduceStrategy,
+    TraceEventKind, WireCodec, WorkerComm,
 };
 use crate::config::{OptimizerKind, TrainConfig};
 use crate::data::{Dataset, ShardLoader};
 use crate::eval::{evaluate, EvalSummary};
 use crate::kernels::Precision;
-use crate::runtime::{ComputeBackend, Manifest, TauGrads, TauInput};
+use crate::runtime::{ComputeBackend, FeatGradReduce, LossShard, Manifest, TauGrads, TauInput};
 use crate::telemetry::{sink as tsink, Logger, MetricsRegistry, SpanRecorder, TraceSink};
 use crate::util::Json;
 
@@ -115,6 +115,12 @@ pub struct TrainResult {
     /// whether the bucketed overlap pipeline ran (`cfg.overlap` resolved
     /// against the world size and bucket count, DESIGN.md §11)
     pub overlap: bool,
+    /// whether the run computed the memory-sharded contrastive loss
+    /// (`cfg.loss_shard` resolved against the backend, DESIGN.md §16)
+    pub loss_shard: bool,
+    /// analytic peak bytes of the loss-stage working set under the
+    /// resolved shard mode — also the `loss.peak_bytes` trace gauge
+    pub loss_peak_bytes: u64,
     /// buckets per iteration under `cfg.bucket_bytes` (1 when serial)
     pub n_buckets: usize,
     /// measured reduction time hidden behind backward compute (µs, one
@@ -125,6 +131,9 @@ pub struct TrainResult {
     pub exposed_comm_us: u64,
     /// real bytes moved through the in-process collectives, all ranks
     pub comm_bytes: u64,
+    /// feature-gradient bytes-on-wire per rank for the sharded loss's
+    /// column exchange — 0 under `--loss-shard off` or K=1 (DESIGN.md §16)
+    pub featgrad_wire_bytes: u64,
     /// modeled gradient bytes-on-wire per rank over the whole run, under
     /// the chosen reduction algorithm…
     pub grad_wire_bytes: u64,
@@ -171,6 +180,15 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(mut cfg: TrainConfig) -> Result<Trainer> {
         cfg.validate()?;
+        // fail before touching the artifact bundle: the pjrt step graphs
+        // lower the unsharded loss only (DESIGN.md §16). `auto` never
+        // trips this — it resolves to off away from native.
+        ensure!(
+            cfg.loss_shard != crate::runtime::LossShardMode::On
+                || cfg.resolved_backend() == crate::runtime::BackendKind::Native,
+            "--loss-shard on requires the native backend (the AOT-lowered HLO step artifacts \
+             compute the unsharded loss); pass --backend native or --loss-shard off"
+        );
         // resolve `--resume latest` to a concrete checkpoint directory
         // here, once, so every worker opens the same snapshot even if a
         // new one lands mid-startup
@@ -258,6 +276,18 @@ impl Trainer {
                     ("wire", Json::str(self.cfg.wire_codec().id())),
                     ("reduce", Json::str(self.cfg.reduce.id())),
                     ("overlap", Json::str(self.cfg.overlap.id())),
+                    // resolved, not the raw mode: the trail records what
+                    // the run actually computed (DESIGN.md §16)
+                    (
+                        "loss_shard",
+                        Json::str(
+                            if self.cfg.loss_shard.resolve(self.cfg.resolved_backend()) {
+                                "on"
+                            } else {
+                                "off"
+                            },
+                        ),
+                    ),
                     ("preset", Json::str(self.cfg.preset.as_str())),
                     ("seed", Json::num(self.cfg.seed as f64)),
                 ],
@@ -353,6 +383,7 @@ impl Trainer {
             reg.absorb_comm(&stats);
             reg.absorb_timing(&out.timing);
             reg.gauge_set("overlap.max_queue_depth", out.max_queue_depth as f64);
+            reg.gauge_set("loss.peak_bytes", out.loss_peak_bytes as f64);
             reg.counter_add("events.dropped", world.stats.events_dropped());
             for e in &events {
                 reg.counter_add(&format!("events.{}", e.kind.id()), 1);
@@ -378,12 +409,15 @@ impl Trainer {
             precision: self.cfg.precision.id(),
             wire: self.cfg.wire_codec().id(),
             overlap: out.overlap,
+            loss_shard: out.loss_shard,
+            loss_peak_bytes: out.loss_peak_bytes,
             n_buckets: out.n_buckets,
             comm_bytes: stats.payload_bytes(),
             // per-rank counters are charged by every rank; report one
             // rank's share (after a shrink the divisor is the final world,
             // so shrink runs over-attribute slightly — the counters mixed
             // K- and K′-rank incarnations)
+            featgrad_wire_bytes: stats.featgrad_wire_bytes / k_final as u64,
             grad_wire_bytes: stats.grad_wire_bytes / k_final as u64,
             grad_wire_bytes_naive: stats.grad_wire_bytes_naive / k_final as u64,
             hidden_comm_us: stats.hidden_comm_us / k_final as u64,
@@ -414,6 +448,10 @@ struct WorkerOutput {
     modeled_iter_bytes: usize,
     reduce_id: &'static str,
     overlap: bool,
+    /// whether the sharded loss ran (`cfg.loss_shard` resolved)
+    loss_shard: bool,
+    /// `ComputeBackend::loss_peak_bytes` under the resolved mode
+    loss_peak_bytes: u64,
     n_buckets: usize,
     /// high-water mark of the overlap pipeline's bucket queue (0 when
     /// serial) — reported as the `overlap.max_queue_depth` gauge
@@ -421,6 +459,27 @@ struct WorkerOutput {
     final_tau: f32,
     params: Vec<f32>,
     ckpt: CkptRunStats,
+}
+
+/// Adapts the run's gradient-reduction algorithm plus the training-world
+/// comm handle into the [`FeatGradReduce`] exchange the sharded loss
+/// calls mid-step (DESIGN.md §16). The leg's codec is pinned to f32:
+/// the exchange is loss-internal state, not a parameter gradient, so
+/// `--wire` compression never perturbs the loss numerics and
+/// `--loss-shard on ≡ off` stays bitwise under every codec.
+struct FeatGradOverComm<'a> {
+    comm: &'a WorkerComm,
+    reducer: &'a dyn GradientReduction,
+}
+
+impl FeatGradReduce for FeatGradOverComm<'_> {
+    fn exchange(
+        &mut self,
+        seg_len: usize,
+        fill: &mut dyn FnMut(usize, &mut [f32]),
+    ) -> Result<Vec<f32>> {
+        Ok(self.reducer.reduce_feature_grads(self.comm, seg_len, fill, &ReduceCtx::f32())?)
+    }
 }
 
 /// State a worker accumulates ACROSS incarnations: the training history
@@ -688,6 +747,11 @@ fn worker_loop(
     // always stay f32.
     let feat_wire = WireCodec::from_precision(cfg.precision);
     let grad_wire = cfg.wire_codec();
+    // sharded contrastive loss (DESIGN.md §16): resolved once against
+    // the backend the run executes on. Deliberately NOT in the
+    // checkpoint meta — the mode is bitwise-invisible, so any snapshot
+    // resumes under any shard mode.
+    let loss_shard_on = cfg.loss_shard.resolve(cfg.resolved_backend());
     let k = comm.world_size();
     let bl = manifest.local_batch;
     let (d, p) = (manifest.model.d_embed, manifest.n_params);
@@ -912,12 +976,17 @@ fn worker_loop(
         // the optimizer exactly once per iteration — for the sharded
         // algorithm between the (bucketed) reduce-scatter and the
         // parameter all-gather — so they are bitwise identical.
+        // the sharded loss's mid-step column exchange runs over the
+        // TRAINING world — the reduce world stays dedicated to overlap
+        // buckets, so the two never interleave (DESIGN.md §11, §16)
+        let mut featx = FeatGradOverComm { comm: &comm, reducer };
         let mut opt_s = 0.0f64;
         let (loss, tau_grad, tau_grads, overlap_rep) = if let Some(pipe) = pipeline.as_mut() {
             let step_tok = rec.begin("step", t);
+            let shard = if loss_shard_on { LossShard::On(&mut featx) } else { LossShard::Off };
             let emit = rt.step_emit(
                 variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, offset,
-                cfg.eps, cfg.rho, tau_input, &mut |off, seg| pipe.emit(off, seg),
+                cfg.eps, cfg.rho, tau_input, shard, &mut |off, seg| pipe.emit(off, seg),
             )?;
             let (loss, tau_grad) = reduce_step_scalars(&comm, emit.loss, &emit.tau)?;
             rec.end(step_tok);
@@ -931,9 +1000,10 @@ fn worker_loop(
             (loss, tau_grad, emit.tau, Some(rep))
         } else {
             let step_tok = rec.begin("step", t);
+            let shard = if loss_shard_on { LossShard::On(&mut featx) } else { LossShard::Off };
             let out = rt.step(
                 variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, offset,
-                cfg.eps, cfg.rho, tau_input,
+                cfg.eps, cfg.rho, tau_input, shard,
             )?;
             let (loss, tau_grad) = reduce_step_scalars(&comm, out.loss, &out.tau)?;
             rec.end(step_tok);
@@ -1141,6 +1211,8 @@ fn worker_loop(
         modeled_iter_bytes: volumes.total_bytes(),
         reduce_id: algo.id(),
         overlap: overlap_on,
+        loss_shard: loss_shard_on,
+        loss_peak_bytes: rt.loss_peak_bytes(loss_shard_on),
         n_buckets,
         max_queue_depth,
         final_tau: tau.mean_tau(),
@@ -1293,6 +1365,31 @@ mod tests {
         assert!(sharded.grad_wire_bytes < sharded.grad_wire_bytes_naive);
         assert_eq!(naive.grad_wire_bytes, naive.grad_wire_bytes_naive);
         assert_eq!(sharded.reduce_algorithm, "sharded");
+    }
+
+    #[test]
+    fn loss_shard_on_bitwise_equals_off_end_to_end() {
+        use crate::runtime::LossShardMode;
+        let run = |mode: LossShardMode| {
+            let mut cfg = quick_cfg(Algorithm::FastClipV3, 5);
+            cfg.loss_shard = mode;
+            Trainer::new(cfg).unwrap().run().unwrap()
+        };
+        let on = run(LossShardMode::On);
+        let off = run(LossShardMode::Off);
+        assert!(on.loss_shard && !off.loss_shard);
+        assert_eq!(on.final_params, off.final_params, "bitwise");
+        for (a, b) in on.history.iter().zip(&off.history) {
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.tau, b.tau);
+        }
+        // auto resolves to on for the native backend
+        let auto = run(LossShardMode::Auto);
+        assert!(auto.loss_shard);
+        assert_eq!(auto.final_params, on.final_params);
+        // the analytic working-set gauge shrinks under sharding (K=2);
+        // tests/telemetry.rs pins the exact formula
+        assert!(on.loss_peak_bytes < off.loss_peak_bytes);
     }
 
     #[test]

@@ -240,19 +240,52 @@ pub fn masked_exp_rowsum_bwd_col(
     d: usize,
     threads: usize,
 ) -> Vec<f32> {
+    masked_exp_rowsum_bwd_col_range(a, b, diag, sd, tau, gbar, denom, m, n, d, 0, n, threads)
+}
+
+/// Column-range form of [`masked_exp_rowsum_bwd_col`]: computes `db_j`
+/// only for the global candidate columns `j ∈ [col_lo, col_hi)`,
+/// returning a `(col_hi − col_lo, d)` block. `diag[i]` holds GLOBAL
+/// column indices, so the positive-pair mask applies regardless of
+/// which range is requested.
+///
+/// This is the sharded-loss building block (DESIGN.md §16): every
+/// output column's reduction is an independent ascending-i fold, so
+/// the range output is bitwise-identical to the corresponding row
+/// slice of the full `bwd_col` output — threads partition only the
+/// range's columns and never split a column's reduction.
+#[allow(clippy::too_many_arguments)]
+pub fn masked_exp_rowsum_bwd_col_range(
+    a: &[f32],
+    b: &[f32],
+    diag: &[isize],
+    sd: &[f32],
+    tau: &[f32],
+    gbar: &[f32],
+    denom: f32,
+    m: usize,
+    n: usize,
+    d: usize,
+    col_lo: usize,
+    col_hi: usize,
+    threads: usize,
+) -> Vec<f32> {
     check_shapes(a, b, diag, sd, tau, m, n, d);
     assert_eq!(gbar.len(), m, "gbar len");
-    let mut db = vec![0.0f32; n * d];
-    par_rows(&mut db, n, d, threads, |lo, hi, chunk| {
+    assert!(col_lo <= col_hi && col_hi <= n, "column range [{col_lo},{col_hi}) out of 0..{n}");
+    let nr = col_hi - col_lo;
+    let mut db = vec![0.0f32; nr * d];
+    par_rows(&mut db, nr, d, threads, |lo, hi, chunk| {
         for i in 0..m {
             let arow = &a[i * d..i * d + d];
             let inv_tau = 1.0 / tau[i];
             let c = gbar[i] * inv_tau;
             for j in lo..hi {
-                if j as isize == diag[i] {
+                let jg = col_lo + j;
+                if jg as isize == diag[i] {
                     continue;
                 }
-                let brow = &b[j * d..j * d + d];
+                let brow = &b[jg * d..jg * d + d];
                 let p = ((dot(arow, brow) - sd[i]) * inv_tau).exp() / denom;
                 let w = c * p;
                 let dbrow = &mut chunk[(j - lo) * d..(j - lo + 1) * d];
@@ -262,6 +295,48 @@ pub fn masked_exp_rowsum_bwd_col(
             }
         }
     });
+    db
+}
+
+/// Scalar reference for [`masked_exp_rowsum_bwd_col_range`] — same
+/// ascending-i fold per output column.
+#[allow(clippy::too_many_arguments)]
+pub fn masked_exp_rowsum_bwd_col_range_ref(
+    a: &[f32],
+    b: &[f32],
+    diag: &[isize],
+    sd: &[f32],
+    tau: &[f32],
+    gbar: &[f32],
+    denom: f32,
+    m: usize,
+    n: usize,
+    d: usize,
+    col_lo: usize,
+    col_hi: usize,
+) -> Vec<f32> {
+    assert!(col_lo <= col_hi && col_hi <= n, "column range [{col_lo},{col_hi}) out of 0..{n}");
+    let nr = col_hi - col_lo;
+    let mut db = vec![0.0f32; nr * d];
+    for i in 0..m {
+        let inv_tau = 1.0 / tau[i];
+        let c = gbar[i] * inv_tau;
+        for j in 0..nr {
+            let jg = col_lo + j;
+            if jg as isize == diag[i] {
+                continue;
+            }
+            let mut s = 0.0f32;
+            for q in 0..d {
+                s += a[i * d + q] * b[jg * d + q];
+            }
+            let p = ((s - sd[i]) * inv_tau).exp() / denom;
+            let w = c * p;
+            for q in 0..d {
+                db[j * d + q] += w * a[i * d + q];
+            }
+        }
+    }
     db
 }
 
@@ -410,6 +485,64 @@ mod tests {
                 assert_eq!(bits(&dtau), bits(&dtau_want), "dtau t={threads}");
                 assert_eq!(bits(&db), bits(&db_want), "db t={threads}");
             }
+        }
+    }
+
+    /// The column-range kernel is bitwise-equal to the corresponding
+    /// slice of the full bwd_col output — including non-divisible
+    /// ranges (the kernel-level face of "B_global not divisible by K")
+    /// and single-column ranges — at every thread count, and matches
+    /// its own scalar reference.
+    #[test]
+    fn bwd_col_range_bitwise_equals_full_slice() {
+        for (m, n, d) in [(5usize, 7usize, 3usize), (8, 16, 32), (9, 4, 17)] {
+            let (a, b, diag, sd, tau, gbar) = setup(m, n, d);
+            let denom = (n - 1) as f32;
+            let full =
+                masked_exp_rowsum_bwd_col(&a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d, 1);
+            // divisible and non-divisible partitions of the columns,
+            // plus degenerate single-column and empty ranges
+            let mut ranges = vec![(0usize, n), (0, n / 2), (n / 2, n), (1, n), (0, 1), (n, n)];
+            if n >= 3 {
+                ranges.push((n / 3, n - 1)); // straddles, non-divisible
+            }
+            for (lo, hi) in ranges {
+                let want = &full[lo * d..hi * d];
+                let r = masked_exp_rowsum_bwd_col_range_ref(
+                    &a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d, lo, hi,
+                );
+                assert_eq!(bits(&r), bits(want), "ref [{lo},{hi}) m={m} n={n}");
+                for threads in [1usize, 2, 4] {
+                    let got = masked_exp_rowsum_bwd_col_range(
+                        &a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d, lo, hi, threads,
+                    );
+                    assert_eq!(bits(&got), bits(want), "[{lo},{hi}) t={threads} m={m} n={n}");
+                }
+            }
+        }
+    }
+
+    /// Covering the columns with per-rank ranges and stacking the
+    /// blocks reconstructs the full bwd_col output bitwise — the exact
+    /// decomposition `--loss-shard on` relies on (DESIGN.md §16).
+    #[test]
+    fn bwd_col_range_blocks_cover_full_output() {
+        let (m, n, d) = (6usize, 10usize, 8usize);
+        let (a, b, diag, sd, tau, gbar) = setup(m, n, d);
+        let denom = (n - 1) as f32;
+        let full = masked_exp_rowsum_bwd_col(&a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d, 2);
+        for k in [1usize, 2, 3, 4] {
+            // ceil-partition: uneven last block when k doesn't divide n
+            let bl = n.div_ceil(k);
+            let mut stacked = Vec::with_capacity(n * d);
+            for r in 0..k {
+                let lo = (r * bl).min(n);
+                let hi = ((r + 1) * bl).min(n);
+                stacked.extend_from_slice(&masked_exp_rowsum_bwd_col_range(
+                    &a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d, lo, hi, 3,
+                ));
+            }
+            assert_eq!(bits(&stacked), bits(&full), "k={k}");
         }
     }
 

@@ -82,6 +82,10 @@ fn print_help() {
              --nodes N --gpus-per-node M --network {nets}\n\
              --reduce naive|ring|sharded|auto   gradient-reduction strategy\n\
              --overlap on|off|auto   overlap bucketed reduction with backward\n\
+             --loss-shard on|off|auto   shard the contrastive loss's pairwise\n\
+                                terms across ranks — ~K-fold smaller loss-stage\n\
+                                working set, bitwise-identical training (native\n\
+                                backend; auto = on for native — DESIGN.md §16)\n\
              --bucket-mb N           bucket size for the overlap pipeline (MB)\n\
              --ckpt-dir <dir> --ckpt-every N --keep-last N   periodic snapshots\n\
              --resume <dir|latest>              resume a checkpointed run\n\
@@ -154,6 +158,11 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     )?;
     cfg.overlap = fastclip::comm::OverlapMode::from_id(
         &args.str_or("overlap", cfg.overlap.id()),
+    )?;
+    // sharded contrastive loss (DESIGN.md §16); mode typos exit non-zero
+    // with the valid choices listed, on+pjrt is rejected by Trainer::new
+    cfg.loss_shard = fastclip::runtime::LossShardMode::from_id(
+        &args.str_or("loss-shard", cfg.loss_shard.id()),
     )?;
     if args.get("bucket-mb").is_some() {
         cfg.bucket_bytes = args.usize_or("bucket-mb", 0)? << 20;
@@ -241,6 +250,14 @@ fn train(args: &Args) -> Result<()> {
     t.row(vec!["grad reduction".into(), result.reduce_algorithm.into()]);
     t.row(vec!["precision".into(), result.precision.into()]);
     t.row(vec!["grad wire codec".into(), result.wire.into()]);
+    t.row(vec![
+        "loss shard".into(),
+        if result.loss_shard {
+            format!("on (loss-stage peak {} bytes/rank)", result.loss_peak_bytes)
+        } else {
+            format!("off (loss-stage peak {} bytes/rank)", result.loss_peak_bytes)
+        },
+    ]);
     if result.overlap {
         t.row(vec![
             "overlap pipeline".into(),

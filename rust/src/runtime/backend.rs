@@ -60,6 +60,107 @@ pub struct StepEmit {
     pub tau: TauGrads,
 }
 
+/// The cross-rank feature-gradient exchange the sharded loss hands its
+/// per-destination column-gradient blocks to (DESIGN.md §16).
+///
+/// Under `--loss-shard on` each rank computes the candidate-side
+/// gradient only for its own `B_local × B_global` slice of the pairwise
+/// terms; the contribution it owes rank `s`'s features is a flat
+/// `seg_len`-element segment. `exchange` collects every rank's segment
+/// for every destination and returns THIS rank's summed column
+/// gradients, folded over source ranks in ascending order — the fixed
+/// reduction order both shard modes reproduce, which is what keeps
+/// `on ≡ off` bitwise.
+///
+/// The trainer adapts this onto the run's
+/// [`GradientReduction`](crate::comm::GradientReduction) machinery
+/// (`reduce_feature_grads`); kernel-level tests implement it in-process.
+pub trait FeatGradReduce {
+    /// Collective: `fill(s, seg)` must write this rank's contribution to
+    /// destination rank `s`'s features (ascending `s`, including
+    /// `s == self`); returns the `seg_len` sum over all source ranks of
+    /// the segments destined for this rank.
+    fn exchange(
+        &mut self,
+        seg_len: usize,
+        fill: &mut dyn FnMut(usize, &mut [f32]),
+    ) -> Result<Vec<f32>>;
+}
+
+/// Per-call loss-sharding selector for [`ComputeBackend::step`] /
+/// [`ComputeBackend::step_emit`]: `Off` materializes the full
+/// candidate-side structure locally (the pre-§16 path, restructured to
+/// the same ascending-source-rank fold); `On` computes only the local
+/// column slice and routes cross-rank contributions through the
+/// supplied exchange. Both produce bitwise-identical gradients.
+pub enum LossShard<'a> {
+    /// unsharded: full local computation, no exchange
+    Off,
+    /// sharded: local slice only, remote contributions exchanged
+    On(&'a mut dyn FeatGradReduce),
+}
+
+impl std::fmt::Debug for LossShard<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            LossShard::Off => "LossShard::Off",
+            LossShard::On(_) => "LossShard::On(..)",
+        })
+    }
+}
+
+/// What a run requests via `--loss-shard` (config `loss_shard`).
+/// `Auto` resolves to `On` for the native backend — sharding is a pure
+/// memory win there — and `Off` otherwise (the pjrt artifacts have no
+/// sharded lowering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LossShardMode {
+    /// on for native, off for pjrt
+    #[default]
+    Auto,
+    /// force the sharded loss (native only; rejected for pjrt)
+    On,
+    /// force the unsharded loss
+    Off,
+}
+
+impl LossShardMode {
+    /// Every mode, for id round-trips.
+    pub fn all() -> [LossShardMode; 3] {
+        [LossShardMode::Auto, LossShardMode::On, LossShardMode::Off]
+    }
+
+    /// CLI/config id: `auto` | `on` | `off`.
+    pub fn id(&self) -> &'static str {
+        match self {
+            LossShardMode::Auto => "auto",
+            LossShardMode::On => "on",
+            LossShardMode::Off => "off",
+        }
+    }
+
+    /// Parse a CLI/config id; unknown values are an error that lists
+    /// the valid choices (mirroring [`BackendKind::from_id`]).
+    pub fn from_id(id: &str) -> Result<LossShardMode> {
+        for m in LossShardMode::all() {
+            if m.id() == id {
+                return Ok(m);
+            }
+        }
+        anyhow::bail!("unknown loss-shard mode '{id}' (expected on|off|auto)")
+    }
+
+    /// Resolve against the backend actually running: `Auto` shards on
+    /// native and not elsewhere.
+    pub fn resolve(&self, backend: BackendKind) -> bool {
+        match self {
+            LossShardMode::On => true,
+            LossShardMode::Off => false,
+            LossShardMode::Auto => backend == BackendKind::Native,
+        }
+    }
+}
+
 /// Cumulative executor-side timing, for the Fig. 3 breakdown.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct RuntimeTimers {
@@ -117,6 +218,8 @@ pub trait ComputeBackend {
     /// One worker's gradient computation for `variant` — the surrogate
     /// gradient of DESIGN.md §4 step 3. All outputs are this worker's
     /// additive contribution; the coordinator SUM-all-reduces them.
+    /// `shard` selects the loss-memory layout (DESIGN.md §16): both
+    /// choices yield bitwise-identical outputs.
     #[allow(clippy::too_many_arguments)]
     fn step(
         &mut self,
@@ -132,6 +235,7 @@ pub trait ComputeBackend {
         eps: f32,
         rho: f32,
         tau: TauInput,
+        shard: LossShard<'_>,
     ) -> Result<StepOutput>;
 
     /// Segment-ordered gradient emission: like [`Self::step`], but
@@ -162,13 +266,24 @@ pub trait ComputeBackend {
         eps: f32,
         rho: f32,
         tau: TauInput,
+        shard: LossShard<'_>,
         sink: &mut dyn FnMut(usize, &[f32]),
     ) -> Result<StepEmit> {
         let out = self.step(
-            variant, params, images, texts, e1g, e2g, u1g, u2g, offset, eps, rho, tau,
+            variant, params, images, texts, e1g, e2g, u1g, u2g, offset, eps, rho, tau, shard,
         )?;
         sink(0, &out.grad);
         Ok(StepEmit { loss: out.loss, tau: out.tau })
+    }
+
+    /// Analytic peak bytes of the loss-stage working set under the given
+    /// shard mode — the `loss.peak_bytes` telemetry gauge (DESIGN.md
+    /// §16). Like the cost model's time accounting, this prices what the
+    /// *algorithm* requires, not this testbed's in-process buffers.
+    /// Default 0: the backend has no sharded-loss accounting.
+    fn loss_peak_bytes(&self, sharded: bool) -> u64 {
+        let _ = sharded;
+        0
     }
 }
 
@@ -224,6 +339,22 @@ mod tests {
         let err = BackendKind::from_id("cuda").unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("native|pjrt|auto"), "lists valid choices: {msg}");
+    }
+
+    #[test]
+    fn loss_shard_mode_roundtrip_and_resolution() {
+        for m in LossShardMode::all() {
+            assert_eq!(LossShardMode::from_id(m.id()).unwrap(), m);
+        }
+        assert_eq!(LossShardMode::default(), LossShardMode::Auto);
+        let err = LossShardMode::from_id("maybe").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("on|off|auto"), "lists valid choices: {msg}");
+        // auto shards exactly on native
+        assert!(LossShardMode::Auto.resolve(BackendKind::Native));
+        assert!(!LossShardMode::Auto.resolve(BackendKind::Pjrt));
+        assert!(LossShardMode::On.resolve(BackendKind::Pjrt));
+        assert!(!LossShardMode::Off.resolve(BackendKind::Native));
     }
 
     #[test]

@@ -30,7 +30,8 @@ mod worker;
 use anyhow::Result;
 
 pub use backend::{
-    BackendKind, ComputeBackend, RuntimeTimers, StepEmit, StepOutput, TauGrads, TauInput,
+    BackendKind, ComputeBackend, FeatGradReduce, LossShard, LossShardMode, RuntimeTimers,
+    StepEmit, StepOutput, TauGrads, TauInput,
 };
 pub use manifest::{ExecSig, Manifest, ModelInfo, ParamSegment, TensorSig};
 pub use native::NativeBackend;

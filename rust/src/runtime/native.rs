@@ -35,6 +35,22 @@
 //! dictates. A finite-difference oracle in `tests/native_backend.rs` pins
 //! this derivation against [`NativeBackend::surrogate_value`].
 //!
+//! # The sharded column exchange (`--loss-shard`, DESIGN.md §16)
+//!
+//! The column part of the surrogate backward — every row's contribution
+//! to the *candidate-side* feature gradients — is organized as one fold
+//! per destination column block: for each block of `B_local` columns the
+//! per-source-rank partials are summed in ascending source-rank order
+//! from a zero accumulator. Under `LossShard::Off` this worker evaluates
+//! all source blocks itself against its spliced gathered copies; under
+//! `LossShard::On` it evaluates only its *own* rows' partials (one
+//! [`crate::kernels::softmax::masked_exp_rowsum_bwd_col_range`] call per
+//! destination block) and hands them to a [`super::FeatGradReduce`]
+//! exchange, which returns the same ascending-source fold computed
+//! cooperatively. The fold order is pinned, so the two modes are bitwise
+//! identical — the §16 equivalence matrix in `tests/native_backend.rs`
+//! holds this line.
+//!
 //! # Determinism
 //!
 //! Every reduction inherits the kernels' fixed summation trees, so one
@@ -48,7 +64,9 @@ use anyhow::{ensure, Result};
 use crate::kernels::{encoder, gemm, norm, precision, resolve_threads, softmax, Precision};
 use crate::util::Rng;
 
-use super::backend::{ComputeBackend, RuntimeTimers, StepEmit, StepOutput, TauGrads, TauInput};
+use super::backend::{
+    ComputeBackend, LossShard, RuntimeTimers, StepEmit, StepOutput, TauGrads, TauInput,
+};
 use super::manifest::{Manifest, ModelInfo, ParamSegment};
 
 /// The step variants the native backend implements — all of Table 1.
@@ -450,6 +468,23 @@ impl ComputeBackend for NativeBackend {
         self.timers
     }
 
+    /// The §16 gauge, priced from what each mode must hold live through
+    /// the column part: unsharded keeps the two spliced gathered copies
+    /// (2·Bg·d floats) plus the fold buffers and one transient partial
+    /// pair (4·Bl·d); sharded replaces the Bg-proportional splices with
+    /// one outbound per-destination segment plus the reduced column sums
+    /// (2·Bl·d each). At K workers the ratio is (2K+4)/4 — 3× at K=4,
+    /// K/2 asymptotically.
+    fn loss_peak_bytes(&self, sharded: bool) -> u64 {
+        let m = &self.manifest;
+        let (bl, bg, d) = (m.local_batch as u64, m.global_batch as u64, m.model.d_embed as u64);
+        if sharded {
+            4 * 4 * bl * d
+        } else {
+            4 * (2 * bg * d + 4 * bl * d)
+        }
+    }
+
     fn encode(
         &mut self,
         params: &[f32],
@@ -519,13 +554,14 @@ impl ComputeBackend for NativeBackend {
         eps: f32,
         rho: f32,
         tau: TauInput,
+        shard: LossShard<'_>,
     ) -> Result<StepOutput> {
         // the emitting path is the implementation; assembling its
         // segments here is exactly the old whole-gradient layout
         let p = self.manifest.n_params;
         let mut grad = vec![0.0f32; p];
         let out = self.step_emit(
-            variant, params, images, texts, e1g, e2g, u1g, u2g, offset, eps, rho, tau,
+            variant, params, images, texts, e1g, e2g, u1g, u2g, offset, eps, rho, tau, shard,
             &mut |off, seg| grad[off..off + seg.len()].copy_from_slice(seg),
         )?;
         Ok(StepOutput { grad, loss: out.loss, tau: out.tau })
@@ -550,6 +586,7 @@ impl ComputeBackend for NativeBackend {
         eps: f32,
         rho: f32,
         tau: TauInput,
+        shard: LossShard<'_>,
         sink: &mut dyn FnMut(usize, &[f32]),
     ) -> Result<StepEmit> {
         let m = &self.manifest;
@@ -581,9 +618,20 @@ impl ComputeBackend for NativeBackend {
         let k = m.k_workers;
         let denom = (bg - 1) as f32;
 
-        // ---- live forward + splice --------------------------------------
+        // ---- live forward + (off-mode) splice ---------------------------
+        // The spliced gathered copies exist only under LossShard::Off:
+        // the sharded path reads e1g/e2g directly, which is bitwise the
+        // same — the local block of a gathered tensor is the wire-exact
+        // copy of this worker's live rows (f32 identity wire; the bf16
+        // feature wire is lossless on bf16-valued embeddings).
         let cache = self.encode_cached(params, images, texts);
-        let (e1sp, e2sp) = splice(e1g, e2g, &cache.e1, &cache.e2, offset, bl, d);
+        let spliced: (Vec<f32>, Vec<f32>);
+        let (e1b, e2b): (&[f32], &[f32]) = if matches!(shard, LossShard::Off) {
+            spliced = splice(e1g, e2g, &cache.e1, &cache.e2, offset, bl, d);
+            (&spliced.0, &spliced.1)
+        } else {
+            (e1g, e2g)
+        };
 
         let u1l = &u1g[offset..offset + bl];
         let u2l = &u2g[offset..offset + bl];
@@ -601,40 +649,25 @@ impl ComputeBackend for NativeBackend {
 
         // ---- row part: local rows × all columns -------------------------
         let g1row = softmax::masked_exp_rowsum(
-            &cache.e1, &e2sp, &diag, &sd, tau1l, denom, bl, bg, d, threads,
+            &cache.e1, e2b, &diag, &sd, tau1l, denom, bl, bg, d, threads,
         );
         let g2row = softmax::masked_exp_rowsum(
-            &cache.e2, &e1sp, &diag, &sd, tau2l, denom, bl, bg, d, threads,
+            &cache.e2, e1b, &diag, &sd, tau2l, denom, bl, bg, d, threads,
         );
 
         let mut de1 = vec![0.0f32; bl * d];
         let mut de2 = vec![0.0f32; bl * d];
 
-        // Only the LOCAL columns of b are live (the rest of e*sp is
-        // stop-grad), so the candidate-side backward runs over just the
-        // local block — b = live e*, column indices shifted by −offset
-        // (the per-element i-ascending sums are unchanged, so this is
-        // bitwise equal to slicing a full-width bwd_col, at 1/K the work)
-        let local_diag: Vec<isize> = (0..bl as isize).collect();
-
-        // side 1: a = e1 (live), b = e2sp (local columns live)
+        // side 1: a = e1 (live), b = e2b (local columns live)
         let (da1, dtau1) = softmax::masked_exp_rowsum_bwd_row(
-            &cache.e1, &e2sp, &diag, &sd, tau1l, &gbar1, denom, bl, bg, d, threads,
-        );
-        let db1 = softmax::masked_exp_rowsum_bwd_col(
-            &cache.e1, &cache.e2, &local_diag, &sd, tau1l, &gbar1, denom, bl, bl, d, threads,
+            &cache.e1, e2b, &diag, &sd, tau1l, &gbar1, denom, bl, bg, d, threads,
         );
         add_assign(&mut de1, &da1);
-        add_assign(&mut de2, &db1);
-        // side 2: a = e2 (live), b = e1sp
+        // side 2: a = e2 (live), b = e1b
         let (da2, dtau2) = softmax::masked_exp_rowsum_bwd_row(
-            &cache.e2, &e1sp, &diag, &sd, tau2l, &gbar2, denom, bl, bg, d, threads,
-        );
-        let db2 = softmax::masked_exp_rowsum_bwd_col(
-            &cache.e2, &cache.e1, &local_diag, &sd, tau2l, &gbar2, denom, bl, bl, d, threads,
+            &cache.e2, e1b, &diag, &sd, tau2l, &gbar2, denom, bl, bg, d, threads,
         );
         add_assign(&mut de2, &da2);
-        add_assign(&mut de1, &db2);
 
         // s_diag path: sd_i = <e1_i, e2_i>, both live, shared by both
         // sides — dsd_i = −(ḡ_i/τ_i)·g_i from each
@@ -648,34 +681,119 @@ impl ComputeBackend for NativeBackend {
             }
         }
 
-        // ---- column part: nonlocal rows × local columns -----------------
-        if bg > bl {
-            let nl = nonlocal_indices(bg, bl, offset);
-            let e1nl = gather_rows(e1g, &nl, d);
-            let e2nl = gather_rows(e2g, &nl, d);
-            let sd_nl: Vec<f32> = nl
-                .iter()
-                .map(|&gi| gemm::dot(&e1g[gi * d..(gi + 1) * d], &e2g[gi * d..(gi + 1) * d]))
-                .collect();
-            let no_diag = vec![softmax::NO_DIAG; nl.len()];
-            let u1n: Vec<f32> = nl.iter().map(|&gi| u1g[gi]).collect();
-            let u2n: Vec<f32> = nl.iter().map(|&gi| u2g[gi]).collect();
-            let t1n: Vec<f32> = nl.iter().map(|&gi| tau1g_vec[gi]).collect();
-            let t2n: Vec<f32> = nl.iter().map(|&gi| tau2g_vec[gi]).collect();
-            let w1n = weights(variant, &u1n, &t1n, eps, bgf);
-            let w2n = weights(variant, &u2n, &t2n, eps, bgf);
-            let gbar1n: Vec<f32> = w1n.iter().map(|w| w / bgf).collect();
-            let gbar2n: Vec<f32> = w2n.iter().map(|w| w / bgf).collect();
-            let nn = nl.len();
-            let db1c = softmax::masked_exp_rowsum_bwd_col(
-                &e1nl, &cache.e2, &no_diag, &sd_nl, &t1n, &gbar1n, denom, nn, bl, d, threads,
-            );
-            add_assign(&mut de2, &db1c);
-            let db2c = softmax::masked_exp_rowsum_bwd_col(
-                &e2nl, &cache.e1, &no_diag, &sd_nl, &t2n, &gbar2n, denom, nn, bl, d, threads,
-            );
-            add_assign(&mut de1, &db2c);
-        }
+        // ---- column part: all rows × local columns (DESIGN.md §16) ------
+        // Both modes compute the same fold: the gradient flowing into this
+        // worker's live candidate columns is the sum over SOURCE row
+        // blocks, folded in ascending block order from a zero accumulator
+        // (a single-source fold is the partial itself — mirroring
+        // `exchange_block_sums` exactly is what keeps on≡off bitwise).
+        let (colsum1, colsum2) = match shard {
+            LossShard::Off => {
+                // ascending source blocks of ≤ B_local rows, cut at the
+                // local block; under the trainer's block-aligned offsets
+                // this is exactly the per-rank row decomposition
+                let mut blocks: Vec<(usize, usize, bool)> = Vec::new();
+                let mut g = 0usize;
+                while g < bg {
+                    if g == offset {
+                        blocks.push((g, g + bl, true));
+                        g += bl;
+                    } else {
+                        let end =
+                            if g < offset { (g + bl).min(offset) } else { (g + bl).min(bg) };
+                        blocks.push((g, end, false));
+                        g = end;
+                    }
+                }
+                let single = blocks.len() == 1;
+                let mut colsum1 = vec![0.0f32; bl * d];
+                let mut colsum2 = vec![0.0f32; bl * d];
+                for &(lo, hi, is_self) in &blocks {
+                    let (p1, p2) = if is_self {
+                        // the global diag indices mask exactly the local
+                        // positives inside the [offset, offset+bl) range
+                        (
+                            softmax::masked_exp_rowsum_bwd_col_range(
+                                &cache.e1, e2b, &diag, &sd, tau1l, &gbar1, denom, bl, bg, d,
+                                offset, offset + bl, threads,
+                            ),
+                            softmax::masked_exp_rowsum_bwd_col_range(
+                                &cache.e2, e1b, &diag, &sd, tau2l, &gbar2, denom, bl, bg, d,
+                                offset, offset + bl, threads,
+                            ),
+                        )
+                    } else {
+                        // a nonlocal source block, replayed from the
+                        // gathered copies — rows are contiguous, so the
+                        // anchor slices borrow straight out of e1g/e2g
+                        let mb = hi - lo;
+                        let diag_b: Vec<isize> = (lo..hi).map(|gi| gi as isize).collect();
+                        let sd_b: Vec<f32> = (lo..hi)
+                            .map(|gi| {
+                                gemm::dot(
+                                    &e1g[gi * d..(gi + 1) * d],
+                                    &e2g[gi * d..(gi + 1) * d],
+                                )
+                            })
+                            .collect();
+                        let t1b = &tau1g_vec[lo..hi];
+                        let t2b = &tau2g_vec[lo..hi];
+                        let w1b = weights(variant, &u1g[lo..hi], t1b, eps, bgf);
+                        let w2b = weights(variant, &u2g[lo..hi], t2b, eps, bgf);
+                        let gbar1b: Vec<f32> = w1b.iter().map(|w| w / bgf).collect();
+                        let gbar2b: Vec<f32> = w2b.iter().map(|w| w / bgf).collect();
+                        (
+                            softmax::masked_exp_rowsum_bwd_col_range(
+                                &e1g[lo * d..hi * d], e2b, &diag_b, &sd_b, t1b, &gbar1b,
+                                denom, mb, bg, d, offset, offset + bl, threads,
+                            ),
+                            softmax::masked_exp_rowsum_bwd_col_range(
+                                &e2g[lo * d..hi * d], e1b, &diag_b, &sd_b, t2b, &gbar2b,
+                                denom, mb, bg, d, offset, offset + bl, threads,
+                            ),
+                        )
+                    };
+                    if single {
+                        colsum1 = p1;
+                        colsum2 = p2;
+                    } else {
+                        add_assign(&mut colsum1, &p1);
+                        add_assign(&mut colsum2, &p2);
+                    }
+                }
+                (colsum1, colsum2)
+            }
+            LossShard::On(fx) => {
+                ensure!(
+                    bg % bl == 0 && offset % bl == 0,
+                    "--loss-shard on needs block-aligned batches \
+                     (global {bg}, local {bl}, offset {offset})"
+                );
+                // this worker's rows' contribution to EVERY destination
+                // block, exchanged for the ascending-source fold over its
+                // own columns; both halves of the segment travel together
+                let summed = fx.exchange(2 * bl * d, &mut |s, seg| {
+                    let (lo, hi) = (s * bl, (s + 1) * bl);
+                    let p1 = softmax::masked_exp_rowsum_bwd_col_range(
+                        &cache.e1, e2b, &diag, &sd, tau1l, &gbar1, denom, bl, bg, d, lo, hi,
+                        threads,
+                    );
+                    let p2 = softmax::masked_exp_rowsum_bwd_col_range(
+                        &cache.e2, e1b, &diag, &sd, tau2l, &gbar2, denom, bl, bg, d, lo, hi,
+                        threads,
+                    );
+                    seg[..bl * d].copy_from_slice(&p1);
+                    seg[bl * d..].copy_from_slice(&p2);
+                })?;
+                ensure!(summed.len() == 2 * bl * d, "feature-grad exchange segment len");
+                let colsum2 = summed[bl * d..].to_vec();
+                let mut colsum1 = summed;
+                colsum1.truncate(bl * d);
+                (colsum1, colsum2)
+            }
+        };
+        add_assign(&mut de2, &colsum1);
+        add_assign(&mut de1, &colsum2);
 
         // ---- backprop through normalize + encoders ----------------------
         // segment-ordered emission (DESIGN.md §11): each leaf's gradient
@@ -828,7 +946,10 @@ mod tests {
                 TauInput::Global(0.05)
             };
             let out = rt
-                .step(variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-8, 6.5, tau)
+                .step(
+                    variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-8, 6.5, tau,
+                    LossShard::Off,
+                )
                 .unwrap_or_else(|e| panic!("{variant}: {e:#}"));
             assert_eq!(out.grad.len(), m.n_params, "{variant}");
             assert!(out.loss.is_finite(), "{variant}");
@@ -870,6 +991,7 @@ mod tests {
                 .step(
                     variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-8, 6.5,
                     tau.clone(),
+                    LossShard::Off,
                 )
                 .unwrap();
             // emission: contiguous ascending segments (one per leaf)
@@ -881,6 +1003,7 @@ mod tests {
                 .step_emit(
                     variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-8, 6.5,
                     tau,
+                    LossShard::Off,
                     &mut |off, seg| {
                         assert_eq!(off, cursor, "{variant}: segments must be contiguous");
                         assembled[off..off + seg.len()].copy_from_slice(seg);
@@ -911,13 +1034,75 @@ mod tests {
         let r = rt.step(
             "gcl", &params, &images, &texts, &feats, &feats, &u, &u, 0, 1e-14, 0.0,
             TauInput::Individual { tau1g: &t, tau2g: &t },
+            LossShard::Off,
         );
         assert!(r.is_err());
         let r = rt.step(
             "nonsense", &params, &images, &texts, &feats, &feats, &u, &u, 0, 1e-14, 0.0,
             TauInput::Global(0.05),
+            LossShard::Off,
         );
         assert!(r.is_err());
+    }
+
+    /// K=1 smoke test of the §16 contract: a loopback exchange (the one
+    /// rank's fill IS the fold) must leave every output bitwise equal to
+    /// the unsharded path — the multi-rank matrix lives in
+    /// `tests/native_backend.rs`.
+    #[test]
+    fn loss_shard_on_matches_off_at_k1() {
+        use super::super::backend::FeatGradReduce;
+        struct Loopback;
+        impl FeatGradReduce for Loopback {
+            fn exchange(
+                &mut self,
+                seg_len: usize,
+                fill: &mut dyn FnMut(usize, &mut [f32]),
+            ) -> Result<Vec<f32>> {
+                let mut seg = vec![0.0f32; seg_len];
+                fill(0, &mut seg);
+                Ok(seg)
+            }
+        }
+        let mut rt = {
+            let m = Manifest::native("tiny", 1, 8, 3).unwrap();
+            NativeBackend::new(&m, None, 2).unwrap()
+        };
+        let m = rt.manifest().clone();
+        let (params, images, texts) = demo_inputs(&m, 23);
+        let (e1g, e2g) = rt.encode(&params, &images, &texts).unwrap();
+        let bg = m.global_batch;
+        let (u1g, u2g) = (vec![0.7; bg], vec![0.6; bg]);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for variant in VARIANTS {
+            let taus: Vec<f32> = (0..bg).map(|i| 0.04 + 0.001 * i as f32).collect();
+            let tau = || {
+                if variant == "rgcl_i" {
+                    TauInput::Individual { tau1g: &taus, tau2g: &taus }
+                } else {
+                    TauInput::Global(0.05)
+                }
+            };
+            let off = rt
+                .step(
+                    variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-8, 6.5,
+                    tau(),
+                    LossShard::Off,
+                )
+                .unwrap();
+            let on = rt
+                .step(
+                    variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-8, 6.5,
+                    tau(),
+                    LossShard::On(&mut Loopback),
+                )
+                .unwrap();
+            assert_eq!(bits(&on.grad), bits(&off.grad), "{variant}");
+            assert_eq!(on.loss.to_bits(), off.loss.to_bits(), "{variant}");
+            assert_eq!(on.tau, off.tau, "{variant}");
+        }
+        // the gauge prices sharding as the strict memory win it is
+        assert!(rt.loss_peak_bytes(false) > rt.loss_peak_bytes(true));
     }
 
     #[test]

@@ -19,7 +19,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 #[cfg(not(feature = "pjrt"))]
 use super::pjrt_stub as xla;
 
-use super::backend::{ComputeBackend, RuntimeTimers, StepOutput, TauGrads, TauInput};
+use super::backend::{ComputeBackend, LossShard, RuntimeTimers, StepOutput, TauGrads, TauInput};
 use super::manifest::Manifest;
 
 pub struct WorkerRuntime {
@@ -312,7 +312,16 @@ impl ComputeBackend for WorkerRuntime {
         eps: f32,
         rho: f32,
         tau: TauInput,
+        shard: LossShard<'_>,
     ) -> Result<StepOutput> {
+        // defense in depth behind the trainer's config-time rejection:
+        // the AOT-lowered step graphs materialize the full candidate
+        // structure and have no exchange hook to hand segments to
+        ensure!(
+            matches!(shard, LossShard::Off),
+            "--loss-shard on is not supported by the pjrt backend: the AOT-lowered \
+             HLO step artifacts compute the unsharded loss (use --backend native)"
+        );
         WorkerRuntime::step(
             self, variant, params, images, texts, e1g, e2g, u1g, u2g, offset, eps, rho, tau,
         )

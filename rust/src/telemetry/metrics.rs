@@ -108,6 +108,7 @@ impl MetricsRegistry {
         self.counter_add("comm.grad_wire_bytes", s.grad_wire_bytes);
         self.counter_add("comm.grad_wire_bytes_naive", s.grad_wire_bytes_naive);
         self.counter_add("comm.param_wire_bytes", s.param_wire_bytes);
+        self.counter_add("comm.featgrad_wire_bytes", s.featgrad_wire_bytes);
         self.counter_add("comm.hidden_comm_us", s.hidden_comm_us);
         self.counter_add("comm.exposed_comm_us", s.exposed_comm_us);
     }

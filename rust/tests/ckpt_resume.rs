@@ -528,6 +528,84 @@ fn trainer_resume_bitwise_topk_residuals_all_reduces_and_overlap() {
     }
 }
 
+/// Loss sharding (DESIGN.md §16) composes with checkpointing. The shard
+/// mode is deliberately *not* checkpoint state — a snapshot carries only
+/// params/u/τ/loader/optimizer, all of which are bitwise identical under
+/// either mode — so a snapshot written with `--loss-shard off` must
+/// resume bitwise under `--loss-shard on` (and vice versa), and both
+/// must match the uninterrupted sharded run.
+#[test]
+fn trainer_resume_bitwise_across_loss_shard_modes() {
+    use fastclip::runtime::LossShardMode;
+    let (n, m) = (6u32, 4u32);
+    // FastClipV2 (rgcl_i): individual-τ state, the richest resume payload
+    for (snap_mode, resume_mode) in [
+        (LossShardMode::Off, LossShardMode::On),
+        (LossShardMode::On, LossShardMode::Off),
+        (LossShardMode::On, LossShardMode::On),
+    ] {
+        let label = format!("snap={} resume={}", snap_mode.id(), resume_mode.id());
+        let root = tmp_root(&format!("shard_{}_{}", snap_mode.id(), resume_mode.id()));
+        let mut base = trainer_cfg(Algorithm::FastClipV2, n + m);
+        base.loss_shard = LossShardMode::On;
+        let continuous = Trainer::new(base.clone()).unwrap().run().unwrap();
+        assert!(continuous.loss_shard, "{label}");
+
+        let mut leg1 = base.clone();
+        leg1.loss_shard = snap_mode;
+        leg1.steps = n;
+        leg1.ckpt_dir = Some(root.to_string_lossy().into_owned());
+        leg1.ckpt_every = n;
+        let first = Trainer::new(leg1).unwrap().run().unwrap();
+        assert_eq!(first.ckpt.snapshots, 1, "{label}");
+
+        let mut leg2 = base.clone();
+        leg2.loss_shard = resume_mode;
+        leg2.ckpt_dir = Some(root.to_string_lossy().into_owned());
+        leg2.resume = Some("latest".to_string());
+        let resumed = Trainer::new(leg2).unwrap().run().unwrap();
+        assert_eq!(resumed.ckpt.resumed_at, Some(n), "{label}");
+
+        assert_eq!(
+            continuous.final_params, resumed.final_params,
+            "cross-mode resume params must be bitwise equal: {label}"
+        );
+        assert_eq!(continuous.final_tau.to_bits(), resumed.final_tau.to_bits(), "{label}");
+        for (a, b) in continuous.history[n as usize..].iter().zip(&resumed.history) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}: {label}", a.step);
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+/// Elastic resume (K=2 → K′=1) under `--loss-shard on`: the sharded
+/// loss path re-derives its row/column slices from the new topology's
+/// offsets, so the resized world keeps training with finite losses.
+#[test]
+fn trainer_elastic_resume_under_loss_shard() {
+    use fastclip::runtime::LossShardMode;
+    let root = tmp_root("trainer_elastic_shard");
+    let mut leg1 = trainer_cfg(Algorithm::FastClipV3, 8);
+    leg1.loss_shard = LossShardMode::On;
+    leg1.steps = 4;
+    leg1.ckpt_dir = Some(root.to_string_lossy().into_owned());
+    leg1.ckpt_every = 4;
+    Trainer::new(leg1).unwrap().run().unwrap();
+
+    let mut leg2 = trainer_cfg(Algorithm::FastClipV3, 8);
+    leg2.set_bundle("artifacts/tiny_k1_b16");
+    leg2.loss_shard = LossShardMode::On;
+    leg2.ckpt_dir = Some(root.to_string_lossy().into_owned());
+    leg2.resume = Some("latest".to_string());
+    let r = Trainer::new(leg2).unwrap().run().unwrap();
+    assert!(r.loss_shard);
+    assert_eq!(r.ckpt.resumed_at, Some(4));
+    // K′=1: the exchange is a loopback — no featgrad wire traffic
+    assert_eq!(r.featgrad_wire_bytes, 0);
+    assert!(r.history.iter().all(|h| h.loss.is_finite()));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
 #[test]
 fn trainer_elastic_resume_k2_to_k1() {
     // K=2 topology writes the checkpoint; K=1 resumes it (elastic)

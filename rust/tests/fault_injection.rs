@@ -304,6 +304,49 @@ fn live_shrink_is_bitwise_cold_elastic_resume_topk_wire() {
 }
 
 // ---------------------------------------------------------------------
+// 2b. Live shrink under the sharded loss (DESIGN.md §16): the featgrad
+//     exchange rides the cancellable training collectives, so an
+//     injected death mid-run still shrinks cleanly — and the whole run
+//     (rollback, re-shard to K′=1, remaining steps) is bitwise equal to
+//     the unsharded run of the same config.
+// ---------------------------------------------------------------------
+
+#[test]
+fn live_shrink_stays_bitwise_under_loss_shard() {
+    use fastclip::runtime::LossShardMode;
+    let (steps, every, fail_iter) = (10u32, 4u32, 6u32);
+    for (algo, reduce) in
+        [(Algorithm::FastClipV2, ReduceAlgo::Ring), (Algorithm::FastClipV3, ReduceAlgo::Sharded)]
+    {
+        let label = format!("{} reduce={}", algo.id(), reduce.id());
+        let mut runs = Vec::new();
+        for mode in [LossShardMode::On, LossShardMode::Off] {
+            let root = tmp_root(&format!("shrink_shard_{}_{}", algo.id(), mode.id()));
+            let mut cfg = trainer_cfg(algo, steps);
+            cfg.loss_shard = mode;
+            cfg.reduce = ReduceStrategy::Fixed(reduce);
+            cfg.ckpt_dir = Some(root.to_string_lossy().into_owned());
+            cfg.ckpt_every = every;
+            cfg.fail = Some(format!("rank=1@iter={fail_iter}"));
+            cfg.watchdog_ms = 20_000;
+            let r = Trainer::new(cfg).unwrap().run().unwrap();
+            assert_eq!(r.shrinks, 1, "{label}");
+            assert_eq!(r.final_world, 1, "{label}");
+            assert_eq!(r.loss_shard, mode == LossShardMode::On, "{label}");
+            assert_eq!(r.history.len(), steps as usize, "{label}");
+            runs.push(r);
+            let _ = std::fs::remove_dir_all(&root);
+        }
+        let (on, off) = (&runs[0], &runs[1]);
+        assert_eq!(on.final_params, off.final_params, "params: {label}");
+        assert_eq!(on.final_tau.to_bits(), off.final_tau.to_bits(), "tau: {label}");
+        for (a, b) in on.history.iter().zip(&off.history) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss at step {}: {label}", a.step);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // 3. Straggler regression: injected latency skew must not perturb the
 //    numerics, and the hidden/exposed comm accounting must stay finite
 //    and consistent under skew.

@@ -13,11 +13,15 @@
 
 use std::sync::Arc;
 
-use fastclip::comm::{reduction, CommWorld, ReduceAlgo, ReduceCtx, WireCodec};
+use fastclip::comm::{
+    reduction, CommWorld, OverlapMode, ReduceAlgo, ReduceCtx, ReduceStrategy, WireCodec,
+};
 use fastclip::config::{Algorithm, DataConfig, OptimizerConfig, TrainConfig};
 use fastclip::coordinator::Trainer;
 use fastclip::optim::{build, shard_segments};
-use fastclip::runtime::{ComputeBackend, Manifest, NativeBackend, TauGrads, TauInput};
+use fastclip::runtime::{
+    ComputeBackend, LossShard, LossShardMode, Manifest, NativeBackend, TauGrads, TauInput,
+};
 use fastclip::util::Rng;
 
 /// THE paper-math invariant: two workers computing the FastCLIP gradient
@@ -87,6 +91,7 @@ fn distributed_gradient_equals_global_gradient() {
                     eps,
                     rho,
                     TauInput::Global(tau),
+                    LossShard::Off,
                 )
                 .unwrap();
             for (a, b) in grad_sum.iter_mut().zip(&out.grad) {
@@ -103,7 +108,7 @@ fn distributed_gradient_equals_global_gradient() {
         let out1 = rt1
             .step(
                 variant, &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, eps, rho,
-                TauInput::Global(tau),
+                TauInput::Global(tau), LossShard::Off,
             )
             .unwrap();
 
@@ -211,6 +216,7 @@ fn rgcl_i_gradient_splits_across_workers() {
                 1e-8,
                 9.0,
                 TauInput::Individual { tau1g: &tau1g, tau2g: &tau2g },
+                LossShard::Off,
             )
             .unwrap();
         for (a, b) in grad_sum.iter_mut().zip(&out.grad) {
@@ -224,7 +230,7 @@ fn rgcl_i_gradient_splits_across_workers() {
     let out1 = rt1
         .step(
             "rgcl_i", &params, &images, &texts, &e1g, &e2g, &u1g, &u2g, 0, 1e-8, 9.0,
-            TauInput::Individual { tau1g: &tau1g, tau2g: &tau2g },
+            TauInput::Individual { tau1g: &tau1g, tau2g: &tau2g }, LossShard::Off,
         )
         .unwrap();
     let dot: f64 = grad_sum.iter().zip(&out1.grad).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
@@ -474,6 +480,122 @@ fn sharded_training_loop_matches_replicated() {
     }
     let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
     assert_eq!(bits(&replicated[0]), bits(&sharded[0]), "sharded training diverged");
+}
+
+// ---------------------------------------------------------------------------
+// Memory-sharded loss composition (DESIGN.md §16): `--loss-shard on ≡ off`
+// through the real trainer, across reduction algorithms × serial|overlap
+// and all four gradient wire codecs — with the feature-gradient
+// exchange's wire bytes charged exactly and the parameter-gradient wire
+// untouched by the shard mode.
+// ---------------------------------------------------------------------------
+
+fn shard_cfg(steps: u32) -> TrainConfig {
+    let mut cfg = TrainConfig::new("artifacts/tiny_k2_b8", Algorithm::FastClipV3);
+    cfg.backend = fastclip::runtime::BackendKind::Native;
+    cfg.kernel_threads = 1;
+    cfg.steps = steps;
+    cfg.iters_per_epoch = 2;
+    cfg.data = DataConfig { n_train: 64, n_eval: 16, n_classes: 8, ..DataConfig::default() };
+    cfg.lr.warmup_iters = 1;
+    cfg.lr.total_iters = steps;
+    cfg
+}
+
+/// Per-rank feature-gradient wire bytes the sharded loss charges over a
+/// run: (K−1) f32 segments of 2·B_local·d elements per step (the self
+/// segment never leaves the device; the leg's codec is pinned to f32).
+fn expected_featgrad_bytes(steps: u32) -> u64 {
+    let m = Manifest::native("tiny", 2, 8, 0).unwrap();
+    let (k, bl, d) = (m.k_workers as u64, m.local_batch as u64, m.model.d_embed as u64);
+    steps as u64 * (k - 1) * 4 * (2 * bl * d)
+}
+
+fn assert_bitwise_runs(
+    on: &fastclip::coordinator::TrainResult,
+    off: &fastclip::coordinator::TrainResult,
+    label: &str,
+) {
+    assert!(on.loss_shard && !off.loss_shard, "{label}: modes resolved wrong");
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&on.final_params), bits(&off.final_params), "{label}: params");
+    for (a, b) in on.history.iter().zip(&off.history) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{label} step {}", a.step);
+        assert_eq!(a.tau.to_bits(), b.tau.to_bits(), "{label} step {}", a.step);
+    }
+}
+
+#[test]
+fn loss_shard_composes_with_reduce_and_overlap_bitwise() {
+    let steps = 4u32;
+    let expected = expected_featgrad_bytes(steps);
+    for reduce in ReduceAlgo::all() {
+        for overlap in [OverlapMode::Off, OverlapMode::On] {
+            let run = |mode: LossShardMode| {
+                let mut cfg = shard_cfg(steps);
+                cfg.reduce = ReduceStrategy::Fixed(reduce);
+                cfg.overlap = overlap;
+                cfg.bucket_bytes = 2 << 10; // many buckets under overlap
+                cfg.loss_shard = mode;
+                Trainer::new(cfg).unwrap().run().unwrap()
+            };
+            let on = run(LossShardMode::On);
+            let off = run(LossShardMode::Off);
+            let label = format!("{} overlap={}", reduce.id(), overlap.id());
+            assert_bitwise_runs(&on, &off, &label);
+            // exact wire accounting: the exchange charges its f32 width,
+            // the unsharded run charges nothing on that leg, and the
+            // parameter-gradient wire is identical across shard modes
+            assert_eq!(on.featgrad_wire_bytes, expected, "{label}");
+            assert_eq!(off.featgrad_wire_bytes, 0, "{label}");
+            assert_eq!(on.grad_wire_bytes, off.grad_wire_bytes, "{label}");
+        }
+    }
+}
+
+#[test]
+fn loss_shard_bitwise_under_all_wire_codecs_with_exact_accounting() {
+    let steps = 4u32;
+    let expected = expected_featgrad_bytes(steps);
+    for wire in [WireCodec::F32, WireCodec::Bf16, WireCodec::Int8, WireCodec::TopK] {
+        let run = |mode: LossShardMode| {
+            let mut cfg = shard_cfg(steps);
+            cfg.reduce = ReduceStrategy::Fixed(ReduceAlgo::Ring);
+            cfg.wire = Some(wire);
+            cfg.loss_shard = mode;
+            Trainer::new(cfg).unwrap().run().unwrap()
+        };
+        let on = run(LossShardMode::On);
+        let off = run(LossShardMode::Off);
+        // bitwise even under LOSSY param-grad codecs: the feature-grad
+        // leg is pinned to f32, so compression never sees loss state
+        assert_bitwise_runs(&on, &off, wire.id());
+        // per codec: the param-grad charge tracks the codec and is
+        // identical across shard modes; the feature leg charges its
+        // f32 width regardless of the codec
+        assert_eq!(on.grad_wire_bytes, off.grad_wire_bytes, "{}", wire.id());
+        assert_eq!(on.featgrad_wire_bytes, expected, "{}", wire.id());
+        assert_eq!(off.featgrad_wire_bytes, 0, "{}", wire.id());
+        assert_eq!(on.wire, wire.id());
+    }
+}
+
+/// `--loss-shard on` with the pjrt backend is rejected up front with an
+/// actionable error — before the artifact bundle is even opened. (`auto`
+/// resolution is pinned in `runtime::backend` unit tests: on for native,
+/// off for pjrt.)
+#[test]
+fn loss_shard_on_rejected_for_pjrt_backend() {
+    let mut cfg = shard_cfg(2);
+    cfg.backend = fastclip::runtime::BackendKind::Pjrt;
+    cfg.loss_shard = LossShardMode::On;
+    let err = Trainer::new(cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("--loss-shard on requires the native backend"),
+        "actionable: {msg}"
+    );
+    assert!(msg.contains("--backend native"), "suggests the fix: {msg}");
 }
 
 /// Config presets in configs/ parse and validate.

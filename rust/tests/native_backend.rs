@@ -17,12 +17,13 @@
 //!
 //! Everything runs unconditionally: no artifacts, no pjrt feature.
 
-use fastclip::comm::{OverlapMode, ReduceAlgo, ReduceStrategy};
+use fastclip::comm::{CommWorld, OverlapMode, ReduceAlgo, ReduceStrategy, WireCodec, WorkerComm};
 use fastclip::config::{Algorithm, DataConfig, TrainConfig};
 use fastclip::coordinator::Trainer;
 use fastclip::kernels::{gemm, norm, softmax, Precision};
 use fastclip::runtime::{
-    BackendKind, ComputeBackend, Manifest, NativeBackend, StepOutput, TauGrads, TauInput,
+    BackendKind, ComputeBackend, FeatGradReduce, LossShard, Manifest, NativeBackend, StepOutput,
+    TauGrads, TauInput,
 };
 use fastclip::util::Rng;
 
@@ -162,7 +163,7 @@ fn run_step(f: &StepFixture, variant: &str, threads: usize) -> StepOutput {
     };
     rt.step(
         variant, &f.params, &f.images, &f.texts, &f.e1g, &f.e2g, &f.u1g, &f.u2g, 0, 1e-8, 6.5,
-        tau,
+        tau, LossShard::Off,
     )
     .unwrap()
 }
@@ -577,7 +578,7 @@ fn bf16_step_gradient_matches_f32_finite_difference_oracle() {
         let out = bf
             .step(
                 variant, &f.params, &f.images, &f.texts, &f.e1g, &f.e2g, &f.u1g, &f.u2g, 0,
-                1e-8, 6.5, TauInput::Global(0.05),
+                1e-8, 6.5, TauInput::Global(0.05), LossShard::Off,
             )
             .unwrap();
         let oracle = NativeBackend::new(&f.manifest, Some(variant), 1).unwrap();
@@ -646,4 +647,282 @@ fn full_native_loop_with_eval_snapshot_resume() {
 
 fn ckpt_step_dir(root: &std::path::Path, step: u32) -> String {
     root.join(format!("step_{step:08}")).to_string_lossy().into_owned()
+}
+
+// -------------------------------------------------------------------------
+// 6. memory-sharded loss (--loss-shard, DESIGN.md §16): the equivalence
+//    matrix. A sharded step is bitwise-identical to the unsharded one,
+//    per rank, for every variant × world size × precision × kernel-thread
+//    count, at B_local = 1 edge shards, and against a finite-difference
+//    oracle; the kernel's column decomposition needs no divisibility.
+// -------------------------------------------------------------------------
+
+/// The real K-rank column exchange over an in-process collective world —
+/// what the trainer adapts onto `GradientReduction::reduce_feature_grads`
+/// (the leg's codec is pinned to f32 there too).
+struct CommExchange<'a> {
+    comm: &'a WorkerComm,
+}
+
+impl FeatGradReduce for CommExchange<'_> {
+    fn exchange(
+        &mut self,
+        seg_len: usize,
+        fill: &mut dyn FnMut(usize, &mut [f32]),
+    ) -> anyhow::Result<Vec<f32>> {
+        Ok(self.comm.exchange_block_sums(seg_len, fill, WireCodec::F32)?)
+    }
+}
+
+/// Per-rank inputs for a K-rank sharded-vs-unsharded comparison: each
+/// rank has its own batch; the "gathered" features are each rank's real
+/// encode outputs concatenated in rank order (what `all_gather` moves —
+/// bitwise, since the f32 wire is the identity and the bf16 wire is
+/// lossless on bf16-valued embeddings).
+struct ShardFixture {
+    manifest: Manifest,
+    params: Vec<f32>,
+    images: Vec<Vec<f32>>,
+    texts: Vec<Vec<i32>>,
+    e1g: Vec<f32>,
+    e2g: Vec<f32>,
+    u1g: Vec<f32>,
+    u2g: Vec<f32>,
+    tau1g: Vec<f32>,
+    tau2g: Vec<f32>,
+}
+
+fn shard_fixture(k: usize, bl: usize, precision: Precision) -> ShardFixture {
+    let manifest = Manifest::native("tiny", k, bl, 11).unwrap();
+    let params = manifest.load_init_params().unwrap();
+    let dims = manifest.model_dims();
+    let (bg, d) = (manifest.global_batch, manifest.model.d_embed);
+    let (mut images, mut texts) = (Vec::new(), Vec::new());
+    let (mut e1g, mut e2g) = (Vec::new(), Vec::new());
+    for rank in 0..k {
+        let mut rng = Rng::new(900 + rank as u64);
+        let mut im = vec![0.0f32; bl * dims.v_patches * dims.v_patch_dim];
+        rng.fill_normal(&mut im, 1.0);
+        let tx: Vec<i32> =
+            (0..bl * dims.t_len).map(|_| rng.below(dims.t_vocab) as i32).collect();
+        let mut rt =
+            NativeBackend::with_precision(&manifest, Some("gcl"), 1, precision).unwrap();
+        let (e1, e2) = rt.encode(&params, &im, &tx).unwrap();
+        e1g.extend_from_slice(&e1);
+        e2g.extend_from_slice(&e2);
+        images.push(im);
+        texts.push(tx);
+    }
+    assert_eq!(e1g.len(), bg * d);
+    let u1g: Vec<f32> = (0..bg).map(|i| 0.4 + 0.017 * i as f32).collect();
+    let u2g: Vec<f32> = (0..bg).map(|i| 1.1 - 0.021 * i as f32).collect();
+    let tau1g: Vec<f32> = (0..bg).map(|i| 0.03 + 0.0013 * i as f32).collect();
+    let tau2g: Vec<f32> = (0..bg).map(|i| 0.09 - 0.0017 * i as f32).collect();
+    ShardFixture { manifest, params, images, texts, e1g, e2g, u1g, u2g, tau1g, tau2g }
+}
+
+fn shard_step(
+    f: &ShardFixture,
+    variant: &str,
+    precision: Precision,
+    threads: usize,
+    rank: usize,
+    shard: LossShard<'_>,
+) -> StepOutput {
+    let bl = f.manifest.local_batch;
+    let mut rt =
+        NativeBackend::with_precision(&f.manifest, Some(variant), threads, precision).unwrap();
+    let tau = if variant == "rgcl_i" {
+        TauInput::Individual { tau1g: &f.tau1g, tau2g: &f.tau2g }
+    } else {
+        TauInput::Global(0.05)
+    };
+    rt.step(
+        variant, &f.params, &f.images[rank], &f.texts[rank], &f.e1g, &f.e2g, &f.u1g, &f.u2g,
+        rank * bl, 1e-8, 6.5, tau, shard,
+    )
+    .unwrap()
+}
+
+/// Spawn one thread per rank over a shared collective world and collect
+/// the outputs in rank order.
+fn run_ranks<T: Send>(
+    world: &std::sync::Arc<CommWorld>,
+    k: usize,
+    f: impl Fn(WorkerComm) -> T + Sync,
+) -> Vec<T> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let comm = world.handle(rank);
+                let f = &f;
+                s.spawn(move || f(comm))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+fn assert_step_bitwise(a: &StepOutput, b: &StepOutput, label: &str) {
+    assert_eq!(bits(&a.grad), bits(&b.grad), "{label}: grad");
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{label}: loss");
+    match (&a.tau, &b.tau) {
+        (TauGrads::Global(x), TauGrads::Global(y)) => {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: tau")
+        }
+        (
+            TauGrads::Individual { tau1: x1, tau2: x2 },
+            TauGrads::Individual { tau1: y1, tau2: y2 },
+        ) => {
+            assert_eq!(bits(x1), bits(y1), "{label}: tau1");
+            assert_eq!(bits(x2), bits(y2), "{label}: tau2");
+        }
+        _ => panic!("{label}: tau grad kind diverged between shard modes"),
+    }
+}
+
+/// The acceptance matrix of DESIGN.md §16: all 5 step variants ×
+/// K ∈ {1, 2, 4} (including B_local = 1 edge shards at K = 4) ×
+/// f32/bf16 × 1/4 kernel threads — `--loss-shard on` over the real
+/// K-rank exchange is bitwise equal to `off`, per rank.
+#[test]
+fn loss_shard_on_off_bitwise_equivalence_matrix() {
+    for &(k, bl) in &[(1usize, 8usize), (2, 8), (4, 4), (4, 1)] {
+        for precision in [Precision::F32, Precision::Bf16] {
+            let f = shard_fixture(k, bl, precision);
+            for variant in ["gcl", "gcl_v0", "rgcl_g", "rgcl_i", "mbcl"] {
+                for threads in [1usize, 4] {
+                    let off: Vec<StepOutput> = (0..k)
+                        .map(|r| shard_step(&f, variant, precision, threads, r, LossShard::Off))
+                        .collect();
+                    let world = CommWorld::new(k);
+                    let on = run_ranks(&world, k, |comm| {
+                        let rank = comm.rank();
+                        let mut fx = CommExchange { comm: &comm };
+                        shard_step(&f, variant, precision, threads, rank, LossShard::On(&mut fx))
+                    });
+                    for (r, (a, b)) in off.iter().zip(&on).enumerate() {
+                        let label = format!(
+                            "{variant} k={k} bl={bl} {} t={threads} rank {r}",
+                            precision.id()
+                        );
+                        assert_step_bitwise(a, b, &label);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Finite-difference oracle under sharding: the sharded step's analytic
+/// gradient at a NONZERO offset (rank 1 of 2) matches the same
+/// surrogate-value oracle the unsharded check uses, for every variant.
+#[test]
+fn loss_shard_gradient_matches_finite_difference_oracle() {
+    let precision = Precision::F32;
+    let (k, bl) = (2usize, 8usize);
+    let f = shard_fixture(k, bl, precision);
+    let d = f.manifest.model.d_embed;
+    let rank = 1usize;
+    let tok_used = f.texts[rank][0] as usize;
+    let seg = |name: &str| {
+        f.manifest.param_spec.iter().find(|s| s.name == name).unwrap().offset
+    };
+    let probes = vec![
+        seg("v.proj") + 3,
+        seg("v.bias") + 1,
+        seg("t.tok") + tok_used * d + 2,
+        seg("t.bias") + d - 1,
+    ];
+    for variant in ["gcl", "gcl_v0", "rgcl_g", "rgcl_i", "mbcl"] {
+        let world = CommWorld::new(k);
+        let outs = run_ranks(&world, k, |comm| {
+            let r = comm.rank();
+            let mut fx = CommExchange { comm: &comm };
+            shard_step(&f, variant, precision, 2, r, LossShard::On(&mut fx))
+        });
+        let out = &outs[rank];
+        let rt = NativeBackend::new(&f.manifest, Some(variant), 1).unwrap();
+        let value = |params: &[f32]| -> f64 {
+            rt.surrogate_value(
+                variant, params, &f.images[rank], &f.texts[rank], &f.e1g, &f.e2g, &f.u1g,
+                &f.u2g, &f.tau1g, &f.tau2g, rank * bl, 1e-8,
+            )
+            .unwrap() as f64
+        };
+        let h = 2e-2f32;
+        for &idx in &probes {
+            let mut pp = f.params.clone();
+            let mut pm = f.params.clone();
+            pp[idx] += h;
+            pm[idx] -= h;
+            let num = (value(&pp) - value(&pm)) / (2.0 * h as f64);
+            let got = out.grad[idx] as f64;
+            assert!(
+                (num - got).abs() < 0.1 * num.abs().max(0.05),
+                "{variant} sharded grad[{idx}]: finite-diff {num:.6} vs analytic {got:.6}"
+            );
+        }
+    }
+}
+
+/// Kernel-level: the column decomposition needs no divisibility. An
+/// uneven ascending partition of the 13 global columns (5/4/4) stitches
+/// to the full backward bitwise — per-output-element folds are untouched
+/// by where the column cuts fall, so B_global % K ≠ 0 is fine at the
+/// kernel layer (the trainer's on-mode additionally requires
+/// block-aligned offsets for the exchange segments).
+#[test]
+fn loss_shard_column_partition_needs_no_divisibility() {
+    let (m, n, d) = (7usize, 13usize, 5usize);
+    let a = randn(m * d, 210);
+    let b = randn(n * d, 211);
+    let diag: Vec<isize> =
+        (0..m).map(|i| if i % 5 == 4 { softmax::NO_DIAG } else { (i % n) as isize }).collect();
+    let sd: Vec<f32> = (0..m).map(|i| 0.04 * i as f32).collect();
+    let tau: Vec<f32> = (0..m).map(|i| 0.05 + 0.002 * i as f32).collect();
+    let gbar: Vec<f32> = (0..m).map(|i| 0.9 - 0.07 * i as f32).collect();
+    let denom = (n - 1) as f32;
+    let full =
+        softmax::masked_exp_rowsum_bwd_col(&a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d, 2);
+    let mut stitched: Vec<f32> = Vec::with_capacity(n * d);
+    for w in [0usize, 5, 9, 13].windows(2) {
+        let part = softmax::masked_exp_rowsum_bwd_col_range(
+            &a, &b, &diag, &sd, &tau, &gbar, denom, m, n, d, w[0], w[1], 2,
+        );
+        stitched.extend_from_slice(&part);
+    }
+    assert_eq!(bits(&stitched), bits(&full), "uneven column cuts stitch bitwise");
+}
+
+/// The alignment precondition is enforced, not assumed: a sharded step
+/// whose offset is not a multiple of the local batch is rejected with an
+/// actionable error (the trainer always passes rank·B_local, but the
+/// kernel-level API must not silently mis-segment).
+#[test]
+fn loss_shard_rejects_misaligned_offsets() {
+    let f = shard_fixture(2, 8, Precision::F32);
+    let mut rt = NativeBackend::new(&f.manifest, Some("gcl"), 1).unwrap();
+    struct NeverCalled;
+    impl FeatGradReduce for NeverCalled {
+        fn exchange(
+            &mut self,
+            _seg_len: usize,
+            _fill: &mut dyn FnMut(usize, &mut [f32]),
+        ) -> anyhow::Result<Vec<f32>> {
+            panic!("exchange must not run for a misaligned shard");
+        }
+    }
+    let mut fx = NeverCalled;
+    let err = rt
+        .step(
+            "gcl", &f.params, &f.images[0], &f.texts[0], &f.e1g, &f.e2g, &f.u1g, &f.u2g,
+            3, // not a multiple of bl = 8
+            1e-8, 6.5, TauInput::Global(0.05), LossShard::On(&mut fx),
+        )
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("block-aligned"),
+        "actionable alignment error: {err:#}"
+    );
 }

@@ -117,6 +117,86 @@ fn telemetry_is_bitwise_invisible_f32() {
     telemetry_is_bitwise_invisible(Precision::F32);
 }
 
+/// The sharded loss (DESIGN.md §16) is telemetry-pinned. The
+/// `loss.peak_bytes` gauge follows the exact analytic formulas for the
+/// loss-stage working set —
+///   off: 4·(2·Bg·d + 4·Bl·d) bytes (two gathered feature matrices plus
+///        the four local-slice gradient buffers),
+///   on:  16·Bl·d bytes (everything block-local) —
+/// so a K=4 world shards the peak down exactly (2K+4)/4 = 3×, the
+/// exchange shows up in `comm.featgrad_wire_bytes`, and the run meta
+/// records the resolved mode.
+#[test]
+fn loss_shard_peak_bytes_gauge_is_pinned_at_k4() {
+    use fastclip::runtime::LossShardMode;
+    use fastclip::util::Json;
+    let (k, bl, steps) = (4usize, 4usize, 4u32);
+    let dir = tmp_dir("loss_shard_gauge");
+    let trace_path = dir.join("trace.jsonl");
+    let mk = |mode: LossShardMode, trace: Option<&PathBuf>| {
+        let mut cfg = TrainConfig::new("artifacts/tiny_k4_b4", Algorithm::FastClipV3);
+        cfg.backend = fastclip::runtime::BackendKind::Native;
+        cfg.n_workers = k;
+        cfg.local_batch = bl;
+        cfg.kernel_threads = 1;
+        cfg.steps = steps;
+        cfg.iters_per_epoch = 4;
+        cfg.data.n_train = 64;
+        cfg.data.n_eval = 32;
+        cfg.data.n_classes = 8;
+        cfg.lr.warmup_iters = 2;
+        cfg.lr.total_iters = steps;
+        cfg.loss_shard = mode;
+        cfg.trace_out = trace.map(|p| p.to_string_lossy().into_owned());
+        cfg.quiet = true;
+        cfg
+    };
+    let d = mk(LossShardMode::On, None).load_manifest().unwrap().model.d_embed;
+    let off_peak = (4 * (2 * (k * bl) * d + 4 * bl * d)) as u64;
+    let on_peak = (16 * bl * d) as u64;
+
+    let off = Trainer::new(mk(LossShardMode::Off, None)).unwrap().run().unwrap();
+    let on = Trainer::new(mk(LossShardMode::On, Some(&trace_path))).unwrap().run().unwrap();
+
+    // the exact formulas, and the exact 3x reduction at K=4
+    assert_eq!(off.loss_peak_bytes, off_peak);
+    assert_eq!(on.loss_peak_bytes, on_peak);
+    assert_eq!(off.loss_peak_bytes, 3 * on.loss_peak_bytes, "(2K+4)/4 = 3 at K=4");
+
+    // sharding is a memory optimization, not a numerics change
+    assert_eq!(off.final_params, on.final_params);
+
+    // featgrad wire accounting: per rank, each of the `steps` exchanges
+    // moves (K-1) f32 segments of 2*Bl*d elements; off moves nothing
+    assert_eq!(on.featgrad_wire_bytes, steps as u64 * (k as u64 - 1) * 4 * (2 * bl * d) as u64);
+    assert_eq!(off.featgrad_wire_bytes, 0);
+
+    // the trace carries the same quantities: the resolved mode in the
+    // meta event, the gauge and the all-rank wire counter in the
+    // end-of-run metrics event
+    trace::verify_file(&trace_path).unwrap();
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    let typed = |t: &str| {
+        lines
+            .iter()
+            .find(|j| j.get("type").unwrap().as_str().unwrap() == t)
+            .unwrap_or_else(|| panic!("no '{t}' event in trace"))
+    };
+    let meta = typed("meta");
+    assert_eq!(meta.get("loss_shard").unwrap().as_str().unwrap(), "on");
+    let metrics = typed("metrics");
+    let gauges = metrics.get("gauges").unwrap();
+    assert_eq!(gauges.get("loss.peak_bytes").unwrap().as_f64().unwrap(), on_peak as f64);
+    let counters = metrics.get("counters").unwrap();
+    assert_eq!(
+        counters.get("comm.featgrad_wire_bytes").unwrap().as_usize().unwrap() as u64,
+        on.featgrad_wire_bytes * k as u64,
+        "the metrics counter sums all ranks"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn telemetry_is_bitwise_invisible_bf16() {
     telemetry_is_bitwise_invisible(Precision::Bf16);
