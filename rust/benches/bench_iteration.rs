@@ -39,6 +39,50 @@ use fastclip::kernels::Precision;
 use fastclip::runtime::BackendKind;
 use fastclip::util::{ratio_cell, safe_rate, safe_ratio, Args};
 
+/// Every gated row this bench must emit — the schema manifest that
+/// `fastclip lint` (rule `sch-baseline-drift`) cross-checks against
+/// `benches/baseline/BENCH_iteration.json` in both directions, and that
+/// the assertion at the bottom of `main` checks against the rows
+/// actually produced. Deleting a baseline row, renaming an emitter, or
+/// dropping a section now fails lint (and the bench itself) instead of
+/// silently un-gating the measurement. `iteration/<algo>/overlap` rows
+/// are report-only (no baseline entry) and deliberately absent here.
+const GATED_ROWS: &[&str] = &[
+    "iteration/openclip",
+    "iteration/sogclr",
+    "iteration/isogclr",
+    "iteration/fastclip-v0",
+    "iteration/fastclip-v1",
+    "iteration/fastclip-v2",
+    "iteration/fastclip-v3",
+    "iteration/openclip/bf16",
+    "iteration/sogclr/bf16",
+    "iteration/isogclr/bf16",
+    "iteration/fastclip-v0/bf16",
+    "iteration/fastclip-v1/bf16",
+    "iteration/fastclip-v2/bf16",
+    "iteration/fastclip-v3/bf16",
+    "wire/naive/f32",
+    "wire/naive/bf16",
+    "wire/naive/int8",
+    "wire/naive/topk",
+    "wire/ring/f32",
+    "wire/ring/bf16",
+    "wire/ring/int8",
+    "wire/ring/topk",
+    "wire/sharded/f32",
+    "wire/sharded/bf16",
+    "wire/sharded/int8",
+    "wire/sharded/topk",
+    "loss_mem/off",
+    "loss_mem/on",
+    "shard/gcl",
+    "shard/gcl_v0",
+    "shard/rgcl_i",
+    "shard/rgcl_g",
+    "shard/mbcl",
+];
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     let quick = args.flag("quick");
@@ -275,6 +319,16 @@ fn main() -> anyhow::Result<()> {
             rate_per_sec: rate,
             median_s: 1.0 / rate,
         });
+    }
+
+    // the manifest must be fully covered by what actually ran — a
+    // section accidentally skipped (or an emitter renamed) fails here
+    // before the report is even written
+    for gated in GATED_ROWS {
+        assert!(
+            rows.iter().any(|r| r.name == *gated),
+            "gated row '{gated}' was not emitted by this run"
+        );
     }
 
     harness::finalize_report("iteration", quick, &rows, &args)

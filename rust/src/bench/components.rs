@@ -239,6 +239,7 @@ pub fn reduce_table(args: &Args) -> Result<()> {
                             .reduce_and_apply(&comm, &mut grad, &mut params, &ctx, &mut |p, g| {
                                 p.copy_from_slice(g)
                             })
+                            // lint:allow(err-unwrap): panic surfaces at the join below
                             .unwrap();
                         params
                     })

@@ -94,7 +94,9 @@ pub fn scaling(args: &Args) -> Result<()> {
         // improvement row (absolute difference of means, FastCLIP − OpenCLIP)
         let mut row = vec!["Improvement".to_string()];
         for ni in 0..nodes.len() {
+            // lint:allow(err-unwrap): re-parses the "m +- s" cell this loop formatted
             let oc: f32 = cells[0][ni][metric].split(' ').next().unwrap().parse().unwrap();
+            // lint:allow(err-unwrap): re-parses the "m +- s" cell this loop formatted
             let fc: f32 = cells[1][ni][metric].split(' ').next().unwrap().parse().unwrap();
             row.push(format!("{:+.2}", fc - oc));
         }

@@ -7,7 +7,7 @@
 //! OpenCLIP and FastCLIP match in computation, FastCLIP's communication is
 //! cheaper, and the gap widens with node count.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::comm::ProfileName;
 use crate::config::Algorithm;
@@ -54,7 +54,10 @@ pub fn timing(args: &Args) -> Result<()> {
     };
     let nodes: Vec<usize> = match args.get("node-counts") {
         None => vec![1, 2, 4, 8],
-        Some(s) => s.split(',').map(|t| t.parse().unwrap()).collect(),
+        Some(s) => s
+            .split(',')
+            .map(|t| t.parse().with_context(|| format!("--node-counts: bad count '{t}'")))
+            .collect::<Result<Vec<_>>>()?,
     };
     let log = progress_logger(args)?;
 

@@ -115,7 +115,11 @@ mod tests {
     /// tiles `[0, n)` exactly — no gap, no overlap, ascending.
     #[test]
     fn partition_covers_exactly() {
-        for n in [0usize, 1, 2, 3, 7, 64, 1003, 18560] {
+        // the 18560-element case (the tiny preset's gradient) is the real
+        // shape but makes Miri crawl; the small lengths cover the same
+        // boundary arithmetic under the interpreter
+        let big = if cfg!(miri) { 1856 } else { 18560 };
+        for n in [0usize, 1, 2, 3, 7, 64, 1003, big] {
             for target in [1usize, 2, 3, 5, 64, 1000, n.max(1), n + 7] {
                 let plan = BucketPlan::new(n, target);
                 assert_eq!(plan.total_len(), n);

@@ -217,6 +217,7 @@ impl OverlapPipeline {
                     }
                 }
             })
+            // lint:allow(err-unwrap): spawn failure is unrecoverable, no error channel
             .expect("spawn reduction worker");
         OverlapPipeline {
             plan,

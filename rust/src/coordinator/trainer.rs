@@ -193,7 +193,10 @@ impl Trainer {
         // here, once, so every worker opens the same snapshot even if a
         // new one lands mid-startup
         if cfg.resume.as_deref() == Some("latest") {
-            let root = cfg.ckpt_dir.as_deref().expect("validated: latest requires ckpt_dir");
+            let root = cfg
+                .ckpt_dir
+                .as_deref()
+                .ok_or_else(|| anyhow::anyhow!("--resume latest requires --ckpt-dir"))?;
             let dir = ckpt::latest(Path::new(root))?
                 .ok_or_else(|| anyhow::anyhow!("no checkpoints under {root} to resume from"))?;
             cfg.resume = Some(dir.to_string_lossy().into_owned());
@@ -347,7 +350,7 @@ impl Trainer {
                             span_epoch,
                         )
                     })
-                    .expect("spawn worker"),
+                    .context("spawning worker thread")?,
             );
         }
 
@@ -403,7 +406,9 @@ impl Trainer {
             algorithm: self.cfg.algorithm.name(),
             history: out.history,
             evals: out.evals,
-            final_eval: out.final_eval.expect("rank 0 evaluates at end"),
+            final_eval: out
+                .final_eval
+                .ok_or_else(|| anyhow::anyhow!("lead worker produced no final evaluation"))?,
             timing: out.timing,
             reduce_algorithm: out.reduce_id,
             precision: self.cfg.precision.id(),
@@ -695,7 +700,9 @@ fn worker_thread(
                         log,
                     )
                     .with_context(|| format!("after losing rank(s) {lost:?}"))?;
-                rank = plan.new_rank(rank).expect("survivor has a new rank");
+                rank = plan.new_rank(rank).ok_or_else(|| {
+                    anyhow::anyhow!("rank {rank} survived the shrink but got no new rank")
+                })?;
                 train_world = Arc::clone(&plan.train);
                 reduce_world = Arc::clone(&plan.reduce);
                 inc_cfg.resume = Some(plan.resume.clone());
@@ -1074,7 +1081,10 @@ fn worker_loop(
         if wrote_snapshot {
             let ckpt_tok = rec.begin("ckpt", t);
             let t0 = Instant::now();
-            let root_s = cfg.ckpt_dir.as_deref().expect("validated: ckpt_every requires ckpt_dir");
+            let root_s = cfg
+                .ckpt_dir
+                .as_deref()
+                .ok_or_else(|| anyhow::anyhow!("--ckpt-every requires --ckpt-dir"))?;
             let root = Path::new(root_s);
             let stage = ckpt::stage_path(root, t + 1);
             let staged = if rank == 0 { ckpt::prepare_stage(&stage) } else { Ok(()) };

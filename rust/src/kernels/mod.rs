@@ -14,7 +14,8 @@
 //! Every kernel is **bitwise deterministic regardless of thread count**:
 //! parallelism only ever partitions *output* elements across threads, and
 //! the summation tree behind each output element is a fixed-order
-//! sequential reduction (ascending index). Blocking changes the *visit*
+//! sequential reduction (ascending index; the interconnect/kernel cost
+//! model this feeds is DESIGN.md §7). Blocking changes the *visit*
 //! order for cache locality, never the per-element *accumulation* order.
 //! Consequently every kernel agrees to exact bit equality with its naive
 //! single-threaded scalar reference (`*_ref`), which uses the same
@@ -90,6 +91,20 @@ where
             h.join().expect("kernel worker panicked");
         }
     });
+}
+
+/// Sequential ascending-index sum — the 1-D companion of
+/// [`gemm::dot`], and the only reduction shape library code may use on
+/// float slices (bit-identical to `iter().sum::<f32>()`, spelled as a
+/// named primitive so the `det-raw-reduction` lint can pin every numeric
+/// path to the fixed left-to-right tree).
+#[inline]
+pub fn sum(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &x in xs {
+        acc += x;
+    }
+    acc
 }
 
 #[cfg(test)]

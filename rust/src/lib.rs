@@ -2,7 +2,7 @@
 //! *"FastCLIP: A Suite of Optimization Techniques to Accelerate CLIP
 //! Training with Limited Resources"* (Wei et al., 2024).
 //!
-//! Architecture (three layers, see `DESIGN.md`):
+//! Architecture (three layers, DESIGN.md §2):
 //! * **L1/L2** (build time, Python): Pallas contrastive kernels + JAX CLIP
 //!   model, AOT-lowered to HLO-text artifacts by `python/compile/aot.py` —
 //!   OR, with the default native backend, the pure-Rust [`kernels`] and
@@ -34,6 +34,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod kernels;
+pub mod lint;
 pub mod optim;
 pub mod output;
 pub mod runtime;

@@ -1,0 +1,364 @@
+//! CLI/config drift: the four places a training knob lives — the
+//! `main.rs` parser, the `fastclip help` text, `TrainConfig::KNOWN` (and
+//! its `from_kv` / `to_file_string` round-trip) and the README — must
+//! agree. Flags that exist in one surface but not another are exactly
+//! how "works on my invocation" drift starts.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::source::{find_all, is_ident, SourceFile};
+use super::{Finding, Severity};
+
+/// `Args` accessor calls whose first argument is a flag name literal.
+const ACCESSORS: &[&str] = &[
+    "args.get(\"",
+    "args.str_or(\"",
+    "args.usize_or(\"",
+    "args.u32_or(\"",
+    "args.u64_or(\"",
+    "args.f32_or(\"",
+    "args.flag(\"",
+    "args.required(\"",
+];
+
+/// CLI flag → `TrainConfig` key when the spelling differs from the
+/// mechanical dash→underscore mapping.
+const ALIAS: &[(&str, &str)] = &[
+    ("algo", "algorithm"),
+    ("bundle", "artifact_dir"),
+    ("workers", "n_workers"),
+    ("batch", "local_batch"),
+    ("lr", "lr.peak"),
+    ("warmup", "lr.warmup_iters"),
+    ("gamma-const", "gamma.gamma"),
+    ("gamma-min", "gamma.gamma_min"),
+    ("decay-epochs", "gamma.decay_epochs"),
+    ("optimizer", "optimizer.kind"),
+    ("n-train", "data.n_train"),
+    ("n-eval", "data.n_eval"),
+    ("n-classes", "data.n_classes"),
+    ("bucket-mb", "bucket_mb"),
+];
+
+/// Flags that are CLI machinery, not training configuration: they have
+/// no `TrainConfig` key on purpose.
+const CLI_ONLY: &[&str] =
+    &["config", "save", "params", "dir", "root", "deny-warnings", "list-rules"];
+
+/// Config keys reachable only through a config file (defaults or derived
+/// on the CLI side), never as a dedicated flag.
+const CONFIG_ONLY: &[&str] = &[
+    "tau_min",
+    "tau_lr_decay_below",
+    "bucket_bytes",
+    "lr.min",
+    "lr.total_iters",
+    "optimizer.beta1",
+    "optimizer.beta2",
+    "optimizer.eps",
+    "optimizer.weight_decay",
+    "optimizer.momentum",
+    "gamma.kind",
+    "data.noise",
+    "data.zipf_s",
+    "data.seed",
+];
+
+/// Keys `from_kv` accepts that `to_file_string` intentionally never
+/// writes (read-only aliases).
+const TO_FILE_EXEMPT: &[&str] = &["bucket_mb"];
+
+fn flag_char(c: char) -> bool {
+    c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'
+}
+
+/// Extract `(name, first line)` pairs of flag-name literals passed to the
+/// accessor calls in `prefixes`, from the comment-stripped view.
+fn accessor_flags(sf: &SourceFile, prefixes: &[&str]) -> Vec<(String, usize)> {
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for idx in 0..sf.nocomment.len() {
+        let line = &sf.nocomment[idx];
+        for pre in prefixes {
+            for at in find_all(line, pre) {
+                let name: String =
+                    line[at + pre.len()..].chars().take_while(|c| flag_char(*c)).collect();
+                if !name.is_empty()
+                    && line[at + pre.len()..].chars().nth(name.chars().count()) == Some('"')
+                    && !out.iter().any(|(n, _)| *n == name)
+                {
+                    out.push((name, idx + 1));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Every `--flag` mention in the file's strings (the help text), with the
+/// line it first appears on.
+fn dash_flags(lines: &[String]) -> Vec<(String, usize)> {
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        for at in find_all(line, "--") {
+            let rest = &line[at + 2..];
+            if !rest.chars().next().is_some_and(|c| c.is_ascii_lowercase()) {
+                continue;
+            }
+            let name: String = rest.chars().take_while(|c| flag_char(*c)).collect();
+            let name = name.trim_end_matches('-').to_string();
+            if !name.is_empty() && !out.iter().any(|(n, _)| *n == name) {
+                out.push((name, idx + 1));
+            }
+        }
+    }
+    out
+}
+
+fn config_key(flag: &str) -> String {
+    ALIAS
+        .iter()
+        .find(|(f, _)| *f == flag)
+        .map(|(_, k)| k.to_string())
+        .unwrap_or_else(|| flag.replace('-', "_"))
+}
+
+fn key_char(c: char) -> bool {
+    is_ident(c) || c == '.'
+}
+
+/// Walk a function body by brace depth starting at `start` (the line
+/// containing the `fn` keyword); calls `visit` for each in-body line.
+fn for_fn_body(sf: &SourceFile, start: usize, mut visit: impl FnMut(usize)) {
+    let mut depth = 0i64;
+    let mut entered = false;
+    for idx in start..sf.code.len() {
+        visit(idx);
+        depth += sf.code[idx].matches('{').count() as i64;
+        depth -= sf.code[idx].matches('}').count() as i64;
+        if depth > 0 {
+            entered = true;
+        }
+        if entered && depth <= 0 {
+            break;
+        }
+    }
+}
+
+fn find_line(sf: &SourceFile, needle: &str) -> Option<usize> {
+    (0..sf.nocomment.len()).find(|&i| sf.nocomment[i].contains(needle))
+}
+
+/// Run the CLI/config drift checks. Either side (main.rs, config/mod.rs,
+/// README.md) being absent skips the checks that need it.
+pub fn check(root: &Path, sources: &[SourceFile], findings: &mut Vec<Finding>) -> Result<()> {
+    let main = sources.iter().find(|s| s.rel == "rust/src/main.rs");
+    let config = sources.iter().find(|s| s.rel == "rust/src/config/mod.rs");
+    let readme_path = root.join("README.md");
+    let readme = if readme_path.is_file() {
+        Some(std::fs::read_to_string(&readme_path)?)
+    } else {
+        None
+    };
+
+    let mut err = |rule: &'static str, file: &str, line: usize, message: String| {
+        findings.push(Finding {
+            rule,
+            severity: Severity::Error,
+            file: file.to_string(),
+            line,
+            message,
+        });
+    };
+
+    let parsed = main.map(|m| accessor_flags(m, ACCESSORS)).unwrap_or_default();
+
+    // ---- cli-flag-drift -------------------------------------------------
+    if let Some(m) = main {
+        let help = dash_flags(&m.nocomment);
+        let readme_flags = readme
+            .as_deref()
+            .map(|t| {
+                let lines: Vec<String> = t.lines().map(str::to_string).collect();
+                dash_flags(&lines)
+            })
+            .unwrap_or_default();
+        // flags parsed outside main.rs (bench binaries, `fastclip lint`
+        // itself) are legitimate help-text entries too
+        let mut other_flags: Vec<(String, usize)> = Vec::new();
+        for sf in sources {
+            if sf.rel != m.rel {
+                other_flags.extend(accessor_flags(sf, ACCESSORS));
+            }
+        }
+        for (f, line) in &parsed {
+            if !help.iter().any(|(h, _)| h == f) {
+                err(
+                    "cli-flag-drift",
+                    &m.rel,
+                    *line,
+                    format!("--{f} is parsed but missing from the `fastclip help` text"),
+                );
+            }
+            if readme.is_some() && !readme_flags.iter().any(|(h, _)| h == f) {
+                err(
+                    "cli-flag-drift",
+                    &m.rel,
+                    *line,
+                    format!("--{f} is parsed but undocumented in README.md"),
+                );
+            }
+        }
+        for (f, line) in &help {
+            if f != "help"
+                && !parsed.iter().any(|(p, _)| p == f)
+                && !other_flags.iter().any(|(p, _)| p == f)
+            {
+                err(
+                    "cli-flag-drift",
+                    &m.rel,
+                    *line,
+                    format!("--{f} appears in the help text but is parsed nowhere"),
+                );
+            }
+        }
+    }
+
+    // ---- cli-config-drift -----------------------------------------------
+    let Some(cfg) = config else {
+        return Ok(());
+    };
+
+    // KNOWN keys, with their lines
+    let mut known: Vec<(String, usize)> = Vec::new();
+    if let Some(start) = find_line(cfg, "const KNOWN") {
+        for idx in start..cfg.nocomment.len() {
+            for lit in cfg.string_literals(idx) {
+                if !lit.is_empty() && lit.chars().all(key_char) {
+                    known.push((lit, idx + 1));
+                }
+            }
+            if cfg.code[idx].contains("];") {
+                break;
+            }
+        }
+    }
+
+    // from_kv reads
+    let mut fromkv: Vec<(String, usize)> = Vec::new();
+    if let Some(start) = find_line(cfg, "fn from_kv") {
+        for_fn_body(cfg, start, |idx| {
+            for pre in ["kv.parse_or(\"", "kv.get(\"", "kv.str_or(\""] {
+                for at in find_all(&cfg.nocomment[idx], pre) {
+                    let key: String = cfg.nocomment[idx][at + pre.len()..]
+                        .chars()
+                        .take_while(|c| key_char(*c))
+                        .collect();
+                    if !key.is_empty() && !fromkv.iter().any(|(k, _)| *k == key) {
+                        fromkv.push((key, idx + 1));
+                    }
+                }
+            }
+        });
+    }
+
+    // to_file_string writes, section-prefix aware
+    let mut tofile: Vec<(String, usize)> = Vec::new();
+    if let Some(start) = find_line(cfg, "fn to_file_string") {
+        let mut prefix = String::new();
+        for_fn_body(cfg, start, |idx| {
+            if !cfg.nocomment[idx].contains("writeln!") {
+                return;
+            }
+            let Some(lit) = cfg.string_literals(idx).into_iter().next() else {
+                return;
+            };
+            if let Some(rest) = lit.strip_prefix("\\n[") {
+                if let Some(sec) = rest.split(']').next() {
+                    prefix = format!("{sec}.");
+                }
+            } else if let Some((key, _)) = lit.split_once(" = ") {
+                if !key.is_empty() && key.chars().all(key_char) {
+                    let full = format!("{prefix}{key}");
+                    if !tofile.iter().any(|(k, _)| *k == full) {
+                        tofile.push((full, idx + 1));
+                    }
+                }
+            }
+        });
+    }
+
+    let cli_image: Vec<String> = parsed
+        .iter()
+        .filter(|(f, _)| !CLI_ONLY.contains(&f.as_str()))
+        .map(|(f, _)| config_key(f))
+        .collect();
+
+    if let Some(m) = main {
+        for (f, line) in &parsed {
+            if CLI_ONLY.contains(&f.as_str()) {
+                continue;
+            }
+            let key = config_key(f);
+            if !known.iter().any(|(k, _)| *k == key) {
+                err(
+                    "cli-config-drift",
+                    &m.rel,
+                    *line,
+                    format!("--{f} maps to config key '{key}' which is not in TrainConfig::KNOWN"),
+                );
+            }
+        }
+    }
+    for (k, line) in &known {
+        if !fromkv.iter().any(|(f, _)| f == k) {
+            err(
+                "cli-config-drift",
+                &cfg.rel,
+                *line,
+                format!("KNOWN key '{k}' is never read by from_kv"),
+            );
+        }
+        if !tofile.iter().any(|(f, _)| f == k) && !TO_FILE_EXEMPT.contains(&k.as_str()) {
+            err(
+                "cli-config-drift",
+                &cfg.rel,
+                *line,
+                format!("KNOWN key '{k}' is never written by to_file_string (round-trip hole)"),
+            );
+        }
+        if main.is_some()
+            && !cli_image.contains(k)
+            && !CONFIG_ONLY.contains(&k.as_str())
+        {
+            err(
+                "cli-config-drift",
+                &cfg.rel,
+                *line,
+                format!("KNOWN key '{k}' is reachable from no CLI flag (and not CONFIG_ONLY)"),
+            );
+        }
+    }
+    for (k, line) in &fromkv {
+        if !known.iter().any(|(n, _)| n == k) {
+            err(
+                "cli-config-drift",
+                &cfg.rel,
+                *line,
+                format!("from_kv reads '{k}' which is not in TrainConfig::KNOWN"),
+            );
+        }
+    }
+    for (k, line) in &tofile {
+        if !known.iter().any(|(n, _)| n == k) {
+            err(
+                "cli-config-drift",
+                &cfg.rel,
+                *line,
+                format!("to_file_string writes '{k}' which is not in TrainConfig::KNOWN"),
+            );
+        }
+    }
+    Ok(())
+}

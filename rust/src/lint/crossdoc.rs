@@ -1,0 +1,111 @@
+//! Cross-doc integrity: every `DESIGN.md §N` reference in code, tests,
+//! benches and the READMEs must resolve to a real `## §N` section of
+//! `DESIGN.md`, and every section must be referenced from somewhere
+//! outside `DESIGN.md` itself (orphans warn — a section nothing points
+//! at is either dead or its references rotted away).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::source::SourceFile;
+use super::{Finding, Severity};
+
+const REF_NEEDLE: &str = "DESIGN.md \u{a7}"; // "DESIGN.md §"
+
+/// Parse `## §N` headings out of DESIGN.md text: section number → 1-based
+/// heading line.
+fn design_sections(text: &str) -> BTreeMap<u32, usize> {
+    let mut out = BTreeMap::new();
+    for (idx, line) in text.lines().enumerate() {
+        let Some(rest) = line.strip_prefix("## \u{a7}") else {
+            continue;
+        };
+        let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        if let Ok(n) = digits.parse::<u32>() {
+            out.entry(n).or_insert(idx + 1);
+        }
+    }
+    out
+}
+
+/// Extract every `DESIGN.md §N` reference from one line.
+fn refs_in_line(line: &str) -> Vec<u32> {
+    let mut out = Vec::new();
+    for at in super::source::find_all(line, REF_NEEDLE) {
+        let digits: String = line[at + REF_NEEDLE.len()..]
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        if let Ok(n) = digits.parse::<u32>() {
+            out.push(n);
+        }
+    }
+    out
+}
+
+/// Run the cross-doc checks over the scanned sources plus the markdown
+/// docs. Skipped entirely when the tree has no `DESIGN.md`.
+pub fn check(root: &Path, sources: &[SourceFile], findings: &mut Vec<Finding>) -> Result<()> {
+    let design_path = root.join("DESIGN.md");
+    if !design_path.is_file() {
+        return Ok(());
+    }
+    let design = std::fs::read_to_string(&design_path)
+        .with_context(|| format!("reading {}", design_path.display()))?;
+    let sections = design_sections(&design);
+    let mut referenced: Vec<u32> = Vec::new();
+
+    let mut check_line = |rel: &str, idx: usize, line: &str, findings: &mut Vec<Finding>| {
+        for n in refs_in_line(line) {
+            if sections.contains_key(&n) {
+                if rel != "DESIGN.md" {
+                    referenced.push(n);
+                }
+            } else {
+                findings.push(Finding {
+                    rule: "doc-dangling-ref",
+                    severity: Severity::Error,
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    message: format!(
+                        "DESIGN.md \u{a7}{n} does not resolve to any `## \u{a7}N` section"
+                    ),
+                });
+            }
+        }
+    };
+
+    for sf in sources {
+        for (idx, line) in sf.raw.iter().enumerate() {
+            check_line(&sf.rel, idx, line, findings);
+        }
+    }
+    for md in ["README.md", "rust/benches/baseline/README.md", "DESIGN.md"] {
+        let p = root.join(md);
+        if !p.is_file() {
+            continue;
+        }
+        let text = std::fs::read_to_string(&p).with_context(|| format!("reading {}", p.display()))?;
+        for (idx, line) in text.lines().enumerate() {
+            check_line(md, idx, line, findings);
+        }
+    }
+
+    for (n, heading_line) in &sections {
+        if !referenced.contains(n) {
+            findings.push(Finding {
+                rule: "doc-orphan-section",
+                severity: Severity::Warning,
+                file: "DESIGN.md".to_string(),
+                line: *heading_line,
+                message: format!(
+                    "\u{a7}{n} is referenced from no code, test or README; \
+                     link it or fold it into a live section"
+                ),
+            });
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,445 @@
+//! `fastclip-lint` — the repo-invariant static-analysis pass (DESIGN.md §17).
+//!
+//! Every optimization in this crate is pinned by a bitwise determinism
+//! contract (`on ≡ off` across reductions, overlap, codecs, loss
+//! sharding). The invariants that make the contract *hold* — no
+//! unordered-map iteration in numeric paths, fixed reduction order,
+//! consistent lock order in `comm/`, CLI ↔ config ↔ README agreement,
+//! bench/telemetry schemas matching their emitters, `DESIGN.md §N`
+//! references resolving — used to live in prose. This module turns them
+//! into machine-checked rules with file:line diagnostics and rule IDs,
+//! run as `fastclip lint` (CI: `--deny-warnings`) and as an in-tree
+//! self-check test so tier-1 enforces them even where CI config drifts.
+//!
+//! Findings are suppressed site-by-site with a comment pragma on the
+//! offending line or the line above: `lint:allow` followed by the
+//! parenthesized rule id and a `: <reason>` tail. A pragma that
+//! suppresses nothing (or lacks a reason) is itself an error
+//! (`lint-pragma`), so the allowlist can never rot.
+
+pub mod cliconf;
+pub mod crossdoc;
+pub mod rules;
+pub mod schema;
+pub mod source;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use source::SourceFile;
+
+/// Finding severity. Only `doc-orphan-section` warns; everything else
+/// errors, which is what gives `--deny-warnings` (CI) teeth beyond the
+/// default exit policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Always fails the lint.
+    Error,
+    /// Fails only under `--deny-warnings`.
+    Warning,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Error => write!(f, "error"),
+            Severity::Warning => write!(f, "warning"),
+        }
+    }
+}
+
+/// One diagnostic: rule ID, severity, repo-relative file, 1-based line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule ID from [`RULES`].
+    pub rule: &'static str,
+    /// Error or warning.
+    pub severity: Severity,
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}[{}]: {}", self.file, self.line, self.severity, self.rule, self.message)
+    }
+}
+
+/// A rule's catalog entry (`fastclip lint --list-rules`).
+pub struct RuleInfo {
+    /// Kebab-case rule ID, as used in suppression pragmas.
+    pub id: &'static str,
+    /// Default severity.
+    pub severity: Severity,
+    /// One-line description.
+    pub summary: &'static str,
+}
+
+/// The rule catalog. IDs are stable; pragmas naming an unknown ID are
+/// malformed.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "det-unordered-map",
+        severity: Severity::Error,
+        summary: "HashMap/HashSet in library code (iteration order is nondeterministic)",
+    },
+    RuleInfo {
+        id: "det-wallclock",
+        severity: Severity::Error,
+        summary: "Instant::now/SystemTime outside the telemetry+timing allowlist",
+    },
+    RuleInfo {
+        id: "det-ambient-entropy",
+        severity: Severity::Error,
+        summary: "ambient entropy (thread_rng/from_entropy/env reads) in library code",
+    },
+    RuleInfo {
+        id: "det-raw-reduction",
+        severity: Severity::Error,
+        summary: "float reduction not routed through the fixed ascending-order helpers",
+    },
+    RuleInfo {
+        id: "con-relaxed-atomic",
+        severity: Severity::Error,
+        summary: "Ordering::Relaxed in comm/ (the PR-5 torn-snapshot class)",
+    },
+    RuleInfo {
+        id: "con-undocumented-unsafe",
+        severity: Severity::Error,
+        summary: "unsafe without a // SAFETY: comment within 3 lines above",
+    },
+    RuleInfo {
+        id: "con-lock-order",
+        severity: Severity::Error,
+        summary: "two locks acquired in opposite orders within one comm/ file",
+    },
+    RuleInfo {
+        id: "doc-dangling-ref",
+        severity: Severity::Error,
+        summary: "a DESIGN.md §N reference that resolves to no section",
+    },
+    RuleInfo {
+        id: "doc-orphan-section",
+        severity: Severity::Warning,
+        summary: "a DESIGN.md section referenced from nowhere",
+    },
+    RuleInfo {
+        id: "cli-flag-drift",
+        severity: Severity::Error,
+        summary: "CLI flag parsed/help/README sets disagree",
+    },
+    RuleInfo {
+        id: "cli-config-drift",
+        severity: Severity::Error,
+        summary: "CLI flags vs TrainConfig KNOWN keys vs to_file_string disagree",
+    },
+    RuleInfo {
+        id: "sch-baseline-drift",
+        severity: Severity::Error,
+        summary: "gated bench rows and the committed baseline disagree",
+    },
+    RuleInfo {
+        id: "sch-emitter-drift",
+        severity: Severity::Error,
+        summary: "gated bench rows and the bench emitters disagree",
+    },
+    RuleInfo {
+        id: "sch-metric-drift",
+        severity: Severity::Error,
+        summary: "metric names asserted in tests but never registered",
+    },
+    RuleInfo {
+        id: "err-unwrap",
+        severity: Severity::Error,
+        summary: "unwrap()/expect(\"…\") in non-test library code",
+    },
+    RuleInfo {
+        id: "lint-pragma",
+        severity: Severity::Error,
+        summary: "malformed or unused lint:allow pragma",
+    },
+];
+
+fn rule_known(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+/// A parsed, well-formed suppression pragma: `lint:allow` plus a
+/// parenthesized known rule id and a non-empty `: <reason>` tail.
+#[derive(Debug)]
+struct Pragma {
+    file: String,
+    /// 1-based line the pragma sits on; suppresses this line and the next.
+    line: usize,
+    rule: String,
+    used: bool,
+}
+
+/// Scan one file's comments for suppression pragmas. Malformed pragmas
+/// (unknown rule, missing reason) are reported immediately as
+/// `lint-pragma` findings; well-formed ones are returned for matching.
+fn collect_pragmas(sf: &SourceFile, findings: &mut Vec<Finding>) -> Vec<Pragma> {
+    const NEEDLE: &str = "lint:allow(";
+    let mut out = Vec::new();
+    for idx in 0..sf.raw.len() {
+        let raw = &sf.raw[idx];
+        // only honor comment-borne pragmas: if the needle survives in the
+        // nocomment view it sits inside a string literal and is inert
+        // (the lint engine's own sources spell the needle in strings)
+        if sf.nocomment[idx].contains(NEEDLE) {
+            continue;
+        }
+        for at in source::find_all(raw, NEEDLE) {
+            let rest = &raw[at + NEEDLE.len()..];
+            let Some(close) = rest.find(')') else {
+                findings.push(Finding {
+                    rule: "lint-pragma",
+                    severity: Severity::Error,
+                    file: sf.rel.clone(),
+                    line: idx + 1,
+                    message: "malformed pragma: missing ')'".into(),
+                });
+                continue;
+            };
+            let rule = rest[..close].trim().to_string();
+            if !rule_known(&rule) {
+                findings.push(Finding {
+                    rule: "lint-pragma",
+                    severity: Severity::Error,
+                    file: sf.rel.clone(),
+                    line: idx + 1,
+                    message: format!("pragma names unknown rule '{rule}'"),
+                });
+                continue;
+            }
+            let after = &rest[close + 1..];
+            let reason_ok = after.strip_prefix(':').is_some_and(|r| !r.trim().is_empty());
+            if !reason_ok {
+                findings.push(Finding {
+                    rule: "lint-pragma",
+                    severity: Severity::Error,
+                    file: sf.rel.clone(),
+                    line: idx + 1,
+                    message: format!("pragma for '{rule}' has no `: <reason>`"),
+                });
+                continue;
+            }
+            out.push(Pragma { file: sf.rel.clone(), line: idx + 1, rule, used: false });
+        }
+    }
+    out
+}
+
+/// Match findings against pragmas: a finding on the pragma's line or the
+/// line below, for the pragma's rule, is suppressed. Unused pragmas
+/// become `lint-pragma` findings, so a stale allowlist fails the lint.
+fn apply_pragmas(findings: Vec<Finding>, pragmas: &mut [Pragma]) -> (Vec<Finding>, usize) {
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for f in findings {
+        let hit = pragmas.iter_mut().find(|p| {
+            p.file == f.file
+                && p.rule == f.rule
+                && (p.line == f.line || p.line + 1 == f.line)
+        });
+        match hit {
+            Some(p) if f.rule != "lint-pragma" => {
+                p.used = true;
+                suppressed += 1;
+            }
+            _ => kept.push(f),
+        }
+    }
+    for p in pragmas {
+        if !p.used {
+            kept.push(Finding {
+                rule: "lint-pragma",
+                severity: Severity::Error,
+                file: p.file.clone(),
+                line: p.line,
+                message: format!("unused pragma: no '{}' finding on this or the next line", p.rule),
+            });
+        }
+    }
+    (kept, suppressed)
+}
+
+/// The outcome of a lint run.
+#[derive(Debug)]
+pub struct Report {
+    /// Surviving findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of source files scanned.
+    pub files_scanned: usize,
+    /// Findings silenced by pragmas.
+    pub suppressed: usize,
+}
+
+impl Report {
+    /// Error-severity finding count.
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    /// Warning-severity finding count.
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    /// Does this report fail the lint under the given policy?
+    pub fn failed(&self, deny_warnings: bool) -> bool {
+        self.errors() > 0 || (deny_warnings && self.warnings() > 0)
+    }
+}
+
+/// Lint options.
+#[derive(Debug, Default, Clone)]
+pub struct LintOptions {
+    /// Treat warnings as fatal (the CI policy).
+    pub deny_warnings: bool,
+}
+
+fn push_rs_files(dir: &Path, skip_fixtures: bool, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        let name = e.file_name().to_string_lossy().into_owned();
+        if p.is_dir() {
+            if skip_fixtures && name == "fixtures" {
+                continue;
+            }
+            push_rs_files(&p, skip_fixtures, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Enumerate the Rust sources the lint walks, sorted, as absolute paths:
+/// `rust/src/**`, `rust/tests/**` (minus `fixtures/`), `rust/benches/**`
+/// and `examples/*.rs`. Vendored code and build output are never visited.
+pub fn walk_sources(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    push_rs_files(&root.join("rust/src"), false, &mut out)?;
+    push_rs_files(&root.join("rust/tests"), true, &mut out)?;
+    push_rs_files(&root.join("rust/benches"), false, &mut out)?;
+    push_rs_files(&root.join("examples"), false, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+/// Run the file-scoped rules (determinism, concurrency, hygiene) plus the
+/// pragma engine on one already-scanned source file. Repo-scoped rules
+/// (docs/CLI/schema) need the whole tree and live in [`lint_repo`]. This
+/// entry point exists for the fixture tests.
+pub fn lint_file(sf: &SourceFile) -> Report {
+    let mut findings = Vec::new();
+    rules::check_file(sf, &mut findings);
+    let mut pragmas = collect_pragmas(sf, &mut findings);
+    let (mut findings, suppressed) = apply_pragmas(findings, &mut pragmas);
+    sort_findings(&mut findings);
+    Report { findings, files_scanned: 1, suppressed }
+}
+
+fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+}
+
+/// Lint the repo tree rooted at `root` (the directory holding `DESIGN.md`
+/// and `rust/`). Missing optional inputs (a mini fixture tree without a
+/// baseline, say) skip their checks rather than erroring, so the engine
+/// can run against reduced trees in tests.
+pub fn lint_repo(root: &Path, _opts: &LintOptions) -> Result<Report> {
+    let mut findings = Vec::new();
+    let paths = walk_sources(root)?;
+    let mut sources = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?;
+        sources.push(SourceFile::parse(&rel_path(root, p), &text));
+    }
+
+    for sf in &sources {
+        rules::check_file(sf, &mut findings);
+    }
+    crossdoc::check(root, &sources, &mut findings)?;
+    cliconf::check(root, &sources, &mut findings)?;
+    schema::check(root, &sources, &mut findings)?;
+
+    let mut pragmas = Vec::new();
+    for sf in &sources {
+        pragmas.extend(collect_pragmas(sf, &mut findings));
+    }
+    let (mut findings, suppressed) = apply_pragmas(findings, &mut pragmas);
+    sort_findings(&mut findings);
+    Ok(Report { findings, files_scanned: sources.len(), suppressed })
+}
+
+/// Find the repo root: walk up from `start` to the first directory that
+/// contains both `DESIGN.md` and `rust/src`.
+pub fn discover_root(start: &Path) -> Result<PathBuf> {
+    let mut cur = start.to_path_buf();
+    loop {
+        if cur.join("DESIGN.md").is_file() && cur.join("rust/src").is_dir() {
+            return Ok(cur);
+        }
+        if !cur.pop() {
+            bail!(
+                "no repo root found above {} (looking for DESIGN.md + rust/src); \
+                 pass --root <dir>",
+                start.display()
+            );
+        }
+    }
+}
+
+/// `fastclip lint [--root <dir>] [--deny-warnings] [--list-rules]`.
+/// Prints findings as `file:line: severity[rule]: message` and exits
+/// non-zero (via an `Err`) when the policy fails.
+pub fn lint_cmd(args: &crate::util::Args) -> Result<()> {
+    if args.flag("list-rules") {
+        for r in RULES {
+            println!("{:<24} {:<8} {}", r.id, r.severity.to_string(), r.summary);
+        }
+        return Ok(());
+    }
+    let opts = LintOptions { deny_warnings: args.flag("deny-warnings") };
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => discover_root(&std::env::current_dir()?)?,
+    };
+    let report = lint_repo(&root, &opts)?;
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!(
+        "lint: {} file(s), {} error(s), {} warning(s), {} suppressed",
+        report.files_scanned,
+        report.errors(),
+        report.warnings(),
+        report.suppressed
+    );
+    if report.failed(opts.deny_warnings) {
+        bail!("lint failed");
+    }
+    Ok(())
+}

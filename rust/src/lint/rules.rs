@@ -1,0 +1,262 @@
+//! File-scoped rules: determinism hazards, concurrency audit, error
+//! hygiene. Each rule matches needles against the string-blanked `code`
+//! view (see [`super::source`]) so rule needles spelled in string
+//! literals — including this module's own — can never self-flag.
+
+use super::source::{find_all, find_word, SourceFile};
+use super::{Finding, Severity};
+
+/// Paths (prefix match on the repo-relative path) where wall-clock reads
+/// are the point: telemetry spans, bench timing, comm cost accounting and
+/// the trainer/backends that feed them. Everything else in `rust/src`
+/// must not read the clock — determinism hazards hide behind "just
+/// timing" code that later leaks into control flow.
+const WALLCLOCK_ALLOW: &[&str] = &[
+    "rust/src/telemetry/",
+    "rust/src/bench/",
+    "rust/src/comm/",
+    "rust/src/coordinator/trainer.rs",
+    "rust/src/runtime/native.rs",
+    "rust/src/runtime/worker.rs",
+];
+
+/// Numeric subsystems where every float reduction must go through the
+/// fixed ascending-index helpers (`kernels::gemm::dot`, `kernels::sum`).
+const REDUCTION_SCOPE: &[&str] = &["rust/src/kernels/", "rust/src/comm/", "rust/src/runtime/"];
+
+fn in_scope(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+fn is_library(sf: &SourceFile, idx: usize) -> bool {
+    sf.rel.starts_with("rust/src/") && !sf.in_test[idx]
+}
+
+/// Markers that exempt an `unwrap()` from `err-unwrap` when they appear
+/// just before it (same line, or the previous non-blank code line for
+/// rustfmt-wrapped chains): poisoned-lock and joined-thread unwraps are
+/// the idiomatic propagation of a panic that already happened elsewhere,
+/// and condvar waits return the guard through `Result` by API shape.
+const UNWRAP_IDIOMS: &[&str] =
+    &[".lock()", ".join()", ".read()", ".write()", ".wait(", ".wait_timeout(", ".recv_timeout("];
+
+fn unwrap_idiom_before(sf: &SourceFile, idx: usize, col: usize) -> bool {
+    let mut window = String::new();
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        if !sf.code[j].trim().is_empty() {
+            window.push_str(&sf.code[j]);
+            break;
+        }
+    }
+    window.push_str(&sf.code[idx][..col]);
+    UNWRAP_IDIOMS.iter().any(|m| window.contains(m))
+}
+
+/// Run all file-scoped rules on one source file.
+pub fn check_file(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    let mut push = |rule: &'static str, line: usize, message: String| {
+        findings.push(Finding {
+            rule,
+            severity: Severity::Error,
+            file: sf.rel.clone(),
+            line,
+            message,
+        });
+    };
+
+    for idx in 0..sf.raw.len() {
+        let code = &sf.code[idx];
+
+        // ---- determinism hazards (library code only) --------------------
+        if is_library(sf, idx) {
+            for needle in ["HashMap", "HashSet"] {
+                if find_word(code, needle).is_some() {
+                    push(
+                        "det-unordered-map",
+                        idx + 1,
+                        format!("{needle}: nondeterministic iteration order; use a BTree map/set"),
+                    );
+                }
+            }
+            if !in_scope(&sf.rel, WALLCLOCK_ALLOW) {
+                for needle in ["Instant::now", "SystemTime"] {
+                    if code.contains(needle) {
+                        push(
+                            "det-wallclock",
+                            idx + 1,
+                            format!("{needle} outside the telemetry/timing allowlist"),
+                        );
+                    }
+                }
+            }
+            for needle in ["thread_rng", "from_entropy", "rand::random", "env::var", "var_os"] {
+                if code.contains(needle) {
+                    push(
+                        "det-ambient-entropy",
+                        idx + 1,
+                        format!("{needle}: ambient entropy/environment read in library code"),
+                    );
+                }
+            }
+            if in_scope(&sf.rel, REDUCTION_SCOPE) {
+                for needle in [".sum::<f32>", ".sum::<f64>", ".product::<f32>", ".product::<f64>"]
+                {
+                    if code.contains(needle) {
+                        push(
+                            "det-raw-reduction",
+                            idx + 1,
+                            format!("{needle}: route float reductions through kernels::sum"),
+                        );
+                    }
+                }
+            }
+            if sf.rel.starts_with("rust/src/kernels/")
+                && !sf.rel.ends_with("kernels/mod.rs")
+                && code.contains("spawn(")
+            {
+                push(
+                    "det-raw-reduction",
+                    idx + 1,
+                    "thread spawn in a kernel outside par_rows: reduction order must stay fixed"
+                        .into(),
+                );
+            }
+        }
+
+        // ---- concurrency audit ------------------------------------------
+        if sf.rel.starts_with("rust/src/comm/") && code.contains("Ordering::Relaxed") {
+            push(
+                "con-relaxed-atomic",
+                idx + 1,
+                "Ordering::Relaxed in comm/: risks torn snapshots; use SeqCst or a Mutex".into(),
+            );
+        }
+        if find_word(code, "unsafe").is_some() {
+            let lo = idx.saturating_sub(3);
+            let documented = sf.raw[lo..=idx].iter().any(|l| l.contains("SAFETY:"));
+            if !documented {
+                push(
+                    "con-undocumented-unsafe",
+                    idx + 1,
+                    "unsafe without a // SAFETY: comment within the 3 lines above".into(),
+                );
+            }
+        }
+
+        // ---- error hygiene ----------------------------------------------
+        if is_library(sf, idx) {
+            for col in find_all(code, ".unwrap()") {
+                if !unwrap_idiom_before(sf, idx, col) {
+                    push(
+                        "err-unwrap",
+                        idx + 1,
+                        "unwrap() in library code: propagate with ? / context".into(),
+                    );
+                }
+            }
+            for col in find_all(code, ".expect(\"") {
+                if !unwrap_idiom_before(sf, idx, col) {
+                    push(
+                        "err-unwrap",
+                        idx + 1,
+                        "expect(\"…\") in library code: propagate with ? / context".into(),
+                    );
+                }
+            }
+        }
+    }
+
+    check_lock_order(sf, findings);
+}
+
+/// `con-lock-order`: within one `comm/` file, two named locks acquired in
+/// opposite orders in different functions is the classic AB-BA deadlock
+/// shape. Lock names are the last field segment of the receiver of a
+/// `.lock()` call (`self.slots[i].lock()` → `slots`); acquisition order
+/// is tracked per function, first-acquisition only.
+fn check_lock_order(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    if !sf.rel.starts_with("rust/src/comm/") {
+        return;
+    }
+    // (first, second) -> (fn name, line of second acquisition)
+    let mut edges: Vec<((String, String), (String, usize))> = Vec::new();
+    let mut cur_fn: Option<String> = None;
+    let mut held: Vec<String> = Vec::new();
+    for idx in 0..sf.code.len() {
+        if sf.in_test[idx] {
+            continue;
+        }
+        let code = &sf.code[idx];
+        if let Some(at) = find_word(code, "fn") {
+            let name: String = code[at + 2..]
+                .trim_start()
+                .chars()
+                .take_while(|c| super::source::is_ident(*c))
+                .collect();
+            if !name.is_empty() {
+                cur_fn = Some(name);
+                held.clear();
+            }
+        }
+        if cur_fn.is_none() {
+            continue;
+        }
+        for at in find_all(code, ".lock()") {
+            let recv: String = code[..at]
+                .chars()
+                .rev()
+                .take_while(|c| super::source::is_ident(*c) || *c == '.' || *c == '[' || *c == ']')
+                .collect::<String>()
+                .chars()
+                .rev()
+                .collect();
+            let mut base = String::new();
+            let mut bracket = 0u32;
+            for c in recv.chars() {
+                match c {
+                    '[' => bracket += 1,
+                    ']' => bracket = bracket.saturating_sub(1),
+                    '.' if bracket == 0 => base.clear(),
+                    c if bracket == 0 => base.push(c),
+                    _ => {}
+                }
+            }
+            if base.is_empty() {
+                continue;
+            }
+            for prev in &held {
+                if prev != &base
+                    && !edges.iter().any(|(k, _)| k.0 == *prev && k.1 == base)
+                {
+                    edges.push((
+                        (prev.clone(), base.clone()),
+                        (cur_fn.clone().unwrap_or_default(), idx + 1),
+                    ));
+                }
+            }
+            if !held.contains(&base) {
+                held.push(base);
+            }
+        }
+    }
+    for ((a, b), (fa, la)) in &edges {
+        if a >= b {
+            continue;
+        }
+        let Some((_, (fb, lb))) = edges.iter().find(|(k, _)| k.0 == *b && k.1 == *a) else {
+            continue;
+        };
+        findings.push(Finding {
+            rule: "con-lock-order",
+            severity: Severity::Error,
+            file: sf.rel.clone(),
+            line: *la,
+            message: format!(
+                "inconsistent lock order: {fa} acquires '{a}' then '{b}' (line {la}), \
+                 but {fb} acquires '{b}' then '{a}' (line {lb})"
+            ),
+        });
+    }
+}

@@ -1,0 +1,265 @@
+//! Bench/telemetry schema drift. Two contracts:
+//!
+//! * The gated bench rows — `GATED_ROWS` in `rust/benches/bench_iteration.rs`
+//!   — must equal the committed baseline rows in
+//!   `rust/benches/baseline/BENCH_iteration.json` *and* be producible by
+//!   the bench's `name:` emitters (format templates match with `{…}` as
+//!   wildcards). Deleting a baseline row, a manifest entry or an emitter
+//!   therefore fails the lint with a file:line diagnostic, in addition to
+//!   the runtime assertion inside the bench itself.
+//! * Every dotted metric name asserted by `rust/tests/telemetry.rs` must
+//!   be registered somewhere in `rust/src` (`counter_add`/`gauge_set`/
+//!   `observe`/`hist_declare`, literal or `format!` template).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::source::{find_all, template_matches, SourceFile};
+use super::{Finding, Severity};
+
+/// Emitted row families that are deliberately report-only (no baseline
+/// gate): overlap rows vary with machine load, so the baseline would
+/// either flake or gate nothing.
+const REPORT_ONLY: &[&str] = &["iteration/*/overlap"];
+
+fn row_char(c: char) -> bool {
+    c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-' || c == '/'
+}
+
+/// Extract the `GATED_ROWS` manifest entries (name, line).
+fn gated_rows(sf: &SourceFile) -> Option<Vec<(String, usize)>> {
+    let start = (0..sf.nocomment.len()).find(|&i| sf.nocomment[i].contains("GATED_ROWS"))?;
+    let mut out = Vec::new();
+    for idx in start..sf.nocomment.len() {
+        for lit in sf.string_literals(idx) {
+            if !lit.is_empty() && lit.chars().all(row_char) {
+                out.push((lit, idx + 1));
+            }
+        }
+        if sf.code[idx].contains("];") {
+            break;
+        }
+    }
+    Some(out)
+}
+
+/// Extract `name: "<row>"` / `name: format!("<template>")` emitters.
+fn emitters(sf: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for idx in 0..sf.nocomment.len() {
+        let line = &sf.nocomment[idx];
+        for at in find_all(line, "name:") {
+            let rest = line[at + 5..].trim_start();
+            let rest = rest.strip_prefix("format!(").unwrap_or(rest).trim_start();
+            let Some(body) = rest.strip_prefix('"') else {
+                continue;
+            };
+            let mut lit = String::new();
+            let mut chars = body.chars();
+            let mut closed = false;
+            while let Some(c) = chars.next() {
+                if c == '\\' {
+                    lit.push(c);
+                    if let Some(n) = chars.next() {
+                        lit.push(n);
+                    }
+                    continue;
+                }
+                if c == '"' {
+                    closed = true;
+                    break;
+                }
+                lit.push(c);
+            }
+            if closed && !lit.is_empty() {
+                out.push((lit, idx + 1));
+            }
+        }
+    }
+    out
+}
+
+/// Replace `{…}` holes with `*` for family comparison / display.
+fn canon(template: &str) -> String {
+    let mut out = String::new();
+    let mut chars = template.chars();
+    while let Some(c) = chars.next() {
+        if c == '{' {
+            for nc in chars.by_ref() {
+                if nc == '}' {
+                    break;
+                }
+            }
+            out.push('*');
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn family(row: &str) -> &str {
+    row.split('/').next().unwrap_or(row)
+}
+
+/// Is `lit` a dotted metric name (`comm.grad_wire_bytes`)? Lowercase
+/// segments joined by single dots, at least two segments, and not a file
+/// name (extension suffixes are excluded).
+fn is_metric_name(lit: &str) -> bool {
+    const EXT: &[&str] = &[".jsonl", ".json", ".rs", ".toml", ".md", ".bin", ".csv", ".txt"];
+    if EXT.iter().any(|e| lit.ends_with(e)) {
+        return false;
+    }
+    if !lit.contains('.') || !lit.chars().next().is_some_and(|c| c.is_ascii_lowercase()) {
+        return false;
+    }
+    lit.split('.').all(|seg| {
+        !seg.is_empty()
+            && seg.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+    })
+}
+
+/// Registered metric names/templates across `rust/src`.
+fn registered_metrics(sources: &[SourceFile]) -> Vec<String> {
+    const CALLS: &[&str] = &[".counter_add(", ".gauge_set(", ".observe(", ".hist_declare("];
+    let mut out = Vec::new();
+    for sf in sources {
+        if !sf.rel.starts_with("rust/src/") {
+            continue;
+        }
+        for idx in 0..sf.nocomment.len() {
+            let line = &sf.nocomment[idx];
+            for call in CALLS {
+                for at in find_all(line, call) {
+                    let rest = line[at + call.len()..].trim_start();
+                    let rest = rest.strip_prefix("&format!(").unwrap_or(rest).trim_start();
+                    let Some(body) = rest.strip_prefix('"') else {
+                        continue;
+                    };
+                    if let Some(end) = body.find('"') {
+                        let lit = &body[..end];
+                        if !lit.is_empty() {
+                            out.push(lit.to_string());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run the schema drift checks. Trees without the bench/baseline/test
+/// files skip the corresponding halves.
+pub fn check(root: &Path, sources: &[SourceFile], findings: &mut Vec<Finding>) -> Result<()> {
+    let mut err = |rule: &'static str, file: String, line: usize, message: String| {
+        findings.push(Finding { rule, severity: Severity::Error, file, line, message });
+    };
+
+    // ---- gated rows vs baseline vs emitters -----------------------------
+    let bench = sources.iter().find(|s| s.rel == "rust/benches/bench_iteration.rs");
+    let baseline_rel = "rust/benches/baseline/BENCH_iteration.json";
+    let baseline_path = root.join(baseline_rel);
+    if let Some(bench) = bench {
+        let rows = gated_rows(bench);
+        if rows.is_none() {
+            err(
+                "sch-baseline-drift",
+                bench.rel.clone(),
+                1,
+                "bench_iteration.rs has no GATED_ROWS manifest".to_string(),
+            );
+        }
+        let rows = rows.unwrap_or_default();
+        let pats = emitters(bench);
+
+        if baseline_path.is_file() {
+            let text = std::fs::read_to_string(&baseline_path)
+                .with_context(|| format!("reading {}", baseline_path.display()))?;
+            let json = crate::util::Json::parse(&text)
+                .with_context(|| format!("parsing {}", baseline_path.display()))?;
+            let mut base_rows: Vec<String> = Vec::new();
+            for r in json.get("results").and_then(|r| r.as_arr().map(<[_]>::to_vec))? {
+                base_rows.push(r.get("name")?.as_str()?.to_string());
+            }
+            for (g, line) in &rows {
+                if !base_rows.contains(g) {
+                    err(
+                        "sch-baseline-drift",
+                        bench.rel.clone(),
+                        *line,
+                        format!("gated row '{g}' has no row in {baseline_rel}"),
+                    );
+                }
+            }
+            for b in &base_rows {
+                if !rows.iter().any(|(g, _)| g == b) {
+                    let line = text
+                        .lines()
+                        .position(|l| l.contains(&format!("\"{b}\"")))
+                        .map(|i| i + 1)
+                        .unwrap_or(1);
+                    err(
+                        "sch-baseline-drift",
+                        baseline_rel.to_string(),
+                        line,
+                        format!("baseline row '{b}' is not in the bench GATED_ROWS manifest"),
+                    );
+                }
+            }
+        }
+
+        let families: Vec<&str> = rows.iter().map(|(g, _)| family(g)).collect();
+        for (g, line) in &rows {
+            if !pats.iter().any(|(p, _)| template_matches(p, g)) {
+                err(
+                    "sch-emitter-drift",
+                    bench.rel.clone(),
+                    *line,
+                    format!("gated row '{g}' matches no `name:` emitter in the bench"),
+                );
+            }
+        }
+        for (p, line) in &pats {
+            let c = canon(p);
+            if families.contains(&family(&c))
+                && !REPORT_ONLY.contains(&c.as_str())
+                && !rows.iter().any(|(g, _)| template_matches(p, g))
+            {
+                err(
+                    "sch-emitter-drift",
+                    bench.rel.clone(),
+                    *line,
+                    format!("emitter '{c}' produces rows outside the GATED_ROWS manifest"),
+                );
+            }
+        }
+    }
+
+    // ---- asserted metric names vs registrations -------------------------
+    if let Some(tel) = sources.iter().find(|s| s.rel == "rust/tests/telemetry.rs") {
+        let registered = registered_metrics(sources);
+        let mut seen: Vec<String> = Vec::new();
+        for idx in 0..tel.nocomment.len() {
+            for lit in tel.string_literals(idx) {
+                if !is_metric_name(&lit) || seen.contains(&lit) {
+                    continue;
+                }
+                seen.push(lit.clone());
+                let covered = registered
+                    .iter()
+                    .any(|r| if r.contains('{') { template_matches(r, &lit) } else { r == &lit });
+                if !covered {
+                    err(
+                        "sch-metric-drift",
+                        tel.rel.clone(),
+                        idx + 1,
+                        format!("metric '{lit}' is asserted but registered nowhere in rust/src"),
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,451 @@
+//! Lexical views over a Rust source file for the lint pass.
+//!
+//! The rules never parse Rust properly — they match needles against one of
+//! three per-line views produced by a small hand-rolled scanner (the crate
+//! vendors no regex engine):
+//!
+//! * `raw` — the line as written.
+//! * `nocomment` — comments blanked to spaces, string literals kept.
+//!   Used to extract string literals (flag names, metric names, help text).
+//! * `code` — comments *and* string/char contents blanked, quotes kept.
+//!   Used for code needles (`HashMap`, `.unwrap()`, …) so that a rule's
+//!   own needle spelled inside a string literal can never match itself.
+//!
+//! The scanner understands line comments, nested block comments, string
+//! escapes, raw strings (`r"…"`, `r#"…"#`), byte strings and the
+//! char-literal vs lifetime ambiguity (`'a'` vs `'a`). A `#[cfg(test)] mod`
+//! mask (`in_test`) lets rules skip test code, tracked by brace depth on
+//! the `code` view.
+
+/// A scanned source file: three per-line views plus a test-code mask.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Repo-relative path, forward slashes.
+    pub rel: String,
+    /// Lines as written.
+    pub raw: Vec<String>,
+    /// Comments blanked, string literals kept.
+    pub nocomment: Vec<String>,
+    /// Comments and string/char contents blanked (delimiters kept).
+    pub code: Vec<String>,
+    /// True on lines inside a `#[cfg(test)] mod … { … }` block.
+    pub in_test: Vec<bool>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Normal,
+    LineComment,
+    Block(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+impl SourceFile {
+    /// Scan `text` into the three views.
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let chars: Vec<char> = text.chars().collect();
+        let n = chars.len();
+        let mut raw = Vec::new();
+        let mut nocomment = Vec::new();
+        let mut code = Vec::new();
+        let mut cur_raw = String::new();
+        let mut cur_noc = String::new();
+        let mut cur_code = String::new();
+        let mut st = State::Normal;
+        let mut i = 0usize;
+        // push to both derived views
+        macro_rules! both {
+            ($c:expr) => {{
+                cur_noc.push($c);
+                cur_code.push($c);
+            }};
+        }
+        while i < n {
+            let c = chars[i];
+            let nx = if i + 1 < n { chars[i + 1] } else { '\0' };
+            if c == '\n' {
+                if st == State::LineComment {
+                    st = State::Normal;
+                }
+                raw.push(std::mem::take(&mut cur_raw));
+                nocomment.push(std::mem::take(&mut cur_noc));
+                code.push(std::mem::take(&mut cur_code));
+                i += 1;
+                continue;
+            }
+            cur_raw.push(c);
+            match st {
+                State::Normal => {
+                    if c == '/' && nx == '/' {
+                        st = State::LineComment;
+                        both!(' ');
+                    } else if c == '/' && nx == '*' {
+                        st = State::Block(1);
+                        both!(' ');
+                        both!(' ');
+                        cur_raw.push(nx);
+                        i += 1;
+                    } else if c == '"' {
+                        st = State::Str;
+                        both!('"');
+                    } else if (c == 'r' || c == 'b') && nx == '"' {
+                        // r"…" or b"…" (plain byte strings share Str rules)
+                        if c == 'r' {
+                            st = State::RawStr(0);
+                        } else {
+                            st = State::Str;
+                        }
+                        both!(c);
+                        both!('"');
+                        cur_raw.push(nx);
+                        i += 1;
+                    } else if c == 'r' && nx == '#' {
+                        // possible r#"…"# raw string
+                        let mut j = i + 1;
+                        let mut hashes = 0u32;
+                        while j < n && chars[j] == '#' {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if j < n && chars[j] == '"' {
+                            st = State::RawStr(hashes);
+                            both!('r');
+                            for _ in 0..hashes {
+                                both!('#');
+                            }
+                            both!('"');
+                            for k in (i + 1)..=j {
+                                cur_raw.push(chars[k]);
+                            }
+                            i = j;
+                        } else {
+                            both!(c);
+                        }
+                    } else if c == '\'' {
+                        // char literal vs lifetime: `'x` followed by a
+                        // non-quote ident continuation is a lifetime
+                        let n2 = if i + 2 < n { chars[i + 2] } else { '\0' };
+                        if nx == '\\' || (n2 == '\'' && nx != '\0') {
+                            st = State::Char;
+                            both!('\'');
+                        } else {
+                            both!('\'');
+                        }
+                    } else {
+                        both!(c);
+                    }
+                }
+                State::LineComment => {
+                    both!(' ');
+                }
+                State::Block(d) => {
+                    if c == '*' && nx == '/' {
+                        both!(' ');
+                        both!(' ');
+                        cur_raw.push(nx);
+                        i += 1;
+                        st = if d == 1 { State::Normal } else { State::Block(d - 1) };
+                    } else if c == '/' && nx == '*' {
+                        both!(' ');
+                        both!(' ');
+                        cur_raw.push(nx);
+                        i += 1;
+                        st = State::Block(d + 1);
+                    } else {
+                        both!(' ');
+                    }
+                }
+                State::Str => {
+                    if c == '\\' {
+                        cur_noc.push(c);
+                        cur_code.push(' ');
+                        if nx != '\0' && nx != '\n' {
+                            cur_noc.push(nx);
+                            cur_code.push(' ');
+                            cur_raw.push(nx);
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        both!('"');
+                        st = State::Normal;
+                    } else {
+                        cur_noc.push(c);
+                        cur_code.push(' ');
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if c == '"' {
+                        let mut j = i + 1;
+                        let mut h = 0u32;
+                        while j < n && chars[j] == '#' && h < hashes {
+                            h += 1;
+                            j += 1;
+                        }
+                        if h == hashes {
+                            both!('"');
+                            for _ in 0..hashes {
+                                both!('#');
+                            }
+                            for k in (i + 1)..j {
+                                cur_raw.push(chars[k]);
+                            }
+                            i = j - 1;
+                            st = State::Normal;
+                        } else {
+                            cur_noc.push(c);
+                            cur_code.push(' ');
+                        }
+                    } else {
+                        cur_noc.push(c);
+                        cur_code.push(' ');
+                    }
+                }
+                State::Char => {
+                    if c == '\\' {
+                        cur_noc.push(c);
+                        cur_code.push(' ');
+                        if nx != '\0' && nx != '\n' {
+                            cur_noc.push(nx);
+                            cur_code.push(' ');
+                            cur_raw.push(nx);
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        both!('\'');
+                        st = State::Normal;
+                    } else {
+                        cur_noc.push(c);
+                        cur_code.push(' ');
+                    }
+                }
+            }
+            i += 1;
+        }
+        raw.push(cur_raw);
+        nocomment.push(cur_noc);
+        code.push(cur_code);
+
+        // #[cfg(test)] mod mask, by brace depth on the code view
+        let mut in_test = vec![false; raw.len()];
+        let mut mode = 0u8; // 0 = outside, 1 = saw #[cfg(test)], 2 = inside mod
+        let mut depth = 0i64;
+        let mut start_depth = 0i64;
+        for idx in 0..raw.len() {
+            let l = &code[idx];
+            if mode == 0 && nocomment[idx].contains("#[cfg(test)]") {
+                mode = 1;
+            }
+            if mode == 1 && find_word(l, "mod").is_some() {
+                mode = 2;
+                start_depth = depth;
+            }
+            if mode == 2 {
+                in_test[idx] = true;
+            }
+            depth += l.matches('{').count() as i64;
+            depth -= l.matches('}').count() as i64;
+            if mode == 2 && depth <= start_depth && l.contains('}') {
+                mode = 0;
+            }
+        }
+
+        SourceFile {
+            rel: rel.to_string(),
+            raw,
+            nocomment,
+            code,
+            in_test,
+        }
+    }
+
+    /// Extract every complete `"…"` string literal on line `idx` of the
+    /// `nocomment` view (contents as written, escapes not decoded).
+    pub fn string_literals(&self, idx: usize) -> Vec<String> {
+        let mut out = Vec::new();
+        let l: Vec<char> = self.nocomment[idx].chars().collect();
+        let mut i = 0usize;
+        while i < l.len() {
+            if l[i] == '"' {
+                let mut j = i + 1;
+                let mut s = String::new();
+                let mut closed = false;
+                while j < l.len() {
+                    if l[j] == '\\' {
+                        s.push(l[j]);
+                        if j + 1 < l.len() {
+                            s.push(l[j + 1]);
+                        }
+                        j += 2;
+                        continue;
+                    }
+                    if l[j] == '"' {
+                        closed = true;
+                        break;
+                    }
+                    s.push(l[j]);
+                    j += 1;
+                }
+                if closed {
+                    out.push(s);
+                    i = j + 1;
+                    continue;
+                }
+                break;
+            }
+            i += 1;
+        }
+        out
+    }
+}
+
+/// True for identifier characters (`[A-Za-z0-9_]`).
+pub fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// First occurrence of `needle` in `hay` with identifier boundaries on
+/// both sides, or `None`.
+pub fn find_word(hay: &str, needle: &str) -> Option<usize> {
+    find_words(hay, needle).into_iter().next()
+}
+
+/// All identifier-boundary occurrences of `needle` in `hay` (byte offsets).
+pub fn find_words(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(k) = hay[start..].find(needle) {
+        let at = start + k;
+        let before_ok = hay[..at].chars().next_back().is_none_or(|c| !is_ident(c));
+        let after_ok = hay[at + needle.len()..].chars().next().is_none_or(|c| !is_ident(c));
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        start = at + needle.len();
+    }
+    out
+}
+
+/// All plain substring occurrences of `needle` in `hay` (byte offsets).
+pub fn find_all(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(k) = hay[start..].find(needle) {
+        out.push(start + k);
+        start = start + k + needle.len();
+    }
+    out
+}
+
+/// Does string `s` match a `format!`-style template, where each `{…}`
+/// hole matches any (possibly empty) run of characters? Hand-rolled
+/// glob-by-segments: anchored head and tail, ordered middles.
+pub fn template_matches(template: &str, s: &str) -> bool {
+    let mut segs: Vec<String> = Vec::new();
+    let mut cur = String::new();
+    let mut chars = template.chars().peekable();
+    let mut holes = 0usize;
+    while let Some(c) = chars.next() {
+        if c == '{' {
+            for nc in chars.by_ref() {
+                if nc == '}' {
+                    break;
+                }
+            }
+            segs.push(std::mem::take(&mut cur));
+            holes += 1;
+        } else {
+            cur.push(c);
+        }
+    }
+    segs.push(cur);
+    if holes == 0 {
+        return template == s;
+    }
+    let first = &segs[0];
+    let last = &segs[segs.len() - 1];
+    if !s.starts_with(first.as_str()) || !s.ends_with(last.as_str()) {
+        return false;
+    }
+    if s.len() < first.len() + last.len() {
+        return false;
+    }
+    let mut pos = first.len();
+    let tail_start = s.len() - last.len();
+    for seg in &segs[1..segs.len() - 1] {
+        if seg.is_empty() {
+            continue;
+        }
+        match s[pos..tail_start].find(seg.as_str()) {
+            Some(k) => pos = pos + k + seg.len(),
+            None => return false,
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let x = \"HashMap\"; // HashMap here\nuse std::collections::HashMap;\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(!f.code[0].contains("HashMap"), "string + comment blanked: {}", f.code[0]);
+        assert!(f.nocomment[0].contains("HashMap"), "string kept in nocomment");
+        assert!(!f.nocomment[0].contains("here"), "comment blanked in nocomment");
+        assert!(f.code[1].contains("HashMap"), "real code kept");
+    }
+
+    #[test]
+    fn raw_strings_and_chars() {
+        let src = "let s = r#\"un\"safe\"#;\nlet c = '{'; let lt: &'static str = \"x\";\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(find_word(&f.code[0], "unsafe").is_none(), "raw-string contents blanked");
+        assert_eq!(f.code[1].matches('{').count(), 0, "char literal '{{' blanked");
+        assert!(f.code[1].contains("'static"), "lifetime untouched");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still */ let y = 1;\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(f.code[0].contains("let y = 1;"));
+        assert!(!f.code[0].contains("outer") && !f.code[0].contains("still"));
+    }
+
+    #[test]
+    fn test_mod_mask() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(!f.in_test[0]);
+        assert!(f.in_test[2] && f.in_test[3] && f.in_test[4]);
+        assert!(!f.in_test[5], "mask ends with the mod block");
+    }
+
+    #[test]
+    fn string_literal_extraction() {
+        let src = "call(\"a.b\", \"c-d\"); // \"not me\"\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert_eq!(f.string_literals(0), vec!["a.b".to_string(), "c-d".to_string()]);
+    }
+
+    #[test]
+    fn template_matching() {
+        assert!(template_matches("iteration/{}", "iteration/sogclr"));
+        assert!(template_matches("wire/{}/{}", "wire/ring/int8"));
+        assert!(!template_matches("wire/{}/{}", "iteration/sogclr"));
+        assert!(template_matches("plain", "plain"));
+        assert!(!template_matches("plain", "plainer"));
+        assert!(template_matches("events.{}", "events.cancel"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(find_word("use std::collections::HashMap;", "HashMap").is_some());
+        assert!(find_word("struct HashMapLike;", "HashMap").is_none());
+        assert!(find_word("x.unsafe_op()", "unsafe").is_none());
+    }
+}

@@ -8,6 +8,7 @@
 //!   inspect     print an artifact bundle's manifest summary
 //!   ckpt        inspect/verify training checkpoints (DESIGN.md §9)
 //!   trace       analyze a `--trace-out` JSONL trace (DESIGN.md §14)
+//!   lint        repo-invariant static analysis (DESIGN.md §17)
 //!
 //! Examples:
 //!   fastclip train --algo fastclip-v3 --bundle artifacts/tiny_k2_b8 --steps 100
@@ -48,6 +49,7 @@ fn run() -> Result<()> {
         "inspect" => inspect(&args),
         "ckpt" => ckpt_cmd(&args),
         "trace" => fastclip::telemetry::trace::trace_cmd(&args),
+        "lint" => fastclip::lint::lint_cmd(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -77,8 +79,12 @@ fn print_help() {
              --bundle <dir>     artifact bundle (default artifacts/tiny_k2_b8)\n\
              --config <file>    load a configs/*.toml preset instead of flags\n\
              --steps N --seed S --optimizer adamw|lamb|lion|sgdm\n\
-             --gamma-min G | --gamma-const G   inner-LR schedule\n\
-             --eps E --rho R --tau-init T --eval-every N\n\
+             --iters-per-epoch N   epoch length for schedule bookkeeping\n\
+             --lr P --warmup N     peak outer LR and warmup iterations\n\
+             --gamma-min G | --gamma-const G | --decay-epochs E   inner-LR\n\
+                                schedule\n\
+             --eps E --rho R --tau-init T --tau-lr T --eval-every N\n\
+             --n-train N --n-eval N --n-classes C   synthetic dataset shape\n\
              --nodes N --gpus-per-node M --network {nets}\n\
              --reduce naive|ring|sharded|auto   gradient-reduction strategy\n\
              --overlap on|off|auto   overlap bucketed reduction with backward\n\
@@ -105,8 +111,13 @@ fn print_help() {
            exp <id>    regenerate a paper table/figure (exp list to enumerate)\n\
            comm-bench  cost-model sweep: --profile <net> --n-params P\n\
            inspect     <bundle-dir>: print manifest summary\n\
-           ckpt        inspect <dir> | verify <dir>  (a step dir or a ckpt root)\n\
-           trace       summary <f> | verify <f> | diff <a> <b>  (JSONL traces)\n",
+           ckpt        inspect <dir> | verify <dir>  (or --dir <dir>; a step\n\
+                       dir or a ckpt root)\n\
+           trace       summary <f> | verify <f> | diff <a> <b>  (JSONL traces)\n\
+           lint        repo-invariant static analysis (DESIGN.md §17)\n\
+             --root <dir>       repo root (default: discovered upward)\n\
+             --deny-warnings    warnings fail the run (the CI policy)\n\
+             --list-rules       print the rule catalog and exit\n",
         algos = Algorithm::all().map(|a| a.id()).join("|"),
         nets = "infiniband|slingshot1|slingshot2",
     );

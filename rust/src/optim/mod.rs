@@ -1,4 +1,5 @@
-//! Optimizers for the model parameters — Proc. 4 of the paper: AdamW,
+//! Optimizers for the model parameters — Proc. 4 of the paper
+//! (DESIGN.md §5): AdamW,
 //! LAMB, Lion and SGD-with-momentum, over a flat f32 parameter vector with
 //! per-leaf segmentation (LAMB's trust ratio is computed per leaf/layer,
 //! matching the paper's per-layer α).

@@ -61,7 +61,7 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::kernels::{encoder, gemm, norm, precision, resolve_threads, softmax, Precision};
+use crate::kernels::{encoder, gemm, norm, precision, resolve_threads, softmax, sum, Precision};
 use crate::util::Rng;
 
 use super::backend::{
@@ -824,9 +824,7 @@ impl ComputeBackend for NativeBackend {
         let loss = local_loss(variant, u1l, u2l, tau1l, tau2l, eps, rho, bgf, k as f32);
         let tau_out = match variant {
             "gcl" => TauGrads::Global(0.0),
-            "gcl_v0" | "mbcl" => {
-                TauGrads::Global(dtau1.iter().sum::<f32>() + dtau2.iter().sum::<f32>())
-            }
+            "gcl_v0" | "mbcl" => TauGrads::Global(sum(&dtau1) + sum(&dtau2)),
             "rgcl_g" => {
                 // Eq. (10): per-worker log terms + the 2ρ constant split
                 // across workers + the exp-path τ gradient
@@ -835,10 +833,7 @@ impl ComputeBackend for NativeBackend {
                     log_terms += (eps + u1l[i]).ln() + (eps + u2l[i]).ln();
                 }
                 TauGrads::Global(
-                    log_terms / bgf
-                        + 2.0 * rho / k as f32
-                        + dtau1.iter().sum::<f32>()
-                        + dtau2.iter().sum::<f32>(),
+                    log_terms / bgf + 2.0 * rho / k as f32 + sum(&dtau1) + sum(&dtau2),
                 )
             }
             _ => {

@@ -9,7 +9,7 @@
 // lint is opted out here until this module gets its own pass.
 #![allow(missing_docs)]
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -26,7 +26,7 @@ pub struct WorkerRuntime {
     manifest: Manifest,
     #[allow(dead_code)] // owns the executables' platform; must outlive them
     client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
     pub timers: RuntimeTimers,
 }
 
@@ -48,7 +48,7 @@ impl WorkerRuntime {
             }
             None => names.extend(manifest.variants.iter().map(|v| format!("step_{v}"))),
         }
-        let mut executables = HashMap::new();
+        let mut executables = BTreeMap::new();
         for name in names {
             let path = manifest.hlo_path(&name);
             let proto = xla::HloModuleProto::from_text_file(&path)
@@ -339,6 +339,9 @@ fn wrap_xla(e: xla::Error) -> anyhow::Error {
 fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     let numel: usize = shape.iter().product();
     ensure!(data.len() == numel, "literal data {} != shape numel {numel}", data.len());
+    // SAFETY: `data` is a live, initialized &[f32]; viewing it as bytes is
+    // valid for any POD type, the length is exactly data.len() * 4, and the
+    // borrow outlives this call (the literal copies out immediately).
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
@@ -348,6 +351,8 @@ fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
 fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     let numel: usize = shape.iter().product();
     ensure!(data.len() == numel, "literal data {} != shape numel {numel}", data.len());
+    // SAFETY: same as lit_f32 — POD i32 slice viewed as its own bytes with
+    // the exact byte length, copied out before the borrow ends.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)

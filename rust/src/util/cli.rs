@@ -36,7 +36,8 @@ impl Args {
                     args.options.insert(key.clone(), v.to_string());
                 } else if iter.peek().is_some_and(|n| !n.starts_with("--")) {
                     key = rest.to_string();
-                    args.options.insert(key.clone(), iter.next().unwrap());
+                    // the peek above guarantees a next token
+                    args.options.insert(key.clone(), iter.next().unwrap_or_default());
                 } else {
                     key = rest.to_string();
                     args.flags.push(key.clone());

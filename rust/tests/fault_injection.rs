@@ -176,7 +176,14 @@ fn stress_trial(trial: u64) {
 
 #[test]
 fn cancellation_is_deadlock_free_across_the_matrix() {
-    for trial in 0..50u64 {
+    // FASTCLIP_STRESS_TRIALS scales the randomized sweep: the default 50
+    // is the PR gate; the TSan CI job dials it down (each trial runs the
+    // whole instrumented matrix) and soak runs can dial it up
+    let trials: u64 = std::env::var("FASTCLIP_STRESS_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50);
+    for trial in 0..trials {
         stress_trial(trial);
     }
 }

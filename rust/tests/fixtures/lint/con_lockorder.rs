@@ -1,0 +1,18 @@
+use std::sync::Mutex;
+
+pub struct Pair {
+    pub a: Mutex<u32>,
+    pub b: Mutex<u32>,
+}
+
+pub fn forward(p: &Pair) -> u32 {
+    let ga = p.a.lock().unwrap();
+    let gb = p.b.lock().unwrap();
+    *ga + *gb
+}
+
+pub fn backward(p: &Pair) -> u32 {
+    let gb = p.b.lock().unwrap();
+    let ga = p.a.lock().unwrap();
+    *ga + *gb
+}

@@ -1,0 +1,3 @@
+pub fn first_byte(xs: &[u8]) -> u8 {
+    unsafe { *xs.get_unchecked(0) }
+}

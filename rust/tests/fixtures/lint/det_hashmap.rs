@@ -1,0 +1,4 @@
+pub fn build() {
+    let m = std::collections::HashMap::<String, u32>::new();
+    let _ = m;
+}

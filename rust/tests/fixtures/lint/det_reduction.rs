@@ -1,0 +1,3 @@
+pub fn total(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}

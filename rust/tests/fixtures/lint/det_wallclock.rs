@@ -1,0 +1,3 @@
+pub fn tick() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,5 @@
+pub fn fine() -> u32 {
+    // lint:allow(err-unwrap)
+    // lint:allow(no-such-rule): bogus rule id
+    7
+}

@@ -1,0 +1,4 @@
+pub fn parse(s: &str) -> u32 {
+    // lint:allow(err-unwrap): fixture exercises suppression
+    s.parse().unwrap()
+}

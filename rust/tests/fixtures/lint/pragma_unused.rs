@@ -1,0 +1,4 @@
+pub fn fine() -> u32 {
+    // lint:allow(err-unwrap): nothing below actually violates
+    41 + 1
+}

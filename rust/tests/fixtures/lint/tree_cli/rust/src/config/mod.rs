@@ -1,0 +1,20 @@
+//! Fixture config.
+
+pub const KNOWN: &[&str] = &["algorithm"];
+
+pub struct TrainConfig {
+    pub algorithm: String,
+}
+
+impl TrainConfig {
+    pub fn from_kv(kv: &Kv) -> TrainConfig {
+        TrainConfig { algorithm: kv.get("algorithm") }
+    }
+
+    pub fn to_file_string(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        writeln!(s, "algorithm = {}", self.algorithm).ok();
+        s
+    }
+}

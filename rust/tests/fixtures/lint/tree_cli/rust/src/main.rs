@@ -1,0 +1,17 @@
+//! Fixture CLI.
+
+fn print_help() {
+    println!(
+        "usage: fixture train\n\
+         --algo <id>    algorithm\n\
+         --bogus <x>    parsed but mapping to no config key\n\
+         --ghost <x>    documented here but parsed nowhere\n"
+    );
+}
+
+fn main() {
+    let args = Args::default();
+    let _ = args.str_or("algo", "gcl");
+    let _ = args.get("bogus");
+    print_help();
+}

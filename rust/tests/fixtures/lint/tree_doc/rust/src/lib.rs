@@ -1,0 +1,1 @@
+//! Fixture crate; see DESIGN.md §1 and DESIGN.md §9.

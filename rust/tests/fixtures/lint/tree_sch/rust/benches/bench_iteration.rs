@@ -1,0 +1,15 @@
+//! Fixture bench.
+
+const GATED_ROWS: &[&str] = &[
+    "iteration/ghost",
+];
+
+fn main() {
+    let row = Row { name: "iteration/real".to_string(), rate: 1.0 };
+    let _ = (row, GATED_ROWS);
+}
+
+struct Row {
+    name: String,
+    rate: f64,
+}

@@ -1,0 +1,5 @@
+//! Fixture registrations.
+
+pub fn register(m: &Metrics) {
+    m.gauge_set("loss.real", 1.0);
+}

@@ -1,0 +1,5 @@
+#[test]
+fn metrics() {
+    assert_metric("loss.real");
+    assert_metric("foo.bar");
+}

@@ -1,0 +1,217 @@
+//! Fixture tests for the `fastclip lint` rule engine: one seeded
+//! violation per rule family under `tests/fixtures/lint/` (a directory
+//! the lint walk deliberately skips, so fixtures may contain
+//! violations), pinned by rule ID, file and line. Pragma semantics —
+//! suppress exactly one finding, error on unused or malformed pragmas —
+//! ride the same fixtures, and three mini repo trees exercise the
+//! repo-scoped rules (cross-doc, CLI/config drift, schema drift)
+//! through the full `lint_repo` entry point.
+
+use std::path::{Path, PathBuf};
+
+use fastclip::lint::source::SourceFile;
+use fastclip::lint::{lint_file, lint_repo, LintOptions, Report, Severity};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/lint")
+}
+
+/// Lint one fixture file as if it lived at repo path `rel` (the rel
+/// path selects which scoped rules apply).
+fn lint_one(rel: &str, fixture: &str) -> Report {
+    let path = fixture_dir().join(fixture);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    lint_file(&SourceFile::parse(rel, &text))
+}
+
+/// Lint one of the mini repo trees through the repo-scoped entry point.
+fn lint_tree(tree: &str) -> Report {
+    lint_repo(&fixture_dir().join(tree), &LintOptions { deny_warnings: true })
+        .expect("lint_repo runs on the fixture tree")
+}
+
+#[track_caller]
+fn assert_finding(report: &Report, rule: &str, file: &str, line: usize) {
+    assert!(
+        report.findings.iter().any(|f| f.rule == rule && f.file == file && f.line == line),
+        "expected {rule} at {file}:{line}, got: {:#?}",
+        report.findings
+    );
+}
+
+fn count(report: &Report, rule: &str) -> usize {
+    report.findings.iter().filter(|f| f.rule == rule).count()
+}
+
+// ---- determinism family -------------------------------------------------
+
+#[test]
+fn det_unordered_map_fires() {
+    let r = lint_one("rust/src/coordinator/fixture.rs", "det_hashmap.rs");
+    assert_finding(&r, "det-unordered-map", "rust/src/coordinator/fixture.rs", 2);
+    assert_eq!(count(&r, "det-unordered-map"), 1);
+    assert!(r.failed(false), "a seeded determinism violation must fail the lint");
+}
+
+#[test]
+fn det_unordered_map_ignores_test_code_and_non_library_paths() {
+    let text = std::fs::read_to_string(fixture_dir().join("det_hashmap.rs")).unwrap();
+    let r = lint_file(&SourceFile::parse("rust/tests/fixture.rs", &text));
+    assert_eq!(r.findings.len(), 0, "tests dir is not library code: {:?}", r.findings);
+}
+
+#[test]
+fn det_wallclock_fires_outside_allowlist_only() {
+    let r = lint_one("rust/src/optim/fixture.rs", "det_wallclock.rs");
+    assert_finding(&r, "det-wallclock", "rust/src/optim/fixture.rs", 2);
+    let allowed = lint_one("rust/src/telemetry/fixture.rs", "det_wallclock.rs");
+    assert_eq!(count(&allowed, "det-wallclock"), 0, "telemetry/ may read the clock");
+}
+
+#[test]
+fn det_ambient_entropy_fires() {
+    let r = lint_one("rust/src/data/fixture.rs", "det_entropy.rs");
+    assert_finding(&r, "det-ambient-entropy", "rust/src/data/fixture.rs", 2);
+}
+
+#[test]
+fn det_raw_reduction_fires_in_numeric_scope_only() {
+    let r = lint_one("rust/src/kernels/fixture.rs", "det_reduction.rs");
+    assert_finding(&r, "det-raw-reduction", "rust/src/kernels/fixture.rs", 2);
+    let outside = lint_one("rust/src/output/fixture.rs", "det_reduction.rs");
+    assert_eq!(count(&outside, "det-raw-reduction"), 0, "scope is kernels/comm/runtime");
+}
+
+// ---- concurrency family -------------------------------------------------
+
+#[test]
+fn con_relaxed_atomic_fires_in_comm() {
+    let r = lint_one("rust/src/comm/fixture.rs", "con_relaxed.rs");
+    assert_finding(&r, "con-relaxed-atomic", "rust/src/comm/fixture.rs", 4);
+    let outside = lint_one("rust/src/optim/fixture.rs", "con_relaxed.rs");
+    assert_eq!(count(&outside, "con-relaxed-atomic"), 0, "rule is scoped to comm/");
+}
+
+#[test]
+fn con_undocumented_unsafe_fires_and_safety_comment_silences() {
+    let r = lint_one("rust/src/comm/fixture.rs", "con_unsafe.rs");
+    assert_finding(&r, "con-undocumented-unsafe", "rust/src/comm/fixture.rs", 2);
+
+    let documented = "pub fn first_byte(xs: &[u8]) -> u8 {\n    \
+                      // SAFETY: caller guarantees xs is non-empty\n    \
+                      unsafe { *xs.get_unchecked(0) }\n}\n";
+    let ok = lint_file(&SourceFile::parse("rust/src/comm/fixture.rs", documented));
+    assert_eq!(count(&ok, "con-undocumented-unsafe"), 0, "{:?}", ok.findings);
+}
+
+#[test]
+fn con_lock_order_detects_ab_ba() {
+    let r = lint_one("rust/src/comm/fixture.rs", "con_lockorder.rs");
+    assert_eq!(count(&r, "con-lock-order"), 1, "{:#?}", r.findings);
+    assert_finding(&r, "con-lock-order", "rust/src/comm/fixture.rs", 10);
+    // the poisoned-lock unwraps in the fixture are idiom-exempt
+    assert_eq!(count(&r, "err-unwrap"), 0);
+}
+
+// ---- error hygiene ------------------------------------------------------
+
+#[test]
+fn err_unwrap_fires() {
+    let r = lint_one("rust/src/util/fixture.rs", "err_unwrap.rs");
+    assert_finding(&r, "err-unwrap", "rust/src/util/fixture.rs", 2);
+}
+
+// ---- pragma engine ------------------------------------------------------
+
+#[test]
+fn pragma_suppresses_exactly_one_finding() {
+    let r = lint_one("rust/src/util/fixture.rs", "pragma_ok.rs");
+    assert_eq!(r.findings.len(), 0, "pragma must suppress the finding: {:?}", r.findings);
+    assert_eq!(r.suppressed, 1, "exactly one finding suppressed");
+    assert!(!r.failed(true));
+}
+
+#[test]
+fn unused_pragma_is_an_error() {
+    let r = lint_one("rust/src/util/fixture.rs", "pragma_unused.rs");
+    assert_finding(&r, "lint-pragma", "rust/src/util/fixture.rs", 2);
+    assert!(r.failed(false), "a stale allowlist entry must fail the lint");
+}
+
+#[test]
+fn malformed_pragmas_are_errors() {
+    let r = lint_one("rust/src/util/fixture.rs", "pragma_malformed.rs");
+    assert_finding(&r, "lint-pragma", "rust/src/util/fixture.rs", 2); // missing reason
+    assert_finding(&r, "lint-pragma", "rust/src/util/fixture.rs", 3); // unknown rule
+    assert_eq!(count(&r, "lint-pragma"), 2);
+}
+
+// ---- repo-scoped families (mini trees) ----------------------------------
+
+#[test]
+fn doc_rules_fire_on_the_doc_tree() {
+    let r = lint_tree("tree_doc");
+    // the fixture lib references a section that does not exist
+    assert_finding(&r, "doc-dangling-ref", "rust/src/lib.rs", 1);
+    // the second section is referenced from nowhere
+    let orphan = r
+        .findings
+        .iter()
+        .find(|f| f.rule == "doc-orphan-section")
+        .expect("orphan warning present");
+    assert_eq!(orphan.file, "DESIGN.md");
+    assert_eq!(orphan.severity, Severity::Warning);
+    assert!(r.failed(true), "deny-warnings turns the orphan into a failure");
+}
+
+#[test]
+fn cli_rules_fire_on_the_cli_tree() {
+    let r = lint_tree("tree_cli");
+    // --ghost is documented in the help text but parsed nowhere
+    assert!(
+        r.findings.iter().any(|f| f.rule == "cli-flag-drift" && f.message.contains("ghost")),
+        "{:#?}",
+        r.findings
+    );
+    // --bogus maps to a config key missing from KNOWN
+    assert!(
+        r.findings.iter().any(|f| f.rule == "cli-config-drift" && f.message.contains("bogus")),
+        "{:#?}",
+        r.findings
+    );
+    // --algo maps through the alias table onto KNOWN cleanly
+    assert!(!r.findings.iter().any(|f| f.message.contains("algo ")));
+}
+
+#[test]
+fn schema_rules_fire_on_the_sch_tree() {
+    let r = lint_tree("tree_sch");
+    // the manifested row has no baseline entry; the baseline row (file:line
+    // inside the JSON) is missing from the manifest
+    assert_finding(&r, "sch-baseline-drift", "rust/benches/bench_iteration.rs", 4);
+    assert_finding(&r, "sch-baseline-drift", "rust/benches/baseline/BENCH_iteration.json", 4);
+    // the manifested row matches no emitter, and the emitter produces an
+    // un-manifested row
+    assert_eq!(count(&r, "sch-emitter-drift"), 2, "{:#?}", r.findings);
+    // the asserted-but-unregistered metric is flagged, the registered one is not
+    assert!(
+        r.findings.iter().any(|f| f.rule == "sch-metric-drift" && f.message.contains("foo.bar")),
+        "{:#?}",
+        r.findings
+    );
+    assert!(!r.findings.iter().any(|f| f.message.contains("loss.real")));
+}
+
+// ---- diagnostics format -------------------------------------------------
+
+#[test]
+fn findings_render_as_file_line_rule() {
+    let r = lint_one("rust/src/util/fixture.rs", "err_unwrap.rs");
+    let f = &r.findings[0];
+    let s = f.to_string();
+    assert!(
+        s.starts_with("rust/src/util/fixture.rs:2: error[err-unwrap]:"),
+        "diagnostic format drifted: {s}"
+    );
+}

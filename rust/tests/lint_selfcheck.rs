@@ -1,0 +1,31 @@
+//! Self-check: run the full `fastclip lint` pass over this repository's
+//! real tree from inside `cargo test`, with the CI policy
+//! (warnings fatal). This is the belt to the CI job's suspenders: the
+//! invariants stay enforced by tier-1 even if workflow configuration
+//! drifts, and a PR that introduces a violation fails locally before it
+//! ever reaches CI.
+
+use std::path::Path;
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let report =
+        fastclip::lint::lint_repo(&root, &fastclip::lint::LintOptions { deny_warnings: true })
+            .expect("lint pass runs on the repo tree");
+    if report.failed(true) {
+        for f in &report.findings {
+            eprintln!("{f}");
+        }
+        panic!(
+            "fastclip lint: {} error(s), {} warning(s) on the repo tree (see stderr)",
+            report.errors(),
+            report.warnings()
+        );
+    }
+    assert!(
+        report.files_scanned > 30,
+        "implausibly few files scanned ({}) — did the walk break?",
+        report.files_scanned
+    );
+}
